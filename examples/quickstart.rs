@@ -1,0 +1,65 @@
+//! Quickstart: load a pre-trained flow model from the artifact manifest,
+//! sample with a baseline solver and a (pre-trained, or identity) Bespoke
+//! solver, and print the quality gap vs the ground-truth solver.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use bespoke_flow::eval::{frechet_distance, rmse};
+use bespoke_flow::models::{VelocityModel, Zoo};
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{make_sampler, BespokeSolver, Dopri5, Sampler};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+use bespoke_flow::Result;
+
+fn main() -> Result<()> {
+    // 1. Open the model zoo (artifacts/ built once by `make artifacts`).
+    let zoo = Zoo::open_default()?;
+    println!("models: {:?}", zoo.model_names());
+    let model = zoo.hlo("checker2-ot")?;
+    let (b, d) = (model.batch(), model.dim());
+
+    // 2. Draw a noise batch and compute the GT solution (adaptive DOPRI5).
+    let mut rng = Rng::new(42);
+    let x0 = Tensor::new(rng.normal_vec(b * d), vec![b, d])?;
+    let gt = Dopri5::default().sample(model.as_ref(), &x0)?;
+
+    // 3. A plain RK2 baseline at 16 NFE, via the solver registry.
+    let sched = zoo.scheduler("checker2-ot")?;
+    let rk2 = make_sampler("rk2:n=8", sched)?;
+    let approx = rk2.sample(model.as_ref(), &x0)?;
+    println!(
+        "rk2:n=8      ({} NFE): RMSE vs GT = {:.5}",
+        rk2.nfe(),
+        rmse(&approx, &gt)
+    );
+
+    // 4. A Bespoke solver: use a trained checkpoint when present, otherwise
+    //    show the identity-theta consistency anchor (== plain RK2).
+    let ckpt = std::path::Path::new("out/thetas/theta_checker2-ot_rk2_n8.json");
+    let theta = if ckpt.exists() {
+        println!("using trained theta {}", ckpt.display());
+        RawTheta::load(ckpt)?
+    } else {
+        println!("no trained theta found (run `repro exp tab3` or train_bespoke); using identity");
+        RawTheta::identity(Base::Rk2, 8)
+    };
+    let bes = BespokeSolver::new(&theta);
+    let bes_out = bes.sample(model.as_ref(), &x0)?;
+    println!(
+        "{} ({} NFE): RMSE vs GT = {:.5}",
+        bes.name(),
+        bes.nfe(),
+        rmse(&bes_out, &gt)
+    );
+
+    // 5. Distribution-level check: Fréchet distance vs the target dataset.
+    let data = zoo.manifest().load_dataset("checker2")?;
+    println!(
+        "FD(data): rk2={:.4}  bespoke={:.4}  gt={:.4}",
+        frechet_distance(&approx, &data),
+        frechet_distance(&bes_out, &data),
+        frechet_distance(&gt, &data),
+    );
+    Ok(())
+}

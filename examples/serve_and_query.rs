@@ -1,0 +1,88 @@
+//! End-to-end serving driver: starts the JSONL sampling server in-process,
+//! fires concurrent client workloads at it over real TCP, and reports
+//! latency / throughput / batching metrics — the repo's serving-paper
+//! "load a model and serve batched requests" proof point (EXPERIMENTS.md §Serving).
+//!
+//!   cargo run --release --example serve_and_query -- [n_clients] [reqs_per_client]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use bespoke_flow::config::ServeConfig;
+use bespoke_flow::coordinator::{serve, Coordinator};
+use bespoke_flow::json::Value;
+use bespoke_flow::models::Zoo;
+use bespoke_flow::util::timer::Percentiles;
+use bespoke_flow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_clients: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let reqs: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(20);
+    let addr = "127.0.0.1:7091";
+
+    // --- server -----------------------------------------------------------
+    let zoo = Arc::new(Zoo::open_default()?);
+    let cfg = ServeConfig { addr: addr.into(), max_batch: 256, max_wait_ms: 3, workers: 1 };
+    let coord = Arc::new(Coordinator::new(zoo, cfg));
+    let metrics = coord.metrics.clone();
+    {
+        let coord = coord.clone();
+        std::thread::spawn(move || serve(coord, addr).expect("server"));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // --- clients ----------------------------------------------------------
+    let started = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let stream = TcpStream::connect(addr)?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            let mut lat = Vec::new();
+            for r in 0..reqs {
+                let req = format!(
+                    "{{\"cmd\":\"sample\",\"model\":\"checker2-ot\",\"solver\":\"rk2:n=5\",\
+                     \"n_samples\":32,\"seed\":{}}}\n",
+                    c * 1000 + r
+                );
+                let t0 = std::time::Instant::now();
+                writer.write_all(req.as_bytes())?;
+                writer.flush()?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                let v = Value::parse(&line)?;
+                assert!(v.get("ok")?.as_bool()?, "server error: {line}");
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(lat)
+        }));
+    }
+
+    let mut all = Percentiles::default();
+    for h in handles {
+        for l in h.join().unwrap()? {
+            all.record(l);
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let total_samples = n_clients * reqs * 32;
+    println!("=== serving workload: {n_clients} clients x {reqs} requests x 32 samples ===");
+    println!(
+        "throughput: {:.0} samples/s ({:.1} req/s)",
+        total_samples as f64 / wall,
+        (n_clients * reqs) as f64 / wall
+    );
+    println!(
+        "client latency: p50={:.1}ms p90={:.1}ms p99={:.1}ms mean={:.1}ms",
+        all.quantile(0.5),
+        all.quantile(0.9),
+        all.quantile(0.99),
+        all.mean()
+    );
+    println!("--- server metrics ---");
+    println!("{}", metrics.snapshot().to_string_pretty());
+    Ok(())
+}

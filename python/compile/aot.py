@@ -1,0 +1,151 @@
+"""AOT export — lowers every model and loss-grad graph to HLO **text** and
+writes artifacts/manifest.json.  Runs once via `make artifacts`; python is
+never on the request path.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` 0.1.6 rust crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts:
+    u_<model>.hlo.txt                       (x[B,d], t[]) -> (u[B,d],)
+    lossgrad_<model>_<base>_n<n>.hlo.txt    (theta[p], x_snap[B,n+1,d],
+                                             u_snap[B,n+1,d], t_snap[n+1])
+                                            -> (loss[], grad[p])
+    data_<dataset>.f32                      raw little-endian f32 [K*d]
+    weights_mlp2-ot.npz                     cached CFM weights
+    manifest.json                           index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import bespoke_loss, datasets, model, theta as theta_mod, train_cfm
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    big literals as `constant({...})`, which xla_extension 0.5.1's text
+    parser silently reads back as ZEROS — the baked datasets / MLP weights
+    would vanish from the compiled executable.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def export_model_u(spec: model.ModelSpec, out_dir: str, use_kernel: bool = True) -> str:
+    """Lower the velocity field u(x[B,d], t[]) for one model spec."""
+    mlp_params = None
+    if spec.kind == "mlp":
+        mlp_params = train_cfm.load_or_train(spec.name, out_dir)
+    u_fn = model.make_velocity_fn(spec, mlp_params, use_kernel=use_kernel)
+    d = datasets.get(spec.dataset).shape[1]
+    x_spec = jax.ShapeDtypeStruct((spec.batch, d), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(lambda x, t: (u_fn(x, t),)).lower(x_spec, t_spec)
+    name = f"u_{spec.name}.hlo.txt"
+    _write(os.path.join(out_dir, name), to_hlo_text(lowered))
+    return name
+
+
+def export_lossgrad(spec: model.ModelSpec, base: str, n: int, out_dir: str) -> str:
+    """Lower (loss, grad) of the n-step Bespoke loss for one model spec.
+
+    Uses the ref (pure-jnp) velocity path: Pallas interpret-mode defines no
+    VJP; pytest asserts ref == kernel so the two artifacts agree.
+    """
+    mlp_params = None
+    if spec.kind == "mlp":
+        mlp_params = train_cfm.load_or_train(spec.name, out_dir)
+    u_fn = model.make_velocity_fn(spec, mlp_params, use_kernel=False)
+    d = datasets.get(spec.dataset).shape[1]
+    p = theta_mod.n_params(base, n)
+    specs = (
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((spec.batch, n + 1, d), jnp.float32),
+        jax.ShapeDtypeStruct((spec.batch, n + 1, d), jnp.float32),
+        jax.ShapeDtypeStruct((n + 1,), jnp.float32),
+    )
+    lg = bespoke_loss.make_loss_and_grad(u_fn, base, n)
+    lowered = jax.jit(lambda *a: tuple(jax.tree_util.tree_leaves(lg(*a)))).lower(*specs)
+    name = f"lossgrad_{spec.name}_{base}_n{n}.hlo.txt"
+    _write(os.path.join(out_dir, name), to_hlo_text(lowered))
+    return name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--models", default="", help="comma-separated subset of model names")
+    ap.add_argument("--skip-lossgrad", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true", help="lower u with the ref path")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = [s for s in args.models.split(",") if s] or list(model.MODELS)
+    manifest = {"models": {}, "datasets": {}, "lossgrads": {}}
+
+    # Datasets: raw f32 dumps for the rust analytic oracle + metrics.
+    needed = {model.MODELS[n].dataset for n in names}
+    for ds in sorted(needed):
+        pts = datasets.get(ds)
+        fname = f"data_{ds}.f32"
+        pts.astype("<f4").tofile(os.path.join(out_dir, fname))
+        manifest["datasets"][ds] = {"file": fname, "k": int(pts.shape[0]), "d": int(pts.shape[1])}
+
+    for mname in names:
+        spec = model.MODELS[mname]
+        t0 = time.time()
+        u_file = export_model_u(spec, out_dir, use_kernel=not args.no_pallas)
+        print(f"[aot] {u_file} ({time.time()-t0:.1f}s)")
+        d = manifest["datasets"][spec.dataset]["d"]
+        manifest["models"][mname] = {
+            "u_hlo": u_file,
+            "dataset": spec.dataset,
+            "sched": spec.sched,
+            "kind": spec.kind,
+            "batch": spec.batch,
+            "d": d,
+            "gamma": spec.gamma,
+            "lossgrads": {},
+        }
+        if args.skip_lossgrad:
+            continue
+        for base, n in spec.lossgrads:
+            t0 = time.time()
+            lg_file = export_lossgrad(spec, base, n, out_dir)
+            print(f"[aot] {lg_file} ({time.time()-t0:.1f}s)")
+            manifest["models"][mname]["lossgrads"][f"{base}_n{n}"] = {
+                "file": lg_file,
+                "base": base,
+                "n": n,
+                "p": theta_mod.n_params(base, n),
+            }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

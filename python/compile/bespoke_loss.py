@@ -1,0 +1,120 @@
+"""The differentiable RMSE-Bespoke loss  L_bes(theta)  (paper §2.3) and its
+AOT-exported gradient.
+
+The Rust trainer (L3) owns the optimization loop; at every iteration it
+
+  1. samples a noise batch and solves the GT path with DOPRI5 (dense output),
+  2. decodes the *current* theta to grid times t_i, extracts snapshots
+     x(t_i) and u(x(t_i), t_i)  (stop-gradient constants, paper eq. 28),
+  3. calls the HLO artifact exported here:
+         (theta[p], x_snap[B, n+1, d], u_snap[B, n+1, d], t_snap[n+1])
+             -> (loss[], grad[p])
+  4. applies an Adam update (optionally through an ablation gradient mask).
+
+Inside this graph the snapshots enter only through the linearization
+    x_aux_i(t) = x_snap_i + u_snap_i * (t - t_snap_i),
+so d x_aux_i / d theta^t is exactly the ODE derivative — the paper's
+stop-gradient trick, realized here by the AOT interface itself (snapshots
+are runtime inputs, hence constants to jax.grad).
+
+Gradients flow through: the grid times t_i (via u's time argument and
+x_aux), the scales s_i / derivatives, and the Lipschitz products M_i
+(lemmas D.2/D.3, L_tau = 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import theta as theta_mod
+
+L_TAU = 1.0  # paper's hyper-parameter choice (used in all experiments)
+
+
+def _rms(err):
+    """Per-sample RMS norm ||e|| = sqrt(mean_i e_i^2), averaged over batch."""
+    return jnp.mean(jnp.sqrt(jnp.mean(err * err, axis=-1) + 1e-20))
+
+
+def _l_ubar(dec, j):
+    """Lipschitz bound of the transformed field at grid point j (lemma D.1)."""
+    return jnp.abs(dec["sdot"][j]) / dec["s"][j] + dec["tdot"][j] * L_TAU
+
+
+def step_rk1(u_fn, x, i, dec, n):
+    """Bespoke-RK1 update (paper eq. 17). Grid index = step index."""
+    h = 1.0 / n
+    s_i, s_ip = dec["s"][i], dec["s"][i + 1]
+    return ((s_i + h * dec["sdot"][i]) / s_ip) * x + (
+        h * dec["tdot"][i] * s_i / s_ip
+    ) * u_fn(x, dec["t"][i])
+
+
+def step_rk2(u_fn, x, i, dec, n):
+    """Bespoke-RK2 (midpoint) update (paper eq. 19-20). Grid index = 2i."""
+    h = 1.0 / n
+    j = 2 * i
+    t_i, t_h = dec["t"][j], dec["t"][j + 1]
+    s_i, s_h, s_ip = dec["s"][j], dec["s"][j + 1], dec["s"][j + 2]
+    td_i, td_h = dec["tdot"][j], dec["tdot"][j + 1]
+    sd_i, sd_h = dec["sdot"][j], dec["sdot"][j + 1]
+    z = (s_i + 0.5 * h * sd_i) * x + (0.5 * h * s_i * td_i) * u_fn(x, t_i)
+    return (s_i / s_ip) * x + (h / s_ip) * (
+        (sd_h / s_h) * z + td_h * s_h * u_fn(z / s_h, t_h)
+    )
+
+
+def lipschitz_step(dec, base: str, i: int, n: int):
+    """L_i^theta of step i (lemmas D.2 / D.3)."""
+    h = 1.0 / n
+    if base == "rk1":
+        return (dec["s"][i] / dec["s"][i + 1]) * (1.0 + h * _l_ubar(dec, i))
+    j = 2 * i
+    lu_i = _l_ubar(dec, j)
+    lu_h = _l_ubar(dec, j + 1)
+    return (dec["s"][j] / dec["s"][j + 2]) * (1.0 + h * lu_h * (1.0 + 0.5 * h * lu_i))
+
+
+def bespoke_loss(theta_raw, x_snap, u_snap, t_snap, *, u_fn, base: str, n: int):
+    """L_bes(theta) (paper eq. 26) from GT snapshots; fully differentiable.
+
+    Args:
+        theta_raw: [p] raw parameters (theta.py layout).
+        x_snap/u_snap: [B, n+1, d] GT positions / velocities at the current
+            grid times (stop-gradient constants).
+        t_snap: [n+1] the times at which the snapshots were taken (== the
+            decoded t_i of the theta used to extract them).
+    """
+    dec = theta_mod.decode(theta_raw, base, n)
+    # Grid indices of the integer step times in the decoded t vector.
+    stride = 1 if base == "rk1" else 2
+
+    def x_aux(i):
+        ti = dec["t"][stride * i]
+        return x_snap[:, i, :] + u_snap[:, i, :] * (ti - t_snap[i])
+
+    step = step_rk1 if base == "rk1" else step_rk2
+    l_steps = [lipschitz_step(dec, base, i, n) for i in range(n)]
+    # M for step k weights d_{k+1}: product of L over steps k+1 .. n-1.
+    m = [None] * n
+    acc = jnp.asarray(1.0)
+    for k in range(n - 1, -1, -1):
+        m[k] = acc
+        acc = acc * l_steps[k]
+
+    loss = 0.0
+    for k in range(n):
+        pred = step(u_fn, x_aux(k), k, dec, n)
+        d_k = _rms(x_aux(k + 1) - pred)
+        loss = loss + m[k] * d_k
+    return loss
+
+
+def make_loss_and_grad(u_fn, base: str, n: int):
+    """(theta, x_snap, u_snap, t_snap) -> (loss, grad) — the AOT export."""
+
+    def f(theta_raw, x_snap, u_snap, t_snap):
+        return bespoke_loss(theta_raw, x_snap, u_snap, t_snap, u_fn=u_fn, base=base, n=n)
+
+    return jax.value_and_grad(f)

@@ -1,0 +1,83 @@
+"""Seeded synthetic target datasets shared between python (authoring) and
+rust (analytic oracle + Frechet-vs-data metric).
+
+Each dataset is a fixed set of K support points mu_k in R^d; the target
+distribution is the gamma-smoothed empirical distribution
+q = (1/K) sum_k N(mu_k, gamma^2 I).  The ideal flow velocity field for such a
+target is available in closed form (see model.py), which is what stands in
+for the paper's pre-trained U-Nets (see DESIGN.md §2).
+
+Generators are deterministic given the seed so the manifest only needs to
+record (name, K, d, seed); the raw points are additionally dumped as
+little-endian f32 binaries for the rust side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def checkerboard(n: int = 512, seed: int = 0) -> np.ndarray:
+    """2D checkerboard over [-2, 2]^2 (4x4 board, alternating cells)."""
+    rng = np.random.default_rng(seed)
+    pts = []
+    while len(pts) < n:
+        xy = rng.uniform(-2.0, 2.0, size=(4 * n, 2))
+        ij = np.floor(xy + 2.0).astype(int)  # cell indices in [0, 4)
+        keep = (ij.sum(axis=1) % 2) == 0
+        pts.extend(xy[keep].tolist())
+    return np.asarray(pts[:n], dtype=np.float32)
+
+
+def moons(n: int = 512, seed: int = 0, noise: float = 0.06) -> np.ndarray:
+    """Two interleaved half-moons in roughly [-1.5, 2.5] x [-1, 1.5]."""
+    rng = np.random.default_rng(seed)
+    n1 = n // 2
+    n2 = n - n1
+    th1 = rng.uniform(0.0, np.pi, size=n1)
+    th2 = rng.uniform(0.0, np.pi, size=n2)
+    a = np.stack([np.cos(th1), np.sin(th1)], axis=1)
+    b = np.stack([1.0 - np.cos(th2), 0.5 - np.sin(th2)], axis=1)
+    pts = np.concatenate([a, b], axis=0) + rng.normal(0.0, noise, size=(n, 2))
+    return pts.astype(np.float32)
+
+
+def textures(n: int, side: int, seed: int = 0, max_freq: int = 3) -> np.ndarray:
+    """Synthetic low-frequency 'texture' images in [-1, 1]^(side*side).
+
+    Each image is a random superposition of 2D cosine basis functions with
+    frequencies <= max_freq — a stand-in for natural-image datasets
+    (ImageNet-64/128, AFHQ-256 analogs) that keeps the target manifold
+    smooth and low-dimensional, as natural images are locally.
+    """
+    rng = np.random.default_rng(seed)
+    ys, xs = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    basis = []
+    for fy in range(max_freq + 1):
+        for fx in range(max_freq + 1):
+            phase_y = np.pi * fy * (ys + 0.5) / side
+            phase_x = np.pi * fx * (xs + 0.5) / side
+            basis.append(np.cos(phase_y) * np.cos(phase_x))
+    basis = np.stack(basis, axis=0)  # [n_basis, side, side]
+    nb = basis.shape[0]
+    # 1/f-ish spectrum: lower frequencies dominate.
+    fy, fx = np.meshgrid(np.arange(max_freq + 1), np.arange(max_freq + 1), indexing="ij")
+    decay = 1.0 / (1.0 + fy + fx).reshape(nb)
+    coefs = rng.normal(0.0, 1.0, size=(n, nb)) * decay[None, :]
+    imgs = np.einsum("nb,bhw->nhw", coefs, basis)
+    # Normalize each image into [-1, 1].
+    amax = np.abs(imgs).max(axis=(1, 2), keepdims=True) + 1e-8
+    imgs = imgs / amax
+    return imgs.reshape(n, side * side).astype(np.float32)
+
+
+DATASETS = {
+    "checker2": lambda: checkerboard(512, seed=0),
+    "moons2": lambda: moons(512, seed=1),
+    "tex8": lambda: textures(256, 8, seed=2),
+    "tex16": lambda: textures(256, 16, seed=3),
+}
+
+
+def get(name: str) -> np.ndarray:
+    return DATASETS[name]()

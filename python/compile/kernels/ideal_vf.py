@@ -1,0 +1,110 @@
+"""Pallas "posterior attention" kernel — the compute hot spot of the ideal
+velocity field (L1 of the stack).
+
+Computes, FlashAttention-style, the softmax-posterior mean
+
+    m[b] = sum_k softmax_k(coef_g <x_b, mu_k> + coef_b ||mu_k||^2) mu_k
+
+with an online-softmax accumulator carried across K tiles, so the
+HBM<->VMEM schedule is: a (B_tile x d) query block stays resident while
+(K_tile x d) dataset tiles stream through VMEM; each (B_tile x K_tile)
+score block is one MXU matmul (x @ mu^T); the (running max, running
+denominator, running weighted-sum) carry lives in registers/VMEM.  The
+dataset points play the role of both keys and values.
+
+Implementation note: the K-tile loop runs *inside* the kernel body
+(`lax.fori_loop` + `dynamic_slice`) rather than as a second grid dimension
+with revisited output blocks.  Both forms are valid Pallas; the in-kernel
+loop produces straight-line HLO (each output block written exactly once)
+which survives the HLO-text round-trip into xla_extension 0.5.1 — the
+grid-carried-accumulator form miscompiles there (each program instance saw
+zero-initialized carries).  See DESIGN.md §Hardware-Adaptation.
+
+TPU adaptation notes: interpret=True is mandatory here — real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.  VMEM
+footprint per program instance is B_t*d (queries) + K_t*d (streamed tile)
++ B_t*K_t (score block) + B_t*(d+2) (carry) floats; with the default tiles
+(128, 128) and d <= 256 that is < 0.5 MB, far under the ~16 MB VMEM budget,
+leaving room to double-buffer the K-tile stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_tile(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (shapes here are powers of 2)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _kernel(coef_ref, x_ref, mu_ref, out_ref, *, kt: int, nk: int):
+    xb = x_ref[...]  # [bt, d] — resident for the whole K sweep
+    bt, d = xb.shape
+    coef_g = coef_ref[0]
+    coef_b = coef_ref[1]
+
+    def body(c, carry):
+        m_run, l_run, acc = carry
+        mub = jax.lax.dynamic_slice(mu_ref[...], (c * kt, 0), (kt, d))  # stream K tile
+        # Score block on the MXU: logits = coef_g * x mu^T + coef_b * ||mu||^2.
+        scores = jnp.dot(xb, mub.T)  # [bt, kt]
+        msq = jnp.sum(mub * mub, axis=-1)  # [kt]
+        logits = coef_g * scores + coef_b * msq[None, :]
+        # Online softmax update.
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1, keepdims=True))
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(logits - m_new)  # [bt, kt]
+        l_new = l_run * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.dot(p, mub)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((bt, 1), NEG_INF, jnp.float32),
+        jnp.zeros((bt, 1), jnp.float32),
+        jnp.zeros((bt, d), jnp.float32),
+    )
+    _, l_fin, acc_fin = jax.lax.fori_loop(0, nk, body, init)
+    out_ref[...] = acc_fin / l_fin
+
+
+def posterior_mean(x, mu, coef_g, coef_b, *, b_tile: int = 128, k_tile: int = 256):
+    """Pallas posterior-attention; semantics of ref.posterior_mean_ref.
+
+    Args:
+        x: [B, d] queries.
+        mu: [K, d] dataset points (keys == values).
+        coef_g, coef_b: scalar logit coefficients (traced OK).
+    Returns:
+        m: [B, d]
+    """
+    B, d = x.shape
+    K, d2 = mu.shape
+    assert d == d2, (d, d2)
+    bt = _pick_tile(B, b_tile)
+    kt = _pick_tile(K, k_tile)
+    nb, nk = B // bt, K // kt
+    coefs = jnp.stack([jnp.asarray(coef_g, jnp.float32), jnp.asarray(coef_b, jnp.float32)])
+
+    kernel = functools.partial(_kernel, kt=kt, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),  # coefs: replicated
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),  # x: one B tile per instance
+            pl.BlockSpec((K, d), lambda i: (0, 0)),  # mu: full, tiled in-kernel
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(coefs, x, mu)

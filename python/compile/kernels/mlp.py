@@ -1,0 +1,60 @@
+"""Pallas fused dense+GELU kernel — the hot block of the trained CFM MLP
+velocity field (L1).
+
+y = gelu(x @ W + b), tiled (B_tile x dout_tile) with the full reduction
+dimension din resident in VMEM (din <= a few hundred here).  The matmul is
+the MXU term; bias add + tanh-GELU fuse into the same VMEM-resident block on
+the VPU, so the activation never round-trips to HBM — the fusion the paper's
+serving stack would get from a hand-written CUDA kernel, rethought as a
+BlockSpec schedule (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_GELU_C = math.sqrt(2.0 / math.pi)
+
+
+def _pick_tile(n: int, target: int) -> int:
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    h = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...][None, :]
+    o_ref[...] = 0.5 * h * (1.0 + jnp.tanh(_GELU_C * (h + 0.044715 * h * h * h)))
+
+
+def dense_gelu(x, w, b, *, b_tile: int = 128, o_tile: int = 128):
+    """Fused gelu(x @ w + b); semantics of ref.dense_gelu_ref.
+
+    Args:
+        x: [B, din], w: [din, dout], b: [dout].
+    Returns:
+        [B, dout]
+    """
+    B, din = x.shape
+    din2, dout = w.shape
+    assert din == din2, (din, din2)
+    bt = _pick_tile(B, b_tile)
+    ot = _pick_tile(dout, o_tile)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // bt, dout // ot),
+        in_specs=[
+            pl.BlockSpec((bt, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((din, ot), lambda i, j: (0, j)),
+            pl.BlockSpec((ot,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, ot), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, dout), jnp.float32),
+        interpret=True,  # CPU-PJRT execution path
+    )(x, w, b)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: pytest asserts the Pallas kernels
+(interpret=True) match these to tight tolerance across hypothesis-generated
+shape/parameter sweeps, and the AOT'd loss-grad artifacts differentiate
+through these (Pallas interpret-mode has no VJP rule; the forward artifacts
+use the Pallas kernels, and equality of the two paths is itself a test).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def posterior_mean_ref(x, mu, coef_g, coef_b):
+    """Softmax-posterior mean of the dataset points ("posterior attention").
+
+    logits[b, k] = coef_g * <x_b, mu_k> + coef_b * ||mu_k||^2
+    m[b]         = sum_k softmax(logits[b])_k * mu_k
+
+    With coef_g = 2 alpha / (2 v_t) and coef_b = -alpha^2 / (2 v_t) this is
+    exactly softmax_k(-||x - alpha mu_k||^2 / (2 v_t)) (the row-constant
+    ||x||^2 term cancels inside the softmax), i.e. the Bayes posterior mean
+    E[mu | x] of the gamma-smoothed empirical target (DESIGN.md §2).
+
+    Args:
+        x: [B, d] query points.
+        mu: [K, d] dataset support points.
+        coef_g, coef_b: scalars (may be traced).
+    Returns:
+        m: [B, d] posterior means.
+    """
+    logits = coef_g * (x @ mu.T) + coef_b * jnp.sum(mu * mu, axis=-1)[None, :]
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w @ mu
+
+
+def dense_gelu_ref(x, w, b):
+    """Fused dense + tanh-GELU: gelu(x @ w + b).
+
+    Args:
+        x: [B, din], w: [din, dout], b: [dout].
+    Returns:
+        [B, dout]
+    """
+    h = x @ w + b[None, :]
+    c = jnp.sqrt(2.0 / jnp.pi)
+    return 0.5 * h * (1.0 + jnp.tanh(c * (h + 0.044715 * h**3)))

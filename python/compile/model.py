@@ -1,0 +1,193 @@
+"""L2 — velocity-field models (the stand-ins for the paper's pre-trained
+flow models) and the registry of exported model specs.
+
+Two families (DESIGN.md §2):
+
+* ``ideal``:  the closed-form *ideal* velocity field (paper eq. 23) of a
+  gamma-smoothed K-point empirical target.  This is the exact zero-loss
+  Flow-Matching solution, so Theorem 2.3 (scheduler equivalence) holds
+  exactly — the property the paper's experiments probe.  The hot spot is the
+  posterior-attention Pallas kernel (kernels/ideal_vf.py).
+
+* ``mlp``:  a time-conditioned MLP trained at build time with the CFM loss
+  (paper eq. 81) — exercises the "imperfect trained network" path.  The hot
+  blocks are the fused dense+GELU Pallas kernels (kernels/mlp.py).
+
+Both are pure functions ``u(x[B, d], t[]) -> u[B, d]`` that the AOT step
+(aot.py) lowers to HLO text; the Rust coordinator only ever sees the HLO.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, schedulers
+from .kernels import ideal_vf as ideal_vf_kernel
+from .kernels import mlp as mlp_kernel
+from .kernels import ref as kref
+
+# Numerical floor used inside scheduler-derived coefficients (VP's sigma -> 0
+# at t = 1 makes d_sigma blow up; products stay finite, see model-coefficient
+# derivation in DESIGN.md §2).
+_EPS = 1e-12
+
+
+def ideal_coefs(sched: schedulers.Scheduler, t, gamma: float):
+    """Coefficients of the ideal VF  u_t(x) = a_t x + b_t m_t(x).
+
+    With v_t = sigma^2 + alpha^2 gamma^2 (the marginal per-component
+    variance):
+
+        a_t = (sigma' sigma + alpha' alpha gamma^2) / v_t
+        b_t = sigma (alpha' sigma - sigma' alpha) / v_t
+
+    and the posterior-attention logit coefficients
+
+        coef_g = alpha / v_t,   coef_b = -alpha^2 / (2 v_t).
+
+    Derivation: u_t(x) = (s'/s) x + (a' - s' a/s) E[x1|x] with
+    E[x1|x] = c x + (1 - c a) m(x), c = a gamma^2 / v — substituting and
+    simplifying removes every 1/sigma singularity.
+    """
+    a = sched.alpha(t)
+    s = sched.sigma(t)
+    da = sched.d_alpha(t)
+    ds = sched.d_sigma(t)
+    v = s * s + a * a * gamma * gamma + _EPS
+    a_t = (ds * s + da * a * gamma * gamma) / v
+    b_t = s * (da * s - ds * a) / v
+    coef_g = a / v
+    coef_b = -0.5 * a * a / v
+    return a_t, b_t, coef_g, coef_b
+
+
+def ideal_velocity(x, t, mu, sched: schedulers.Scheduler, gamma: float, *, use_kernel: bool = True):
+    """Ideal velocity field u_t(x) for the smoothed empirical target mu.
+
+    use_kernel=True routes the posterior mean through the Pallas kernel
+    (forward/serving artifacts); False uses the pure-jnp oracle, which is the
+    differentiable path used inside the AOT'd Bespoke loss (Pallas
+    interpret-mode defines no VJP).  pytest asserts the two agree.
+    """
+    t = jnp.asarray(t)  # dtype-preserving: float64 grad checks need full precision
+    a_t, b_t, coef_g, coef_b = ideal_coefs(sched, t, gamma)
+    pm = ideal_vf_kernel.posterior_mean if use_kernel else kref.posterior_mean_ref
+    m = pm(x, mu, coef_g, coef_b)
+    return a_t * x + b_t * m
+
+
+# ---------------------------------------------------------------------------
+# Trained MLP velocity field (CFM, paper eq. 81)
+# ---------------------------------------------------------------------------
+
+N_FREQS = 8  # Fourier time features: sin/cos(2^j pi t), j = 0..7
+
+
+def time_features(t):
+    """[2 * N_FREQS] Fourier features of scalar time t."""
+    freqs = 2.0 ** jnp.arange(N_FREQS)
+    ang = math.pi * freqs * t
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def init_mlp_params(d: int, hidden: int, n_hidden: int, seed: int = 0) -> dict:
+    """He-style init for the time-conditioned MLP v(x, t)."""
+    rng = np.random.default_rng(seed)
+    dims = [d + 2 * N_FREQS] + [hidden] * n_hidden + [d]
+    params = {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = (rng.normal(size=(din, dout)) * np.sqrt(2.0 / din)).astype(np.float32)
+        params[f"b{i}"] = np.zeros((dout,), np.float32)
+    return params
+
+
+def mlp_n_layers(params: dict) -> int:
+    """Layer count inferred from the weight keys (keeps params all-float so
+    jax.grad can treat the whole dict as differentiable)."""
+    return sum(1 for k in params if k.startswith("w"))
+
+
+def mlp_velocity(params: dict, x, t, *, use_kernel: bool = True):
+    """Time-conditioned MLP velocity field v(x, t) -> [B, d]."""
+    t = jnp.asarray(t)
+    B = x.shape[0]
+    feats = jnp.broadcast_to(time_features(t)[None, :], (B, 2 * N_FREQS))
+    h = jnp.concatenate([x, feats], axis=-1)
+    n_layers = mlp_n_layers(params)
+    layer = mlp_kernel.dense_gelu if use_kernel else kref.dense_gelu_ref
+    for i in range(n_layers - 1):
+        h = layer(h, jnp.asarray(params[f"w{i}"]), jnp.asarray(params[f"b{i}"]))
+    # Final projection is a plain linear layer.
+    i = n_layers - 1
+    return h @ jnp.asarray(params[f"w{i}"]) + jnp.asarray(params[f"b{i}"])[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Exported model registry (mirrored into artifacts/manifest.json)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """One exported flow model: (dataset, scheduler, kind) at a fixed batch."""
+
+    name: str
+    dataset: str
+    sched: str
+    batch: int
+    gamma: float = 0.05
+    kind: str = "ideal"  # "ideal" | "mlp"
+    mlp_hidden: int = 128
+    mlp_layers: int = 3
+    train_iters: int = 3000
+    # Bespoke loss-grad artifacts to export: (base, n) pairs.
+    lossgrads: tuple = field(default=())
+
+
+_NS = (4, 5, 8, 10)
+_RK2 = tuple(("rk2", n) for n in _NS)
+# RK1-Bespoke comparisons (paper Figs. 3/9/10) run at NFE = n, so RK1
+# needs the larger n grid to cover the same NFE budgets as RK2.
+_RK12 = _RK2 + tuple(("rk1", n) for n in (4, 5, 8, 10, 16, 20))
+
+MODELS = {
+    s.name: s
+    for s in [
+        # CIFAR-10 analogs: 2D checkerboard, three parameterizations.
+        ModelSpec("checker2-ot", "checker2", "ot", 256, lossgrads=_RK12),
+        ModelSpec("checker2-cs", "checker2", "cs", 256, lossgrads=_RK2),
+        ModelSpec("checker2-vp", "checker2", "vp", 256, lossgrads=_RK2),
+        # ImageNet-64 analogs: 8x8 textures (d = 64), three parameterizations.
+        ModelSpec("tex8-ot", "tex8", "ot", 64, gamma=0.08, lossgrads=_RK12),
+        ModelSpec("tex8-cs", "tex8", "cs", 64, gamma=0.08, lossgrads=_RK2),
+        ModelSpec("tex8-vp", "tex8", "vp", 64, gamma=0.08, lossgrads=_RK12),
+        # ImageNet-128 / AFHQ analog: 16x16 textures (d = 256).
+        ModelSpec("tex16-ot", "tex16", "ot", 32, gamma=0.08, lossgrads=_RK2),
+        # Trained CFM MLP on the checkerboard (imperfect-model path).
+        ModelSpec("mlp2-ot", "checker2", "ot", 256, kind="mlp", lossgrads=_RK2),
+    ]
+}
+
+
+def make_velocity_fn(spec: ModelSpec, mlp_params: dict | None = None, *, use_kernel: bool = True):
+    """Closure u(x, t) -> u for a model spec (weights/dataset baked in)."""
+    sched = schedulers.get(spec.sched)
+    if spec.kind == "ideal":
+        mu = jnp.asarray(datasets.get(spec.dataset))
+
+        def u(x, t):
+            return ideal_velocity(x, t, mu, sched, spec.gamma, use_kernel=use_kernel)
+
+        return u
+    if spec.kind == "mlp":
+        assert mlp_params is not None, "mlp model requires trained params"
+
+        def u(x, t):
+            return mlp_velocity(mlp_params, x, t, use_kernel=use_kernel)
+
+        return u
+    raise ValueError(f"unknown model kind {spec.kind!r}")

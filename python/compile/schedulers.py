@@ -1,0 +1,134 @@
+"""Gaussian-path schedulers (paper eq. 22, 82, 83, 85).
+
+A scheduler is the pair (alpha_t, sigma_t) with alpha_0 ~ 0, sigma_0 ~ 1,
+alpha_1 = 1, sigma_1 ~ 0 and strictly monotone snr(t) = alpha_t / sigma_t.
+Convention follows the paper: noise at t = 0, data at t = 1.
+
+These are mirrored bit-for-bit by ``rust/src/schedulers`` — the pytest suite
+and the Rust integration tests cross-check the two implementations through
+the AOT'd HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+# VP schedule constants (Song et al. 2020b; paper eq. 85).
+VP_BETA_MAX = 20.0
+VP_BETA_MIN = 0.1
+
+
+@dataclass(frozen=True)
+class Scheduler:
+    """A named (alpha, sigma) scheduler with analytic derivatives."""
+
+    name: str
+
+    def alpha(self, t):
+        raise NotImplementedError
+
+    def sigma(self, t):
+        raise NotImplementedError
+
+    def d_alpha(self, t):
+        raise NotImplementedError
+
+    def d_sigma(self, t):
+        raise NotImplementedError
+
+    def snr(self, t):
+        return self.alpha(t) / self.sigma(t)
+
+    def log_snr(self, t):
+        return jnp.log(self.alpha(t)) - jnp.log(self.sigma(t))
+
+
+@dataclass(frozen=True)
+class CondOT(Scheduler):
+    """Flow-Matching conditional-OT scheduler: alpha = t, sigma = 1 - t."""
+
+    name: str = "ot"
+
+    def alpha(self, t):
+        return t
+
+    def sigma(self, t):
+        return 1.0 - t
+
+    def d_alpha(self, t):
+        return jnp.ones_like(t)
+
+    def d_sigma(self, t):
+        return -jnp.ones_like(t)
+
+
+@dataclass(frozen=True)
+class Cosine(Scheduler):
+    """FM/v cosine scheduler: alpha = sin(pi t / 2), sigma = cos(pi t / 2)."""
+
+    name: str = "cs"
+
+    def alpha(self, t):
+        return jnp.sin(0.5 * math.pi * t)
+
+    def sigma(self, t):
+        return jnp.cos(0.5 * math.pi * t)
+
+    def d_alpha(self, t):
+        return 0.5 * math.pi * jnp.cos(0.5 * math.pi * t)
+
+    def d_sigma(self, t):
+        return -0.5 * math.pi * jnp.sin(0.5 * math.pi * t)
+
+
+@dataclass(frozen=True)
+class VarPres(Scheduler):
+    """Variance-preserving scheduler (paper eq. 85).
+
+    alpha_t = xi(1 - t), sigma_t = sqrt(1 - alpha_t^2),
+    xi(s) = exp(-s^2 (B - b) / 4 - s b / 2), B = 20, b = 0.1.
+    """
+
+    name: str = "vp"
+
+    @staticmethod
+    def _xi(s):
+        return jnp.exp(-0.25 * s * s * (VP_BETA_MAX - VP_BETA_MIN) - 0.5 * s * VP_BETA_MIN)
+
+    @staticmethod
+    def _d_xi(s):
+        # d/ds xi(s) = xi(s) * (-s (B - b)/2 - b/2)
+        return VarPres._xi(s) * (-0.5 * s * (VP_BETA_MAX - VP_BETA_MIN) - 0.5 * VP_BETA_MIN)
+
+    def alpha(self, t):
+        return self._xi(1.0 - t)
+
+    def sigma(self, t):
+        a = self.alpha(t)
+        return jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    def d_alpha(self, t):
+        # alpha(t) = xi(1 - t)  =>  d/dt = -xi'(1 - t)
+        return -self._d_xi(1.0 - t)
+
+    def d_sigma(self, t):
+        # sigma = sqrt(1 - alpha^2)  =>  sigma' = -alpha alpha' / sigma
+        a = self.alpha(t)
+        return -a * self.d_alpha(t) / self.sigma(t)
+
+
+SCHEDULERS = {
+    "ot": CondOT(),
+    "cs": Cosine(),
+    "vp": VarPres(),
+}
+
+
+def get(name: str) -> Scheduler:
+    try:
+        return SCHEDULERS[name]
+    except KeyError:
+        raise KeyError(f"unknown scheduler {name!r}; available: {sorted(SCHEDULERS)}")

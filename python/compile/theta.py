@@ -1,0 +1,109 @@
+"""Raw-theta parameterization of the Bespoke scale-time transform
+(paper eq. 74 / 76, Appendix F).  Mirrored bit-for-bit by
+``rust/src/solvers/theta.rs`` (the Rust side decodes the same raw vector at
+sampling time; the JAX side decodes it inside the AOT'd loss-grad graph).
+
+Grid convention: a base-RK1 n-step solver uses grid points i = 0..n
+(g = n + 1 points); base-RK2 uses i = 0, 1/2, 1, ..., n (g = 2n + 1 points).
+Raw layout (all float32, p = 4 * (g - 1)):
+
+    [ dt_raw (g-1) | tdot_raw (g-1) | log_s (g-1) | sdot (g-1) ]
+
+Decode (identity-init values in parentheses):
+
+    t_0 = 0, t_j = cumsum(|dt_raw| + eps) / total           (dt_raw = 1)
+    tdot_j = |tdot_raw_j| + eps   for j = 0..g-2            (tdot_raw = 1)
+    s_0 = 1, s_j = exp(log_s_j)   for j = 1..g-1            (log_s = 0)
+    sdot_j  (free)                for j = 0..g-2            (sdot = 0)
+
+The paper counts 8n - 1 / 4n - 1 parameters; our 8n / 4n layout keeps the
+one normalization redundancy (the overall scale of dt_raw) instead of
+pinning it — functionally identical (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-6
+
+
+def grid_points(base: str, n: int) -> int:
+    """Number of grid points g for an n-step solver with the given base."""
+    if base == "rk1":
+        return n + 1
+    if base == "rk2":
+        return 2 * n + 1
+    raise ValueError(f"unknown base {base!r}")
+
+
+def n_params(base: str, n: int) -> int:
+    return 4 * (grid_points(base, n) - 1)
+
+
+def identity_init(base: str, n: int) -> np.ndarray:
+    """Raw theta whose decode is the identity transform (paper eq. 77-80)."""
+    g = grid_points(base, n)
+    m = g - 1
+    return np.concatenate(
+        [
+            np.ones(m, np.float32),  # dt_raw  -> uniform grid
+            np.ones(m, np.float32) / m,  # tdot_raw -> dt/dr = 1 (r-grid spacing h_r: see note)
+            np.zeros(m, np.float32),  # log_s -> s = 1
+            np.zeros(m, np.float32),  # sdot  -> 0
+        ]
+    )
+
+
+def decode(theta_raw, base: str, n: int):
+    """Decode raw theta -> dict of grid sequences (jnp, differentiable).
+
+    Returns dict with:
+        t    [g]    grid times, t[0] = 0, t[-1] = 1
+        tdot [g-1]  dt/dr at grid points 0..g-2 (strictly positive)
+        s    [g]    scales, s[0] = 1 (strictly positive)
+        sdot [g-1]  ds/dr at grid points 0..g-2 (unconstrained)
+
+    NOTE on tdot units: r-space grid spacing between *consecutive grid
+    points* is h_g = 1 / (g - 1) (for RK2 this is h/2 with h = 1/n).  The
+    identity transform t_r = r has dt/dr = 1; our identity_init sets
+    tdot_raw = 1/m with decode tdot = |tdot_raw| * m so that decoded
+    tdot = 1.  Keeping raw values O(1/m) gives all four blocks comparable
+    Adam step sizes.
+    """
+    g = grid_points(base, n)
+    m = g - 1
+    theta_raw = jnp.asarray(theta_raw)
+    assert theta_raw.shape == (4 * m,), (theta_raw.shape, 4 * m)
+    dt_raw, tdot_raw, log_s, sdot = jnp.split(theta_raw, 4)
+
+    inc = jnp.abs(dt_raw) + _EPS
+    csum = jnp.cumsum(inc)
+    t = jnp.concatenate([jnp.zeros(1), csum / csum[-1]])
+
+    tdot = (jnp.abs(tdot_raw) + _EPS) * m
+    s = jnp.concatenate([jnp.ones(1), jnp.exp(log_s)])
+    return {"t": t, "tdot": tdot, "s": s, "sdot": sdot}
+
+
+def ablation_mask(base: str, n: int, mode: str) -> np.ndarray:
+    """Gradient mask implementing the paper's Fig. 15 ablations.
+
+    mode = "full"       -> all ones
+    mode = "time-only"  -> zero the scale blocks (s stays identically 1)
+    mode = "scale-only" -> zero the time blocks (t_r stays r)
+
+    With identity init, masking gradients exactly pins the frozen half of
+    the transform to its identity value.
+    """
+    g = grid_points(base, n)
+    m = g - 1
+    mask = np.ones(4 * m, np.float32)
+    if mode == "time-only":
+        mask[2 * m :] = 0.0
+    elif mode == "scale-only":
+        mask[: 2 * m] = 0.0
+    elif mode != "full":
+        raise ValueError(f"unknown ablation mode {mode!r}")
+    return mask

@@ -1,0 +1,100 @@
+"""Build-time Conditional Flow Matching training of the MLP velocity model
+(paper eq. 81) — the stand-in for the paper's multi-thousand-GPU-day U-Net
+pre-training runs.
+
+    L_CFM = E_{t, x0, x1} || v(x_t, t) - (sigma'_t x0 + alpha'_t x1) ||^2
+    x_t = sigma_t x0 + alpha_t x1,   x0 ~ N(0, I),   x1 ~ smoothed dataset.
+
+Hand-rolled Adam (no optax in the image).  Runs once inside `make
+artifacts`; the trained weights are cached under artifacts/ and baked into
+the exported HLO as constants.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model, schedulers
+
+
+def _adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mh = new_m[k] / (1 - b1**step)
+        vh = new_v[k] / (1 - b2**step)
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new_p, new_m, new_v
+
+
+def train(
+    spec: model.ModelSpec,
+    *,
+    batch: int = 512,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 500,
+) -> dict:
+    """Train the CFM MLP for spec; returns numpy params."""
+    assert spec.kind == "mlp"
+    sched = schedulers.get(spec.sched)
+    data = jnp.asarray(datasets.get(spec.dataset))  # [K, d]
+    d = data.shape[1]
+    params = model.init_mlp_params(d, spec.mlp_hidden, spec.mlp_layers, seed=seed)
+    params = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def loss_fn(p, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        t = jax.random.uniform(k1, (batch, 1))
+        x0 = jax.random.normal(k2, (batch, d))
+        idx = jax.random.randint(k3, (batch,), 0, data.shape[0])
+        x1 = data[idx] + spec.gamma * jax.random.normal(k4, (batch, d))
+        a, s = sched.alpha(t), sched.sigma(t)
+        da, ds = sched.d_alpha(t), sched.d_sigma(t)
+        xt = s * x0 + a * x1
+        target = ds * x0 + da * x1
+        # Per-sample t: vmap the scalar-t velocity over the batch.
+        v = jax.vmap(
+            lambda xb, tb: model.mlp_velocity(p, xb[None, :], tb, use_kernel=False)[0]
+        )(xt, t[:, 0])
+        return jnp.mean(jnp.sum((v - target) ** 2, axis=-1))
+
+    @jax.jit
+    def train_step(p, m, v, step, key):
+        loss, grads = jax.value_and_grad(loss_fn)(p, key)
+        p, m, v = _adam_update(p, grads, m, v, step, lr)
+        return p, m, v, loss
+
+    m = {k: jnp.zeros_like(val) for k, val in params.items()}
+    v = {k: jnp.zeros_like(val) for k, val in params.items()}
+    key = jax.random.PRNGKey(seed)
+    t0 = time.time()
+    for it in range(1, spec.train_iters + 1):
+        key, sub = jax.random.split(key)
+        params, m, v, loss = train_step(params, m, v, it, sub)
+        if it % log_every == 0 or it == 1:
+            print(f"  [cfm {spec.name}] iter {it:5d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+    return {k: np.asarray(val) for k, val in params.items()}
+
+
+@functools.lru_cache(maxsize=None)
+def load_or_train(spec_name: str, cache_dir: str) -> dict:
+    """Load cached weights or train; cache as npz under cache_dir."""
+    import os
+
+    spec = model.MODELS[spec_name]
+    path = os.path.join(cache_dir, f"weights_{spec.name}.npz")
+    if os.path.exists(path):
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+    params = train(spec)
+    os.makedirs(cache_dir, exist_ok=True)
+    np.savez(path, **params)
+    return params

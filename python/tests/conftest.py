@@ -1,0 +1,18 @@
+"""Shared fixtures: scoped float64 mode for finite-difference checks.
+
+jax_enable_x64 must not leak across test modules — the Pallas interpret
+kernels and the AOT path are float32-only — so tests that need float64
+request the ``x64`` fixture instead of flipping the global config at import.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def x64():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", False)

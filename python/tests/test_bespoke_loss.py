@@ -1,0 +1,114 @@
+"""Bespoke loss correctness: identity-theta reduces to the plain base solver,
+Lipschitz weights reduce to 1, gradients match finite differences, and the
+loss is exactly the weighted sum of local truncation errors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bespoke_loss as bl
+from compile import model, theta as tm
+
+
+def u_linear(x, t):
+    """Analytically solvable field: x' = -x + t (for exact-step tests)."""
+    return -x + t
+
+
+def _identity_dec(base, n):
+    return tm.decode(tm.identity_init(base, n), base, n)
+
+
+def test_identity_theta_rk1_step_is_euler():
+    n = 5
+    dec = _identity_dec("rk1", n)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 3)))
+    for i in range(n):
+        got = bl.step_rk1(u_linear, x, i, dec, n)
+        t_i = i / n
+        want = x + (1.0 / n) * u_linear(x, t_i)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_identity_theta_rk2_step_is_midpoint():
+    n = 4
+    dec = _identity_dec("rk2", n)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 3)))
+    h = 1.0 / n
+    for i in range(n):
+        got = bl.step_rk2(u_linear, x, i, dec, n)
+        t_i = i * h
+        z = x + 0.5 * h * u_linear(x, t_i)
+        want = x + h * u_linear(z, t_i + 0.5 * h)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("base,n", [("rk1", 4), ("rk2", 6)])
+def test_identity_theta_lipschitz_weights(base, n):
+    """At identity theta: L_ubar = L_tau = 1, so L_i = 1 + h (RK1) or
+    1 + h(1 + h/2) (RK2) exactly (lemmas D.2/D.3)."""
+    dec = _identity_dec(base, n)
+    h = 1.0 / n
+    want = 1.0 + h if base == "rk1" else 1.0 + h * (1.0 + 0.5 * h)
+    for i in range(n):
+        got = float(bl.lipschitz_step(dec, base, i, n))
+        assert got == pytest.approx(want, rel=1e-4)
+
+
+@pytest.mark.parametrize("base,n", [("rk1", 5), ("rk2", 5)])
+def test_gradient_matches_finite_differences(base, n, x64):
+    spec = model.MODELS["checker2-ot"]
+    u_fn = model.make_velocity_fn(spec, use_kernel=False)
+    p = tm.n_params(base, n)
+    rng = np.random.default_rng(0)
+    th = jnp.asarray(tm.identity_init(base, n), jnp.float64) + 0.02 * rng.normal(size=p)
+    B, d = 16, 2
+    xs = jnp.asarray(rng.normal(size=(B, n + 1, d)))
+    us = jnp.asarray(rng.normal(size=(B, n + 1, d)))
+    ts = jnp.linspace(0, 1, n + 1)
+    lg = bl.make_loss_and_grad(u_fn, base, n)
+    _, grad = lg(th, xs, us, ts)
+
+    def f(v):
+        return float(lg(jnp.asarray(v), xs, us, ts)[0])
+
+    eps = 1e-6
+    for i in range(0, p, max(1, p // 12)):
+        tp, tmm = np.array(th), np.array(th)
+        tp[i] += eps
+        tmm[i] -= eps
+        fd = (f(tp) - f(tmm)) / (2 * eps)
+        assert fd == pytest.approx(float(grad[i]), rel=1e-3, abs=1e-5), f"param {i}"
+
+
+def test_loss_zero_for_exact_snapshots_of_linear_field():
+    """A globally-linear trajectory is reproduced exactly by RK2 (order 2
+    exact on linear-in-t solutions); loss must be ~0 at identity theta."""
+
+    def u_const(x, t):
+        return jnp.ones_like(x) * 0.7
+
+    n, B, d = 4, 3, 2
+    ts = jnp.linspace(0, 1, n + 1)
+    x0 = jnp.asarray(np.random.default_rng(2).normal(size=(B, d)))
+    xs = jnp.stack([x0 + 0.7 * t for t in ts], axis=1)
+    us = jnp.full((B, n + 1, d), 0.7)
+    th = jnp.asarray(tm.identity_init("rk2", n))
+    loss = bl.bespoke_loss(th, xs, us, ts, u_fn=u_const, base="rk2", n=n)
+    # Not exactly 0: the decode's positivity eps (1e-6) perturbs tdot by
+    # ~m*eps at identity; anything below 1e-4 is the exact-solver regime.
+    assert float(loss) < 1e-4
+
+
+def test_loss_is_positive_and_finite():
+    spec = model.MODELS["checker2-ot"]
+    u_fn = model.make_velocity_fn(spec, use_kernel=False)
+    n = 4
+    rng = np.random.default_rng(3)
+    th = jnp.asarray(tm.identity_init("rk2", n))
+    xs = jnp.asarray(rng.normal(size=(8, n + 1, 2)))
+    us = jnp.asarray(rng.normal(size=(8, n + 1, 2)))
+    ts = jnp.linspace(0, 1, n + 1)
+    loss = bl.bespoke_loss(th, xs, us, ts, u_fn=u_fn, base="rk2", n=n)
+    assert np.isfinite(float(loss)) and float(loss) > 0

@@ -1,0 +1,100 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and coefficients; this is the core correctness
+signal for the kernels that end up inside the serving HLO artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ideal_vf import posterior_mean
+from compile.kernels.mlp import dense_gelu
+from compile.kernels.ref import dense_gelu_ref, posterior_mean_ref
+
+SIZES = st.sampled_from([1, 2, 3, 8, 17, 32, 96, 128, 160, 256])
+DIMS = st.sampled_from([1, 2, 5, 16, 64])
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=SIZES,
+    k=SIZES,
+    d=DIMS,
+    coef_g=st.floats(-10.0, 10.0),
+    coef_b=st.floats(-10.0, 0.0),
+    seed=st.integers(0, 2**16),
+)
+def test_posterior_mean_matches_ref(b, k, d, coef_g, coef_b, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    mu = _rand(rng, k, d)
+    got = posterior_mean(x, mu, coef_g, coef_b)
+    want = posterior_mean_ref(x, mu, coef_g, coef_b)
+    # 1e-4: accumulation-order differences under saturated softmax (large
+    # coef_g * dot products at d = 64) legitimately reach a few 1e-5.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=SIZES,
+    din=DIMS,
+    dout=st.sampled_from([1, 2, 16, 128, 160]),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_gelu_matches_ref(b, din, dout, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, din)
+    w = _rand(rng, din, dout)
+    bias = _rand(rng, dout)
+    got = dense_gelu(x, w, bias)
+    want = dense_gelu_ref(x, w, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_posterior_mean_saturated_softmax_is_stable():
+    """Extreme logits: online softmax must not produce NaN/Inf."""
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 16, 4) * 10.0
+    mu = _rand(rng, 256, 4) * 10.0
+    got = posterior_mean(x, mu, 400.0, -200.0)
+    assert np.isfinite(np.asarray(got)).all()
+    want = posterior_mean_ref(x, mu, 400.0, -200.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_posterior_mean_uniform_limit():
+    """coef -> 0 gives the plain dataset mean for every query."""
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 8, 3)
+    mu = _rand(rng, 64, 3)
+    got = np.asarray(posterior_mean(x, mu, 0.0, 0.0))
+    want = np.broadcast_to(np.asarray(mu).mean(axis=0), got.shape)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_posterior_mean_is_convex_combination():
+    """Output must lie in the convex hull of the dataset (coordinatewise bounds)."""
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 32, 2)
+    mu = _rand(rng, 128, 2)
+    got = np.asarray(posterior_mean(x, mu, 5.0, -2.0))
+    lo, hi = np.asarray(mu).min(axis=0), np.asarray(mu).max(axis=0)
+    assert (got >= lo - 1e-5).all() and (got <= hi + 1e-5).all()
+
+
+@pytest.mark.parametrize("b_tile,k_tile", [(32, 32), (64, 128), (128, 64)])
+def test_posterior_mean_tile_invariance(b_tile, k_tile):
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 128, 8)
+    mu = _rand(rng, 256, 8)
+    got = posterior_mean(x, mu, 3.0, -1.0, b_tile=b_tile, k_tile=k_tile)
+    want = posterior_mean_ref(x, mu, 3.0, -1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,95 @@
+"""L2 model correctness: kernel path == ref path, finiteness at the time
+boundaries, flow actually transports noise to the target, Theorem 2.3
+coupling invariance across schedulers."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, model, schedulers
+
+
+@pytest.mark.parametrize("name", ["checker2-ot", "checker2-vp", "tex8-cs"])
+def test_kernel_path_matches_ref_path(name):
+    spec = model.MODELS[name]
+    u_k = model.make_velocity_fn(spec, use_kernel=True)
+    u_r = model.make_velocity_fn(spec, use_kernel=False)
+    rng = np.random.default_rng(0)
+    d = datasets.get(spec.dataset).shape[1]
+    x = jnp.asarray(rng.normal(size=(spec.batch, d)), jnp.float32)
+    for t in [0.0, 0.31, 0.77, 1.0]:
+        a = np.asarray(u_k(x, jnp.float32(t)))
+        b = np.asarray(u_r(x, jnp.float32(t)))
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("name", ["checker2-ot", "checker2-cs", "checker2-vp"])
+def test_velocity_finite_on_full_time_range(name):
+    spec = model.MODELS[name]
+    u = model.make_velocity_fn(spec, use_kernel=False)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64, 2)) * 3.0, jnp.float32)
+    for t in np.linspace(0.0, 1.0, 21):
+        out = np.asarray(u(x, jnp.float32(t)))
+        assert np.isfinite(out).all(), f"non-finite velocity at t={t}"
+
+
+def _euler_sample(u, x0, steps=400):
+    x = x0
+    h = 1.0 / steps
+    for i in range(steps):
+        x = x + h * u(x, jnp.float32(i * steps**-1))
+    return x
+
+
+def test_flow_transports_noise_to_target():
+    """Fine Euler integration of the ideal VF must land near the dataset."""
+    spec = model.MODELS["checker2-ot"]
+    u = model.make_velocity_fn(spec, use_kernel=False)
+    mu = datasets.get("checker2")
+    rng = np.random.default_rng(2)
+    x0 = jnp.asarray(rng.normal(size=(256, 2)), jnp.float32)
+    x1 = np.asarray(_euler_sample(u, x0))
+    # Every sample should be within a few gamma of some dataset point.
+    d2 = ((x1[:, None, :] - mu[None, :, :]) ** 2).sum(-1).min(axis=1)
+    assert np.sqrt(d2).mean() < 5 * spec.gamma
+
+
+def test_theorem23_same_coupling_across_schedulers():
+    """Thm 2.3: all ideal VFs over Gaussian paths define the same noise->data
+    coupling; integrating OT and CS fields from the same x0 must agree."""
+    x0 = jnp.asarray(np.random.default_rng(3).normal(size=(128, 2)), jnp.float32)
+    ends = {}
+    for name in ["checker2-ot", "checker2-cs"]:
+        u = model.make_velocity_fn(model.MODELS[name], use_kernel=False)
+        ends[name] = np.asarray(_euler_sample(u, x0, steps=800))
+    err = np.sqrt(((ends["checker2-ot"] - ends["checker2-cs"]) ** 2).mean())
+    assert err < 0.1, f"coupling mismatch RMSE={err}"
+
+
+def test_mlp_velocity_shapes_and_grad():
+    params = model.init_mlp_params(2, 32, 2, seed=0)
+    x = jnp.zeros((8, 2))
+    out = model.mlp_velocity(params, x, jnp.float32(0.5), use_kernel=False)
+    assert out.shape == (8, 2)
+    out_k = model.mlp_velocity(params, x, jnp.float32(0.5), use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_k), rtol=2e-5, atol=2e-5)
+
+
+def test_ideal_coefs_no_singularity():
+    """a_t, b_t stay finite for all schedulers at t in {0, 1} (DESIGN.md §2)."""
+    for name in ["ot", "cs", "vp"]:
+        s = schedulers.get(name)
+        for t in [0.0, 0.5, 1.0]:
+            a_t, b_t, cg, cb = model.ideal_coefs(s, jnp.float32(t), 0.05)
+            vals = [float(a_t), float(b_t), float(cg), float(cb)]
+            assert all(np.isfinite(v) for v in vals), (name, t, vals)
+
+
+@pytest.mark.parametrize("ds", ["checker2", "tex8", "tex16", "moons2"])
+def test_datasets_deterministic_and_bounded(ds):
+    a = datasets.get(ds)
+    b = datasets.get(ds)
+    np.testing.assert_array_equal(a, b)
+    assert np.isfinite(a).all()
+    assert np.abs(a).max() <= 2.5

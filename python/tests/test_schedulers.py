@@ -1,0 +1,57 @@
+"""Scheduler invariants (paper eq. 22) and analytic-derivative checks."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import schedulers
+
+ALL = list(schedulers.SCHEDULERS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_boundary_conditions(name):
+    s = schedulers.get(name)
+    # alpha_0 ~ 0, alpha_1 = 1, sigma_0 ~ 1, sigma_1 ~ 0 (VP reaches the
+    # boundaries only approximately by construction, eq. 85).
+    assert float(s.alpha(jnp.asarray(0.0))) == pytest.approx(0.0, abs=7e-3)
+    assert float(s.alpha(jnp.asarray(1.0))) == pytest.approx(1.0, abs=1e-6)
+    assert float(s.sigma(jnp.asarray(0.0))) == pytest.approx(1.0, abs=1e-4)
+    assert float(s.sigma(jnp.asarray(1.0))) == pytest.approx(0.0, abs=1e-5)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_snr_strictly_monotone(name):
+    s = schedulers.get(name)
+    t = jnp.linspace(1e-3, 1.0 - 1e-3, 513)
+    snr = np.asarray(s.snr(t))
+    assert (np.diff(snr) > 0).all(), "snr must be strictly increasing"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_derivatives_match_finite_differences(name, x64):
+    s = schedulers.get(name)
+    t = jnp.linspace(0.01, 0.99, 197)
+    eps = 1e-7
+    fd_a = (s.alpha(t + eps) - s.alpha(t - eps)) / (2 * eps)
+    fd_s = (s.sigma(t + eps) - s.sigma(t - eps)) / (2 * eps)
+    np.testing.assert_allclose(np.asarray(s.d_alpha(t)), np.asarray(fd_a), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s.d_sigma(t)), np.asarray(fd_s), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_alpha_sigma_in_unit_interval(name):
+    s = schedulers.get(name)
+    t = jnp.linspace(0.0, 1.0, 257)
+    a, sg = np.asarray(s.alpha(t)), np.asarray(s.sigma(t))
+    # float32 rounding at the endpoints (cos(pi/2) ~ -4.4e-8) is fine.
+    assert (a >= -1e-6).all() and (a <= 1 + 1e-6).all()
+    assert (sg >= -1e-6).all() and (sg <= 1 + 1e-6).all()
+
+
+def test_vp_variance_preserving():
+    s = schedulers.get("vp")
+    t = jnp.linspace(0.0, 1.0, 101)
+    np.testing.assert_allclose(
+        np.asarray(s.alpha(t)) ** 2 + np.asarray(s.sigma(t)) ** 2, 1.0, atol=1e-6
+    )

@@ -1,0 +1,64 @@
+"""Theta codec invariants (paper eq. 74/76; mirrored by rust solvers/theta.rs)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import theta as tm
+
+
+@pytest.mark.parametrize("base,n", [("rk1", 4), ("rk1", 10), ("rk2", 5), ("rk2", 8)])
+def test_identity_init_decodes_to_identity(base, n):
+    dec = tm.decode(tm.identity_init(base, n), base, n)
+    g = tm.grid_points(base, n)
+    np.testing.assert_allclose(np.asarray(dec["t"]), np.linspace(0, 1, g), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dec["tdot"]), 1.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dec["s"]), 1.0)
+    np.testing.assert_allclose(np.asarray(dec["sdot"]), 0.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    base=st.sampled_from(["rk1", "rk2"]),
+    n=st.integers(2, 12),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.01, 3.0),
+)
+def test_decode_invariants_hold_for_any_raw_theta(base, n, seed, scale):
+    """Constraints of eq. 18/21 hold for arbitrary raw vectors."""
+    p = tm.n_params(base, n)
+    raw = np.random.default_rng(seed).normal(size=p).astype(np.float32) * scale
+    dec = tm.decode(raw, base, n)
+    t = np.asarray(dec["t"])
+    assert t[0] == 0.0 and abs(t[-1] - 1.0) < 1e-6
+    assert (np.diff(t) > 0).all(), "t grid must be strictly increasing"
+    assert (np.asarray(dec["tdot"]) > 0).all()
+    s = np.asarray(dec["s"])
+    assert s[0] == 1.0 and (s > 0).all()
+    assert dec["sdot"].shape == (tm.grid_points(base, n) - 1,)
+
+
+def test_n_params_counts():
+    assert tm.n_params("rk1", 5) == 20  # 4n
+    assert tm.n_params("rk2", 5) == 40  # 8n
+    assert tm.n_params("rk2", 10) == 80  # the paper's "80 learnable parameters"
+
+
+@pytest.mark.parametrize("mode", ["full", "time-only", "scale-only"])
+def test_ablation_masks(mode):
+    mask = tm.ablation_mask("rk2", 5, mode)
+    p = tm.n_params("rk2", 5)
+    assert mask.shape == (p,)
+    half = p // 2
+    if mode == "full":
+        assert mask.sum() == p
+    elif mode == "time-only":
+        assert mask[:half].sum() == half and mask[half:].sum() == 0
+    else:
+        assert mask[:half].sum() == 0 and mask[half:].sum() == half
+
+
+def test_ablation_mask_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        tm.ablation_mask("rk2", 5, "bogus")

@@ -1,0 +1,166 @@
+//! `cargo bench` — hot-path micro/meso benchmarks (in-tree harness; the
+//! image has no criterion crate, builds are fully offline).
+//!
+//! Benchmarks print `name  median  p10  p90  iters` in microseconds and are
+//! the data source for EXPERIMENTS.md §Perf. Filter: `cargo bench -- <substr>`.
+
+use std::time::Instant;
+
+use bespoke_flow::models::{AnalyticModel, VelocityModel, Zoo};
+use bespoke_flow::runtime::Executable;
+use bespoke_flow::schedulers::Scheduler;
+use bespoke_flow::solvers::rk::{BaseRk, FixedGridSolver};
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{BespokeSolver, Dopri5, Sampler};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+/// Time `f` adaptively: warm up, then run until ~1s or 1000 iters.
+fn bench(name: &str, filter: &str, mut f: impl FnMut()) {
+    if !name.contains(filter) {
+        return;
+    }
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let budget = std::time::Duration::from_secs(1);
+    let started = Instant::now();
+    while started.elapsed() < budget && samples.len() < 1000 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    println!(
+        "{name:<44} {:>12.1}us {:>12.1}us {:>12.1}us {:>6}",
+        q(0.5),
+        q(0.1),
+        q(0.9),
+        samples.len()
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    // cargo bench passes --bench; our filter is any non-flag arg
+    let filter = args
+        .iter()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .cloned()
+        .unwrap_or_default();
+
+    println!(
+        "{:<44} {:>14} {:>14} {:>14} {:>6}",
+        "benchmark", "median", "p10", "p90", "iters"
+    );
+
+    // ---- L3 substrate benches (no artifacts needed) -----------------------
+    let mut rng = Rng::new(0);
+    let a = Tensor::new(rng.normal_vec(256 * 64), vec![256, 64]).unwrap();
+    let b = Tensor::new(rng.normal_vec(256 * 64), vec![256, 64]).unwrap();
+    bench("tensor/axpy_256x64", &filter, || {
+        let mut x = a.clone();
+        x.axpy(0.5, &b).unwrap();
+        std::hint::black_box(&x);
+    });
+    bench("tensor/covariance_4096x16", &filter, {
+        let big = Tensor::new(Rng::new(1).normal_vec(4096 * 16), vec![4096, 16]).unwrap();
+        move || {
+            std::hint::black_box(big.covariance());
+        }
+    });
+    bench("eval/frechet_d64", &filter, {
+        let x = Tensor::new(Rng::new(2).normal_vec(1024 * 64), vec![1024, 64]).unwrap();
+        let y = Tensor::new(Rng::new(3).normal_vec(1024 * 64), vec![1024, 64]).unwrap();
+        move || {
+            std::hint::black_box(bespoke_flow::eval::frechet_distance(&x, &y));
+        }
+    });
+    bench("theta/decode_rk2_n10", &filter, {
+        let th = RawTheta::identity(Base::Rk2, 10);
+        move || {
+            std::hint::black_box(th.decode());
+        }
+    });
+
+    // analytic-model solver throughput (pure rust path)
+    let pts = Tensor::new(Rng::new(4).normal_vec(512 * 2), vec![512, 2]).unwrap();
+    let ana = AnalyticModel::new("bench", pts, Scheduler::CondOt, 0.05, 256).unwrap();
+    let x0 = Tensor::new(Rng::new(5).normal_vec(256 * 2), vec![256, 2]).unwrap();
+    bench("analytic/u_eval_b256_k512_d2", &filter, || {
+        std::hint::black_box(ana.eval(&x0, 0.5).unwrap());
+    });
+    bench("analytic/rk2_n8_sample", &filter, || {
+        let s = FixedGridSolver::uniform(BaseRk::Rk2, 8);
+        std::hint::black_box(s.sample(&ana, &x0).unwrap());
+    });
+    bench("analytic/dopri5_gt_solve", &filter, || {
+        std::hint::black_box(Dopri5::default().sample(&ana, &x0).unwrap());
+    });
+
+    // ---- HLO request-path benches (need `make artifacts`) ------------------
+    let zoo = match Zoo::open_default() {
+        Ok(z) => z,
+        Err(e) => {
+            println!("(skipping HLO benches: {e})");
+            return;
+        }
+    };
+    for model_name in ["checker2-ot", "tex8-ot", "tex16-ot"] {
+        let model = zoo.hlo(model_name).expect("model");
+        let (b, d) = (model.batch(), model.dim());
+        let x = Tensor::new(Rng::new(6).normal_vec(b * d), vec![b, d]).unwrap();
+        bench(&format!("hlo/u_eval_{model_name}"), &filter, || {
+            std::hint::black_box(model.eval(&x, 0.5).unwrap());
+        });
+        bench(&format!("hlo/rk2_n8_sample_{model_name}"), &filter, || {
+            let s = FixedGridSolver::uniform(BaseRk::Rk2, 8);
+            std::hint::black_box(s.sample(model.as_ref(), &x).unwrap());
+        });
+        bench(&format!("hlo/bespoke_rk2_n8_{model_name}"), &filter, || {
+            let s = BespokeSolver::new(&RawTheta::identity(Base::Rk2, 8));
+            std::hint::black_box(s.sample(model.as_ref(), &x).unwrap());
+        });
+        bench(&format!("hlo/dopri5_gt_{model_name}"), &filter, || {
+            std::hint::black_box(Dopri5::default().sample(model.as_ref(), &x).unwrap());
+        });
+    }
+
+    // trainer iteration cost (loss-grad launch + snapshots)
+    if let Ok(lg) = zoo.manifest().lossgrad("checker2-ot", "rk2", 8) {
+        let exe = Executable::load(&zoo.manifest().path(&lg.file)).unwrap();
+        let model = zoo.hlo("checker2-ot").unwrap();
+        let (b, d, n) = (model.batch(), model.dim(), 8usize);
+        let x0 = Tensor::new(Rng::new(7).normal_vec(b * d), vec![b, d]).unwrap();
+        let dense = Dopri5::default().solve_model_dense(model.as_ref(), &x0).unwrap();
+        let th = RawTheta::identity(Base::Rk2, n);
+        bench("train/lossgrad_iter_checker2_n8", &filter, || {
+            let dec = th.decode();
+            let ts = dec.step_times();
+            let mut x_pack = vec![0.0f32; b * (n + 1) * d];
+            let mut u_pack = vec![0.0f32; b * (n + 1) * d];
+            for (i, &t) in ts.iter().enumerate() {
+                let xs = dense.eval(t);
+                let us = model.eval(&xs, t).unwrap();
+                for bi in 0..b {
+                    let dst = (bi * (n + 1) + i) * d;
+                    x_pack[dst..dst + d].copy_from_slice(xs.row(bi));
+                    u_pack[dst..dst + d].copy_from_slice(us.row(bi));
+                }
+            }
+            let out = exe
+                .run(&[
+                    Tensor::new(th.raw.clone(), vec![th.raw.len()]).unwrap(),
+                    Tensor::new(x_pack.clone(), vec![b, n + 1, d]).unwrap(),
+                    Tensor::new(u_pack.clone(), vec![b, n + 1, d]).unwrap(),
+                    Tensor::new(ts.clone(), vec![n + 1]).unwrap(),
+                ])
+                .unwrap();
+            std::hint::black_box(out);
+        });
+    }
+}

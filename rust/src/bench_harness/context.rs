@@ -1,0 +1,182 @@
+//! Shared experiment context: GT-solution caching, on-demand Bespoke
+//! training with theta checkpoints, and sampler evaluation plumbing.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context as _, Result};
+
+use crate::bespoke::{self, TrainOutcome};
+use crate::config::{Config, TrainConfig};
+use crate::eval::{evaluate_sampler, SamplerReport};
+use crate::models::{HloModel, VelocityModel, Zoo};
+use crate::runtime::Executable;
+use crate::solvers::theta::{Base, RawTheta};
+use crate::solvers::{make_sampler, BespokeSolver, Dopri5, Sampler};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use crate::log_info;
+
+pub struct ExpContext {
+    pub zoo: Arc<Zoo>,
+    pub cfg: Config,
+    pub out_dir: PathBuf,
+    /// (model, n_batches) -> (x0 batches, GT batches).
+    gt_cache: BTreeMap<(String, usize), (Vec<Tensor>, Vec<Tensor>)>,
+    /// dataset tensors by name.
+    data_cache: BTreeMap<String, Tensor>,
+    /// training histories recorded while building thetas (for fig12).
+    pub histories: BTreeMap<String, Vec<bespoke::TrainPoint>>,
+}
+
+impl ExpContext {
+    pub fn new(zoo: Arc<Zoo>, cfg: Config) -> Result<ExpContext> {
+        let out_dir = if cfg.out_dir.is_empty() {
+            PathBuf::from("out")
+        } else {
+            PathBuf::from(&cfg.out_dir)
+        };
+        std::fs::create_dir_all(out_dir.join("reports"))?;
+        std::fs::create_dir_all(out_dir.join("thetas"))?;
+        Ok(ExpContext {
+            zoo,
+            cfg,
+            out_dir,
+            gt_cache: BTreeMap::new(),
+            data_cache: BTreeMap::new(),
+            histories: BTreeMap::new(),
+        })
+    }
+
+    pub fn report_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join("reports").join(name)
+    }
+
+    /// Number of eval batches for a model (targets `eval.metric_samples`).
+    pub fn n_batches(&self, model: &str) -> usize {
+        let b = self.zoo.manifest().model(model).map(|m| m.batch).unwrap_or(64);
+        (self.cfg.eval.metric_samples / b).clamp(4, 16)
+    }
+
+    /// Noise + GT-solver solutions for a model (cached).
+    pub fn gt(&mut self, model: &str) -> Result<(&[Tensor], &[Tensor])> {
+        let nb = self.n_batches(model);
+        let key = (model.to_string(), nb);
+        if !self.gt_cache.contains_key(&key) {
+            let hlo = self.zoo.hlo(model)?;
+            let (b, d) = (hlo.batch(), hlo.dim());
+            let mut rng = Rng::new(self.cfg.eval.seed);
+            let gt_solver = Dopri5 {
+                rtol: self.cfg.eval.gt_tol,
+                atol: self.cfg.eval.gt_tol,
+                max_steps: 100_000,
+            };
+            let mut x0s = Vec::with_capacity(nb);
+            let mut gts = Vec::with_capacity(nb);
+            log_info!("[gt] solving {nb} GT batches for {model}...");
+            for _ in 0..nb {
+                let x0 = Tensor::new(rng.normal_vec(b * d), vec![b, d])?;
+                let sol = gt_solver.solve_model_dense(hlo.as_ref(), &x0)?;
+                gts.push(sol.final_state().clone());
+                x0s.push(x0);
+            }
+            self.gt_cache.insert(key.clone(), (x0s, gts));
+        }
+        let (a, b) = self.gt_cache.get(&key).unwrap();
+        Ok((a.as_slice(), b.as_slice()))
+    }
+
+    /// Target dataset tensor for a model (for the FID-analog fd_data).
+    pub fn dataset(&mut self, model: &str) -> Result<Tensor> {
+        let ds_name = self.zoo.manifest().model(model)?.dataset.clone();
+        if !self.data_cache.contains_key(&ds_name) {
+            let t = self.zoo.manifest().load_dataset(&ds_name)?;
+            self.data_cache.insert(ds_name.clone(), t);
+        }
+        Ok(self.data_cache.get(&ds_name).unwrap().clone())
+    }
+
+    /// Evaluate a sampler spec (registry string) on a model.
+    pub fn eval_spec(&mut self, model: &str, spec: &str) -> Result<SamplerReport> {
+        let sched = self.zoo.scheduler(model)?;
+        let sampler = make_sampler(spec, sched)?;
+        self.eval_sampler(model, sampler.as_ref())
+    }
+
+    /// Evaluate an instantiated sampler on a model.
+    pub fn eval_sampler(&mut self, model: &str, sampler: &dyn Sampler) -> Result<SamplerReport> {
+        let hlo = self.zoo.hlo(model)?;
+        let data = self.dataset(model)?;
+        let (x0, gt) = self.gt(model)?;
+        // borrow juggling: clone slices (Tensor clones are cheap enough here)
+        let x0v: Vec<Tensor> = x0.to_vec();
+        let gtv: Vec<Tensor> = gt.to_vec();
+        evaluate_sampler(hlo.as_ref(), sampler, &x0v, &gtv, Some(&data))
+    }
+
+    /// GT-solver report (for GT-FD reference rows).
+    pub fn eval_gt(&mut self, model: &str) -> Result<SamplerReport> {
+        let tol = self.cfg.eval.gt_tol;
+        self.eval_spec(model, &format!("dopri5:tol={tol:e}"))
+    }
+
+    fn theta_path(&self, model: &str, base: Base, n: usize, ablation: &str) -> PathBuf {
+        let suffix = if ablation == "full" { String::new() } else { format!("_{ablation}") };
+        self.out_dir
+            .join("thetas")
+            .join(format!("theta_{model}_{}_n{n}{suffix}.json", base.name()))
+    }
+
+    /// Load a cached theta or train one (checkpointing to out/thetas).
+    pub fn theta(&mut self, model: &str, base: Base, n: usize, ablation: &str) -> Result<RawTheta> {
+        let path = self.theta_path(model, base, n, ablation);
+        if path.exists() {
+            return RawTheta::load(&path);
+        }
+        let outcome = self.train_bespoke(model, base, n, ablation)?;
+        outcome.best.save(&path)?;
+        Ok(outcome.best)
+    }
+
+    /// Train a Bespoke solver now (recording history for fig12).
+    pub fn train_bespoke(
+        &mut self,
+        model: &str,
+        base: Base,
+        n: usize,
+        ablation: &str,
+    ) -> Result<TrainOutcome> {
+        let hlo: Arc<HloModel> = self.zoo.hlo(model)?;
+        let lg = self.zoo.manifest().lossgrad(model, base.name(), n)?;
+        let exe = Executable::load(&self.zoo.manifest().path(&lg.file))
+            .with_context(|| format!("loading lossgrad for {model} {} n={n}", base.name()))?;
+        let tcfg = TrainConfig { ablation: ablation.into(), ..self.cfg.train.clone() };
+        log_info!(
+            "[train] bespoke-{} n={n} for {model} ({} iters, ablation={ablation})",
+            base.name(),
+            tcfg.iters
+        );
+        let outcome = bespoke::train(&hlo, &exe, base, n, &tcfg)?;
+        let hist_key = format!("{model}_{}_n{n}_{ablation}", base.name());
+        self.histories.insert(hist_key, outcome.history.clone());
+        Ok(outcome)
+    }
+
+    /// Bespoke sampler for (model, base, n), training if necessary.
+    pub fn bespoke_sampler(
+        &mut self,
+        model: &str,
+        base: Base,
+        n: usize,
+        ablation: &str,
+    ) -> Result<BespokeSolver> {
+        let th = self.theta(model, base, n, ablation)?;
+        let label = if ablation == "full" {
+            format!("bespoke-{}:n={n}", base.name())
+        } else {
+            format!("bespoke-{}:n={n}:{ablation}", base.name())
+        };
+        Ok(BespokeSolver::with_label(&th, label))
+    }
+}

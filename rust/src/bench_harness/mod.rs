@@ -1,0 +1,50 @@
+//! Experiment harness: regenerates **every table and figure** of the
+//! paper's evaluation on this repo's substrates (DESIGN.md §4 maps each
+//! experiment id to the paper artifact it reproduces).
+//!
+//! `repro exp <id>` runs one experiment; `repro exp all` runs the suite.
+//! Reports land in `out/reports/<id>.md` (+ `.csv` series files); trained
+//! thetas are cached in `out/thetas/` and re-used across experiments.
+
+pub mod context;
+pub mod experiments;
+pub mod report;
+
+pub use context::ExpContext;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids in suggested execution order (cheap → expensive).
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig17", "tab3", "tab1", "fig10", "fig11", "fig4", "fig12", "fig3", "fig9",
+    "fig13", "fig5", "fig14", "fig15", "fig16", "tab2",
+];
+
+pub fn run(ctx: &mut ExpContext, id: &str) -> Result<()> {
+    match id {
+        "tab1" => experiments::tab1(ctx),
+        "tab2" => experiments::tab2(ctx),
+        "tab3" => experiments::tab3(ctx),
+        "fig1" => experiments::fig1(ctx),
+        "fig3" => experiments::fig3_9_10(ctx, "fig3", "tex8-ot"),
+        "fig9" => experiments::fig3_9_10(ctx, "fig9", "tex8-vp"),
+        "fig10" => experiments::fig3_9_10(ctx, "fig10", "checker2-ot"),
+        "fig4" => experiments::fig4(ctx),
+        "fig5" => experiments::fig5(ctx),
+        "fig11" => experiments::fig11(ctx),
+        "fig12" => experiments::fig12(ctx),
+        "fig13" => experiments::fig13(ctx),
+        "fig14" => experiments::fig14(ctx),
+        "fig15" => experiments::fig15(ctx),
+        "fig16" => experiments::fig16(ctx),
+        "fig17" => experiments::fig17_19(ctx),
+        "all" => {
+            for id in ALL_EXPERIMENTS {
+                crate::log_info!("=== experiment {id} ===");
+                run(ctx, id)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment {id:?}; available: {ALL_EXPERIMENTS:?} or 'all'"),
+    }
+}

@@ -1,0 +1,96 @@
+//! Markdown + CSV report writers for the experiment harness.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::eval::SamplerReport;
+
+pub struct Report {
+    title: String,
+    lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Report {
+        let title = title.into();
+        Report { lines: vec![format!("# {title}"), String::new()], title }
+    }
+
+    pub fn para(&mut self, text: impl AsRef<str>) {
+        self.lines.push(text.as_ref().to_string());
+        self.lines.push(String::new());
+    }
+
+    pub fn section(&mut self, name: impl AsRef<str>) {
+        self.lines.push(format!("## {}", name.as_ref()));
+        self.lines.push(String::new());
+    }
+
+    /// A markdown table of sampler reports.
+    pub fn sampler_table(&mut self, rows: &[SamplerReport]) {
+        self.lines.push(
+            "| sampler | NFE | RMSE | PSNR | FD (vs GT) | FD (vs data) | SWD | ms/batch |".into(),
+        );
+        self.lines
+            .push("|---|---:|---:|---:|---:|---:|---:|---:|".into());
+        for r in rows {
+            self.lines.push(format!(
+                "| {} | {} | {:.5} | {:.2} | {:.4} | {:.4} | {:.4} | {:.1} |",
+                r.sampler, r.nfe, r.rmse, r.psnr, r.fd, r.fd_data, r.swd, r.wall_ms_per_batch
+            ));
+        }
+        self.lines.push(String::new());
+    }
+
+    /// Generic markdown table.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        self.lines.push(format!("| {} |", header.join(" | ")));
+        self.lines
+            .push(format!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+        for r in rows {
+            self.lines.push(format!("| {} |", r.join(" | ")));
+        }
+        self.lines.push(String::new());
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.lines.join("\n"))?;
+        crate::log_info!("wrote {} ({})", path.display(), self.title);
+        Ok(())
+    }
+}
+
+/// CSV writer for figure series.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Rows of sampler reports as CSV cells (shared by the figure series).
+pub fn report_csv_rows(model: &str, rows: &[SamplerReport]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                model.to_string(),
+                r.sampler.clone(),
+                r.nfe.to_string(),
+                format!("{:.6}", r.rmse),
+                format!("{:.3}", r.psnr),
+                format!("{:.5}", r.fd),
+                format!("{:.5}", r.fd_data),
+                format!("{:.5}", r.swd),
+            ]
+        })
+        .collect()
+}
+
+pub const CSV_HEADER: &[&str] =
+    &["model", "sampler", "nfe", "rmse", "psnr", "fd_gt", "fd_data", "swd"];

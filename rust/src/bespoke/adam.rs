@@ -1,0 +1,81 @@
+//! Adam (Kingma & Ba) over a flat f32 parameter vector, with an optional
+//! elementwise gradient mask (ablation support). Matches the paper's
+//! optimizer and learning rate (2e-3, Appendix F).
+
+pub struct Adam {
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+}
+
+impl Adam {
+    pub fn new(p: usize, lr: f32) -> Adam {
+        Adam { lr, b1: 0.9, b2: 0.999, eps: 1e-8, m: vec![0.0; p], v: vec![0.0; p], step: 0 }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// In-place parameter update; `mask` (if given) zeroes selected grads.
+    pub fn update(&mut self, params: &mut [f32], grad: &[f32], mask: Option<&[f32]>) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.step += 1;
+        let bc1 = 1.0 - self.b1.powi(self.step as i32);
+        let bc2 = 1.0 - self.b2.powi(self.step as i32);
+        for i in 0..params.len() {
+            let g = grad[i] * mask.map_or(1.0, |m| m[i]);
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g;
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g * g;
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            params[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = sum (x - c)^2
+        let c = [3.0f32, -2.0, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let grad: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            opt.update(&mut x, &grad, None);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-3, "{xi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn mask_freezes_parameters() {
+        let mut x = vec![1.0f32, 1.0];
+        let mask = vec![1.0f32, 0.0];
+        let mut opt = Adam::new(2, 0.1);
+        for _ in 0..50 {
+            opt.update(&mut x, &[1.0, 1.0], Some(&mask));
+        }
+        assert!(x[0] < 1.0);
+        assert_eq!(x[1], 1.0, "masked param must not move");
+    }
+
+    #[test]
+    fn step_counter() {
+        let mut opt = Adam::new(1, 0.1);
+        let mut x = vec![0.0];
+        opt.update(&mut x, &[0.0], None);
+        opt.update(&mut x, &[0.0], None);
+        assert_eq!(opt.step_count(), 2);
+    }
+}

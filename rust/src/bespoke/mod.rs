@@ -1,0 +1,25 @@
+//! Bespoke training (paper §2.3, Algorithm 2) — owned end-to-end by Rust.
+//!
+//! Per iteration the trainer
+//!
+//! 1. draws (or re-uses from the GT pool) a noise batch and its DOPRI5
+//!    dense solution,
+//! 2. decodes the current theta to grid times t_i and extracts the
+//!    stop-gradient snapshots x(t_i) (dense interpolation) and
+//!    u(x(t_i), t_i) (model HLO evaluations),
+//! 3. runs the AOT'd loss-grad executable
+//!    `(theta, x_snap, u_snap, t_snap) -> (L_bes, grad)`,
+//! 4. applies a masked Adam update (masks implement the paper's Fig. 15
+//!    time-only / scale-only ablations).
+//!
+//! The GT pool implements the paper's suggested "pre-process sampling
+//! paths" optimization: DOPRI5 runs once per pool slot instead of once per
+//! iteration (`pool_batches`, `refresh_every` in `TrainConfig`).
+
+pub mod adam;
+pub mod gt;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use gt::GtPool;
+pub use trainer::{train, TrainOutcome, TrainPoint};

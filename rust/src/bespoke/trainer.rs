@@ -1,0 +1,171 @@
+//! The Bespoke training loop (paper Algorithm 2) over the AOT'd loss-grad
+//! executable.
+
+use anyhow::{Context, Result};
+
+use super::adam::Adam;
+use super::gt::GtPool;
+use crate::config::TrainConfig;
+use crate::eval::rmse;
+use crate::models::{HloModel, VelocityModel};
+use crate::runtime::Executable;
+use crate::solvers::bespoke::BespokeSolver;
+use crate::solvers::dopri5::Dopri5;
+use crate::solvers::theta::{Base, RawTheta};
+use crate::solvers::Sampler;
+use crate::tensor::Tensor;
+use crate::util::{Rng, Timer};
+use crate::{log_debug, log_info};
+
+/// One history point of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainPoint {
+    pub iter: usize,
+    pub loss: f32,
+    /// Validation RMSE (eq. 6) — NaN for iterations without validation.
+    pub val_rmse: f32,
+}
+
+pub struct TrainOutcome {
+    /// Theta with the best validation RMSE (the paper reports best-iter).
+    pub best: RawTheta,
+    pub best_val_rmse: f32,
+    pub last: RawTheta,
+    pub history: Vec<TrainPoint>,
+    /// Model evaluations spent: training-loop u evals + loss-grad launches
+    /// are counted on the python side of the HLO; this counts GT-path NFE,
+    /// the dominant cost (for %time accounting vs "model training cost").
+    pub gt_nfe: u64,
+    pub wall_secs: f64,
+}
+
+/// Train a Bespoke solver for `model` (its loss-grad artifact must have been
+/// exported for (base, n) — see `python/compile/model.py::MODELS`).
+pub fn train(
+    model: &HloModel,
+    lossgrad_exe: &Executable,
+    base: Base,
+    n: usize,
+    cfg: &TrainConfig,
+) -> Result<TrainOutcome> {
+    let timer = Timer::start();
+    let b = model.batch();
+    let d = model.dim();
+    let p = RawTheta::n_params(base, n);
+    let mask = RawTheta::ablation_mask(base, n, &cfg.ablation)?;
+    let mask = if cfg.ablation == "full" { None } else { Some(mask) };
+
+    let mut theta = RawTheta::identity(base, n);
+    let mut opt = Adam::new(p, cfg.lr);
+    let mut pool = GtPool::new(model, cfg.pool_batches, cfg.gt_tol, cfg.seed)?;
+
+    // Validation set: fresh noise batches + their GT solutions.
+    let mut vrng = Rng::new(cfg.seed ^ 0x7a11d);
+    let gt_solver = Dopri5 { rtol: cfg.gt_tol, atol: cfg.gt_tol, max_steps: 100_000 };
+    let mut val: Vec<(Tensor, Tensor)> = Vec::new();
+    for _ in 0..cfg.val_batches {
+        let x0 = Tensor::new(vrng.normal_vec(b * d), vec![b, d])?;
+        let sol = gt_solver.solve_model_dense(model, &x0)?;
+        pool.gt_nfe += sol.nfe as u64;
+        val.push((x0, sol.final_state().clone()));
+    }
+
+    let mut best = theta.clone();
+    let mut best_val = f32::INFINITY;
+    let mut history = Vec::new();
+
+    for iter in 1..=cfg.iters {
+        if cfg.refresh_every > 0 && iter % cfg.refresh_every == 0 {
+            pool.refresh_one(model)?;
+        }
+
+        // --- snapshots at the *current* theta's integer step times --------
+        let dec = theta.decode();
+        let step_times = dec.step_times(); // n+1 times
+        let (x_snap, u_snap) = {
+            let entry = pool.pick();
+            let mut xs = Vec::with_capacity(n + 1);
+            for &t in &step_times {
+                xs.push(entry.dense.eval(t));
+            }
+            // u(x(t_i), t_i): exact model evaluation or the Hermite
+            // derivative of the dense GT solution (§Perf: saves n+1 HLO
+            // launches per iteration at O(h^2) snapshot-velocity error).
+            let mut us = Vec::with_capacity(n + 1);
+            if cfg.snap_velocity == "model" {
+                for (x, &t) in xs.iter().zip(&step_times) {
+                    us.push(model.eval(x, t)?);
+                }
+            } else {
+                for &t in &step_times {
+                    us.push(entry.dense.eval_deriv(t));
+                }
+            }
+            (xs, us)
+        };
+
+        // pack snapshots [B, n+1, d]: row-major over (b, i, d)
+        let mut x_pack = vec![0.0f32; b * (n + 1) * d];
+        let mut u_pack = vec![0.0f32; b * (n + 1) * d];
+        for (i, (xs, us)) in x_snap.iter().zip(&u_snap).enumerate() {
+            for bi in 0..b {
+                let src_x = xs.row(bi);
+                let src_u = us.row(bi);
+                let dst = (bi * (n + 1) + i) * d;
+                x_pack[dst..dst + d].copy_from_slice(src_x);
+                u_pack[dst..dst + d].copy_from_slice(src_u);
+            }
+        }
+
+        // --- loss + grad via the AOT'd executable -------------------------
+        let outputs = lossgrad_exe
+            .run(&[
+                Tensor::new(theta.raw.clone(), vec![p])?,
+                Tensor::new(x_pack, vec![b, n + 1, d])?,
+                Tensor::new(u_pack, vec![b, n + 1, d])?,
+                Tensor::new(step_times.clone(), vec![n + 1])?,
+            ])
+            .context("loss-grad execution")?;
+        let loss = outputs[0].data()[0];
+        let grad = outputs[1].data();
+
+        opt.update(&mut theta.raw, grad, mask.as_deref());
+
+        // --- validation ----------------------------------------------------
+        let mut val_rmse = f32::NAN;
+        if iter % cfg.val_every == 0 || iter == cfg.iters {
+            let sampler = BespokeSolver::new(&theta);
+            let mut acc = 0.0f32;
+            for (x0, gt) in &val {
+                let out = sampler.sample(model, x0)?;
+                acc += rmse(&out, gt);
+            }
+            val_rmse = acc / val.len() as f32;
+            if val_rmse < best_val {
+                best_val = val_rmse;
+                best = theta.clone();
+            }
+            log_info!(
+                "[train {} {} n={}] iter {:4} loss {:.5} val_rmse {:.5}",
+                model.name(),
+                base.name(),
+                n,
+                iter,
+                loss,
+                val_rmse
+            );
+        } else {
+            log_debug!("[train] iter {iter} loss {loss:.5}");
+        }
+        history.push(TrainPoint { iter, loss, val_rmse });
+    }
+
+    Ok(TrainOutcome {
+        best,
+        best_val_rmse: best_val,
+        last: theta,
+        history,
+        gt_nfe: pool.gt_nfe,
+        wall_secs: timer.elapsed_secs(),
+    })
+}

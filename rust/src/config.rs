@@ -1,0 +1,187 @@
+//! Config system: JSON config files with environment overrides.
+//!
+//! One schema covers the launcher's subsystems (serving, training,
+//! evaluation, experiments); `repro --config path.json <cmd>` merges the
+//! file over built-in defaults, and individual CLI flags override both.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Max requests folded into one executable launch (<= model batch).
+    pub max_batch: usize,
+    /// Max time a request waits for batch-mates before launch (ms).
+    pub max_wait_ms: u64,
+    /// Worker threads per model.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { addr: "127.0.0.1:7777".into(), max_batch: 64, max_wait_ms: 5, workers: 1 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub iters: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// GT trajectory pool: number of cached noise batches (paper's
+    /// "pre-processing sampling paths" optimization; 1 = resample like
+    /// Algorithm 2 every refresh_every iters).
+    pub pool_batches: usize,
+    /// Refresh one pool entry every this many iterations (0 = never).
+    pub refresh_every: usize,
+    /// DOPRI5 tolerance for GT paths.
+    pub gt_tol: f64,
+    /// Validation: number of fresh batches and iteration interval.
+    pub val_batches: usize,
+    pub val_every: usize,
+    /// Ablation mode: "full" | "time-only" | "scale-only".
+    pub ablation: String,
+    /// Snapshot velocities u(x(t_i), t_i): "model" evaluates the model HLO
+    /// (exact, n+1 launches/iter); "hermite" differentiates the dense GT
+    /// interpolant (no launches; error O(h^2) << GT tol). §Perf knob.
+    pub snap_velocity: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            iters: 300,
+            lr: 2e-3, // paper's Adam lr (Appendix F)
+            seed: 17,
+            pool_batches: 8,
+            refresh_every: 0,
+            gt_tol: 1e-5,
+            val_batches: 4,
+            val_every: 50,
+            ablation: "full".into(),
+            snap_velocity: "hermite".into(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Number of samples for distribution metrics (Frechet / sliced W2).
+    pub metric_samples: usize,
+    /// DOPRI5 tolerance for ground-truth solutions.
+    pub gt_tol: f64,
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig { metric_samples: 4096, gt_tol: 1e-5, seed: 1234 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub serve: ServeConfig,
+    pub train: TrainConfig,
+    pub eval: EvalConfig,
+    /// Directory for trained thetas and experiment reports.
+    pub out_dir: String,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = Value::parse(&text).context("parsing config JSON")?;
+        let mut cfg = Config::default();
+        cfg.apply(&v)?;
+        Ok(cfg)
+    }
+
+    /// Merge a JSON object over the current values (missing keys keep
+    /// defaults; unknown keys are rejected to catch typos).
+    pub fn apply(&mut self, v: &Value) -> Result<()> {
+        for (section, sv) in v.as_obj()? {
+            match section.as_str() {
+                "serve" => {
+                    for (k, val) in sv.as_obj()? {
+                        match k.as_str() {
+                            "addr" => self.serve.addr = val.as_str()?.to_string(),
+                            "max_batch" => self.serve.max_batch = val.as_usize()?,
+                            "max_wait_ms" => self.serve.max_wait_ms = val.as_usize()? as u64,
+                            "workers" => self.serve.workers = val.as_usize()?,
+                            _ => anyhow::bail!("unknown serve key {k:?}"),
+                        }
+                    }
+                }
+                "train" => {
+                    for (k, val) in sv.as_obj()? {
+                        match k.as_str() {
+                            "iters" => self.train.iters = val.as_usize()?,
+                            "lr" => self.train.lr = val.as_f64()? as f32,
+                            "seed" => self.train.seed = val.as_usize()? as u64,
+                            "pool_batches" => self.train.pool_batches = val.as_usize()?,
+                            "refresh_every" => self.train.refresh_every = val.as_usize()?,
+                            "gt_tol" => self.train.gt_tol = val.as_f64()?,
+                            "val_batches" => self.train.val_batches = val.as_usize()?,
+                            "val_every" => self.train.val_every = val.as_usize()?,
+                            "ablation" => self.train.ablation = val.as_str()?.to_string(),
+                            "snap_velocity" => {
+                                self.train.snap_velocity = val.as_str()?.to_string()
+                            }
+                            _ => anyhow::bail!("unknown train key {k:?}"),
+                        }
+                    }
+                }
+                "eval" => {
+                    for (k, val) in sv.as_obj()? {
+                        match k.as_str() {
+                            "metric_samples" => self.eval.metric_samples = val.as_usize()?,
+                            "gt_tol" => self.eval.gt_tol = val.as_f64()?,
+                            "seed" => self.eval.seed = val.as_usize()? as u64,
+                            _ => anyhow::bail!("unknown eval key {k:?}"),
+                        }
+                    }
+                }
+                "out_dir" => self.out_dir = sv.as_str()?.to_string(),
+                _ => anyhow::bail!("unknown config section {section:?}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_override() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.train.lr, 2e-3);
+        let v = Value::parse(
+            r#"{"train": {"iters": 42, "ablation": "time-only"},
+                "serve": {"max_batch": 8}, "out_dir": "/tmp/x"}"#,
+        )
+        .unwrap();
+        cfg.apply(&v).unwrap();
+        assert_eq!(cfg.train.iters, 42);
+        assert_eq!(cfg.train.ablation, "time-only");
+        assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.train.lr, 2e-3); // untouched default
+        assert_eq!(cfg.out_dir, "/tmp/x");
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let mut cfg = Config::default();
+        let v = Value::parse(r#"{"train": {"learning_rate": 0.1}}"#).unwrap();
+        assert!(cfg.apply(&v).is_err());
+        let v2 = Value::parse(r#"{"bogus": {}}"#).unwrap();
+        assert!(cfg.apply(&v2).is_err());
+    }
+}

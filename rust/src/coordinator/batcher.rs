@@ -1,0 +1,280 @@
+//! The coordinator core: per-(model, solver) worker threads with dynamic
+//! batching over the fixed-shape HLO executables.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::metrics::Metrics;
+use crate::config::ServeConfig;
+use crate::models::{CountingModel, VelocityModel, Zoo};
+use crate::solvers::make_sampler;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use crate::log_info;
+
+#[derive(Clone, Debug)]
+pub struct SampleRequest {
+    pub model: String,
+    pub solver: String,
+    pub n_samples: usize,
+    pub seed: u64,
+    pub return_samples: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct SampleResponse {
+    pub n_samples: usize,
+    /// Per-sample data rows (present when return_samples).
+    pub samples: Option<Vec<Vec<f32>>>,
+    pub nfe: u64,
+    /// Number of executable batches this request's rows were spread over.
+    pub batches: u64,
+    pub queue_ms: f64,
+    pub latency_ms: f64,
+}
+
+/// One chunk of a request (<= model batch rows), awaiting a worker.
+struct Job {
+    rows: usize,
+    rng: Rng,
+    want_samples: bool,
+    enqueued: Instant,
+    reply: SyncSender<Result<ChunkDone>>,
+}
+
+struct ChunkDone {
+    samples: Option<Vec<Vec<f32>>>,
+    nfe: u64,
+    queue_ms: f64,
+}
+
+/// The request router + batching executor.
+pub struct Coordinator {
+    zoo: Arc<Zoo>,
+    cfg: ServeConfig,
+    pub metrics: Arc<Metrics>,
+    routes: Mutex<BTreeMap<String, Sender<Job>>>,
+}
+
+impl Coordinator {
+    pub fn new(zoo: Arc<Zoo>, cfg: ServeConfig) -> Coordinator {
+        Coordinator {
+            zoo,
+            cfg,
+            metrics: Arc::new(Metrics::default()),
+            routes: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn zoo(&self) -> &Zoo {
+        &self.zoo
+    }
+
+    /// Blocking submit: routes, batches, executes, gathers.
+    pub fn submit(&self, req: &SampleRequest) -> Result<SampleResponse> {
+        let started = Instant::now();
+        let key = format!("{}/{}", req.model, req.solver);
+        let sender = self.route(&key, &req.model, &req.solver)?;
+
+        let model_batch = self.zoo.manifest().model(&req.model)?.batch;
+        let chunk_rows = self.cfg.max_batch.min(model_batch).max(1);
+
+        // Split the request into chunks and fan out to the worker.
+        let mut pending = Vec::new();
+        let mut root_rng = Rng::new(req.seed);
+        let mut remaining = req.n_samples;
+        let mut chunk_idx = 0u64;
+        while remaining > 0 {
+            let rows = remaining.min(chunk_rows);
+            let (tx, rx) = sync_channel(1);
+            let job = Job {
+                rows,
+                rng: root_rng.fork(chunk_idx),
+                want_samples: req.return_samples,
+                enqueued: Instant::now(),
+                reply: tx,
+            };
+            sender
+                .send(job)
+                .map_err(|_| anyhow::anyhow!("worker for {key} is gone"))?;
+            pending.push(rx);
+            remaining -= rows;
+            chunk_idx += 1;
+        }
+
+        let mut samples = req.return_samples.then(Vec::new);
+        let mut nfe = 0u64;
+        let mut queue_ms = 0.0f64;
+        let batches = pending.len() as u64;
+        for rx in pending {
+            let done = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker dropped reply"))??;
+            nfe += done.nfe;
+            queue_ms = queue_ms.max(done.queue_ms);
+            if let (Some(acc), Some(got)) = (samples.as_mut(), done.samples) {
+                acc.extend(got);
+            }
+        }
+        let latency_ms = started.elapsed().as_secs_f64() * 1e3;
+        self.metrics
+            .record_request(&key, req.n_samples, latency_ms, queue_ms);
+        Ok(SampleResponse {
+            n_samples: req.n_samples,
+            samples,
+            nfe,
+            batches,
+            queue_ms,
+            latency_ms,
+        })
+    }
+
+    /// Get (or lazily spawn) the worker for a (model, solver) route.
+    fn route(&self, key: &str, model: &str, solver: &str) -> Result<Sender<Job>> {
+        if let Some(s) = self.routes.lock().unwrap().get(key) {
+            return Ok(s.clone());
+        }
+        // Validate + load outside the lock (compilation can take a moment).
+        let hlo = self.zoo.hlo(model)?;
+        let sched = self.zoo.scheduler(model)?;
+        let sampler = make_sampler(solver, sched)?;
+        if hlo.dim() == 0 {
+            bail!("model {model} has zero dim");
+        }
+
+        let mut routes = self.routes.lock().unwrap();
+        if let Some(s) = routes.get(key) {
+            return Ok(s.clone());
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let metrics = self.metrics.clone();
+        let cfg = self.cfg.clone();
+        let key_owned = key.to_string();
+        std::thread::Builder::new()
+            .name(format!("worker-{key}"))
+            .spawn(move || worker_loop(rx, hlo, sampler, cfg, metrics, key_owned))?;
+        routes.insert(key.to_string(), tx.clone());
+        log_info!("spawned worker for route {key}");
+        Ok(tx)
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Job>,
+    model: Arc<crate::models::HloModel>,
+    sampler: Box<dyn crate::solvers::Sampler>,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+    key: String,
+) {
+    let b = model.batch();
+    let d = model.dim();
+    let max_rows = cfg.max_batch.min(b).max(1);
+    let max_wait = Duration::from_millis(cfg.max_wait_ms);
+
+    while let Ok(first) = rx.recv() {
+        // Dynamic batching: collect batch-mates until full or deadline.
+        let mut jobs = vec![first];
+        let mut rows = jobs[0].rows;
+        let deadline = Instant::now() + max_wait;
+        while rows < max_rows {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => {
+                    let overflow = rows + j.rows > max_rows;
+                    rows += j.rows;
+                    jobs.push(j);
+                    if overflow {
+                        // Oversized tail: execute_jobs splits it into its
+                        // own fixed-shape batch after this one.
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+
+        // May exceed max_rows by one job; split executions over the fixed
+        // HLO batch b as needed.
+        execute_jobs(&model, sampler.as_ref(), &metrics, &key, b, d, jobs);
+    }
+}
+
+/// Run a group of jobs through the executable in row-packed batches of b.
+fn execute_jobs(
+    model: &Arc<crate::models::HloModel>,
+    sampler: &dyn crate::solvers::Sampler,
+    metrics: &Metrics,
+    key: &str,
+    b: usize,
+    d: usize,
+    mut jobs: Vec<Job>,
+) {
+    while !jobs.is_empty() {
+        // Take jobs until the fixed batch is full.
+        let mut take = Vec::new();
+        let mut rows = 0usize;
+        while let Some(j) = jobs.first() {
+            if rows + j.rows > b && !take.is_empty() {
+                break;
+            }
+            let j = jobs.remove(0);
+            rows += j.rows;
+            take.push(j);
+            if rows >= b {
+                break;
+            }
+        }
+        // A single job can still exceed b rows only if submit() mis-chunked;
+        // clamp defensively.
+        let used = rows.min(b);
+
+        // Build the noise batch: each job's rows from its own RNG stream;
+        // padding rows are zero (discarded after the solve).
+        let mut data = vec![0.0f32; b * d];
+        {
+            let mut offset = 0usize;
+            for j in take.iter_mut() {
+                let cnt = j.rows.min(b - offset);
+                j.rng.fill_normal(&mut data[offset * d..(offset + cnt) * d]);
+                offset += cnt;
+            }
+        }
+        let x0 = Tensor::new(data, vec![b, d]).expect("noise shape");
+        let counting = CountingModel::new(model.as_ref() as &dyn VelocityModel);
+        let result = sampler.sample(&counting, &x0);
+        let nfe = counting.nfe();
+        metrics.record_batch(key, used, b, nfe);
+
+        match result {
+            Ok(out) => {
+                let mut offset = 0usize;
+                for j in take {
+                    let queue_ms = j.enqueued.elapsed().as_secs_f64() * 1e3;
+                    let samples = j.want_samples.then(|| {
+                        (offset..offset + j.rows)
+                            .map(|r| out.row(r).to_vec())
+                            .collect::<Vec<_>>()
+                    });
+                    offset += j.rows;
+                    let _ = j.reply.send(Ok(ChunkDone { samples, nfe, queue_ms }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for j in take {
+                    let _ = j
+                        .reply
+                        .send(Err(anyhow::anyhow!("sampler failed: {msg}")));
+                }
+            }
+        }
+    }
+}

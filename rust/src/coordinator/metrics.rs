@@ -1,0 +1,105 @@
+//! Serving metrics: per-(model, solver) counters and latency distributions.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::json::Value;
+use crate::util::timer::Percentiles;
+
+#[derive(Default)]
+struct Entry {
+    requests: u64,
+    samples: u64,
+    batches: u64,
+    /// Sum over batches of rows actually used (fill = used / capacity).
+    rows_used: u64,
+    rows_capacity: u64,
+    nfe: u64,
+    latency: Percentiles,
+    queue: Percentiles,
+}
+
+pub struct Metrics {
+    started: Instant,
+    inner: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { started: Instant::now(), inner: Mutex::new(BTreeMap::new()) }
+    }
+}
+
+impl Metrics {
+    pub fn record_batch(&self, key: &str, rows_used: usize, capacity: usize, nfe: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.entry(key.to_string()).or_default();
+        e.batches += 1;
+        e.rows_used += rows_used as u64;
+        e.rows_capacity += capacity as u64;
+        e.nfe += nfe;
+    }
+
+    pub fn record_request(&self, key: &str, n_samples: usize, latency_ms: f64, queue_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.entry(key.to_string()).or_default();
+        e.requests += 1;
+        e.samples += n_samples as u64;
+        e.latency.record(latency_ms);
+        e.queue.record(queue_ms);
+    }
+
+    pub fn snapshot(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        let uptime = self.started.elapsed().as_secs_f64();
+        let mut per_key = Vec::new();
+        for (k, e) in g.iter() {
+            let fill = if e.rows_capacity > 0 {
+                e.rows_used as f64 / e.rows_capacity as f64
+            } else {
+                0.0
+            };
+            per_key.push((
+                k.as_str(),
+                Value::obj(vec![
+                    ("requests", Value::Num(e.requests as f64)),
+                    ("samples", Value::Num(e.samples as f64)),
+                    ("batches", Value::Num(e.batches as f64)),
+                    ("batch_fill", Value::Num(fill)),
+                    ("nfe", Value::Num(e.nfe as f64)),
+                    ("samples_per_sec", Value::Num(e.samples as f64 / uptime.max(1e-9))),
+                    ("latency_p50_ms", Value::Num(e.latency.quantile(0.5))),
+                    ("latency_p99_ms", Value::Num(e.latency.quantile(0.99))),
+                    ("queue_p50_ms", Value::Num(e.queue.quantile(0.5))),
+                ]),
+            ));
+        }
+        Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("uptime_secs", Value::Num(uptime)),
+            ("per_route", Value::obj(per_key)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.record_batch("m/rk2", 48, 64, 16);
+        m.record_batch("m/rk2", 64, 64, 16);
+        m.record_request("m/rk2", 48, 12.0, 1.0);
+        m.record_request("m/rk2", 64, 8.0, 0.5);
+        let snap = m.snapshot();
+        let route = snap.get("per_route").unwrap().get("m/rk2").unwrap();
+        assert_eq!(route.get("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(route.get("batches").unwrap().as_usize().unwrap(), 2);
+        let fill = route.get("batch_fill").unwrap().as_f64().unwrap();
+        assert!((fill - 112.0 / 128.0).abs() < 1e-9);
+        assert!(route.get("latency_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

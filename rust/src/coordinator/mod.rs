@@ -1,0 +1,28 @@
+//! The serving coordinator (L3): request routing, dynamic batching, worker
+//! execution, metrics — the vLLM-router-shaped layer that makes the learned
+//! Bespoke solvers a deployable serving feature rather than a script.
+//!
+//! Data flow:
+//!
+//! ```text
+//! client --JSONL--> server --+--> (model, solver) queue --> worker thread
+//!                            |        dynamic batcher        |  sampler
+//!                            +<------ reply channel <--------+  over HLO
+//! ```
+//!
+//! * Batching folds concurrent requests into one fixed-shape executable
+//!   launch (HLO batch sizes are static; remainders are padded and the pad
+//!   rows discarded).
+//! * One worker thread per (model, solver) pair, created on demand; the
+//!   PJRT CPU client is shared and thread-safe.
+//! * Every response carries NFE + queue/latency breakdowns; `metrics`
+//!   aggregates p50/p99 latency, throughput, and batch-fill factor.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{Coordinator, SampleRequest, SampleResponse};
+pub use metrics::Metrics;
+pub use server::serve;

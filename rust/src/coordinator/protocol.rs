@@ -1,0 +1,113 @@
+//! JSONL wire protocol for the sampling server.
+//!
+//! Request (one JSON object per line):
+//! ```json
+//! {"cmd": "sample", "model": "checker2-ot", "solver": "rk2:n=8",
+//!  "n_samples": 64, "seed": 7, "return_samples": true}
+//! {"cmd": "metrics"}
+//! {"cmd": "list"}
+//! {"cmd": "ping"}
+//! ```
+//!
+//! Response: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
+
+use anyhow::{bail, Result};
+
+use super::batcher::{SampleRequest, SampleResponse};
+use crate::json::Value;
+
+#[derive(Debug)]
+pub enum Command {
+    Sample(SampleRequest),
+    Metrics,
+    List,
+    Ping,
+}
+
+pub fn parse_command(line: &str) -> Result<Command> {
+    let v = Value::parse(line)?;
+    match v.get("cmd")?.as_str()? {
+        "sample" => {
+            let req = SampleRequest {
+                model: v.get("model")?.as_str()?.to_string(),
+                solver: v.get("solver")?.as_str()?.to_string(),
+                n_samples: v.get("n_samples")?.as_usize()?,
+                seed: v.get_opt("seed").map(|s| s.as_usize()).transpose()?.unwrap_or(0) as u64,
+                return_samples: v
+                    .get_opt("return_samples")
+                    .map(|s| s.as_bool())
+                    .transpose()?
+                    .unwrap_or(false),
+            };
+            if req.n_samples == 0 {
+                bail!("n_samples must be positive");
+            }
+            Ok(Command::Sample(req))
+        }
+        "metrics" => Ok(Command::Metrics),
+        "list" => Ok(Command::List),
+        "ping" => Ok(Command::Ping),
+        other => bail!("unknown cmd {other:?}"),
+    }
+}
+
+pub fn response_to_json(resp: &SampleResponse) -> Value {
+    let mut fields = vec![
+        ("ok", Value::Bool(true)),
+        ("n_samples", Value::Num(resp.n_samples as f64)),
+        ("nfe", Value::Num(resp.nfe as f64)),
+        ("batches", Value::Num(resp.batches as f64)),
+        ("queue_ms", Value::Num(resp.queue_ms)),
+        ("latency_ms", Value::Num(resp.latency_ms)),
+    ];
+    if let Some(s) = &resp.samples {
+        fields.push((
+            "samples",
+            Value::Arr(s.iter().map(|row| Value::from_f32s(row)).collect()),
+        ));
+    }
+    Value::obj(fields)
+}
+
+pub fn error_json(msg: &str) -> Value {
+    Value::obj(vec![("ok", Value::Bool(false)), ("error", Value::Str(msg.into()))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sample_command() {
+        let c = parse_command(
+            r#"{"cmd":"sample","model":"m","solver":"rk2:n=4","n_samples":8,"seed":3}"#,
+        )
+        .unwrap();
+        match c {
+            Command::Sample(r) => {
+                assert_eq!(r.model, "m");
+                assert_eq!(r.n_samples, 8);
+                assert_eq!(r.seed, 3);
+                assert!(!r.return_samples);
+            }
+            _ => panic!("wrong command"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_commands() {
+        assert!(parse_command("{}").is_err());
+        assert!(parse_command(r#"{"cmd":"nope"}"#).is_err());
+        assert!(parse_command(
+            r#"{"cmd":"sample","model":"m","solver":"s","n_samples":0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn other_commands() {
+        assert!(matches!(parse_command(r#"{"cmd":"ping"}"#).unwrap(), Command::Ping));
+        assert!(matches!(parse_command(r#"{"cmd":"list"}"#).unwrap(), Command::List));
+        assert!(matches!(parse_command(r#"{"cmd":"metrics"}"#).unwrap(), Command::Metrics));
+    }
+}

@@ -1,0 +1,78 @@
+//! Fréchet distance between Gaussian fits of two sample sets — FID with
+//! identity features (our FID analog, DESIGN.md §2):
+//!
+//! ```text
+//! FD^2 = ||mu_a - mu_b||^2 + tr(Ca + Cb - 2 (Ca^{1/2} Cb Ca^{1/2})^{1/2})
+//! ```
+
+use super::linalg::{matmul, sqrtm_psd, trace};
+use crate::tensor::Tensor;
+
+/// FD between sample sets a [Na, d] and b [Nb, d] (sizes may differ).
+pub fn frechet_distance(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.cols(), b.cols(), "dimension mismatch");
+    let d = a.cols();
+    let mu_a: Vec<f64> = a.mean_axis0().iter().map(|&x| x as f64).collect();
+    let mu_b: Vec<f64> = b.mean_axis0().iter().map(|&x| x as f64).collect();
+    let ca = a.covariance();
+    let cb = b.covariance();
+
+    let mean_term: f64 = mu_a
+        .iter()
+        .zip(&mu_b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+
+    let sa = sqrtm_psd(&ca, d);
+    let inner = matmul(&matmul(&sa, &cb, d), &sa, d);
+    let cross = sqrtm_psd(&inner, d);
+    let fd2 = mean_term + trace(&ca, d) + trace(&cb, d) - 2.0 * trace(&cross, d);
+    fd2.max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gaussian_samples(n: usize, d: usize, mean: f32, std: f32, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| mean + std * rng.normal()).collect();
+        Tensor::new(data, vec![n, d]).unwrap()
+    }
+
+    #[test]
+    fn zero_for_same_samples() {
+        let a = gaussian_samples(2048, 4, 0.0, 1.0, 0);
+        assert!(frechet_distance(&a, &a) < 1e-6);
+    }
+
+    #[test]
+    fn detects_mean_shift_analytically() {
+        // FD between N(0, I) and N(m, I) == |m|; estimate within sample noise
+        let a = gaussian_samples(8192, 2, 0.0, 1.0, 1);
+        let b = gaussian_samples(8192, 2, 1.0, 1.0, 2);
+        let fd = frechet_distance(&a, &b);
+        let want = (2.0f64).sqrt(); // mean shift (1,1)
+        assert!((fd - want).abs() < 0.1, "fd={fd} want~{want}");
+    }
+
+    #[test]
+    fn detects_scale_change_analytically() {
+        // FD(N(0, s^2 I), N(0, I))^2 = d (s - 1)^2
+        let a = gaussian_samples(8192, 3, 0.0, 2.0, 3);
+        let b = gaussian_samples(8192, 3, 0.0, 1.0, 4);
+        let fd = frechet_distance(&a, &b);
+        let want = (3.0f64).sqrt(); // sqrt(d (2-1)^2)
+        assert!((fd - want).abs() < 0.15, "fd={fd} want~{want}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = gaussian_samples(1024, 5, 0.0, 1.0, 5);
+        let b = gaussian_samples(1024, 5, 0.3, 1.2, 6);
+        let f1 = frechet_distance(&a, &b);
+        let f2 = frechet_distance(&b, &a);
+        assert!((f1 - f2).abs() < 1e-9);
+    }
+}

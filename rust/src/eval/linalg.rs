@@ -1,0 +1,179 @@
+//! Dense symmetric linear algebra for the Fréchet metric: cyclic Jacobi
+//! eigendecomposition and PSD matrix square root. O(d^3) per sweep — ample
+//! for our d <= 256 data spaces.
+
+/// Eigendecomposition of a symmetric matrix (row-major d x d).
+/// Returns (eigenvalues, eigenvectors as columns flattened row-major).
+pub fn sym_eigen(a: &[f64], d: usize, sweeps: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), d * d);
+    let mut m = a.to_vec();
+    // v = identity
+    let mut v = vec![0.0f64; d * d];
+    for i in 0..d {
+        v[i * d + i] = 1.0;
+    }
+    for _ in 0..sweeps {
+        let mut off = 0.0f64;
+        for p in 0..d {
+            for q in (p + 1)..d {
+                off += m[p * d + q] * m[p * d + q];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m[p * d + q];
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = m[p * d + p];
+                let aqq = m[q * d + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..d {
+                    let mkp = m[k * d + p];
+                    let mkq = m[k * d + q];
+                    m[k * d + p] = c * mkp - s * mkq;
+                    m[k * d + q] = s * mkp + c * mkq;
+                }
+                for k in 0..d {
+                    let mpk = m[p * d + k];
+                    let mqk = m[q * d + k];
+                    m[p * d + k] = c * mpk - s * mqk;
+                    m[q * d + k] = s * mpk + c * mqk;
+                }
+                for k in 0..d {
+                    let vkp = v[k * d + p];
+                    let vkq = v[k * d + q];
+                    v[k * d + p] = c * vkp - s * vkq;
+                    v[k * d + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig = (0..d).map(|i| m[i * d + i]).collect();
+    (eig, v)
+}
+
+/// Matrix multiply (row-major, d x d).
+pub fn matmul(a: &[f64], b: &[f64], d: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; d * d];
+    for i in 0..d {
+        for k in 0..d {
+            let aik = a[i * d + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let row_b = &b[k * d..(k + 1) * d];
+            let row_o = &mut out[i * d..(i + 1) * d];
+            for j in 0..d {
+                row_o[j] += aik * row_b[j];
+            }
+        }
+    }
+    out
+}
+
+/// PSD square root via eigendecomposition (negative eigenvalues from
+/// numerical noise are clamped to zero).
+pub fn sqrtm_psd(a: &[f64], d: usize) -> Vec<f64> {
+    let (eig, v) = sym_eigen(a, d, 30);
+    // sqrt = V diag(sqrt(eig)) V^T
+    let mut out = vec![0.0f64; d * d];
+    for k in 0..d {
+        let lk = eig[k].max(0.0).sqrt();
+        if lk == 0.0 {
+            continue;
+        }
+        for i in 0..d {
+            let vik = v[i * d + k] * lk;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                out[i * d + j] += vik * v[j * d + k];
+            }
+        }
+    }
+    out
+}
+
+pub fn trace(a: &[f64], d: usize) -> f64 {
+    (0..d).map(|i| a[i * d + i]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_psd(d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let g: Vec<f64> = (0..d * d).map(|_| rng.normal() as f64).collect();
+        // A = G G^T / d + I * 0.1
+        let mut a = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += g[i * d + k] * g[j * d + k];
+                }
+                a[i * d + j] = s / d as f64;
+            }
+            a[i * d + i] += 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn eigen_reconstructs_matrix() {
+        let d = 12;
+        let a = random_psd(d, 0);
+        let (eig, v) = sym_eigen(&a, d, 30);
+        // A == V diag(eig) V^T
+        let mut recon = vec![0.0f64; d * d];
+        for k in 0..d {
+            for i in 0..d {
+                for j in 0..d {
+                    recon[i * d + j] += v[i * d + k] * eig[k] * v[j * d + k];
+                }
+            }
+        }
+        for (x, y) in a.iter().zip(&recon) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let d = 16;
+        let a = random_psd(d, 1);
+        let r = sqrtm_psd(&a, d);
+        let r2 = matmul(&r, &r, d);
+        for (x, y) in a.iter().zip(&r2) {
+            assert!((x - y).abs() < 1e-7, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn trace_and_matmul_basics() {
+        let i2 = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(trace(&i2, 2), 2.0);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(matmul(&i2, &b, 2), b);
+    }
+
+    #[test]
+    fn diagonal_matrix_sqrt_exact() {
+        let a = vec![4.0, 0.0, 0.0, 9.0];
+        let r = sqrtm_psd(&a, 2);
+        assert!((r[0] - 2.0).abs() < 1e-10);
+        assert!((r[3] - 3.0).abs() < 1e-10);
+        assert!(r[1].abs() < 1e-10);
+    }
+}

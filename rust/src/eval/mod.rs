@@ -1,0 +1,102 @@
+//! Evaluation metrics — the quantities every paper table/figure reports:
+//!
+//! * **RMSE** (paper eq. 6): global truncation error vs the GT solver,
+//! * **PSNR** w.r.t. GT samples (paper Figs. 9-14),
+//! * **FD**: Fréchet distance between Gaussian fits in data space — the
+//!   FID analog for our low-dimensional substrates (FID *is* a Fréchet
+//!   distance in a feature space; see DESIGN.md §2),
+//! * **sliced W2**: sliced 2-Wasserstein distance (cross-check metric).
+
+pub mod frechet;
+pub mod linalg;
+pub mod pipeline;
+
+pub use frechet::frechet_distance;
+pub use pipeline::{evaluate_sampler, SamplerReport};
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Paper eq. 6: E_{x0} || x(1) - x_n ||, per-sample RMS norm averaged
+/// over the batch.
+pub fn rmse(approx: &Tensor, gt: &Tensor) -> f32 {
+    let diff = approx.sub(gt).expect("rmse: shape mismatch");
+    let norms = diff.row_rms();
+    norms.iter().sum::<f32>() / norms.len() as f32
+}
+
+/// PSNR in dB w.r.t. GT samples; MAX = 2.0 (data normalized to [-1, 1],
+/// matching the paper's image convention).
+pub fn psnr(approx: &Tensor, gt: &Tensor) -> f32 {
+    let diff = approx.sub(gt).expect("psnr: shape mismatch");
+    let mse = {
+        let d = diff.data();
+        (d.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / d.len() as f64) as f32
+    };
+    10.0 * ((2.0f32 * 2.0) / mse.max(1e-20)).log10()
+}
+
+/// Sliced 2-Wasserstein distance: average over `n_proj` random directions
+/// of the 1-D W2 between the projected samples (equal sizes required).
+pub fn sliced_w2(a: &Tensor, b: &Tensor, n_proj: usize, seed: u64) -> f32 {
+    assert_eq!(a.shape(), b.shape(), "sliced_w2 expects equal sample sets");
+    let (n, d) = (a.rows(), a.cols());
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0f64;
+    let mut pa = vec![0.0f32; n];
+    let mut pb = vec![0.0f32; n];
+    for _ in 0..n_proj {
+        // random unit direction
+        let mut dir = rng.normal_vec(d);
+        let norm = dir.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        dir.iter_mut().for_each(|x| *x /= norm);
+        for i in 0..n {
+            pa[i] = a.row(i).iter().zip(&dir).map(|(x, w)| x * w).sum();
+            pb[i] = b.row(i).iter().zip(&dir).map(|(x, w)| x * w).sum();
+        }
+        pa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        pb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let w2: f64 = pa
+            .iter()
+            .zip(&pb)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        total += w2;
+    }
+    ((total / n_proj as f64).sqrt()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap();
+        assert_eq!(rmse(&a, &a), 0.0);
+        assert!(psnr(&a, &a) > 100.0);
+    }
+
+    #[test]
+    fn rmse_matches_hand_computation() {
+        let a = Tensor::new(vec![1.0, 1.0], vec![1, 2]).unwrap();
+        let b = Tensor::new(vec![0.0, 0.0], vec![1, 2]).unwrap();
+        assert!((rmse(&a, &b) - 1.0).abs() < 1e-7); // sqrt((1+1)/2)
+        // PSNR = 10 log10(4 / 1)
+        assert!((psnr(&a, &b) - 10.0 * 4.0f32.log10()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sliced_w2_detects_shift() {
+        let mut rng = crate::util::Rng::new(0);
+        let n = 512;
+        let a = Tensor::new(rng.normal_vec(n * 2), vec![n, 2]).unwrap();
+        let b = a.map(|x| x + 1.0);
+        let same = sliced_w2(&a, &a, 16, 1);
+        let shifted = sliced_w2(&a, &b, 16, 1);
+        assert!(same < 1e-6);
+        // shifting by (1,1) => W2 ~ |shift| projected; must be clearly > 0.5
+        assert!(shifted > 0.5, "{shifted}");
+    }
+}

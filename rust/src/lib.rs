@@ -1,0 +1,32 @@
+//! # bespoke-flow
+//!
+//! A production-grade Rust + JAX + Pallas reproduction of **"Bespoke Solvers
+//! for Generative Flow Models"** (Shaul et al., ICLR 2024).
+//!
+//! The crate is the L3 layer of a three-layer stack (see `DESIGN.md`):
+//! python/JAX authors the flow models and the differentiable Bespoke loss and
+//! AOT-lowers them to HLO text (`make artifacts`); this crate loads those
+//! artifacts through PJRT (`runtime`), implements the full numerical-solver
+//! library including the learned Bespoke solvers (`solvers`), owns the
+//! Bespoke training loop (`bespoke`), serves samples through a batching
+//! coordinator (`coordinator`), and regenerates every table and figure of the
+//! paper's evaluation (`bench_harness`).
+//!
+//! Python never runs on the request path: after `make artifacts` the binary
+//! is self-contained.
+
+pub mod bench_harness;
+pub mod bespoke;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod json;
+pub mod models;
+pub mod runtime;
+pub mod schedulers;
+pub mod solvers;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,251 @@
+//! `repro` — the launcher for the bespoke-flow serving stack.
+//!
+//! ```text
+//! repro list                                     models + artifacts
+//! repro sample --model M --solver S --n N        generate samples
+//! repro train-bespoke --model M --n 8 [...]      train a Bespoke solver
+//! repro eval --model M --solver S                metrics vs GT solver
+//! repro serve [--addr 127.0.0.1:7777]            JSONL sampling server
+//! repro exp <id>|all                             reproduce a paper table/figure
+//! ```
+//!
+//! Global flags: `--config <file.json>` (see `config.rs` schema),
+//! `--artifacts <dir>` (default `./artifacts`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use bespoke_flow::bench_harness::{self, ExpContext};
+use bespoke_flow::config::Config;
+use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest};
+use bespoke_flow::models::Zoo;
+use bespoke_flow::runtime::{Executable, Manifest};
+use bespoke_flow::solvers::theta::Base;
+use bespoke_flow::{bail, Context, Result};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    cmd: String,
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut positional = Vec::new();
+    let mut flags = BTreeMap::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = it.next().with_context(|| format!("flag --{name} needs a value"))?;
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Ok(Args { cmd, positional, flags })
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.flags.get("config") {
+        Some(p) => Config::load(std::path::Path::new(p))?,
+        None => Config::default(),
+    };
+    if let Some(addr) = args.flags.get("addr") {
+        cfg.serve.addr = addr.clone();
+    }
+    if let Some(iters) = args.flags.get("iters") {
+        cfg.train.iters = iters.parse().context("bad --iters")?;
+    }
+    if let Some(ab) = args.flags.get("ablation") {
+        cfg.train.ablation = ab.clone();
+    }
+    if let Some(s) = args.flags.get("samples") {
+        cfg.eval.metric_samples = s.parse().context("bad --samples")?;
+    }
+    Ok(cfg)
+}
+
+fn open_zoo(args: &Args) -> Result<Arc<Zoo>> {
+    let man = match args.flags.get("artifacts") {
+        Some(dir) => Manifest::load(std::path::Path::new(dir))?,
+        None => Manifest::load_default()?,
+    };
+    Ok(Arc::new(Zoo::new(Arc::new(man))))
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "list" => {
+            let zoo = open_zoo(&args)?;
+            println!("platform: {}", bespoke_flow::runtime::platform()?);
+            println!(
+                "{:<14} {:>5} {:>6} {:>6}  {:<8} {}",
+                "model", "d", "batch", "kind", "sched", "lossgrads"
+            );
+            for name in zoo.model_names() {
+                let m = zoo.manifest().model(&name)?;
+                println!(
+                    "{:<14} {:>5} {:>6} {:>6}  {:<8} {:?}",
+                    name,
+                    m.d,
+                    m.batch,
+                    m.kind,
+                    m.sched,
+                    m.lossgrads.keys().collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        }
+        "sample" => {
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let coord = Coordinator::new(zoo, cfg.serve.clone());
+            let req = SampleRequest {
+                model: args.flags.get("model").context("--model required")?.clone(),
+                solver: args
+                    .flags
+                    .get("solver")
+                    .cloned()
+                    .unwrap_or_else(|| "rk2:n=8".to_string()),
+                n_samples: args
+                    .flags
+                    .get("n")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(16),
+                seed: args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0),
+                return_samples: true,
+            };
+            let resp = coord.submit(&req)?;
+            if let Some(out) = args.flags.get("out") {
+                let rows: Vec<bespoke_flow::json::Value> = resp
+                    .samples
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .map(|r| bespoke_flow::json::Value::from_f32s(r))
+                    .collect();
+                std::fs::write(out, bespoke_flow::json::Value::Arr(rows).to_string_pretty())?;
+                println!("wrote {} samples to {out}", resp.n_samples);
+            } else {
+                for row in resp.samples.as_ref().unwrap().iter().take(4) {
+                    println!("{row:?}");
+                }
+                if resp.n_samples > 4 {
+                    println!("... ({} samples total)", resp.n_samples);
+                }
+            }
+            println!(
+                "nfe={} batches={} latency={:.1}ms",
+                resp.nfe, resp.batches, resp.latency_ms
+            );
+            Ok(())
+        }
+        "train-bespoke" => {
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let model_name = args.flags.get("model").context("--model required")?;
+            let base = Base::parse(args.flags.get("base").map(String::as_str).unwrap_or("rk2"))?;
+            let n: usize = args.flags.get("n").context("--n required")?.parse()?;
+            let model = zoo.hlo(model_name)?;
+            let lg = zoo.manifest().lossgrad(model_name, base.name(), n)?;
+            let exe = Executable::load(&zoo.manifest().path(&lg.file))?;
+            let out = bespoke_flow::bespoke::train(&model, &exe, base, n, &cfg.train)?;
+            println!(
+                "trained {model_name} {} n={n}: best val RMSE {:.5} in {:.1}s",
+                base.name(),
+                out.best_val_rmse,
+                out.wall_secs
+            );
+            let default_path = format!(
+                "out/thetas/theta_{model_name}_{}_n{n}{}.json",
+                base.name(),
+                if cfg.train.ablation == "full" {
+                    String::new()
+                } else {
+                    format!("_{}", cfg.train.ablation)
+                },
+            );
+            let path = args.flags.get("out").cloned().unwrap_or(default_path);
+            if let Some(parent) = std::path::Path::new(&path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            out.best.save(std::path::Path::new(&path))?;
+            println!("saved {path}");
+            Ok(())
+        }
+        "eval" => {
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let model = args.flags.get("model").context("--model required")?.clone();
+            let solver = args
+                .flags
+                .get("solver")
+                .cloned()
+                .unwrap_or_else(|| "rk2:n=8".to_string());
+            let mut ctx = ExpContext::new(zoo, cfg)?;
+            let rep = ctx.eval_spec(&model, &solver)?;
+            println!("{}", rep.to_json().to_string_pretty());
+            Ok(())
+        }
+        "serve" => {
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let coord = Arc::new(Coordinator::new(zoo, cfg.serve.clone()));
+            println!(
+                "serving on {} (JSONL protocol; try {{\"cmd\":\"ping\"}})",
+                cfg.serve.addr
+            );
+            serve(coord, &cfg.serve.addr)
+        }
+        "exp" => {
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let id = args.positional.first().context("usage: repro exp <id>|all")?;
+            let mut ctx = ExpContext::new(zoo, cfg)?;
+            bench_harness::run(&mut ctx, id)?;
+            println!("experiment {id} complete; see out/reports/");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `repro help`"),
+    }
+}
+
+const HELP: &str = r#"repro — Bespoke Solvers for Generative Flow Models (ICLR 2024 reproduction)
+
+USAGE:
+    repro <command> [flags]
+
+COMMANDS:
+    list                          show models in the artifact manifest
+    sample                        generate samples through the coordinator
+        --model M  --solver SPEC  --n N  --seed S  [--out samples.json]
+    train-bespoke                 train a Bespoke solver (Algorithm 2)
+        --model M  [--base rk1|rk2]  --n STEPS  [--iters I]
+        [--ablation full|time-only|scale-only]  [--out theta.json]
+    eval                          evaluate a solver spec vs the GT solver
+        --model M  --solver SPEC  [--samples N]
+    serve                         start the JSONL sampling server
+        [--addr HOST:PORT]
+    exp <id>|all                  reproduce a paper table/figure (out/reports/)
+
+SOLVER SPECS:
+    rk1:n=10   rk2:n=5   rk4:n=3   rk2:n=5:grid=edm|logsnr|cosine
+    rk2-target:n=5:sched=vp|edm   dopri5:tol=1e-5
+    bespoke:path=out/thetas/theta_checker2-ot_rk2_n8.json
+
+GLOBAL FLAGS:
+    --config file.json   --artifacts dir
+"#;

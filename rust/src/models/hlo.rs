@@ -1,0 +1,57 @@
+//! HLO-backed velocity model — the request-path implementation. Wraps the
+//! compiled `u_<model>.hlo.txt` artifact; one evaluation == one executable
+//! launch with inputs (x[B,d], t[]).
+
+use anyhow::{bail, Result};
+
+use super::VelocityModel;
+use crate::runtime::{Executable, Manifest, ModelMeta};
+use crate::tensor::Tensor;
+
+pub struct HloModel {
+    meta: ModelMeta,
+    exe: Executable,
+}
+
+impl HloModel {
+    pub fn load(man: &Manifest, name: &str) -> Result<HloModel> {
+        let meta = man.model(name)?.clone();
+        let exe = Executable::load(&man.path(&meta.u_hlo))?;
+        Ok(HloModel { meta, exe })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+}
+
+impl VelocityModel for HloModel {
+    fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn dim(&self) -> usize {
+        self.meta.d
+    }
+
+    fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor> {
+        if x.shape() != [self.meta.batch, self.meta.d] {
+            bail!(
+                "model {} expects [{}, {}], got {:?} (HLO shapes are static)",
+                self.meta.name,
+                self.meta.batch,
+                self.meta.d,
+                x.shape()
+            );
+        }
+        let mut out = self.exe.run(&[x.clone(), Tensor::scalar(t)])?;
+        if out.len() != 1 {
+            bail!("u artifact returned {} outputs, expected 1", out.len());
+        }
+        Ok(out.pop().unwrap())
+    }
+}

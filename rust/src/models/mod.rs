@@ -1,0 +1,67 @@
+//! Flow models as seen by the coordinator: a `VelocityModel` is a black-box
+//! batched velocity field `u(x[B,d], t) -> [B,d]`, either backed by an AOT'd
+//! HLO executable (`HloModel`, the request path) or computed natively
+//! (`AnalyticModel`, the pure-Rust oracle used by tests and as an offline
+//! fallback).
+
+pub mod analytic;
+pub mod hlo;
+pub mod zoo;
+
+pub use analytic::AnalyticModel;
+pub use hlo::HloModel;
+pub use zoo::Zoo;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// A batched velocity field. Implementations must be thread-safe: the
+/// serving workers share one model across requests.
+pub trait VelocityModel: Send + Sync {
+    fn name(&self) -> &str;
+    /// Fixed batch size of the compiled executable (HLO shapes are static).
+    fn batch(&self) -> usize;
+    fn dim(&self) -> usize;
+    /// Evaluate u(x, t). `x` must be [batch, dim].
+    fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor>;
+}
+
+/// NFE-accounting wrapper: counts function evaluations, the unit in which
+/// the paper reports every result.
+pub struct CountingModel<'a> {
+    inner: &'a dyn VelocityModel,
+    count: AtomicU64,
+}
+
+impl<'a> CountingModel<'a> {
+    pub fn new(inner: &'a dyn VelocityModel) -> Self {
+        CountingModel { inner, count: AtomicU64::new(0) }
+    }
+
+    pub fn nfe(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+impl<'a> VelocityModel for CountingModel<'a> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor> {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.eval(x, t)
+    }
+}

@@ -1,0 +1,72 @@
+//! The model zoo: lazily loads + caches compiled models by name, and can
+//! construct the matching pure-Rust analytic oracle for any `ideal`-kind
+//! model (used by tests and the offline fallback).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::{AnalyticModel, HloModel, VelocityModel};
+use crate::runtime::Manifest;
+use crate::schedulers::Scheduler;
+
+pub struct Zoo {
+    man: Arc<Manifest>,
+    cache: Mutex<BTreeMap<String, Arc<HloModel>>>,
+}
+
+impl Zoo {
+    pub fn new(man: Arc<Manifest>) -> Zoo {
+        Zoo { man, cache: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn open_default() -> Result<Zoo> {
+        Ok(Zoo::new(Arc::new(Manifest::load_default()?)))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.man.models.keys().cloned().collect()
+    }
+
+    /// Load (or fetch cached) HLO model.
+    pub fn hlo(&self, name: &str) -> Result<Arc<HloModel>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let m = Arc::new(HloModel::load(&self.man, name)?);
+        self.cache.lock().unwrap().insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+
+    /// Pure-Rust oracle for an `ideal` model (errors for `mlp` models —
+    /// their weights live only in the HLO).
+    pub fn analytic(&self, name: &str) -> Result<AnalyticModel> {
+        let meta = self.man.model(name)?;
+        if meta.kind != "ideal" {
+            bail!("model {name} is kind={:?}; no analytic oracle", meta.kind);
+        }
+        let points = self.man.load_dataset(&meta.dataset)?;
+        AnalyticModel::new(
+            format!("{name}-analytic"),
+            points,
+            Scheduler::parse(&meta.sched)?,
+            meta.gamma,
+            meta.batch,
+        )
+    }
+
+    /// The scheduler a model was trained/derived with.
+    pub fn scheduler(&self, name: &str) -> Result<Scheduler> {
+        Scheduler::parse(&self.man.model(name)?.sched)
+    }
+
+    /// Convenience: model as a trait object.
+    pub fn velocity(&self, name: &str) -> Result<Arc<dyn VelocityModel>> {
+        Ok(self.hlo(name)? as Arc<dyn VelocityModel>)
+    }
+}

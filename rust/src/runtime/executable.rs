@@ -1,0 +1,80 @@
+//! A compiled HLO executable with Tensor-level marshalling.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A loaded + compiled HLO module. All exported artifacts are lowered with
+/// `return_tuple=True`, so outputs always arrive as a (possibly 1-ary) tuple.
+///
+/// SAFETY: see `runtime::Client` — PJRT CPU execution is thread-safe; the
+/// wrapper is shared read-only across worker threads.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Load HLO text from `path`, compile it on the global CPU client.
+    pub fn load(path: &Path) -> Result<Executable> {
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = crate::runtime::client()?
+            .0
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { name, exe })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host tensors; returns the tuple elements as tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-marshalled literals (lets hot loops reuse buffers).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+}
+
+/// Host Tensor -> xla Literal (f32, row-major).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping literal")
+}
+
+/// xla Literal -> host Tensor (f32 only; artifacts are all-f32).
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal shape")?;
+    if shape.ty() != xla::ElementType::F32 {
+        bail!("expected f32 output, got {:?}", shape.ty());
+    }
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("literal to_vec")?;
+    Tensor::new(data, dims)
+}

@@ -1,0 +1,196 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust coordinator. Parses `artifacts/manifest.json`, loads datasets, and
+//! resolves artifact paths.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct DatasetMeta {
+    pub file: String,
+    pub k: usize,
+    pub d: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct LossGradMeta {
+    pub file: String,
+    pub base: String,
+    pub n: usize,
+    pub p: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub u_hlo: String,
+    pub dataset: String,
+    pub sched: String,
+    pub kind: String,
+    pub batch: usize,
+    pub d: usize,
+    pub gamma: f32,
+    pub lossgrads: BTreeMap<String, LossGradMeta>,
+}
+
+/// Parsed manifest + the directory it lives in.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub datasets: BTreeMap<String, DatasetMeta>,
+}
+
+impl Manifest {
+    /// Default location: `<repo>/artifacts` (override with BESPOKE_ARTIFACTS).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("BESPOKE_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+
+        let mut datasets = BTreeMap::new();
+        for (name, dv) in v.get("datasets")?.as_obj()? {
+            datasets.insert(
+                name.clone(),
+                DatasetMeta {
+                    file: dv.get("file")?.as_str()?.to_string(),
+                    k: dv.get("k")?.as_usize()?,
+                    d: dv.get("d")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, mv) in v.get("models")?.as_obj()? {
+            let mut lossgrads = BTreeMap::new();
+            for (key, lv) in mv.get("lossgrads")?.as_obj()? {
+                lossgrads.insert(
+                    key.clone(),
+                    LossGradMeta {
+                        file: lv.get("file")?.as_str()?.to_string(),
+                        base: lv.get("base")?.as_str()?.to_string(),
+                        n: lv.get("n")?.as_usize()?,
+                        p: lv.get("p")?.as_usize()?,
+                    },
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    u_hlo: mv.get("u_hlo")?.as_str()?.to_string(),
+                    dataset: mv.get("dataset")?.as_str()?.to_string(),
+                    sched: mv.get("sched")?.as_str()?.to_string(),
+                    kind: mv.get("kind")?.as_str()?.to_string(),
+                    batch: mv.get("batch")?.as_usize()?,
+                    d: mv.get("d")?.as_usize()?,
+                    gamma: mv.get("gamma")?.as_f64()? as f32,
+                    lossgrads,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, datasets })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown model {name:?}; available: {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a dataset dump (`data_<name>.f32`, little-endian f32 [K, d]).
+    pub fn load_dataset(&self, name: &str) -> Result<Tensor> {
+        let meta = self
+            .datasets
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
+        let bytes = std::fs::read(self.path(&meta.file))
+            .with_context(|| format!("reading dataset {name}"))?;
+        if bytes.len() != meta.k * meta.d * 4 {
+            bail!(
+                "dataset {name}: expected {} bytes, found {}",
+                meta.k * meta.d * 4,
+                bytes.len()
+            );
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(data, vec![meta.k, meta.d])
+    }
+
+    /// Loss-grad artifact for (model, base, n), if exported.
+    pub fn lossgrad(&self, model: &str, base: &str, n: usize) -> Result<&LossGradMeta> {
+        let m = self.model(model)?;
+        m.lossgrads.get(&format!("{base}_n{n}")).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no lossgrad artifact for model={model} base={base} n={n}; \
+                 exported: {:?}",
+                m.lossgrads.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("bespoke_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"datasets": {"ds": {"file": "data_ds.f32", "k": 2, "d": 3}},
+                "models": {"m": {"u_hlo": "u_m.hlo.txt", "dataset": "ds",
+                 "sched": "ot", "kind": "ideal", "batch": 4, "d": 3,
+                 "gamma": 0.05,
+                 "lossgrads": {"rk2_n4": {"file": "lg.hlo.txt", "base": "rk2",
+                                           "n": 4, "p": 32}}}},
+                "lossgrads": {}}"#,
+        )
+        .unwrap();
+        let raw: Vec<u8> = (0..6u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        std::fs::write(dir.join("data_ds.f32"), raw).unwrap();
+
+        let man = Manifest::load(&dir).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.batch, 4);
+        assert_eq!(man.lossgrad("m", "rk2", 4).unwrap().p, 32);
+        assert!(man.lossgrad("m", "rk1", 4).is_err());
+        let ds = man.load_dataset("ds").unwrap();
+        assert_eq!(ds.shape(), &[2, 3]);
+        assert_eq!(ds.data()[4], 4.0);
+        assert!(man.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT runtime: loads the AOT'd HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the request path.
+//!
+//! The interchange format is HLO *text* — jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+
+pub mod executable;
+pub mod manifest;
+
+pub use executable::Executable;
+pub use manifest::{LossGradMeta, Manifest, ModelMeta};
+
+use std::sync::OnceLock;
+
+use anyhow::{Context, Result};
+
+/// The process-wide PJRT CPU client.
+///
+/// SAFETY: `xla::PjRtClient` holds raw pointers and is not auto-Send/Sync,
+/// but the PJRT CPU client is documented thread-safe for compilation and
+/// execution; we serialize nothing and share it across the coordinator's
+/// worker threads.
+pub struct Client(pub xla::PjRtClient);
+unsafe impl Send for Client {}
+unsafe impl Sync for Client {}
+
+static CLIENT: OnceLock<Client> = OnceLock::new();
+
+/// Get (or lazily create) the global PJRT CPU client.
+pub fn client() -> Result<&'static Client> {
+    if CLIENT.get().is_none() {
+        let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let _ = CLIENT.set(Client(c));
+    }
+    Ok(CLIENT.get().unwrap())
+}
+
+/// Platform string of the global client (for diagnostics/CLI).
+pub fn platform() -> Result<String> {
+    Ok(client()?.0.platform_name())
+}

@@ -1,0 +1,175 @@
+//! The learned **Bespoke** samplers (the paper's contribution): scale-time
+//! transformed RK1 (eq. 17) and RK2/midpoint (eq. 19-20) steps driven by a
+//! decoded theta. At identity theta these coincide exactly with the plain
+//! base solvers (consistency anchor, Theorem 2.2 — tested below).
+
+use anyhow::{bail, Result};
+
+use super::theta::{Base, DecodedTheta, RawTheta};
+use super::Sampler;
+use crate::models::VelocityModel;
+use crate::tensor::Tensor;
+
+pub struct BespokeSolver {
+    pub theta: DecodedTheta,
+    label: String,
+}
+
+impl BespokeSolver {
+    pub fn new(raw: &RawTheta) -> BespokeSolver {
+        BespokeSolver {
+            theta: raw.decode(),
+            label: format!("bespoke-{}:n={}", raw.base.name(), raw.n),
+        }
+    }
+
+    pub fn with_label(raw: &RawTheta, label: impl Into<String>) -> BespokeSolver {
+        BespokeSolver { theta: raw.decode(), label: label.into() }
+    }
+
+    /// One Bespoke step from integer step index i (paper eq. 17 / 19-20).
+    pub fn step(
+        &self,
+        model: &dyn VelocityModel,
+        x: &Tensor,
+        i: usize,
+    ) -> Result<Tensor> {
+        let th = &self.theta;
+        let n = th.n;
+        if i >= n {
+            bail!("step index {i} out of range for n={n}");
+        }
+        let h = 1.0f32 / n as f32;
+        match th.base {
+            Base::Rk1 => {
+                let (s_i, s_ip) = (th.s[i], th.s[i + 1]);
+                let u = model.eval(x, th.t[i])?;
+                // x_{i+1} = ((s_i + h sdot_i)/s_{i+1}) x + h tdot_i (s_i/s_{i+1}) u
+                let mut out = x.scale((s_i + h * th.sdot[i]) / s_ip);
+                out.axpy(h * th.tdot[i] * s_i / s_ip, &u)?;
+                Ok(out)
+            }
+            Base::Rk2 => {
+                let j = 2 * i;
+                let (s_i, s_h, s_ip) = (th.s[j], th.s[j + 1], th.s[j + 2]);
+                let (t_i, t_h) = (th.t[j], th.t[j + 1]);
+                let (td_i, td_h) = (th.tdot[j], th.tdot[j + 1]);
+                let (sd_i, sd_h) = (th.sdot[j], th.sdot[j + 1]);
+                // z_i = (s_i + h/2 sdot_i) x + h/2 s_i tdot_i u(x, t_i)   (eq. 20)
+                let u1 = model.eval(x, t_i)?;
+                let mut z = x.scale(s_i + 0.5 * h * sd_i);
+                z.axpy(0.5 * h * s_i * td_i, &u1)?;
+                // u2 = u(z / s_{i+1/2}, t_{i+1/2})
+                let u2 = model.eval(&z.scale(1.0 / s_h), t_h)?;
+                // x_{i+1} = (s_i/s_{i+1}) x + (h/s_{i+1}) [ (sdot_h/s_h) z + tdot_h s_h u2 ]
+                let mut out = x.scale(s_i / s_ip);
+                out.axpy(h / s_ip * sd_h / s_h, &z)?;
+                out.axpy(h / s_ip * td_h * s_h, &u2)?;
+                Ok(out)
+            }
+        }
+    }
+}
+
+impl Sampler for BespokeSolver {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn nfe(&self) -> usize {
+        self.theta.n * self.theta.base.evals_per_step()
+    }
+
+    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
+        let mut x = x0.clone();
+        for i in 0..self.theta.n {
+            x = self.step(model, &x, i)?;
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticModel;
+    use crate::schedulers::Scheduler;
+    use crate::solvers::dopri5::Dopri5;
+    use crate::solvers::rk::{BaseRk, FixedGridSolver};
+    use crate::util::Rng;
+
+    fn toy() -> AnalyticModel {
+        let pts = Tensor::from_rows(&[vec![0.9, 0.1], vec![-0.7, -0.5], vec![0.2, 1.1]]).unwrap();
+        AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, 8).unwrap()
+    }
+
+    /// Consistency anchor: identity theta == plain base solver.
+    #[test]
+    fn identity_theta_equals_base_solver() {
+        let model = toy();
+        let mut rng = Rng::new(3);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        for (base, rk, n) in [(Base::Rk1, BaseRk::Rk1, 6), (Base::Rk2, BaseRk::Rk2, 6)] {
+            let bes = BespokeSolver::new(&RawTheta::identity(base, n));
+            let plain = FixedGridSolver::uniform(rk, n);
+            let a = bes.sample(&model, &x0).unwrap();
+            let b = plain.sample(&model, &x0).unwrap();
+            let err = a.sub(&b).unwrap().linf();
+            // decode eps (1e-6 positivity floor) perturbs tdot by ~n*1e-5
+            assert!(err < 1e-3, "{base:?}: identity mismatch linf={err}");
+        }
+    }
+
+    /// Theorem 2.2: Bespoke solvers keep the base order. Perturb theta and
+    /// check the empirical order of convergence on the analytic model.
+    #[test]
+    fn perturbed_theta_keeps_order_two() {
+        let model = toy();
+        let mut rng = Rng::new(5);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let gt = Dopri5 { rtol: 1e-8, atol: 1e-8, max_steps: 100_000 }
+            .sample(&model, &x0)
+            .unwrap();
+        // A genuine (smooth) scale-time transform, sampled consistently:
+        // t_r = r + 0.15 sin(pi r) (monotone), s_r = exp(0.2 sin(pi r)).
+        // Theorem 2.2 guarantees order-2 for members of the family F —
+        // the grid values AND their derivatives must come from the same
+        // smooth functions.
+        let t_of = |r: f32| r + 0.15 * (std::f32::consts::PI * r).sin();
+        let td_of = |r: f32| 1.0 + 0.15 * std::f32::consts::PI * (std::f32::consts::PI * r).cos();
+        let s_of = |r: f32| (0.2 * (std::f32::consts::PI * r).sin()).exp();
+        let sd_of =
+            |r: f32| 0.2 * std::f32::consts::PI * (std::f32::consts::PI * r).cos() * s_of(r);
+        let err_at = |n: usize| {
+            let m = Base::Rk2.grid_points(n) - 1;
+            let mut raw = vec![0.0f32; 4 * m];
+            for j in 0..m {
+                let r0 = j as f32 / m as f32;
+                let r1 = (j + 1) as f32 / m as f32;
+                raw[j] = t_of(r1) - t_of(r0); // dt
+                raw[m + j] = td_of(r0) / m as f32; // tdot (decode multiplies by m)
+                raw[2 * m + j] = s_of(r1).ln(); // log s at grid 1..m
+                raw[3 * m + j] = sd_of(r0); // sdot
+            }
+            let bes = BespokeSolver::new(&RawTheta::from_raw(Base::Rk2, n, raw).unwrap());
+            bes.sample(&model, &x0).unwrap().sub(&gt).unwrap().rms()
+        };
+        let (e8, e16) = (err_at(8), err_at(16));
+        let order = (e8 / e16).log2();
+        assert!(order > 1.5, "expected order ~2, got {order} (e8={e8}, e16={e16})");
+    }
+
+    #[test]
+    fn nfe_counts() {
+        assert_eq!(BespokeSolver::new(&RawTheta::identity(Base::Rk1, 10)).nfe(), 10);
+        assert_eq!(BespokeSolver::new(&RawTheta::identity(Base::Rk2, 10)).nfe(), 20);
+    }
+
+    #[test]
+    fn step_index_bounds() {
+        let model = toy();
+        let bes = BespokeSolver::new(&RawTheta::identity(Base::Rk2, 3));
+        let x = Tensor::zeros(&[8, 2]);
+        assert!(bes.step(&model, &x, 3).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Heuristic time grids — the "non-uniform time steps" family of dedicated
+//! solvers (Karras et al. 2022 and the DDIM log-SNR spacing), expressed as
+//! warps of the model's own time axis.
+//!
+//! Each grid maps n steps to n+1 times in [0, 1]. Combined with
+//! [`super::rk::FixedGridSolver`] these reproduce the paper's dedicated-
+//! solver baselines that only re-space time (the scale component is handled
+//! by [`super::transfer`]).
+
+use anyhow::{bail, Result};
+
+use crate::schedulers::{edm_sigma, Scheduler};
+
+/// Uniform grid t_i = i / n.
+pub fn uniform(n: usize) -> Vec<f32> {
+    (0..=n).map(|i| i as f32 / n as f32).collect()
+}
+
+/// EDM rho-grid (Karras et al. 2022, rho = 7): the sigma ladder
+/// sigma_i = (A + i/n (B - A))^rho mapped onto the model's time axis by
+/// SNR matching: t_i = snr^-1(1 / sigma_i).
+pub fn edm(n: usize, sched: Scheduler) -> Vec<f32> {
+    let mut g: Vec<f32> = (0..=n)
+        .map(|i| {
+            let r = i as f64 / n as f64;
+            let sigma = edm_sigma(r);
+            sched.snr_inverse(1.0 / sigma) as f32
+        })
+        .collect();
+    // snr matching can saturate at the ends; pin the boundary conditions.
+    g[0] = 0.0;
+    g[n] = 1.0;
+    g
+}
+
+/// Cosine-warped grid: denser steps near t = 1 where flow paths curve
+/// hardest for OT schedules.
+pub fn cosine(n: usize) -> Vec<f32> {
+    (0..=n)
+        .map(|i| {
+            let r = i as f32 / n as f32;
+            1.0 - (std::f32::consts::FRAC_PI_2 * r).cos()
+        })
+        .collect()
+}
+
+/// Uniform in log-SNR (the DDIM/DPM-solver spacing): lambda_i linear
+/// between lambda(t_lo) and lambda(t_hi), mapped back through snr^-1.
+pub fn log_snr(n: usize, sched: Scheduler) -> Vec<f32> {
+    let t_lo = 1e-3;
+    let t_hi = 1.0 - 1e-3;
+    let l_lo = sched.log_snr(t_lo);
+    let l_hi = sched.log_snr(t_hi);
+    let mut g: Vec<f32> = (0..=n)
+        .map(|i| {
+            let l = l_lo + (l_hi - l_lo) * i as f64 / n as f64;
+            sched.snr_inverse(l.exp()) as f32
+        })
+        .collect();
+    g[0] = 0.0;
+    g[n] = 1.0;
+    g
+}
+
+/// Parse a grid spec name.
+pub fn make(name: &str, n: usize, sched: Scheduler) -> Result<Vec<f32>> {
+    Ok(match name {
+        "uniform" => uniform(n),
+        "edm" => edm(n, sched),
+        "cosine" => cosine(n),
+        "logsnr" => log_snr(n, sched),
+        _ => bail!("unknown grid {name:?} (uniform|edm|cosine|logsnr)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(g: &[f32], n: usize) {
+        assert_eq!(g.len(), n + 1);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[n], 1.0);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0], "grid not strictly increasing: {g:?}");
+        }
+    }
+
+    #[test]
+    fn all_grids_valid_for_all_schedulers() {
+        for sched in [Scheduler::CondOt, Scheduler::Cosine, Scheduler::VarPres] {
+            for name in ["uniform", "edm", "cosine", "logsnr"] {
+                for n in [4, 8, 20] {
+                    check(&make(name, n, sched).unwrap(), n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edm_grid_denser_near_data_end() {
+        // EDM spends most steps at low sigma (high t).
+        let g = edm(10, Scheduler::CondOt);
+        let first = g[1] - g[0];
+        let last = g[10] - g[9];
+        assert!(last < first, "expected fine steps near t=1: {g:?}");
+    }
+
+    #[test]
+    fn unknown_grid_rejected() {
+        assert!(make("nope", 4, Scheduler::CondOt).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! The numerical-solver library (L3 of the stack).
+//!
+//! Everything the paper evaluates lives here:
+//!
+//! * fixed-grid Runge–Kutta samplers (RK1/RK2/RK4) over arbitrary time
+//!   grids ([`rk`], [`grids`]) — the paper's generic baselines,
+//! * the adaptive DOPRI5 solver with dense output ([`dopri5`]) — the
+//!   ground-truth sampler (paper: "adaptive RK45 / DOPRI5"),
+//! * heuristic scale-time *scheduler-transfer* samplers ([`transfer`]) —
+//!   the DDIM / DPM-Solver / EDM analogs, which the paper shows are fixed
+//!   members of the scale-time family,
+//! * the learned **Bespoke** samplers ([`bespoke`]) over the raw-theta
+//!   parameterization ([`theta`]),
+//! * a name-based [`registry`] so the CLI/server/benches can instantiate
+//!   any solver from a string spec like `"bespoke-rk2:n=8"` or
+//!   `"rk2:n=10:grid=edm"`.
+
+pub mod bespoke;
+pub mod dopri5;
+pub mod grids;
+pub mod registry;
+pub mod rk;
+pub mod theta;
+pub mod transfer;
+
+pub use bespoke::BespokeSolver;
+pub use dopri5::{DenseSolution, Dopri5};
+pub use registry::make_sampler;
+pub use rk::{BaseRk, FixedGridSolver};
+pub use theta::{Base, DecodedTheta, RawTheta};
+pub use transfer::TransferSolver;
+
+use anyhow::Result;
+
+use crate::models::VelocityModel;
+use crate::tensor::Tensor;
+
+/// A sampler integrates the flow ODE from t = 0 (noise) to t = 1 (data).
+pub trait Sampler: Send + Sync {
+    fn name(&self) -> String;
+    /// Number of model evaluations one `sample` call performs.
+    fn nfe(&self) -> usize;
+    /// Map a noise batch x0 [B, d] to approximate data samples [B, d].
+    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor>;
+}

@@ -1,0 +1,138 @@
+//! Name-based solver registry: instantiate any sampler from a string spec.
+//!
+//! Grammar (colon-separated key=val after the kind):
+//!
+//! ```text
+//! rk1:n=10                     plain Euler, uniform grid
+//! rk2:n=10:grid=edm            midpoint on the EDM rho-grid
+//! rk4:n=5
+//! rk2-target:n=10:sched=vp     scheduler-transfer (DPM/DDIM/EDM analog)
+//! dopri5:tol=1e-5              adaptive ground truth
+//! bespoke:path=out/theta.json  learned Bespoke solver from a checkpoint
+//! ```
+//!
+//! The model's own scheduler (needed by warped grids and transfer) is
+//! passed in by the caller.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::bespoke::BespokeSolver;
+use super::dopri5::Dopri5;
+use super::grids;
+use super::rk::{BaseRk, FixedGridSolver};
+use super::theta::RawTheta;
+use super::transfer::TransferSolver;
+use super::Sampler;
+use crate::schedulers::Scheduler;
+
+fn parse_spec(spec: &str) -> (String, BTreeMap<String, String>) {
+    let mut parts = spec.split(':');
+    let kind = parts.next().unwrap_or("").to_string();
+    let mut kv = BTreeMap::new();
+    for p in parts {
+        if let Some((k, v)) = p.split_once('=') {
+            kv.insert(k.to_string(), v.to_string());
+        }
+    }
+    (kind, kv)
+}
+
+fn get_n(kv: &BTreeMap<String, String>) -> Result<usize> {
+    kv.get("n")
+        .context("missing n=<steps>")?
+        .parse::<usize>()
+        .context("bad n")
+}
+
+/// Build a sampler from a spec string; `model_sched` is the scheduler of
+/// the model the sampler will run against.
+pub fn make_sampler(spec: &str, model_sched: Scheduler) -> Result<Box<dyn Sampler>> {
+    let (kind, kv) = parse_spec(spec);
+    match kind.as_str() {
+        "rk1" | "rk2" | "rk4" | "euler" | "midpoint" => {
+            let base = BaseRk::parse(&kind)?;
+            let n = get_n(&kv)?;
+            let grid_name = kv.get("grid").map(String::as_str).unwrap_or("uniform");
+            let grid = grids::make(grid_name, n, model_sched)?;
+            let label = if grid_name == "uniform" {
+                format!("{}:n={n}", base.name())
+            } else {
+                format!("{}:n={n}:grid={grid_name}", base.name())
+            };
+            Ok(Box::new(FixedGridSolver::with_grid(base, grid, label)))
+        }
+        "rk1-target" | "rk2-target" => {
+            let base = BaseRk::parse(kind.trim_end_matches("-target"))?;
+            let n = get_n(&kv)?;
+            let target = Scheduler::parse(kv.get("sched").context("missing sched=")?)?;
+            Ok(Box::new(TransferSolver::new(model_sched, target, base, n)))
+        }
+        "dopri5" => {
+            let tol = kv
+                .get("tol")
+                .map(|s| s.parse::<f64>())
+                .transpose()
+                .context("bad tol")?
+                .unwrap_or(1e-5);
+            Ok(Box::new(Dopri5 { rtol: tol, atol: tol, max_steps: 100_000 }))
+        }
+        "bespoke" => {
+            let path = kv.get("path").context("missing path=<theta.json>")?;
+            let raw = RawTheta::load(std::path::Path::new(path))
+                .with_context(|| format!("loading theta from {path}"))?;
+            Ok(Box::new(BespokeSolver::new(&raw)))
+        }
+        _ => bail!(
+            "unknown solver kind {kind:?} \
+             (rk1|rk2|rk4|rk1-target|rk2-target|dopri5|bespoke)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_kind() {
+        let s = Scheduler::CondOt;
+        for spec in [
+            "rk1:n=4",
+            "rk2:n=8:grid=edm",
+            "rk2:n=8:grid=logsnr",
+            "rk4:n=2",
+            "rk2-target:n=4:sched=vp",
+            "dopri5:tol=1e-4",
+            "dopri5",
+        ] {
+            let sampler = make_sampler(spec, s).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(!sampler.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn bespoke_from_checkpoint() {
+        let th = RawTheta::identity(crate::solvers::theta::Base::Rk2, 4);
+        let dir = std::env::temp_dir().join(format!("bespoke_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("theta.json");
+        th.save(&path).unwrap();
+        let s = make_sampler(
+            &format!("bespoke:path={}", path.display()),
+            Scheduler::CondOt,
+        )
+        .unwrap();
+        assert_eq!(s.nfe(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let s = Scheduler::CondOt;
+        for spec in ["nope:n=4", "rk2", "rk2:n=x", "rk2-target:n=4", "bespoke"] {
+            assert!(make_sampler(spec, s).is_err(), "should reject {spec}");
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Raw-theta codec for the Bespoke scale-time transform — the bit-exact
+//! Rust mirror of `python/compile/theta.py` (paper eq. 74/76, Appendix F).
+//!
+//! Grid convention: base-RK1 n-step solvers use grid points i = 0..n
+//! (g = n+1); base-RK2 uses i = 0, 1/2, 1, ..., n (g = 2n+1). Raw layout
+//! (p = 4(g-1) floats):
+//!
+//! ```text
+//! [ dt_raw (g-1) | tdot_raw (g-1) | log_s (g-1) | sdot (g-1) ]
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::json::Value;
+
+const EPS: f32 = 1e-6;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Base {
+    Rk1,
+    Rk2,
+}
+
+impl Base {
+    pub fn parse(s: &str) -> Result<Base> {
+        Ok(match s {
+            "rk1" => Base::Rk1,
+            "rk2" => Base::Rk2,
+            _ => bail!("unknown base solver {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Base::Rk1 => "rk1",
+            Base::Rk2 => "rk2",
+        }
+    }
+
+    /// Grid points g for an n-step solver.
+    pub fn grid_points(&self, n: usize) -> usize {
+        match self {
+            Base::Rk1 => n + 1,
+            Base::Rk2 => 2 * n + 1,
+        }
+    }
+
+    /// Model evaluations per step.
+    pub fn evals_per_step(&self) -> usize {
+        match self {
+            Base::Rk1 => 1,
+            Base::Rk2 => 2,
+        }
+    }
+}
+
+/// Raw learnable parameters of one Bespoke solver.
+#[derive(Clone, Debug)]
+pub struct RawTheta {
+    pub base: Base,
+    pub n: usize,
+    pub raw: Vec<f32>,
+}
+
+/// Decoded grid sequences (paper notation): `t[g]`, `tdot[g-1]`, `s[g]`,
+/// `sdot[g-1]`.
+#[derive(Clone, Debug)]
+pub struct DecodedTheta {
+    pub base: Base,
+    pub n: usize,
+    pub t: Vec<f32>,
+    pub tdot: Vec<f32>,
+    pub s: Vec<f32>,
+    pub sdot: Vec<f32>,
+}
+
+impl RawTheta {
+    pub fn n_params(base: Base, n: usize) -> usize {
+        4 * (base.grid_points(n) - 1)
+    }
+
+    /// Identity-transform initialization (paper eq. 77-80): the decoded
+    /// Bespoke solver coincides with the plain base RK solver.
+    pub fn identity(base: Base, n: usize) -> RawTheta {
+        let m = base.grid_points(n) - 1;
+        let mut raw = Vec::with_capacity(4 * m);
+        raw.extend(std::iter::repeat(1.0f32).take(m)); // dt -> uniform grid
+        raw.extend(std::iter::repeat(1.0f32 / m as f32).take(m)); // tdot -> 1
+        raw.extend(std::iter::repeat(0.0f32).take(m)); // log_s -> s = 1
+        raw.extend(std::iter::repeat(0.0f32).take(m)); // sdot -> 0
+        RawTheta { base, n, raw }
+    }
+
+    pub fn from_raw(base: Base, n: usize, raw: Vec<f32>) -> Result<RawTheta> {
+        if raw.len() != Self::n_params(base, n) {
+            bail!(
+                "theta length {} != expected {} for base={} n={n}",
+                raw.len(),
+                Self::n_params(base, n),
+                base.name()
+            );
+        }
+        Ok(RawTheta { base, n, raw })
+    }
+
+    /// Decode raw -> grid sequences (mirror of python `theta.decode`).
+    pub fn decode(&self) -> DecodedTheta {
+        let g = self.base.grid_points(self.n);
+        let m = g - 1;
+        let (dt_raw, rest) = self.raw.split_at(m);
+        let (tdot_raw, rest) = rest.split_at(m);
+        let (log_s, sdot) = rest.split_at(m);
+
+        let mut t = Vec::with_capacity(g);
+        t.push(0.0);
+        let mut acc = 0.0f32;
+        for &d in dt_raw {
+            acc += d.abs() + EPS;
+            t.push(acc);
+        }
+        let total = acc;
+        for v in t.iter_mut() {
+            *v /= total;
+        }
+        // exact endpoints
+        t[0] = 0.0;
+        t[m] = 1.0;
+
+        let tdot: Vec<f32> = tdot_raw.iter().map(|v| (v.abs() + EPS) * m as f32).collect();
+        let mut s = Vec::with_capacity(g);
+        s.push(1.0);
+        s.extend(log_s.iter().map(|v| v.exp()));
+        DecodedTheta {
+            base: self.base,
+            n: self.n,
+            t,
+            tdot,
+            s,
+            sdot: sdot.to_vec(),
+        }
+    }
+
+    // ---- gradient masks (paper Fig. 15 ablations) --------------------------
+
+    /// Elementwise gradient mask: "full" | "time-only" | "scale-only".
+    pub fn ablation_mask(base: Base, n: usize, mode: &str) -> Result<Vec<f32>> {
+        let m = base.grid_points(n) - 1;
+        let p = 4 * m;
+        let mut mask = vec![1.0f32; p];
+        match mode {
+            "full" => {}
+            "time-only" => mask[2 * m..].iter_mut().for_each(|v| *v = 0.0),
+            "scale-only" => mask[..2 * m].iter_mut().for_each(|v| *v = 0.0),
+            _ => bail!("unknown ablation mode {mode:?}"),
+        }
+        Ok(mask)
+    }
+
+    // ---- persistence --------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("base", Value::Str(self.base.name().into())),
+            ("n", Value::Num(self.n as f64)),
+            ("raw", Value::from_f32s(&self.raw)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RawTheta> {
+        let base = Base::parse(v.get("base")?.as_str()?)?;
+        let n = v.get("n")?.as_usize()?;
+        Self::from_raw(base, n, v.get("raw")?.as_f32_vec()?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RawTheta> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+impl DecodedTheta {
+    /// Grid index of integer step i (RK2 grids interleave half steps).
+    pub fn stride(&self) -> usize {
+        match self.base {
+            Base::Rk1 => 1,
+            Base::Rk2 => 2,
+        }
+    }
+
+    /// The integer-step times t_0..t_n — where GT snapshots are taken.
+    pub fn step_times(&self) -> Vec<f32> {
+        let k = self.stride();
+        (0..=self.n).map(|i| self.t[k * i]).collect()
+    }
+
+    /// Lipschitz bound of the transformed field at grid point j (lemma D.1,
+    /// L_tau = 1).
+    pub fn l_ubar(&self, j: usize) -> f32 {
+        self.sdot[j].abs() / self.s[j] + self.tdot[j]
+    }
+
+    /// L_i of step i (lemmas D.2 / D.3).
+    pub fn lipschitz_step(&self, i: usize) -> f32 {
+        let h = 1.0 / self.n as f32;
+        match self.base {
+            Base::Rk1 => (self.s[i] / self.s[i + 1]) * (1.0 + h * self.l_ubar(i)),
+            Base::Rk2 => {
+                let j = 2 * i;
+                (self.s[j] / self.s[j + 2])
+                    * (1.0 + h * self.l_ubar(j + 1) * (1.0 + 0.5 * h * self.l_ubar(j)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn identity_decodes_to_identity() {
+        for (base, n) in [(Base::Rk1, 5), (Base::Rk2, 8)] {
+            let dec = RawTheta::identity(base, n).decode();
+            let g = base.grid_points(n);
+            for (j, &tv) in dec.t.iter().enumerate() {
+                let want = j as f32 / (g - 1) as f32;
+                assert!((tv - want).abs() < 1e-5, "t[{j}]={tv} want {want}");
+            }
+            assert!(dec.tdot.iter().all(|&v| (v - 1.0).abs() < 1e-4));
+            assert!(dec.s.iter().all(|&v| v == 1.0));
+            assert!(dec.sdot.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn param_counts_match_paper_order() {
+        assert_eq!(RawTheta::n_params(Base::Rk1, 5), 20); // 4n
+        assert_eq!(RawTheta::n_params(Base::Rk2, 10), 80); // paper's "80 parameters"
+    }
+
+    #[test]
+    fn decode_invariants_for_random_raw() {
+        forall("theta-decode", 60, |rng, case| {
+            let base = if case % 2 == 0 { Base::Rk1 } else { Base::Rk2 };
+            let n = 2 + case % 11;
+            let p = RawTheta::n_params(base, n);
+            let raw: Vec<f32> = (0..p).map(|_| rng.normal() * 2.0).collect();
+            let dec = RawTheta::from_raw(base, n, raw).unwrap().decode();
+            assert_eq!(dec.t[0], 0.0);
+            assert_eq!(*dec.t.last().unwrap(), 1.0);
+            for w in dec.t.windows(2) {
+                assert!(w[1] > w[0], "t grid not strictly increasing");
+            }
+            assert!(dec.tdot.iter().all(|&v| v > 0.0));
+            assert!(dec.s.iter().all(|&v| v > 0.0));
+            assert_eq!(dec.s[0], 1.0);
+            for i in 0..n {
+                assert!(dec.lipschitz_step(i).is_finite());
+            }
+        });
+    }
+
+    #[test]
+    fn identity_lipschitz_matches_closed_form() {
+        let n = 6;
+        let h = 1.0 / n as f32;
+        let d1 = RawTheta::identity(Base::Rk1, n).decode();
+        let d2 = RawTheta::identity(Base::Rk2, n).decode();
+        for i in 0..n {
+            assert!((d1.lipschitz_step(i) - (1.0 + h)).abs() < 1e-4);
+            assert!((d2.lipschitz_step(i) - (1.0 + h * (1.0 + 0.5 * h))).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let th = RawTheta::identity(Base::Rk2, 4);
+        let back = RawTheta::from_json(&th.to_json()).unwrap();
+        assert_eq!(back.raw, th.raw);
+        assert_eq!(back.base, Base::Rk2);
+        assert_eq!(back.n, 4);
+    }
+
+    #[test]
+    fn masks() {
+        let m = RawTheta::ablation_mask(Base::Rk2, 4, "time-only").unwrap();
+        let p = m.len();
+        assert_eq!(m[..p / 2].iter().sum::<f32>(), (p / 2) as f32);
+        assert_eq!(m[p / 2..].iter().sum::<f32>(), 0.0);
+        assert!(RawTheta::ablation_mask(Base::Rk1, 4, "huh").is_err());
+    }
+
+    #[test]
+    fn length_validation() {
+        assert!(RawTheta::from_raw(Base::Rk1, 4, vec![0.0; 3]).is_err());
+    }
+}

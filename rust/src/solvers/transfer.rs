@@ -1,0 +1,134 @@
+//! Scheduler-transfer sampler: integrate the model's ODE along the sampling
+//! path of a *different* scheduler via the scale-time transform of paper
+//! eq. 31/32 — this is exactly how the paper casts DDIM, DPM-Solver and EDM
+//! as fixed (hand-chosen) members of the scale-time family that Bespoke
+//! solvers instead *learn*.
+//!
+//! The transformed field (paper eq. 16) is
+//!
+//! ```text
+//! u_bar_r(x) = (s'_r / s_r) x + t'_r s_r u_{t_r}(x / s_r)
+//! ```
+//!
+//! with (t_r, s_r) from [`crate::schedulers::transfer_map`]; derivatives are
+//! taken by central differences of the analytic map (h = 1e-4).
+
+use anyhow::Result;
+
+use super::rk::BaseRk;
+use super::Sampler;
+use crate::models::VelocityModel;
+use crate::schedulers::{transfer_map, Scheduler};
+use crate::tensor::Tensor;
+
+pub struct TransferSolver {
+    pub source: Scheduler,
+    pub target: Scheduler,
+    pub base: BaseRk,
+    pub n: usize,
+}
+
+const FD_H: f64 = 1e-4;
+
+impl TransferSolver {
+    pub fn new(source: Scheduler, target: Scheduler, base: BaseRk, n: usize) -> TransferSolver {
+        TransferSolver { source, target, base, n }
+    }
+
+    /// (t_r, s_r, dt/dr, ds/dr) at r.
+    fn map_with_derivs(&self, r: f64) -> (f64, f64, f64, f64) {
+        let (t, s) = transfer_map(self.source, self.target, r);
+        let rm = (r - FD_H).max(0.0);
+        let rp = (r + FD_H).min(1.0);
+        let (tm, sm) = transfer_map(self.source, self.target, rm);
+        let (tp, sp) = transfer_map(self.source, self.target, rp);
+        let dr = rp - rm;
+        ((t), (s), (tp - tm) / dr, (sp - sm) / dr)
+    }
+
+    /// u_bar(x_bar, r) on the transformed path.
+    fn u_bar(&self, model: &dyn VelocityModel, xbar: &Tensor, r: f64) -> Result<Tensor> {
+        let (t, s, dt, ds) = self.map_with_derivs(r);
+        let x = xbar.scale(1.0 / s as f32);
+        let u = model.eval(&x, t as f32)?;
+        let mut out = xbar.scale((ds / s) as f32);
+        out.axpy((dt * s) as f32, &u)?;
+        Ok(out)
+    }
+}
+
+impl Sampler for TransferSolver {
+    fn name(&self) -> String {
+        format!("{}-{}:n={}", self.base.name(), self.target.name(), self.n)
+    }
+
+    fn nfe(&self) -> usize {
+        self.n * self.base.evals_per_step()
+    }
+
+    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
+        // x_bar(0) = s_0 x(0); s_0 = sigma_target(0)/sigma_source(0) = 1.
+        let mut xbar = x0.clone();
+        let h = 1.0 / self.n as f64;
+        let mut f = |x: &Tensor, r: f32| self.u_bar(model, x, r as f64);
+        for i in 0..self.n {
+            let r = i as f64 * h;
+            xbar = self.base.step(&mut f, &xbar, r as f32, h as f32)?;
+        }
+        // untransform: x(1) = x_bar(1) / s_1
+        let (_, s1) = transfer_map(self.source, self.target, 1.0);
+        Ok(xbar.scale(1.0 / s1 as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticModel;
+    use crate::solvers::dopri5::Dopri5;
+    use crate::util::Rng;
+
+    fn toy(sched: Scheduler) -> AnalyticModel {
+        let pts = Tensor::from_rows(&[vec![1.0, 0.3], vec![-0.8, -0.4], vec![0.1, 1.2]]).unwrap();
+        AnalyticModel::new("toy", pts, sched, 0.08, 8).unwrap()
+    }
+
+    /// Transferring to the model's own scheduler must reproduce the plain
+    /// fixed-grid solver of the same base (identity transform).
+    #[test]
+    fn self_transfer_is_identity() {
+        let model = toy(Scheduler::CondOt);
+        let mut rng = Rng::new(0);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let plain = crate::solvers::rk::FixedGridSolver::uniform(BaseRk::Rk2, 8);
+        let xfer = TransferSolver::new(Scheduler::CondOt, Scheduler::CondOt, BaseRk::Rk2, 8);
+        let a = plain.sample(&model, &x0).unwrap();
+        let b = xfer.sample(&model, &x0).unwrap();
+        let err = a.sub(&b).unwrap().rms();
+        assert!(err < 2e-3, "self-transfer deviates: rms {err}");
+    }
+
+    /// Consistency (Theorem 2.2): as n grows the transfer solver converges
+    /// to the GT solution.
+    #[test]
+    fn transfer_converges_to_gt() {
+        let model = toy(Scheduler::Cosine);
+        let mut rng = Rng::new(1);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let gt = Dopri5::default().sample(&model, &x0).unwrap();
+        let err_at = |n: usize| {
+            let s = TransferSolver::new(Scheduler::Cosine, Scheduler::CondOt, BaseRk::Rk2, n);
+            s.sample(&model, &x0).unwrap().sub(&gt).unwrap().rms()
+        };
+        let (e8, e32) = (err_at(8), err_at(32));
+        assert!(e32 < e8 * 0.5, "no convergence: e8={e8} e32={e32}");
+        assert!(e32 < 0.05, "absolute error too large: {e32}");
+    }
+
+    #[test]
+    fn nfe_and_name() {
+        let s = TransferSolver::new(Scheduler::CondOt, Scheduler::VarPres, BaseRk::Rk2, 5);
+        assert_eq!(s.nfe(), 10);
+        assert!(s.name().contains("vp"));
+    }
+}

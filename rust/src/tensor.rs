@@ -1,0 +1,331 @@
+//! Host-side f32 tensor: a flat buffer + shape, with the small set of
+//! numerics the coordinator needs (elementwise ops, axpy, reductions, batch
+//! statistics). This is deliberately not a BLAS — the heavy math runs inside
+//! the AOT'd HLO executables; the host side only stitches solver steps
+//! together and computes metrics.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} does not match data length {}", shape, data.len());
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Result<Tensor> {
+        if rows.is_empty() {
+            bail!("from_rows: empty");
+        }
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            if r.len() != d {
+                bail!("ragged rows");
+            }
+            data.extend_from_slice(r);
+        }
+        Tensor::new(data, vec![rows.len(), d])
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows for a 2-D [B, d] tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() needs a 2-D tensor");
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() needs a 2-D tensor");
+        self.shape[1]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.cols();
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.cols();
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} size mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    // ---- elementwise -----------------------------------------------------
+
+    fn check_same_shape(&self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(())
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.check_same_shape(other)?;
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Ok(Tensor { data, shape: self.shape.clone() })
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.check_same_shape(other)?;
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Ok(Tensor { data, shape: self.shape.clone() })
+    }
+
+    pub fn scale(&self, c: f32) -> Tensor {
+        Tensor { data: self.data.iter().map(|a| a * c).collect(), shape: self.shape.clone() }
+    }
+
+    /// self += c * other  (the hot per-step update; in-place, no alloc).
+    pub fn axpy(&mut self, c: f32, other: &Tensor) -> Result<()> {
+        self.check_same_shape(other)?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += c * b;
+        }
+        Ok(())
+    }
+
+    /// self = a * self + c * other (in-place scaled blend).
+    pub fn scale_axpy(&mut self, a: f32, c: f32, other: &Tensor) -> Result<()> {
+        self.check_same_shape(other)?;
+        for (x, b) in self.data.iter_mut().zip(&other.data) {
+            *x = a * *x + c * b;
+        }
+        Ok(())
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { data: self.data.iter().map(|&x| f(x)).collect(), shape: self.shape.clone() }
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    // ---- reductions ------------------------------------------------------
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Max |x|.
+    pub fn linf(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// RMS over all elements: the paper's ||x|| = sqrt(mean_i x_i^2).
+    pub fn rms(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / self.data.len() as f64)
+            .sqrt() as f32
+    }
+
+    /// Per-row RMS for a [B, d] tensor: the per-sample truncation-error norm.
+    pub fn row_rms(&self) -> Vec<f32> {
+        let (b, d) = (self.rows(), self.cols());
+        (0..b)
+            .map(|i| {
+                let r = self.row(i);
+                (r.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / d as f64).sqrt() as f32
+            })
+            .collect()
+    }
+
+    /// Column means of a [B, d] tensor.
+    pub fn mean_axis0(&self) -> Vec<f32> {
+        let (b, d) = (self.rows(), self.cols());
+        let mut out = vec![0.0f64; d];
+        for i in 0..b {
+            for (j, v) in self.row(i).iter().enumerate() {
+                out[j] += *v as f64;
+            }
+        }
+        out.iter().map(|x| (x / b as f64) as f32).collect()
+    }
+
+    /// Sample covariance (d x d, row-major) of a [B, d] tensor.
+    pub fn covariance(&self) -> Vec<f64> {
+        let (b, d) = (self.rows(), self.cols());
+        let mu: Vec<f64> = self.mean_axis0().iter().map(|&x| x as f64).collect();
+        let mut cov = vec![0.0f64; d * d];
+        for i in 0..b {
+            let r = self.row(i);
+            for p in 0..d {
+                let dp = r[p] as f64 - mu[p];
+                for q in p..d {
+                    let dq = r[q] as f64 - mu[q];
+                    cov[p * d + q] += dp * dq;
+                }
+            }
+        }
+        let denom = (b.max(2) - 1) as f64;
+        for p in 0..d {
+            for q in p..d {
+                cov[p * d + q] /= denom;
+                cov[q * d + p] = cov[p * d + q];
+            }
+        }
+        cov
+    }
+
+    /// Concatenate 2-D tensors along axis 0.
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("concat_rows: empty");
+        }
+        let d = parts[0].cols();
+        let mut data = Vec::new();
+        let mut b = 0;
+        for p in parts {
+            if p.cols() != d {
+                bail!("concat_rows: column mismatch");
+            }
+            data.extend_from_slice(p.data());
+            b += p.rows();
+        }
+        Tensor::new(data, vec![b, d])
+    }
+
+    /// Take a subset of rows.
+    pub fn take_rows(&self, idx: &[usize]) -> Tensor {
+        let d = self.cols();
+        let mut data = Vec::with_capacity(idx.len() * d);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Tensor { data, shape: vec![idx.len(), d] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: &[&[f32]]) -> Tensor {
+        Tensor::from_rows(&rows.iter().map(|r| r.to_vec()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn construction_and_shape_checks() {
+        assert!(Tensor::new(vec![1.0, 2.0], vec![3]).is_err());
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = t2(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = t2(&[&[0.5, 0.5], &[1.0, 1.0]]);
+        assert_eq!(a.add(&b).unwrap().data(), &[1.5, 2.5, 4.0, 5.0]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[0.5, 1.5, 2.0, 3.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0, 8.0]);
+        let mut c = a.clone();
+        c.axpy(2.0, &b).unwrap();
+        assert_eq!(c.data(), &[2.0, 3.0, 5.0, 6.0]);
+        let mut d = a.clone();
+        d.scale_axpy(0.5, 1.0, &b).unwrap();
+        assert_eq!(d.data(), &[1.0, 1.5, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[4]);
+        assert!(a.add(&b).is_err());
+    }
+
+    #[test]
+    fn rms_matches_paper_norm() {
+        // ||x|| = sqrt(1/d sum x_i^2): for [3, 4] -> sqrt((9+16)/2)
+        let t = Tensor::new(vec![3.0, 4.0], vec![1, 2]).unwrap();
+        assert!((t.rms() - (12.5f32).sqrt()).abs() < 1e-6);
+        assert_eq!(t.row_rms().len(), 1);
+    }
+
+    #[test]
+    fn mean_and_covariance() {
+        let t = t2(&[&[1.0, 0.0], &[3.0, 0.0], &[2.0, 6.0], &[2.0, -6.0]]);
+        assert_eq!(t.mean_axis0(), vec![2.0, 0.0]);
+        let cov = t.covariance();
+        // var(x) = (1+1+0+0)/3, var(y) = 72/3 = 24, cov = 0
+        assert!((cov[0] - 2.0 / 3.0).abs() < 1e-9);
+        assert!((cov[3] - 24.0).abs() < 1e-9);
+        assert!(cov[1].abs() < 1e-9);
+    }
+
+    #[test]
+    fn concat_and_take_rows() {
+        let a = t2(&[&[1.0, 2.0]]);
+        let b = t2(&[&[3.0, 4.0], &[5.0, 6.0]]);
+        let c = Tensor::concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(c.rows(), 3);
+        let sub = c.take_rows(&[2, 0]);
+        assert_eq!(sub.data(), &[5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn reshape_checks_size() {
+        let t = Tensor::zeros(&[4]);
+        assert!(t.clone().reshape(&[2, 2]).is_ok());
+        assert!(t.reshape(&[3]).is_err());
+    }
+}

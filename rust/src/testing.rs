@@ -1,0 +1,51 @@
+//! In-tree property-testing harness (no external proptest dependency —
+//! builds are fully offline). `forall` drives a deterministic RNG through N
+//! cases and reports the first failing seed so failures reproduce exactly.
+
+use crate::util::Rng;
+
+/// Run `check(rng, case_index)` for `cases` seeds; panic with the failing
+/// seed on first failure. `check` should panic/assert on violation.
+pub fn forall(name: &str, cases: usize, check: impl Fn(&mut Rng, usize)) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random vector helpers for property bodies.
+pub fn vec_normal(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0usize;
+        // interior mutability via a cell to count calls
+        let cell = std::cell::Cell::new(0usize);
+        forall("counts", 10, |_rng, _i| {
+            cell.set(cell.get() + 1);
+        });
+        count += cell.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall("fails", 5, |rng, _| {
+            assert!(rng.uniform() < 0.0, "always fails");
+        });
+    }
+}

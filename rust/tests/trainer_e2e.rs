@@ -1,0 +1,92 @@
+//! Integration: end-to-end Bespoke training through the AOT'd loss-grad
+//! executable — the full Algorithm 2 loop on real artifacts.
+
+use bespoke_flow::bespoke;
+use bespoke_flow::config::TrainConfig;
+use bespoke_flow::eval::rmse;
+use bespoke_flow::models::{VelocityModel, Zoo};
+use bespoke_flow::runtime::Executable;
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{BespokeSolver, Dopri5, Sampler};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+fn quick_cfg(iters: usize) -> TrainConfig {
+    TrainConfig {
+        iters,
+        pool_batches: 2,
+        val_batches: 1,
+        val_every: 25,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn training_beats_identity_baseline() {
+    let zoo = Zoo::open_default().expect("run `make artifacts`");
+    let model = zoo.hlo("checker2-ot").unwrap();
+    let lg = zoo.manifest().lossgrad("checker2-ot", "rk2", 4).unwrap();
+    let exe = Executable::load(&zoo.manifest().path(&lg.file)).unwrap();
+    let out = bespoke::train(&model, &exe, Base::Rk2, 4, &quick_cfg(120)).unwrap();
+
+    // fresh-noise comparison vs the plain base solver (= identity theta)
+    let mut rng = Rng::new(55);
+    let x0 = Tensor::new(
+        rng.normal_vec(model.batch() * model.dim()),
+        vec![model.batch(), model.dim()],
+    )
+    .unwrap();
+    let gt = Dopri5::default().sample(model.as_ref(), &x0).unwrap();
+    let id = BespokeSolver::new(&RawTheta::identity(Base::Rk2, 4))
+        .sample(model.as_ref(), &x0)
+        .unwrap();
+    let bes = BespokeSolver::new(&out.best).sample(model.as_ref(), &x0).unwrap();
+    let (e_id, e_bes) = (rmse(&id, &gt), rmse(&bes, &gt));
+    assert!(
+        e_bes < e_id * 0.85,
+        "trained theta should clearly beat identity: id={e_id} bespoke={e_bes}"
+    );
+    // loss decreased over training
+    let first = out.history.first().unwrap().loss;
+    let last = out.history.last().unwrap().loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn ablation_masks_freeze_their_blocks() {
+    let zoo = Zoo::open_default().unwrap();
+    let model = zoo.hlo("checker2-ot").unwrap();
+    let lg = zoo.manifest().lossgrad("checker2-ot", "rk2", 4).unwrap();
+    let exe = Executable::load(&zoo.manifest().path(&lg.file)).unwrap();
+
+    let cfg = TrainConfig { ablation: "time-only".into(), ..quick_cfg(30) };
+    let out = bespoke::train(&model, &exe, Base::Rk2, 4, &cfg).unwrap();
+    let ident = RawTheta::identity(Base::Rk2, 4);
+    let p = ident.raw.len();
+    // scale blocks (second half) must still be at their identity values
+    assert_eq!(&out.last.raw[p / 2..], &ident.raw[p / 2..], "scale block moved");
+    // time blocks must have moved
+    assert_ne!(&out.last.raw[..p / 2], &ident.raw[..p / 2], "time block frozen");
+
+    let cfg = TrainConfig { ablation: "scale-only".into(), ..quick_cfg(30) };
+    let out = bespoke::train(&model, &exe, Base::Rk2, 4, &cfg).unwrap();
+    assert_eq!(&out.last.raw[..p / 2], &ident.raw[..p / 2], "time block moved");
+    assert_ne!(&out.last.raw[p / 2..], &ident.raw[p / 2..], "scale block frozen");
+}
+
+#[test]
+fn gt_pool_refresh_paths_work() {
+    let zoo = Zoo::open_default().unwrap();
+    let model = zoo.hlo("checker2-ot").unwrap();
+    let lg = zoo.manifest().lossgrad("checker2-ot", "rk2", 4).unwrap();
+    let exe = Executable::load(&zoo.manifest().path(&lg.file)).unwrap();
+    // paper-naive scheme: 1 pool batch refreshed every iteration
+    let cfg = TrainConfig {
+        pool_batches: 1,
+        refresh_every: 1,
+        ..quick_cfg(10)
+    };
+    let out = bespoke::train(&model, &exe, Base::Rk2, 4, &cfg).unwrap();
+    assert!(out.history.len() == 10);
+    assert!(out.gt_nfe > 10 * 50, "refresh-every-iter must re-solve GT paths");
+}
