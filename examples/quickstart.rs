@@ -7,7 +7,7 @@
 use bespoke_flow::eval::{frechet_distance, rmse};
 use bespoke_flow::models::{VelocityModel, Zoo};
 use bespoke_flow::solvers::theta::{Base, RawTheta};
-use bespoke_flow::solvers::{make_sampler, BespokeSolver, Dopri5, Sampler};
+use bespoke_flow::solvers::{BespokeSolver, Dopri5, Sampler, SolverSpec};
 use bespoke_flow::tensor::Tensor;
 use bespoke_flow::util::Rng;
 use bespoke_flow::Result;
@@ -24,15 +24,33 @@ fn main() -> Result<()> {
     let x0 = Tensor::new(rng.normal_vec(b * d), vec![b, d])?;
     let gt = Dopri5::default().sample(model.as_ref(), &x0)?;
 
-    // 3. A plain RK2 baseline at 16 NFE, via the solver registry.
+    // 3. A plain RK2 baseline at 16 NFE, via a typed solver spec. Specs
+    //    parse strictly, Display canonically, and round-trip through JSON.
     let sched = zoo.scheduler("checker2-ot")?;
-    let rk2 = make_sampler("rk2:n=8", sched)?;
+    let spec = SolverSpec::parse("rk2:n=8")?;
+    let rk2 = spec.build(sched)?;
     let approx = rk2.sample(model.as_ref(), &x0)?;
     println!(
-        "rk2:n=8      ({} NFE): RMSE vs GT = {:.5}",
+        "{spec}      ({} NFE): RMSE vs GT = {:.5}",
         rk2.nfe(),
         rmse(&approx, &gt)
     );
+
+    // 3b. The same solve, step by step: `begin` opens a SolveSession that
+    //     exposes the intermediate state after every Algorithm-1 step —
+    //     this is what the server's `sample_traj` command streams.
+    let mut session = rk2.begin(&x0)?;
+    while !session.is_done() {
+        let info = session.step(model.as_ref())?;
+        println!(
+            "  step {}/{}  t={:.3}  RMSE vs GT so far = {:.5}",
+            info.step + 1,
+            session.steps_total().unwrap_or(0),
+            info.t,
+            rmse(session.state(), &gt)
+        );
+    }
+    assert_eq!(session.state().data(), approx.data(), "step-wise == one-shot");
 
     // 4. A Bespoke solver: use a trained checkpoint when present, otherwise
     //    show the identity-theta consistency anchor (== plain RK2).

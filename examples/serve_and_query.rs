@@ -82,6 +82,35 @@ fn main() -> Result<()> {
         all.quantile(0.99),
         all.mean()
     );
+    // --- streaming trajectory ---------------------------------------------
+    // The sample_traj command emits one JSONL event per solver step with the
+    // intermediate states, then a final "done" summary line.
+    {
+        let stream = TcpStream::connect(addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        writer.write_all(
+            b"{\"cmd\":\"sample_traj\",\"model\":\"checker2-ot\",\"solver\":\"rk2:n=5\",\
+              \"n_samples\":2,\"seed\":1,\"every\":2}\n",
+        )?;
+        writer.flush()?;
+        let mut events = 0usize;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let v = Value::parse(&line)?;
+            assert!(v.get("ok")?.as_bool()?, "server error: {line}");
+            if v.get("event")?.as_str()? == "done" {
+                println!(
+                    "sample_traj: {events} step events streamed, nfe={}",
+                    v.get("nfe")?.as_usize()?
+                );
+                break;
+            }
+            events += 1;
+        }
+    }
+
     println!("--- server metrics ---");
     println!("{}", metrics.snapshot().to_string_pretty());
     Ok(())

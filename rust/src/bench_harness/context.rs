@@ -13,7 +13,7 @@ use crate::eval::{evaluate_sampler, SamplerReport};
 use crate::models::{HloModel, VelocityModel, Zoo};
 use crate::runtime::Executable;
 use crate::solvers::theta::{Base, RawTheta};
-use crate::solvers::{make_sampler, BespokeSolver, Dopri5, Sampler};
+use crate::solvers::{BespokeSolver, Dopri5, Sampler, SolverSpec};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use crate::log_info;
@@ -99,8 +99,13 @@ impl ExpContext {
 
     /// Evaluate a sampler spec (registry string) on a model.
     pub fn eval_spec(&mut self, model: &str, spec: &str) -> Result<SamplerReport> {
+        self.eval_solver_spec(model, &SolverSpec::parse(spec)?)
+    }
+
+    /// Evaluate a typed solver spec on a model.
+    pub fn eval_solver_spec(&mut self, model: &str, spec: &SolverSpec) -> Result<SamplerReport> {
         let sched = self.zoo.scheduler(model)?;
-        let sampler = make_sampler(spec, sched)?;
+        let sampler = spec.build(sched)?;
         self.eval_sampler(model, sampler.as_ref())
     }
 

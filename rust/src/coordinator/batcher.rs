@@ -10,11 +10,11 @@ use anyhow::{bail, Result};
 
 use super::metrics::Metrics;
 use crate::config::ServeConfig;
+use crate::log_info;
 use crate::models::{CountingModel, VelocityModel, Zoo};
-use crate::solvers::make_sampler;
+use crate::solvers::SolverSpec;
 use crate::tensor::Tensor;
 use crate::util::Rng;
-use crate::log_info;
 
 #[derive(Clone, Debug)]
 pub struct SampleRequest {
@@ -23,6 +23,33 @@ pub struct SampleRequest {
     pub n_samples: usize,
     pub seed: u64,
     pub return_samples: bool,
+}
+
+/// A step-streamed trajectory request (see [`Coordinator::sample_traj`]).
+#[derive(Clone, Debug)]
+pub struct TrajRequest {
+    pub model: String,
+    pub solver: String,
+    pub n_samples: usize,
+    pub seed: u64,
+    /// Emit every k-th step (k >= 1; the final step is always emitted).
+    pub every: usize,
+}
+
+/// One emitted trajectory event: the solver state after a step.
+#[derive(Clone, Debug)]
+pub struct TrajStep {
+    /// 0-based index of the completed solver step.
+    pub step: usize,
+    /// Total steps when known in advance (fixed-grid solvers).
+    pub steps_total: Option<usize>,
+    /// Integration time reached (solver-native axis).
+    pub t: f32,
+    /// Cumulative model evaluations so far.
+    pub nfe_total: u64,
+    pub done: bool,
+    /// Per-sample state rows at this step.
+    pub samples: Vec<Vec<f32>>,
 }
 
 #[derive(Clone, Debug)]
@@ -74,6 +101,14 @@ impl Coordinator {
         &self.zoo
     }
 
+    /// Rows per request chunk for a model batch size. This is the RNG-stream
+    /// unit: `submit` forks one noise stream per chunk, and `sample_traj`
+    /// mirrors the same layout so a given seed yields bit-identical samples
+    /// from both paths.
+    fn chunk_rows(&self, model_batch: usize) -> usize {
+        self.cfg.max_batch.min(model_batch).max(1)
+    }
+
     /// Blocking submit: routes, batches, executes, gathers.
     pub fn submit(&self, req: &SampleRequest) -> Result<SampleResponse> {
         let started = Instant::now();
@@ -81,7 +116,7 @@ impl Coordinator {
         let sender = self.route(&key, &req.model, &req.solver)?;
 
         let model_batch = self.zoo.manifest().model(&req.model)?.batch;
-        let chunk_rows = self.cfg.max_batch.min(model_batch).max(1);
+        let chunk_rows = self.chunk_rows(model_batch);
 
         // Split the request into chunks and fan out to the worker.
         let mut pending = Vec::new();
@@ -133,6 +168,91 @@ impl Coordinator {
         })
     }
 
+    /// Step-streamed trajectory sampling: drives a [`crate::solvers::SolveSession`]
+    /// on the caller's thread and invokes `on_step` with the intermediate
+    /// state after every `every`-th solver step (and always for the final
+    /// one). Trajectory requests bypass the dynamic batcher — they need
+    /// per-step access to the state, so they run as one dedicated
+    /// fixed-shape launch sequence.
+    pub fn sample_traj(
+        &self,
+        req: &TrajRequest,
+        on_step: &mut dyn FnMut(TrajStep) -> Result<()>,
+    ) -> Result<SampleResponse> {
+        let started = Instant::now();
+        if req.n_samples == 0 {
+            bail!("n_samples must be positive");
+        }
+        let spec = SolverSpec::parse(&req.solver)?;
+        let hlo = self.zoo.hlo(&req.model)?;
+        let sched = self.zoo.scheduler(&req.model)?;
+        let sampler = spec.build(sched)?;
+        let (b, d) = (hlo.batch(), hlo.dim());
+        if req.n_samples > b {
+            bail!(
+                "trajectory requests are unbatched: n_samples {} exceeds the \
+                 model batch {b} (split the request client-side)",
+                req.n_samples
+            );
+        }
+        let every = req.every.max(1);
+
+        // Noise rows for this request; padding rows are zero (discarded).
+        // Mirror submit()'s per-chunk RNG streams so the same seed yields
+        // bit-identical samples from `sample` and `sample_traj`.
+        let chunk_rows = self.chunk_rows(b);
+        let mut data = vec![0.0f32; b * d];
+        let mut root_rng = Rng::new(req.seed);
+        let mut offset = 0usize;
+        let mut chunk_idx = 0u64;
+        while offset < req.n_samples {
+            let cnt = (req.n_samples - offset).min(chunk_rows);
+            let mut rng = root_rng.fork(chunk_idx);
+            rng.fill_normal(&mut data[offset * d..(offset + cnt) * d]);
+            offset += cnt;
+            chunk_idx += 1;
+        }
+        let x0 = Tensor::new(data, vec![b, d])?;
+
+        let counting = CountingModel::new(hlo.as_ref() as &dyn VelocityModel);
+        let mut session = sampler.begin(&x0)?;
+        let steps_total = session.steps_total();
+        let mut samples = Vec::new();
+        while !session.is_done() {
+            let info = session.step(&counting)?;
+            if info.done || info.step % every == 0 {
+                let rows: Vec<Vec<f32>> = (0..req.n_samples)
+                    .map(|r| session.state().row(r).to_vec())
+                    .collect();
+                if info.done {
+                    samples = rows.clone();
+                }
+                on_step(TrajStep {
+                    step: info.step,
+                    steps_total,
+                    t: info.t,
+                    nfe_total: counting.nfe(),
+                    done: info.done,
+                    samples: rows,
+                })?;
+            }
+        }
+        let nfe = counting.nfe();
+        let latency_ms = started.elapsed().as_secs_f64() * 1e3;
+        let key = format!("{}/{}", req.model, req.solver);
+        self.metrics.record_batch(&key, req.n_samples, b, nfe);
+        self.metrics
+            .record_request(&key, req.n_samples, latency_ms, 0.0);
+        Ok(SampleResponse {
+            n_samples: req.n_samples,
+            samples: Some(samples),
+            nfe,
+            batches: 1,
+            queue_ms: 0.0,
+            latency_ms,
+        })
+    }
+
     /// Get (or lazily spawn) the worker for a (model, solver) route.
     fn route(&self, key: &str, model: &str, solver: &str) -> Result<Sender<Job>> {
         if let Some(s) = self.routes.lock().unwrap().get(key) {
@@ -141,7 +261,7 @@ impl Coordinator {
         // Validate + load outside the lock (compilation can take a moment).
         let hlo = self.zoo.hlo(model)?;
         let sched = self.zoo.scheduler(model)?;
-        let sampler = make_sampler(solver, sched)?;
+        let sampler = SolverSpec::parse(solver)?.build(sched)?;
         if hlo.dim() == 0 {
             bail!("model {model} has zero dim");
         }

@@ -17,12 +17,15 @@
 //!   PJRT CPU client is shared and thread-safe.
 //! * Every response carries NFE + queue/latency breakdowns; `metrics`
 //!   aggregates p50/p99 latency, throughput, and batch-fill factor.
+//! * Trajectory requests (`sample_traj`) drive a step-wise
+//!   [`crate::solvers::SolveSession`] and stream one event per solver step
+//!   — intermediate states, per-step progress, cumulative NFE.
 
 pub mod batcher;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 
-pub use batcher::{Coordinator, SampleRequest, SampleResponse};
+pub use batcher::{Coordinator, SampleRequest, SampleResponse, TrajRequest, TrajStep};
 pub use metrics::Metrics;
 pub use server::serve;

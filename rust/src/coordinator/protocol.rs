@@ -4,21 +4,29 @@
 //! ```json
 //! {"cmd": "sample", "model": "checker2-ot", "solver": "rk2:n=8",
 //!  "n_samples": 64, "seed": 7, "return_samples": true}
+//! {"cmd": "sample_traj", "model": "checker2-ot", "solver": "rk2:n=8",
+//!  "n_samples": 4, "seed": 7, "every": 2}
 //! {"cmd": "metrics"}
 //! {"cmd": "list"}
 //! {"cmd": "ping"}
 //! ```
 //!
 //! Response: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
+//!
+//! `sample_traj` is the streaming command: the server emits one
+//! `{"ok": true, "event": "step", ...}` line per solver step (subsampled by
+//! `every`) with the intermediate states, then a final
+//! `{"ok": true, "event": "done", ...}` summary line.
 
 use anyhow::{bail, Result};
 
-use super::batcher::{SampleRequest, SampleResponse};
+use super::batcher::{SampleRequest, SampleResponse, TrajRequest, TrajStep};
 use crate::json::Value;
 
 #[derive(Debug)]
 pub enum Command {
     Sample(SampleRequest),
+    SampleTraj(TrajRequest),
     Metrics,
     List,
     Ping,
@@ -44,11 +52,59 @@ pub fn parse_command(line: &str) -> Result<Command> {
             }
             Ok(Command::Sample(req))
         }
+        "sample_traj" => {
+            let req = TrajRequest {
+                model: v.get("model")?.as_str()?.to_string(),
+                solver: v.get("solver")?.as_str()?.to_string(),
+                n_samples: v.get("n_samples")?.as_usize()?,
+                seed: v.get_opt("seed").map(|s| s.as_usize()).transpose()?.unwrap_or(0) as u64,
+                every: v.get_opt("every").map(|s| s.as_usize()).transpose()?.unwrap_or(1),
+            };
+            if req.n_samples == 0 {
+                bail!("n_samples must be positive");
+            }
+            if req.every == 0 {
+                bail!("every must be >= 1");
+            }
+            Ok(Command::SampleTraj(req))
+        }
         "metrics" => Ok(Command::Metrics),
         "list" => Ok(Command::List),
         "ping" => Ok(Command::Ping),
         other => bail!("unknown cmd {other:?}"),
     }
+}
+
+/// One streamed `sample_traj` step event.
+pub fn traj_step_json(s: &TrajStep) -> Value {
+    let mut fields = vec![
+        ("ok", Value::Bool(true)),
+        ("event", Value::Str("step".into())),
+        ("step", Value::Num(s.step as f64)),
+        ("t", Value::Num(s.t as f64)),
+        ("nfe", Value::Num(s.nfe_total as f64)),
+        ("done", Value::Bool(s.done)),
+        (
+            "samples",
+            Value::Arr(s.samples.iter().map(|row| Value::from_f32s(row)).collect()),
+        ),
+    ];
+    if let Some(total) = s.steps_total {
+        fields.push(("steps_total", Value::Num(total as f64)));
+    }
+    Value::obj(fields)
+}
+
+/// The final `sample_traj` summary line (no sample payload; the last step
+/// event already carried the final states).
+pub fn traj_done_json(resp: &SampleResponse) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("event", Value::Str("done".into())),
+        ("n_samples", Value::Num(resp.n_samples as f64)),
+        ("nfe", Value::Num(resp.nfe as f64)),
+        ("latency_ms", Value::Num(resp.latency_ms)),
+    ])
 }
 
 pub fn response_to_json(resp: &SampleResponse) -> Value {
@@ -102,6 +158,51 @@ mod tests {
             r#"{"cmd":"sample","model":"m","solver":"s","n_samples":0}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_sample_traj_command() {
+        let c = parse_command(
+            r#"{"cmd":"sample_traj","model":"m","solver":"rk2:n=4","n_samples":2,"every":2}"#,
+        )
+        .unwrap();
+        match c {
+            Command::SampleTraj(r) => {
+                assert_eq!(r.model, "m");
+                assert_eq!(r.n_samples, 2);
+                assert_eq!(r.every, 2);
+                assert_eq!(r.seed, 0);
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse_command(
+            r#"{"cmd":"sample_traj","model":"m","solver":"s","n_samples":0}"#
+        )
+        .is_err());
+        assert!(parse_command(
+            r#"{"cmd":"sample_traj","model":"m","solver":"s","n_samples":1,"every":0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn traj_events_serialize() {
+        let step = TrajStep {
+            step: 3,
+            steps_total: Some(8),
+            t: 0.5,
+            nfe_total: 8,
+            done: false,
+            samples: vec![vec![1.0, 2.0]],
+        };
+        let v = traj_step_json(&step);
+        assert_eq!(v.get("event").unwrap().as_str().unwrap(), "step");
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.get("steps_total").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(v.get("samples").unwrap().as_arr().unwrap().len(), 1);
+        // round-trips through the JSON writer/parser
+        let back = Value::parse(&v.to_string_compact()).unwrap();
+        assert!(!back.get("done").unwrap().as_bool().unwrap());
     }
 
     #[test]

@@ -8,7 +8,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::batcher::Coordinator;
-use super::protocol::{error_json, parse_command, response_to_json, Command};
+use super::protocol::{
+    error_json, parse_command, response_to_json, traj_done_json, traj_step_json, Command,
+};
 use crate::json::Value;
 use crate::log_info;
 
@@ -36,6 +38,13 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
     Ok(())
 }
 
+fn write_event<W: Write>(writer: &mut W, v: &Value) -> Result<()> {
+    writer.write_all(v.to_string_compact().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
 pub fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -45,19 +54,31 @@ pub fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(&coord, &line);
-        writer.write_all(reply.to_string_compact().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        match parse_command(&line) {
+            // The streaming command writes multiple lines per request; all
+            // other commands reply with exactly one line.
+            Ok(Command::SampleTraj(req)) => {
+                let result = coord.sample_traj(&req, &mut |step| {
+                    write_event(&mut writer, &traj_step_json(&step))
+                });
+                match result {
+                    Ok(resp) => write_event(&mut writer, &traj_done_json(&resp))?,
+                    Err(e) => write_event(&mut writer, &error_json(&format!("{e:#}")))?,
+                }
+            }
+            Ok(cmd) => write_event(&mut writer, &dispatch(&coord, cmd))?,
+            Err(e) => write_event(&mut writer, &error_json(&format!("bad request: {e:#}")))?,
+        }
     }
     log_info!("peer {peer:?} disconnected");
     Ok(())
 }
 
-pub fn handle_line(coord: &Coordinator, line: &str) -> Value {
-    match parse_command(line) {
-        Ok(Command::Ping) => Value::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]),
-        Ok(Command::List) => {
+/// Execute a single-response command.
+fn dispatch(coord: &Coordinator, cmd: Command) -> Value {
+    match cmd {
+        Command::Ping => Value::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]),
+        Command::List => {
             let names = coord
                 .zoo()
                 .model_names()
@@ -66,11 +87,23 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> Value {
                 .collect();
             Value::obj(vec![("ok", Value::Bool(true)), ("models", Value::Arr(names))])
         }
-        Ok(Command::Metrics) => coord.metrics.snapshot(),
-        Ok(Command::Sample(req)) => match coord.submit(&req) {
+        Command::Metrics => coord.metrics.snapshot(),
+        Command::Sample(req) => match coord.submit(&req) {
             Ok(resp) => response_to_json(&resp),
             Err(e) => error_json(&format!("{e:#}")),
         },
+        Command::SampleTraj(_) => {
+            error_json("sample_traj is a streaming command; it is handled per-connection")
+        }
+    }
+}
+
+/// One-line-in, one-value-out handler (used by tests and non-streaming
+/// embedders; the TCP loop handles `sample_traj` separately so it can
+/// stream multiple event lines).
+pub fn handle_line(coord: &Coordinator, line: &str) -> Value {
+    match parse_command(line) {
+        Ok(cmd) => dispatch(coord, cmd),
         Err(e) => error_json(&format!("bad request: {e:#}")),
     }
 }

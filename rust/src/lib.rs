@@ -7,10 +7,12 @@
 //! python/JAX authors the flow models and the differentiable Bespoke loss and
 //! AOT-lowers them to HLO text (`make artifacts`); this crate loads those
 //! artifacts through PJRT (`runtime`), implements the full numerical-solver
-//! library including the learned Bespoke solvers (`solvers`), owns the
+//! library including the learned Bespoke solvers (`solvers` — typed
+//! `SolverSpec` configs plus step-wise `SolveSession` execution), owns the
 //! Bespoke training loop (`bespoke`), serves samples through a batching
-//! coordinator (`coordinator`), and regenerates every table and figure of the
-//! paper's evaluation (`bench_harness`).
+//! coordinator (`coordinator`, with step-streamed trajectories via
+//! `sample_traj`), and regenerates every table and figure of the paper's
+//! evaluation (`bench_harness`).
 //!
 //! Python never runs on the request path: after `make artifacts` the binary
 //! is self-contained.

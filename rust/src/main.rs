@@ -17,10 +17,11 @@ use std::sync::Arc;
 
 use bespoke_flow::bench_harness::{self, ExpContext};
 use bespoke_flow::config::Config;
-use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest};
+use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, TrajRequest};
 use bespoke_flow::models::Zoo;
 use bespoke_flow::runtime::{Executable, Manifest};
 use bespoke_flow::solvers::theta::Base;
+use bespoke_flow::solvers::SolverSpec;
 use bespoke_flow::{bail, Context, Result};
 
 fn main() {
@@ -36,6 +37,9 @@ struct Args {
     flags: BTreeMap<String, String>,
 }
 
+/// Flags that take no value (presence == true).
+const BOOL_FLAGS: &[&str] = &["traj"];
+
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
@@ -43,6 +47,10 @@ fn parse_args() -> Result<Args> {
     let mut flags = BTreeMap::new();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
+            if BOOL_FLAGS.contains(&name) {
+                flags.insert(name.to_string(), "true".to_string());
+                continue;
+            }
             let val = it.next().with_context(|| format!("flag --{name} needs a value"))?;
             flags.insert(name.to_string(), val);
         } else {
@@ -112,35 +120,85 @@ fn run() -> Result<()> {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
             let coord = Coordinator::new(zoo, cfg.serve.clone());
+            let model = args.flags.get("model").context("--model required")?.clone();
+            // Validate + canonicalize the spec up front: typos fail here
+            // with a parse error, not deep inside a worker thread.
+            let spec = SolverSpec::parse(
+                args.flags.get("solver").map(String::as_str).unwrap_or("rk2:n=8"),
+            )?;
+            let n_samples = args
+                .flags
+                .get("n")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(16);
+            let seed = args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+
+            if args.flags.contains_key("traj") {
+                // Step-streamed sampling: print one progress line per step.
+                let req = TrajRequest {
+                    model,
+                    solver: spec.to_string(),
+                    n_samples,
+                    seed,
+                    every: args
+                        .flags
+                        .get("every")
+                        .map(|s| s.parse())
+                        .transpose()
+                        .context("bad --every")?
+                        .unwrap_or(1),
+                };
+                let resp = coord.sample_traj(&req, &mut |step| {
+                    let total = step
+                        .steps_total
+                        .map(|n| format!("/{n}"))
+                        .unwrap_or_default();
+                    println!(
+                        "step {}{total}  t={:.4}  nfe={}  x[0]={:?}",
+                        step.step,
+                        step.t,
+                        step.nfe_total,
+                        step.samples.first().map(|r| r.as_slice()).unwrap_or(&[]),
+                    );
+                    Ok(())
+                })?;
+                if let Some(out) = args.flags.get("out") {
+                    let rows: Vec<bespoke_flow::json::Value> = resp
+                        .samples
+                        .as_ref()
+                        .context("trajectory response carried no samples")?
+                        .iter()
+                        .map(|r| bespoke_flow::json::Value::from_f32s(r))
+                        .collect();
+                    std::fs::write(out, bespoke_flow::json::Value::Arr(rows).to_string_pretty())?;
+                    println!("wrote {} samples to {out}", resp.n_samples);
+                }
+                println!("nfe={} latency={:.1}ms", resp.nfe, resp.latency_ms);
+                return Ok(());
+            }
+
             let req = SampleRequest {
-                model: args.flags.get("model").context("--model required")?.clone(),
-                solver: args
-                    .flags
-                    .get("solver")
-                    .cloned()
-                    .unwrap_or_else(|| "rk2:n=8".to_string()),
-                n_samples: args
-                    .flags
-                    .get("n")
-                    .map(|s| s.parse())
-                    .transpose()?
-                    .unwrap_or(16),
-                seed: args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0),
+                model,
+                solver: spec.to_string(),
+                n_samples,
+                seed,
                 return_samples: true,
             };
             let resp = coord.submit(&req)?;
+            let samples = resp
+                .samples
+                .as_ref()
+                .context("coordinator response carried no samples")?;
             if let Some(out) = args.flags.get("out") {
-                let rows: Vec<bespoke_flow::json::Value> = resp
-                    .samples
-                    .as_ref()
-                    .unwrap()
+                let rows: Vec<bespoke_flow::json::Value> = samples
                     .iter()
                     .map(|r| bespoke_flow::json::Value::from_f32s(r))
                     .collect();
                 std::fs::write(out, bespoke_flow::json::Value::Arr(rows).to_string_pretty())?;
                 println!("wrote {} samples to {out}", resp.n_samples);
             } else {
-                for row in resp.samples.as_ref().unwrap().iter().take(4) {
+                for row in samples.iter().take(4) {
                     println!("{row:?}");
                 }
                 if resp.n_samples > 4 {
@@ -190,13 +248,11 @@ fn run() -> Result<()> {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
             let model = args.flags.get("model").context("--model required")?.clone();
-            let solver = args
-                .flags
-                .get("solver")
-                .cloned()
-                .unwrap_or_else(|| "rk2:n=8".to_string());
+            let spec = SolverSpec::parse(
+                args.flags.get("solver").map(String::as_str).unwrap_or("rk2:n=8"),
+            )?;
             let mut ctx = ExpContext::new(zoo, cfg)?;
-            let rep = ctx.eval_spec(&model, &solver)?;
+            let rep = ctx.eval_solver_spec(&model, &spec)?;
             println!("{}", rep.to_json().to_string_pretty());
             Ok(())
         }
@@ -232,18 +288,25 @@ COMMANDS:
     list                          show models in the artifact manifest
     sample                        generate samples through the coordinator
         --model M  --solver SPEC  --n N  --seed S  [--out samples.json]
+        [--traj [--every K]]      stream the trajectory step by step
     train-bespoke                 train a Bespoke solver (Algorithm 2)
         --model M  [--base rk1|rk2]  --n STEPS  [--iters I]
         [--ablation full|time-only|scale-only]  [--out theta.json]
     eval                          evaluate a solver spec vs the GT solver
         --model M  --solver SPEC  [--samples N]
     serve                         start the JSONL sampling server
-        [--addr HOST:PORT]
+        [--addr HOST:PORT]        (commands: sample, sample_traj, list,
+                                   metrics, ping — one JSON object per line)
     exp <id>|all                  reproduce a paper table/figure (out/reports/)
 
-SOLVER SPECS:
-    rk1:n=10   rk2:n=5   rk4:n=3   rk2:n=5:grid=edm|logsnr|cosine
-    rk2-target:n=5:sched=vp|edm   dopri5:tol=1e-5
+SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
+    rk1:n=10                      fixed-grid Euler, uniform grid
+    rk2:n=5   rk4:n=3             midpoint / classic RK4
+    rk2:n=5:grid=edm|logsnr|cosine    warped time grids
+    rk1-target:n=5:sched=vp       scheduler-transfer (DDIM/DPM/EDM analog)
+    rk2-target:n=5:sched=vp|edm|ot|cs
+    dopri5:tol=1e-5               adaptive GT solver (tol sets rtol+atol)
+    dopri5:rtol=1e-6:atol=1e-8:max_steps=100000   ...or independently
     bespoke:path=out/thetas/theta_checker2-ot_rk2_n8.json
 
 GLOBAL FLAGS:

@@ -6,7 +6,7 @@
 use anyhow::{bail, Result};
 
 use super::theta::{Base, DecodedTheta, RawTheta};
-use super::Sampler;
+use super::{Sampler, SolveSession, StepInfo};
 use crate::models::VelocityModel;
 use crate::tensor::Tensor;
 
@@ -71,6 +71,50 @@ impl BespokeSolver {
     }
 }
 
+/// Step-wise execution of a [`BespokeSolver`]: one learned scale-time step
+/// per [`SolveSession::step`], identical arithmetic to the one-shot loop.
+pub struct BespokeSession<'a> {
+    solver: &'a BespokeSolver,
+    x: Tensor,
+    i: usize,
+}
+
+impl SolveSession for BespokeSession<'_> {
+    fn init(&mut self, x0: &Tensor) -> Result<()> {
+        self.x = x0.clone();
+        self.i = 0;
+        Ok(())
+    }
+
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
+        if self.is_done() {
+            bail!("session already complete ({} steps)", self.i);
+        }
+        self.x = self.solver.step(model, &self.x, self.i)?;
+        self.i += 1;
+        let th = &self.solver.theta;
+        Ok(StepInfo {
+            step: self.i - 1,
+            // model time reached: the decoded t at integer grid point i
+            t: th.t[th.stride() * self.i],
+            nfe: th.base.evals_per_step(),
+            done: self.is_done(),
+        })
+    }
+
+    fn is_done(&self) -> bool {
+        self.i >= self.solver.theta.n
+    }
+
+    fn state(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn steps_total(&self) -> Option<usize> {
+        Some(self.solver.theta.n)
+    }
+}
+
 impl Sampler for BespokeSolver {
     fn name(&self) -> String {
         self.label.clone()
@@ -80,12 +124,8 @@ impl Sampler for BespokeSolver {
         self.theta.n * self.theta.base.evals_per_step()
     }
 
-    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
-        let mut x = x0.clone();
-        for i in 0..self.theta.n {
-            x = self.step(model, &x, i)?;
-        }
-        Ok(x)
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
+        Ok(Box::new(BespokeSession { solver: self, x: x0.clone(), i: 0 }))
     }
 }
 
@@ -171,5 +211,29 @@ mod tests {
         let bes = BespokeSolver::new(&RawTheta::identity(Base::Rk2, 3));
         let x = Tensor::zeros(&[8, 2]);
         assert!(bes.step(&model, &x, 3).is_err());
+    }
+
+    /// Step-wise session == the explicit step loop, bitwise.
+    #[test]
+    fn session_matches_step_loop_bitwise() {
+        let model = toy();
+        let mut rng = Rng::new(9);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let bes = BespokeSolver::new(&RawTheta::identity(Base::Rk2, 5));
+        let mut x = x0.clone();
+        for i in 0..5 {
+            x = bes.step(&model, &x, i).unwrap();
+        }
+        let one_shot = bes.sample(&model, &x0).unwrap();
+        assert_eq!(one_shot.data(), x.data());
+        let mut sess = bes.begin(&x0).unwrap();
+        assert_eq!(sess.steps_total(), Some(5));
+        let mut nfe = 0usize;
+        while !sess.is_done() {
+            nfe += sess.step(&model).unwrap().nfe;
+        }
+        assert_eq!(sess.state().data(), x.data());
+        assert_eq!(nfe, bes.nfe());
+        assert!(sess.step(&model).is_err());
     }
 }

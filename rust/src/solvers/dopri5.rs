@@ -9,7 +9,7 @@
 
 use anyhow::{bail, Result};
 
-use super::Sampler;
+use super::{Sampler, SolveSession, StepInfo};
 use crate::models::VelocityModel;
 use crate::tensor::Tensor;
 
@@ -143,36 +143,101 @@ impl DenseSolution {
     }
 }
 
-impl Dopri5 {
-    /// Solve dx/dt = f(x, t) from t = 0 to 1, keeping dense output.
-    pub fn solve_dense(
-        &self,
+/// Step-wise execution of [`Dopri5`]: each [`SolveSession::step`] call
+/// produces one *accepted* adaptive step (looping over rejected attempts
+/// internally), optionally recording the dense-output node for it. Both
+/// [`Dopri5::solve_dense`] and the one-shot `Sampler::sample` default drive
+/// this same integrator, so one-shot and step-wise solves are bitwise
+/// identical.
+pub struct Dopri5Session {
+    cfg: Dopri5,
+    /// Record accepted nodes for dense output. Off for the streaming /
+    /// one-shot sampling paths, which only need the running state — a
+    /// tight-tolerance solve would otherwise retain O(steps x B x d)
+    /// dead tensors.
+    record_dense: bool,
+    // accepted dense-output nodes (seeded lazily on the first step, which
+    // is the first time a model is available to evaluate f(x0, 0))
+    ts: Vec<f32>,
+    xs: Vec<Tensor>,
+    fs: Vec<Tensor>,
+    t: f64,
+    h: f64,
+    x: Tensor,
+    /// FSAL derivative f(x, t); `None` until the first step seeds it.
+    k1: Option<Tensor>,
+    /// Accepted steps so far.
+    accepted: usize,
+    /// Attempted (accepted + rejected) steps, for the max_steps guard.
+    attempts: usize,
+    nfe: usize,
+}
+
+impl Dopri5Session {
+    fn new(cfg: Dopri5, x0: &Tensor, record_dense: bool) -> Dopri5Session {
+        Dopri5Session {
+            cfg,
+            record_dense,
+            ts: Vec::new(),
+            xs: Vec::new(),
+            fs: Vec::new(),
+            t: 0.0,
+            h: 0.05, // initial guess; controller adapts fast
+            x: x0.clone(),
+            k1: None,
+            accepted: 0,
+            attempts: 0,
+            nfe: 0,
+        }
+    }
+
+    /// Total model evaluations so far (including rejected attempts).
+    pub fn nfe_so_far(&self) -> usize {
+        self.nfe
+    }
+
+    /// Consume the session into the dense solution over its accepted nodes.
+    /// Call after driving to completion (the endpoint is pinned at t = 1).
+    /// Only meaningful for sessions created by [`Dopri5::solve_dense`],
+    /// which record nodes; plain [`Dopri5::session`] sessions keep none.
+    pub fn into_dense(self) -> DenseSolution {
+        DenseSolution { ts: self.ts, xs: self.xs, fs: self.fs, nfe: self.nfe }
+    }
+
+    /// One accepted step of the adaptive integrator against a generic
+    /// vector field `f(x, t)`.
+    pub fn step_field(
+        &mut self,
         f: &mut dyn FnMut(&Tensor, f32) -> Result<Tensor>,
-        x0: &Tensor,
-    ) -> Result<DenseSolution> {
-        let mut ts = vec![0.0f32];
-        let mut xs = vec![x0.clone()];
-        let mut k1 = f(x0, 0.0)?;
-        let mut fs = vec![k1.clone()];
-        let mut nfe = 1usize;
-
-        let mut t = 0.0f64;
-        let mut h = 0.05f64; // initial guess; controller adapts fast
-        let mut x = x0.clone();
-        let mut steps = 0usize;
-
-        while t < 1.0 {
-            if steps >= self.max_steps {
-                bail!("dopri5: exceeded {} steps (tol too tight?)", self.max_steps);
+    ) -> Result<StepInfo> {
+        if self.is_done() {
+            bail!("session already complete (t = {})", self.t);
+        }
+        let mut nfe_step = 0usize;
+        if self.k1.is_none() {
+            let k1 = f(&self.x, 0.0)?;
+            if self.record_dense {
+                self.ts.push(0.0);
+                self.xs.push(self.x.clone());
+                self.fs.push(k1.clone());
             }
-            steps += 1;
-            h = h.min(1.0 - t);
+            self.k1 = Some(k1);
+            self.nfe += 1;
+            nfe_step += 1;
+        }
+        loop {
+            if self.attempts >= self.cfg.max_steps {
+                bail!("dopri5: exceeded {} steps (tol too tight?)", self.cfg.max_steps);
+            }
+            self.attempts += 1;
+            self.h = self.h.min(1.0 - self.t);
+            let (t, h) = (self.t, self.h);
 
             // stages
             let mut k = Vec::with_capacity(7);
-            k.push(k1.clone()); // FSAL
+            k.push(self.k1.as_ref().unwrap().clone()); // FSAL
             for s in 1..7 {
-                let mut xs_stage = x.clone();
+                let mut xs_stage = self.x.clone();
                 for (j, kj) in k.iter().enumerate() {
                     let a = A[s][j];
                     if a != 0.0 {
@@ -180,12 +245,13 @@ impl Dopri5 {
                     }
                 }
                 k.push(f(&xs_stage, (t + C[s] * h) as f32)?);
-                nfe += 1;
+                self.nfe += 1;
+                nfe_step += 1;
             }
 
             // 5th order solution + embedded error
-            let mut x5 = x.clone();
-            let mut err = Tensor::zeros(x.shape());
+            let mut x5 = self.x.clone();
+            let mut err = Tensor::zeros(self.x.shape());
             for s in 0..7 {
                 if B5[s] != 0.0 {
                     x5.axpy((B5[s] * h) as f32, &k[s])?;
@@ -196,17 +262,18 @@ impl Dopri5 {
                 }
             }
 
-            // scaled error: max over batch of per-sample RMS(err / (atol + rtol max(|x|,|x5|)))
+            // scaled error: max over batch of per-sample
+            // RMS(err / (atol + rtol max(|x|,|x5|)))
             let scale_tol = |a: f32, b: f32| {
-                (self.atol + self.rtol * a.abs().max(b.abs()) as f64) as f32
+                (self.cfg.atol + self.cfg.rtol * a.abs().max(b.abs()) as f64) as f32
             };
             let mut enorm = 0.0f64;
             {
-                let xd = x.data();
+                let xd = self.x.data();
                 let x5d = x5.data();
                 let ed = err.data();
-                let dcols = x.cols();
-                for i in 0..x.rows() {
+                let dcols = self.x.cols();
+                for i in 0..self.x.rows() {
                     let mut acc = 0.0f64;
                     for j in 0..dcols {
                         let idx = i * dcols + j;
@@ -217,14 +284,18 @@ impl Dopri5 {
                 }
             }
 
-            if enorm <= 1.0 {
-                // accept
-                t += h;
-                x = x5;
-                k1 = k.pop().unwrap(); // stage 7 value = f(x5, t+h) (FSAL)
-                ts.push(t as f32);
-                xs.push(x.clone());
-                fs.push(k1.clone());
+            let accepted = enorm <= 1.0;
+            if accepted {
+                self.t += h;
+                self.x = x5;
+                self.accepted += 1;
+                let k1 = k.pop().unwrap(); // stage 7 value = f(x5, t+h) (FSAL)
+                if self.record_dense {
+                    self.ts.push(self.t as f32);
+                    self.xs.push(self.x.clone());
+                    self.fs.push(k1.clone());
+                }
+                self.k1 = Some(k1);
             }
             // PI-free step controller
             let factor = if enorm > 0.0 {
@@ -232,12 +303,64 @@ impl Dopri5 {
             } else {
                 5.0
             };
-            h *= factor;
-            h = h.max(1e-7);
+            self.h *= factor;
+            self.h = self.h.max(1e-7);
+
+            if accepted {
+                if self.is_done() && self.record_dense {
+                    // pin the endpoint exactly
+                    *self.ts.last_mut().unwrap() = 1.0;
+                }
+                return Ok(StepInfo {
+                    step: self.accepted - 1,
+                    t: if self.is_done() { 1.0 } else { self.t as f32 },
+                    nfe: nfe_step,
+                    done: self.is_done(),
+                });
+            }
         }
-        // pin the endpoint exactly
-        *ts.last_mut().unwrap() = 1.0;
-        Ok(DenseSolution { ts, xs, fs, nfe })
+    }
+}
+
+impl SolveSession for Dopri5Session {
+    fn init(&mut self, x0: &Tensor) -> Result<()> {
+        *self = Dopri5Session::new(self.cfg, x0, self.record_dense);
+        Ok(())
+    }
+
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
+        let mut f = |x: &Tensor, t: f32| model.eval(x, t);
+        self.step_field(&mut f)
+    }
+
+    fn is_done(&self) -> bool {
+        self.t >= 1.0
+    }
+
+    fn state(&self) -> &Tensor {
+        &self.x
+    }
+}
+
+impl Dopri5 {
+    /// Open a step-wise session for a generic vector field (also usable via
+    /// the [`SolveSession`] trait for model fields). Keeps only the running
+    /// state; use [`Dopri5::solve_dense`] when dense output is needed.
+    pub fn session(&self, x0: &Tensor) -> Dopri5Session {
+        Dopri5Session::new(*self, x0, false)
+    }
+
+    /// Solve dx/dt = f(x, t) from t = 0 to 1, keeping dense output.
+    pub fn solve_dense(
+        &self,
+        f: &mut dyn FnMut(&Tensor, f32) -> Result<Tensor>,
+        x0: &Tensor,
+    ) -> Result<DenseSolution> {
+        let mut session = Dopri5Session::new(*self, x0, true);
+        while !session.is_done() {
+            session.step_field(f)?;
+        }
+        Ok(session.into_dense())
     }
 
     pub fn solve_model_dense(
@@ -252,15 +375,19 @@ impl Dopri5 {
 
 impl Sampler for Dopri5 {
     fn name(&self) -> String {
-        format!("dopri5:tol={:.0e}", self.rtol)
+        if self.rtol == self.atol {
+            format!("dopri5:tol={:.0e}", self.rtol)
+        } else {
+            format!("dopri5:rtol={:.0e}:atol={:.0e}", self.rtol, self.atol)
+        }
     }
 
     fn nfe(&self) -> usize {
-        0 // adaptive: actual NFE reported per solve via DenseSolution::nfe
+        0 // adaptive: actual NFE reported per solve via StepInfo / DenseSolution
     }
 
-    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
-        Ok(self.solve_model_dense(model, x0)?.final_state().clone())
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
+        Ok(Box::new(self.session(x0)))
     }
 }
 
@@ -318,5 +445,48 @@ mod tests {
         let x0 = Tensor::new(vec![1.0], vec![1, 1]).unwrap();
         let mut f = |x: &Tensor, t: f32| Ok(x.scale((30.0 * t).sin() * 20.0));
         assert!(solver.solve_dense(&mut f, &x0).is_err());
+    }
+
+    /// x' = a x as a VelocityModel, to exercise the SolveSession path.
+    struct Expo;
+    impl crate::models::VelocityModel for Expo {
+        fn name(&self) -> &str {
+            "expo"
+        }
+        fn batch(&self) -> usize {
+            1
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+        fn eval(&self, x: &Tensor, _t: f32) -> Result<Tensor> {
+            Ok(x.scale(-2.5))
+        }
+    }
+
+    #[test]
+    fn session_matches_dense_solve_bitwise() {
+        let m = Expo;
+        let x0 = Tensor::new(vec![1.0, 2.0], vec![1, 2]).unwrap();
+        let solver = Dopri5::default();
+        let dense = solver.solve_model_dense(&m, &x0).unwrap();
+        // one-shot sample() drives a session; must equal the dense path
+        let one_shot = solver.sample(&m, &x0).unwrap();
+        assert_eq!(one_shot.data(), dense.final_state().data());
+        // manual stepping: identical final state and total NFE
+        let mut sess = solver.begin(&x0).unwrap();
+        assert_eq!(sess.steps_total(), None);
+        let mut nfe = 0usize;
+        let mut last_t = 0.0f32;
+        while !sess.is_done() {
+            let info = sess.step(&m).unwrap();
+            assert!(info.t > last_t, "time must advance");
+            last_t = info.t;
+            nfe += info.nfe;
+        }
+        assert_eq!(last_t, 1.0, "endpoint pinned at t = 1");
+        assert_eq!(sess.state().data(), dense.final_state().data());
+        assert_eq!(nfe, dense.nfe);
+        assert!(sess.step(&m).is_err());
     }
 }

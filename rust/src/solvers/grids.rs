@@ -11,6 +11,46 @@ use anyhow::{bail, Result};
 
 use crate::schedulers::{edm_sigma, Scheduler};
 
+/// The warped-grid family, as a typed enum (see [`super::spec::SolverSpec`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    Uniform,
+    Edm,
+    Cosine,
+    LogSnr,
+}
+
+impl GridKind {
+    pub fn parse(name: &str) -> Result<GridKind> {
+        Ok(match name {
+            "uniform" => GridKind::Uniform,
+            "edm" => GridKind::Edm,
+            "cosine" => GridKind::Cosine,
+            "logsnr" => GridKind::LogSnr,
+            _ => bail!("unknown grid {name:?} (uniform|edm|cosine|logsnr)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridKind::Uniform => "uniform",
+            GridKind::Edm => "edm",
+            GridKind::Cosine => "cosine",
+            GridKind::LogSnr => "logsnr",
+        }
+    }
+
+    /// Materialize the n-step grid (n+1 times in [0, 1]).
+    pub fn build(&self, n: usize, sched: Scheduler) -> Vec<f32> {
+        match self {
+            GridKind::Uniform => uniform(n),
+            GridKind::Edm => edm(n, sched),
+            GridKind::Cosine => cosine(n),
+            GridKind::LogSnr => log_snr(n, sched),
+        }
+    }
+}
+
 /// Uniform grid t_i = i / n.
 pub fn uniform(n: usize) -> Vec<f32> {
     (0..=n).map(|i| i as f32 / n as f32).collect()
@@ -62,15 +102,9 @@ pub fn log_snr(n: usize, sched: Scheduler) -> Vec<f32> {
     g
 }
 
-/// Parse a grid spec name.
+/// Parse a grid spec name and materialize it.
 pub fn make(name: &str, n: usize, sched: Scheduler) -> Result<Vec<f32>> {
-    Ok(match name {
-        "uniform" => uniform(n),
-        "edm" => edm(n, sched),
-        "cosine" => cosine(n),
-        "logsnr" => log_snr(n, sched),
-        _ => bail!("unknown grid {name:?} (uniform|edm|cosine|logsnr)"),
-    })
+    Ok(GridKind::parse(name)?.build(n, sched))
 }
 
 #[cfg(test)]
@@ -109,5 +143,13 @@ mod tests {
     #[test]
     fn unknown_grid_rejected() {
         assert!(make("nope", 4, Scheduler::CondOt).is_err());
+        assert!(GridKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn grid_kind_name_roundtrip() {
+        for k in [GridKind::Uniform, GridKind::Edm, GridKind::Cosine, GridKind::LogSnr] {
+            assert_eq!(GridKind::parse(k.name()).unwrap(), k);
+        }
     }
 }

@@ -10,23 +10,41 @@
 //!   the DDIM / DPM-Solver / EDM analogs, which the paper shows are fixed
 //!   members of the scale-time family,
 //! * the learned **Bespoke** samplers ([`bespoke`]) over the raw-theta
-//!   parameterization ([`theta`]),
-//! * a name-based [`registry`] so the CLI/server/benches can instantiate
-//!   any solver from a string spec like `"bespoke-rk2:n=8"` or
-//!   `"rk2:n=10:grid=edm"`.
+//!   parameterization ([`theta`]).
+//!
+//! # The two-layer solver API
+//!
+//! **Typed specs** ([`spec::SolverSpec`]): every solver configuration is a
+//! value of the `SolverSpec` enum. Specs parse strictly from the CLI/server
+//! string grammar (`"rk2:n=10:grid=edm"`, `"dopri5:rtol=1e-6:atol=1e-8"`),
+//! `Display` back to a canonical string, round-trip through JSON, and
+//! [`spec::SolverSpec::build`] instantiates the described [`Sampler`]. The
+//! string-in/sampler-out [`registry::make_sampler`] remains as a one-line
+//! convenience wrapper.
+//!
+//! **Step-wise execution** ([`SolveSession`]): a sampler is not a one-shot
+//! black box — [`Sampler::begin`] opens a session that advances one paper-
+//! Algorithm-1 step per [`SolveSession::step`] call and exposes the current
+//! state between steps. This is what lets the coordinator stream
+//! trajectories, report per-step progress, and (eventually) interleave
+//! steps across requests. [`Sampler::sample`] is a default method that
+//! drives a session to completion, so one-shot call sites are unchanged.
 
 pub mod bespoke;
 pub mod dopri5;
 pub mod grids;
 pub mod registry;
 pub mod rk;
+pub mod spec;
 pub mod theta;
 pub mod transfer;
 
 pub use bespoke::BespokeSolver;
 pub use dopri5::{DenseSolution, Dopri5};
+pub use grids::GridKind;
 pub use registry::make_sampler;
 pub use rk::{BaseRk, FixedGridSolver};
+pub use spec::SolverSpec;
 pub use theta::{Base, DecodedTheta, RawTheta};
 pub use transfer::TransferSolver;
 
@@ -35,11 +53,70 @@ use anyhow::Result;
 use crate::models::VelocityModel;
 use crate::tensor::Tensor;
 
+/// Progress report for one completed [`SolveSession::step`].
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
+    /// 0-based index of the step just completed.
+    pub step: usize,
+    /// Integration time reached after this step, on the solver's native
+    /// axis (model time for fixed-grid/bespoke, transformed time r for
+    /// scheduler transfer).
+    pub t: f32,
+    /// Model evaluations consumed by this step (including rejected
+    /// attempts for adaptive solvers).
+    pub nfe: usize,
+    /// Whether the trajectory is complete after this step.
+    pub done: bool,
+}
+
+/// An in-flight solve: one ODE trajectory advanced step by step.
+///
+/// Protocol: a session produced by [`Sampler::begin`] is already
+/// initialized; call [`SolveSession::step`] until [`SolveSession::is_done`]
+/// returns true, then read the final sample from [`SolveSession::state`].
+/// [`SolveSession::init`] rewinds the session to t = 0 with a fresh noise
+/// batch so sessions can be reused without rebuilding the solver.
+pub trait SolveSession: Send {
+    /// (Re)initialize the trajectory at x(0) = x0.
+    fn init(&mut self, x0: &Tensor) -> Result<()>;
+
+    /// Advance one solver step. Errors if the session is already done.
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo>;
+
+    /// True once the trajectory has reached t = 1.
+    fn is_done(&self) -> bool;
+
+    /// The current state x [B, d] — the final sample once [`Self::is_done`].
+    fn state(&self) -> &Tensor;
+
+    /// Total number of steps, when known in advance (fixed-grid solvers);
+    /// `None` for adaptive solvers.
+    fn steps_total(&self) -> Option<usize> {
+        None
+    }
+}
+
 /// A sampler integrates the flow ODE from t = 0 (noise) to t = 1 (data).
 pub trait Sampler: Send + Sync {
     fn name(&self) -> String;
-    /// Number of model evaluations one `sample` call performs.
+
+    /// Number of model evaluations one full solve performs (0 when adaptive;
+    /// adaptive NFE is reported per solve via [`StepInfo::nfe`]).
     fn nfe(&self) -> usize;
+
+    /// Open a step-wise [`SolveSession`] initialized at `x0`.
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>>;
+
     /// Map a noise batch x0 [B, d] to approximate data samples [B, d].
-    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor>;
+    ///
+    /// Default: drive a [`SolveSession`] to completion. Step-wise and
+    /// one-shot execution are therefore the same code path and produce
+    /// bitwise-identical output.
+    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
+        let mut session = self.begin(x0)?;
+        while !session.is_done() {
+            session.step(model)?;
+        }
+        Ok(session.state().clone())
+    }
 }

@@ -1,99 +1,38 @@
 //! Name-based solver registry: instantiate any sampler from a string spec.
 //!
-//! Grammar (colon-separated key=val after the kind):
+//! Grammar (colon-separated key=val after the kind; parsed strictly by
+//! [`SolverSpec`] — unknown keys and malformed segments are errors):
 //!
 //! ```text
-//! rk1:n=10                     plain Euler, uniform grid
-//! rk2:n=10:grid=edm            midpoint on the EDM rho-grid
-//! rk4:n=5
-//! rk2-target:n=10:sched=vp     scheduler-transfer (DPM/DDIM/EDM analog)
-//! dopri5:tol=1e-5              adaptive ground truth
-//! bespoke:path=out/theta.json  learned Bespoke solver from a checkpoint
+//! rk1:n=10                       plain Euler, uniform grid
+//! rk2:n=10:grid=edm              midpoint on the EDM rho-grid
+//! rk4:n=5                        (grids: uniform|edm|cosine|logsnr)
+//! rk2-target:n=10:sched=vp       scheduler-transfer (DPM/DDIM/EDM analog)
+//! dopri5:tol=1e-5                adaptive ground truth (tol sets rtol+atol)
+//! dopri5:rtol=1e-6:atol=1e-8     ... or set them independently
+//! bespoke:path=out/theta.json    learned Bespoke solver from a checkpoint
 //! ```
 //!
 //! The model's own scheduler (needed by warped grids and transfer) is
 //! passed in by the caller.
 
-use std::collections::BTreeMap;
+use anyhow::Result;
 
-use anyhow::{bail, Context, Result};
-
-use super::bespoke::BespokeSolver;
-use super::dopri5::Dopri5;
-use super::grids;
-use super::rk::{BaseRk, FixedGridSolver};
-use super::theta::RawTheta;
-use super::transfer::TransferSolver;
+use super::spec::SolverSpec;
 use super::Sampler;
 use crate::schedulers::Scheduler;
 
-fn parse_spec(spec: &str) -> (String, BTreeMap<String, String>) {
-    let mut parts = spec.split(':');
-    let kind = parts.next().unwrap_or("").to_string();
-    let mut kv = BTreeMap::new();
-    for p in parts {
-        if let Some((k, v)) = p.split_once('=') {
-            kv.insert(k.to_string(), v.to_string());
-        }
-    }
-    (kind, kv)
-}
-
-fn get_n(kv: &BTreeMap<String, String>) -> Result<usize> {
-    kv.get("n")
-        .context("missing n=<steps>")?
-        .parse::<usize>()
-        .context("bad n")
-}
-
 /// Build a sampler from a spec string; `model_sched` is the scheduler of
-/// the model the sampler will run against.
+/// the model the sampler will run against. Equivalent to
+/// `SolverSpec::parse(spec)?.build(model_sched)`.
 pub fn make_sampler(spec: &str, model_sched: Scheduler) -> Result<Box<dyn Sampler>> {
-    let (kind, kv) = parse_spec(spec);
-    match kind.as_str() {
-        "rk1" | "rk2" | "rk4" | "euler" | "midpoint" => {
-            let base = BaseRk::parse(&kind)?;
-            let n = get_n(&kv)?;
-            let grid_name = kv.get("grid").map(String::as_str).unwrap_or("uniform");
-            let grid = grids::make(grid_name, n, model_sched)?;
-            let label = if grid_name == "uniform" {
-                format!("{}:n={n}", base.name())
-            } else {
-                format!("{}:n={n}:grid={grid_name}", base.name())
-            };
-            Ok(Box::new(FixedGridSolver::with_grid(base, grid, label)))
-        }
-        "rk1-target" | "rk2-target" => {
-            let base = BaseRk::parse(kind.trim_end_matches("-target"))?;
-            let n = get_n(&kv)?;
-            let target = Scheduler::parse(kv.get("sched").context("missing sched=")?)?;
-            Ok(Box::new(TransferSolver::new(model_sched, target, base, n)))
-        }
-        "dopri5" => {
-            let tol = kv
-                .get("tol")
-                .map(|s| s.parse::<f64>())
-                .transpose()
-                .context("bad tol")?
-                .unwrap_or(1e-5);
-            Ok(Box::new(Dopri5 { rtol: tol, atol: tol, max_steps: 100_000 }))
-        }
-        "bespoke" => {
-            let path = kv.get("path").context("missing path=<theta.json>")?;
-            let raw = RawTheta::load(std::path::Path::new(path))
-                .with_context(|| format!("loading theta from {path}"))?;
-            Ok(Box::new(BespokeSolver::new(&raw)))
-        }
-        _ => bail!(
-            "unknown solver kind {kind:?} \
-             (rk1|rk2|rk4|rk1-target|rk2-target|dopri5|bespoke)"
-        ),
-    }
+    SolverSpec::parse(spec)?.build(model_sched)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solvers::theta::RawTheta;
 
     #[test]
     fn builds_every_kind() {
@@ -102,9 +41,11 @@ mod tests {
             "rk1:n=4",
             "rk2:n=8:grid=edm",
             "rk2:n=8:grid=logsnr",
+            "rk2:n=8:grid=cosine",
             "rk4:n=2",
             "rk2-target:n=4:sched=vp",
             "dopri5:tol=1e-4",
+            "dopri5:rtol=1e-4:atol=1e-6",
             "dopri5",
         ] {
             let sampler = make_sampler(spec, s).unwrap_or_else(|e| panic!("{spec}: {e}"));
@@ -129,9 +70,34 @@ mod tests {
     }
 
     #[test]
+    fn independent_dopri5_tolerances() {
+        let s = make_sampler("dopri5:rtol=1e-3:atol=1e-6", Scheduler::CondOt).unwrap();
+        // the name carries rtol; the typed spec carries both (see spec tests)
+        assert!(s.name().contains("dopri5"));
+        match SolverSpec::parse("dopri5:rtol=1e-3:atol=1e-6").unwrap() {
+            SolverSpec::Dopri5 { rtol, atol, .. } => {
+                assert_eq!(rtol, 1e-3);
+                assert_eq!(atol, 1e-6);
+            }
+            other => panic!("wrong spec {other:?}"),
+        }
+    }
+
+    #[test]
     fn rejects_bad_specs() {
         let s = Scheduler::CondOt;
-        for spec in ["nope:n=4", "rk2", "rk2:n=x", "rk2-target:n=4", "bespoke"] {
+        for spec in [
+            "nope:n=4",
+            "rk2",
+            "rk2:n=x",
+            "rk2-target:n=4",
+            "bespoke",
+            // strictness (previously silently ignored):
+            "rk2:n=4:foo=1",  // unknown key
+            "rk2:n",          // key without '='
+            "rk2:n=4:grid",   // trailing key without '='
+            "rk2:n=4:n=8",    // duplicate key
+        ] {
             assert!(make_sampler(spec, s).is_err(), "should reject {spec}");
         }
     }

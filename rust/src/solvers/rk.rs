@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Result};
 
-use super::Sampler;
+use super::{Sampler, SolveSession, StepInfo};
 use crate::models::VelocityModel;
 use crate::tensor::Tensor;
 
@@ -125,6 +125,51 @@ impl FixedGridSolver {
     }
 }
 
+/// Step-wise execution of a [`FixedGridSolver`]: one grid interval per
+/// [`SolveSession::step`], arithmetic identical to the one-shot [`solve`].
+pub struct FixedGridSession<'a> {
+    solver: &'a FixedGridSolver,
+    x: Tensor,
+    /// Index of the next grid interval [grid[i], grid[i+1]] to integrate.
+    i: usize,
+}
+
+impl SolveSession for FixedGridSession<'_> {
+    fn init(&mut self, x0: &Tensor) -> Result<()> {
+        self.x = x0.clone();
+        self.i = 0;
+        Ok(())
+    }
+
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
+        if self.is_done() {
+            bail!("session already complete ({} steps)", self.i);
+        }
+        let (t, tn) = (self.solver.grid[self.i], self.solver.grid[self.i + 1]);
+        let mut f = |x: &Tensor, t: f32| model.eval(x, t);
+        self.x = self.solver.base.step(&mut f, &self.x, t, tn - t)?;
+        self.i += 1;
+        Ok(StepInfo {
+            step: self.i - 1,
+            t: tn,
+            nfe: self.solver.base.evals_per_step(),
+            done: self.is_done(),
+        })
+    }
+
+    fn is_done(&self) -> bool {
+        self.i + 1 >= self.solver.grid.len()
+    }
+
+    fn state(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn steps_total(&self) -> Option<usize> {
+        Some(self.solver.grid.len() - 1)
+    }
+}
+
 impl Sampler for FixedGridSolver {
     fn name(&self) -> String {
         self.label.clone()
@@ -134,9 +179,11 @@ impl Sampler for FixedGridSolver {
         (self.grid.len() - 1) * self.base.evals_per_step()
     }
 
-    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
-        let mut f = |x: &Tensor, t: f32| model.eval(x, t);
-        solve(self.base, &mut f, x0, &self.grid)
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
+        if self.grid.len() < 2 {
+            bail!("time grid needs at least 2 points");
+        }
+        Ok(Box::new(FixedGridSession { solver: self, x: x0.clone(), i: 0 }))
     }
 }
 
@@ -191,5 +238,59 @@ mod tests {
         let x0 = Tensor::zeros(&[1, 1]);
         let mut f = |x: &Tensor, _t: f32| Ok(x.clone());
         assert!(solve(BaseRk::Rk1, &mut f, &x0, &[0.0]).is_err());
+        let s = FixedGridSolver::with_grid(BaseRk::Rk1, vec![0.0], "bad");
+        assert!(s.begin(&x0).is_err());
+    }
+
+    /// A trivial velocity model x' = a x for exercising the session path.
+    struct Field(f32);
+    impl crate::models::VelocityModel for Field {
+        fn name(&self) -> &str {
+            "field"
+        }
+        fn batch(&self) -> usize {
+            1
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+        fn eval(&self, x: &Tensor, _t: f32) -> Result<Tensor> {
+            Ok(x.scale(self.0))
+        }
+    }
+
+    #[test]
+    fn session_matches_direct_solve_bitwise() {
+        let field = Field(-1.3);
+        let x0 = Tensor::new(vec![1.0, -0.5], vec![1, 2]).unwrap();
+        for base in [BaseRk::Rk1, BaseRk::Rk2, BaseRk::Rk4] {
+            let s = FixedGridSolver::uniform(base, 7);
+            let mut f = |x: &Tensor, t: f32| field.eval(x, t);
+            let direct = solve(base, &mut f, &x0, &s.grid).unwrap();
+            // one-shot sample() is the session driver by construction
+            let one_shot = s.sample(&field, &x0).unwrap();
+            assert_eq!(one_shot.data(), direct.data());
+            // manual stepping with StepInfo accounting
+            let mut sess = s.begin(&x0).unwrap();
+            assert_eq!(sess.steps_total(), Some(7));
+            let (mut nfe, mut steps) = (0usize, 0usize);
+            while !sess.is_done() {
+                let info = sess.step(&field).unwrap();
+                nfe += info.nfe;
+                steps += 1;
+                assert_eq!(info.step + 1, steps);
+                assert_eq!(info.done, steps == 7);
+            }
+            assert_eq!(sess.state().data(), direct.data());
+            assert_eq!(nfe, s.nfe());
+            assert!(sess.step(&field).is_err(), "stepping past the end must fail");
+            // init() rewinds for reuse
+            sess.init(&x0).unwrap();
+            assert!(!sess.is_done());
+            while !sess.is_done() {
+                sess.step(&field).unwrap();
+            }
+            assert_eq!(sess.state().data(), direct.data());
+        }
     }
 }

@@ -1,0 +1,455 @@
+//! Typed solver specs: the single source of truth for "which solver, with
+//! which parameters".
+//!
+//! A [`SolverSpec`] is the validated, structured form of the colon-separated
+//! CLI/server spec strings (`rk2:n=8:grid=edm`, `dopri5:rtol=1e-6:atol=1e-8`,
+//! `bespoke:path=out/theta.json`, ...). Parsing is strict — unknown keys,
+//! duplicate keys and malformed `k=v` segments are errors, never silently
+//! dropped — and `Display` emits a canonical string that parses back to an
+//! equal spec. Specs also round-trip through JSON (`to_json`/`from_json`) so
+//! solver configs can travel inside manifests, reports and wire requests.
+//!
+//! [`SolverSpec::build`] instantiates the described [`Sampler`] against a
+//! model's scheduler; the legacy [`super::registry::make_sampler`] is now a
+//! thin `parse` + `build` wrapper.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use super::bespoke::BespokeSolver;
+use super::dopri5::Dopri5;
+use super::grids::GridKind;
+use super::rk::{BaseRk, FixedGridSolver};
+use super::theta::RawTheta;
+use super::transfer::TransferSolver;
+use super::Sampler;
+use crate::json::Value;
+use crate::schedulers::Scheduler;
+
+/// Default tolerance for spec-built DOPRI5 (matches the paper's GT runs).
+pub const DOPRI5_DEFAULT_TOL: f64 = 1e-5;
+/// Default step budget for spec-built DOPRI5.
+pub const DOPRI5_DEFAULT_MAX_STEPS: usize = 100_000;
+
+/// A fully-validated solver configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverSpec {
+    /// Fixed-grid RK1/RK2/RK4 on the model's own path, optionally on a
+    /// warped time grid.
+    Rk { base: BaseRk, n: usize, grid: GridKind },
+    /// Scheduler-transfer solver (DDIM/DPM/EDM analog): integrate along the
+    /// sampling path of `sched` via the scale-time transform.
+    Transfer { base: BaseRk, n: usize, sched: Scheduler },
+    /// Adaptive DOPRI5 ground-truth solver.
+    Dopri5 { rtol: f64, atol: f64, max_steps: usize },
+    /// Learned Bespoke solver loaded from a theta checkpoint.
+    Bespoke { path: String },
+}
+
+/// Strict `k=v` segment list: rejects malformed segments and duplicates,
+/// and tracks consumption so unknown keys can be reported.
+struct KvParser {
+    pairs: Vec<(String, String)>,
+}
+
+impl KvParser {
+    fn parse<'a>(segments: impl Iterator<Item = &'a str>) -> Result<KvParser> {
+        let mut pairs: Vec<(String, String)> = Vec::new();
+        for seg in segments {
+            let (k, v) = seg
+                .split_once('=')
+                .with_context(|| format!("malformed spec segment {seg:?} (expected key=value)"))?;
+            if k.is_empty() || v.is_empty() {
+                bail!("malformed spec segment {seg:?} (empty key or value)");
+            }
+            if pairs.iter().any(|(pk, _)| pk == k) {
+                bail!("duplicate key {k:?} in spec");
+            }
+            pairs.push((k.to_string(), v.to_string()));
+        }
+        Ok(KvParser { pairs })
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        let i = self.pairs.iter().position(|(k, _)| k == key)?;
+        Some(self.pairs.remove(i).1)
+    }
+
+    fn require(&mut self, key: &str) -> Result<String> {
+        self.take(key).with_context(|| format!("missing {key}=<value>"))
+    }
+
+    /// Error out if any key was not consumed by the kind's grammar.
+    fn finish(self, kind: &str) -> Result<()> {
+        if let Some((k, _)) = self.pairs.first() {
+            bail!("unknown key {k:?} for solver kind {kind:?}");
+        }
+        Ok(())
+    }
+}
+
+fn parse_usize(key: &str, v: &str) -> Result<usize> {
+    v.parse::<usize>().with_context(|| format!("bad {key}={v:?}"))
+}
+
+fn parse_tol(key: &str, v: &str) -> Result<f64> {
+    // positivity/finiteness is enforced by SolverSpec::validate
+    v.parse().with_context(|| format!("bad {key}={v:?}"))
+}
+
+impl SolverSpec {
+    /// Parse a spec string. Strict: every segment after the kind must be a
+    /// known `key=value` pair for that kind.
+    pub fn parse(spec: &str) -> Result<SolverSpec> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let mut kv = KvParser::parse(parts)?;
+        let out = match kind {
+            "rk1" | "rk2" | "rk4" | "euler" | "midpoint" => {
+                let base = BaseRk::parse(kind)?;
+                let n = parse_usize("n", &kv.require("n")?)?;
+                let grid = match kv.take("grid") {
+                    Some(g) => GridKind::parse(&g)?,
+                    None => GridKind::Uniform,
+                };
+                SolverSpec::Rk { base, n, grid }
+            }
+            "rk1-target" | "rk2-target" | "rk4-target" => {
+                let base = BaseRk::parse(kind.trim_end_matches("-target"))?;
+                let n = parse_usize("n", &kv.require("n")?)?;
+                let sched = Scheduler::parse(&kv.require("sched")?)?;
+                SolverSpec::Transfer { base, n, sched }
+            }
+            "dopri5" => {
+                let (mut rtol, mut atol) = (DOPRI5_DEFAULT_TOL, DOPRI5_DEFAULT_TOL);
+                if let Some(t) = kv.take("tol") {
+                    let t = parse_tol("tol", &t)?;
+                    rtol = t;
+                    atol = t;
+                }
+                if let Some(t) = kv.take("rtol") {
+                    rtol = parse_tol("rtol", &t)?;
+                }
+                if let Some(t) = kv.take("atol") {
+                    atol = parse_tol("atol", &t)?;
+                }
+                let max_steps = match kv.take("max_steps") {
+                    Some(m) => parse_usize("max_steps", &m)?,
+                    None => DOPRI5_DEFAULT_MAX_STEPS,
+                };
+                SolverSpec::Dopri5 { rtol, atol, max_steps }
+            }
+            "bespoke" => SolverSpec::Bespoke { path: kv.require("path")? },
+            _ => bail!(
+                "unknown solver kind {kind:?} \
+                 (rk1|rk2|rk4|rk1-target|rk2-target|rk4-target|dopri5|bespoke)"
+            ),
+        };
+        kv.finish(kind)?;
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Structural validity checks shared by every deserialization path
+    /// (string grammar and JSON): a `SolverSpec` that exists is buildable.
+    fn validate(&self) -> Result<()> {
+        match self {
+            SolverSpec::Rk { n, .. } | SolverSpec::Transfer { n, .. } => {
+                if *n == 0 {
+                    bail!("n must be >= 1");
+                }
+            }
+            SolverSpec::Dopri5 { rtol, atol, max_steps } => {
+                for (name, v) in [("rtol", rtol), ("atol", atol)] {
+                    if !(v.is_finite() && *v > 0.0) {
+                        bail!("{name} must be a positive finite number, got {v}");
+                    }
+                }
+                if *max_steps == 0 {
+                    bail!("max_steps must be >= 1");
+                }
+            }
+            SolverSpec::Bespoke { path } => {
+                if path.is_empty() {
+                    bail!("bespoke path must be non-empty");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The canonical spec kind, as spelled in spec strings.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SolverSpec::Rk { base, .. } => base.name(),
+            SolverSpec::Transfer { base, .. } => match base {
+                BaseRk::Rk1 => "rk1-target",
+                BaseRk::Rk2 => "rk2-target",
+                BaseRk::Rk4 => "rk4-target",
+            },
+            SolverSpec::Dopri5 { .. } => "dopri5",
+            SolverSpec::Bespoke { .. } => "bespoke",
+        }
+    }
+
+    // ---- JSON (de)serialization -----------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            SolverSpec::Rk { base, n, grid } => Value::obj(vec![
+                ("kind", Value::Str("rk".into())),
+                ("base", Value::Str(base.name().into())),
+                ("n", Value::Num(*n as f64)),
+                ("grid", Value::Str(grid.name().into())),
+            ]),
+            SolverSpec::Transfer { base, n, sched } => Value::obj(vec![
+                ("kind", Value::Str("transfer".into())),
+                ("base", Value::Str(base.name().into())),
+                ("n", Value::Num(*n as f64)),
+                ("sched", Value::Str(sched.name().into())),
+            ]),
+            SolverSpec::Dopri5 { rtol, atol, max_steps } => Value::obj(vec![
+                ("kind", Value::Str("dopri5".into())),
+                ("rtol", Value::Num(*rtol)),
+                ("atol", Value::Num(*atol)),
+                ("max_steps", Value::Num(*max_steps as f64)),
+            ]),
+            SolverSpec::Bespoke { path } => Value::obj(vec![
+                ("kind", Value::Str("bespoke".into())),
+                ("path", Value::Str(path.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<SolverSpec> {
+        let out = match v.get("kind")?.as_str()? {
+            "rk" => SolverSpec::Rk {
+                base: BaseRk::parse(v.get("base")?.as_str()?)?,
+                n: v.get("n")?.as_usize()?,
+                grid: GridKind::parse(v.get("grid")?.as_str()?)?,
+            },
+            "transfer" => SolverSpec::Transfer {
+                base: BaseRk::parse(v.get("base")?.as_str()?)?,
+                n: v.get("n")?.as_usize()?,
+                sched: Scheduler::parse(v.get("sched")?.as_str()?)?,
+            },
+            "dopri5" => SolverSpec::Dopri5 {
+                rtol: v.get("rtol")?.as_f64()?,
+                atol: v.get("atol")?.as_f64()?,
+                max_steps: v.get("max_steps")?.as_usize()?,
+            },
+            "bespoke" => SolverSpec::Bespoke { path: v.get("path")?.as_str()?.to_string() },
+            other => bail!("unknown solver spec kind {other:?} in JSON"),
+        };
+        out.validate()?;
+        Ok(out)
+    }
+
+    // ---- construction ----------------------------------------------------
+
+    /// Instantiate the sampler this spec describes. `model_sched` is the
+    /// scheduler of the model the sampler will run against (needed by warped
+    /// grids and scheduler transfer).
+    pub fn build(&self, model_sched: Scheduler) -> Result<Box<dyn Sampler>> {
+        match self {
+            SolverSpec::Rk { base, n, grid } => {
+                let g = grid.build(*n, model_sched);
+                Ok(Box::new(FixedGridSolver::with_grid(*base, g, self.to_string())))
+            }
+            SolverSpec::Transfer { base, n, sched } => {
+                Ok(Box::new(TransferSolver::new(model_sched, *sched, *base, *n)))
+            }
+            SolverSpec::Dopri5 { rtol, atol, max_steps } => Ok(Box::new(Dopri5 {
+                rtol: *rtol,
+                atol: *atol,
+                max_steps: *max_steps,
+            })),
+            SolverSpec::Bespoke { path } => {
+                let raw = RawTheta::load(std::path::Path::new(path))
+                    .with_context(|| format!("loading theta from {path}"))?;
+                Ok(Box::new(BespokeSolver::new(&raw)))
+            }
+        }
+    }
+}
+
+impl fmt::Display for SolverSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolverSpec::Rk { base, n, grid } => {
+                write!(f, "{}:n={n}", base.name())?;
+                if *grid != GridKind::Uniform {
+                    write!(f, ":grid={}", grid.name())?;
+                }
+                Ok(())
+            }
+            SolverSpec::Transfer { base, n, sched } => {
+                write!(f, "{}-target:n={n}:sched={}", base.name(), sched.name())
+            }
+            SolverSpec::Dopri5 { rtol, atol, max_steps } => {
+                if rtol == atol {
+                    write!(f, "dopri5:tol={rtol:e}")?;
+                } else {
+                    write!(f, "dopri5:rtol={rtol:e}:atol={atol:e}")?;
+                }
+                if *max_steps != DOPRI5_DEFAULT_MAX_STEPS {
+                    write!(f, ":max_steps={max_steps}")?;
+                }
+                Ok(())
+            }
+            SolverSpec::Bespoke { path } => write!(f, "bespoke:path={path}"),
+        }
+    }
+}
+
+impl FromStr for SolverSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SolverSpec> {
+        SolverSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every spec shape documented in the CLI HELP text.
+    const DOCUMENTED: &[&str] = &[
+        "rk1:n=10",
+        "rk2:n=5",
+        "rk4:n=3",
+        "rk2:n=5:grid=edm",
+        "rk2:n=5:grid=logsnr",
+        "rk2:n=5:grid=cosine",
+        "rk1-target:n=5:sched=vp",
+        "rk2-target:n=5:sched=vp",
+        "rk2-target:n=5:sched=edm",
+        "dopri5:tol=1e-5",
+        "dopri5:rtol=1e-6:atol=1e-8",
+        "dopri5:tol=1e-4:max_steps=500",
+        "dopri5",
+        "bespoke:path=out/thetas/theta_checker2-ot_rk2_n8.json",
+    ];
+
+    #[test]
+    fn display_roundtrips_documented_specs() {
+        for s in DOCUMENTED {
+            let spec = SolverSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e:#}"));
+            let shown = spec.to_string();
+            let back = SolverSpec::parse(&shown)
+                .unwrap_or_else(|e| panic!("reparse {shown:?}: {e:#}"));
+            assert_eq!(back, spec, "round-trip mismatch for {s:?} -> {shown:?}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_documented_specs() {
+        for s in DOCUMENTED {
+            let spec = SolverSpec::parse(s).unwrap();
+            let j = spec.to_json().to_string_compact();
+            let back = SolverSpec::from_json(&Value::parse(&j).unwrap())
+                .unwrap_or_else(|e| panic!("{j}: {e:#}"));
+            assert_eq!(back, spec, "JSON round-trip mismatch for {s:?}");
+        }
+    }
+
+    #[test]
+    fn json_rejects_invalid_specs() {
+        for j in [
+            r#"{"kind":"rk","base":"rk2","n":0,"grid":"uniform"}"#,
+            r#"{"kind":"dopri5","rtol":-1,"atol":1e-5,"max_steps":100}"#,
+            r#"{"kind":"dopri5","rtol":1e-5,"atol":1e-5,"max_steps":0}"#,
+            r#"{"kind":"bespoke","path":""}"#,
+            r#"{"kind":"nope"}"#,
+        ] {
+            let v = Value::parse(j).unwrap();
+            assert!(SolverSpec::from_json(&v).is_err(), "should reject {j}");
+        }
+    }
+
+    #[test]
+    fn aliases_canonicalize() {
+        assert_eq!(
+            SolverSpec::parse("euler:n=4").unwrap(),
+            SolverSpec::parse("rk1:n=4").unwrap()
+        );
+        assert_eq!(
+            SolverSpec::parse("midpoint:n=4").unwrap(),
+            SolverSpec::parse("rk2:n=4").unwrap()
+        );
+        assert_eq!(SolverSpec::parse("euler:n=4").unwrap().to_string(), "rk1:n=4");
+    }
+
+    #[test]
+    fn dopri5_tolerance_grammar() {
+        // bare -> defaults
+        match SolverSpec::parse("dopri5").unwrap() {
+            SolverSpec::Dopri5 { rtol, atol, max_steps } => {
+                assert_eq!(rtol, DOPRI5_DEFAULT_TOL);
+                assert_eq!(atol, DOPRI5_DEFAULT_TOL);
+                assert_eq!(max_steps, DOPRI5_DEFAULT_MAX_STEPS);
+            }
+            s => panic!("wrong spec {s:?}"),
+        }
+        // tol sets both; rtol/atol set independently and override tol
+        match SolverSpec::parse("dopri5:tol=1e-4:atol=1e-7").unwrap() {
+            SolverSpec::Dopri5 { rtol, atol, .. } => {
+                assert_eq!(rtol, 1e-4);
+                assert_eq!(atol, 1e-7);
+            }
+            s => panic!("wrong spec {s:?}"),
+        }
+    }
+
+    #[test]
+    fn strict_rejections() {
+        for s in [
+            "nope:n=4",            // unknown kind
+            "rk2",                 // missing n
+            "rk2:n=x",             // bad n value
+            "rk2:n=0",             // zero steps
+            "rk2:n=4:grid=nope",   // unknown grid
+            "rk2:n=4:foo=1",       // unknown key
+            "rk2:n",               // k without =
+            "rk2:n=4:",            // empty trailing segment
+            "rk2:=4",              // empty key
+            "rk2:n=",              // empty value
+            "rk2:n=4:n=8",         // duplicate key
+            "rk2-target:n=4",      // missing sched
+            "rk2-target:n=4:sched=nope",
+            "dopri5:tol=-1",       // non-positive tol
+            "dopri5:tol=abc",
+            "dopri5:max_steps=0",
+            "dopri5:n=4",          // key from another kind
+            "bespoke",             // missing path
+        ] {
+            assert!(SolverSpec::parse(s).is_err(), "should reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn builds_non_checkpoint_kinds() {
+        for s in DOCUMENTED {
+            if s.starts_with("bespoke") {
+                continue; // needs a checkpoint on disk; covered in registry tests
+            }
+            let spec = SolverSpec::parse(s).unwrap();
+            let sampler = spec
+                .build(Scheduler::CondOt)
+                .unwrap_or_else(|e| panic!("{s}: {e:#}"));
+            assert!(!sampler.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn built_sampler_name_matches_canonical_spec() {
+        for s in ["rk2:n=8", "rk2:n=8:grid=edm", "rk1:n=4"] {
+            let spec = SolverSpec::parse(s).unwrap();
+            let sampler = spec.build(Scheduler::CondOt).unwrap();
+            assert_eq!(sampler.name(), spec.to_string());
+        }
+    }
+}

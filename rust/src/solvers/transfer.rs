@@ -13,10 +13,10 @@
 //! with (t_r, s_r) from [`crate::schedulers::transfer_map`]; derivatives are
 //! taken by central differences of the analytic map (h = 1e-4).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::rk::BaseRk;
-use super::Sampler;
+use super::{Sampler, SolveSession, StepInfo};
 use crate::models::VelocityModel;
 use crate::schedulers::{transfer_map, Scheduler};
 use crate::tensor::Tensor;
@@ -57,6 +57,75 @@ impl TransferSolver {
     }
 }
 
+/// Step-wise execution of a [`TransferSolver`]. The session advances the
+/// *transformed* state x_bar(r) and keeps an untransformed view x(r) =
+/// x_bar(r) / s_r for [`SolveSession::state`], so streamed intermediate
+/// states live on the model's own path; the final state is exactly the
+/// one-shot untransform x(1) = x_bar(1) / s_1.
+pub struct TransferSession<'a> {
+    solver: &'a TransferSolver,
+    xbar: Tensor,
+    /// Untransformed view of `xbar` at the current r.
+    x: Tensor,
+    /// Number of completed steps; step i integrates r in [i h, (i+1) h].
+    i: usize,
+}
+
+impl TransferSession<'_> {
+    /// Refresh the untransformed view x = x_bar / s_r at the current r.
+    fn untransform(&mut self) {
+        // At exactly r = 1 this is the one-shot final untransform; r = 0
+        // has s_0 = 1 by construction.
+        let r = if self.i == self.solver.n {
+            1.0
+        } else {
+            self.i as f64 / self.solver.n as f64
+        };
+        let (_, s) = transfer_map(self.solver.source, self.solver.target, r);
+        self.x = self.xbar.scale(1.0 / s as f32);
+    }
+}
+
+impl SolveSession for TransferSession<'_> {
+    fn init(&mut self, x0: &Tensor) -> Result<()> {
+        // x_bar(0) = s_0 x(0); s_0 = sigma_target(0)/sigma_source(0) = 1.
+        self.xbar = x0.clone();
+        self.x = x0.clone();
+        self.i = 0;
+        Ok(())
+    }
+
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
+        if self.is_done() {
+            bail!("session already complete ({} steps)", self.i);
+        }
+        let h = 1.0 / self.solver.n as f64;
+        let r = self.i as f64 * h;
+        let mut f = |x: &Tensor, r: f32| self.solver.u_bar(model, x, r as f64);
+        self.xbar = self.solver.base.step(&mut f, &self.xbar, r as f32, h as f32)?;
+        self.i += 1;
+        self.untransform();
+        Ok(StepInfo {
+            step: self.i - 1,
+            t: if self.i == self.solver.n { 1.0 } else { (self.i as f64 * h) as f32 },
+            nfe: self.solver.base.evals_per_step(),
+            done: self.is_done(),
+        })
+    }
+
+    fn is_done(&self) -> bool {
+        self.i >= self.solver.n
+    }
+
+    fn state(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn steps_total(&self) -> Option<usize> {
+        Some(self.solver.n)
+    }
+}
+
 impl Sampler for TransferSolver {
     fn name(&self) -> String {
         format!("{}-{}:n={}", self.base.name(), self.target.name(), self.n)
@@ -66,18 +135,16 @@ impl Sampler for TransferSolver {
         self.n * self.base.evals_per_step()
     }
 
-    fn sample(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
-        // x_bar(0) = s_0 x(0); s_0 = sigma_target(0)/sigma_source(0) = 1.
-        let mut xbar = x0.clone();
-        let h = 1.0 / self.n as f64;
-        let mut f = |x: &Tensor, r: f32| self.u_bar(model, x, r as f64);
-        for i in 0..self.n {
-            let r = i as f64 * h;
-            xbar = self.base.step(&mut f, &xbar, r as f32, h as f32)?;
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
+        if self.n == 0 {
+            bail!("transfer solver needs n >= 1");
         }
-        // untransform: x(1) = x_bar(1) / s_1
-        let (_, s1) = transfer_map(self.source, self.target, 1.0);
-        Ok(xbar.scale(1.0 / s1 as f32))
+        Ok(Box::new(TransferSession {
+            solver: self,
+            xbar: x0.clone(),
+            x: x0.clone(),
+            i: 0,
+        }))
     }
 }
 
@@ -130,5 +197,35 @@ mod tests {
         let s = TransferSolver::new(Scheduler::CondOt, Scheduler::VarPres, BaseRk::Rk2, 5);
         assert_eq!(s.nfe(), 10);
         assert!(s.name().contains("vp"));
+    }
+
+    /// Step-wise session == the pre-session one-shot loop, bitwise.
+    #[test]
+    fn session_matches_legacy_one_shot_bitwise() {
+        let model = toy(Scheduler::Cosine);
+        let mut rng = Rng::new(7);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let s = TransferSolver::new(Scheduler::Cosine, Scheduler::CondOt, BaseRk::Rk2, 6);
+        // legacy reference: the original one-shot sample() loop
+        let legacy = {
+            let mut xbar = x0.clone();
+            let h = 1.0 / s.n as f64;
+            let mut f = |x: &Tensor, r: f32| s.u_bar(&model, x, r as f64);
+            for i in 0..s.n {
+                let r = i as f64 * h;
+                xbar = s.base.step(&mut f, &xbar, r as f32, h as f32).unwrap();
+            }
+            let (_, s1) = transfer_map(s.source, s.target, 1.0);
+            xbar.scale(1.0 / s1 as f32)
+        };
+        let one_shot = s.sample(&model, &x0).unwrap();
+        assert_eq!(one_shot.data(), legacy.data());
+        let mut sess = s.begin(&x0).unwrap();
+        let mut nfe = 0usize;
+        while !sess.is_done() {
+            nfe += sess.step(&model).unwrap().nfe;
+        }
+        assert_eq!(sess.state().data(), legacy.data());
+        assert_eq!(nfe, s.nfe());
     }
 }

@@ -6,7 +6,7 @@ use std::net::TcpStream;
 use std::sync::Arc;
 
 use bespoke_flow::config::ServeConfig;
-use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest};
+use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, TrajRequest};
 use bespoke_flow::json::Value;
 use bespoke_flow::models::Zoo;
 
@@ -88,6 +88,70 @@ fn invalid_routes_fail_cleanly() {
     let mut bad = req(4, 0);
     bad.solver = "rk2".into(); // missing n
     assert!(coord.submit(&bad).is_err());
+    let mut bad = req(4, 0);
+    bad.solver = "rk2:n=4:bogus=1".into(); // unknown key: strictly rejected
+    assert!(coord.submit(&bad).is_err());
+}
+
+fn traj_req(n_samples: usize, seed: u64) -> TrajRequest {
+    TrajRequest {
+        model: "checker2-ot".into(),
+        solver: "rk2:n=4".into(),
+        n_samples,
+        seed,
+        every: 1,
+    }
+}
+
+#[test]
+fn traj_streams_every_step_and_matches_submit() {
+    let coord = coordinator(1);
+    let mut events = Vec::new();
+    let resp = coord
+        .sample_traj(&traj_req(3, 5), &mut |s| {
+            events.push(s);
+            Ok(())
+        })
+        .unwrap();
+    // rk2:n=4 -> 4 steps, the last marked done, NFE = 8 on one launch
+    assert_eq!(events.len(), 4);
+    assert_eq!(events.last().unwrap().step, 3);
+    assert!(events.last().unwrap().done);
+    assert_eq!(events.last().unwrap().steps_total, Some(4));
+    assert_eq!(resp.nfe, 8);
+    for e in &events {
+        assert_eq!(e.samples.len(), 3);
+        assert!(e.samples.iter().flatten().all(|v| v.is_finite()));
+    }
+    // times advance towards 1
+    assert!(events.windows(2).all(|w| w[1].t > w[0].t));
+    assert_eq!(events.last().unwrap().t, 1.0);
+    // the trajectory endpoint equals the batched submit() result bit-for-bit
+    let submitted = coord.submit(&req(3, 5)).unwrap().samples.unwrap();
+    assert_eq!(events.last().unwrap().samples, submitted);
+    assert_eq!(resp.samples.unwrap(), events.last().unwrap().samples);
+}
+
+#[test]
+fn traj_subsampling_and_validation() {
+    let coord = coordinator(1);
+    // every=3 over 4 steps emits steps 0, 3 (final always included)
+    let mut steps = Vec::new();
+    let mut tr = traj_req(2, 1);
+    tr.every = 3;
+    coord
+        .sample_traj(&tr, &mut |s| {
+            steps.push(s.step);
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(steps, vec![0, 3]);
+    // invalid requests fail cleanly
+    let mut bad = traj_req(2, 0);
+    bad.solver = "rk2:n".into();
+    assert!(coord.sample_traj(&bad, &mut |_| Ok(())).is_err());
+    assert!(coord.sample_traj(&traj_req(0, 0), &mut |_| Ok(())).is_err());
+    assert!(coord.sample_traj(&traj_req(100_000, 0), &mut |_| Ok(())).is_err());
 }
 
 trait CloneWith {
@@ -140,4 +204,40 @@ fn jsonl_tcp_roundtrip() {
 
     let m = ask(r#"{"cmd":"metrics"}"#);
     assert!(m.get("per_route").is_ok());
+
+    // streaming: one step event per solver step, then a done summary
+    writer
+        .write_all(
+            br#"{"cmd":"sample_traj","model":"checker2-ot","solver":"rk2:n=4","n_samples":2,"seed":2,"every":1}"#,
+        )
+        .unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut steps = 0usize;
+    loop {
+        let mut out = String::new();
+        reader.read_line(&mut out).unwrap();
+        let v = Value::parse(&out).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap(), "server error: {out}");
+        match v.get("event").unwrap().as_str().unwrap() {
+            "step" => {
+                steps += 1;
+                assert_eq!(v.get("samples").unwrap().as_arr().unwrap().len(), 2);
+            }
+            "done" => {
+                assert_eq!(v.get("nfe").unwrap().as_usize().unwrap(), 8);
+                break;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(steps, 4);
+
+    // the connection still serves regular commands afterwards
+    writer.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut out = String::new();
+    reader.read_line(&mut out).unwrap();
+    let pong = Value::parse(&out).unwrap();
+    assert!(pong.get("pong").unwrap().as_bool().unwrap());
 }

@@ -1,0 +1,141 @@
+//! Integration: the typed solver API — `SolverSpec` round-tripping through
+//! string and JSON forms, and step-wise `SolveSession` equivalence with
+//! one-shot `Sampler::sample` for every fixed-grid solver kind.
+//!
+//! Runs against the pure-Rust `AnalyticModel` oracle, so it needs no
+//! compiled artifacts.
+
+use bespoke_flow::json::Value;
+use bespoke_flow::models::AnalyticModel;
+use bespoke_flow::schedulers::Scheduler;
+use bespoke_flow::solvers::rk::BaseRk;
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{BespokeSolver, Sampler, SolverSpec, TransferSolver};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+fn toy(sched: Scheduler) -> AnalyticModel {
+    let pts = Tensor::from_rows(&[vec![1.0, 0.2], vec![-0.6, -0.5], vec![0.3, 1.0]]).unwrap();
+    AnalyticModel::new("toy", pts, sched, 0.08, 8).unwrap()
+}
+
+fn noise(seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap()
+}
+
+/// Every spec listed in the CLI HELP text parses, builds against a
+/// scheduler, and Displays back to an equivalent spec.
+#[test]
+fn help_specs_parse_build_and_roundtrip() {
+    let specs = [
+        "rk1:n=10",
+        "rk2:n=5",
+        "rk4:n=3",
+        "rk2:n=5:grid=edm",
+        "rk2:n=5:grid=logsnr",
+        "rk2:n=5:grid=cosine",
+        "rk1-target:n=5:sched=vp",
+        "rk2-target:n=5:sched=vp",
+        "rk2-target:n=5:sched=edm",
+        "dopri5:tol=1e-5",
+        "dopri5:rtol=1e-6:atol=1e-8",
+    ];
+    for s in specs {
+        let spec = SolverSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e:#}"));
+        // string round-trip
+        let reparsed = SolverSpec::parse(&spec.to_string()).unwrap();
+        assert_eq!(reparsed, spec, "Display round-trip for {s:?}");
+        // JSON round-trip
+        let j = spec.to_json().to_string_compact();
+        let back = SolverSpec::from_json(&Value::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, spec, "JSON round-trip for {s:?}");
+        // builds a usable sampler
+        let sampler = spec.build(Scheduler::CondOt).unwrap();
+        assert!(!sampler.name().is_empty());
+    }
+}
+
+/// A bespoke:path= spec round-trips and builds from a saved checkpoint.
+#[test]
+fn bespoke_spec_roundtrips_and_builds() {
+    let dir = std::env::temp_dir().join(format!("spec_session_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("theta.json");
+    RawTheta::identity(Base::Rk2, 4).save(&path).unwrap();
+    let s = format!("bespoke:path={}", path.display());
+    let spec = SolverSpec::parse(&s).unwrap();
+    assert_eq!(SolverSpec::parse(&spec.to_string()).unwrap(), spec);
+    let sampler = spec.build(Scheduler::CondOt).unwrap();
+    assert_eq!(sampler.nfe(), 8);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Driving a session step by step is bitwise identical to one-shot
+/// `sample()` for every fixed-grid solver kind, and the StepInfo NFE total
+/// matches `Sampler::nfe()`.
+#[test]
+fn session_bitwise_matches_sample_for_all_fixed_grid_kinds() {
+    let dir = std::env::temp_dir().join(format!("spec_session_b_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let theta_path = dir.join("theta.json");
+    RawTheta::identity(Base::Rk2, 6).save(&theta_path).unwrap();
+
+    let model = toy(Scheduler::CondOt);
+    let x0 = noise(3);
+    let specs = [
+        "rk1:n=6".to_string(),
+        "rk2:n=6".to_string(),
+        "rk4:n=3".to_string(),
+        "rk2:n=6:grid=edm".to_string(),
+        "rk2-target:n=6:sched=vp".to_string(),
+        format!("bespoke:path={}", theta_path.display()),
+    ];
+    for s in &specs {
+        let sampler = SolverSpec::parse(s).unwrap().build(Scheduler::CondOt).unwrap();
+        let one_shot = sampler.sample(&model, &x0).unwrap();
+        let mut session = sampler.begin(&x0).unwrap();
+        let total = session.steps_total().expect("fixed-grid solvers know their step count");
+        let (mut nfe, mut steps) = (0usize, 0usize);
+        while !session.is_done() {
+            let info = session.step(&model).unwrap();
+            assert_eq!(info.step, steps, "{s}: step indices must be sequential");
+            nfe += info.nfe;
+            steps += 1;
+        }
+        assert_eq!(steps, total, "{s}: steps_total must match the actual count");
+        assert_eq!(
+            session.state().data(),
+            one_shot.data(),
+            "{s}: step-wise result must be bitwise identical to sample()"
+        );
+        assert_eq!(nfe, sampler.nfe(), "{s}: StepInfo NFE total must match nfe()");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Direct-constructed solvers behave the same as spec-built ones.
+#[test]
+fn spec_built_matches_direct_construction() {
+    let model = toy(Scheduler::Cosine);
+    let x0 = noise(11);
+    let via_spec = SolverSpec::parse("rk2-target:n=8:sched=ot")
+        .unwrap()
+        .build(Scheduler::Cosine)
+        .unwrap();
+    let direct = TransferSolver::new(Scheduler::Cosine, Scheduler::CondOt, BaseRk::Rk2, 8);
+    let a = via_spec.sample(&model, &x0).unwrap();
+    let b = direct.sample(&model, &x0).unwrap();
+    assert_eq!(a.data(), b.data());
+
+    let bes = BespokeSolver::new(&RawTheta::identity(Base::Rk1, 4));
+    let plain = SolverSpec::parse("rk1:n=4").unwrap().build(Scheduler::Cosine).unwrap();
+    // identity theta == plain base solver (up to decode epsilon)
+    let d = bes
+        .sample(&model, &x0)
+        .unwrap()
+        .sub(&plain.sample(&model, &x0).unwrap())
+        .unwrap()
+        .linf();
+    assert!(d < 1e-3, "identity bespoke deviates from rk1: {d}");
+}
