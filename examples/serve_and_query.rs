@@ -24,7 +24,8 @@ fn main() -> Result<()> {
 
     // --- server -----------------------------------------------------------
     let zoo = Arc::new(Zoo::open_default()?);
-    let cfg = ServeConfig { addr: addr.into(), max_batch: 256, max_wait_ms: 3, workers: 1 };
+    let cfg =
+        ServeConfig { addr: addr.into(), max_batch: 256, max_wait_ms: 3, ..ServeConfig::default() };
     let coord = Arc::new(Coordinator::new(zoo, cfg));
     let metrics = coord.metrics.clone();
     {

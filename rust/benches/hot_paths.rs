@@ -1,58 +1,199 @@
 //! `cargo bench` — hot-path micro/meso benchmarks (in-tree harness; the
 //! image has no criterion crate, builds are fully offline).
 //!
-//! Benchmarks print `name  median  p10  p90  iters` in microseconds and are
-//! the data source for EXPERIMENTS.md §Perf. Filter: `cargo bench -- <substr>`.
+//! Benchmarks print `name  median  p10  p90  iters` in microseconds and
+//! write the same numbers as machine-readable JSON to `BENCH_<id>.json` at
+//! the repo root (`{name, median_us, p10_us, p90_us, iters}` per entry), so
+//! every perf PR leaves a comparable trajectory point.
+//!
+//! Filtering: `cargo bench -- <substr>` runs benchmarks whose name contains
+//! the substring; `cargo bench -- --exact <name>` runs exactly one. Unknown
+//! flags are an error, never a silent "no filter".
+//!
+//! Env knobs: `BENCH_ID` (default 2) picks the JSON suffix, `BENCH_OUT`
+//! overrides the full path, `BENCH_BUDGET_MS` (default 1000) bounds the
+//! per-benchmark wall budget (CI smoke uses a small value), and
+//! `BESPOKE_THREADS` pins the compute-thread count (printed in the header
+//! so JSONs are comparable across machines).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use bespoke_flow::json::Value;
 use bespoke_flow::models::{AnalyticModel, VelocityModel, Zoo};
 use bespoke_flow::runtime::Executable;
 use bespoke_flow::schedulers::Scheduler;
-use bespoke_flow::solvers::rk::{BaseRk, FixedGridSolver};
+use bespoke_flow::solvers::dopri5::reference_solve;
+use bespoke_flow::solvers::rk::{solve, BaseRk, FixedGridSolver};
 use bespoke_flow::solvers::theta::{Base, RawTheta};
 use bespoke_flow::solvers::{BespokeSolver, Dopri5, Sampler};
 use bespoke_flow::tensor::Tensor;
 use bespoke_flow::util::Rng;
 
-/// Time `f` adaptively: warm up, then run until ~1s or 1000 iters.
-fn bench(name: &str, filter: &str, mut f: impl FnMut()) {
-    if !name.contains(filter) {
-        return;
+enum Filter {
+    All,
+    Substr(String),
+    Exact(String),
+}
+
+impl Filter {
+    fn matches(&self, name: &str) -> bool {
+        match self {
+            Filter::All => true,
+            Filter::Substr(s) => name.contains(s.as_str()),
+            Filter::Exact(s) => name == s,
+        }
     }
-    // warmup
-    for _ in 0..3 {
-        f();
+}
+
+struct BenchRecord {
+    name: String,
+    median_us: f64,
+    p10_us: f64,
+    p90_us: f64,
+    iters: usize,
+}
+
+struct Harness {
+    filter: Filter,
+    budget: Duration,
+    results: Vec<BenchRecord>,
+}
+
+impl Harness {
+    /// Time `f` adaptively: warm up, then run until the budget or 1000
+    /// iters (always at least one timed iteration).
+    fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        if !self.filter.matches(name) {
+            return;
+        }
+        // warmup
+        for _ in 0..3 {
+            f();
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while samples.is_empty() || (started.elapsed() < self.budget && samples.len() < 1000) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        println!(
+            "{name:<44} {:>12.1}us {:>12.1}us {:>12.1}us {:>6}",
+            q(0.5),
+            q(0.1),
+            q(0.9),
+            samples.len()
+        );
+        self.results.push(BenchRecord {
+            name: name.to_string(),
+            median_us: q(0.5),
+            p10_us: q(0.1),
+            p90_us: q(0.9),
+            iters: samples.len(),
+        });
     }
-    let mut samples = Vec::new();
-    let budget = std::time::Duration::from_secs(1);
-    let started = Instant::now();
-    while started.elapsed() < budget && samples.len() < 1000 {
-        let t0 = Instant::now();
-        f();
-        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+
+    /// Write the machine-readable trajectory next to the repo root.
+    fn write_json(&self, threads: usize) -> std::io::Result<String> {
+        let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+            let id = std::env::var("BENCH_ID").unwrap_or_else(|_| "2".into());
+            format!("{}/../BENCH_{}.json", env!("CARGO_MANIFEST_DIR"), id)
+        });
+        let entries: Vec<Value> = self
+            .results
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("name", Value::Str(r.name.clone())),
+                    ("median_us", Value::Num(r.median_us)),
+                    ("p10_us", Value::Num(r.p10_us)),
+                    ("p90_us", Value::Num(r.p90_us)),
+                    ("iters", Value::Num(r.iters as f64)),
+                ])
+            })
+            .collect();
+        let doc = Value::obj(vec![
+            ("threads", Value::Num(threads as f64)),
+            ("budget_ms", Value::Num(self.budget.as_millis() as f64)),
+            ("benchmarks", Value::Arr(entries)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty())?;
+        Ok(path)
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
-    println!(
-        "{name:<44} {:>12.1}us {:>12.1}us {:>12.1}us {:>6}",
-        q(0.5),
-        q(0.1),
-        q(0.9),
-        samples.len()
-    );
+}
+
+fn set_exact(filter: &mut Filter, name: String) {
+    if !matches!(filter, Filter::All) {
+        eprintln!("error: --exact {name:?} combined with another filter; pass one");
+        std::process::exit(2);
+    }
+    *filter = Filter::Exact(name);
+}
+
+/// Parse the bench CLI: `--bench` (cargo-injected) is ignored, `--exact
+/// NAME` / `--exact=NAME` selects one benchmark, a bare argument is a
+/// substring filter, anything else is an error (previously unknown flags
+/// silently meant "run everything"). Combining filters is also an error.
+fn parse_filter() -> Filter {
+    let mut filter = Filter::All;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--bench" {
+            continue;
+        }
+        if let Some(v) = a.strip_prefix("--exact=") {
+            set_exact(&mut filter, v.to_string());
+            continue;
+        }
+        if a == "--exact" {
+            match args.next() {
+                Some(v) if !v.starts_with('-') => set_exact(&mut filter, v),
+                _ => {
+                    eprintln!("error: --exact needs a benchmark name");
+                    std::process::exit(2);
+                }
+            }
+            continue;
+        }
+        if a.starts_with('-') {
+            eprintln!(
+                "error: unknown bench flag {a:?} (supported: --exact NAME, \
+                 a bare substring filter)"
+            );
+            std::process::exit(2);
+        }
+        // A bare substring filter; combining filters is an error, never a
+        // silent drop.
+        match &filter {
+            Filter::All => filter = Filter::Substr(a),
+            Filter::Substr(prev) => {
+                eprintln!("error: multiple filters given ({prev:?} and {a:?}); pass one");
+                std::process::exit(2);
+            }
+            Filter::Exact(prev) => {
+                eprintln!("error: both --exact {prev:?} and filter {a:?} given; pass one");
+                std::process::exit(2);
+            }
+        }
+    }
+    filter
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().collect();
-    // cargo bench passes --bench; our filter is any non-flag arg
-    let filter = args
-        .iter()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
-        .cloned()
-        .unwrap_or_default();
+    let budget_ms = std::env::var("BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(1000);
+    let mut h = Harness {
+        filter: parse_filter(),
+        budget: Duration::from_millis(budget_ms.max(1)),
+        results: Vec::new(),
+    };
+    let threads = bespoke_flow::util::threads::get();
 
+    println!("compute threads = {threads}  (BESPOKE_THREADS to pin)  budget = {budget_ms}ms");
     println!(
         "{:<44} {:>14} {:>14} {:>14} {:>6}",
         "benchmark", "median", "p10", "p90", "iters"
@@ -62,70 +203,101 @@ fn main() {
     let mut rng = Rng::new(0);
     let a = Tensor::new(rng.normal_vec(256 * 64), vec![256, 64]).unwrap();
     let b = Tensor::new(rng.normal_vec(256 * 64), vec![256, 64]).unwrap();
-    bench("tensor/axpy_256x64", &filter, || {
+    h.bench("tensor/axpy_256x64", || {
         let mut x = a.clone();
         x.axpy(0.5, &b).unwrap();
         std::hint::black_box(&x);
     });
-    bench("tensor/covariance_4096x16", &filter, {
+    {
         let big = Tensor::new(Rng::new(1).normal_vec(4096 * 16), vec![4096, 16]).unwrap();
-        move || {
+        h.bench("tensor/covariance_4096x16", || {
             std::hint::black_box(big.covariance());
-        }
-    });
-    bench("eval/frechet_d64", &filter, {
+        });
+        h.bench("tensor/covariance_4096x16_t1", || {
+            std::hint::black_box(big.covariance_with_threads(1));
+        });
+    }
+    {
         let x = Tensor::new(Rng::new(2).normal_vec(1024 * 64), vec![1024, 64]).unwrap();
         let y = Tensor::new(Rng::new(3).normal_vec(1024 * 64), vec![1024, 64]).unwrap();
-        move || {
+        h.bench("eval/frechet_d64", || {
             std::hint::black_box(bespoke_flow::eval::frechet_distance(&x, &y));
-        }
-    });
-    bench("theta/decode_rk2_n10", &filter, {
+        });
+        h.bench("eval/frechet_d64_t1", || {
+            std::hint::black_box(bespoke_flow::eval::frechet_distance_with_threads(&x, &y, 1));
+        });
+    }
+    {
         let th = RawTheta::identity(Base::Rk2, 10);
-        move || {
+        h.bench("theta/decode_rk2_n10", || {
             std::hint::black_box(th.decode());
-        }
-    });
+        });
+    }
 
     // analytic-model solver throughput (pure rust path)
     let pts = Tensor::new(Rng::new(4).normal_vec(512 * 2), vec![512, 2]).unwrap();
     let ana = AnalyticModel::new("bench", pts, Scheduler::CondOt, 0.05, 256).unwrap();
     let x0 = Tensor::new(Rng::new(5).normal_vec(256 * 2), vec![256, 2]).unwrap();
-    bench("analytic/u_eval_b256_k512_d2", &filter, || {
+    h.bench("analytic/u_eval_b256_k512_d2", || {
         std::hint::black_box(ana.eval(&x0, 0.5).unwrap());
     });
-    bench("analytic/rk2_n8_sample", &filter, || {
+    h.bench("analytic/u_eval_b256_k512_d2_t1", || {
+        std::hint::black_box(ana.eval_with_threads(&x0, 0.5, 1).unwrap());
+    });
+    h.bench("analytic/rk2_n8_sample", || {
         let s = FixedGridSolver::uniform(BaseRk::Rk2, 8);
         std::hint::black_box(s.sample(&ana, &x0).unwrap());
     });
-    bench("analytic/dopri5_gt_solve", &filter, || {
+    h.bench("analytic/rk2_n8_sample_naive", || {
+        // clone-per-stage reference loop, for the workspace-vs-naive delta
+        let s = FixedGridSolver::uniform(BaseRk::Rk2, 8);
+        let mut f = |x: &Tensor, t: f32| ana.eval(x, t);
+        std::hint::black_box(solve(s.base, &mut f, &x0, &s.grid).unwrap());
+    });
+    h.bench("analytic/bespoke_rk2_n8_sample", || {
+        let s = BespokeSolver::new(&RawTheta::identity(Base::Rk2, 8));
+        std::hint::black_box(s.sample(&ana, &x0).unwrap());
+    });
+    h.bench("analytic/dopri5_gt_solve", || {
         std::hint::black_box(Dopri5::default().sample(&ana, &x0).unwrap());
+    });
+    h.bench("analytic/dopri5_gt_solve_naive", || {
+        let mut f = |x: &Tensor, t: f32| ana.eval(x, t);
+        std::hint::black_box(reference_solve(&Dopri5::default(), &mut f, &x0).unwrap());
     });
 
     // ---- HLO request-path benches (need `make artifacts`) ------------------
-    let zoo = match Zoo::open_default() {
-        Ok(z) => z,
+    match Zoo::open_default() {
+        Ok(zoo) => hlo_benches(&mut h, &zoo),
+        Err(e) => println!("(skipping HLO benches: {e})"),
+    }
+
+    match h.write_json(threads) {
+        Ok(path) => println!("wrote {} benchmark entries to {path}", h.results.len()),
         Err(e) => {
-            println!("(skipping HLO benches: {e})");
-            return;
+            eprintln!("error: writing bench JSON failed: {e}");
+            std::process::exit(1);
         }
-    };
+    }
+}
+
+fn hlo_benches(h: &mut Harness, zoo: &Zoo) {
     for model_name in ["checker2-ot", "tex8-ot", "tex16-ot"] {
         let model = zoo.hlo(model_name).expect("model");
         let (b, d) = (model.batch(), model.dim());
         let x = Tensor::new(Rng::new(6).normal_vec(b * d), vec![b, d]).unwrap();
-        bench(&format!("hlo/u_eval_{model_name}"), &filter, || {
+        h.bench(&format!("hlo/u_eval_{model_name}"), || {
             std::hint::black_box(model.eval(&x, 0.5).unwrap());
         });
-        bench(&format!("hlo/rk2_n8_sample_{model_name}"), &filter, || {
+        h.bench(&format!("hlo/rk2_n8_sample_{model_name}"), || {
             let s = FixedGridSolver::uniform(BaseRk::Rk2, 8);
             std::hint::black_box(s.sample(model.as_ref(), &x).unwrap());
         });
-        bench(&format!("hlo/bespoke_rk2_n8_{model_name}"), &filter, || {
+        h.bench(&format!("hlo/bespoke_rk2_n8_{model_name}"), || {
             let s = BespokeSolver::new(&RawTheta::identity(Base::Rk2, 8));
             std::hint::black_box(s.sample(model.as_ref(), &x).unwrap());
         });
-        bench(&format!("hlo/dopri5_gt_{model_name}"), &filter, || {
+        h.bench(&format!("hlo/dopri5_gt_{model_name}"), || {
             std::hint::black_box(Dopri5::default().sample(model.as_ref(), &x).unwrap());
         });
     }
@@ -138,7 +310,7 @@ fn main() {
         let x0 = Tensor::new(Rng::new(7).normal_vec(b * d), vec![b, d]).unwrap();
         let dense = Dopri5::default().solve_model_dense(model.as_ref(), &x0).unwrap();
         let th = RawTheta::identity(Base::Rk2, n);
-        bench("train/lossgrad_iter_checker2_n8", &filter, || {
+        h.bench("train/lossgrad_iter_checker2_n8", || {
             let dec = th.decode();
             let ts = dec.step_times();
             let mut x_pack = vec![0.0f32; b * (n + 1) * d];

@@ -17,13 +17,26 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Max time a request waits for batch-mates before launch (ms).
     pub max_wait_ms: u64,
-    /// Worker threads per model.
-    pub workers: usize,
+    /// Worker threads per (model, solver) route: concurrent requests to one
+    /// route overlap solves across this many executors instead of queueing
+    /// behind a single thread. Per-chunk RNG streams keep same-seed output
+    /// identical for any pool size (see DESIGN.md §7).
+    pub workers_per_route: usize,
+    /// Compute threads for the row-parallel host kernels (analytic eval,
+    /// batch statistics, Fréchet). 0 = auto: `BESPOKE_THREADS` env var or
+    /// the machine's available parallelism.
+    pub compute_threads: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { addr: "127.0.0.1:7777".into(), max_batch: 64, max_wait_ms: 5, workers: 1 }
+        ServeConfig {
+            addr: "127.0.0.1:7777".into(),
+            max_batch: 64,
+            max_wait_ms: 5,
+            workers_per_route: 1,
+            compute_threads: 0,
+        }
     }
 }
 
@@ -113,7 +126,11 @@ impl Config {
                             "addr" => self.serve.addr = val.as_str()?.to_string(),
                             "max_batch" => self.serve.max_batch = val.as_usize()?,
                             "max_wait_ms" => self.serve.max_wait_ms = val.as_usize()? as u64,
-                            "workers" => self.serve.workers = val.as_usize()?,
+                            // "workers" kept as an alias for old configs
+                            "workers" | "workers_per_route" => {
+                                self.serve.workers_per_route = val.as_usize()?
+                            }
+                            "compute_threads" => self.serve.compute_threads = val.as_usize()?,
                             _ => anyhow::bail!("unknown serve key {k:?}"),
                         }
                     }
@@ -165,13 +182,20 @@ mod tests {
         assert_eq!(cfg.train.lr, 2e-3);
         let v = Value::parse(
             r#"{"train": {"iters": 42, "ablation": "time-only"},
-                "serve": {"max_batch": 8}, "out_dir": "/tmp/x"}"#,
+                "serve": {"max_batch": 8, "workers_per_route": 4, "compute_threads": 2},
+                "out_dir": "/tmp/x"}"#,
         )
         .unwrap();
         cfg.apply(&v).unwrap();
         assert_eq!(cfg.train.iters, 42);
         assert_eq!(cfg.train.ablation, "time-only");
         assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.serve.workers_per_route, 4);
+        assert_eq!(cfg.serve.compute_threads, 2);
+        // legacy alias still parses
+        let v_alias = Value::parse(r#"{"serve": {"workers": 7}}"#).unwrap();
+        cfg.apply(&v_alias).unwrap();
+        assert_eq!(cfg.serve.workers_per_route, 7);
         assert_eq!(cfg.train.lr, 2e-3); // untouched default
         assert_eq!(cfg.out_dir, "/tmp/x");
     }

@@ -1,9 +1,15 @@
-//! The coordinator core: per-(model, solver) worker threads with dynamic
-//! batching over the fixed-shape HLO executables.
+//! The coordinator core: a per-(model, solver) **worker pool** with dynamic
+//! batching over the fixed-shape HLO executables. Each route owns one
+//! shared job queue (`Mutex<VecDeque> + Condvar`) drained by
+//! `workers_per_route` threads, so concurrent requests to one route
+//! overlap solves instead of serializing behind a single worker. Output is
+//! identical for any pool size: noise streams are forked per request
+//! chunk, not per worker, and solves are row-independent.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -79,12 +85,55 @@ struct ChunkDone {
     queue_ms: f64,
 }
 
+/// A route's shared job queue: `submit` pushes and signals; the route's
+/// worker pool drains with dynamic batching.
+struct RouteQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+    /// Set when the coordinator drops so idle workers exit.
+    closed: AtomicBool,
+    /// Live workers draining this queue; decremented on worker exit (panic
+    /// included) so submit() can fail fast instead of queueing forever.
+    workers_alive: std::sync::atomic::AtomicUsize,
+}
+
+impl RouteQueue {
+    fn push(&self, job: Job) {
+        self.jobs.lock().unwrap().push_back(job);
+        self.ready.notify_one();
+    }
+}
+
+/// Decrements the route's live-worker count when a worker thread exits,
+/// whether cleanly or by panic.
+struct WorkerAliveGuard(Arc<RouteQueue>);
+
+impl Drop for WorkerAliveGuard {
+    fn drop(&mut self) {
+        if self.0.workers_alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Last worker out (clean shutdown or panic): drop any queued
+            // jobs so their reply senders close and blocked submitters get
+            // "worker dropped reply" instead of hanging forever.
+            self.0.jobs.lock().unwrap().clear();
+        }
+    }
+}
+
 /// The request router + batching executor.
 pub struct Coordinator {
     zoo: Arc<Zoo>,
     cfg: ServeConfig,
     pub metrics: Arc<Metrics>,
-    routes: Mutex<BTreeMap<String, Sender<Job>>>,
+    routes: Mutex<BTreeMap<String, Arc<RouteQueue>>>,
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for q in self.routes.lock().unwrap().values() {
+            q.closed.store(true, Ordering::SeqCst);
+            q.ready.notify_all();
+        }
+    }
 }
 
 impl Coordinator {
@@ -113,7 +162,7 @@ impl Coordinator {
     pub fn submit(&self, req: &SampleRequest) -> Result<SampleResponse> {
         let started = Instant::now();
         let key = format!("{}/{}", req.model, req.solver);
-        let sender = self.route(&key, &req.model, &req.solver)?;
+        let queue = self.route(&key, &req.model, &req.solver)?;
 
         let model_batch = self.zoo.manifest().model(&req.model)?.batch;
         let chunk_rows = self.chunk_rows(model_batch);
@@ -133,9 +182,17 @@ impl Coordinator {
                 enqueued: Instant::now(),
                 reply: tx,
             };
-            sender
-                .send(job)
-                .map_err(|_| anyhow::anyhow!("worker for {key} is gone"))?;
+            if queue.workers_alive.load(Ordering::SeqCst) == 0 {
+                bail!("workers for {key} are gone");
+            }
+            queue.push(job);
+            // Close the check-then-push race: if the last worker died after
+            // the check above, drain what we just queued so no reply sender
+            // lingers, and fail the request.
+            if queue.workers_alive.load(Ordering::SeqCst) == 0 {
+                queue.jobs.lock().unwrap().clear();
+                bail!("workers for {key} are gone");
+            }
             pending.push(rx);
             remaining -= rows;
             chunk_idx += 1;
@@ -253,77 +310,135 @@ impl Coordinator {
         })
     }
 
-    /// Get (or lazily spawn) the worker for a (model, solver) route.
-    fn route(&self, key: &str, model: &str, solver: &str) -> Result<Sender<Job>> {
-        if let Some(s) = self.routes.lock().unwrap().get(key) {
-            return Ok(s.clone());
+    /// Get (or lazily spawn) the worker pool for a (model, solver) route.
+    fn route(&self, key: &str, model: &str, solver: &str) -> Result<Arc<RouteQueue>> {
+        if let Some(q) = self.routes.lock().unwrap().get(key) {
+            return Ok(q.clone());
         }
         // Validate + load outside the lock (compilation can take a moment).
         let hlo = self.zoo.hlo(model)?;
         let sched = self.zoo.scheduler(model)?;
-        let sampler = SolverSpec::parse(solver)?.build(sched)?;
+        let sampler: Arc<dyn crate::solvers::Sampler> =
+            Arc::from(SolverSpec::parse(solver)?.build(sched)?);
         if hlo.dim() == 0 {
             bail!("model {model} has zero dim");
         }
 
         let mut routes = self.routes.lock().unwrap();
-        if let Some(s) = routes.get(key) {
-            return Ok(s.clone());
+        if let Some(q) = routes.get(key) {
+            return Ok(q.clone());
         }
-        let (tx, rx) = std::sync::mpsc::channel::<Job>();
-        let metrics = self.metrics.clone();
-        let cfg = self.cfg.clone();
-        let key_owned = key.to_string();
-        std::thread::Builder::new()
-            .name(format!("worker-{key}"))
-            .spawn(move || worker_loop(rx, hlo, sampler, cfg, metrics, key_owned))?;
-        routes.insert(key.to_string(), tx.clone());
-        log_info!("spawned worker for route {key}");
-        Ok(tx)
+        let n_workers = self.cfg.workers_per_route.max(1);
+        let queue = Arc::new(RouteQueue {
+            jobs: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            closed: AtomicBool::new(false),
+            workers_alive: std::sync::atomic::AtomicUsize::new(n_workers),
+        });
+        for wi in 0..n_workers {
+            let worker_queue = queue.clone();
+            let model = hlo.clone();
+            let sampler = sampler.clone();
+            let metrics = self.metrics.clone();
+            let cfg = self.cfg.clone();
+            let key_owned = key.to_string();
+            let spawned = std::thread::Builder::new()
+                .name(format!("worker-{key}-{wi}"))
+                .spawn(move || worker_loop(worker_queue, model, sampler, cfg, metrics, key_owned));
+            if let Err(e) = spawned {
+                // Partial pool: tell the already-spawned workers to exit
+                // (the queue never enters the routes map, so Coordinator's
+                // Drop would not reach them).
+                queue.closed.store(true, Ordering::SeqCst);
+                queue.ready.notify_all();
+                return Err(e.into());
+            }
+        }
+        routes.insert(key.to_string(), queue.clone());
+        log_info!("spawned {n_workers} worker(s) for route {key}");
+        Ok(queue)
     }
 }
 
 fn worker_loop(
-    rx: Receiver<Job>,
+    queue: Arc<RouteQueue>,
     model: Arc<crate::models::HloModel>,
-    sampler: Box<dyn crate::solvers::Sampler>,
+    sampler: Arc<dyn crate::solvers::Sampler>,
     cfg: ServeConfig,
     metrics: Arc<Metrics>,
     key: String,
 ) {
+    let _alive = WorkerAliveGuard(queue.clone());
     let b = model.batch();
     let d = model.dim();
     let max_rows = cfg.max_batch.min(b).max(1);
     let max_wait = Duration::from_millis(cfg.max_wait_ms);
 
-    while let Ok(first) = rx.recv() {
+    loop {
+        // Block until a job arrives (or the coordinator shuts down).
+        let first = {
+            let mut q = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if queue.closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = queue.ready.wait(q).unwrap();
+            }
+        };
+
         // Dynamic batching: collect batch-mates until full or deadline.
-        let mut jobs = vec![first];
-        let mut rows = jobs[0].rows;
+        // The queue lock is only held while popping, never while executing,
+        // so pool-mates drain the queue concurrently.
+        let mut jobs = VecDeque::new();
+        let mut rows = first.rows;
+        jobs.push_back(first);
         let deadline = Instant::now() + max_wait;
-        while rows < max_rows {
+        'collect: while rows < max_rows {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => {
-                    let overflow = rows + j.rows > max_rows;
-                    rows += j.rows;
-                    jobs.push(j);
-                    if overflow {
-                        // Oversized tail: execute_jobs splits it into its
-                        // own fixed-shape batch after this one.
-                        break;
+            let q = queue.jobs.lock().unwrap();
+            let job = match q.pop_front_or_wait(&queue.ready, deadline - now) {
+                Some(j) => j,
+                None => {
+                    if queue.closed.load(Ordering::SeqCst) {
+                        break 'collect;
                     }
+                    continue 'collect; // timeout or spurious wake; re-check deadline
                 }
-                Err(_) => break,
+            };
+            let overflow = rows + job.rows > max_rows;
+            rows += job.rows;
+            jobs.push_back(job);
+            if overflow {
+                // Oversized tail: execute_jobs splits it into its own
+                // fixed-shape batch after this one.
+                break;
             }
         }
 
         // May exceed max_rows by one job; split executions over the fixed
         // HLO batch b as needed.
         execute_jobs(&model, sampler.as_ref(), &metrics, &key, b, d, jobs);
+    }
+}
+
+/// Pop the next job, waiting on `cv` up to `timeout` if the queue is empty.
+trait PopOrWait {
+    fn pop_front_or_wait(self, cv: &Condvar, timeout: Duration) -> Option<Job>;
+}
+
+impl PopOrWait for std::sync::MutexGuard<'_, VecDeque<Job>> {
+    fn pop_front_or_wait(mut self, cv: &Condvar, timeout: Duration) -> Option<Job> {
+        if let Some(j) = self.pop_front() {
+            return Some(j);
+        }
+        let (mut guard, _timed_out) = cv.wait_timeout(self, timeout).unwrap();
+        guard.pop_front()
     }
 }
 
@@ -335,17 +450,18 @@ fn execute_jobs(
     key: &str,
     b: usize,
     d: usize,
-    mut jobs: Vec<Job>,
+    mut jobs: VecDeque<Job>,
 ) {
     while !jobs.is_empty() {
-        // Take jobs until the fixed batch is full.
+        // Take jobs until the fixed batch is full (O(1) pops, satellite of
+        // the pool change: no more O(n²) `remove(0)` draining).
         let mut take = Vec::new();
         let mut rows = 0usize;
-        while let Some(j) = jobs.first() {
+        while let Some(j) = jobs.front() {
             if rows + j.rows > b && !take.is_empty() {
                 break;
             }
-            let j = jobs.remove(0);
+            let j = jobs.pop_front().expect("front() said non-empty");
             rows += j.rows;
             take.push(j);
             if rows >= b {

@@ -9,13 +9,39 @@ use super::linalg::{matmul, sqrtm_psd, trace};
 use crate::tensor::Tensor;
 
 /// FD between sample sets a [Na, d] and b [Nb, d] (sizes may differ).
+/// Uses the process compute-thread policy; the result is identical for
+/// every thread count (the Gaussian fits reduce over fixed-size chunks).
 pub fn frechet_distance(a: &Tensor, b: &Tensor) -> f64 {
+    frechet_distance_with_threads(a, b, crate::util::threads::get())
+}
+
+/// [`frechet_distance`] with an explicit thread count: the two Gaussian
+/// fits (mean + covariance, the O(N d^2) part) run on separate threads
+/// when `nt >= 2`, each with a chunk-parallel covariance.
+pub fn frechet_distance_with_threads(a: &Tensor, b: &Tensor, nt: usize) -> f64 {
     assert_eq!(a.cols(), b.cols(), "dimension mismatch");
     let d = a.cols();
-    let mu_a: Vec<f64> = a.mean_axis0().iter().map(|&x| x as f64).collect();
-    let mu_b: Vec<f64> = b.mean_axis0().iter().map(|&x| x as f64).collect();
-    let ca = a.covariance();
-    let cb = b.covariance();
+    let fit = |t: &Tensor, nt_side: usize| -> (Vec<f64>, Vec<f64>) {
+        let mu = t.mean_axis0_with_threads(nt_side).iter().map(|&x| x as f64).collect();
+        let cov = t.covariance_with_threads(nt_side);
+        (mu, cov)
+    };
+    // Thread fork only when at least one fit has multi-chunk work; tiny
+    // sample sets (both single-chunk, i.e. serial reductions anyway) skip
+    // the two spawn/joins. Either branch computes identical values.
+    let chunk = crate::tensor::PAR_CHUNK_ROWS;
+    let multi_chunk = a.rows() > chunk || b.rows() > chunk;
+    let ((mu_a, ca), (mu_b, cb)) = if nt >= 2 && multi_chunk {
+        let per_side = (nt / 2).max(1);
+        std::thread::scope(|s| {
+            let fit = &fit;
+            let ha = s.spawn(move || fit(a, per_side));
+            let hb = s.spawn(move || fit(b, per_side));
+            (ha.join().expect("frechet fit worker"), hb.join().expect("frechet fit worker"))
+        })
+    } else {
+        (fit(a, 1), fit(b, 1))
+    };
 
     let mean_term: f64 = mu_a
         .iter()
@@ -65,6 +91,17 @@ mod tests {
         let fd = frechet_distance(&a, &b);
         let want = (3.0f64).sqrt(); // sqrt(d (2-1)^2)
         assert!((fd - want).abs() < 0.15, "fd={fd} want~{want}");
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        // > PAR_CHUNK_ROWS rows with ragged final chunks; exact f64 equality
+        let a = gaussian_samples(700, 3, 0.1, 1.1, 7);
+        let b = gaussian_samples(651, 3, 0.0, 1.0, 8);
+        let f1 = frechet_distance_with_threads(&a, &b, 1);
+        for nt in [2usize, 7] {
+            assert_eq!(frechet_distance_with_threads(&a, &b, nt), f1, "nt={nt}");
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod frechet;
 pub mod linalg;
 pub mod pipeline;
 
-pub use frechet::frechet_distance;
+pub use frechet::{frechet_distance, frechet_distance_with_threads};
 pub use pipeline::{evaluate_sampler, SamplerReport};
 
 use crate::tensor::Tensor;

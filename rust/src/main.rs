@@ -77,6 +77,14 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(s) = args.flags.get("samples") {
         cfg.eval.metric_samples = s.parse().context("bad --samples")?;
     }
+    if let Some(w) = args.flags.get("workers") {
+        cfg.serve.workers_per_route = w.parse().context("bad --workers")?;
+    }
+    if let Some(t) = args.flags.get("threads") {
+        cfg.serve.compute_threads = t.parse().context("bad --threads")?;
+    }
+    // Pin the process-wide compute-thread policy (0 keeps env/auto).
+    bespoke_flow::util::threads::set(cfg.serve.compute_threads);
     Ok(cfg)
 }
 
@@ -311,4 +319,8 @@ SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
 
 GLOBAL FLAGS:
     --config file.json   --artifacts dir
+    --threads N          compute threads for host kernels (0 = auto;
+                         also: BESPOKE_THREADS env, serve.compute_threads)
+    --workers N          worker threads per (model, solver) serving route
+                         (serve.workers_per_route)
 "#;

@@ -17,11 +17,25 @@
 //! m_t(x) = softmax_k( (alpha <x, mu_k> - alpha^2 ||mu_k||^2 / 2) / v_t ) mu_k
 //! ```
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
 use super::VelocityModel;
 use crate::schedulers::Scheduler;
 use crate::tensor::Tensor;
+
+/// Parallelize [`AnalyticModel::eval`] only when `rows * points` clears
+/// this bar — below it the thread-spawn overhead dominates and the serial
+/// path wins (and it keeps the many tiny-batch tests cheap).
+const PAR_EVAL_MIN_WORK: usize = 4096;
+
+thread_local! {
+    /// Per-thread softmax-logits scratch, hoisted out of the per-row loop
+    /// so the serial eval path performs no steady-state heap allocation
+    /// (the solver sessions rely on this — see DESIGN.md §7).
+    static LOGITS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
 
 pub struct AnalyticModel {
     name: String,
@@ -69,13 +83,22 @@ impl AnalyticModel {
         (a_t, b_t, v)
     }
 
-    /// Posterior mean m_t(x) for a single row.
-    fn posterior_mean_row(&self, x: &[f32], alpha: f64, v: f64, out: &mut [f32]) {
+    /// Posterior mean m_t(x) for a single row. `logits` is caller-provided
+    /// scratch of length K (hoisted out of the row loop so neither the
+    /// serial nor the parallel eval path allocates per row).
+    fn posterior_mean_row(
+        &self,
+        x: &[f32],
+        alpha: f64,
+        v: f64,
+        logits: &mut [f64],
+        out: &mut [f32],
+    ) {
         let k = self.points.rows();
         let d = self.points.cols();
+        debug_assert_eq!(logits.len(), k);
         // logits_k = (alpha <x, mu_k> - alpha^2 ||mu_k||^2 / 2) / v
         let mut best = f64::NEG_INFINITY;
-        let mut logits = vec![0.0f64; k];
         for ki in 0..k {
             let mu = self.points.row(ki);
             let dot: f64 = x.iter().zip(mu).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
@@ -96,6 +119,84 @@ impl AnalyticModel {
         let inv = 1.0 / denom as f32;
         out.iter_mut().for_each(|o| *o *= inv);
     }
+
+    /// [`VelocityModel::eval`] with an explicit thread count. Rows are
+    /// independent, so the output is bitwise identical for every `nt`.
+    pub fn eval_with_threads(&self, x: &Tensor, t: f32, nt: usize) -> Result<Tensor> {
+        let mut out = Tensor::zeros(x.shape());
+        self.eval_into_with_threads(x, t, &mut out, nt)?;
+        Ok(out)
+    }
+
+    /// [`VelocityModel::eval_into`] with an explicit thread count. The
+    /// serial path (`nt <= 1`) uses per-thread scratch and performs no
+    /// steady-state allocation; the parallel path splits the batch into
+    /// `nt` contiguous row chunks under `std::thread::scope`.
+    pub fn eval_into_with_threads(
+        &self,
+        x: &Tensor,
+        t: f32,
+        out: &mut Tensor,
+        nt: usize,
+    ) -> Result<()> {
+        if x.shape().len() != 2 || x.cols() != self.dim() {
+            bail!("expected [B, {}] input, got {:?}", self.dim(), x.shape());
+        }
+        if out.shape() != x.shape() {
+            bail!("output shape {:?} does not match input {:?}", out.shape(), x.shape());
+        }
+        let (a_t, b_t, v) = self.coefs(t as f64);
+        let alpha = self.sched.alpha(t as f64);
+        let b = x.rows();
+        let d = x.cols();
+        let k = self.points.rows();
+        let (af, bf) = (a_t as f32, b_t as f32);
+        // m_t(x) is accumulated directly into the output row, then blended
+        // in place: o[j] = a_t x[j] + b_t m[j] — the same expression the
+        // allocating path computed, so results are bitwise unchanged.
+        let row_kernel = |xr: &[f32], or: &mut [f32], logits: &mut [f64]| {
+            self.posterior_mean_row(xr, alpha, v, logits, or);
+            for j in 0..d {
+                or[j] = af * xr[j] + bf * or[j];
+            }
+        };
+        let nt = nt.max(1).min(b.max(1));
+        if nt <= 1 {
+            LOGITS.with(|l| {
+                let mut logits = l.borrow_mut();
+                logits.resize(k, 0.0);
+                for (xr, or) in x.data().chunks_exact(d).zip(out.data_mut().chunks_exact_mut(d)) {
+                    row_kernel(xr, or, logits.as_mut_slice());
+                }
+            });
+        } else {
+            let rows_per = b.div_ceil(nt);
+            let xd = x.data();
+            let od = out.data_mut();
+            std::thread::scope(|s| {
+                let rk = &row_kernel;
+                for (xc, oc) in xd.chunks(rows_per * d).zip(od.chunks_mut(rows_per * d)) {
+                    s.spawn(move || {
+                        let mut logits = vec![0.0f64; k];
+                        for (xr, or) in xc.chunks_exact(d).zip(oc.chunks_exact_mut(d)) {
+                            rk(xr, or, &mut logits);
+                        }
+                    });
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Thread count for an eval over `rows` batch rows: parallel only when
+    /// the work amortizes the spawn cost.
+    fn auto_threads(&self, rows: usize) -> usize {
+        if rows * self.points.rows() >= PAR_EVAL_MIN_WORK {
+            crate::util::threads::get()
+        } else {
+            1
+        }
+    }
 }
 
 impl VelocityModel for AnalyticModel {
@@ -112,24 +213,13 @@ impl VelocityModel for AnalyticModel {
     }
 
     fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor> {
-        if x.shape().len() != 2 || x.cols() != self.dim() {
-            bail!("expected [B, {}] input, got {:?}", self.dim(), x.shape());
-        }
-        let (a_t, b_t, v) = self.coefs(t as f64);
-        let alpha = self.sched.alpha(t as f64);
-        let b = x.rows();
-        let d = x.cols();
-        let mut out = Tensor::zeros(&[b, d]);
-        let mut m = vec![0.0f32; d];
-        for i in 0..b {
-            let xi = x.row(i);
-            self.posterior_mean_row(xi, alpha, v, &mut m);
-            let o = out.row_mut(i);
-            for j in 0..d {
-                o[j] = (a_t as f32) * xi[j] + (b_t as f32) * m[j];
-            }
-        }
-        Ok(out)
+        let rows = if x.shape().len() == 2 { x.rows() } else { 0 };
+        self.eval_with_threads(x, t, self.auto_threads(rows))
+    }
+
+    fn eval_into(&self, x: &Tensor, t: f32, out: &mut Tensor) -> Result<()> {
+        let rows = if x.shape().len() == 2 { x.rows() } else { 0 };
+        self.eval_into_with_threads(x, t, out, self.auto_threads(rows))
     }
 }
 
@@ -169,10 +259,31 @@ mod tests {
         let m = toy_model(Scheduler::CondOt);
         let (_, _, v) = m.coefs(0.5);
         let alpha = 0.5;
+        let mut logits = vec![0.0f64; 3];
         let mut out = vec![0.0; 2];
-        m.posterior_mean_row(&[0.2, 0.1], alpha, v, &mut out);
+        m.posterior_mean_row(&[0.2, 0.1], alpha, v, &mut logits, &mut out);
         assert!(out[0] >= -1.0 && out[0] <= 1.0);
         assert!(out[1] >= 0.0 && out[1] <= 1.5);
+    }
+
+    #[test]
+    fn parallel_eval_matches_serial_bitwise() {
+        // enough rows that chunking is non-trivial, odd so 2 and 7 threads
+        // both hit ragged final chunks
+        let m = toy_model(Scheduler::Cosine);
+        let mut rng = Rng::new(4);
+        let x = Tensor::new(rng.normal_vec(101 * 2), vec![101, 2]).unwrap();
+        let serial = m.eval_with_threads(&x, 0.37, 1).unwrap();
+        for nt in [2usize, 7] {
+            let par = m.eval_with_threads(&x, 0.37, nt).unwrap();
+            assert_eq!(par.data(), serial.data(), "nt={nt}");
+        }
+        // write-into path agrees with the allocating path
+        let mut out = Tensor::zeros(&[101, 2]);
+        m.eval_into_with_threads(&x, 0.37, &mut out, 2).unwrap();
+        assert_eq!(out.data(), serial.data());
+        // shape validation still applies
+        assert!(m.eval_into_with_threads(&x, 0.5, &mut Tensor::zeros(&[4, 2]), 1).is_err());
     }
 
     #[test]

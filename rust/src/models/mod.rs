@@ -27,6 +27,17 @@ pub trait VelocityModel: Send + Sync {
     fn dim(&self) -> usize;
     /// Evaluate u(x, t). `x` must be [batch, dim].
     fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor>;
+
+    /// Evaluate u(x, t) into a caller-owned output of the same shape as
+    /// `x`. This is the solver hot-path entry point: sessions pre-allocate
+    /// their stage buffers and call this every step. The default routes
+    /// through [`VelocityModel::eval`] (one transient allocation); models
+    /// with a native write-into path (e.g. [`AnalyticModel`]) override it
+    /// to be allocation-free.
+    fn eval_into(&self, x: &Tensor, t: f32, out: &mut Tensor) -> Result<()> {
+        let r = self.eval(x, t)?;
+        out.copy_from(&r)
+    }
 }
 
 /// NFE-accounting wrapper: counts function evaluations, the unit in which
@@ -63,5 +74,9 @@ impl<'a> VelocityModel for CountingModel<'a> {
     fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor> {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.inner.eval(x, t)
+    }
+    fn eval_into(&self, x: &Tensor, t: f32, out: &mut Tensor) -> Result<()> {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.eval_into(x, t, out)
     }
 }

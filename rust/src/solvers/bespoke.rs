@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 use super::theta::{Base, DecodedTheta, RawTheta};
 use super::{Sampler, SolveSession, StepInfo};
 use crate::models::VelocityModel;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 
 pub struct BespokeSolver {
     pub theta: DecodedTheta,
@@ -27,7 +27,70 @@ impl BespokeSolver {
         BespokeSolver { theta: raw.decode(), label: label.into() }
     }
 
+    /// Scratch tensors one [`BespokeSolver::step_into`] call draws from its
+    /// workspace.
+    pub fn stage_buffers(&self) -> usize {
+        match self.theta.base {
+            Base::Rk1 => 1,
+            Base::Rk2 => 3,
+        }
+    }
+
+    /// One Bespoke step computed **in place** (paper eq. 17 / 19-20), with
+    /// scratch drawn from `ws`: zero heap allocation once the pool is
+    /// warm, element-for-element identical to [`BespokeSolver::step`].
+    pub fn step_into(
+        &self,
+        model: &dyn VelocityModel,
+        x: &mut Tensor,
+        i: usize,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let th = &self.theta;
+        let n = th.n;
+        if i >= n {
+            bail!("step index {i} out of range for n={n}");
+        }
+        let h = 1.0f32 / n as f32;
+        match th.base {
+            Base::Rk1 => {
+                let (s_i, s_ip) = (th.s[i], th.s[i + 1]);
+                let mut u = ws.acquire(x.shape());
+                model.eval_into(x, th.t[i], &mut u)?;
+                // x_{i+1} = ((s_i + h sdot_i)/s_{i+1}) x + h tdot_i (s_i/s_{i+1}) u
+                x.scale_axpy((s_i + h * th.sdot[i]) / s_ip, h * th.tdot[i] * s_i / s_ip, &u)?;
+                ws.release(u);
+            }
+            Base::Rk2 => {
+                let j = 2 * i;
+                let (s_i, s_h, s_ip) = (th.s[j], th.s[j + 1], th.s[j + 2]);
+                let (t_i, t_h) = (th.t[j], th.t[j + 1]);
+                let (td_i, td_h) = (th.tdot[j], th.tdot[j + 1]);
+                let (sd_i, sd_h) = (th.sdot[j], th.sdot[j + 1]);
+                // z_i = (s_i + h/2 sdot_i) x + h/2 s_i tdot_i u(x, t_i)   (eq. 20)
+                let mut u = ws.acquire(x.shape());
+                model.eval_into(x, t_i, &mut u)?;
+                let mut z = ws.acquire(x.shape());
+                x.scale_into(s_i + 0.5 * h * sd_i, &mut z)?;
+                z.axpy(0.5 * h * s_i * td_i, &u)?;
+                // u2 = u(z / s_{i+1/2}, t_{i+1/2})
+                let mut zs = ws.acquire(x.shape());
+                z.scale_into(1.0 / s_h, &mut zs)?;
+                model.eval_into(&zs, t_h, &mut u)?; // u now holds u2
+                // x_{i+1} = (s_i/s_{i+1}) x + (h/s_{i+1}) [ (sdot_h/s_h) z + tdot_h s_h u2 ]
+                x.scale_axpy(s_i / s_ip, h / s_ip * sd_h / s_h, &z)?;
+                x.axpy(h / s_ip * td_h * s_h, &u)?;
+                ws.release(zs);
+                ws.release(z);
+                ws.release(u);
+            }
+        }
+        Ok(())
+    }
+
     /// One Bespoke step from integer step index i (paper eq. 17 / 19-20).
+    /// Clone-per-stage reference path; the session loop uses
+    /// [`BespokeSolver::step_into`].
     pub fn step(
         &self,
         model: &dyn VelocityModel,
@@ -73,15 +136,23 @@ impl BespokeSolver {
 
 /// Step-wise execution of a [`BespokeSolver`]: one learned scale-time step
 /// per [`SolveSession::step`], identical arithmetic to the one-shot loop.
+/// Scratch tensors are pre-allocated in [`Sampler::begin`] and recycled
+/// through the session's [`Workspace`]: zero heap allocation per step.
 pub struct BespokeSession<'a> {
     solver: &'a BespokeSolver,
     x: Tensor,
     i: usize,
+    ws: Workspace,
 }
 
 impl SolveSession for BespokeSession<'_> {
     fn init(&mut self, x0: &Tensor) -> Result<()> {
-        self.x = x0.clone();
+        if self.x.shape() == x0.shape() {
+            self.x.copy_from(x0)?;
+        } else {
+            self.x = x0.clone();
+            self.ws = Workspace::preallocate(x0.shape(), self.solver.stage_buffers());
+        }
         self.i = 0;
         Ok(())
     }
@@ -90,7 +161,7 @@ impl SolveSession for BespokeSession<'_> {
         if self.is_done() {
             bail!("session already complete ({} steps)", self.i);
         }
-        self.x = self.solver.step(model, &self.x, self.i)?;
+        self.solver.step_into(model, &mut self.x, self.i, &mut self.ws)?;
         self.i += 1;
         let th = &self.solver.theta;
         Ok(StepInfo {
@@ -125,7 +196,12 @@ impl Sampler for BespokeSolver {
     }
 
     fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
-        Ok(Box::new(BespokeSession { solver: self, x: x0.clone(), i: 0 }))
+        Ok(Box::new(BespokeSession {
+            solver: self,
+            x: x0.clone(),
+            i: 0,
+            ws: Workspace::preallocate(x0.shape(), self.stage_buffers()),
+        }))
     }
 }
 

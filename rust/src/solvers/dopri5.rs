@@ -164,8 +164,20 @@ pub struct Dopri5Session {
     t: f64,
     h: f64,
     x: Tensor,
-    /// FSAL derivative f(x, t); `None` until the first step seeds it.
-    k1: Option<Tensor>,
+    /// Preallocated stage derivatives k1..k7. `stages[0]` doubles as the
+    /// FSAL carry f(x, t) once `seeded`; on an accepted step the stage-7
+    /// buffer is swapped into slot 0 instead of cloned. All seven live for
+    /// the whole session, so the attempt loop allocates nothing (dense
+    /// recording, when on, clones nodes it must retain).
+    stages: Vec<Tensor>,
+    /// Scratch for the stage state x + h * sum a_ij k_j.
+    stage_x: Tensor,
+    /// 5th-order candidate solution (swapped with `x` on acceptance).
+    x5: Tensor,
+    /// Embedded 4th/5th error accumulator.
+    err: Tensor,
+    /// Whether `stages[0]` holds f(x, t) yet.
+    seeded: bool,
     /// Accepted steps so far.
     accepted: usize,
     /// Attempted (accepted + rejected) steps, for the max_steps guard.
@@ -184,7 +196,11 @@ impl Dopri5Session {
             t: 0.0,
             h: 0.05, // initial guess; controller adapts fast
             x: x0.clone(),
-            k1: None,
+            stages: (0..7).map(|_| Tensor::zeros(x0.shape())).collect(),
+            stage_x: Tensor::zeros(x0.shape()),
+            x5: Tensor::zeros(x0.shape()),
+            err: Tensor::zeros(x0.shape()),
+            seeded: false,
             accepted: 0,
             attempts: 0,
             nfe: 0,
@@ -205,23 +221,41 @@ impl Dopri5Session {
     }
 
     /// One accepted step of the adaptive integrator against a generic
-    /// vector field `f(x, t)`.
+    /// vector field `f(x, t)`. Convenience wrapper over
+    /// [`Dopri5Session::step_field_into`] for clone-returning fields.
     pub fn step_field(
         &mut self,
         f: &mut dyn FnMut(&Tensor, f32) -> Result<Tensor>,
+    ) -> Result<StepInfo> {
+        let mut g = |x: &Tensor, t: f32, out: &mut Tensor| -> Result<()> {
+            let r = f(x, t)?;
+            out.copy_from(&r)
+        };
+        self.step_field_into(&mut g)
+    }
+
+    /// One accepted step against a write-into vector field `f(x, t, out)`.
+    /// All stage/candidate/error storage is preallocated in the session, so
+    /// the attempt loop performs zero heap allocation (dense-output
+    /// recording, when enabled, clones the nodes it retains). Arithmetic is
+    /// element-for-element identical to the clone-per-stage reference
+    /// integrator kept in [`reference_solve`].
+    pub fn step_field_into(
+        &mut self,
+        f: &mut dyn FnMut(&Tensor, f32, &mut Tensor) -> Result<()>,
     ) -> Result<StepInfo> {
         if self.is_done() {
             bail!("session already complete (t = {})", self.t);
         }
         let mut nfe_step = 0usize;
-        if self.k1.is_none() {
-            let k1 = f(&self.x, 0.0)?;
+        if !self.seeded {
+            f(&self.x, 0.0, &mut self.stages[0])?;
             if self.record_dense {
                 self.ts.push(0.0);
                 self.xs.push(self.x.clone());
-                self.fs.push(k1.clone());
+                self.fs.push(self.stages[0].clone());
             }
-            self.k1 = Some(k1);
+            self.seeded = true;
             self.nfe += 1;
             nfe_step += 1;
         }
@@ -233,32 +267,32 @@ impl Dopri5Session {
             self.h = self.h.min(1.0 - self.t);
             let (t, h) = (self.t, self.h);
 
-            // stages
-            let mut k = Vec::with_capacity(7);
-            k.push(self.k1.as_ref().unwrap().clone()); // FSAL
+            // stages 2..7 into the preallocated buffers (stages[0] is the
+            // FSAL carry f(x, t))
             for s in 1..7 {
-                let mut xs_stage = self.x.clone();
-                for (j, kj) in k.iter().enumerate() {
+                self.stage_x.copy_from(&self.x)?;
+                let (prev, rest) = self.stages.split_at_mut(s);
+                for (j, kj) in prev.iter().enumerate() {
                     let a = A[s][j];
                     if a != 0.0 {
-                        xs_stage.axpy((a * h) as f32, kj)?;
+                        self.stage_x.axpy((a * h) as f32, kj)?;
                     }
                 }
-                k.push(f(&xs_stage, (t + C[s] * h) as f32)?);
+                f(&self.stage_x, (t + C[s] * h) as f32, &mut rest[0])?;
                 self.nfe += 1;
                 nfe_step += 1;
             }
 
             // 5th order solution + embedded error
-            let mut x5 = self.x.clone();
-            let mut err = Tensor::zeros(self.x.shape());
+            self.x5.copy_from(&self.x)?;
+            self.err.fill(0.0);
             for s in 0..7 {
                 if B5[s] != 0.0 {
-                    x5.axpy((B5[s] * h) as f32, &k[s])?;
+                    self.x5.axpy((B5[s] * h) as f32, &self.stages[s])?;
                 }
                 let db = B5[s] - B4[s];
                 if db != 0.0 {
-                    err.axpy((db * h) as f32, &k[s])?;
+                    self.err.axpy((db * h) as f32, &self.stages[s])?;
                 }
             }
 
@@ -270,8 +304,8 @@ impl Dopri5Session {
             let mut enorm = 0.0f64;
             {
                 let xd = self.x.data();
-                let x5d = x5.data();
-                let ed = err.data();
+                let x5d = self.x5.data();
+                let ed = self.err.data();
                 let dcols = self.x.cols();
                 for i in 0..self.x.rows() {
                     let mut acc = 0.0f64;
@@ -287,15 +321,15 @@ impl Dopri5Session {
             let accepted = enorm <= 1.0;
             if accepted {
                 self.t += h;
-                self.x = x5;
+                std::mem::swap(&mut self.x, &mut self.x5);
                 self.accepted += 1;
-                let k1 = k.pop().unwrap(); // stage 7 value = f(x5, t+h) (FSAL)
+                // FSAL: stage 7 value = f(x5, t+h) becomes the next k1
+                self.stages.swap(0, 6);
                 if self.record_dense {
                     self.ts.push(self.t as f32);
                     self.xs.push(self.x.clone());
-                    self.fs.push(k1.clone());
+                    self.fs.push(self.stages[0].clone());
                 }
-                self.k1 = Some(k1);
             }
             // PI-free step controller
             let factor = if enorm > 0.0 {
@@ -324,13 +358,29 @@ impl Dopri5Session {
 
 impl SolveSession for Dopri5Session {
     fn init(&mut self, x0: &Tensor) -> Result<()> {
-        *self = Dopri5Session::new(self.cfg, x0, self.record_dense);
+        if self.x.shape() == x0.shape() {
+            // Keep the preallocated stage/candidate/error buffers (they are
+            // fully overwritten every attempt; stages[0] re-seeds on the
+            // first step) — same-shape re-init allocates nothing.
+            self.x.copy_from(x0)?;
+            self.ts.clear();
+            self.xs.clear();
+            self.fs.clear();
+            self.t = 0.0;
+            self.h = 0.05;
+            self.seeded = false;
+            self.accepted = 0;
+            self.attempts = 0;
+            self.nfe = 0;
+        } else {
+            *self = Dopri5Session::new(self.cfg, x0, self.record_dense);
+        }
         Ok(())
     }
 
     fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
-        let mut f = |x: &Tensor, t: f32| model.eval(x, t);
-        self.step_field(&mut f)
+        let mut f = |x: &Tensor, t: f32, out: &mut Tensor| model.eval_into(x, t, out);
+        self.step_field_into(&mut f)
     }
 
     fn is_done(&self) -> bool {
@@ -389,6 +439,87 @@ impl Sampler for Dopri5 {
     fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
         Ok(Box::new(self.session(x0)))
     }
+}
+
+/// The pre-workspace clone-per-stage integrator, retained verbatim as the
+/// bitwise reference for the zero-allocation session (equivalence tests in
+/// `rust/tests/perf_equivalence.rs` and the `_naive` benchmarks). Returns
+/// the final state and the total NFE.
+pub fn reference_solve(
+    cfg: &Dopri5,
+    f: &mut dyn FnMut(&Tensor, f32) -> Result<Tensor>,
+    x0: &Tensor,
+) -> Result<(Tensor, usize)> {
+    let mut t = 0.0f64;
+    let mut h = 0.05f64;
+    let mut x = x0.clone();
+    let mut k1 = f(&x, 0.0)?;
+    let mut nfe = 1usize;
+    let mut attempts = 0usize;
+    while t < 1.0 {
+        if attempts >= cfg.max_steps {
+            bail!("dopri5: exceeded {} steps (tol too tight?)", cfg.max_steps);
+        }
+        attempts += 1;
+        h = h.min(1.0 - t);
+
+        let mut k = Vec::with_capacity(7);
+        k.push(k1.clone()); // FSAL
+        for s in 1..7 {
+            let mut xs_stage = x.clone();
+            for (j, kj) in k.iter().enumerate() {
+                let a = A[s][j];
+                if a != 0.0 {
+                    xs_stage.axpy((a * h) as f32, kj)?;
+                }
+            }
+            k.push(f(&xs_stage, (t + C[s] * h) as f32)?);
+            nfe += 1;
+        }
+
+        let mut x5 = x.clone();
+        let mut err = Tensor::zeros(x.shape());
+        for s in 0..7 {
+            if B5[s] != 0.0 {
+                x5.axpy((B5[s] * h) as f32, &k[s])?;
+            }
+            let db = B5[s] - B4[s];
+            if db != 0.0 {
+                err.axpy((db * h) as f32, &k[s])?;
+            }
+        }
+
+        let scale_tol =
+            |a: f32, b: f32| (cfg.atol + cfg.rtol * a.abs().max(b.abs()) as f64) as f32;
+        let mut enorm = 0.0f64;
+        {
+            let xd = x.data();
+            let x5d = x5.data();
+            let ed = err.data();
+            let dcols = x.cols();
+            for i in 0..x.rows() {
+                let mut acc = 0.0f64;
+                for j in 0..dcols {
+                    let idx = i * dcols + j;
+                    let w = ed[idx] / scale_tol(xd[idx], x5d[idx]);
+                    acc += (w as f64) * (w as f64);
+                }
+                enorm = enorm.max((acc / dcols as f64).sqrt());
+            }
+        }
+
+        let accepted = enorm <= 1.0;
+        if accepted {
+            t += h;
+            x = x5;
+            k1 = k.pop().unwrap(); // stage 7 value = f(x5, t+h) (FSAL)
+        }
+        let factor =
+            if enorm > 0.0 { (0.9 * (1.0 / enorm).powf(0.2)).clamp(0.2, 5.0) } else { 5.0 };
+        h *= factor;
+        h = h.max(1e-7);
+    }
+    Ok((x, nfe))
 }
 
 #[cfg(test)]

@@ -76,6 +76,13 @@ pub struct StepInfo {
 /// returns true, then read the final sample from [`SolveSession::state`].
 /// [`SolveSession::init`] rewinds the session to t = 0 with a fresh noise
 /// batch so sessions can be reused without rebuilding the solver.
+///
+/// Allocation contract: a session **owns** its stage buffers (pre-allocated
+/// in `begin()`, recycled through a [`crate::tensor::Workspace`]) — that is
+/// why `step` takes `&mut self`. After `begin()` the step loop performs
+/// zero heap allocation (pinned by `rust/tests/alloc_free.rs`; see
+/// DESIGN.md §7), while remaining bitwise identical to the retained
+/// clone-per-stage reference paths (`rust/tests/perf_equivalence.rs`).
 pub trait SolveSession: Send {
     /// (Re)initialize the trajectory at x(0) = x0.
     fn init(&mut self, x0: &Tensor) -> Result<()>;

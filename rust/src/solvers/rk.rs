@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 
 use super::{Sampler, SolveSession, StepInfo};
 use crate::models::VelocityModel;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BaseRk {
@@ -41,8 +41,78 @@ impl BaseRk {
         }
     }
 
+    /// Stage buffers [`BaseRk::step_into`] acquires from its workspace per
+    /// step (sessions pre-fill the pool with exactly this many in `begin`).
+    pub fn stage_buffers(&self) -> usize {
+        match self {
+            BaseRk::Rk1 => 1,
+            BaseRk::Rk2 => 2,
+            BaseRk::Rk4 => 5,
+        }
+    }
+
+    /// One step x(t) -> x(t + h) computed **in place** against a write-into
+    /// vector field `f(x, t, out)`, with all stage storage drawn from (and
+    /// returned to) `ws`: zero heap allocation once the pool is warm. The
+    /// arithmetic is element-for-element identical to [`BaseRk::step`], so
+    /// swapping the paths is bitwise neutral (pinned by tests).
+    pub fn step_into(
+        &self,
+        f: &mut dyn FnMut(&Tensor, f32, &mut Tensor) -> Result<()>,
+        x: &mut Tensor,
+        t: f32,
+        h: f32,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        match self {
+            BaseRk::Rk1 => {
+                let mut k1 = ws.acquire(x.shape());
+                f(x, t, &mut k1)?;
+                x.axpy(h, &k1)?;
+                ws.release(k1);
+            }
+            BaseRk::Rk2 => {
+                let mut k = ws.acquire(x.shape());
+                f(x, t, &mut k)?;
+                let mut mid = ws.acquire(x.shape());
+                mid.copy_from(x)?;
+                mid.axpy(0.5 * h, &k)?;
+                f(&mid, t + 0.5 * h, &mut k)?; // k now holds k2
+                x.axpy(h, &k)?;
+                ws.release(mid);
+                ws.release(k);
+            }
+            BaseRk::Rk4 => {
+                let mut k1 = ws.acquire(x.shape());
+                f(x, t, &mut k1)?;
+                let mut xs = ws.acquire(x.shape());
+                xs.copy_from(x)?;
+                xs.axpy(0.5 * h, &k1)?;
+                let mut k2 = ws.acquire(x.shape());
+                f(&xs, t + 0.5 * h, &mut k2)?;
+                xs.copy_from(x)?;
+                xs.axpy(0.5 * h, &k2)?;
+                let mut k3 = ws.acquire(x.shape());
+                f(&xs, t + 0.5 * h, &mut k3)?;
+                xs.copy_from(x)?;
+                xs.axpy(h, &k3)?;
+                let mut k4 = ws.acquire(x.shape());
+                f(&xs, t + h, &mut k4)?;
+                x.axpy(h / 6.0, &k1)?;
+                x.axpy(h / 3.0, &k2)?;
+                x.axpy(h / 3.0, &k3)?;
+                x.axpy(h / 6.0, &k4)?;
+                for buf in [k1, k2, k3, k4, xs] {
+                    ws.release(buf);
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// One step x(t) -> x(t + h) of the classic method against a generic
-    /// vector field `f(x, t)`.
+    /// vector field `f(x, t)`. Clone-per-stage reference path; the hot loop
+    /// uses [`BaseRk::step_into`].
     pub fn step(
         &self,
         f: &mut dyn FnMut(&Tensor, f32) -> Result<Tensor>,
@@ -127,16 +197,25 @@ impl FixedGridSolver {
 
 /// Step-wise execution of a [`FixedGridSolver`]: one grid interval per
 /// [`SolveSession::step`], arithmetic identical to the one-shot [`solve`].
+/// Stage buffers are pre-allocated in [`Sampler::begin`] and recycled
+/// through the session's [`Workspace`], so the step loop performs zero
+/// heap allocation (pinned by `rust/tests/alloc_free.rs`).
 pub struct FixedGridSession<'a> {
     solver: &'a FixedGridSolver,
     x: Tensor,
     /// Index of the next grid interval [grid[i], grid[i+1]] to integrate.
     i: usize,
+    ws: Workspace,
 }
 
 impl SolveSession for FixedGridSession<'_> {
     fn init(&mut self, x0: &Tensor) -> Result<()> {
-        self.x = x0.clone();
+        if self.x.shape() == x0.shape() {
+            self.x.copy_from(x0)?;
+        } else {
+            self.x = x0.clone();
+            self.ws = Workspace::preallocate(x0.shape(), self.solver.base.stage_buffers());
+        }
         self.i = 0;
         Ok(())
     }
@@ -146,8 +225,8 @@ impl SolveSession for FixedGridSession<'_> {
             bail!("session already complete ({} steps)", self.i);
         }
         let (t, tn) = (self.solver.grid[self.i], self.solver.grid[self.i + 1]);
-        let mut f = |x: &Tensor, t: f32| model.eval(x, t);
-        self.x = self.solver.base.step(&mut f, &self.x, t, tn - t)?;
+        let mut f = |x: &Tensor, t: f32, out: &mut Tensor| model.eval_into(x, t, out);
+        self.solver.base.step_into(&mut f, &mut self.x, t, tn - t, &mut self.ws)?;
         self.i += 1;
         Ok(StepInfo {
             step: self.i - 1,
@@ -183,7 +262,12 @@ impl Sampler for FixedGridSolver {
         if self.grid.len() < 2 {
             bail!("time grid needs at least 2 points");
         }
-        Ok(Box::new(FixedGridSession { solver: self, x: x0.clone(), i: 0 }))
+        Ok(Box::new(FixedGridSession {
+            solver: self,
+            x: x0.clone(),
+            i: 0,
+            ws: Workspace::preallocate(x0.shape(), self.base.stage_buffers()),
+        }))
     }
 }
 

@@ -19,7 +19,7 @@ use super::rk::BaseRk;
 use super::{Sampler, SolveSession, StepInfo};
 use crate::models::VelocityModel;
 use crate::schedulers::{transfer_map, Scheduler};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 
 pub struct TransferSolver {
     pub source: Scheduler,
@@ -46,14 +46,35 @@ impl TransferSolver {
         ((t), (s), (tp - tm) / dr, (sp - sm) / dr)
     }
 
-    /// u_bar(x_bar, r) on the transformed path.
-    fn u_bar(&self, model: &dyn VelocityModel, xbar: &Tensor, r: f64) -> Result<Tensor> {
+    /// u_bar(x_bar, r) on the transformed path. Clone-per-stage reference
+    /// path (public so equivalence tests can rebuild the naive loop); the
+    /// session hot loop uses [`TransferSolver::u_bar_into`].
+    pub fn u_bar(&self, model: &dyn VelocityModel, xbar: &Tensor, r: f64) -> Result<Tensor> {
         let (t, s, dt, ds) = self.map_with_derivs(r);
         let x = xbar.scale(1.0 / s as f32);
         let u = model.eval(&x, t as f32)?;
         let mut out = xbar.scale((ds / s) as f32);
         out.axpy((dt * s) as f32, &u)?;
         Ok(out)
+    }
+
+    /// [`TransferSolver::u_bar`] computed into caller-owned buffers
+    /// (`xb`/`ub` scratch for the untransformed state and velocity): zero
+    /// heap allocation, element-for-element identical arithmetic.
+    fn u_bar_into(
+        &self,
+        model: &dyn VelocityModel,
+        xbar: &Tensor,
+        r: f64,
+        xb: &mut Tensor,
+        ub: &mut Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let (t, s, dt, ds) = self.map_with_derivs(r);
+        xbar.scale_into(1.0 / s as f32, xb)?;
+        model.eval_into(xb, t as f32, ub)?;
+        xbar.scale_into((ds / s) as f32, out)?;
+        out.axpy((dt * s) as f32, ub)
     }
 }
 
@@ -62,6 +83,9 @@ impl TransferSolver {
 /// x_bar(r) / s_r for [`SolveSession::state`], so streamed intermediate
 /// states live on the model's own path; the final state is exactly the
 /// one-shot untransform x(1) = x_bar(1) / s_1.
+/// Stage buffers come from the session's [`Workspace`] and the two
+/// transformed-field scratch tensors are session fields, so the step loop
+/// performs zero heap allocation after [`Sampler::begin`].
 pub struct TransferSession<'a> {
     solver: &'a TransferSolver,
     xbar: Tensor,
@@ -69,11 +93,16 @@ pub struct TransferSession<'a> {
     x: Tensor,
     /// Number of completed steps; step i integrates r in [i h, (i+1) h].
     i: usize,
+    ws: Workspace,
+    /// Scratch for the untransformed state x_bar / s_r inside u_bar.
+    scratch_x: Tensor,
+    /// Scratch for the model velocity u(x, t_r) inside u_bar.
+    scratch_u: Tensor,
 }
 
 impl TransferSession<'_> {
     /// Refresh the untransformed view x = x_bar / s_r at the current r.
-    fn untransform(&mut self) {
+    fn untransform(&mut self) -> Result<()> {
         // At exactly r = 1 this is the one-shot final untransform; r = 0
         // has s_0 = 1 by construction.
         let r = if self.i == self.solver.n {
@@ -82,15 +111,23 @@ impl TransferSession<'_> {
             self.i as f64 / self.solver.n as f64
         };
         let (_, s) = transfer_map(self.solver.source, self.solver.target, r);
-        self.x = self.xbar.scale(1.0 / s as f32);
+        self.xbar.scale_into(1.0 / s as f32, &mut self.x)
     }
 }
 
 impl SolveSession for TransferSession<'_> {
     fn init(&mut self, x0: &Tensor) -> Result<()> {
         // x_bar(0) = s_0 x(0); s_0 = sigma_target(0)/sigma_source(0) = 1.
-        self.xbar = x0.clone();
-        self.x = x0.clone();
+        if self.xbar.shape() == x0.shape() {
+            self.xbar.copy_from(x0)?;
+            self.x.copy_from(x0)?;
+        } else {
+            self.xbar = x0.clone();
+            self.x = x0.clone();
+            self.scratch_x = Tensor::zeros(x0.shape());
+            self.scratch_u = Tensor::zeros(x0.shape());
+            self.ws = Workspace::preallocate(x0.shape(), self.solver.base.stage_buffers());
+        }
         self.i = 0;
         Ok(())
     }
@@ -101,10 +138,13 @@ impl SolveSession for TransferSession<'_> {
         }
         let h = 1.0 / self.solver.n as f64;
         let r = self.i as f64 * h;
-        let mut f = |x: &Tensor, r: f32| self.solver.u_bar(model, x, r as f64);
-        self.xbar = self.solver.base.step(&mut f, &self.xbar, r as f32, h as f32)?;
+        let TransferSession { solver, xbar, ws, scratch_x, scratch_u, .. } = self;
+        let mut f = |xb: &Tensor, r: f32, out: &mut Tensor| {
+            solver.u_bar_into(model, xb, r as f64, scratch_x, scratch_u, out)
+        };
+        solver.base.step_into(&mut f, xbar, r as f32, h as f32, ws)?;
         self.i += 1;
-        self.untransform();
+        self.untransform()?;
         Ok(StepInfo {
             step: self.i - 1,
             t: if self.i == self.solver.n { 1.0 } else { (self.i as f64 * h) as f32 },
@@ -144,6 +184,9 @@ impl Sampler for TransferSolver {
             xbar: x0.clone(),
             x: x0.clone(),
             i: 0,
+            ws: Workspace::preallocate(x0.shape(), self.base.stage_buffers()),
+            scratch_x: Tensor::zeros(x0.shape()),
+            scratch_u: Tensor::zeros(x0.shape()),
         }))
     }
 }

@@ -6,10 +6,52 @@
 
 use anyhow::{bail, Result};
 
+/// Row granularity of the chunked reductions ([`Tensor::mean_axis0`],
+/// [`Tensor::covariance`]). Partial sums are computed per fixed-size chunk
+/// and combined in chunk order, so the result is **bitwise identical for
+/// every thread count** (including 1) — only wall-clock changes. Inputs of
+/// up to this many rows reduce in a single chunk, i.e. plain serial order.
+pub const PAR_CHUNK_ROWS: usize = 256;
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     data: Vec<f32>,
     shape: Vec<usize>,
+}
+
+/// Run `f(chunk_index)` for `nchunks` chunks on up to `nt` threads and
+/// return the results in chunk order. Chunks are assigned round-robin
+/// (thread `ti` takes chunks `ti, ti + nt, ...`), so scheduling never
+/// affects which chunk computes what; callers combine the returned partials
+/// in index order, making the reduction deterministic in the thread count.
+fn run_chunked<T: Send>(nchunks: usize, nt: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let nt = nt.max(1).min(nchunks.max(1));
+    if nt <= 1 {
+        return (0..nchunks).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..nchunks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..nt)
+            .map(|ti| {
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    let mut ci = ti;
+                    while ci < nchunks {
+                        got.push((ci, f(ci)));
+                        ci += nt;
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            for (ci, v) in h.join().expect("chunk worker panicked") {
+                out[ci] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|v| v.expect("chunk not computed")).collect()
 }
 
 impl Tensor {
@@ -147,6 +189,58 @@ impl Tensor {
         Ok(())
     }
 
+    // ---- allocation-free variants (the solver hot path) ------------------
+    //
+    // `*_into` ops write into a caller-owned tensor of the same shape and
+    // compute element-for-element the same expressions as their allocating
+    // counterparts, so swapping one for the other is bitwise neutral.
+    // (The solver loops mostly reach for the fused `axpy`/`scale_axpy`/
+    // `scale_into` forms; `add_into`/`sub_into` complete the in-place kit
+    // for callers whose update is a plain sum/difference.)
+
+    /// out = self + other, without allocating.
+    pub fn add_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
+        self.check_same_shape(other)?;
+        self.check_same_shape(out)?;
+        for ((o, a), b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+            *o = a + b;
+        }
+        Ok(())
+    }
+
+    /// out = self - other, without allocating.
+    pub fn sub_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
+        self.check_same_shape(other)?;
+        self.check_same_shape(out)?;
+        for ((o, a), b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+            *o = a - b;
+        }
+        Ok(())
+    }
+
+    /// out = c * self, without allocating.
+    pub fn scale_into(&self, c: f32, out: &mut Tensor) -> Result<()> {
+        self.check_same_shape(out)?;
+        for (o, a) in out.data.iter_mut().zip(&self.data) {
+            *o = a * c;
+        }
+        Ok(())
+    }
+
+    /// self = src (elementwise copy; shapes must already match).
+    pub fn copy_from(&mut self, src: &Tensor) -> Result<()> {
+        self.check_same_shape(src)?;
+        self.data.copy_from_slice(&src.data);
+        Ok(())
+    }
+
+    /// Set every element to `v` (no allocation).
+    pub fn fill(&mut self, v: f32) {
+        for x in self.data.iter_mut() {
+            *x = v;
+        }
+    }
+
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
         Tensor { data: self.data.iter().map(|&x| f(x)).collect(), shape: self.shape.clone() }
     }
@@ -189,31 +283,78 @@ impl Tensor {
             .collect()
     }
 
-    /// Column means of a [B, d] tensor.
+    /// Column means of a [B, d] tensor. Parallel over fixed-size row chunks
+    /// (see [`PAR_CHUNK_ROWS`]); the result does not depend on the thread
+    /// count.
     pub fn mean_axis0(&self) -> Vec<f32> {
-        let (b, d) = (self.rows(), self.cols());
-        let mut out = vec![0.0f64; d];
-        for i in 0..b {
-            for (j, v) in self.row(i).iter().enumerate() {
-                out[j] += *v as f64;
-            }
-        }
-        out.iter().map(|x| (x / b as f64) as f32).collect()
+        self.mean_axis0_with_threads(crate::util::threads::get())
     }
 
-    /// Sample covariance (d x d, row-major) of a [B, d] tensor.
-    pub fn covariance(&self) -> Vec<f64> {
+    /// [`Tensor::mean_axis0`] with an explicit thread count (tests/benches).
+    pub fn mean_axis0_with_threads(&self, nt: usize) -> Vec<f32> {
+        let b = self.rows();
+        let sums = self.chunked_col_sums(nt);
+        sums.iter().map(|x| (x / b as f64) as f32).collect()
+    }
+
+    /// Per-column f64 sums, reduced over [`PAR_CHUNK_ROWS`]-row chunks in
+    /// chunk order — identical for every `nt`.
+    fn chunked_col_sums(&self, nt: usize) -> Vec<f64> {
         let (b, d) = (self.rows(), self.cols());
-        let mu: Vec<f64> = self.mean_axis0().iter().map(|&x| x as f64).collect();
-        let mut cov = vec![0.0f64; d * d];
-        for i in 0..b {
-            let r = self.row(i);
-            for p in 0..d {
-                let dp = r[p] as f64 - mu[p];
-                for q in p..d {
-                    let dq = r[q] as f64 - mu[q];
-                    cov[p * d + q] += dp * dq;
+        let nchunks = b.div_ceil(PAR_CHUNK_ROWS).max(1);
+        let partials = run_chunked(nchunks, nt, |ci| {
+            let lo = ci * PAR_CHUNK_ROWS;
+            let hi = (lo + PAR_CHUNK_ROWS).min(b);
+            let mut acc = vec![0.0f64; d];
+            for i in lo..hi {
+                for (j, v) in self.row(i).iter().enumerate() {
+                    acc[j] += *v as f64;
                 }
+            }
+            acc
+        });
+        let mut out = vec![0.0f64; d];
+        for p in partials {
+            for (o, v) in out.iter_mut().zip(p) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Sample covariance (d x d, row-major) of a [B, d] tensor. Parallel
+    /// over fixed-size row chunks; the result does not depend on the thread
+    /// count (partials combine in chunk order).
+    pub fn covariance(&self) -> Vec<f64> {
+        self.covariance_with_threads(crate::util::threads::get())
+    }
+
+    /// [`Tensor::covariance`] with an explicit thread count (tests/benches).
+    pub fn covariance_with_threads(&self, nt: usize) -> Vec<f64> {
+        let (b, d) = (self.rows(), self.cols());
+        let mu: Vec<f64> = self.mean_axis0_with_threads(nt).iter().map(|&x| x as f64).collect();
+        let nchunks = b.div_ceil(PAR_CHUNK_ROWS).max(1);
+        let mu_ref = &mu;
+        let partials = run_chunked(nchunks, nt, |ci| {
+            let lo = ci * PAR_CHUNK_ROWS;
+            let hi = (lo + PAR_CHUNK_ROWS).min(b);
+            let mut acc = vec![0.0f64; d * d];
+            for i in lo..hi {
+                let r = self.row(i);
+                for p in 0..d {
+                    let dp = r[p] as f64 - mu_ref[p];
+                    for q in p..d {
+                        let dq = r[q] as f64 - mu_ref[q];
+                        acc[p * d + q] += dp * dq;
+                    }
+                }
+            }
+            acc
+        });
+        let mut cov = vec![0.0f64; d * d];
+        for part in partials {
+            for (o, v) in cov.iter_mut().zip(part) {
+                *o += v;
             }
         }
         let denom = (b.max(2) - 1) as f64;
@@ -252,6 +393,51 @@ impl Tensor {
             data.extend_from_slice(self.row(i));
         }
         Tensor { data, shape: vec![idx.len(), d] }
+    }
+}
+
+/// A scratch-buffer pool keyed by shape: the allocation-free backing store
+/// for solver stage tensors. A session pre-fills the pool in `begin()`
+/// ([`Workspace::preallocate`]); each step [`Workspace::acquire`]s buffers
+/// and [`Workspace::release`]s them back, so the steady-state step loop
+/// performs **zero heap allocation** (acquire pops a pooled tensor, release
+/// pushes within the Vec's retained capacity). Acquired buffers carry
+/// whatever bytes the previous user left — callers must fully overwrite
+/// them (`copy_from` / `scale_into` / `fill`).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Tensor>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { pool: Vec::new() }
+    }
+
+    /// A pool pre-filled with `count` zero tensors of `shape` (plus slack
+    /// capacity so release() never reallocates the pool itself).
+    pub fn preallocate(shape: &[usize], count: usize) -> Workspace {
+        let mut pool = Vec::with_capacity(count + 2);
+        pool.extend((0..count).map(|_| Tensor::zeros(shape)));
+        Workspace { pool }
+    }
+
+    /// Pop a pooled tensor of `shape`, or allocate one if none matches.
+    pub fn acquire(&mut self, shape: &[usize]) -> Tensor {
+        match self.pool.iter().rposition(|t| t.shape() == shape) {
+            Some(i) => self.pool.swap_remove(i),
+            None => Tensor::zeros(shape),
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn release(&mut self, t: Tensor) {
+        self.pool.push(t);
+    }
+
+    /// Buffers currently sitting in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
     }
 }
 
@@ -327,5 +513,60 @@ mod tests {
         let t = Tensor::zeros(&[4]);
         assert!(t.clone().reshape(&[2, 2]).is_ok());
         assert!(t.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ops_bitwise() {
+        let a = t2(&[&[1.0, 2.5], &[-3.0, 4.0]]);
+        let b = t2(&[&[0.5, -0.5], &[1.25, 1.0]]);
+        let mut out = Tensor::zeros(&[2, 2]);
+        a.add_into(&b, &mut out).unwrap();
+        assert_eq!(out.data(), a.add(&b).unwrap().data());
+        a.sub_into(&b, &mut out).unwrap();
+        assert_eq!(out.data(), a.sub(&b).unwrap().data());
+        a.scale_into(0.3, &mut out).unwrap();
+        assert_eq!(out.data(), a.scale(0.3).data());
+        out.copy_from(&b).unwrap();
+        assert_eq!(out.data(), b.data());
+        out.fill(7.0);
+        assert_eq!(out.data(), &[7.0; 4]);
+        // shape mismatches rejected
+        let mut bad = Tensor::zeros(&[4]);
+        assert!(a.add_into(&b, &mut bad).is_err());
+        assert!(a.scale_into(1.0, &mut bad).is_err());
+        assert!(bad.copy_from(&a).is_err());
+    }
+
+    #[test]
+    fn workspace_pools_by_shape() {
+        let mut ws = Workspace::preallocate(&[2, 3], 2);
+        assert_eq!(ws.pooled(), 2);
+        let a = ws.acquire(&[2, 3]);
+        let b = ws.acquire(&[2, 3]);
+        assert_eq!(ws.pooled(), 0);
+        // mismatched shape falls back to a fresh allocation
+        let c = ws.acquire(&[4]);
+        assert_eq!(c.shape(), &[4]);
+        ws.release(a);
+        ws.release(b);
+        ws.release(c);
+        assert_eq!(ws.pooled(), 3);
+        // acquire prefers pooled buffers of the right shape
+        assert_eq!(ws.acquire(&[4]).shape(), &[4]);
+        assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn chunked_reductions_are_thread_count_invariant() {
+        // b > PAR_CHUNK_ROWS with a ragged final chunk; d = 3
+        let b = 2 * PAR_CHUNK_ROWS + 37;
+        let mut rng = crate::util::Rng::new(11);
+        let t = Tensor::new(rng.normal_vec(b * 3), vec![b, 3]).unwrap();
+        let mu1 = t.mean_axis0_with_threads(1);
+        let cov1 = t.covariance_with_threads(1);
+        for nt in [2usize, 3, 7] {
+            assert_eq!(t.mean_axis0_with_threads(nt), mu1, "mean nt={nt}");
+            assert_eq!(t.covariance_with_threads(nt), cov1, "cov nt={nt}");
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! Small shared utilities: deterministic RNG, wall-clock timers, logging.
 
 pub mod rng;
+pub mod threads;
 pub mod timer;
 
 pub use rng::Rng;

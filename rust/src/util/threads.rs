@@ -1,0 +1,60 @@
+//! Compute-thread policy for the row-parallel host kernels (analytic model
+//! eval, batch statistics, Fréchet distance).
+//!
+//! Resolution order for [`get`]:
+//!
+//! 1. an explicit [`set`] override (CLI `--threads` / `serve.compute_threads`
+//!    config key, applied at startup),
+//! 2. the `BESPOKE_THREADS` environment variable,
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! Every parallel kernel is written so its result is **independent of the
+//! thread count** (row-parallel kernels are embarrassingly parallel;
+//! reductions run over fixed-size chunks combined in chunk order — see
+//! DESIGN.md §7), so this knob trades wall-clock for nothing else.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Explicit override; 0 means "unset".
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Cached env/hardware default (resolved once).
+static DEFAULT: OnceLock<usize> = OnceLock::new();
+
+/// Pin the compute-thread count for this process (config/CLI path).
+/// `n = 0` clears the override back to env/hardware resolution.
+pub fn set(n: usize) {
+    OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// The compute-thread count kernels should use right now (always >= 1).
+pub fn get() -> usize {
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    *DEFAULT.get_or_init(|| {
+        if let Ok(s) = std::env::var("BESPOKE_THREADS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_wins_and_clears() {
+        set(3);
+        assert_eq!(get(), 3);
+        set(0);
+        assert!(get() >= 1);
+    }
+}

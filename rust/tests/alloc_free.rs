@@ -1,0 +1,102 @@
+//! Integration: the solver step loops really are allocation-free. A
+//! counting global allocator tracks this thread's heap allocations; after
+//! `begin()` (plus one warm pass to populate per-thread scratch), driving
+//! any fixed-grid / bespoke / transfer / dopri5 session over the analytic
+//! model must perform **zero** heap allocations per step.
+//!
+//! This file intentionally holds a single #[test] so no concurrent test
+//! threads muddy the counter (it is thread-local anyway, belt and braces).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use bespoke_flow::models::AnalyticModel;
+use bespoke_flow::schedulers::Scheduler;
+use bespoke_flow::solvers::rk::{BaseRk, FixedGridSolver};
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{BespokeSolver, Dopri5, Sampler, TransferSolver};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers to the system allocator; the counter is a plain
+// thread-local Cell bump (try_with so TLS teardown can never recurse).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn solver_step_loops_are_allocation_free() {
+    // Force the serial kernels: the parallel paths spawn scoped threads,
+    // which allocate by design (and are off below the work threshold
+    // anyway for this tiny model).
+    bespoke_flow::util::threads::set(1);
+
+    // sanity: the counter actually counts
+    let before = allocs();
+    let v: Vec<u64> = Vec::with_capacity(64);
+    assert!(allocs() > before, "counting allocator not engaged");
+    drop(v);
+
+    let pts =
+        Tensor::from_rows(&[vec![0.9, 0.1], vec![-0.7, -0.5], vec![0.2, 1.1]]).unwrap();
+    let model = AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, 8).unwrap();
+    let mut rng = Rng::new(3);
+    let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+
+    let samplers: Vec<Box<dyn Sampler>> = vec![
+        Box::new(FixedGridSolver::uniform(BaseRk::Rk1, 8)),
+        Box::new(FixedGridSolver::uniform(BaseRk::Rk2, 8)),
+        Box::new(FixedGridSolver::uniform(BaseRk::Rk4, 4)),
+        Box::new(BespokeSolver::new(&RawTheta::identity(Base::Rk1, 8))),
+        Box::new(BespokeSolver::new(&RawTheta::identity(Base::Rk2, 6))),
+        Box::new(TransferSolver::new(Scheduler::CondOt, Scheduler::VarPres, BaseRk::Rk2, 6)),
+        Box::new(Dopri5::default()),
+    ];
+
+    for sampler in &samplers {
+        let mut sess = sampler.begin(&x0).unwrap();
+        // Warm pass: first-touch costs (thread-local logits scratch, TLS
+        // destructor registration) land here, outside the measurement.
+        while !sess.is_done() {
+            sess.step(&model).unwrap();
+        }
+        sess.init(&x0).unwrap();
+        let before = allocs();
+        let mut steps = 0usize;
+        while !sess.is_done() {
+            sess.step(&model).unwrap();
+            steps += 1;
+        }
+        let delta = allocs() - before;
+        assert!(steps > 0, "{}: no steps ran", sampler.name());
+        assert_eq!(
+            delta,
+            0,
+            "{}: {delta} heap allocations across {steps} steps (expected 0)",
+            sampler.name()
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: the zero-allocation hot paths are *refactors*, not
+//! re-derivations — every workspace-based solver session must be bitwise
+//! identical to the retained clone-per-stage reference implementation, and
+//! every parallel kernel must match its serial result exactly for any
+//! thread count (including counts that do not divide the row count).
+//!
+//! Runs against the pure-Rust `AnalyticModel` oracle, so it needs no
+//! compiled artifacts.
+
+use bespoke_flow::eval::frechet_distance_with_threads;
+use bespoke_flow::models::{AnalyticModel, VelocityModel};
+use bespoke_flow::schedulers::{transfer_map, Scheduler};
+use bespoke_flow::solvers::dopri5::{reference_solve, Dopri5};
+use bespoke_flow::solvers::rk::{solve, BaseRk, FixedGridSolver};
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{BespokeSolver, Sampler, TransferSolver};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+fn toy(sched: Scheduler) -> AnalyticModel {
+    let pts = Tensor::from_rows(&[vec![0.9, 0.2], vec![-0.7, -0.4], vec![0.2, 1.1]]).unwrap();
+    AnalyticModel::new("toy", pts, sched, 0.08, 8).unwrap()
+}
+
+fn noise(seed: u64, rows: usize) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::new(rng.normal_vec(rows * 2), vec![rows, 2]).unwrap()
+}
+
+/// Fixed-grid sessions (rk1/rk2/rk4, non-uniform grid) == the retained
+/// clone-per-stage `solve` driver, bitwise.
+#[test]
+fn fixed_grid_session_matches_clone_reference() {
+    let model = toy(Scheduler::CondOt);
+    let x0 = noise(1, 8);
+    let grid = vec![0.0, 0.11, 0.3, 0.55, 0.8, 1.0];
+    for base in [BaseRk::Rk1, BaseRk::Rk2, BaseRk::Rk4] {
+        let mut f = |x: &Tensor, t: f32| model.eval(x, t);
+        let reference = solve(base, &mut f, &x0, &grid).unwrap();
+        let s = FixedGridSolver::with_grid(base, grid.clone(), "test");
+        let got = s.sample(&model, &x0).unwrap();
+        assert_eq!(got.data(), reference.data(), "{base:?}");
+        // session reuse via init() stays identical
+        let mut sess = s.begin(&x0).unwrap();
+        while !sess.is_done() {
+            sess.step(&model).unwrap();
+        }
+        sess.init(&x0).unwrap();
+        while !sess.is_done() {
+            sess.step(&model).unwrap();
+        }
+        assert_eq!(sess.state().data(), reference.data(), "{base:?} after init()");
+    }
+}
+
+/// Bespoke sessions == the retained clone-per-stage `BespokeSolver::step`
+/// loop, bitwise, for both bases and a non-identity theta.
+#[test]
+fn bespoke_session_matches_clone_reference() {
+    let model = toy(Scheduler::CondOt);
+    let x0 = noise(2, 8);
+    for (base, n) in [(Base::Rk1, 6), (Base::Rk2, 5)] {
+        // perturb theta away from identity so the scale path is exercised
+        let ident = RawTheta::identity(base, n);
+        let raw: Vec<f32> = ident
+            .raw
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v + 0.01 * ((i as f32 * 0.7).sin()))
+            .collect();
+        let theta = RawTheta::from_raw(base, n, raw).unwrap();
+        let bes = BespokeSolver::new(&theta);
+        let mut x = x0.clone();
+        for i in 0..n {
+            x = bes.step(&model, &x, i).unwrap();
+        }
+        let got = bes.sample(&model, &x0).unwrap();
+        assert_eq!(got.data(), x.data(), "{base:?}");
+    }
+}
+
+/// Transfer sessions == the retained clone-per-stage u_bar loop +
+/// final untransform, bitwise.
+#[test]
+fn transfer_session_matches_clone_reference() {
+    let model = toy(Scheduler::Cosine);
+    let x0 = noise(3, 8);
+    for base in [BaseRk::Rk1, BaseRk::Rk2, BaseRk::Rk4] {
+        let s = TransferSolver::new(Scheduler::Cosine, Scheduler::CondOt, base, 6);
+        let reference = {
+            let mut xbar = x0.clone();
+            let h = 1.0 / s.n as f64;
+            let mut f = |x: &Tensor, r: f32| s.u_bar(&model, x, r as f64);
+            for i in 0..s.n {
+                let r = i as f64 * h;
+                xbar = s.base.step(&mut f, &xbar, r as f32, h as f32).unwrap();
+            }
+            let (_, s1) = transfer_map(s.source, s.target, 1.0);
+            xbar.scale(1.0 / s1 as f32)
+        };
+        let got = s.sample(&model, &x0).unwrap();
+        assert_eq!(got.data(), reference.data(), "{base:?}");
+    }
+}
+
+/// The workspace-based adaptive session == the retained clone-per-stage
+/// DOPRI5 integrator, bitwise, including total NFE.
+#[test]
+fn dopri5_session_matches_clone_reference() {
+    let model = toy(Scheduler::CondOt);
+    let x0 = noise(4, 8);
+    let cfg = Dopri5::default();
+    let mut f = |x: &Tensor, t: f32| model.eval(x, t);
+    let (reference, ref_nfe) = reference_solve(&cfg, &mut f, &x0).unwrap();
+    let got = cfg.sample(&model, &x0).unwrap();
+    assert_eq!(got.data(), reference.data());
+    // NFE parity via a counting session drive
+    let mut sess = cfg.begin(&x0).unwrap();
+    let mut nfe = 0usize;
+    while !sess.is_done() {
+        nfe += sess.step(&model).unwrap().nfe;
+    }
+    assert_eq!(nfe, ref_nfe);
+    assert_eq!(sess.state().data(), reference.data());
+}
+
+/// Parallel host kernels match their serial results exactly for thread
+/// counts 1, 2 and 7 (7 does not divide the row counts: ragged chunks).
+#[test]
+fn parallel_kernels_match_serial_exactly() {
+    let mut rng = Rng::new(9);
+    // > PAR_CHUNK_ROWS (256) rows so the chunked reductions actually split
+    let rows = 613usize;
+    let d = 5usize;
+    let t = Tensor::new(rng.normal_vec(rows * d), vec![rows, d]).unwrap();
+    let u = Tensor::new(rng.normal_vec(rows * d), vec![rows, d]).unwrap();
+
+    let mu1 = t.mean_axis0_with_threads(1);
+    let cov1 = t.covariance_with_threads(1);
+    let fd1 = frechet_distance_with_threads(&t, &u, 1);
+    for nt in [2usize, 7] {
+        assert_eq!(t.mean_axis0_with_threads(nt), mu1, "mean_axis0 nt={nt}");
+        assert_eq!(t.covariance_with_threads(nt), cov1, "covariance nt={nt}");
+        assert_eq!(frechet_distance_with_threads(&t, &u, nt), fd1, "frechet nt={nt}");
+    }
+
+    // AnalyticModel::eval is row-parallel: bitwise identical per thread count
+    let pts = Tensor::new(Rng::new(10).normal_vec(32 * 2), vec![32, 2]).unwrap();
+    let model = AnalyticModel::new("par", pts, Scheduler::CondOt, 0.06, 8).unwrap();
+    let x = noise(11, 101);
+    for t_eval in [0.0f32, 0.37, 0.9] {
+        let serial = model.eval_with_threads(&x, t_eval, 1).unwrap();
+        for nt in [2usize, 7] {
+            let par = model.eval_with_threads(&x, t_eval, nt).unwrap();
+            assert_eq!(par.data(), serial.data(), "eval t={t_eval} nt={nt}");
+        }
+    }
+}
