@@ -1,7 +1,11 @@
-//! End-to-end serving driver: starts the JSONL sampling server in-process,
-//! fires concurrent client workloads at it over real TCP, and reports
-//! latency / throughput / batching metrics — the repo's serving-paper
-//! "load a model and serve batched requests" proof point (EXPERIMENTS.md §Serving).
+//! End-to-end serving driver: starts the JSONL sampling + training server
+//! in-process, fires concurrent client workloads at it over real TCP, and
+//! reports latency / throughput / batching metrics — then exercises the
+//! registry plane: submit an in-server training job, poll it to
+//! completion, and sample through the freshly registered artifact with a
+//! `bespoke:model=...` spec (hot-swap; no restart). The repo's
+//! serving-paper "load a model and serve batched requests" proof point
+//! (EXPERIMENTS.md §Serving).
 //!
 //!   cargo run --release --example serve_and_query -- [n_clients] [reqs_per_client]
 
@@ -9,10 +13,11 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use bespoke_flow::config::ServeConfig;
-use bespoke_flow::coordinator::{serve, Coordinator};
+use bespoke_flow::config::{ServeConfig, TrainConfig};
+use bespoke_flow::coordinator::{serve, Coordinator, ServerState};
 use bespoke_flow::json::Value;
 use bespoke_flow::models::Zoo;
+use bespoke_flow::registry::{Registry, TrainJobManager, ZooRunner};
 use bespoke_flow::util::timer::Percentiles;
 use bespoke_flow::Result;
 
@@ -26,11 +31,27 @@ fn main() -> Result<()> {
     let zoo = Arc::new(Zoo::open_default()?);
     let cfg =
         ServeConfig { addr: addr.into(), max_batch: 256, max_wait_ms: 3, ..ServeConfig::default() };
-    let coord = Arc::new(Coordinator::new(zoo, cfg));
+    let registry_root = std::env::temp_dir().join(format!("serve_demo_reg_{}", std::process::id()));
+    let registry = Arc::new(Registry::open(&registry_root)?);
+    let coord = Arc::new(Coordinator::with_registry(zoo.clone(), cfg, registry.clone()));
+    // In-server training jobs: short runs so the demo finishes quickly.
+    let train_cfg = TrainConfig {
+        iters: 40,
+        pool_batches: 2,
+        val_batches: 1,
+        val_every: 10,
+        ..TrainConfig::default()
+    };
+    let jobs = Arc::new(TrainJobManager::new(
+        registry,
+        Arc::new(ZooRunner::new(zoo, train_cfg)),
+        1,
+        Some(coord.metrics.clone()),
+    )?);
     let metrics = coord.metrics.clone();
     {
-        let coord = coord.clone();
-        std::thread::spawn(move || serve(coord, addr).expect("server"));
+        let state = ServerState::with_jobs(coord.clone(), jobs);
+        std::thread::spawn(move || serve(state, addr).expect("server"));
     }
     std::thread::sleep(std::time::Duration::from_millis(200));
 
@@ -112,7 +133,64 @@ fn main() -> Result<()> {
         }
     }
 
+    // --- train -> poll -> sample from the registry -------------------------
+    // The training plane shares the socket: submit a job, poll job_status,
+    // then a bespoke:model=... spec resolves the freshly registered
+    // artifact — no restart, no path in the request.
+    {
+        let stream = TcpStream::connect(addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let mut ask = |line: &str| -> Result<Value> {
+            writer.write_all(line.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            let mut out = String::new();
+            reader.read_line(&mut out)?;
+            Ok(Value::parse(&out)?)
+        };
+
+        let v = ask(r#"{"cmd":"train","model":"checker2-ot","base":"rk2","n":4}"#)?;
+        assert!(v.get("ok")?.as_bool()?, "train rejected: {v:?}");
+        let job_id = v.get("job_id")?.as_usize()?;
+        println!("train job {job_id} submitted; polling...");
+        loop {
+            let s = ask(&format!(r#"{{"cmd":"job_status","job_id":{job_id}}}"#))?;
+            assert!(s.get("ok")?.as_bool()?, "job_status: {s:?}");
+            let state = s.get("state")?.as_str()?.to_string();
+            println!(
+                "  job {job_id}: {state} ({}/{} iters)",
+                s.get("iters_done")?.as_usize()?,
+                s.get("iters_total")?.as_usize()?
+            );
+            match state.as_str() {
+                "done" => {
+                    let art = s.get("artifact")?;
+                    println!(
+                        "  registered v{} val_rmse={}",
+                        art.get("version")?.as_usize()?,
+                        art.get("val_rmse")?.as_f64()?
+                    );
+                    break;
+                }
+                "failed" => panic!("training failed: {s:?}"),
+                _ => std::thread::sleep(std::time::Duration::from_millis(500)),
+            }
+        }
+
+        let v = ask(
+            r#"{"cmd":"sample","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4","n_samples":8,"seed":1}"#,
+        )?;
+        assert!(v.get("ok")?.as_bool()?, "registry sample: {v:?}");
+        println!(
+            "sample via bespoke:model=checker2-ot:n=4 -> nfe={} latency={:.1}ms",
+            v.get("nfe")?.as_usize()?,
+            v.get("latency_ms")?.as_f64()?
+        );
+    }
+
     println!("--- server metrics ---");
     println!("{}", metrics.snapshot().to_string_pretty());
+    std::fs::remove_dir_all(&registry_root).ok();
     Ok(())
 }

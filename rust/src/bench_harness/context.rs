@@ -97,7 +97,7 @@ impl ExpContext {
         Ok(self.data_cache.get(&ds_name).unwrap().clone())
     }
 
-    /// Evaluate a sampler spec (registry string) on a model.
+    /// Evaluate a sampler spec (solver spec string) on a model.
     pub fn eval_spec(&mut self, model: &str, spec: &str) -> Result<SamplerReport> {
         self.eval_solver_spec(model, &SolverSpec::parse(spec)?)
     }

@@ -22,4 +22,4 @@ pub mod trainer;
 
 pub use adam::Adam;
 pub use gt::GtPool;
-pub use trainer::{train, TrainOutcome, TrainPoint};
+pub use trainer::{train, train_with_progress, TrainOutcome, TrainPoint, TrainProgress};

@@ -39,6 +39,18 @@ pub struct TrainOutcome {
     pub wall_secs: f64,
 }
 
+/// One progress report from an in-flight training run — the hook the
+/// registry's `TrainJobManager` uses to surface live `job_status`.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainProgress {
+    /// 1-based iteration just completed.
+    pub iter: usize,
+    pub iters_total: usize,
+    pub loss: f32,
+    /// NaN for iterations without a validation pass.
+    pub val_rmse: f32,
+}
+
 /// Train a Bespoke solver for `model` (its loss-grad artifact must have been
 /// exported for (base, n) — see `python/compile/model.py::MODELS`).
 pub fn train(
@@ -47,6 +59,19 @@ pub fn train(
     base: Base,
     n: usize,
     cfg: &TrainConfig,
+) -> Result<TrainOutcome> {
+    train_with_progress(model, lossgrad_exe, base, n, cfg, &mut |_| {})
+}
+
+/// [`train`] with a per-iteration progress callback (invoked after every
+/// optimizer step, on the training thread).
+pub fn train_with_progress(
+    model: &HloModel,
+    lossgrad_exe: &Executable,
+    base: Base,
+    n: usize,
+    cfg: &TrainConfig,
+    on_progress: &mut dyn FnMut(&TrainProgress),
 ) -> Result<TrainOutcome> {
     let timer = Timer::start();
     let b = model.batch();
@@ -158,6 +183,7 @@ pub fn train(
             log_debug!("[train] iter {iter} loss {loss:.5}");
         }
         history.push(TrainPoint { iter, loss, val_rmse });
+        on_progress(&TrainProgress { iter, iters_total: cfg.iters, loss, val_rmse });
     }
 
     Ok(TrainOutcome {

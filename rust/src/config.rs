@@ -82,6 +82,23 @@ impl Default for TrainConfig {
 }
 
 #[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Root directory of the solver artifact registry (DESIGN.md §8).
+    pub root: String,
+    /// Max concurrent in-server training jobs.
+    pub max_jobs: usize,
+    /// GC policy: `registry gc` keeps this many newest versions per
+    /// artifact key (plus, always, the best-val-RMSE one).
+    pub keep_last_k: usize,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig { root: "out/registry".into(), max_jobs: 1, keep_last_k: 3 }
+    }
+}
+
+#[derive(Clone, Debug)]
 pub struct EvalConfig {
     /// Number of samples for distribution metrics (Frechet / sliced W2).
     pub metric_samples: usize,
@@ -101,6 +118,7 @@ pub struct Config {
     pub serve: ServeConfig,
     pub train: TrainConfig,
     pub eval: EvalConfig,
+    pub registry: RegistryConfig,
     /// Directory for trained thetas and experiment reports.
     pub out_dir: String,
 }
@@ -164,6 +182,16 @@ impl Config {
                         }
                     }
                 }
+                "registry" => {
+                    for (k, val) in sv.as_obj()? {
+                        match k.as_str() {
+                            "root" => self.registry.root = val.as_str()?.to_string(),
+                            "max_jobs" => self.registry.max_jobs = val.as_usize()?,
+                            "keep_last_k" => self.registry.keep_last_k = val.as_usize()?,
+                            _ => anyhow::bail!("unknown registry key {k:?}"),
+                        }
+                    }
+                }
                 "out_dir" => self.out_dir = sv.as_str()?.to_string(),
                 _ => anyhow::bail!("unknown config section {section:?}"),
             }
@@ -180,9 +208,12 @@ mod tests {
     fn defaults_then_override() {
         let mut cfg = Config::default();
         assert_eq!(cfg.train.lr, 2e-3);
+        assert_eq!(cfg.registry.root, "out/registry");
+        assert_eq!(cfg.registry.max_jobs, 1);
         let v = Value::parse(
             r#"{"train": {"iters": 42, "ablation": "time-only"},
                 "serve": {"max_batch": 8, "workers_per_route": 4, "compute_threads": 2},
+                "registry": {"root": "/tmp/reg", "max_jobs": 2, "keep_last_k": 5},
                 "out_dir": "/tmp/x"}"#,
         )
         .unwrap();
@@ -192,6 +223,9 @@ mod tests {
         assert_eq!(cfg.serve.max_batch, 8);
         assert_eq!(cfg.serve.workers_per_route, 4);
         assert_eq!(cfg.serve.compute_threads, 2);
+        assert_eq!(cfg.registry.root, "/tmp/reg");
+        assert_eq!(cfg.registry.max_jobs, 2);
+        assert_eq!(cfg.registry.keep_last_k, 5);
         // legacy alias still parses
         let v_alias = Value::parse(r#"{"serve": {"workers": 7}}"#).unwrap();
         cfg.apply(&v_alias).unwrap();
@@ -207,5 +241,7 @@ mod tests {
         assert!(cfg.apply(&v).is_err());
         let v2 = Value::parse(r#"{"bogus": {}}"#).unwrap();
         assert!(cfg.apply(&v2).is_err());
+        let v3 = Value::parse(r#"{"registry": {"rootdir": "x"}}"#).unwrap();
+        assert!(cfg.apply(&v3).is_err());
     }
 }

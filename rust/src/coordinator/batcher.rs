@@ -5,6 +5,12 @@
 //! overlap solves instead of serializing behind a single worker. Output is
 //! identical for any pool size: noise streams are forked per request
 //! chunk, not per worker, and solves are row-independent.
+//!
+//! Registry-resolved specs (`bespoke:model=M:n=8`) are re-resolved against
+//! the artifact registry on every request; when a better artifact lands
+//! (e.g. from an in-server training job) the stale route is retired and
+//! the next request builds against the new checkpoint — hot-swap without a
+//! restart (DESIGN.md §8).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -18,6 +24,7 @@ use super::metrics::Metrics;
 use crate::config::ServeConfig;
 use crate::log_info;
 use crate::models::{CountingModel, VelocityModel, Zoo};
+use crate::registry::Registry;
 use crate::solvers::SolverSpec;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -85,6 +92,28 @@ struct ChunkDone {
     queue_ms: f64,
 }
 
+/// The one shutdown handshake for a route's worker pool: set `closed`,
+/// wake every waiter. Workers drain remaining queued jobs, then exit.
+fn close_route(q: &RouteQueue) {
+    q.closed.store(true, Ordering::SeqCst);
+    q.ready.notify_all();
+}
+
+/// Marker error: a request raced a route retirement (hot-swap) or worker
+/// loss and should be retried against a freshly resolved route. `submit`
+/// retries these internally up to a small bound; only a persistent
+/// failure escapes to the client.
+#[derive(Debug)]
+struct RouteRetired(String);
+
+impl std::fmt::Display for RouteRetired {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "workers for route {} are gone (retired or crashed)", self.0)
+    }
+}
+
+impl std::error::Error for RouteRetired {}
+
 /// A route's shared job queue: `submit` pushes and signals; the route's
 /// worker pool drains with dynamic batching.
 struct RouteQueue {
@@ -125,13 +154,20 @@ pub struct Coordinator {
     cfg: ServeConfig,
     pub metrics: Arc<Metrics>,
     routes: Mutex<BTreeMap<String, Arc<RouteQueue>>>,
+    /// Artifact registry for `bespoke:model=...` specs (None = registry
+    /// specs are rejected).
+    registry: Option<Arc<Registry>>,
+    /// Hot-swap bookkeeping: `model/<registry spec>` -> currently resolved
+    /// concrete spec. When a fresher artifact changes the resolution, the
+    /// stale route is retired and the next request builds against the new
+    /// checkpoint — no restart.
+    resolved: Mutex<BTreeMap<String, String>>,
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
         for q in self.routes.lock().unwrap().values() {
-            q.closed.store(true, Ordering::SeqCst);
-            q.ready.notify_all();
+            close_route(q);
         }
     }
 }
@@ -143,11 +179,96 @@ impl Coordinator {
             cfg,
             metrics: Arc::new(Metrics::default()),
             routes: Mutex::new(BTreeMap::new()),
+            registry: None,
+            resolved: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// A coordinator that can serve registry-resolved specs
+    /// (`bespoke:model=M:n=8`), hot-swapping freshly registered artifacts
+    /// into live routes.
+    pub fn with_registry(zoo: Arc<Zoo>, cfg: ServeConfig, registry: Arc<Registry>) -> Coordinator {
+        let mut c = Coordinator::new(zoo, cfg);
+        c.registry = Some(registry);
+        c
     }
 
     pub fn zoo(&self) -> &Zoo {
         &self.zoo
+    }
+
+    pub fn registry(&self) -> Option<&Arc<Registry>> {
+        self.registry.as_ref()
+    }
+
+    /// Canonicalize a request's solver spec. Registry-resolved bespoke
+    /// specs are rewritten to the concrete `bespoke:path=...` of the
+    /// current best artifact; when that resolution differs from the one a
+    /// live route was built with, the stale route is retired (drained and
+    /// shut down) so the next request hot-swaps the new artifact in.
+    ///
+    /// Returns the canonical route-key string and the buildable typed spec
+    /// (the spec is threaded through to `route()` as a value, never
+    /// re-parsed — checkpoint paths may contain characters the string
+    /// grammar reserves, e.g. ':').
+    ///
+    /// The `resolved` lock is held across resolution + swap, so swaps are
+    /// serialized and always compare against the freshest registry state.
+    /// A request that resolved just before a swap may still recreate its
+    /// (now retired) route; such a route serves that request with the
+    /// artifact that was best at resolution time and then idles — bounded
+    /// by the number of swaps, never served to post-swap requests.
+    fn resolve_solver(&self, model: &str, solver: &str) -> Result<(String, SolverSpec)> {
+        let spec = SolverSpec::parse(solver)?;
+        if !spec.needs_registry() {
+            return Ok((spec.to_string(), spec));
+        }
+        let registry = self.registry.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "solver {spec} is registry-resolved, but this coordinator \
+                 has no artifact registry attached"
+            )
+        })?;
+        let alias = format!("{model}/{spec}");
+        let mut map = self.resolved.lock().unwrap();
+        let resolved_spec = registry.resolve_spec(&spec)?;
+        let resolved = resolved_spec.to_string();
+        match map.get(&alias).cloned() {
+            Some(old) if old == resolved => {}
+            Some(old) => {
+                let stale_key = format!("{model}/{old}");
+                self.retire_route(&stale_key);
+                self.metrics.record_event("hot_swap");
+                log_info!("hot-swap {alias}: {old} -> {resolved}");
+                map.insert(alias, resolved.clone());
+            }
+            None => {
+                map.insert(alias, resolved.clone());
+            }
+        }
+        Ok((resolved, resolved_spec))
+    }
+
+    /// Drop a route and tell its workers to drain and exit. Queued jobs are
+    /// still executed (workers pop until empty before honoring `closed`);
+    /// requests that race the retirement observe [`RouteRetired`] and are
+    /// retried by `submit`.
+    fn retire_route(&self, key: &str) {
+        if let Some(q) = self.routes.lock().unwrap().remove(key) {
+            close_route(&q);
+        }
+    }
+
+    /// Retire `key` only if it still maps to `expected` — lets a submitter
+    /// that observed a dead pool evict it (so the retry respawns workers)
+    /// without racing a concurrent respawn under the same key.
+    fn retire_route_if(&self, key: &str, expected: &Arc<RouteQueue>) {
+        let mut routes = self.routes.lock().unwrap();
+        if routes.get(key).is_some_and(|q| Arc::ptr_eq(q, expected)) {
+            if let Some(q) = routes.remove(key) {
+                close_route(&q);
+            }
+        }
     }
 
     /// Rows per request chunk for a model batch size. This is the RNG-stream
@@ -159,10 +280,33 @@ impl Coordinator {
     }
 
     /// Blocking submit: routes, batches, executes, gathers.
+    ///
+    /// A request that races a hot-swap route retirement (its route's
+    /// workers exited between `route()` and job delivery) is retried
+    /// against a freshly resolved route instead of surfacing the internal
+    /// "workers are gone" state to the client.
     pub fn submit(&self, req: &SampleRequest) -> Result<SampleResponse> {
+        const MAX_ROUTE_RETRIES: usize = 3;
+        let mut attempt = 0;
+        loop {
+            match self.submit_attempt(req) {
+                Err(e)
+                    if e.downcast_ref::<RouteRetired>().is_some()
+                        && attempt < MAX_ROUTE_RETRIES =>
+                {
+                    attempt += 1;
+                    log_info!("retrying submit after route retirement ({attempt})");
+                }
+                other => return other,
+            }
+        }
+    }
+
+    fn submit_attempt(&self, req: &SampleRequest) -> Result<SampleResponse> {
         let started = Instant::now();
-        let key = format!("{}/{}", req.model, req.solver);
-        let queue = self.route(&key, &req.model, &req.solver)?;
+        let (solver, spec) = self.resolve_solver(&req.model, &req.solver)?;
+        let key = format!("{}/{}", req.model, solver);
+        let queue = self.route(&key, &req.model, &spec)?;
 
         let model_batch = self.zoo.manifest().model(&req.model)?.batch;
         let chunk_rows = self.chunk_rows(model_batch);
@@ -183,15 +327,17 @@ impl Coordinator {
                 reply: tx,
             };
             if queue.workers_alive.load(Ordering::SeqCst) == 0 {
-                bail!("workers for {key} are gone");
+                self.retire_route_if(&key, &queue);
+                return Err(anyhow::Error::new(RouteRetired(key.clone())));
             }
             queue.push(job);
             // Close the check-then-push race: if the last worker died after
             // the check above, drain what we just queued so no reply sender
-            // lingers, and fail the request.
+            // lingers, and fail this attempt.
             if queue.workers_alive.load(Ordering::SeqCst) == 0 {
                 queue.jobs.lock().unwrap().clear();
-                bail!("workers for {key} are gone");
+                self.retire_route_if(&key, &queue);
+                return Err(anyhow::Error::new(RouteRetired(key.clone())));
             }
             pending.push(rx);
             remaining -= rows;
@@ -203,9 +349,12 @@ impl Coordinator {
         let mut queue_ms = 0.0f64;
         let batches = pending.len() as u64;
         for rx in pending {
-            let done = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("worker dropped reply"))??;
+            // A dropped reply sender means the route's workers exited with
+            // our job still queued (retirement or panic) — retryable.
+            let done = rx.recv().map_err(|_| {
+                self.retire_route_if(&key, &queue);
+                anyhow::Error::new(RouteRetired(key.clone()))
+            })??;
             nfe += done.nfe;
             queue_ms = queue_ms.max(done.queue_ms);
             if let (Some(acc), Some(got)) = (samples.as_mut(), done.samples) {
@@ -240,7 +389,7 @@ impl Coordinator {
         if req.n_samples == 0 {
             bail!("n_samples must be positive");
         }
-        let spec = SolverSpec::parse(&req.solver)?;
+        let (solver, spec) = self.resolve_solver(&req.model, &req.solver)?;
         let hlo = self.zoo.hlo(&req.model)?;
         let sched = self.zoo.scheduler(&req.model)?;
         let sampler = spec.build(sched)?;
@@ -296,7 +445,7 @@ impl Coordinator {
         }
         let nfe = counting.nfe();
         let latency_ms = started.elapsed().as_secs_f64() * 1e3;
-        let key = format!("{}/{}", req.model, req.solver);
+        let key = format!("{}/{solver}", req.model);
         self.metrics.record_batch(&key, req.n_samples, b, nfe);
         self.metrics
             .record_request(&key, req.n_samples, latency_ms, 0.0);
@@ -311,15 +460,14 @@ impl Coordinator {
     }
 
     /// Get (or lazily spawn) the worker pool for a (model, solver) route.
-    fn route(&self, key: &str, model: &str, solver: &str) -> Result<Arc<RouteQueue>> {
+    fn route(&self, key: &str, model: &str, spec: &SolverSpec) -> Result<Arc<RouteQueue>> {
         if let Some(q) = self.routes.lock().unwrap().get(key) {
             return Ok(q.clone());
         }
         // Validate + load outside the lock (compilation can take a moment).
         let hlo = self.zoo.hlo(model)?;
         let sched = self.zoo.scheduler(model)?;
-        let sampler: Arc<dyn crate::solvers::Sampler> =
-            Arc::from(SolverSpec::parse(solver)?.build(sched)?);
+        let sampler: Arc<dyn crate::solvers::Sampler> = Arc::from(spec.build(sched)?);
         if hlo.dim() == 0 {
             bail!("model {model} has zero dim");
         }
@@ -349,8 +497,7 @@ impl Coordinator {
                 // Partial pool: tell the already-spawned workers to exit
                 // (the queue never enters the routes map, so Coordinator's
                 // Drop would not reach them).
-                queue.closed.store(true, Ordering::SeqCst);
-                queue.ready.notify_all();
+                close_route(&queue);
                 return Err(e.into());
             }
         }

@@ -23,15 +23,32 @@ struct Entry {
 pub struct Metrics {
     started: Instant,
     inner: Mutex<BTreeMap<String, Entry>>,
+    /// Named lifecycle counters (train_jobs_submitted/coalesced/done/failed,
+    /// hot_swap, ...), surfaced under `"events"` in the snapshot.
+    events: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
-        Metrics { started: Instant::now(), inner: Mutex::new(BTreeMap::new()) }
+        Metrics {
+            started: Instant::now(),
+            inner: Mutex::new(BTreeMap::new()),
+            events: Mutex::new(BTreeMap::new()),
+        }
     }
 }
 
 impl Metrics {
+    /// Bump a named lifecycle counter.
+    pub fn record_event(&self, name: &str) {
+        *self.events.lock().unwrap().entry(name.to_string()).or_default() += 1;
+    }
+
+    /// Current value of a named counter (0 if never recorded).
+    pub fn event_count(&self, name: &str) -> u64 {
+        self.events.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
     pub fn record_batch(&self, key: &str, rows_used: usize, capacity: usize, nfe: u64) {
         let mut g = self.inner.lock().unwrap();
         let e = g.entry(key.to_string()).or_default();
@@ -75,10 +92,16 @@ impl Metrics {
                 ]),
             ));
         }
+        let events = self.events.lock().unwrap();
+        let events_json: Vec<(&str, Value)> = events
+            .iter()
+            .map(|(k, &v)| (k.as_str(), Value::Num(v as f64)))
+            .collect();
         Value::obj(vec![
             ("ok", Value::Bool(true)),
             ("uptime_secs", Value::Num(uptime)),
             ("per_route", Value::obj(per_key)),
+            ("events", Value::obj(events_json)),
         ])
     }
 }
@@ -101,5 +124,19 @@ mod tests {
         let fill = route.get("batch_fill").unwrap().as_f64().unwrap();
         assert!((fill - 112.0 / 128.0).abs() < 1e-9);
         assert!(route.get("latency_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn event_counters() {
+        let m = Metrics::default();
+        assert_eq!(m.event_count("hot_swap"), 0);
+        m.record_event("hot_swap");
+        m.record_event("hot_swap");
+        m.record_event("train_jobs_done");
+        assert_eq!(m.event_count("hot_swap"), 2);
+        let snap = m.snapshot();
+        let ev = snap.get("events").unwrap();
+        assert_eq!(ev.get("hot_swap").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(ev.get("train_jobs_done").unwrap().as_usize().unwrap(), 1);
     }
 }

@@ -20,6 +20,10 @@
 //! * Trajectory requests (`sample_traj`) drive a step-wise
 //!   [`crate::solvers::SolveSession`] and stream one event per solver step
 //!   — intermediate states, per-step progress, cumulative NFE.
+//! * Registry-resolved specs (`bespoke:model=M:n=8`) re-resolve against the
+//!   solver artifact registry per request; `train` / `job_status` / `jobs`
+//!   commands drive the in-server training jobs that feed it, and freshly
+//!   registered artifacts hot-swap into live routes (DESIGN.md §8).
 
 pub mod batcher;
 pub mod metrics;
@@ -28,4 +32,4 @@ pub mod server;
 
 pub use batcher::{Coordinator, SampleRequest, SampleResponse, TrajRequest, TrajStep};
 pub use metrics::Metrics;
-pub use server::serve;
+pub use server::{handle_line, serve, ServerState};

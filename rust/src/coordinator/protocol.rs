@@ -9,6 +9,10 @@
 //! {"cmd": "metrics"}
 //! {"cmd": "list"}
 //! {"cmd": "ping"}
+//! {"cmd": "train", "model": "checker2-ot", "n": 8, "base": "rk2",
+//!  "ablation": "full", "iters": 300, "seed": 17}
+//! {"cmd": "job_status", "job_id": 1}
+//! {"cmd": "jobs"}
 //! ```
 //!
 //! Response: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
@@ -17,11 +21,20 @@
 //! `{"ok": true, "event": "step", ...}` line per solver step (subsampled by
 //! `every`) with the intermediate states, then a final
 //! `{"ok": true, "event": "done", ...}` summary line.
+//!
+//! `train` enqueues an asynchronous training job (`base`, `ablation`,
+//! `iters`, `seed` optional; defaults rk2 / full / server TrainConfig) and
+//! replies immediately with `{"ok": true, "job_id": N, "state": "queued",
+//! "coalesced": false}`; poll with `job_status`. Once `"state"` is
+//! `"done"`, `{"cmd": "sample", "solver": "bespoke:model=M:n=K"}` resolves
+//! the freshly registered artifact — no restart.
 
 use anyhow::{bail, Result};
 
 use super::batcher::{SampleRequest, SampleResponse, TrajRequest, TrajStep};
 use crate::json::Value;
+use crate::registry::{ArtifactRecord, JobId, JobSnapshot, TrainJobSpec};
+use crate::solvers::theta::Base;
 
 #[derive(Debug)]
 pub enum Command {
@@ -30,6 +43,9 @@ pub enum Command {
     Metrics,
     List,
     Ping,
+    Train(TrainJobSpec),
+    JobStatus(JobId),
+    Jobs,
 }
 
 pub fn parse_command(line: &str) -> Result<Command> {
@@ -71,8 +87,80 @@ pub fn parse_command(line: &str) -> Result<Command> {
         "metrics" => Ok(Command::Metrics),
         "list" => Ok(Command::List),
         "ping" => Ok(Command::Ping),
+        "train" => {
+            let spec = TrainJobSpec {
+                model: v.get("model")?.as_str()?.to_string(),
+                base: Base::parse(
+                    v.get_opt("base").map(|b| b.as_str()).transpose()?.unwrap_or("rk2"),
+                )?,
+                n: v.get("n")?.as_usize()?,
+                ablation: v
+                    .get_opt("ablation")
+                    .map(|a| a.as_str())
+                    .transpose()?
+                    .unwrap_or("full")
+                    .to_string(),
+                iters: v.get_opt("iters").map(|s| s.as_usize()).transpose()?,
+                seed: v.get_opt("seed").map(|s| s.as_usize()).transpose()?.map(|s| s as u64),
+            };
+            if spec.n == 0 {
+                bail!("n must be >= 1");
+            }
+            if spec.iters == Some(0) {
+                bail!("iters must be >= 1");
+            }
+            Ok(Command::Train(spec))
+        }
+        "job_status" => Ok(Command::JobStatus(v.get("job_id")?.as_usize()? as JobId)),
+        "jobs" => Ok(Command::Jobs),
         other => bail!("unknown cmd {other:?}"),
     }
+}
+
+/// NaN-safe number: non-finite -> JSON null (shared codec helper).
+fn num_or_null(x: f64) -> Value {
+    Value::num_or_null(x)
+}
+
+/// Compact artifact reference embedded in job/list responses.
+pub fn artifact_json(rec: &ArtifactRecord) -> Value {
+    Value::obj(vec![
+        ("model", Value::Str(rec.key.model.clone())),
+        ("base", Value::Str(rec.key.base.name().into())),
+        ("n", Value::Num(rec.key.n as f64)),
+        ("ablation", Value::Str(rec.key.ablation.clone())),
+        ("version", Value::Num(rec.version as f64)),
+        ("file", Value::Str(rec.file.clone())),
+        ("content_hash", Value::Str(rec.content_hash.clone())),
+        ("val_rmse", num_or_null(rec.val_rmse as f64)),
+        ("gt_nfe", Value::Num(rec.gt_nfe as f64)),
+        ("created_at", Value::Num(rec.created_at as f64)),
+    ])
+}
+
+/// One job's status for `job_status` / `jobs` responses.
+pub fn job_json(s: &JobSnapshot) -> Value {
+    let mut fields = vec![
+        ("ok", Value::Bool(true)),
+        ("job_id", Value::Num(s.id as f64)),
+        ("model", Value::Str(s.spec.model.clone())),
+        ("base", Value::Str(s.spec.base.name().into())),
+        ("n", Value::Num(s.spec.n as f64)),
+        ("ablation", Value::Str(s.spec.ablation.clone())),
+        ("state", Value::Str(s.state.name().into())),
+        ("iters_done", Value::Num(s.iters_done as f64)),
+        ("iters_total", Value::Num(s.iters_total as f64)),
+        ("loss", num_or_null(s.loss as f64)),
+        ("val_rmse", num_or_null(s.val_rmse as f64)),
+        ("wall_secs", Value::Num(s.wall_secs)),
+    ];
+    if let Some(e) = &s.error {
+        fields.push(("error", Value::Str(e.clone())));
+    }
+    if let Some(rec) = &s.artifact {
+        fields.push(("artifact", artifact_json(rec)));
+    }
+    Value::obj(fields)
 }
 
 /// One streamed `sample_traj` step event.
@@ -210,5 +298,80 @@ mod tests {
         assert!(matches!(parse_command(r#"{"cmd":"ping"}"#).unwrap(), Command::Ping));
         assert!(matches!(parse_command(r#"{"cmd":"list"}"#).unwrap(), Command::List));
         assert!(matches!(parse_command(r#"{"cmd":"metrics"}"#).unwrap(), Command::Metrics));
+        assert!(matches!(parse_command(r#"{"cmd":"jobs"}"#).unwrap(), Command::Jobs));
+    }
+
+    #[test]
+    fn parses_train_command_with_defaults() {
+        let c = parse_command(r#"{"cmd":"train","model":"m","n":8}"#).unwrap();
+        match c {
+            Command::Train(s) => {
+                assert_eq!(s.model, "m");
+                assert_eq!(s.n, 8);
+                assert_eq!(s.base, Base::Rk2);
+                assert_eq!(s.ablation, "full");
+                assert_eq!(s.iters, None);
+                assert_eq!(s.seed, None);
+            }
+            _ => panic!("wrong command"),
+        }
+        let c = parse_command(
+            r#"{"cmd":"train","model":"m","n":4,"base":"rk1","ablation":"time-only","iters":50,"seed":3}"#,
+        )
+        .unwrap();
+        match c {
+            Command::Train(s) => {
+                assert_eq!(s.base, Base::Rk1);
+                assert_eq!(s.ablation, "time-only");
+                assert_eq!(s.iters, Some(50));
+                assert_eq!(s.seed, Some(3));
+            }
+            _ => panic!("wrong command"),
+        }
+        // rejections: missing model/n, bad base, zero n/iters
+        assert!(parse_command(r#"{"cmd":"train","n":4}"#).is_err());
+        assert!(parse_command(r#"{"cmd":"train","model":"m"}"#).is_err());
+        assert!(parse_command(r#"{"cmd":"train","model":"m","n":0}"#).is_err());
+        assert!(parse_command(r#"{"cmd":"train","model":"m","n":4,"base":"rk9"}"#).is_err());
+        assert!(parse_command(r#"{"cmd":"train","model":"m","n":4,"iters":0}"#).is_err());
+    }
+
+    #[test]
+    fn parses_job_status_command() {
+        match parse_command(r#"{"cmd":"job_status","job_id":7}"#).unwrap() {
+            Command::JobStatus(id) => assert_eq!(id, 7),
+            _ => panic!("wrong command"),
+        }
+        assert!(parse_command(r#"{"cmd":"job_status"}"#).is_err());
+    }
+
+    #[test]
+    fn job_json_is_nan_safe() {
+        use crate::registry::{JobSnapshot, JobState, TrainJobSpec};
+        let snap = JobSnapshot {
+            id: 3,
+            spec: TrainJobSpec {
+                model: "m".into(),
+                base: Base::Rk2,
+                n: 4,
+                ablation: "full".into(),
+                iters: None,
+                seed: None,
+            },
+            state: JobState::Queued,
+            iters_done: 0,
+            iters_total: 0,
+            loss: f32::NAN,
+            val_rmse: f32::NAN,
+            error: None,
+            artifact: None,
+            wall_secs: 0.0,
+        };
+        let v = job_json(&snap);
+        assert_eq!(v.get("state").unwrap().as_str().unwrap(), "queued");
+        assert!(matches!(v.get("loss").unwrap(), Value::Null));
+        // round-trips through the writer/parser
+        let back = Value::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(back.get("job_id").unwrap().as_usize().unwrap(), 3);
     }
 }

@@ -1,5 +1,11 @@
 //! JSONL-over-TCP sampling server: thread-per-connection on top of the
 //! batching [`Coordinator`]. Python never appears anywhere near this path.
+//!
+//! The server serves two planes from one socket: the sampling plane
+//! (`sample`, `sample_traj`) and the training plane (`train`,
+//! `job_status`, `jobs`) backed by an optional [`TrainJobManager`] — a
+//! server started without one (no registry configured) cleanly rejects
+//! training commands instead of panicking.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -9,15 +15,36 @@ use anyhow::Result;
 
 use super::batcher::Coordinator;
 use super::protocol::{
-    error_json, parse_command, response_to_json, traj_done_json, traj_step_json, Command,
+    artifact_json, error_json, job_json, parse_command, response_to_json, traj_done_json,
+    traj_step_json, Command,
 };
 use crate::json::Value;
 use crate::log_info;
+use crate::registry::TrainJobManager;
+
+/// Everything a connection handler needs: the sampling coordinator plus the
+/// (optional) in-server training-job manager.
+#[derive(Clone)]
+pub struct ServerState {
+    pub coord: Arc<Coordinator>,
+    pub jobs: Option<Arc<TrainJobManager>>,
+}
+
+impl ServerState {
+    /// Sampling only: `train`/`job_status`/`jobs` commands are rejected.
+    pub fn sampling_only(coord: Arc<Coordinator>) -> ServerState {
+        ServerState { coord, jobs: None }
+    }
+
+    pub fn with_jobs(coord: Arc<Coordinator>, jobs: Arc<TrainJobManager>) -> ServerState {
+        ServerState { coord, jobs: Some(jobs) }
+    }
+}
 
 /// Serve forever on `addr` (blocks). Each accepted connection gets its own
 /// thread; requests on one connection are handled sequentially, batching
 /// happens across connections inside the coordinator.
-pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
+pub fn serve(state: ServerState, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     log_info!("serving on {addr}");
     for stream in listener.incoming() {
@@ -28,9 +55,9 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
                 continue;
             }
         };
-        let coord = coord.clone();
+        let state = state.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_connection(coord, stream) {
+            if let Err(e) = handle_connection(state, stream) {
                 log_info!("connection ended: {e:#}");
             }
         });
@@ -45,7 +72,7 @@ fn write_event<W: Write>(writer: &mut W, v: &Value) -> Result<()> {
     Ok(())
 }
 
-pub fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
+pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -58,7 +85,7 @@ pub fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<(
             // The streaming command writes multiple lines per request; all
             // other commands reply with exactly one line.
             Ok(Command::SampleTraj(req)) => {
-                let result = coord.sample_traj(&req, &mut |step| {
+                let result = state.coord.sample_traj(&req, &mut |step| {
                     write_event(&mut writer, &traj_step_json(&step))
                 });
                 match result {
@@ -66,7 +93,7 @@ pub fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<(
                     Err(e) => write_event(&mut writer, &error_json(&format!("{e:#}")))?,
                 }
             }
-            Ok(cmd) => write_event(&mut writer, &dispatch(&coord, cmd))?,
+            Ok(cmd) => write_event(&mut writer, &dispatch(&state, cmd))?,
             Err(e) => write_event(&mut writer, &error_json(&format!("bad request: {e:#}")))?,
         }
     }
@@ -75,7 +102,8 @@ pub fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<(
 }
 
 /// Execute a single-response command.
-fn dispatch(coord: &Coordinator, cmd: Command) -> Value {
+fn dispatch(state: &ServerState, cmd: Command) -> Value {
+    let coord = &state.coord;
     match cmd {
         Command::Ping => Value::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]),
         Command::List => {
@@ -85,7 +113,17 @@ fn dispatch(coord: &Coordinator, cmd: Command) -> Value {
                 .into_iter()
                 .map(Value::Str)
                 .collect();
-            Value::obj(vec![("ok", Value::Bool(true)), ("models", Value::Arr(names))])
+            // Registry-aware listing: alongside the model zoo, the trained
+            // solver artifacts currently resolvable by bespoke:model=... specs.
+            let artifacts = coord
+                .registry()
+                .map(|r| r.list().iter().map(artifact_json).collect())
+                .unwrap_or_default();
+            Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("models", Value::Arr(names)),
+                ("artifacts", Value::Arr(artifacts)),
+            ])
         }
         Command::Metrics => coord.metrics.snapshot(),
         Command::Sample(req) => match coord.submit(&req) {
@@ -95,15 +133,53 @@ fn dispatch(coord: &Coordinator, cmd: Command) -> Value {
         Command::SampleTraj(_) => {
             error_json("sample_traj is a streaming command; it is handled per-connection")
         }
+        Command::Train(spec) => match &state.jobs {
+            None => error_json(
+                "training jobs are not enabled on this server \
+                 (start `repro serve` with a [registry] config)",
+            ),
+            Some(jobs) => match jobs.submit(spec) {
+                Ok((id, coalesced)) => {
+                    let state_name = jobs
+                        .status(id)
+                        .map(|s| s.state.name())
+                        .unwrap_or("queued");
+                    Value::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("job_id", Value::Num(id as f64)),
+                        ("state", Value::Str(state_name.into())),
+                        ("coalesced", Value::Bool(coalesced)),
+                    ])
+                }
+                Err(e) => error_json(&format!("{e:#}")),
+            },
+        },
+        Command::JobStatus(id) => match &state.jobs {
+            None => error_json("training jobs are not enabled on this server"),
+            Some(jobs) => match jobs.status(id) {
+                Some(snap) => job_json(&snap),
+                None => error_json(&format!("unknown job_id {id}")),
+            },
+        },
+        Command::Jobs => match &state.jobs {
+            None => error_json("training jobs are not enabled on this server"),
+            Some(jobs) => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                (
+                    "jobs",
+                    Value::Arr(jobs.jobs().iter().map(job_json).collect()),
+                ),
+            ]),
+        },
     }
 }
 
 /// One-line-in, one-value-out handler (used by tests and non-streaming
 /// embedders; the TCP loop handles `sample_traj` separately so it can
 /// stream multiple event lines).
-pub fn handle_line(coord: &Coordinator, line: &str) -> Value {
+pub fn handle_line(state: &ServerState, line: &str) -> Value {
     match parse_command(line) {
-        Ok(cmd) => dispatch(coord, cmd),
+        Ok(cmd) => dispatch(state, cmd),
         Err(e) => error_json(&format!("bad request: {e:#}")),
     }
 }

@@ -40,6 +40,18 @@ impl Value {
         Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
     }
 
+    /// Explicit NaN/Inf-safe number: non-finite -> `Value::Null`. The
+    /// writer would lossily emit `null` for non-finite numbers anyway
+    /// (JSON has no NaN); this makes the intent visible at the encoding
+    /// site, and decoders map `null` back to NaN.
+    pub fn num_or_null(x: f64) -> Value {
+        if x.is_finite() {
+            Value::Num(x)
+        } else {
+            Value::Null
+        }
+    }
+
     // ---- accessors -------------------------------------------------------
 
     pub fn get(&self, key: &str) -> Result<&Value> {
@@ -445,6 +457,13 @@ mod tests {
         let v = Value::parse("[0.125, -7, 3e8]").unwrap();
         let xs = v.as_f32_vec().unwrap();
         assert_eq!(xs, vec![0.125, -7.0, 3e8]);
+    }
+
+    #[test]
+    fn num_or_null_maps_non_finite() {
+        assert_eq!(Value::num_or_null(1.5), Value::Num(1.5));
+        assert_eq!(Value::num_or_null(f64::NAN), Value::Null);
+        assert_eq!(Value::num_or_null(f64::INFINITY), Value::Null);
     }
 
     #[test]

@@ -9,10 +9,12 @@
 //! artifacts through PJRT (`runtime`), implements the full numerical-solver
 //! library including the learned Bespoke solvers (`solvers` — typed
 //! `SolverSpec` configs plus step-wise `SolveSession` execution), owns the
-//! Bespoke training loop (`bespoke`), serves samples through a batching
-//! coordinator (`coordinator`, with step-streamed trajectories via
-//! `sample_traj`), and regenerates every table and figure of the paper's
-//! evaluation (`bench_harness`).
+//! Bespoke training loop (`bespoke`), stores trained solvers in a versioned
+//! artifact registry with in-server training jobs and hot-swap serving
+//! (`registry`), serves samples through a batching coordinator
+//! (`coordinator`, with step-streamed trajectories via `sample_traj`), and
+//! regenerates every table and figure of the paper's evaluation
+//! (`bench_harness`).
 //!
 //! Python never runs on the request path: after `make artifacts` the binary
 //! is self-contained.
@@ -24,6 +26,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod json;
 pub mod models;
+pub mod registry;
 pub mod runtime;
 pub mod schedulers;
 pub mod solvers;

@@ -5,7 +5,8 @@
 //! repro sample --model M --solver S --n N        generate samples
 //! repro train-bespoke --model M --n 8 [...]      train a Bespoke solver
 //! repro eval --model M --solver S                metrics vs GT solver
-//! repro serve [--addr 127.0.0.1:7777]            JSONL sampling server
+//! repro serve [--addr 127.0.0.1:7777]            JSONL sampling + training server
+//! repro registry list|show|gc                    trained-solver artifact store
 //! repro exp <id>|all                             reproduce a paper table/figure
 //! ```
 //!
@@ -17,8 +18,9 @@ use std::sync::Arc;
 
 use bespoke_flow::bench_harness::{self, ExpContext};
 use bespoke_flow::config::Config;
-use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, TrajRequest};
+use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, ServerState, TrajRequest};
 use bespoke_flow::models::Zoo;
+use bespoke_flow::registry::{sidecar_path, ArtifactMeta, Registry, TrainJobManager, ZooRunner};
 use bespoke_flow::runtime::{Executable, Manifest};
 use bespoke_flow::solvers::theta::Base;
 use bespoke_flow::solvers::SolverSpec;
@@ -38,7 +40,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence == true).
-const BOOL_FLAGS: &[&str] = &["traj"];
+const BOOL_FLAGS: &[&str] = &["traj", "register"];
 
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
@@ -83,6 +85,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(t) = args.flags.get("threads") {
         cfg.serve.compute_threads = t.parse().context("bad --threads")?;
     }
+    if let Some(r) = args.flags.get("registry") {
+        cfg.registry.root = r.clone();
+    }
     // Pin the process-wide compute-thread policy (0 keeps env/auto).
     bespoke_flow::util::threads::set(cfg.serve.compute_threads);
     Ok(cfg)
@@ -94,6 +99,10 @@ fn open_zoo(args: &Args) -> Result<Arc<Zoo>> {
         None => Manifest::load_default()?,
     };
     Ok(Arc::new(Zoo::new(Arc::new(man))))
+}
+
+fn open_registry(cfg: &Config) -> Result<Arc<Registry>> {
+    Ok(Arc::new(Registry::open(std::path::Path::new(&cfg.registry.root))?))
 }
 
 fn run() -> Result<()> {
@@ -127,7 +136,8 @@ fn run() -> Result<()> {
         "sample" => {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
-            let coord = Coordinator::new(zoo, cfg.serve.clone());
+            // Registry attached so bespoke:model=... specs resolve offline too.
+            let coord = Coordinator::with_registry(zoo, cfg.serve.clone(), open_registry(&cfg)?);
             let model = args.flags.get("model").context("--model required")?.clone();
             // Validate + canonicalize the spec up front: typos fail here
             // with a parse error, not deep inside a worker thread.
@@ -249,16 +259,36 @@ fn run() -> Result<()> {
                 std::fs::create_dir_all(parent)?;
             }
             out.best.save(std::path::Path::new(&path))?;
-            println!("saved {path}");
+            // Always persist the full outcome (history, gt_nfe, wall time)
+            // as a NaN-safe sidecar — the registry metadata record.
+            let meta = ArtifactMeta::from_outcome(model_name, base, n, &cfg.train.ablation, &out);
+            let meta_path = sidecar_path(std::path::Path::new(&path));
+            meta.save(&meta_path)?;
+            println!("saved {path} (+ {})", meta_path.display());
+            if args.flags.contains_key("register") {
+                let registry = open_registry(&cfg)?;
+                let rec = registry.register(&out.best, &meta)?;
+                println!(
+                    "registered {} v{} in {} (val_rmse {:.5})",
+                    rec.key.label(),
+                    rec.version,
+                    registry.root().display(),
+                    rec.val_rmse
+                );
+            }
             Ok(())
         }
         "eval" => {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
             let model = args.flags.get("model").context("--model required")?.clone();
-            let spec = SolverSpec::parse(
+            let mut spec = SolverSpec::parse(
                 args.flags.get("solver").map(String::as_str).unwrap_or("rk2:n=8"),
             )?;
+            if spec.needs_registry() {
+                spec = open_registry(&cfg)?.resolve_spec(&spec)?;
+                println!("resolved to {spec}");
+            }
             let mut ctx = ExpContext::new(zoo, cfg)?;
             let rep = ctx.eval_solver_spec(&model, &spec)?;
             println!("{}", rep.to_json().to_string_pretty());
@@ -267,12 +297,29 @@ fn run() -> Result<()> {
         "serve" => {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
-            let coord = Arc::new(Coordinator::new(zoo, cfg.serve.clone()));
+            let registry = open_registry(&cfg)?;
+            let coord = Arc::new(Coordinator::with_registry(
+                zoo.clone(),
+                cfg.serve.clone(),
+                registry.clone(),
+            ));
+            let runner = Arc::new(ZooRunner::new(zoo, cfg.train.clone()));
+            let jobs = Arc::new(TrainJobManager::new(
+                registry,
+                runner,
+                cfg.registry.max_jobs,
+                Some(coord.metrics.clone()),
+            )?);
             println!(
-                "serving on {} (JSONL protocol; try {{\"cmd\":\"ping\"}})",
-                cfg.serve.addr
+                "serving on {} (JSONL protocol; try {{\"cmd\":\"ping\"}}; registry {})",
+                cfg.serve.addr, cfg.registry.root
             );
-            serve(coord, &cfg.serve.addr)
+            serve(ServerState::with_jobs(coord, jobs), &cfg.serve.addr)
+        }
+        "registry" => {
+            let cfg = load_config(&args)?;
+            let registry = open_registry(&cfg)?;
+            registry_cmd(&args, &cfg, &registry)
         }
         "exp" => {
             let cfg = load_config(&args)?;
@@ -284,6 +331,79 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command {other:?}; run `repro help`"),
+    }
+}
+
+/// `repro registry list|show|gc` — operate on the artifact store without
+/// touching the model zoo (works with no compiled HLO artifacts present).
+fn registry_cmd(args: &Args, cfg: &Config, registry: &Registry) -> Result<()> {
+    match args.positional.first().map(String::as_str).unwrap_or("list") {
+        "list" => {
+            let records = registry.list();
+            println!("registry: {} ({} artifacts)", registry.root().display(), records.len());
+            println!(
+                "{:<14} {:>4} {:>3} {:<10} {:>3} {:>10} {:>9} {:>10}",
+                "model", "base", "n", "ablation", "v", "val_rmse", "gt_nfe", "created"
+            );
+            for r in records {
+                println!(
+                    "{:<14} {:>4} {:>3} {:<10} {:>3} {:>10.5} {:>9} {:>10}",
+                    r.key.model,
+                    r.key.base.name(),
+                    r.key.n,
+                    r.key.ablation,
+                    r.version,
+                    r.val_rmse,
+                    r.gt_nfe,
+                    r.created_at
+                );
+            }
+            Ok(())
+        }
+        "show" => {
+            let model = args.flags.get("model").context("--model required")?;
+            let n: usize = args.flags.get("n").context("--n required")?.parse()?;
+            let base = args
+                .flags
+                .get("base")
+                .map(|b| Base::parse(b))
+                .transpose()?;
+            let ablation = args.flags.get("ablation").map(String::as_str);
+            let best = registry
+                .best(model, n, base, ablation)
+                .context("no matching artifact registered")?;
+            println!("best: v{} (val_rmse {:.5})", best.version, best.val_rmse);
+            println!("  theta: {}", registry.theta_path(&best).display());
+            println!("  hash:  {}", best.content_hash);
+            // Integrity check what serving would load.
+            registry.load_theta(&best)?;
+            println!("  integrity: ok");
+            for r in registry.list() {
+                if r.key == best.key {
+                    println!(
+                        "  v{} val_rmse {:.5} gt_nfe {} wall {:.1}s created {}",
+                        r.version, r.val_rmse, r.gt_nfe, r.wall_secs, r.created_at
+                    );
+                }
+            }
+            Ok(())
+        }
+        "gc" => {
+            let keep = args
+                .flags
+                .get("keep")
+                .map(|k| k.parse())
+                .transpose()
+                .context("bad --keep")?
+                .unwrap_or(cfg.registry.keep_last_k);
+            let removed = registry.gc(keep)?;
+            for r in &removed {
+                println!("removed {} v{}", r.key.label(), r.version);
+            }
+            println!("gc: removed {} artifact(s), keep-last-{keep}", removed.len());
+            Ok(())
+        }
+        other => bail!("unknown registry subcommand {other:?} (list|show|gc)"),
     }
 }
 
@@ -300,11 +420,18 @@ COMMANDS:
     train-bespoke                 train a Bespoke solver (Algorithm 2)
         --model M  [--base rk1|rk2]  --n STEPS  [--iters I]
         [--ablation full|time-only|scale-only]  [--out theta.json]
+        [--register]              register the artifact in the registry
+                                  (a *.meta.json sidecar is always written)
     eval                          evaluate a solver spec vs the GT solver
         --model M  --solver SPEC  [--samples N]
-    serve                         start the JSONL sampling server
+    serve                         start the JSONL sampling + training server
         [--addr HOST:PORT]        (commands: sample, sample_traj, list,
-                                   metrics, ping — one JSON object per line)
+                                   metrics, ping, train, job_status, jobs —
+                                   one JSON object per line)
+    registry list                 show registered solver artifacts
+    registry show                 inspect one key (integrity-checked)
+        --model M  --n STEPS  [--base B]  [--ablation A]
+    registry gc [--keep K]        drop old versions (keeps last K + best)
     exp <id>|all                  reproduce a paper table/figure (out/reports/)
 
 SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
@@ -316,9 +443,13 @@ SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
     dopri5:tol=1e-5               adaptive GT solver (tol sets rtol+atol)
     dopri5:rtol=1e-6:atol=1e-8:max_steps=100000   ...or independently
     bespoke:path=out/thetas/theta_checker2-ot_rk2_n8.json
+    bespoke:model=checker2-ot:n=8 best registered artifact for (model, n)
+        [:base=rk1|rk2] [:ablation=A]   (hot-swaps as training jobs finish)
 
 GLOBAL FLAGS:
     --config file.json   --artifacts dir
+    --registry DIR       artifact registry root (default out/registry;
+                         config: [registry] root/max_jobs/keep_last_k)
     --threads N          compute threads for host kernels (0 = auto;
                          also: BESPOKE_THREADS env, serve.compute_threads)
     --workers N          worker threads per (model, solver) serving route

@@ -1,0 +1,40 @@
+//! Content hashing for registry integrity checks.
+//!
+//! FNV-1a 64 is dependency-free and plenty for corruption detection
+//! (truncation, bit rot, concurrent partial writes); it is **not** a
+//! cryptographic integrity guarantee and the registry does not claim one.
+
+/// FNV-1a 64-bit over raw bytes.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The hash string stored in registry manifests: algorithm-tagged so the
+/// scheme can evolve without ambiguity (`fnv1a64:<16 hex digits>`).
+pub fn content_hash(bytes: &[u8]) -> String {
+    format!("fnv1a64:{:016x}", fnv1a64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn tagged_format() {
+        assert_eq!(content_hash(b""), "fnv1a64:cbf29ce484222325");
+        assert_ne!(content_hash(b"x"), content_hash(b"y"));
+    }
+}

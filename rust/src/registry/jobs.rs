@@ -1,0 +1,443 @@
+//! Asynchronous training jobs: submit Bespoke training through the serving
+//! protocol, run it on background worker threads, and register the outcome
+//! into the [`Registry`] — from where live serving hot-swaps it in (the
+//! coordinator re-resolves `bespoke:model=...` specs per request; see
+//! `coordinator::batcher` and DESIGN.md §8).
+//!
+//! Job lifecycle: `queued -> running -> done | failed`. Duplicate
+//! submissions for the same artifact key while a job is queued or running
+//! coalesce onto the existing job (the registry would only race itself
+//! training the same solver twice).
+//!
+//! Execution is abstracted behind [`JobRunner`] so the queueing/coalescing/
+//! registration machinery is testable without compiled HLO artifacts;
+//! [`ZooRunner`] is the real implementation over `bespoke::train`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::meta::ArtifactMeta;
+use super::store::{ArtifactKey, ArtifactRecord, Registry};
+use crate::bespoke::{train_with_progress, TrainProgress};
+use crate::config::TrainConfig;
+use crate::coordinator::Metrics;
+use crate::log_info;
+use crate::models::Zoo;
+use crate::runtime::Executable;
+use crate::solvers::theta::{Base, RawTheta};
+
+pub type JobId = u64;
+
+/// Finished (done/failed) jobs retained for `job_status`/`jobs` queries;
+/// older ones are pruned so a long-lived server's job table stays bounded
+/// (a pruned job's artifact lives on in the registry).
+pub const KEEP_FINISHED_JOBS: usize = 256;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// What to train. `iters`/`seed` override the server's `TrainConfig` when
+/// present; they do not participate in the coalescing key — a duplicate
+/// submission joins the in-flight job even if its overrides differ.
+#[derive(Clone, Debug)]
+pub struct TrainJobSpec {
+    pub model: String,
+    pub base: Base,
+    pub n: usize,
+    pub ablation: String,
+    pub iters: Option<usize>,
+    pub seed: Option<u64>,
+}
+
+impl TrainJobSpec {
+    pub fn key(&self) -> ArtifactKey {
+        ArtifactKey::new(&self.model, self.base, self.n, &self.ablation)
+    }
+}
+
+/// A finished training run, ready for registration.
+pub struct TrainedArtifact {
+    pub theta: RawTheta,
+    pub meta: ArtifactMeta,
+}
+
+/// Pluggable job execution.
+pub trait JobRunner: Send + Sync {
+    /// Fail-fast validation at submit time (unknown model, missing
+    /// loss-grad artifact, bad ablation name).
+    fn validate(&self, _spec: &TrainJobSpec) -> Result<()> {
+        Ok(())
+    }
+
+    /// Run the training job, reporting progress through the callback.
+    fn run(
+        &self,
+        spec: &TrainJobSpec,
+        progress: &mut dyn FnMut(&TrainProgress),
+    ) -> Result<TrainedArtifact>;
+}
+
+/// The real runner: loads the model + loss-grad executable from the zoo and
+/// runs paper Algorithm 2 via [`train_with_progress`].
+pub struct ZooRunner {
+    zoo: Arc<Zoo>,
+    base_cfg: TrainConfig,
+}
+
+impl ZooRunner {
+    pub fn new(zoo: Arc<Zoo>, base_cfg: TrainConfig) -> ZooRunner {
+        ZooRunner { zoo, base_cfg }
+    }
+
+    fn job_cfg(&self, spec: &TrainJobSpec) -> TrainConfig {
+        let mut cfg = self.base_cfg.clone();
+        cfg.ablation = spec.ablation.clone();
+        if let Some(iters) = spec.iters {
+            cfg.iters = iters;
+        }
+        if let Some(seed) = spec.seed {
+            cfg.seed = seed;
+        }
+        cfg
+    }
+}
+
+impl JobRunner for ZooRunner {
+    fn validate(&self, spec: &TrainJobSpec) -> Result<()> {
+        // model + exported loss-grad artifact must exist...
+        self.zoo
+            .manifest()
+            .lossgrad(&spec.model, spec.base.name(), spec.n)?;
+        // ...and the ablation name must be one the mask codec knows.
+        RawTheta::ablation_mask(spec.base, spec.n, &spec.ablation)?;
+        Ok(())
+    }
+
+    fn run(
+        &self,
+        spec: &TrainJobSpec,
+        progress: &mut dyn FnMut(&TrainProgress),
+    ) -> Result<TrainedArtifact> {
+        let model = self.zoo.hlo(&spec.model)?;
+        let lg = self
+            .zoo
+            .manifest()
+            .lossgrad(&spec.model, spec.base.name(), spec.n)?;
+        let exe = Executable::load(&self.zoo.manifest().path(&lg.file))
+            .context("loading loss-grad executable")?;
+        let cfg = self.job_cfg(spec);
+        let out = train_with_progress(&model, &exe, spec.base, spec.n, &cfg, progress)?;
+        let meta = ArtifactMeta::from_outcome(&spec.model, spec.base, spec.n, &cfg.ablation, &out);
+        Ok(TrainedArtifact { theta: out.best, meta })
+    }
+}
+
+/// Point-in-time view of a job for `job_status` / `jobs` responses.
+#[derive(Clone, Debug)]
+pub struct JobSnapshot {
+    pub id: JobId,
+    pub spec: TrainJobSpec,
+    pub state: JobState,
+    pub iters_done: usize,
+    /// 0 until the first progress report arrives.
+    pub iters_total: usize,
+    /// NaN until the first progress report.
+    pub loss: f32,
+    /// NaN until the first validation pass.
+    pub val_rmse: f32,
+    pub error: Option<String>,
+    /// The registered artifact, once `Done`.
+    pub artifact: Option<ArtifactRecord>,
+    /// Seconds spent running so far (final once finished; 0 while queued).
+    pub wall_secs: f64,
+}
+
+struct Slot {
+    spec: TrainJobSpec,
+    state: JobState,
+    iters_done: usize,
+    iters_total: usize,
+    loss: f32,
+    val_rmse: f32,
+    error: Option<String>,
+    artifact: Option<ArtifactRecord>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Slot {
+    fn snapshot(&self, id: JobId) -> JobSnapshot {
+        let wall_secs = match (self.started, self.finished) {
+            (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
+            (Some(s), None) => s.elapsed().as_secs_f64(),
+            _ => 0.0,
+        };
+        JobSnapshot {
+            id,
+            spec: self.spec.clone(),
+            state: self.state,
+            iters_done: self.iters_done,
+            iters_total: self.iters_total,
+            loss: self.loss,
+            val_rmse: self.val_rmse,
+            error: self.error.clone(),
+            artifact: self.artifact.clone(),
+            wall_secs,
+        }
+    }
+}
+
+struct JobsState {
+    jobs: BTreeMap<JobId, Slot>,
+    pending: VecDeque<JobId>,
+    next_id: JobId,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<JobsState>,
+    ready: Condvar,
+}
+
+/// Background training-job manager: `max_jobs` worker threads drain a FIFO
+/// of submitted jobs; completed artifacts are registered into the shared
+/// [`Registry`].
+pub struct TrainJobManager {
+    inner: Arc<Inner>,
+    registry: Arc<Registry>,
+    runner: Arc<dyn JobRunner>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl TrainJobManager {
+    /// Errors if a worker thread cannot be spawned (resource exhaustion) —
+    /// a manager with zero workers would queue jobs forever.
+    pub fn new(
+        registry: Arc<Registry>,
+        runner: Arc<dyn JobRunner>,
+        max_jobs: usize,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Result<TrainJobManager> {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(JobsState {
+                jobs: BTreeMap::new(),
+                pending: VecDeque::new(),
+                next_id: 1,
+                shutdown: false,
+            }),
+            ready: Condvar::new(),
+        });
+        for wi in 0..max_jobs.max(1) {
+            let worker_inner = inner.clone();
+            let registry = registry.clone();
+            let runner = runner.clone();
+            let metrics = metrics.clone();
+            // Detached: a worker stuck in a long training run outlives the
+            // manager and still registers its artifact (the registry Arc
+            // keeps the store alive).
+            let spawned = std::thread::Builder::new()
+                .name(format!("train-job-{wi}"))
+                .spawn(move || worker_loop(worker_inner, registry, runner, metrics));
+            if let Err(e) = spawned {
+                // Tell already-spawned workers to exit before bailing.
+                inner.state.lock().unwrap().shutdown = true;
+                inner.ready.notify_all();
+                return Err(anyhow::Error::from(e).context("spawning training-job worker"));
+            }
+        }
+        Ok(TrainJobManager { inner, registry, runner, metrics })
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Submit a job. Returns `(job_id, coalesced)`: when a job for the same
+    /// artifact key is already queued or running, the existing job id is
+    /// returned with `coalesced = true` and nothing new is enqueued.
+    pub fn submit(&self, spec: TrainJobSpec) -> Result<(JobId, bool)> {
+        self.runner.validate(&spec)?;
+        let key = spec.key();
+        let mut st = self.inner.state.lock().unwrap();
+        let in_flight = st.jobs.iter().find(|(_, s)| {
+            s.spec.key() == key && matches!(s.state, JobState::Queued | JobState::Running)
+        });
+        if let Some((&id, _)) = in_flight {
+            self.record("train_jobs_coalesced");
+            return Ok((id, true));
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            Slot {
+                spec,
+                state: JobState::Queued,
+                iters_done: 0,
+                iters_total: 0,
+                loss: f32::NAN,
+                val_rmse: f32::NAN,
+                error: None,
+                artifact: None,
+                started: None,
+                finished: None,
+            },
+        );
+        st.pending.push_back(id);
+        drop(st);
+        self.inner.ready.notify_one();
+        self.record("train_jobs_submitted");
+        Ok((id, false))
+    }
+
+    pub fn status(&self, id: JobId) -> Option<JobSnapshot> {
+        let st = self.inner.state.lock().unwrap();
+        st.jobs.get(&id).map(|s| s.snapshot(id))
+    }
+
+    /// All jobs, oldest first.
+    pub fn jobs(&self) -> Vec<JobSnapshot> {
+        let st = self.inner.state.lock().unwrap();
+        st.jobs.iter().map(|(&id, s)| s.snapshot(id)).collect()
+    }
+
+    fn record(&self, event: &str) {
+        if let Some(m) = &self.metrics {
+            m.record_event(event);
+        }
+    }
+}
+
+impl Drop for TrainJobManager {
+    fn drop(&mut self) {
+        self.inner.state.lock().unwrap().shutdown = true;
+        self.inner.ready.notify_all();
+    }
+}
+
+fn worker_loop(
+    inner: Arc<Inner>,
+    registry: Arc<Registry>,
+    runner: Arc<dyn JobRunner>,
+    metrics: Option<Arc<Metrics>>,
+) {
+    loop {
+        // Block until a job is pending (or shutdown).
+        let (id, spec) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(id) = st.pending.pop_front() {
+                    let slot = st.jobs.get_mut(&id).expect("pending id has a slot");
+                    slot.state = JobState::Running;
+                    slot.started = Some(Instant::now());
+                    break (id, slot.spec.clone());
+                }
+                st = inner.ready.wait(st).unwrap();
+            }
+        };
+        log_info!("[job {id}] training {}", spec.key().label());
+
+        // Run outside the lock; a panicking runner fails the job instead of
+        // wedging it in `running` forever.
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            runner.run(&spec, &mut |p: &TrainProgress| {
+                let mut st = inner.state.lock().unwrap();
+                if let Some(s) = st.jobs.get_mut(&id) {
+                    s.iters_done = p.iter;
+                    s.iters_total = p.iters_total;
+                    s.loss = p.loss;
+                    if !p.val_rmse.is_nan() {
+                        s.val_rmse = p.val_rmse;
+                    }
+                }
+            })
+        }));
+        let registered = match run {
+            Ok(Ok(out)) => registry.register(&out.theta, &out.meta),
+            Ok(Err(e)) => Err(e),
+            Err(panic) => Err(anyhow::anyhow!(
+                "training job panicked: {}",
+                panic_message(&panic)
+            )),
+        };
+
+        let mut st = inner.state.lock().unwrap();
+        prune_finished(&mut st);
+        if let Some(slot) = st.jobs.get_mut(&id) {
+            slot.finished = Some(Instant::now());
+            match registered {
+                Ok(rec) => {
+                    log_info!(
+                        "[job {id}] done: {} v{} val_rmse={:.5}",
+                        rec.key.label(),
+                        rec.version,
+                        rec.val_rmse
+                    );
+                    slot.state = JobState::Done;
+                    slot.artifact = Some(rec);
+                    if let Some(m) = &metrics {
+                        m.record_event("train_jobs_done");
+                    }
+                }
+                Err(e) => {
+                    log_info!("[job {id}] failed: {e:#}");
+                    slot.state = JobState::Failed;
+                    slot.error = Some(format!("{e:#}"));
+                    if let Some(m) = &metrics {
+                        m.record_event("train_jobs_failed");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drop the oldest finished jobs beyond [`KEEP_FINISHED_JOBS`] (BTreeMap
+/// iterates in id order, so the first finished entries are the oldest).
+/// In-flight jobs are never pruned; the job about to be finalized by the
+/// caller still counts as in-flight here and survives.
+fn prune_finished(st: &mut JobsState) {
+    let finished: Vec<JobId> = st
+        .jobs
+        .iter()
+        .filter(|(_, s)| matches!(s.state, JobState::Done | JobState::Failed))
+        .map(|(&id, _)| id)
+        .collect();
+    if finished.len() >= KEEP_FINISHED_JOBS {
+        for id in &finished[..=finished.len() - KEEP_FINISHED_JOBS] {
+            st.jobs.remove(id);
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}

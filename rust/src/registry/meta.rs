@@ -1,0 +1,229 @@
+//! The artifact metadata record — everything `TrainOutcome` knows that the
+//! theta checkpoint alone does not: validation RMSE, GT-path NFE spent, wall
+//! time, and the full training history.
+//!
+//! This is both the `*.meta.json` sidecar written next to every trained
+//! theta and the per-artifact record embedded in the registry manifest.
+//! History serialization is NaN-safe: `val_rmse` is NaN for iterations
+//! without validation, and `json.rs` lossily writes non-finite floats as
+//! `null`, so the codec here maps NaN <-> explicit `null` and round-trips
+//! exactly.
+
+use anyhow::{bail, Result};
+
+use crate::bespoke::{TrainOutcome, TrainPoint};
+use crate::json::Value;
+use crate::solvers::theta::Base;
+
+/// Bumped when the meta/manifest record layout changes incompatibly.
+pub const META_SCHEMA_VERSION: u64 = 1;
+
+/// Metadata of one trained Bespoke artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub schema_version: u64,
+    pub model: String,
+    pub base: Base,
+    pub n: usize,
+    /// Ablation mode the theta was trained under ("full" unless a paper
+    /// Fig. 15 ablation was requested).
+    pub ablation: String,
+    pub best_val_rmse: f32,
+    pub gt_nfe: u64,
+    pub wall_secs: f64,
+    pub iters: usize,
+    /// Unix seconds at registration/save time.
+    pub created_at: u64,
+    pub history: Vec<TrainPoint>,
+}
+
+/// Unix seconds now (0 if the clock is before the epoch, which only happens
+/// on broken clocks — the registry treats created_at as advisory).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// NaN-safe f32 encode: delegates to [`Value::num_or_null`] (explicit
+/// `null` for non-finite; decoders map `null` back to NaN).
+fn f32_or_null(x: f32) -> Value {
+    Value::num_or_null(x as f64)
+}
+
+fn f32_from(v: &Value) -> Result<f32> {
+    match v {
+        Value::Null => Ok(f32::NAN),
+        Value::Num(x) => Ok(*x as f32),
+        other => bail!("expected number or null, got {other:?}"),
+    }
+}
+
+impl ArtifactMeta {
+    /// Build the metadata record for a finished training run.
+    pub fn from_outcome(
+        model: &str,
+        base: Base,
+        n: usize,
+        ablation: &str,
+        out: &TrainOutcome,
+    ) -> ArtifactMeta {
+        ArtifactMeta {
+            schema_version: META_SCHEMA_VERSION,
+            model: model.to_string(),
+            base,
+            n,
+            ablation: ablation.to_string(),
+            best_val_rmse: out.best_val_rmse,
+            gt_nfe: out.gt_nfe,
+            wall_secs: out.wall_secs,
+            iters: out.history.len(),
+            created_at: unix_now(),
+            history: out.history.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let history = self
+            .history
+            .iter()
+            .map(|p| {
+                Value::obj(vec![
+                    ("iter", Value::Num(p.iter as f64)),
+                    ("loss", Value::Num(p.loss as f64)),
+                    ("val_rmse", f32_or_null(p.val_rmse)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema_version", Value::Num(self.schema_version as f64)),
+            ("model", Value::Str(self.model.clone())),
+            ("base", Value::Str(self.base.name().into())),
+            ("n", Value::Num(self.n as f64)),
+            ("ablation", Value::Str(self.ablation.clone())),
+            ("best_val_rmse", f32_or_null(self.best_val_rmse)),
+            ("gt_nfe", Value::Num(self.gt_nfe as f64)),
+            ("wall_secs", Value::Num(self.wall_secs)),
+            ("iters", Value::Num(self.iters as f64)),
+            ("created_at", Value::Num(self.created_at as f64)),
+            ("history", Value::Arr(history)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ArtifactMeta> {
+        let schema_version = v.get("schema_version")?.as_usize()? as u64;
+        if schema_version > META_SCHEMA_VERSION {
+            bail!(
+                "artifact meta schema_version {schema_version} is newer than \
+                 this binary understands ({META_SCHEMA_VERSION})"
+            );
+        }
+        let mut history = Vec::new();
+        for p in v.get("history")?.as_arr()? {
+            history.push(TrainPoint {
+                iter: p.get("iter")?.as_usize()?,
+                loss: p.get("loss")?.as_f64()? as f32,
+                val_rmse: f32_from(p.get("val_rmse")?)?,
+            });
+        }
+        Ok(ArtifactMeta {
+            schema_version,
+            model: v.get("model")?.as_str()?.to_string(),
+            base: Base::parse(v.get("base")?.as_str()?)?,
+            n: v.get("n")?.as_usize()?,
+            ablation: v.get("ablation")?.as_str()?.to_string(),
+            best_val_rmse: f32_from(v.get("best_val_rmse")?)?,
+            gt_nfe: v.get("gt_nfe")?.as_usize()? as u64,
+            wall_secs: v.get("wall_secs")?.as_f64()?,
+            iters: v.get("iters")?.as_usize()?,
+            created_at: v.get("created_at")?.as_usize()? as u64,
+            history,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+/// The sidecar path for a theta checkpoint: `x.json` -> `x.meta.json`
+/// (non-`.json` paths just get `.meta.json` appended).
+pub fn sidecar_path(theta_path: &std::path::Path) -> std::path::PathBuf {
+    let s = theta_path.to_string_lossy();
+    let stem = s.strip_suffix(".json").unwrap_or(&s);
+    std::path::PathBuf::from(format!("{stem}.meta.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            schema_version: META_SCHEMA_VERSION,
+            model: "checker2-ot".into(),
+            base: Base::Rk2,
+            n: 4,
+            ablation: "full".into(),
+            best_val_rmse: 0.0123,
+            gt_nfe: 4567,
+            wall_secs: 1.25,
+            iters: 3,
+            created_at: 1_753_000_000,
+            history: vec![
+                TrainPoint { iter: 1, loss: 0.5, val_rmse: f32::NAN },
+                TrainPoint { iter: 2, loss: 0.4, val_rmse: f32::NAN },
+                TrainPoint { iter: 3, loss: 0.3, val_rmse: 0.0123 },
+            ],
+        }
+    }
+
+    #[test]
+    fn nan_history_roundtrips_through_text() {
+        let meta = sample_meta();
+        // Full text round-trip: write -> parse -> decode. NaN must survive
+        // as NaN (explicit null), finite values exactly.
+        let text = meta.to_json().to_string_pretty();
+        assert!(text.contains("null"), "non-validation iters must serialize as null");
+        let back = ArtifactMeta::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.history.len(), 3);
+        assert!(back.history[0].val_rmse.is_nan());
+        assert!(back.history[1].val_rmse.is_nan());
+        assert_eq!(back.history[2].val_rmse, 0.0123);
+        assert_eq!(back.history[2].loss, 0.3);
+        assert_eq!(back.model, meta.model);
+        assert_eq!(back.base, Base::Rk2);
+        assert_eq!(back.n, 4);
+        assert_eq!(back.gt_nfe, 4567);
+        assert_eq!(back.created_at, meta.created_at);
+        assert_eq!(back.best_val_rmse, meta.best_val_rmse);
+    }
+
+    #[test]
+    fn rejects_future_schema() {
+        let mut v = sample_meta().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("schema_version".into(), Value::Num(999.0));
+        }
+        assert!(ArtifactMeta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn sidecar_naming() {
+        assert_eq!(
+            sidecar_path(std::path::Path::new("out/thetas/t.json")),
+            std::path::PathBuf::from("out/thetas/t.meta.json")
+        );
+        assert_eq!(
+            sidecar_path(std::path::Path::new("weird.bin")),
+            std::path::PathBuf::from("weird.bin.meta.json")
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! The solver artifact registry (new subsystem, DESIGN.md §8): a versioned
+//! on-disk store of trained Bespoke thetas plus the asynchronous training
+//! jobs that produce them.
+//!
+//! The paper's deliverable is a *trained artifact* — ~80 learned parameters
+//! per (model, base scheme, n). This module makes those artifacts
+//! first-class:
+//!
+//! * [`store::Registry`] — content-hashed, versioned storage keyed by
+//!   `(model, base, n, ablation)` with a manifest recording val RMSE,
+//!   gt_nfe, wall time and created-at; integrity-checked on load; GC keeps
+//!   the last-k versions plus the best.
+//! * [`meta::ArtifactMeta`] — the NaN-safe training-outcome record, also
+//!   written as a `*.meta.json` sidecar by `repro train-bespoke`.
+//! * [`jobs::TrainJobManager`] — background worker threads running
+//!   `bespoke::train` with progress reporting; completed artifacts are
+//!   registered and hot-swapped into live serving (the coordinator
+//!   re-resolves `bespoke:model=M:n=8` specs against the registry per
+//!   request and retires stale routes).
+//!
+//! The `solvers` module never depends on this one: registry-form specs are
+//! resolved to `bespoke:path=...` by [`store::Registry::resolve_spec`]
+//! before they reach `SolverSpec::build`.
+
+pub mod hash;
+pub mod jobs;
+pub mod meta;
+pub mod store;
+
+pub use hash::{content_hash, fnv1a64};
+pub use jobs::{
+    JobId, JobRunner, JobSnapshot, JobState, TrainedArtifact, TrainJobManager, TrainJobSpec,
+    ZooRunner,
+};
+pub use meta::{sidecar_path, ArtifactMeta, META_SCHEMA_VERSION};
+pub use store::{ArtifactKey, ArtifactRecord, Registry};

@@ -1,0 +1,470 @@
+//! The versioned on-disk artifact store.
+//!
+//! Layout under the registry root (`[registry].root`, default
+//! `out/registry`):
+//!
+//! ```text
+//! <root>/manifest.json                      registry manifest (see below)
+//! <root>/artifacts/<model>_<base>_n<n>_<ablation>/
+//!     v<version>.theta.json                 the RawTheta checkpoint
+//!     v<version>.meta.json                  ArtifactMeta sidecar
+//! ```
+//!
+//! The manifest is the source of truth: a flat list of [`ArtifactRecord`]s
+//! (content hash, val RMSE, gt_nfe, wall time, created-at, schema version).
+//! It is rewritten atomically (temp file + rename) on every mutation, so a
+//! crash mid-register leaves at worst an orphaned theta file, never a
+//! manifest that points at garbage. Theta loads re-hash the file bytes and
+//! reject mismatches — truncated or corrupted checkpoints fail loudly
+//! instead of producing wrong samples.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::hash::content_hash;
+use super::meta::{ArtifactMeta, META_SCHEMA_VERSION};
+use crate::json::Value;
+use crate::solvers::theta::{Base, RawTheta};
+use crate::solvers::SolverSpec;
+
+/// The identity of one trained-solver lineage: every version registered for
+/// the same key competes for "best".
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ArtifactKey {
+    pub model: String,
+    pub base: Base,
+    pub n: usize,
+    pub ablation: String,
+}
+
+impl ArtifactKey {
+    pub fn new(model: &str, base: Base, n: usize, ablation: &str) -> ArtifactKey {
+        ArtifactKey {
+            model: model.to_string(),
+            base,
+            n,
+            ablation: ablation.to_string(),
+        }
+    }
+
+    /// Directory name under `<root>/artifacts/`.
+    pub fn dir_name(&self) -> String {
+        format!("{}_{}_n{}_{}", self.model, self.base.name(), self.n, self.ablation)
+    }
+
+    /// Human-readable label for logs and CLI tables.
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} n={} ({})",
+            self.model,
+            self.base.name(),
+            self.n,
+            self.ablation
+        )
+    }
+}
+
+/// One registered artifact version, as recorded in the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactRecord {
+    pub key: ArtifactKey,
+    /// Monotonic per-key version, starting at 1.
+    pub version: u64,
+    /// Theta checkpoint path, relative to the registry root.
+    pub file: String,
+    /// Meta sidecar path, relative to the registry root.
+    pub meta_file: String,
+    /// Tagged content hash of the theta file bytes (`fnv1a64:<hex>`).
+    pub content_hash: String,
+    pub val_rmse: f32,
+    pub gt_nfe: u64,
+    pub wall_secs: f64,
+    pub created_at: u64,
+    pub schema_version: u64,
+}
+
+impl ArtifactRecord {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("model", Value::Str(self.key.model.clone())),
+            ("base", Value::Str(self.key.base.name().into())),
+            ("n", Value::Num(self.key.n as f64)),
+            ("ablation", Value::Str(self.key.ablation.clone())),
+            ("version", Value::Num(self.version as f64)),
+            ("file", Value::Str(self.file.clone())),
+            ("meta_file", Value::Str(self.meta_file.clone())),
+            ("content_hash", Value::Str(self.content_hash.clone())),
+            ("val_rmse", Value::num_or_null(self.val_rmse as f64)),
+            ("gt_nfe", Value::Num(self.gt_nfe as f64)),
+            ("wall_secs", Value::Num(self.wall_secs)),
+            ("created_at", Value::Num(self.created_at as f64)),
+            ("schema_version", Value::Num(self.schema_version as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<ArtifactRecord> {
+        let schema_version = v.get("schema_version")?.as_usize()? as u64;
+        if schema_version > META_SCHEMA_VERSION {
+            bail!(
+                "artifact record schema_version {schema_version} is newer \
+                 than this binary understands ({META_SCHEMA_VERSION})"
+            );
+        }
+        let val_rmse = match v.get("val_rmse")? {
+            Value::Null => f32::NAN,
+            x => x.as_f64()? as f32,
+        };
+        Ok(ArtifactRecord {
+            key: ArtifactKey {
+                model: v.get("model")?.as_str()?.to_string(),
+                base: Base::parse(v.get("base")?.as_str()?)?,
+                n: v.get("n")?.as_usize()?,
+                ablation: v.get("ablation")?.as_str()?.to_string(),
+            },
+            version: v.get("version")?.as_usize()? as u64,
+            file: v.get("file")?.as_str()?.to_string(),
+            meta_file: v.get("meta_file")?.as_str()?.to_string(),
+            content_hash: v.get("content_hash")?.as_str()?.to_string(),
+            val_rmse,
+            gt_nfe: v.get("gt_nfe")?.as_usize()? as u64,
+            wall_secs: v.get("wall_secs")?.as_f64()?,
+            created_at: v.get("created_at")?.as_usize()? as u64,
+            schema_version,
+        })
+    }
+
+    /// NaN-as-worst ordering helper for "best val RMSE" selection.
+    fn rmse_rank(&self) -> f32 {
+        if self.val_rmse.is_finite() {
+            self.val_rmse
+        } else {
+            f32::INFINITY
+        }
+    }
+}
+
+/// On-disk identity of a manifest read: (mtime, byte length). Length is
+/// included so a rewrite landing within one mtime granule (coarse
+/// filesystems: 1s) is still detected unless it is also byte-identical in
+/// size — in which case it is almost certainly the same content.
+type ManifestStamp = Option<(std::time::SystemTime, u64)>;
+
+/// In-memory view of the manifest plus the stamp it was read at (the
+/// staleness signal for cross-process refresh).
+struct StoreState {
+    records: Vec<ArtifactRecord>,
+    manifest_stamp: ManifestStamp,
+}
+
+/// The registry: thread-safe, coarse-grained (one lock across manifest
+/// mutations — registrations are seconds-long training outcomes, not a hot
+/// path).
+///
+/// Cross-process coherence: every read/mutation first re-loads the
+/// manifest if its mtime changed, so a `repro train-bespoke --register` or
+/// `registry gc` run against a live server's root is picked up instead of
+/// being clobbered by the server's next blind rewrite. Two processes
+/// *mutating* in the same instant still race last-writer-wins on the
+/// rename (there is no cross-process file lock); the window is one
+/// mutation, not a process lifetime.
+pub struct Registry {
+    root: PathBuf,
+    state: Mutex<StoreState>,
+}
+
+/// Parse the manifest file (which must exist) into records.
+fn parse_manifest(path: &Path) -> Result<Vec<ArtifactRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading registry manifest {}", path.display()))?;
+    let v = Value::parse(&text).context("parsing registry manifest")?;
+    let schema = v.get("schema_version")?.as_usize()? as u64;
+    if schema > META_SCHEMA_VERSION {
+        bail!(
+            "registry manifest schema_version {schema} is newer than \
+             this binary understands ({META_SCHEMA_VERSION})"
+        );
+    }
+    let mut out = Vec::new();
+    for rv in v.get("artifacts")?.as_arr()? {
+        out.push(ArtifactRecord::from_json(rv).context("parsing artifact record")?);
+    }
+    Ok(out)
+}
+
+fn manifest_stamp(path: &Path) -> ManifestStamp {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
+impl Registry {
+    /// Open a registry at `root`. A missing directory or manifest is an
+    /// empty registry (nothing is created on disk until the first
+    /// registration). An unreadable or schema-incompatible manifest is an
+    /// error — a corrupt store must not silently read as empty.
+    pub fn open(root: &Path) -> Result<Registry> {
+        let manifest = root.join("manifest.json");
+        let (records, stamp) = if manifest.exists() {
+            (parse_manifest(&manifest)?, manifest_stamp(&manifest))
+        } else {
+            (Vec::new(), None)
+        };
+        Ok(Registry {
+            root: root.to_path_buf(),
+            state: Mutex::new(StoreState { records, manifest_stamp: stamp }),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Re-read the manifest if another process rewrote it since our last
+    /// load ((mtime, length) stamp changed). Called under the lock by
+    /// every accessor. A manifest that became unreadable keeps the
+    /// previous view and errors.
+    fn refresh(&self, st: &mut StoreState) -> Result<()> {
+        let path = self.root.join("manifest.json");
+        let stamp = manifest_stamp(&path);
+        if stamp == st.manifest_stamp {
+            return Ok(());
+        }
+        st.records = if path.exists() { parse_manifest(&path)? } else { Vec::new() };
+        st.manifest_stamp = stamp;
+        Ok(())
+    }
+
+    /// All records, sorted by (key, version).
+    pub fn list(&self) -> Vec<ArtifactRecord> {
+        let mut st = self.state.lock().unwrap();
+        let _ = self.refresh(&mut st); // serve the previous view on error
+        let mut out = st.records.clone();
+        out.sort_by(|a, b| a.key.cmp(&b.key).then(a.version.cmp(&b.version)));
+        out
+    }
+
+    /// Absolute path of a record's theta checkpoint.
+    pub fn theta_path(&self, rec: &ArtifactRecord) -> PathBuf {
+        self.root.join(&rec.file)
+    }
+
+    /// Register a trained theta + its metadata as the next version of its
+    /// key. Writes the theta and meta files, then atomically rewrites the
+    /// manifest. Returns the new record.
+    pub fn register(&self, theta: &RawTheta, meta: &ArtifactMeta) -> Result<ArtifactRecord> {
+        if theta.base != meta.base || theta.n != meta.n {
+            bail!(
+                "theta (base={}, n={}) does not match meta (base={}, n={})",
+                theta.base.name(),
+                theta.n,
+                meta.base.name(),
+                meta.n
+            );
+        }
+        let key = ArtifactKey::new(&meta.model, meta.base, meta.n, &meta.ablation);
+        let mut st = self.state.lock().unwrap();
+        self.refresh(&mut st)?;
+        let version = st
+            .records
+            .iter()
+            .filter(|r| r.key == key)
+            .map(|r| r.version)
+            .max()
+            .unwrap_or(0)
+            + 1;
+        let dir_rel = PathBuf::from("artifacts").join(key.dir_name());
+        std::fs::create_dir_all(self.root.join(&dir_rel))
+            .with_context(|| format!("creating {}", self.root.join(&dir_rel).display()))?;
+        let file = dir_rel.join(format!("v{version}.theta.json"));
+        let meta_file = dir_rel.join(format!("v{version}.meta.json"));
+
+        let theta_bytes = theta.to_json().to_string_pretty();
+        std::fs::write(self.root.join(&file), &theta_bytes)
+            .with_context(|| format!("writing {}", self.root.join(&file).display()))?;
+        meta.save(&self.root.join(&meta_file))?;
+
+        let rec = ArtifactRecord {
+            key,
+            version,
+            file: file.to_string_lossy().into_owned(),
+            meta_file: meta_file.to_string_lossy().into_owned(),
+            content_hash: content_hash(theta_bytes.as_bytes()),
+            val_rmse: meta.best_val_rmse,
+            gt_nfe: meta.gt_nfe,
+            wall_secs: meta.wall_secs,
+            created_at: meta.created_at,
+            schema_version: META_SCHEMA_VERSION,
+        };
+        st.records.push(rec.clone());
+        self.save_manifest(&mut st)?;
+        Ok(rec)
+    }
+
+    /// The best (lowest validation RMSE; ties -> newest version) artifact
+    /// matching the query. `base: None` matches any base; an unspecified
+    /// ablation resolves against `"full"` artifacts only — the crippled
+    /// Fig. 15 ablations must be asked for by name.
+    pub fn best(
+        &self,
+        model: &str,
+        n: usize,
+        base: Option<Base>,
+        ablation: Option<&str>,
+    ) -> Option<ArtifactRecord> {
+        let ablation = ablation.unwrap_or("full");
+        let base_ok = |rb: Base| match base {
+            Some(b) => rb == b,
+            None => true,
+        };
+        let mut st = self.state.lock().unwrap();
+        let _ = self.refresh(&mut st); // serve the previous view on error
+        st.records
+            .iter()
+            .filter(|r| {
+                r.key.model == model
+                    && r.key.n == n
+                    && r.key.ablation == ablation
+                    && base_ok(r.key.base)
+            })
+            .min_by(|a, b| {
+                a.rmse_rank()
+                    .partial_cmp(&b.rmse_rank())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.version.cmp(&a.version))
+            })
+            .cloned()
+    }
+
+    /// Resolve a registry-form spec (`bespoke:model=M:n=8[:base=..][:ablation=..]`)
+    /// to the concrete checkpoint form (`bespoke:path=...`) of its current
+    /// best artifact. Non-registry specs pass through unchanged.
+    pub fn resolve_spec(&self, spec: &SolverSpec) -> Result<SolverSpec> {
+        match spec {
+            SolverSpec::BespokeRegistry { model, n, base, ablation } => {
+                let rec = self
+                    .best(model, *n, *base, ablation.as_deref())
+                    .with_context(|| {
+                        format!(
+                            "no registered bespoke artifact for model={model} n={n} \
+                             base={} ablation={} in registry {}",
+                            base.map(|b| b.name()).unwrap_or("any"),
+                            ablation.as_deref().unwrap_or("full"),
+                            self.root.display()
+                        )
+                    })?;
+                Ok(SolverSpec::Bespoke {
+                    path: self.theta_path(&rec).to_string_lossy().into_owned(),
+                })
+            }
+            other => Ok(other.clone()),
+        }
+    }
+
+    /// Load a record's theta with integrity checks: the file bytes must
+    /// hash to the recorded content hash (rejects truncation/corruption)
+    /// and the decoded theta must match the record's (base, n).
+    pub fn load_theta(&self, rec: &ArtifactRecord) -> Result<RawTheta> {
+        let path = self.theta_path(rec);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading artifact {}", path.display()))?;
+        let got = content_hash(&bytes);
+        if got != rec.content_hash {
+            bail!(
+                "artifact {} v{} failed integrity check: manifest says {}, \
+                 file hashes to {got} (truncated or corrupted checkpoint)",
+                rec.key.label(),
+                rec.version,
+                rec.content_hash
+            );
+        }
+        let theta = RawTheta::from_json(
+            &Value::parse(std::str::from_utf8(&bytes).context("artifact is not UTF-8")?)
+                .context("parsing artifact JSON")?,
+        )?;
+        if theta.base != rec.key.base || theta.n != rec.key.n {
+            bail!(
+                "artifact {} v{} decodes to base={} n={}, manifest disagrees",
+                rec.key.label(),
+                rec.version,
+                theta.base.name(),
+                theta.n
+            );
+        }
+        Ok(theta)
+    }
+
+    /// Garbage-collect old versions: for every key, keep the `keep_last_k`
+    /// newest versions plus (always) the best-RMSE one. Returns the removed
+    /// records; their theta/meta files are deleted best-effort.
+    pub fn gc(&self, keep_last_k: usize) -> Result<Vec<ArtifactRecord>> {
+        let mut st = self.state.lock().unwrap();
+        self.refresh(&mut st)?;
+        let mut keys: Vec<ArtifactKey> = st.records.iter().map(|r| r.key.clone()).collect();
+        keys.sort();
+        keys.dedup();
+
+        let mut keep: Vec<ArtifactRecord> = Vec::new();
+        let mut dropped: Vec<ArtifactRecord> = Vec::new();
+        for key in keys {
+            let mut versions: Vec<ArtifactRecord> =
+                st.records.iter().filter(|r| r.key == key).cloned().collect();
+            versions.sort_by(|a, b| b.version.cmp(&a.version)); // newest first
+            let best_version = versions
+                .iter()
+                .min_by(|a, b| {
+                    a.rmse_rank()
+                        .partial_cmp(&b.rmse_rank())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(b.version.cmp(&a.version))
+                })
+                .map(|r| r.version);
+            for (i, rec) in versions.into_iter().enumerate() {
+                if i < keep_last_k || Some(rec.version) == best_version {
+                    keep.push(rec);
+                } else {
+                    dropped.push(rec);
+                }
+            }
+        }
+        if dropped.is_empty() {
+            return Ok(dropped);
+        }
+        st.records = keep;
+        self.save_manifest(&mut st)?;
+        for rec in &dropped {
+            let _ = std::fs::remove_file(self.root.join(&rec.file));
+            let _ = std::fs::remove_file(self.root.join(&rec.meta_file));
+        }
+        Ok(dropped)
+    }
+
+    /// Atomic manifest rewrite: temp file in the same directory + rename,
+    /// then re-stat so the staleness check tracks our own write. The temp
+    /// name is unique per writer (pid + in-process counter): a concurrent
+    /// mutator in another process must never truncate the temp file this
+    /// process is about to rename into place.
+    fn save_manifest(&self, st: &mut StoreState) -> Result<()> {
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating registry root {}", self.root.display()))?;
+        let v = Value::obj(vec![
+            ("schema_version", Value::Num(META_SCHEMA_VERSION as f64)),
+            (
+                "artifacts",
+                Value::Arr(st.records.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        let path = self.root.join("manifest.json");
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = self
+            .root
+            .join(format!("manifest.json.{}.{seq}.tmp", std::process::id()));
+        std::fs::write(&tmp, v.to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming manifest into place at {}", path.display()))?;
+        st.manifest_stamp = manifest_stamp(&path);
+        Ok(())
+    }
+}

@@ -19,8 +19,11 @@
 //! string grammar (`"rk2:n=10:grid=edm"`, `"dopri5:rtol=1e-6:atol=1e-8"`),
 //! `Display` back to a canonical string, round-trip through JSON, and
 //! [`spec::SolverSpec::build`] instantiates the described [`Sampler`]. The
-//! string-in/sampler-out [`registry::make_sampler`] remains as a one-line
-//! convenience wrapper.
+//! string-in/sampler-out [`spec::make_sampler`] remains as a one-line
+//! convenience wrapper. The registry-resolved form
+//! (`bespoke:model=M:n=8`) names the best trained artifact in the
+//! `crate::registry` store and is rewritten to `bespoke:path=...` by
+//! `Registry::resolve_spec` before building.
 //!
 //! **Step-wise execution** ([`SolveSession`]): a sampler is not a one-shot
 //! black box — [`Sampler::begin`] opens a session that advances one paper-
@@ -33,7 +36,6 @@
 pub mod bespoke;
 pub mod dopri5;
 pub mod grids;
-pub mod registry;
 pub mod rk;
 pub mod spec;
 pub mod theta;
@@ -42,9 +44,8 @@ pub mod transfer;
 pub use bespoke::BespokeSolver;
 pub use dopri5::{DenseSolution, Dopri5};
 pub use grids::GridKind;
-pub use registry::make_sampler;
 pub use rk::{BaseRk, FixedGridSolver};
-pub use spec::SolverSpec;
+pub use spec::{make_sampler, SolverSpec};
 pub use theta::{Base, DecodedTheta, RawTheta};
 pub use transfer::TransferSolver;
 

@@ -3,15 +3,21 @@
 //!
 //! A [`SolverSpec`] is the validated, structured form of the colon-separated
 //! CLI/server spec strings (`rk2:n=8:grid=edm`, `dopri5:rtol=1e-6:atol=1e-8`,
-//! `bespoke:path=out/theta.json`, ...). Parsing is strict — unknown keys,
-//! duplicate keys and malformed `k=v` segments are errors, never silently
-//! dropped — and `Display` emits a canonical string that parses back to an
-//! equal spec. Specs also round-trip through JSON (`to_json`/`from_json`) so
-//! solver configs can travel inside manifests, reports and wire requests.
+//! `bespoke:path=out/theta.json`, `bespoke:model=checker2-ot:n=8`, ...).
+//! Parsing is strict — unknown keys, duplicate keys and malformed `k=v`
+//! segments are errors, never silently dropped — and `Display` emits a
+//! canonical string that parses back to an equal spec. Specs also round-trip
+//! through JSON (`to_json`/`from_json`) so solver configs can travel inside
+//! manifests, reports and wire requests.
 //!
 //! [`SolverSpec::build`] instantiates the described [`Sampler`] against a
-//! model's scheduler; the legacy [`super::registry::make_sampler`] is now a
-//! thin `parse` + `build` wrapper.
+//! model's scheduler; [`make_sampler`] is a thin `parse` + `build` wrapper.
+//! The *registry-resolved* bespoke form (`bespoke:model=M:n=8` — no path)
+//! cannot be built directly: it names "the best trained artifact for this
+//! key", and `crate::registry::Registry::resolve_spec` rewrites it to the
+//! concrete `bespoke:path=...` form (the coordinator and CLI do this
+//! automatically, re-resolving per request so freshly registered artifacts
+//! hot-swap into serving without a restart).
 
 use std::fmt;
 use std::str::FromStr;
@@ -22,7 +28,7 @@ use super::bespoke::BespokeSolver;
 use super::dopri5::Dopri5;
 use super::grids::GridKind;
 use super::rk::{BaseRk, FixedGridSolver};
-use super::theta::RawTheta;
+use super::theta::{Base, RawTheta};
 use super::transfer::TransferSolver;
 use super::Sampler;
 use crate::json::Value;
@@ -46,6 +52,16 @@ pub enum SolverSpec {
     Dopri5 { rtol: f64, atol: f64, max_steps: usize },
     /// Learned Bespoke solver loaded from a theta checkpoint.
     Bespoke { path: String },
+    /// Learned Bespoke solver resolved from the artifact registry: the best
+    /// registered theta for `(model, n)` (optionally pinned to a base RK
+    /// scheme / ablation). Must be resolved to [`SolverSpec::Bespoke`] via
+    /// `registry::Registry::resolve_spec` before building.
+    BespokeRegistry {
+        model: String,
+        n: usize,
+        base: Option<Base>,
+        ablation: Option<String>,
+    },
 }
 
 /// Strict `k=v` segment list: rejects malformed segments and duplicates,
@@ -141,7 +157,23 @@ impl SolverSpec {
                 };
                 SolverSpec::Dopri5 { rtol, atol, max_steps }
             }
-            "bespoke" => SolverSpec::Bespoke { path: kv.require("path")? },
+            "bespoke" => match kv.take("path") {
+                Some(path) => {
+                    if kv.pairs.iter().any(|(k, _)| k == "model" || k == "n") {
+                        bail!(
+                            "bespoke spec takes either path=... or \
+                             model=.../n=..., not both"
+                        );
+                    }
+                    SolverSpec::Bespoke { path }
+                }
+                None => SolverSpec::BespokeRegistry {
+                    model: kv.require("model").context("need path=... or model=M:n=K")?,
+                    n: parse_usize("n", &kv.require("n")?)?,
+                    base: kv.take("base").map(|b| Base::parse(&b)).transpose()?,
+                    ablation: kv.take("ablation"),
+                },
+            },
             _ => bail!(
                 "unknown solver kind {kind:?} \
                  (rk1|rk2|rk4|rk1-target|rk2-target|rk4-target|dopri5|bespoke)"
@@ -176,6 +208,17 @@ impl SolverSpec {
                     bail!("bespoke path must be non-empty");
                 }
             }
+            SolverSpec::BespokeRegistry { model, n, ablation, .. } => {
+                if model.is_empty() {
+                    bail!("bespoke model must be non-empty");
+                }
+                if *n == 0 {
+                    bail!("n must be >= 1");
+                }
+                if ablation.as_deref() == Some("") {
+                    bail!("ablation must be non-empty when given");
+                }
+            }
         }
         Ok(())
     }
@@ -190,8 +233,14 @@ impl SolverSpec {
                 BaseRk::Rk4 => "rk4-target",
             },
             SolverSpec::Dopri5 { .. } => "dopri5",
-            SolverSpec::Bespoke { .. } => "bespoke",
+            SolverSpec::Bespoke { .. } | SolverSpec::BespokeRegistry { .. } => "bespoke",
         }
+    }
+
+    /// True for the registry-resolved bespoke form, which needs a
+    /// `registry::Registry` to become buildable.
+    pub fn needs_registry(&self) -> bool {
+        matches!(self, SolverSpec::BespokeRegistry { .. })
     }
 
     // ---- JSON (de)serialization -----------------------------------------
@@ -220,6 +269,20 @@ impl SolverSpec {
                 ("kind", Value::Str("bespoke".into())),
                 ("path", Value::Str(path.clone())),
             ]),
+            SolverSpec::BespokeRegistry { model, n, base, ablation } => {
+                let mut fields = vec![
+                    ("kind", Value::Str("bespoke-registry".into())),
+                    ("model", Value::Str(model.clone())),
+                    ("n", Value::Num(*n as f64)),
+                ];
+                if let Some(b) = base {
+                    fields.push(("base", Value::Str(b.name().into())));
+                }
+                if let Some(a) = ablation {
+                    fields.push(("ablation", Value::Str(a.clone())));
+                }
+                Value::obj(fields)
+            }
         }
     }
 
@@ -241,6 +304,15 @@ impl SolverSpec {
                 max_steps: v.get("max_steps")?.as_usize()?,
             },
             "bespoke" => SolverSpec::Bespoke { path: v.get("path")?.as_str()?.to_string() },
+            "bespoke-registry" => SolverSpec::BespokeRegistry {
+                model: v.get("model")?.as_str()?.to_string(),
+                n: v.get("n")?.as_usize()?,
+                base: v.get_opt("base").map(|b| Base::parse(b.as_str()?)).transpose()?,
+                ablation: v
+                    .get_opt("ablation")
+                    .map(|a| Ok::<_, anyhow::Error>(a.as_str()?.to_string()))
+                    .transpose()?,
+            },
             other => bail!("unknown solver spec kind {other:?} in JSON"),
         };
         out.validate()?;
@@ -271,8 +343,20 @@ impl SolverSpec {
                     .with_context(|| format!("loading theta from {path}"))?;
                 Ok(Box::new(BespokeSolver::new(&raw)))
             }
+            SolverSpec::BespokeRegistry { .. } => bail!(
+                "spec {self} is registry-resolved; resolve it to a concrete \
+                 bespoke:path=... via registry::Registry::resolve_spec first \
+                 (serve/sample attach the registry automatically)"
+            ),
         }
     }
+}
+
+/// Build a sampler from a spec string; `model_sched` is the scheduler of
+/// the model the sampler will run against. Equivalent to
+/// `SolverSpec::parse(spec)?.build(model_sched)`.
+pub fn make_sampler(spec: &str, model_sched: Scheduler) -> Result<Box<dyn Sampler>> {
+    SolverSpec::parse(spec)?.build(model_sched)
 }
 
 impl fmt::Display for SolverSpec {
@@ -300,6 +384,16 @@ impl fmt::Display for SolverSpec {
                 Ok(())
             }
             SolverSpec::Bespoke { path } => write!(f, "bespoke:path={path}"),
+            SolverSpec::BespokeRegistry { model, n, base, ablation } => {
+                write!(f, "bespoke:model={model}:n={n}")?;
+                if let Some(b) = base {
+                    write!(f, ":base={}", b.name())?;
+                }
+                if let Some(a) = ablation {
+                    write!(f, ":ablation={a}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -332,6 +426,9 @@ mod tests {
         "dopri5:tol=1e-4:max_steps=500",
         "dopri5",
         "bespoke:path=out/thetas/theta_checker2-ot_rk2_n8.json",
+        "bespoke:model=checker2-ot:n=8",
+        "bespoke:model=checker2-ot:n=8:base=rk1",
+        "bespoke:model=checker2-ot:n=8:base=rk2:ablation=time-only",
     ];
 
     #[test]
@@ -424,17 +521,71 @@ mod tests {
             "dopri5:tol=abc",
             "dopri5:max_steps=0",
             "dopri5:n=4",          // key from another kind
-            "bespoke",             // missing path
+            "bespoke",             // missing path and model
+            "bespoke:model=m",     // registry form missing n
+            "bespoke:model=m:n=0", // zero steps
+            "bespoke:model=m:n=4:base=rk4",  // no rk4 bespoke base
+            "bespoke:path=x:model=m:n=4",    // path and model are exclusive
+            "bespoke:model=m:n=4:foo=1",     // unknown key
         ] {
             assert!(SolverSpec::parse(s).is_err(), "should reject {s:?}");
         }
     }
 
     #[test]
+    fn registry_form_needs_resolution() {
+        let spec = SolverSpec::parse("bespoke:model=m:n=4").unwrap();
+        assert!(spec.needs_registry());
+        assert_eq!(spec.kind(), "bespoke");
+        let err = spec.build(Scheduler::CondOt).unwrap_err().to_string();
+        assert!(err.contains("registry"), "unhelpful error: {err}");
+        assert!(!SolverSpec::parse("bespoke:path=x.json").unwrap().needs_registry());
+    }
+
+    #[test]
+    fn make_sampler_builds_every_buildable_kind() {
+        let s = Scheduler::CondOt;
+        for spec in [
+            "rk1:n=4",
+            "rk2:n=8:grid=edm",
+            "rk2:n=8:grid=logsnr",
+            "rk2:n=8:grid=cosine",
+            "rk4:n=2",
+            "rk2-target:n=4:sched=vp",
+            "dopri5:tol=1e-4",
+            "dopri5:rtol=1e-4:atol=1e-6",
+            "dopri5",
+        ] {
+            let sampler = make_sampler(spec, s).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(!sampler.name().is_empty());
+        }
+        for spec in ["nope:n=4", "rk2", "rk2:n=4:n=8", "bespoke:model=m:n=4"] {
+            assert!(make_sampler(spec, s).is_err(), "should reject {spec}");
+        }
+    }
+
+    #[test]
+    fn make_sampler_bespoke_from_checkpoint() {
+        let th = RawTheta::identity(Base::Rk2, 4);
+        let dir = std::env::temp_dir().join(format!("bespoke_spec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("theta.json");
+        th.save(&path).unwrap();
+        let s = make_sampler(
+            &format!("bespoke:path={}", path.display()),
+            Scheduler::CondOt,
+        )
+        .unwrap();
+        assert_eq!(s.nfe(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn builds_non_checkpoint_kinds() {
         for s in DOCUMENTED {
             if s.starts_with("bespoke") {
-                continue; // needs a checkpoint on disk; covered in registry tests
+                // needs a checkpoint on disk (covered above) or a registry
+                continue;
             }
             let spec = SolverSpec::parse(s).unwrap();
             let sampler = spec

@@ -15,7 +15,7 @@ use crate::json::Value;
 
 const EPS: f32 = 1e-6;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Base {
     Rk1,
     Rk2,

@@ -6,7 +6,7 @@ use std::net::TcpStream;
 use std::sync::Arc;
 
 use bespoke_flow::config::ServeConfig;
-use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, TrajRequest};
+use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, ServerState, TrajRequest};
 use bespoke_flow::json::Value;
 use bespoke_flow::models::Zoo;
 
@@ -201,8 +201,8 @@ fn jsonl_tcp_roundtrip() {
     let coord = coordinator(1);
     let addr = "127.0.0.1:7391";
     {
-        let coord = coord.clone();
-        std::thread::spawn(move || serve(coord, addr));
+        let state = ServerState::sampling_only(coord.clone());
+        std::thread::spawn(move || serve(state, addr));
     }
     std::thread::sleep(std::time::Duration::from_millis(200));
     let stream = TcpStream::connect(addr).unwrap();
@@ -235,6 +235,15 @@ fn jsonl_tcp_roundtrip() {
 
     let m = ask(r#"{"cmd":"metrics"}"#);
     assert!(m.get("per_route").is_ok());
+
+    // the training plane is cleanly rejected on a sampling-only server
+    let t = ask(r#"{"cmd":"train","model":"checker2-ot","n":4}"#);
+    assert!(!t.get("ok").unwrap().as_bool().unwrap());
+    // registry-resolved specs fail cleanly without a registry attached
+    let r = ask(
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4","n_samples":1}"#,
+    );
+    assert!(!r.get("ok").unwrap().as_bool().unwrap());
 
     // streaming: one step event per solver step, then a done summary
     writer

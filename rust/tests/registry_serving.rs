@@ -1,0 +1,196 @@
+//! Integration: the registry + training-job plane of the server, end to
+//! end over real TCP — submit `train`, poll `job_status` to completion,
+//! then sample through the freshly registered artifact with a
+//! `bespoke:model=...` spec and match the explicit `bespoke:path=...` form
+//! bitwise. Also pins the hot-swap invariant: registering a better
+//! artifact retires the stale route without a restart.
+//!
+//! Needs compiled HLO artifacts (`make artifacts`), like the other
+//! coordinator integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bespoke_flow::config::{ServeConfig, TrainConfig};
+use bespoke_flow::coordinator::{handle_line, serve, Coordinator, ServerState};
+use bespoke_flow::json::Value;
+use bespoke_flow::models::Zoo;
+use bespoke_flow::registry::{
+    ArtifactMeta, META_SCHEMA_VERSION, Registry, TrainJobManager, ZooRunner,
+};
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+
+fn temp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bespoke_regserve_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn server_state(root: &Path) -> (ServerState, Arc<Registry>) {
+    let zoo = Arc::new(Zoo::open_default().expect("run `make artifacts`"));
+    let registry = Arc::new(Registry::open(root).unwrap());
+    let cfg = ServeConfig { max_batch: 256, max_wait_ms: 1, ..ServeConfig::default() };
+    let coord = Arc::new(Coordinator::with_registry(zoo.clone(), cfg, registry.clone()));
+    let train_cfg = TrainConfig {
+        iters: 30,
+        pool_batches: 2,
+        val_batches: 1,
+        val_every: 10,
+        ..TrainConfig::default()
+    };
+    let jobs = Arc::new(
+        TrainJobManager::new(
+            registry.clone(),
+            Arc::new(ZooRunner::new(zoo, train_cfg)),
+            1,
+            Some(coord.metrics.clone()),
+        )
+        .unwrap(),
+    );
+    (ServerState::with_jobs(coord, jobs), registry)
+}
+
+#[test]
+fn train_poll_then_sample_from_registry_over_tcp() {
+    let root = temp_root("e2e");
+    let (state, _registry) = server_state(&root);
+    let addr = "127.0.0.1:7393";
+    {
+        let state = state.clone();
+        std::thread::spawn(move || serve(state, addr));
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |line: &str| -> Value {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut out = String::new();
+        reader.read_line(&mut out).unwrap();
+        Value::parse(&out).unwrap()
+    };
+
+    // before any training: the registry spec cannot resolve
+    let v = ask(
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4","n_samples":2}"#,
+    );
+    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+
+    // submit the training job; a duplicate submission coalesces onto it
+    let v = ask(r#"{"cmd":"train","model":"checker2-ot","base":"rk2","n":4,"iters":30,"seed":11}"#);
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "train rejected: {v:?}");
+    let job_id = v.get("job_id").unwrap().as_usize().unwrap();
+    assert!(!v.get("coalesced").unwrap().as_bool().unwrap());
+    let dup = ask(r#"{"cmd":"train","model":"checker2-ot","base":"rk2","n":4}"#);
+    assert_eq!(dup.get("job_id").unwrap().as_usize().unwrap(), job_id);
+    assert!(dup.get("coalesced").unwrap().as_bool().unwrap());
+
+    // poll job_status to completion
+    let mut artifact_file = String::new();
+    for i in 0.. {
+        assert!(i < 1200, "training job did not finish in time");
+        let s = ask(&format!(r#"{{"cmd":"job_status","job_id":{job_id}}}"#));
+        assert!(s.get("ok").unwrap().as_bool().unwrap(), "job_status failed: {s:?}");
+        match s.get("state").unwrap().as_str().unwrap() {
+            "done" => {
+                let art = s.get("artifact").unwrap();
+                artifact_file = art.get("file").unwrap().as_str().unwrap().to_string();
+                assert_eq!(art.get("version").unwrap().as_usize().unwrap(), 1);
+                assert!(s.get("iters_done").unwrap().as_usize().unwrap() >= 30);
+                break;
+            }
+            "failed" => panic!("training job failed: {s:?}"),
+            _ => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+
+    // the jobs listing and registry-aware list both surface the artifact
+    let jobs = ask(r#"{"cmd":"jobs"}"#);
+    assert_eq!(jobs.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+    let list = ask(r#"{"cmd":"list"}"#);
+    assert_eq!(list.get("artifacts").unwrap().as_arr().unwrap().len(), 1);
+
+    // sample through the registry spec — no restart — and match the
+    // explicit-path form bitwise for the same seed
+    let via_registry = ask(
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4","n_samples":5,"seed":7,"return_samples":true}"#,
+    );
+    assert!(via_registry.get("ok").unwrap().as_bool().unwrap(), "sample failed: {via_registry:?}");
+    let theta_path = root.join(&artifact_file);
+    assert!(theta_path.exists());
+    let via_path = ask(&format!(
+        r#"{{"cmd":"sample","model":"checker2-ot","solver":"bespoke:path={}","n_samples":5,"seed":7,"return_samples":true}}"#,
+        theta_path.display()
+    ));
+    assert!(via_path.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(
+        via_registry.get("samples").unwrap(),
+        via_path.get("samples").unwrap(),
+        "registry-resolved sampling must match the explicit checkpoint bitwise"
+    );
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn better_artifact_hot_swaps_the_live_route() {
+    let root = temp_root("hotswap");
+    let (state, registry) = server_state(&root);
+
+    let meta = |rmse: f32| ArtifactMeta {
+        schema_version: META_SCHEMA_VERSION,
+        model: "checker2-ot".into(),
+        base: Base::Rk2,
+        n: 4,
+        ablation: "full".into(),
+        best_val_rmse: rmse,
+        gt_nfe: 1,
+        wall_secs: 0.0,
+        iters: 0,
+        created_at: 1,
+        history: vec![],
+    };
+
+    // v1: identity theta; build the live route by sampling through it
+    registry.register(&RawTheta::identity(Base::Rk2, 4), &meta(0.5)).unwrap();
+    let req = r#"{"cmd":"sample","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4","n_samples":4,"seed":3,"return_samples":true}"#;
+    let v1 = handle_line(&state, req);
+    assert!(v1.get("ok").unwrap().as_bool().unwrap(), "{v1:?}");
+
+    // v2: a genuinely different theta with a better recorded RMSE
+    // warp the first half of the dt block: a non-uniform time grid (note a
+    // uniform rescale of all dt entries would normalize back to identity)
+    let mut th = RawTheta::identity(Base::Rk2, 4);
+    for w in th.raw.iter_mut().take(4) {
+        *w *= 1.5;
+    }
+    registry.register(&th, &meta(0.05)).unwrap();
+
+    // same request, same server: resolution flips to v2 (hot-swap)
+    let v2 = handle_line(&state, req);
+    assert!(v2.get("ok").unwrap().as_bool().unwrap(), "{v2:?}");
+    assert_ne!(
+        v1.get("samples").unwrap(),
+        v2.get("samples").unwrap(),
+        "new artifact must actually serve"
+    );
+    assert_eq!(state.coord.metrics.event_count("hot_swap"), 1);
+
+    // and v2's output matches its explicit-path form bitwise
+    let rec = registry.best("checker2-ot", 4, None, None).unwrap();
+    let via_path = handle_line(
+        &state,
+        &format!(
+            r#"{{"cmd":"sample","model":"checker2-ot","solver":"bespoke:path={}","n_samples":4,"seed":3,"return_samples":true}}"#,
+            registry.theta_path(&rec).display()
+        ),
+    );
+    assert_eq!(v2.get("samples").unwrap(), via_path.get("samples").unwrap());
+
+    std::fs::remove_dir_all(&root).ok();
+}

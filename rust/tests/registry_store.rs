@@ -1,0 +1,368 @@
+//! Integration: the solver artifact registry — manifest round-trip,
+//! integrity rejection, GC policy, spec resolution, and training-job
+//! coalescing. Everything here runs without compiled HLO artifacts: jobs
+//! use a fake [`JobRunner`], the store uses identity thetas.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bespoke_flow::registry::{
+    ArtifactMeta, JobRunner, JobState, META_SCHEMA_VERSION, Registry, TrainedArtifact,
+    TrainJobManager, TrainJobSpec,
+};
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::SolverSpec;
+use bespoke_flow::Result;
+
+/// Fresh temp dir per test (process id + test-local name keeps parallel
+/// test binaries and tests apart).
+fn temp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bespoke_registry_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn meta(model: &str, base: Base, n: usize, ablation: &str, val_rmse: f32) -> ArtifactMeta {
+    ArtifactMeta {
+        schema_version: META_SCHEMA_VERSION,
+        model: model.into(),
+        base,
+        n,
+        ablation: ablation.into(),
+        best_val_rmse: val_rmse,
+        gt_nfe: 100,
+        wall_secs: 0.5,
+        iters: 2,
+        created_at: 1_753_000_000,
+        history: vec![],
+    }
+}
+
+#[test]
+fn manifest_roundtrip_and_integrity() {
+    let root = temp_root("roundtrip");
+    let reg = Registry::open(&root).unwrap();
+    assert!(reg.list().is_empty());
+
+    let th = RawTheta::identity(Base::Rk2, 4);
+    let r1 = reg.register(&th, &meta("m", Base::Rk2, 4, "full", 0.5)).unwrap();
+    let r2 = reg.register(&th, &meta("m", Base::Rk2, 4, "full", 0.2)).unwrap();
+    assert_eq!(r1.version, 1);
+    assert_eq!(r2.version, 2);
+
+    // reopen from disk: records survive with hashes + metadata intact
+    let reg2 = Registry::open(&root).unwrap();
+    let records = reg2.list();
+    assert_eq!(records.len(), 2);
+    assert_eq!(records[0].content_hash, r1.content_hash);
+    assert_eq!(records[1].val_rmse, 0.2);
+    assert_eq!(records[1].gt_nfe, 100);
+    assert_eq!(records[1].created_at, 1_753_000_000);
+
+    // integrity-checked load round-trips the theta exactly
+    let loaded = reg2.load_theta(&records[1]).unwrap();
+    assert_eq!(loaded.raw, th.raw);
+    assert_eq!(loaded.base, Base::Rk2);
+
+    // the meta sidecar exists and decodes
+    let m = ArtifactMeta::load(&root.join(&records[1].meta_file)).unwrap();
+    assert_eq!(m.best_val_rmse, 0.2);
+
+    // best = lowest val RMSE, not newest-blind
+    let best = reg2.best("m", 4, None, None).unwrap();
+    assert_eq!(best.version, 2);
+    assert!(reg2.best("m", 5, None, None).is_none());
+    assert!(reg2.best("other", 4, None, None).is_none());
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn corrupted_and_truncated_artifacts_are_rejected() {
+    let root = temp_root("integrity");
+    let reg = Registry::open(&root).unwrap();
+    let th = RawTheta::identity(Base::Rk1, 3);
+    let rec = reg.register(&th, &meta("m", Base::Rk1, 3, "full", 0.1)).unwrap();
+    let path = reg.theta_path(&rec);
+
+    // pristine: loads fine
+    reg.load_theta(&rec).unwrap();
+
+    // corrupted: flip a digit inside the raw array
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replace("0.3333", "0.4444")).unwrap();
+    let err = reg.load_theta(&rec).unwrap_err().to_string();
+    assert!(err.contains("integrity"), "wrong error: {err}");
+
+    // truncated: half the file gone
+    std::fs::write(&path, &text.as_bytes()[..text.len() / 2]).unwrap();
+    let err = reg.load_theta(&rec).unwrap_err().to_string();
+    assert!(err.contains("integrity"), "wrong error: {err}");
+
+    // restored: loads again (hash covers exact bytes)
+    std::fs::write(&path, &text).unwrap();
+    reg.load_theta(&rec).unwrap();
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn gc_keeps_last_k_plus_best() {
+    let root = temp_root("gc");
+    let reg = Registry::open(&root).unwrap();
+    let th = RawTheta::identity(Base::Rk2, 4);
+    // v1..v5; v2 is the best (lowest val RMSE)
+    for rmse in [0.5, 0.05, 0.4, 0.3, 0.2] {
+        reg.register(&th, &meta("m", Base::Rk2, 4, "full", rmse)).unwrap();
+    }
+    // an unrelated key is untouched by GC of m's versions
+    reg.register(&th, &meta("other", Base::Rk2, 4, "full", 0.9)).unwrap();
+
+    let removed = reg.gc(2).unwrap();
+    let mut gone: Vec<u64> = removed.iter().map(|r| r.version).collect();
+    gone.sort();
+    assert_eq!(gone, vec![1, 3], "keep v4, v5 (last 2) + v2 (best)");
+    for r in &removed {
+        assert!(!reg.theta_path(r).exists(), "theta file not deleted");
+        assert!(!reg.root().join(&r.meta_file).exists(), "meta file not deleted");
+    }
+
+    let reg2 = Registry::open(&root).unwrap();
+    let versions: Vec<u64> = reg2
+        .list()
+        .iter()
+        .filter(|r| r.key.model == "m")
+        .map(|r| r.version)
+        .collect();
+    assert_eq!(versions, vec![2, 4, 5]);
+    assert_eq!(reg2.best("m", 4, None, None).unwrap().version, 2);
+    assert_eq!(reg2.list().iter().filter(|r| r.key.model == "other").count(), 1);
+    // survivors still load (GC must not touch kept files)
+    for r in reg2.list() {
+        reg2.load_theta(&r).unwrap();
+    }
+    // idempotent: nothing more to remove at the same policy
+    assert!(reg2.gc(2).unwrap().is_empty());
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn resolve_spec_picks_best_and_respects_filters() {
+    let root = temp_root("resolve");
+    let reg = Registry::open(&root).unwrap();
+    let th2 = RawTheta::identity(Base::Rk2, 4);
+    let th1 = RawTheta::identity(Base::Rk1, 4);
+    reg.register(&th2, &meta("m", Base::Rk2, 4, "full", 0.3)).unwrap();
+    reg.register(&th1, &meta("m", Base::Rk1, 4, "full", 0.1)).unwrap();
+    reg.register(&th2, &meta("m", Base::Rk2, 4, "time-only", 0.01)).unwrap();
+
+    // unfiltered: best across bases, but only "full" ablation
+    let spec = SolverSpec::parse("bespoke:model=m:n=4").unwrap();
+    match reg.resolve_spec(&spec).unwrap() {
+        SolverSpec::Bespoke { path } => assert!(path.contains("rk1"), "wrong pick: {path}"),
+        s => panic!("wrong spec {s:?}"),
+    }
+    // base filter
+    let spec = SolverSpec::parse("bespoke:model=m:n=4:base=rk2").unwrap();
+    match reg.resolve_spec(&spec).unwrap() {
+        SolverSpec::Bespoke { path } => assert!(path.contains("rk2_n4_full")),
+        s => panic!("wrong spec {s:?}"),
+    }
+    // explicit ablation
+    let spec = SolverSpec::parse("bespoke:model=m:n=4:ablation=time-only").unwrap();
+    match reg.resolve_spec(&spec).unwrap() {
+        SolverSpec::Bespoke { path } => assert!(path.contains("time-only")),
+        s => panic!("wrong spec {s:?}"),
+    }
+    // no match -> error; non-registry specs pass through
+    assert!(reg
+        .resolve_spec(&SolverSpec::parse("bespoke:model=m:n=9").unwrap())
+        .is_err());
+    let rk = SolverSpec::parse("rk2:n=8").unwrap();
+    assert_eq!(reg.resolve_spec(&rk).unwrap(), rk);
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn fixture_store_opens_and_verifies() {
+    // The checked-in fixture store that CI's `repro registry list` smoke
+    // step runs against: keep it loadable and integrity-clean.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/registry");
+    let reg = Registry::open(&root).unwrap();
+    let records = reg.list();
+    assert_eq!(records.len(), 1);
+    let rec = &records[0];
+    assert_eq!(rec.key.model, "checker2-ot");
+    assert_eq!(rec.version, 1);
+    let th = reg.load_theta(rec).unwrap();
+    assert_eq!(th.base, Base::Rk2);
+    assert_eq!(th.n, 4);
+    let m = ArtifactMeta::load(&root.join(&rec.meta_file)).unwrap();
+    assert!(m.history[0].val_rmse.is_nan());
+    assert_eq!(m.best_val_rmse, 0.03125);
+    let best = reg.best("checker2-ot", 4, Some(Base::Rk2), None).unwrap();
+    assert_eq!(best.version, 1);
+}
+
+/// Runner that blocks until released, counting invocations — lets the test
+/// hold a job in `running` while duplicates arrive.
+struct SlowRunner {
+    runs: AtomicUsize,
+    hold_ms: u64,
+}
+
+impl JobRunner for SlowRunner {
+    fn run(
+        &self,
+        spec: &TrainJobSpec,
+        progress: &mut dyn FnMut(&bespoke_flow::bespoke::TrainProgress),
+    ) -> Result<TrainedArtifact> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        progress(&bespoke_flow::bespoke::TrainProgress {
+            iter: 1,
+            iters_total: 2,
+            loss: 0.5,
+            val_rmse: f32::NAN,
+        });
+        std::thread::sleep(Duration::from_millis(self.hold_ms));
+        progress(&bespoke_flow::bespoke::TrainProgress {
+            iter: 2,
+            iters_total: 2,
+            loss: 0.25,
+            val_rmse: 0.125,
+        });
+        Ok(TrainedArtifact {
+            theta: RawTheta::identity(spec.base, spec.n),
+            meta: ArtifactMeta {
+                schema_version: META_SCHEMA_VERSION,
+                model: spec.model.clone(),
+                base: spec.base,
+                n: spec.n,
+                ablation: spec.ablation.clone(),
+                best_val_rmse: 0.125,
+                gt_nfe: 42,
+                wall_secs: 0.01,
+                iters: 2,
+                created_at: 1_753_000_001,
+                history: vec![],
+            },
+        })
+    }
+}
+
+fn job_spec(model: &str, n: usize) -> TrainJobSpec {
+    TrainJobSpec {
+        model: model.into(),
+        base: Base::Rk2,
+        n,
+        ablation: "full".into(),
+        iters: None,
+        seed: None,
+    }
+}
+
+fn wait_done(mgr: &TrainJobManager, id: u64) {
+    for _ in 0..600 {
+        match mgr.status(id).unwrap().state {
+            JobState::Done => return,
+            JobState::Failed => panic!("job failed: {:?}", mgr.status(id).unwrap().error),
+            _ => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    panic!("job {id} did not finish in time");
+}
+
+#[test]
+fn duplicate_train_submissions_coalesce() {
+    let root = temp_root("coalesce");
+    let reg = Arc::new(Registry::open(&root).unwrap());
+    let runner = Arc::new(SlowRunner { runs: AtomicUsize::new(0), hold_ms: 300 });
+    let mgr = Arc::new(TrainJobManager::new(reg.clone(), runner.clone(), 2, None).unwrap());
+
+    // concurrent duplicate submissions from many threads -> one job id
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let mgr = mgr.clone();
+        handles.push(std::thread::spawn(move || mgr.submit(job_spec("m", 4)).unwrap()));
+    }
+    let results: Vec<(u64, bool)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let first_id = results[0].0;
+    assert!(results.iter().all(|(id, _)| *id == first_id), "ids diverged: {results:?}");
+    assert_eq!(
+        results.iter().filter(|(_, coalesced)| !coalesced).count(),
+        1,
+        "exactly one submission actually enqueues"
+    );
+
+    // a different key is NOT coalesced and runs on the second worker
+    let (other_id, other_coalesced) = mgr.submit(job_spec("m", 8)).unwrap();
+    assert_ne!(other_id, first_id);
+    assert!(!other_coalesced);
+
+    wait_done(&mgr, first_id);
+    wait_done(&mgr, other_id);
+    assert_eq!(runner.runs.load(Ordering::SeqCst), 2, "coalesced job ran once");
+
+    // exactly one artifact registered for the coalesced key
+    let m4: Vec<_> = reg.list().into_iter().filter(|r| r.key.n == 4).collect();
+    assert_eq!(m4.len(), 1);
+    assert_eq!(m4[0].version, 1);
+
+    // done job carries the registered artifact + final progress
+    let snap = mgr.status(first_id).unwrap();
+    assert_eq!(snap.state, JobState::Done);
+    assert_eq!(snap.iters_done, 2);
+    assert_eq!(snap.val_rmse, 0.125);
+    assert_eq!(snap.artifact.as_ref().unwrap().version, 1);
+    assert!(snap.wall_secs > 0.0);
+
+    // the key is free again: resubmitting starts a fresh job (v2)
+    let (new_id, coalesced) = mgr.submit(job_spec("m", 4)).unwrap();
+    assert_ne!(new_id, first_id);
+    assert!(!coalesced);
+    wait_done(&mgr, new_id);
+    assert_eq!(mgr.status(new_id).unwrap().artifact.as_ref().unwrap().version, 2);
+
+    assert_eq!(mgr.jobs().len(), 3);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// A failing runner marks the job failed (and registers nothing).
+struct FailingRunner;
+
+impl JobRunner for FailingRunner {
+    fn run(
+        &self,
+        _spec: &TrainJobSpec,
+        _progress: &mut dyn FnMut(&bespoke_flow::bespoke::TrainProgress),
+    ) -> Result<TrainedArtifact> {
+        anyhow::bail!("no loss-grad artifact for this model")
+    }
+}
+
+#[test]
+fn failed_jobs_report_their_error() {
+    let root = temp_root("fail");
+    let reg = Arc::new(Registry::open(&root).unwrap());
+    let mgr = TrainJobManager::new(reg.clone(), Arc::new(FailingRunner), 1, None).unwrap();
+    let (id, _) = mgr.submit(job_spec("m", 4)).unwrap();
+    for _ in 0..600 {
+        if mgr.status(id).unwrap().state == JobState::Failed {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = mgr.status(id).unwrap();
+    assert_eq!(snap.state, JobState::Failed);
+    assert!(snap.error.as_ref().unwrap().contains("loss-grad"));
+    assert!(reg.list().is_empty());
+    // a failed key can be resubmitted
+    let (id2, coalesced) = mgr.submit(job_spec("m", 4)).unwrap();
+    assert_ne!(id2, id);
+    assert!(!coalesced);
+    std::fs::remove_dir_all(&root).ok();
+}
