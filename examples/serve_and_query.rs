@@ -13,11 +13,12 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use bespoke_flow::config::{ServeConfig, TrainConfig};
+use bespoke_flow::config::{EvalConfig, QualityConfig, ServeConfig, TrainConfig};
 use bespoke_flow::coordinator::{serve, Coordinator, ServerState};
 use bespoke_flow::json::Value;
 use bespoke_flow::models::Zoo;
-use bespoke_flow::registry::{Registry, TrainJobManager, ZooRunner};
+use bespoke_flow::quality::{EvalRunner, EvalRunnerDyn};
+use bespoke_flow::registry::{JobManager, Registry, TrainJobManager, ZooRunner};
 use bespoke_flow::util::timer::Percentiles;
 use bespoke_flow::Result;
 
@@ -43,14 +44,29 @@ fn main() -> Result<()> {
         ..TrainConfig::default()
     };
     let jobs = Arc::new(TrainJobManager::new(
+        registry.clone(),
+        Arc::new(ZooRunner::new(zoo.clone(), train_cfg)),
+        1,
+        Some(coord.metrics.clone()),
+    )?);
+    // Quality plane: eval jobs measure scorecards the Pareto frontier (and
+    // budget-aware requests) are built from. Small eval batches keep the
+    // demo fast.
+    let eval_runner = Arc::new(EvalRunner::new(
+        zoo,
+        registry.clone(),
+        EvalConfig { gt_tol: 1e-4, ..EvalConfig::default() },
+        QualityConfig { eval_batches: 2, ..QualityConfig::default() },
+    ));
+    let eval_jobs = Arc::new(JobManager::new(
         registry,
-        Arc::new(ZooRunner::new(zoo, train_cfg)),
+        eval_runner as Arc<EvalRunnerDyn>,
         1,
         Some(coord.metrics.clone()),
     )?);
     let metrics = coord.metrics.clone();
     {
-        let state = ServerState::with_jobs(coord.clone(), jobs);
+        let state = ServerState::with_jobs(coord.clone(), jobs).with_eval_jobs(eval_jobs);
         std::thread::spawn(move || serve(state, addr).expect("server"));
     }
     std::thread::sleep(std::time::Duration::from_millis(200));
@@ -184,6 +200,41 @@ fn main() -> Result<()> {
         assert!(v.get("ok")?.as_bool()?, "registry sample: {v:?}");
         println!(
             "sample via bespoke:model=checker2-ot:n=4 -> nfe={} latency={:.1}ms",
+            v.get("nfe")?.as_usize()?,
+            v.get("latency_ms")?.as_f64()?
+        );
+
+        // --- evaluate -> frontier -> budget-routed sampling ---------------
+        // Measure the freshly trained artifact into a scorecard, then let
+        // the server pick the solver: the request states a budget
+        // (nfe_max / latency_ms / quality) and the coordinator resolves it
+        // against the Pareto frontier.
+        let v = ask(
+            r#"{"cmd":"evaluate","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4"}"#,
+        )?;
+        assert!(v.get("ok")?.as_bool()?, "evaluate rejected: {v:?}");
+        let eval_id = v.get("job_id")?.as_usize()?;
+        loop {
+            let s = ask(&format!(r#"{{"cmd":"eval_status","job_id":{eval_id}}}"#))?;
+            assert!(s.get("ok")?.as_bool()?, "eval_status: {s:?}");
+            match s.get("state")?.as_str()? {
+                "done" => break,
+                "failed" => panic!("eval job failed: {s:?}"),
+                _ => std::thread::sleep(std::time::Duration::from_millis(200)),
+            }
+        }
+        let f = ask(r#"{"cmd":"frontier","model":"checker2-ot"}"#)?;
+        println!(
+            "frontier: {} point(s) over {} measured candidate(s)",
+            f.get("points")?.as_arr()?.len(),
+            f.get("candidates")?.as_usize()?
+        );
+        let v = ask(
+            r#"{"cmd":"sample","model":"checker2-ot","budget":{"nfe_max":8},"n_samples":8,"seed":1}"#,
+        )?;
+        assert!(v.get("ok")?.as_bool()?, "budget sample: {v:?}");
+        println!(
+            "sample via budget nfe_max=8 -> nfe={} latency={:.1}ms",
             v.get("nfe")?.as_usize()?,
             v.get("latency_ms")?.as_f64()?
         );

@@ -18,8 +18,10 @@
 
 use std::time::{Duration, Instant};
 
+use bespoke_flow::eval::evaluate_sampler;
 use bespoke_flow::json::Value;
 use bespoke_flow::models::{AnalyticModel, VelocityModel, Zoo};
+use bespoke_flow::quality::{Budget, Frontier, FrontierPoint};
 use bespoke_flow::runtime::Executable;
 use bespoke_flow::schedulers::Scheduler;
 use bespoke_flow::solvers::dopri5::reference_solve;
@@ -231,6 +233,45 @@ fn main() {
         let th = RawTheta::identity(Base::Rk2, 10);
         h.bench("theta/decode_rk2_n10", || {
             std::hint::black_box(th.decode());
+        });
+    }
+
+    // quality subsystem hot paths: budget resolution against a frontier
+    // (runs once per budget-routed request) and one evaluate_sampler cell
+    // (the eval-job inner loop) at a deliberately small size.
+    {
+        let points: Vec<FrontierPoint> = (0..64)
+            .map(|i| FrontierPoint {
+                solver: format!("rk2:n={}", i + 1),
+                source: "rk2:n=1".into(),
+                artifact: None,
+                nfe: 2 * (i as u64 + 1),
+                rmse: 1.0 / (i as f32 + 2.0),
+                psnr: 10.0,
+                fd: 0.1,
+                swd: 0.1,
+                wall_ms: (i as f64 + 1.0) * 0.5,
+            })
+            .collect();
+        let frontier = Frontier { model: "bench".into(), candidates: points.len(), points };
+        h.bench("quality/frontier_lookup", || {
+            std::hint::black_box(frontier.resolve(&Budget::NfeMax(64)).unwrap());
+            std::hint::black_box(frontier.resolve(&Budget::RmseMax(0.1)).unwrap());
+            std::hint::black_box(frontier.resolve(&Budget::LatencyMs(8.0)).unwrap());
+        });
+    }
+    {
+        let pts = Tensor::new(Rng::new(8).normal_vec(64 * 2), vec![64, 2]).unwrap();
+        let ana = AnalyticModel::new("bench-eval", pts, Scheduler::CondOt, 0.05, 32).unwrap();
+        let mut rng = Rng::new(9);
+        let x0: Vec<Tensor> = (0..2)
+            .map(|_| Tensor::new(rng.normal_vec(32 * 2), vec![32, 2]).unwrap())
+            .collect();
+        let gt_solver = Dopri5::default();
+        let gt: Vec<Tensor> = x0.iter().map(|x| gt_solver.sample(&ana, x).unwrap()).collect();
+        let sampler = FixedGridSolver::uniform(BaseRk::Rk2, 4);
+        h.bench("eval/evaluate_sampler_small", || {
+            std::hint::black_box(evaluate_sampler(&ana, &sampler, &x0, &gt, None).unwrap());
         });
     }
 

@@ -113,12 +113,32 @@ impl Default for EvalConfig {
     }
 }
 
+#[derive(Clone, Debug)]
+pub struct QualityConfig {
+    /// Default step-count grid for `evaluate` sweeps of rk/transfer
+    /// templates (a request's explicit `grid` overrides it).
+    pub grid: Vec<usize>,
+    /// Eval batches behind each scorecard cell (bounds the GT-solve cost
+    /// of an in-server eval job; offline `repro eval` uses
+    /// `eval.metric_samples` instead).
+    pub eval_batches: usize,
+    /// Max concurrent in-server eval jobs.
+    pub max_eval_jobs: usize,
+}
+
+impl Default for QualityConfig {
+    fn default() -> Self {
+        QualityConfig { grid: vec![1, 2, 4, 8, 16], eval_batches: 4, max_eval_jobs: 1 }
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     pub serve: ServeConfig,
     pub train: TrainConfig,
     pub eval: EvalConfig,
     pub registry: RegistryConfig,
+    pub quality: QualityConfig,
     /// Directory for trained thetas and experiment reports.
     pub out_dir: String,
 }
@@ -192,6 +212,29 @@ impl Config {
                         }
                     }
                 }
+                "quality" => {
+                    for (k, val) in sv.as_obj()? {
+                        match k.as_str() {
+                            "grid" => {
+                                let mut grid = Vec::new();
+                                for g in val.as_arr()? {
+                                    let n = g.as_usize()?;
+                                    if n == 0 {
+                                        anyhow::bail!("quality grid entries must be >= 1");
+                                    }
+                                    grid.push(n);
+                                }
+                                if grid.is_empty() {
+                                    anyhow::bail!("quality grid must be non-empty");
+                                }
+                                self.quality.grid = grid;
+                            }
+                            "eval_batches" => self.quality.eval_batches = val.as_usize()?,
+                            "max_eval_jobs" => self.quality.max_eval_jobs = val.as_usize()?,
+                            _ => anyhow::bail!("unknown quality key {k:?}"),
+                        }
+                    }
+                }
                 "out_dir" => self.out_dir = sv.as_str()?.to_string(),
                 _ => anyhow::bail!("unknown config section {section:?}"),
             }
@@ -243,5 +286,28 @@ mod tests {
         assert!(cfg.apply(&v2).is_err());
         let v3 = Value::parse(r#"{"registry": {"rootdir": "x"}}"#).unwrap();
         assert!(cfg.apply(&v3).is_err());
+        let v4 = Value::parse(r#"{"quality": {"nfe_grid": [1]}}"#).unwrap();
+        assert!(cfg.apply(&v4).is_err());
+    }
+
+    #[test]
+    fn quality_section() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.quality.grid, vec![1, 2, 4, 8, 16]);
+        assert_eq!(cfg.quality.eval_batches, 4);
+        assert_eq!(cfg.quality.max_eval_jobs, 1);
+        let v = Value::parse(
+            r#"{"quality": {"grid": [2, 4], "eval_batches": 2, "max_eval_jobs": 3}}"#,
+        )
+        .unwrap();
+        cfg.apply(&v).unwrap();
+        assert_eq!(cfg.quality.grid, vec![2, 4]);
+        assert_eq!(cfg.quality.eval_batches, 2);
+        assert_eq!(cfg.quality.max_eval_jobs, 3);
+        // zero grid entries and empty grids are config errors
+        for bad in [r#"{"quality": {"grid": [0]}}"#, r#"{"quality": {"grid": []}}"#] {
+            let v = Value::parse(bad).unwrap();
+            assert!(cfg.apply(&v).is_err(), "should reject {bad}");
+        }
     }
 }

@@ -18,12 +18,13 @@ use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::metrics::Metrics;
 use crate::config::ServeConfig;
 use crate::log_info;
 use crate::models::{CountingModel, VelocityModel, Zoo};
+use crate::quality::{Budget, Frontier, FrontierCache};
 use crate::registry::Registry;
 use crate::solvers::SolverSpec;
 use crate::tensor::Tensor;
@@ -32,10 +33,15 @@ use crate::util::Rng;
 #[derive(Clone, Debug)]
 pub struct SampleRequest {
     pub model: String,
+    /// Explicit solver spec; empty when `budget` drives solver selection.
     pub solver: String,
     pub n_samples: usize,
     pub seed: u64,
     pub return_samples: bool,
+    /// Budget-aware routing: when set, the coordinator resolves the budget
+    /// against the model's Pareto frontier to a concrete spec (DESIGN.md
+    /// §9) instead of reading `solver`.
+    pub budget: Option<Budget>,
 }
 
 /// A step-streamed trajectory request (see [`Coordinator::sample_traj`]).
@@ -157,6 +163,9 @@ pub struct Coordinator {
     /// Artifact registry for `bespoke:model=...` specs (None = registry
     /// specs are rejected).
     registry: Option<Arc<Registry>>,
+    /// Per-model Pareto frontiers over the registry's scorecards, for
+    /// budget-aware routing (None whenever `registry` is None).
+    frontiers: Option<FrontierCache>,
     /// Hot-swap bookkeeping: `model/<registry spec>` -> currently resolved
     /// concrete spec. When a fresher artifact changes the resolution, the
     /// stale route is retired and the next request builds against the new
@@ -180,17 +189,82 @@ impl Coordinator {
             metrics: Arc::new(Metrics::default()),
             routes: Mutex::new(BTreeMap::new()),
             registry: None,
+            frontiers: None,
             resolved: Mutex::new(BTreeMap::new()),
         }
     }
 
     /// A coordinator that can serve registry-resolved specs
-    /// (`bespoke:model=M:n=8`), hot-swapping freshly registered artifacts
-    /// into live routes.
+    /// (`bespoke:model=M:n=8`) and budget-aware requests, hot-swapping
+    /// freshly registered artifacts into live routes.
     pub fn with_registry(zoo: Arc<Zoo>, cfg: ServeConfig, registry: Arc<Registry>) -> Coordinator {
         let mut c = Coordinator::new(zoo, cfg);
+        c.frontiers = Some(FrontierCache::new(registry.clone()));
         c.registry = Some(registry);
         c
+    }
+
+    /// The model's current Pareto frontier (for the `frontier` command).
+    pub fn frontier(&self, model: &str) -> Result<Arc<Frontier>> {
+        let fc = self.frontiers.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "this coordinator has no artifact registry attached; \
+                 frontiers need registered scorecards"
+            )
+        })?;
+        // Frontiers exist for known models only — a typo'd model name gets
+        // an error, not an empty frontier.
+        self.zoo.manifest().model(model)?;
+        fc.frontier(model)
+    }
+
+    /// Resolve a budget against the model's frontier to a concrete spec.
+    /// Records `budget_routed` / `budget_unsatisfiable` metric events.
+    fn resolve_budget(&self, model: &str, budget: &Budget) -> Result<(String, SolverSpec)> {
+        let fc = self.frontiers.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "request has a budget, but this coordinator has no artifact \
+                 registry attached (budgets resolve against scorecard \
+                 frontiers)"
+            )
+        })?;
+        match fc.resolve(model, budget) {
+            Ok(point) => {
+                // Artifact-bound points are re-resolved against *this*
+                // process's registry: the scorecard's stored path spelling
+                // came from the eval host's registry root (possibly a
+                // different cwd or machine), so the binding — not the
+                // string — is authoritative. Baseline points parse their
+                // stored spec directly. Either way the route key is the
+                // resolved spec, shared with explicit-spec requests.
+                let spec = match &point.artifact {
+                    Some((key, version)) => {
+                        let registry =
+                            self.registry.as_ref().expect("frontiers imply a registry");
+                        let rec = registry.find(key, *version).with_context(|| {
+                            format!(
+                                "frontier references {} v{version}, which is no \
+                                 longer in the registry (gc without frontier pins?)",
+                                key.label()
+                            )
+                        })?;
+                        SolverSpec::Bespoke {
+                            path: registry.theta_path(&rec).to_string_lossy().into_owned(),
+                        }
+                    }
+                    None => SolverSpec::parse(&point.solver).with_context(|| {
+                        format!("frontier point carries an unparseable spec {:?}", point.solver)
+                    })?,
+                };
+                self.metrics.record_event("budget_routed");
+                log_info!("budget {budget} for {model} -> {spec}");
+                Ok((spec.to_string(), spec))
+            }
+            Err(e) => {
+                self.metrics.record_event("budget_unsatisfiable");
+                Err(e)
+            }
+        }
     }
 
     pub fn zoo(&self) -> &Zoo {
@@ -304,7 +378,15 @@ impl Coordinator {
 
     fn submit_attempt(&self, req: &SampleRequest) -> Result<SampleResponse> {
         let started = Instant::now();
-        let (solver, spec) = self.resolve_solver(&req.model, &req.solver)?;
+        let (solver, spec) = match &req.budget {
+            Some(budget) => {
+                if !req.solver.is_empty() {
+                    bail!("request carries both a solver and a budget; give one");
+                }
+                self.resolve_budget(&req.model, budget)?
+            }
+            None => self.resolve_solver(&req.model, &req.solver)?,
+        };
         let key = format!("{}/{}", req.model, solver);
         let queue = self.route(&key, &req.model, &spec)?;
 

@@ -24,6 +24,10 @@
 //!   solver artifact registry per request; `train` / `job_status` / `jobs`
 //!   commands drive the in-server training jobs that feed it, and freshly
 //!   registered artifacts hot-swap into live routes (DESIGN.md §8).
+//! * Budget-aware requests (`sample` with `budget: {nfe_max | latency_ms |
+//!   quality}`) resolve against the model's Pareto frontier over registered
+//!   scorecards; `evaluate` / `eval_status` / `frontier` commands drive the
+//!   eval jobs that measure it (DESIGN.md §9).
 
 pub mod batcher;
 pub mod metrics;

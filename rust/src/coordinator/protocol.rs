@@ -13,9 +13,20 @@
 //!  "ablation": "full", "iters": 300, "seed": 17}
 //! {"cmd": "job_status", "job_id": 1}
 //! {"cmd": "jobs"}
+//! {"cmd": "evaluate", "model": "checker2-ot", "solver": "rk2:n=8",
+//!  "grid": [2, 4, 8], "seed": 7}
+//! {"cmd": "eval_status", "job_id": 1}
+//! {"cmd": "frontier", "model": "checker2-ot"}
 //! ```
 //!
 //! Response: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
+//!
+//! `sample` takes either a `solver` spec or a `budget` — an object with
+//! exactly one of `{"nfe_max": N}`, `{"latency_ms": X}`,
+//! `{"quality": "rmse<=X"}` — which the coordinator resolves against the
+//! model's Pareto frontier to a concrete solver before routing (DESIGN.md
+//! §9). `evaluate` enqueues an asynchronous scorecard sweep (poll with
+//! `eval_status`); `frontier` returns the model's current Pareto frontier.
 //!
 //! `sample_traj` is the streaming command: the server emits one
 //! `{"ok": true, "event": "step", ...}` line per solver step (subsampled by
@@ -33,7 +44,8 @@ use anyhow::{bail, Result};
 
 use super::batcher::{SampleRequest, SampleResponse, TrajRequest, TrajStep};
 use crate::json::Value;
-use crate::registry::{ArtifactRecord, JobId, JobSnapshot, TrainJobSpec};
+use crate::quality::{Budget, EvalJobSnapshot, EvalJobSpec, Frontier};
+use crate::registry::{ArtifactRecord, EvalRecord, JobId, TrainJobSnapshot, TrainJobSpec};
 use crate::solvers::theta::Base;
 
 #[derive(Debug)]
@@ -46,15 +58,32 @@ pub enum Command {
     Train(TrainJobSpec),
     JobStatus(JobId),
     Jobs,
+    Evaluate(EvalJobSpec),
+    EvalStatus(JobId),
+    Frontier(String),
 }
 
 pub fn parse_command(line: &str) -> Result<Command> {
     let v = Value::parse(line)?;
     match v.get("cmd")?.as_str()? {
         "sample" => {
+            let budget = v.get_opt("budget").map(Budget::from_json).transpose()?;
+            let solver = v
+                .get_opt("solver")
+                .map(|s| s.as_str())
+                .transpose()?
+                .unwrap_or("")
+                .to_string();
+            match (&budget, solver.is_empty()) {
+                (None, true) => bail!("sample needs a solver spec or a budget"),
+                (Some(_), false) => {
+                    bail!("sample takes either solver or budget, not both")
+                }
+                _ => {}
+            }
             let req = SampleRequest {
                 model: v.get("model")?.as_str()?.to_string(),
-                solver: v.get("solver")?.as_str()?.to_string(),
+                solver,
                 n_samples: v.get("n_samples")?.as_usize()?,
                 seed: v.get_opt("seed").map(|s| s.as_usize()).transpose()?.unwrap_or(0) as u64,
                 return_samples: v
@@ -62,6 +91,7 @@ pub fn parse_command(line: &str) -> Result<Command> {
                     .map(|s| s.as_bool())
                     .transpose()?
                     .unwrap_or(false),
+                budget,
             };
             if req.n_samples == 0 {
                 bail!("n_samples must be positive");
@@ -113,6 +143,26 @@ pub fn parse_command(line: &str) -> Result<Command> {
         }
         "job_status" => Ok(Command::JobStatus(v.get("job_id")?.as_usize()? as JobId)),
         "jobs" => Ok(Command::Jobs),
+        "evaluate" => {
+            let mut grid = Vec::new();
+            if let Some(gv) = v.get_opt("grid") {
+                for g in gv.as_arr()? {
+                    let n = g.as_usize()?;
+                    if n == 0 {
+                        bail!("grid entries must be >= 1");
+                    }
+                    grid.push(n);
+                }
+            }
+            Ok(Command::Evaluate(EvalJobSpec {
+                model: v.get("model")?.as_str()?.to_string(),
+                solver: v.get("solver")?.as_str()?.to_string(),
+                grid,
+                seed: v.get_opt("seed").map(|s| s.as_usize()).transpose()?.map(|s| s as u64),
+            }))
+        }
+        "eval_status" => Ok(Command::EvalStatus(v.get("job_id")?.as_usize()? as JobId)),
+        "frontier" => Ok(Command::Frontier(v.get("model")?.as_str()?.to_string())),
         other => bail!("unknown cmd {other:?}"),
     }
 }
@@ -138,8 +188,8 @@ pub fn artifact_json(rec: &ArtifactRecord) -> Value {
     ])
 }
 
-/// One job's status for `job_status` / `jobs` responses.
-pub fn job_json(s: &JobSnapshot) -> Value {
+/// One training job's status for `job_status` / `jobs` responses.
+pub fn job_json(s: &TrainJobSnapshot) -> Value {
     let mut fields = vec![
         ("ok", Value::Bool(true)),
         ("job_id", Value::Num(s.id as f64)),
@@ -161,6 +211,51 @@ pub fn job_json(s: &JobSnapshot) -> Value {
         fields.push(("artifact", artifact_json(rec)));
     }
     Value::obj(fields)
+}
+
+/// Scorecard reference embedded in eval-job responses — the manifest
+/// serializer verbatim, so wire and store can't drift.
+pub fn eval_record_json(rec: &EvalRecord) -> Value {
+    rec.to_json()
+}
+
+/// One eval job's status for `eval_status` responses. Mirrors `job_json`;
+/// `cells_done`/`cells_total` count scorecard cells, `last_rmse` is the
+/// most recent cell's RMSE.
+pub fn eval_job_json(s: &EvalJobSnapshot) -> Value {
+    let mut fields = vec![
+        ("ok", Value::Bool(true)),
+        ("job_id", Value::Num(s.id as f64)),
+        ("model", Value::Str(s.spec.model.clone())),
+        ("solver", Value::Str(s.spec.solver.clone())),
+        (
+            "grid",
+            Value::Arr(s.spec.grid.iter().map(|&n| Value::Num(n as f64)).collect()),
+        ),
+        ("state", Value::Str(s.state.name().into())),
+        ("cells_done", Value::Num(s.iters_done as f64)),
+        ("cells_total", Value::Num(s.iters_total as f64)),
+        ("last_rmse", num_or_null(s.val_rmse as f64)),
+        ("wall_secs", Value::Num(s.wall_secs)),
+    ];
+    if let Some(e) = &s.error {
+        fields.push(("error", Value::Str(e.clone())));
+    }
+    if let Some(rec) = &s.artifact {
+        fields.push(("scorecard", eval_record_json(rec)));
+    }
+    Value::obj(fields)
+}
+
+/// The `frontier` command response: the frontier JSON plus the `ok` flag.
+pub fn frontier_json(f: &Frontier) -> Value {
+    match f.to_json() {
+        Value::Obj(mut m) => {
+            m.insert("ok".to_string(), Value::Bool(true));
+            Value::Obj(m)
+        }
+        other => other,
+    }
 }
 
 /// One streamed `sample_traj` step event.
@@ -343,6 +438,112 @@ mod tests {
             _ => panic!("wrong command"),
         }
         assert!(parse_command(r#"{"cmd":"job_status"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_budget_sample_command() {
+        let c = parse_command(
+            r#"{"cmd":"sample","model":"m","budget":{"nfe_max":8},"n_samples":4}"#,
+        )
+        .unwrap();
+        match c {
+            Command::Sample(r) => {
+                assert_eq!(r.budget, Some(Budget::NfeMax(8)));
+                assert!(r.solver.is_empty());
+            }
+            _ => panic!("wrong command"),
+        }
+        let c = parse_command(
+            r#"{"cmd":"sample","model":"m","budget":{"quality":"rmse<=0.05"},"n_samples":4}"#,
+        )
+        .unwrap();
+        match c {
+            Command::Sample(r) => assert_eq!(r.budget, Some(Budget::RmseMax(0.05))),
+            _ => panic!("wrong command"),
+        }
+        // solver and budget are mutually exclusive; one is required
+        assert!(parse_command(
+            r#"{"cmd":"sample","model":"m","solver":"rk2:n=4","budget":{"nfe_max":8},"n_samples":4}"#
+        )
+        .is_err());
+        assert!(parse_command(r#"{"cmd":"sample","model":"m","n_samples":4}"#).is_err());
+        // malformed budgets fail at parse time
+        assert!(parse_command(
+            r#"{"cmd":"sample","model":"m","budget":{"nfe_max":0},"n_samples":4}"#
+        )
+        .is_err());
+        assert!(parse_command(
+            r#"{"cmd":"sample","model":"m","budget":{"steps":4},"n_samples":4}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_evaluate_and_frontier_commands() {
+        let c = parse_command(
+            r#"{"cmd":"evaluate","model":"m","solver":"rk2:n=8","grid":[2,4,8],"seed":7}"#,
+        )
+        .unwrap();
+        match c {
+            Command::Evaluate(s) => {
+                assert_eq!(s.model, "m");
+                assert_eq!(s.solver, "rk2:n=8");
+                assert_eq!(s.grid, vec![2, 4, 8]);
+                assert_eq!(s.seed, Some(7));
+            }
+            _ => panic!("wrong command"),
+        }
+        // grid + seed optional
+        match parse_command(r#"{"cmd":"evaluate","model":"m","solver":"dopri5"}"#).unwrap() {
+            Command::Evaluate(s) => {
+                assert!(s.grid.is_empty());
+                assert_eq!(s.seed, None);
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse_command(r#"{"cmd":"evaluate","model":"m","solver":"s","grid":[0]}"#).is_err());
+        assert!(parse_command(r#"{"cmd":"evaluate","model":"m"}"#).is_err());
+        match parse_command(r#"{"cmd":"eval_status","job_id":3}"#).unwrap() {
+            Command::EvalStatus(id) => assert_eq!(id, 3),
+            _ => panic!("wrong command"),
+        }
+        match parse_command(r#"{"cmd":"frontier","model":"m"}"#).unwrap() {
+            Command::Frontier(m) => assert_eq!(m, "m"),
+            _ => panic!("wrong command"),
+        }
+        assert!(parse_command(r#"{"cmd":"frontier"}"#).is_err());
+    }
+
+    #[test]
+    fn eval_job_json_shape() {
+        use crate::quality::{EvalJobSnapshot, EvalJobSpec};
+        use crate::registry::JobState;
+        let snap = EvalJobSnapshot {
+            id: 2,
+            spec: EvalJobSpec {
+                model: "m".into(),
+                solver: "rk2:n=4".into(),
+                grid: vec![2, 4],
+                seed: None,
+            },
+            state: JobState::Running,
+            iters_done: 1,
+            iters_total: 2,
+            loss: f32::NAN,
+            val_rmse: 0.25,
+            error: None,
+            artifact: None,
+            wall_secs: 0.5,
+        };
+        let v = eval_job_json(&snap);
+        assert_eq!(v.get("state").unwrap().as_str().unwrap(), "running");
+        assert_eq!(v.get("cells_done").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("cells_total").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("grid").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("last_rmse").unwrap().as_f64().unwrap(), 0.25);
+        // round-trips through the writer/parser
+        let back = Value::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(back.get("job_id").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! JSONL-over-TCP sampling server: thread-per-connection on top of the
 //! batching [`Coordinator`]. Python never appears anywhere near this path.
 //!
-//! The server serves two planes from one socket: the sampling plane
-//! (`sample`, `sample_traj`) and the training plane (`train`,
-//! `job_status`, `jobs`) backed by an optional [`TrainJobManager`] — a
-//! server started without one (no registry configured) cleanly rejects
-//! training commands instead of panicking.
+//! The server serves three planes from one socket: the sampling plane
+//! (`sample` — with optional budget routing — and `sample_traj`), the
+//! training plane (`train`, `job_status`, `jobs`) backed by an optional
+//! [`TrainJobManager`], and the quality plane (`evaluate`, `eval_status`,
+//! `frontier`) backed by an optional [`EvalJobManager`] — a server started
+//! without either (no registry configured) cleanly rejects those commands
+//! instead of panicking.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -15,29 +17,37 @@ use anyhow::Result;
 
 use super::batcher::Coordinator;
 use super::protocol::{
-    artifact_json, error_json, job_json, parse_command, response_to_json, traj_done_json,
-    traj_step_json, Command,
+    artifact_json, error_json, eval_job_json, frontier_json, job_json, parse_command,
+    response_to_json, traj_done_json, traj_step_json, Command,
 };
 use crate::json::Value;
 use crate::log_info;
+use crate::quality::EvalJobManager;
 use crate::registry::TrainJobManager;
 
 /// Everything a connection handler needs: the sampling coordinator plus the
-/// (optional) in-server training-job manager.
+/// (optional) in-server training- and eval-job managers.
 #[derive(Clone)]
 pub struct ServerState {
     pub coord: Arc<Coordinator>,
     pub jobs: Option<Arc<TrainJobManager>>,
+    pub eval_jobs: Option<Arc<EvalJobManager>>,
 }
 
 impl ServerState {
-    /// Sampling only: `train`/`job_status`/`jobs` commands are rejected.
+    /// Sampling only: training and quality commands are rejected.
     pub fn sampling_only(coord: Arc<Coordinator>) -> ServerState {
-        ServerState { coord, jobs: None }
+        ServerState { coord, jobs: None, eval_jobs: None }
     }
 
     pub fn with_jobs(coord: Arc<Coordinator>, jobs: Arc<TrainJobManager>) -> ServerState {
-        ServerState { coord, jobs: Some(jobs) }
+        ServerState { coord, jobs: Some(jobs), eval_jobs: None }
+    }
+
+    /// Enable the quality plane (`evaluate` / `eval_status`).
+    pub fn with_eval_jobs(mut self, eval_jobs: Arc<EvalJobManager>) -> ServerState {
+        self.eval_jobs = Some(eval_jobs);
+        self
     }
 }
 
@@ -170,6 +180,38 @@ fn dispatch(state: &ServerState, cmd: Command) -> Value {
                     Value::Arr(jobs.jobs().iter().map(job_json).collect()),
                 ),
             ]),
+        },
+        Command::Evaluate(spec) => match &state.eval_jobs {
+            None => error_json(
+                "eval jobs are not enabled on this server \
+                 (start `repro serve` with a [registry] config)",
+            ),
+            Some(jobs) => match jobs.submit(spec) {
+                Ok((id, coalesced)) => {
+                    let state_name = jobs
+                        .status(id)
+                        .map(|s| s.state.name())
+                        .unwrap_or("queued");
+                    Value::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("job_id", Value::Num(id as f64)),
+                        ("state", Value::Str(state_name.into())),
+                        ("coalesced", Value::Bool(coalesced)),
+                    ])
+                }
+                Err(e) => error_json(&format!("{e:#}")),
+            },
+        },
+        Command::EvalStatus(id) => match &state.eval_jobs {
+            None => error_json("eval jobs are not enabled on this server"),
+            Some(jobs) => match jobs.status(id) {
+                Some(snap) => eval_job_json(&snap),
+                None => error_json(&format!("unknown eval job_id {id}")),
+            },
+        },
+        Command::Frontier(model) => match coord.frontier(&model) {
+            Ok(f) => frontier_json(&f),
+            Err(e) => error_json(&format!("{e:#}")),
         },
     }
 }

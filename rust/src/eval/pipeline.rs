@@ -27,18 +27,42 @@ pub struct SamplerReport {
 }
 
 impl SamplerReport {
+    /// NaN-safe JSON: every metric goes through [`Value::num_or_null`], so
+    /// a report with no dataset reference (`fd_data = NaN`) — or any other
+    /// non-finite metric — still serializes to *valid* JSON (`null`), never
+    /// a bare `NaN` token. [`SamplerReport::from_json`] maps `null` back.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::Value;
         Value::obj(vec![
             ("sampler", Value::Str(self.sampler.clone())),
             ("nfe", Value::Num(self.nfe as f64)),
-            ("rmse", Value::Num(self.rmse as f64)),
-            ("psnr", Value::Num(self.psnr as f64)),
-            ("fd", Value::Num(self.fd)),
-            ("fd_data", Value::Num(self.fd_data)),
-            ("swd", Value::Num(self.swd as f64)),
-            ("wall_ms_per_batch", Value::Num(self.wall_ms_per_batch)),
+            ("rmse", Value::num_or_null(self.rmse as f64)),
+            ("psnr", Value::num_or_null(self.psnr as f64)),
+            ("fd", Value::num_or_null(self.fd)),
+            ("fd_data", Value::num_or_null(self.fd_data)),
+            ("swd", Value::num_or_null(self.swd as f64)),
+            ("wall_ms_per_batch", Value::num_or_null(self.wall_ms_per_batch)),
         ])
+    }
+
+    pub fn from_json(v: &crate::json::Value) -> Result<SamplerReport> {
+        use crate::json::Value;
+        let num = |key: &str| -> Result<f64> {
+            match v.get(key)? {
+                Value::Null => Ok(f64::NAN),
+                x => x.as_f64(),
+            }
+        };
+        Ok(SamplerReport {
+            sampler: v.get("sampler")?.as_str()?.to_string(),
+            nfe: v.get("nfe")?.as_usize()? as u64,
+            rmse: num("rmse")? as f32,
+            psnr: num("psnr")? as f32,
+            fd: num("fd")?,
+            fd_data: num("fd_data")?,
+            swd: num("swd")? as f32,
+            wall_ms_per_batch: num("wall_ms_per_batch")?,
+        })
     }
 }
 
@@ -134,5 +158,34 @@ mod tests {
         // JSON serialization round-trips structurally
         let j = fine.to_json().to_string_compact();
         assert!(j.contains("\"rmse\""));
+    }
+
+    #[test]
+    fn report_json_is_nan_safe_and_round_trips() {
+        let rep = SamplerReport {
+            sampler: "rk2:n=4".into(),
+            nfe: 8,
+            rmse: 0.125,
+            psnr: 30.5,
+            fd: 0.01,
+            fd_data: f64::NAN, // no dataset reference — must become null
+            swd: 0.02,
+            wall_ms_per_batch: 1.5,
+        };
+        // The Value tree must carry an explicit Null, not Value::Num(NaN)
+        // (NaN poisons Value::PartialEq and as_f64 consumers; the writer
+        // only papers over it lossily at serialization time).
+        assert!(matches!(rep.to_json().get("fd_data").unwrap(), crate::json::Value::Null));
+        let text = rep.to_json().to_string_compact();
+        assert!(text.contains("\"fd_data\":null"), "NaN must serialize as null: {text}");
+        let back = SamplerReport::from_json(&crate::json::Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.sampler, rep.sampler);
+        assert_eq!(back.nfe, 8);
+        assert_eq!(back.rmse, rep.rmse);
+        assert_eq!(back.psnr, rep.psnr);
+        assert_eq!(back.fd, rep.fd);
+        assert!(back.fd_data.is_nan());
+        assert_eq!(back.swd, rep.swd);
+        assert_eq!(back.wall_ms_per_batch, rep.wall_ms_per_batch);
     }
 }

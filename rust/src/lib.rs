@@ -11,7 +11,9 @@
 //! `SolverSpec` configs plus step-wise `SolveSession` execution), owns the
 //! Bespoke training loop (`bespoke`), stores trained solvers in a versioned
 //! artifact registry with in-server training jobs and hot-swap serving
-//! (`registry`), serves samples through a batching coordinator
+//! (`registry`), measures every solver's quality-vs-NFE tradeoff into
+//! scorecards and Pareto frontiers that budget-aware requests resolve
+//! against (`quality`), serves samples through a batching coordinator
 //! (`coordinator`, with step-streamed trajectories via `sample_traj`), and
 //! regenerates every table and figure of the paper's evaluation
 //! (`bench_harness`).
@@ -26,6 +28,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod json;
 pub mod models;
+pub mod quality;
 pub mod registry;
 pub mod runtime;
 pub mod schedulers;

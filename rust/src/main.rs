@@ -20,7 +20,12 @@ use bespoke_flow::bench_harness::{self, ExpContext};
 use bespoke_flow::config::Config;
 use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, ServerState, TrajRequest};
 use bespoke_flow::models::Zoo;
-use bespoke_flow::registry::{sidecar_path, ArtifactMeta, Registry, TrainJobManager, ZooRunner};
+use bespoke_flow::quality::{
+    build_frontier, frontier_pins, register_scorecard, Budget, EvalJobSpec, EvalRunner,
+};
+use bespoke_flow::registry::{
+    sidecar_path, ArtifactMeta, JobManager, JobRunner, Registry, TrainJobManager, ZooRunner,
+};
 use bespoke_flow::runtime::{Executable, Manifest};
 use bespoke_flow::solvers::theta::Base;
 use bespoke_flow::solvers::SolverSpec;
@@ -139,6 +144,12 @@ fn run() -> Result<()> {
             // Registry attached so bespoke:model=... specs resolve offline too.
             let coord = Coordinator::with_registry(zoo, cfg.serve.clone(), open_registry(&cfg)?);
             let model = args.flags.get("model").context("--model required")?.clone();
+            // Budget-aware routing: --budget resolves against the model's
+            // Pareto frontier instead of naming a solver.
+            let budget = args.flags.get("budget").map(|b| Budget::parse(b)).transpose()?;
+            if budget.is_some() && args.flags.contains_key("solver") {
+                bail!("--solver and --budget are mutually exclusive; give one");
+            }
             // Validate + canonicalize the spec up front: typos fail here
             // with a parse error, not deep inside a worker thread.
             let spec = SolverSpec::parse(
@@ -153,6 +164,9 @@ fn run() -> Result<()> {
             let seed = args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
 
             if args.flags.contains_key("traj") {
+                if budget.is_some() {
+                    bail!("--traj does not take --budget (trajectory requests name a solver)");
+                }
                 // Step-streamed sampling: print one progress line per step.
                 let req = TrajRequest {
                     model,
@@ -198,10 +212,11 @@ fn run() -> Result<()> {
 
             let req = SampleRequest {
                 model,
-                solver: spec.to_string(),
+                solver: if budget.is_some() { String::new() } else { spec.to_string() },
                 n_samples,
                 seed,
                 return_samples: true,
+                budget,
             };
             let resp = coord.submit(&req)?;
             let samples = resp
@@ -278,22 +293,79 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
-        "eval" => {
-            let cfg = load_config(&args)?;
-            let zoo = open_zoo(&args)?;
-            let model = args.flags.get("model").context("--model required")?.clone();
-            let mut spec = SolverSpec::parse(
-                args.flags.get("solver").map(String::as_str).unwrap_or("rk2:n=8"),
-            )?;
-            if spec.needs_registry() {
-                spec = open_registry(&cfg)?.resolve_spec(&spec)?;
-                println!("resolved to {spec}");
+        "eval" => match args.positional.first().map(String::as_str) {
+            // `repro eval run`: sweep a (solver × grid) matrix and register
+            // the scorecard into the registry — the offline twin of the
+            // server's `evaluate` command. Works without compiled HLO
+            // artifacts for `ideal` models (analytic oracle fallback).
+            Some("run") => {
+                let cfg = load_config(&args)?;
+                let zoo = open_zoo(&args)?;
+                let registry = open_registry(&cfg)?;
+                let model = args.flags.get("model").context("--model required")?.clone();
+                let solver =
+                    SolverSpec::parse(args.flags.get("solver").context("--solver required")?)?;
+                let grid = match args.flags.get("grid") {
+                    Some(g) => g
+                        .split(',')
+                        .map(|s| s.trim().parse::<usize>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .context("bad --grid (expected e.g. 2,4,8)")?,
+                    None => Vec::new(),
+                };
+                let seed = args.flags.get("seed").map(|s| s.parse()).transpose()?;
+                let runner =
+                    EvalRunner::new(zoo, registry.clone(), cfg.eval.clone(), cfg.quality.clone());
+                let spec =
+                    EvalJobSpec { model, solver: solver.to_string(), grid, seed };
+                runner.validate(&spec)?;
+                let card = runner.run(&spec, &mut |p| {
+                    println!(
+                        "  cell {}/{}  rmse={:.6}",
+                        p.iter, p.iters_total, p.val_rmse
+                    );
+                })?;
+                let rec = register_scorecard(&registry, &card)?;
+                println!(
+                    "registered scorecard {} {} v{} ({} rows) in {}",
+                    rec.model,
+                    rec.solver,
+                    rec.version,
+                    card.rows.len(),
+                    registry.root().display()
+                );
+                Ok(())
             }
-            let mut ctx = ExpContext::new(zoo, cfg)?;
-            let rep = ctx.eval_solver_spec(&model, &spec)?;
-            println!("{}", rep.to_json().to_string_pretty());
-            Ok(())
-        }
+            // `repro eval frontier`: print the model's current Pareto
+            // frontier over all registered scorecards (artifact-free).
+            Some("frontier") => {
+                let cfg = load_config(&args)?;
+                let registry = open_registry(&cfg)?;
+                let model = args.flags.get("model").context("--model required")?;
+                let f = build_frontier(&registry, model)?;
+                println!("{}", f.to_json().to_string_pretty());
+                Ok(())
+            }
+            Some(other) => bail!("unknown eval subcommand {other:?} (run|frontier)"),
+            // Legacy one-shot evaluation: print a single report without
+            // touching the registry.
+            None => {
+                let cfg = load_config(&args)?;
+                let zoo = open_zoo(&args)?;
+                let model = args.flags.get("model").context("--model required")?.clone();
+                let mut spec = SolverSpec::parse(
+                    args.flags.get("solver").map(String::as_str).unwrap_or("rk2:n=8"),
+                )?;
+                if spec.needs_registry() {
+                    spec = open_registry(&cfg)?.resolve_spec(&spec)?;
+                    println!("resolved to {spec}");
+                }
+                let mut ctx = ExpContext::new(zoo, cfg)?;
+                let rep = ctx.eval_solver_spec(&model, &spec)?;
+                println!("{}", rep.to_json().to_string_pretty());
+                Ok(())
+            }
+        },
         "serve" => {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
@@ -303,18 +375,33 @@ fn run() -> Result<()> {
                 cfg.serve.clone(),
                 registry.clone(),
             ));
-            let runner = Arc::new(ZooRunner::new(zoo, cfg.train.clone()));
+            let runner = Arc::new(ZooRunner::new(zoo.clone(), cfg.train.clone()));
             let jobs = Arc::new(TrainJobManager::new(
-                registry,
+                registry.clone(),
                 runner,
                 cfg.registry.max_jobs,
+                Some(coord.metrics.clone()),
+            )?);
+            let eval_runner = Arc::new(EvalRunner::new(
+                zoo,
+                registry.clone(),
+                cfg.eval.clone(),
+                cfg.quality.clone(),
+            ));
+            let eval_jobs = Arc::new(JobManager::new(
+                registry,
+                eval_runner as Arc<bespoke_flow::quality::EvalRunnerDyn>,
+                cfg.quality.max_eval_jobs,
                 Some(coord.metrics.clone()),
             )?);
             println!(
                 "serving on {} (JSONL protocol; try {{\"cmd\":\"ping\"}}; registry {})",
                 cfg.serve.addr, cfg.registry.root
             );
-            serve(ServerState::with_jobs(coord, jobs), &cfg.serve.addr)
+            serve(
+                ServerState::with_jobs(coord, jobs).with_eval_jobs(eval_jobs),
+                &cfg.serve.addr,
+            )
         }
         "registry" => {
             let cfg = load_config(&args)?;
@@ -396,11 +483,18 @@ fn registry_cmd(args: &Args, cfg: &Config, registry: &Registry) -> Result<()> {
                 .transpose()
                 .context("bad --keep")?
                 .unwrap_or(cfg.registry.keep_last_k);
-            let removed = registry.gc(keep)?;
+            // Versions the current Pareto frontier serves must survive GC:
+            // budget routing would otherwise resolve to a deleted theta.
+            let pins = frontier_pins(registry)?;
+            let removed = registry.gc_with_pins(keep, &pins)?;
             for r in &removed {
                 println!("removed {} v{}", r.key.label(), r.version);
             }
-            println!("gc: removed {} artifact(s), keep-last-{keep}", removed.len());
+            println!(
+                "gc: removed {} artifact(s), keep-last-{keep}, {} frontier-pinned",
+                removed.len(),
+                pins.len()
+            );
             Ok(())
         }
         other => bail!("unknown registry subcommand {other:?} (list|show|gc)"),
@@ -416,6 +510,9 @@ COMMANDS:
     list                          show models in the artifact manifest
     sample                        generate samples through the coordinator
         --model M  --solver SPEC  --n N  --seed S  [--out samples.json]
+        [--budget B]              budget-aware routing instead of --solver:
+                                  nfe_max=N | latency_ms=X | rmse<=X
+                                  (resolved against the Pareto frontier)
         [--traj [--every K]]      stream the trajectory step by step
     train-bespoke                 train a Bespoke solver (Algorithm 2)
         --model M  [--base rk1|rk2]  --n STEPS  [--iters I]
@@ -424,14 +521,22 @@ COMMANDS:
                                   (a *.meta.json sidecar is always written)
     eval                          evaluate a solver spec vs the GT solver
         --model M  --solver SPEC  [--samples N]
+    eval run                      sweep a solver and register the scorecard
+        --model M  --solver SPEC  [--grid 2,4,8]  [--seed S]
+                                  (rk/transfer templates sweep n over the
+                                   grid; bespoke/dopri5 measure as-is)
+    eval frontier --model M       print the model's Pareto frontier JSON
+                                  (artifact-free; reads the registry only)
     serve                         start the JSONL sampling + training server
         [--addr HOST:PORT]        (commands: sample, sample_traj, list,
-                                   metrics, ping, train, job_status, jobs —
+                                   metrics, ping, train, job_status, jobs,
+                                   evaluate, eval_status, frontier —
                                    one JSON object per line)
     registry list                 show registered solver artifacts
     registry show                 inspect one key (integrity-checked)
         --model M  --n STEPS  [--base B]  [--ablation A]
-    registry gc [--keep K]        drop old versions (keeps last K + best)
+    registry gc [--keep K]        drop old versions (keeps last K + best +
+                                  every version on the Pareto frontier)
     exp <id>|all                  reproduce a paper table/figure (out/reports/)
 
 SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
@@ -449,7 +554,8 @@ SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
 GLOBAL FLAGS:
     --config file.json   --artifacts dir
     --registry DIR       artifact registry root (default out/registry;
-                         config: [registry] root/max_jobs/keep_last_k)
+                         config: [registry] root/max_jobs/keep_last_k,
+                         [quality] grid/eval_batches/max_eval_jobs)
     --threads N          compute threads for host kernels (0 = auto;
                          also: BESPOKE_THREADS env, serve.compute_threads)
     --workers N          worker threads per (model, solver) serving route

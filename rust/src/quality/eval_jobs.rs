@@ -1,0 +1,304 @@
+//! Background eval jobs: sweep a (solver template × n-grid) matrix for a
+//! model through `eval::evaluate_sampler` and publish the resulting
+//! [`Scorecard`] into the registry — the data the Pareto frontier and
+//! budget routing are built from.
+//!
+//! Eval jobs ride the same generic [`JobManager`] machinery as training
+//! jobs (queue, coalescing, progress, panic containment); only the runner
+//! differs. Progress is reported per scorecard cell (`iter` = cells done,
+//! `val_rmse` = the last cell's RMSE, `loss` = NaN).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::scorecard::{Scorecard, ScoreRow};
+use crate::config::{EvalConfig, QualityConfig};
+use crate::eval::evaluate_sampler;
+use crate::json::Value;
+use crate::models::{VelocityModel, Zoo};
+use crate::registry::meta::unix_now;
+use crate::registry::{
+    ArtifactKey, EvalRecord, JobManager, JobProgress, JobRunner, JobSnapshot, Registry,
+    META_SCHEMA_VERSION,
+};
+use crate::solvers::{Dopri5, Sampler, SolverSpec};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// What to evaluate. `grid` is a list of step counts `n` to sweep the
+/// template over (fixed-grid RK and transfer templates only); empty means
+/// "the template's own configuration". `seed` overrides the server's eval
+/// seed. Like training jobs, overrides do not participate in coalescing.
+#[derive(Clone, Debug)]
+pub struct EvalJobSpec {
+    pub model: String,
+    /// Canonical solver template spec string.
+    pub solver: String,
+    pub grid: Vec<usize>,
+    pub seed: Option<u64>,
+}
+
+/// The eval-job runner trait object: what [`EvalJobManager`] drives.
+pub type EvalRunnerDyn =
+    dyn JobRunner<Spec = EvalJobSpec, Output = Scorecard, Artifact = EvalRecord>;
+
+/// Background eval-job manager (the `{"cmd":"evaluate"}` plane).
+pub type EvalJobManager = JobManager<EvalRunnerDyn>;
+
+/// Snapshot of one eval job.
+pub type EvalJobSnapshot = JobSnapshot<EvalJobSpec, EvalRecord>;
+
+/// Cached per-model eval inputs: pre-drawn noise batches, their GT-solver
+/// solutions, and the dataset reference (for the FID-analog `fd_data`).
+struct GtBundle {
+    x0: Vec<Tensor>,
+    gt: Vec<Tensor>,
+    data: Option<Tensor>,
+}
+
+/// The real eval runner: resolves the model (HLO executable, falling back
+/// to the pure-Rust analytic oracle for `ideal` models so eval works with
+/// no compiled artifacts), caches GT batches per (model, seed), and sweeps
+/// the template through [`evaluate_sampler`].
+pub struct EvalRunner {
+    zoo: Arc<Zoo>,
+    registry: Arc<Registry>,
+    eval_cfg: EvalConfig,
+    quality_cfg: QualityConfig,
+    gt_cache: Mutex<BTreeMap<(String, u64), Arc<GtBundle>>>,
+}
+
+impl EvalRunner {
+    pub fn new(
+        zoo: Arc<Zoo>,
+        registry: Arc<Registry>,
+        eval_cfg: EvalConfig,
+        quality_cfg: QualityConfig,
+    ) -> EvalRunner {
+        EvalRunner { zoo, registry, eval_cfg, quality_cfg, gt_cache: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The model to evaluate: the compiled HLO executable when present,
+    /// else the analytic oracle (`ideal` models only). Sampling *serving*
+    /// always uses the HLO path; the fallback only widens where scorecards
+    /// can be measured.
+    fn model(&self, name: &str) -> Result<Arc<dyn VelocityModel>> {
+        match self.zoo.hlo(name) {
+            Ok(m) => Ok(m as Arc<dyn VelocityModel>),
+            Err(hlo_err) => match self.zoo.analytic(name) {
+                Ok(a) => Ok(Arc::new(a) as Arc<dyn VelocityModel>),
+                Err(_) => Err(hlo_err),
+            },
+        }
+    }
+
+    /// Noise + GT batches for a model at a seed (cached; GT solves are the
+    /// expensive part of an eval job). The cache is bounded: seeds are
+    /// client-supplied, so an unbounded (model, seed) map would let a seed
+    /// sweep grow server memory without limit.
+    fn gt(&self, model_name: &str, model: &dyn VelocityModel, seed: u64) -> Result<Arc<GtBundle>> {
+        const MAX_GT_BUNDLES: usize = 8;
+        let key = (model_name.to_string(), seed);
+        if let Some(b) = self.gt_cache.lock().unwrap().get(&key) {
+            return Ok(b.clone());
+        }
+        let (b, d) = (model.batch(), model.dim());
+        let nb = self.quality_cfg.eval_batches.max(1);
+        let gt_solver = Dopri5 {
+            rtol: self.eval_cfg.gt_tol,
+            atol: self.eval_cfg.gt_tol,
+            max_steps: 100_000,
+        };
+        let mut rng = Rng::new(seed);
+        let mut x0 = Vec::with_capacity(nb);
+        let mut gt = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            let noise = Tensor::new(rng.normal_vec(b * d), vec![b, d])?;
+            gt.push(gt_solver.sample(model, &noise)?);
+            x0.push(noise);
+        }
+        let data = self
+            .zoo
+            .manifest()
+            .model(model_name)
+            .ok()
+            .and_then(|m| self.zoo.manifest().load_dataset(&m.dataset).ok());
+        let bundle = Arc::new(GtBundle { x0, gt, data });
+        let mut cache = self.gt_cache.lock().unwrap();
+        while cache.len() >= MAX_GT_BUNDLES {
+            let evict = cache.keys().next().cloned().expect("non-empty cache has a first key");
+            cache.remove(&evict);
+        }
+        cache.insert(key, bundle.clone());
+        Ok(bundle)
+    }
+
+    /// Expand the template into the concrete specs to measure, plus the
+    /// artifact binding for registry-resolved bespoke templates.
+    fn cells(
+        &self,
+        spec: &EvalJobSpec,
+    ) -> Result<(Vec<SolverSpec>, Option<(ArtifactKey, u64)>)> {
+        let template = SolverSpec::parse(&spec.solver)?;
+        for &n in &spec.grid {
+            if n == 0 {
+                bail!("grid entries must be >= 1");
+            }
+        }
+        // Sweep grid precedence: request's explicit grid > the configured
+        // `[quality] grid` default > the template's own n.
+        let sweep = |n: usize| -> Vec<usize> {
+            if !spec.grid.is_empty() {
+                spec.grid.clone()
+            } else if !self.quality_cfg.grid.is_empty() {
+                self.quality_cfg.grid.clone()
+            } else {
+                vec![n]
+            }
+        };
+        match &template {
+            SolverSpec::Rk { base, n, grid } => Ok((
+                sweep(*n)
+                    .into_iter()
+                    .map(|k| SolverSpec::Rk { base: *base, n: k, grid: *grid })
+                    .collect(),
+                None,
+            )),
+            SolverSpec::Transfer { base, n, sched } => Ok((
+                sweep(*n)
+                    .into_iter()
+                    .map(|k| SolverSpec::Transfer { base: *base, n: k, sched: *sched })
+                    .collect(),
+                None,
+            )),
+            SolverSpec::Dopri5 { .. } | SolverSpec::Bespoke { .. } => {
+                if !spec.grid.is_empty() {
+                    bail!(
+                        "solver {} has a fixed configuration; grid sweeps \
+                         apply to rk/transfer templates only",
+                        spec.solver
+                    );
+                }
+                Ok((vec![template.clone()], None))
+            }
+            SolverSpec::BespokeRegistry { model, n, base, ablation } => {
+                if !spec.grid.is_empty() {
+                    bail!(
+                        "bespoke artifacts are trained for a fixed n; grid \
+                         sweeps apply to rk/transfer templates only"
+                    );
+                }
+                let rec = self
+                    .registry
+                    .best(model, *n, *base, ablation.as_deref())
+                    .with_context(|| {
+                        format!("no registered bespoke artifact to evaluate for {}", spec.solver)
+                    })?;
+                // Derive the concrete spec from this exact record (not a
+                // second `resolve_spec` lookup): a training job registering
+                // a better version between two lookups must not make the
+                // card's artifact binding disagree with the theta it
+                // actually measured.
+                let concrete = SolverSpec::Bespoke {
+                    path: self.registry.theta_path(&rec).to_string_lossy().into_owned(),
+                };
+                Ok((vec![concrete], Some((rec.key, rec.version))))
+            }
+        }
+    }
+}
+
+impl JobRunner for EvalRunner {
+    type Spec = EvalJobSpec;
+    type Output = Scorecard;
+    type Artifact = EvalRecord;
+
+    fn kind(&self) -> &'static str {
+        "eval"
+    }
+
+    fn coalesce_key(&self, spec: &EvalJobSpec) -> String {
+        format!("{}|{}|{:?}", spec.model, spec.solver, spec.grid)
+    }
+
+    fn label(&self, spec: &EvalJobSpec) -> String {
+        if spec.grid.is_empty() {
+            format!("eval {} {}", spec.model, spec.solver)
+        } else {
+            format!("eval {} {} grid={:?}", spec.model, spec.solver, spec.grid)
+        }
+    }
+
+    fn validate(&self, spec: &EvalJobSpec) -> Result<()> {
+        self.zoo.manifest().model(&spec.model)?;
+        self.cells(spec)?;
+        Ok(())
+    }
+
+    fn run(
+        &self,
+        spec: &EvalJobSpec,
+        progress: &mut dyn FnMut(&JobProgress),
+    ) -> Result<Scorecard> {
+        let model = self.model(&spec.model)?;
+        let sched = self.zoo.scheduler(&spec.model)?;
+        let (cells, artifact) = self.cells(spec)?;
+        let seed = spec.seed.unwrap_or(self.eval_cfg.seed);
+        let bundle = self.gt(&spec.model, model.as_ref(), seed)?;
+
+        let mut rows = Vec::with_capacity(cells.len());
+        for (i, cell) in cells.iter().enumerate() {
+            let sampler = cell.build(sched)?;
+            let rep = evaluate_sampler(
+                model.as_ref(),
+                sampler.as_ref(),
+                &bundle.x0,
+                &bundle.gt,
+                bundle.data.as_ref(),
+            )?;
+            progress(&JobProgress {
+                iter: i + 1,
+                iters_total: cells.len(),
+                loss: f32::NAN,
+                val_rmse: rep.rmse,
+            });
+            rows.push(ScoreRow::from_report(&cell.to_string(), &rep));
+        }
+        Ok(Scorecard {
+            schema_version: META_SCHEMA_VERSION,
+            model: spec.model.clone(),
+            solver: spec.solver.clone(),
+            artifact,
+            gt_tol: self.eval_cfg.gt_tol,
+            seed,
+            batches: bundle.x0.len(),
+            created_at: unix_now(),
+            rows,
+        })
+    }
+
+    fn publish(&self, registry: &Registry, card: Scorecard) -> Result<EvalRecord> {
+        register_scorecard(registry, &card)
+    }
+}
+
+/// Serialize + register a scorecard into the registry (shared by the
+/// background runner and the synchronous `repro eval run` CLI path).
+pub fn register_scorecard(registry: &Registry, card: &Scorecard) -> Result<EvalRecord> {
+    let bytes = card.to_json().to_string_pretty();
+    registry.register_eval(
+        &card.model,
+        &card.solver,
+        card.artifact.as_ref().map(|(k, v)| (k, *v)),
+        &bytes,
+    )
+}
+
+/// Round-trip guard used by tests: a registered scorecard must load back
+/// hash-clean and decode to the same row set.
+pub fn load_scorecard(registry: &Registry, rec: &EvalRecord) -> Result<Scorecard> {
+    let bytes = registry.load_eval_bytes(rec)?;
+    Scorecard::from_json(&Value::parse(&bytes).context("parsing scorecard")?)
+}

@@ -1,0 +1,453 @@
+//! Per-model Pareto frontiers over scorecards, and budget resolution
+//! against them.
+//!
+//! The frontier answers the paper's central serving question — "what is the
+//! best sample I can get for this budget?" — from measured data: every
+//! scorecard row (base RK grids, dopri5, every bespoke artifact version) is
+//! a candidate point in (NFE, RMSE) space, and the frontier is the
+//! efficient subset.
+//!
+//! **Determinism is a contract.** The same scorecard set produces
+//! byte-identical frontier JSON in any insertion order: candidates are
+//! sorted by a total order (NFE, RMSE, wall-ms, artifact version, solver
+//! string) before the dominance scan, and budget resolution breaks ties by
+//! fixed rules (best quality → fewer NFE → older artifact version → solver
+//! string). Pinned by `rust/tests/quality_frontier.rs`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::scorecard::Scorecard;
+use crate::json::Value;
+use crate::registry::{ArtifactKey, ManifestStamp, Registry};
+
+/// One efficient (solver, NFE, quality) point of a model's frontier.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    /// Concrete, buildable spec (`rk2:n=4`, `bespoke:path=...`).
+    pub solver: String,
+    /// The scorecard template the point came from (display only).
+    pub source: String,
+    /// Bespoke artifact binding, when the row measured a registry artifact.
+    pub artifact: Option<(ArtifactKey, u64)>,
+    pub nfe: u64,
+    pub rmse: f32,
+    pub psnr: f32,
+    pub fd: f64,
+    pub swd: f32,
+    pub wall_ms: f64,
+}
+
+impl FrontierPoint {
+    /// Artifact version for tie-breaking (0 = baseline, which sorts as
+    /// "oldest").
+    fn version(&self) -> u64 {
+        self.artifact.as_ref().map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("solver", Value::Str(self.solver.clone())),
+            ("source", Value::Str(self.source.clone())),
+            ("nfe", Value::Num(self.nfe as f64)),
+            ("rmse", Value::num_or_null(self.rmse as f64)),
+            ("psnr", Value::num_or_null(self.psnr as f64)),
+            ("fd", Value::num_or_null(self.fd)),
+            ("swd", Value::num_or_null(self.swd as f64)),
+            ("wall_ms", Value::num_or_null(self.wall_ms)),
+        ];
+        if let Some((key, ver)) = &self.artifact {
+            fields.push((
+                "artifact",
+                Value::obj(vec![
+                    ("model", Value::Str(key.model.clone())),
+                    ("base", Value::Str(key.base.name().into())),
+                    ("n", Value::Num(key.n as f64)),
+                    ("ablation", Value::Str(key.ablation.clone())),
+                    ("version", Value::Num(*ver as f64)),
+                ]),
+            ));
+        }
+        Value::obj(fields)
+    }
+}
+
+/// A sampling budget: the client states a constraint, the frontier resolves
+/// it to a concrete solver spec. Exactly one dimension per budget.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Budget {
+    /// At most this many model evaluations per sample batch.
+    NfeMax(u64),
+    /// At most this many milliseconds of solve wall time per batch (as
+    /// measured on the eval host — advisory, not an SLA).
+    LatencyMs(f64),
+    /// At least this quality: RMSE vs the GT solver at most `x`.
+    RmseMax(f32),
+}
+
+impl Budget {
+    /// Parse the wire form: an object with exactly one of
+    /// `{"nfe_max": N}`, `{"latency_ms": X}`, `{"quality": "rmse<=X"}`.
+    pub fn from_json(v: &Value) -> Result<Budget> {
+        let obj = v.as_obj().context("budget must be an object")?;
+        if obj.len() != 1 {
+            bail!("budget takes exactly one of nfe_max | latency_ms | quality");
+        }
+        let out = if let Some(n) = v.get_opt("nfe_max") {
+            Budget::NfeMax(n.as_usize()? as u64)
+        } else if let Some(l) = v.get_opt("latency_ms") {
+            Budget::LatencyMs(l.as_f64()?)
+        } else if let Some(q) = v.get_opt("quality") {
+            Budget::parse_quality(q.as_str()?)?
+        } else {
+            let key = obj.keys().next().map(String::as_str).unwrap_or("");
+            bail!("unknown budget key {key:?} (nfe_max | latency_ms | quality)");
+        };
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Parse the CLI form: `nfe_max=N` | `latency_ms=X` | `rmse<=X`.
+    pub fn parse(s: &str) -> Result<Budget> {
+        let out = if let Some(n) = s.strip_prefix("nfe_max=") {
+            Budget::NfeMax(n.parse().with_context(|| format!("bad nfe_max in {s:?}"))?)
+        } else if let Some(l) = s.strip_prefix("latency_ms=") {
+            Budget::LatencyMs(l.parse().with_context(|| format!("bad latency_ms in {s:?}"))?)
+        } else if s.starts_with("rmse<=") {
+            Budget::parse_quality(s)?
+        } else {
+            bail!("bad budget {s:?} (nfe_max=N | latency_ms=X | rmse<=X)");
+        };
+        out.validate()?;
+        Ok(out)
+    }
+
+    fn parse_quality(s: &str) -> Result<Budget> {
+        let x = s
+            .strip_prefix("rmse<=")
+            .with_context(|| format!("bad quality budget {s:?} (expected rmse<=X)"))?;
+        Ok(Budget::RmseMax(
+            x.parse().with_context(|| format!("bad rmse bound in {s:?}"))?,
+        ))
+    }
+
+    fn validate(&self) -> Result<()> {
+        match self {
+            Budget::NfeMax(n) if *n == 0 => bail!("nfe_max must be >= 1"),
+            Budget::LatencyMs(l) if !(l.is_finite() && *l > 0.0) => {
+                bail!("latency_ms must be a positive finite number, got {l}")
+            }
+            Budget::RmseMax(x) if !(x.is_finite() && *x > 0.0) => {
+                bail!("rmse bound must be a positive finite number, got {x}")
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            Budget::NfeMax(n) => Value::obj(vec![("nfe_max", Value::Num(*n as f64))]),
+            Budget::LatencyMs(l) => Value::obj(vec![("latency_ms", Value::Num(*l))]),
+            Budget::RmseMax(x) => {
+                Value::obj(vec![("quality", Value::Str(format!("rmse<={x}")))])
+            }
+        }
+    }
+}
+
+impl fmt::Display for Budget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Budget::NfeMax(n) => write!(f, "nfe_max={n}"),
+            Budget::LatencyMs(l) => write!(f, "latency_ms={l}"),
+            Budget::RmseMax(x) => write!(f, "rmse<={x}"),
+        }
+    }
+}
+
+/// A model's Pareto frontier: points with strictly increasing NFE and
+/// strictly decreasing RMSE.
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    pub model: String,
+    /// Candidate rows considered (before dominance filtering).
+    pub candidates: usize,
+    pub points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// Build the frontier from scorecards. Rows with non-finite RMSE or
+    /// zero NFE are excluded (nothing to trade off). Insertion order of
+    /// `cards` (and of rows within them) does not affect the result.
+    pub fn build(model: &str, cards: &[&Scorecard]) -> Frontier {
+        let mut cand: Vec<FrontierPoint> = Vec::new();
+        for card in cards {
+            if card.model != model {
+                continue;
+            }
+            for row in &card.rows {
+                if !row.rmse.is_finite() || row.nfe == 0 {
+                    continue;
+                }
+                cand.push(FrontierPoint {
+                    solver: row.solver.clone(),
+                    source: card.solver.clone(),
+                    artifact: card.artifact.clone(),
+                    nfe: row.nfe,
+                    rmse: row.rmse,
+                    psnr: row.psnr,
+                    fd: row.fd,
+                    swd: row.swd,
+                    wall_ms: row.wall_ms,
+                });
+            }
+        }
+        let candidates = cand.len();
+        // Total order => deterministic frontier for any input order. All
+        // sort keys are finite (RMSE filtered above; wall_ms compared
+        // NaN-last just in case).
+        cand.sort_by(|a, b| {
+            a.nfe
+                .cmp(&b.nfe)
+                .then(a.rmse.total_cmp(&b.rmse))
+                .then(a.wall_ms.total_cmp(&b.wall_ms))
+                .then(a.version().cmp(&b.version()))
+                .then(a.solver.cmp(&b.solver))
+        });
+        // Dominance scan: keep a point iff it strictly improves RMSE over
+        // everything cheaper (equal-NFE duplicates lose to the first, which
+        // the sort placed best).
+        let mut points: Vec<FrontierPoint> = Vec::new();
+        for p in cand {
+            match points.last() {
+                None => points.push(p),
+                Some(last) if p.nfe > last.nfe && p.rmse < last.rmse => points.push(p),
+                Some(_) => {}
+            }
+        }
+        Frontier { model: model.to_string(), candidates, points }
+    }
+
+    /// Resolve a budget to the best frontier point, or an error naming the
+    /// tightest constraint when nothing qualifies. Tie-break contract (the
+    /// frontier's strict ordering makes real ties impossible, but the rules
+    /// are enforced generically so resolution stays deterministic even if
+    /// the point set changes shape): best quality → fewer NFE → older
+    /// artifact version → solver string; quality budgets minimize NFE
+    /// first, then RMSE.
+    pub fn resolve(&self, budget: &Budget) -> Result<&FrontierPoint> {
+        let qualifies: Vec<&FrontierPoint> = self
+            .points
+            .iter()
+            .filter(|p| match budget {
+                Budget::NfeMax(k) => p.nfe <= *k,
+                Budget::LatencyMs(l) => p.wall_ms.is_finite() && p.wall_ms <= *l,
+                Budget::RmseMax(x) => p.rmse <= *x,
+            })
+            .collect();
+        let best = match budget {
+            Budget::RmseMax(_) => qualifies.into_iter().min_by(|a, b| {
+                a.nfe
+                    .cmp(&b.nfe)
+                    .then(a.rmse.total_cmp(&b.rmse))
+                    .then(a.version().cmp(&b.version()))
+                    .then(a.solver.cmp(&b.solver))
+            }),
+            _ => qualifies.into_iter().min_by(|a, b| {
+                a.rmse
+                    .total_cmp(&b.rmse)
+                    .then(a.nfe.cmp(&b.nfe))
+                    .then(a.version().cmp(&b.version()))
+                    .then(a.solver.cmp(&b.solver))
+            }),
+        };
+        best.with_context(|| {
+            format!(
+                "budget {budget} is unsatisfiable for model {}: {} frontier \
+                 point(s), none qualify (evaluate more solvers or relax the \
+                 budget)",
+                self.model,
+                self.points.len()
+            )
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("model", Value::Str(self.model.clone())),
+            ("candidates", Value::Num(self.candidates as f64)),
+            (
+                "points",
+                Value::Arr(self.points.iter().map(|p| p.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Build a model's frontier from every scorecard currently registered for
+/// it (hash-checked loads; a corrupt scorecard is an error, not a silent
+/// hole in the frontier).
+pub fn build_frontier(registry: &Registry, model: &str) -> Result<Frontier> {
+    let mut cards = Vec::new();
+    for rec in registry.eval_records() {
+        if rec.model != model {
+            continue;
+        }
+        let bytes = registry.load_eval_bytes(&rec)?;
+        cards.push(
+            Scorecard::from_json(&Value::parse(&bytes).context("parsing scorecard")?)
+                .with_context(|| format!("decoding scorecard {}", rec.file))?,
+        );
+    }
+    let refs: Vec<&Scorecard> = cards.iter().collect();
+    Ok(Frontier::build(model, &refs))
+}
+
+/// Every artifact version referenced by any model's current frontier —
+/// the versions `registry gc` must pin so budget routing never loses a
+/// checkpoint it would serve.
+///
+/// Unlike [`build_frontier`], scorecards that fail to load (corruption,
+/// truncation) are *skipped with a log line* instead of erroring: gc is
+/// exactly the tool an operator reaches for when a store is damaged, so it
+/// must not be wedged by the damage itself. A skipped card can only
+/// under-pin, and gc still keeps last-k + best regardless.
+pub fn frontier_pins(registry: &Registry) -> Result<Vec<(ArtifactKey, u64)>> {
+    let records = registry.eval_records();
+    let mut models: Vec<String> = records.iter().map(|r| r.model.clone()).collect();
+    models.sort();
+    models.dedup();
+    let mut pins: Vec<(ArtifactKey, u64)> = Vec::new();
+    for model in models {
+        let mut cards = Vec::new();
+        for rec in records.iter().filter(|r| r.model == model) {
+            let loaded = registry
+                .load_eval_bytes(rec)
+                .and_then(|b| Scorecard::from_json(&Value::parse(&b)?));
+            match loaded {
+                Ok(c) => cards.push(c),
+                Err(e) => {
+                    crate::log_info!(
+                        "frontier_pins: skipping unreadable scorecard {}: {e:#}",
+                        rec.file
+                    );
+                }
+            }
+        }
+        let refs: Vec<&Scorecard> = cards.iter().collect();
+        for p in Frontier::build(&model, &refs).points {
+            if let Some(binding) = p.artifact {
+                if !pins.contains(&binding) {
+                    pins.push(binding);
+                }
+            }
+        }
+    }
+    Ok(pins)
+}
+
+/// Cached per-model frontiers, invalidated by the registry's manifest
+/// stamp — the same (mtime, length) refresh discipline the store itself
+/// uses, so any registration (theta or scorecard, this process or another)
+/// rebuilds on the next lookup.
+pub struct FrontierCache {
+    registry: Arc<Registry>,
+    cache: Mutex<BTreeMap<String, (ManifestStamp, Arc<Frontier>)>>,
+}
+
+impl FrontierCache {
+    pub fn new(registry: Arc<Registry>) -> FrontierCache {
+        FrontierCache { registry, cache: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The model's current frontier (rebuilt iff the manifest changed since
+    /// the cached build).
+    pub fn frontier(&self, model: &str) -> Result<Arc<Frontier>> {
+        let stamp = self.registry.current_stamp();
+        if let Some((cached_stamp, f)) = self.cache.lock().unwrap().get(model) {
+            if *cached_stamp == stamp {
+                return Ok(f.clone());
+            }
+        }
+        // Build outside the cache lock (scorecard loads touch disk).
+        let f = Arc::new(build_frontier(&self.registry, model)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(model.to_string(), (stamp, f.clone()));
+        Ok(f)
+    }
+
+    /// Resolve a budget for a model against its current frontier.
+    pub fn resolve(&self, model: &str, budget: &Budget) -> Result<FrontierPoint> {
+        let f = self.frontier(model)?;
+        Ok(f.resolve(budget)?.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(solver: &str, nfe: u64, rmse: f32) -> FrontierPoint {
+        FrontierPoint {
+            solver: solver.into(),
+            source: "rk2:n=4".into(),
+            artifact: None,
+            nfe,
+            rmse,
+            psnr: 10.0,
+            fd: 0.1,
+            swd: 0.1,
+            wall_ms: nfe as f64 * 0.5,
+        }
+    }
+
+    fn frontier(points: Vec<FrontierPoint>) -> Frontier {
+        Frontier { model: "m".into(), candidates: points.len(), points }
+    }
+
+    #[test]
+    fn budget_grammar() {
+        assert_eq!(Budget::parse("nfe_max=8").unwrap(), Budget::NfeMax(8));
+        assert_eq!(Budget::parse("latency_ms=2.5").unwrap(), Budget::LatencyMs(2.5));
+        assert_eq!(Budget::parse("rmse<=0.05").unwrap(), Budget::RmseMax(0.05));
+        for bad in ["nfe_max=0", "latency_ms=-1", "rmse<=0", "steps=4", "rmse<0.1", ""] {
+            assert!(Budget::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // JSON round-trip through the wire form
+        for b in [Budget::NfeMax(8), Budget::LatencyMs(2.5), Budget::RmseMax(0.05)] {
+            let back = Budget::from_json(&b.to_json()).unwrap();
+            assert_eq!(back, b);
+        }
+        for bad in [r#"{}"#, r#"{"nfe_max":1,"latency_ms":2}"#, r#"{"steps":4}"#] {
+            let v = Value::parse(bad).unwrap();
+            assert!(Budget::from_json(&v).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn resolve_picks_within_budget() {
+        let f = frontier(vec![
+            point("rk2:n=1", 2, 0.5),
+            point("rk2:n=4", 8, 0.1),
+            point("rk2:n=16", 32, 0.01),
+        ]);
+        // nfe budget: best quality among affordable points
+        assert_eq!(f.resolve(&Budget::NfeMax(8)).unwrap().solver, "rk2:n=4");
+        assert_eq!(f.resolve(&Budget::NfeMax(100)).unwrap().solver, "rk2:n=16");
+        assert!(f.resolve(&Budget::NfeMax(1)).is_err());
+        // quality budget: fewest NFE meeting the bound
+        assert_eq!(f.resolve(&Budget::RmseMax(0.2)).unwrap().solver, "rk2:n=4");
+        assert!(f.resolve(&Budget::RmseMax(0.001)).is_err());
+        // latency budget: wall_ms = nfe * 0.5 here
+        assert_eq!(f.resolve(&Budget::LatencyMs(4.0)).unwrap().solver, "rk2:n=4");
+    }
+}

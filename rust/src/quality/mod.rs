@@ -1,0 +1,36 @@
+//! Quality scorecards, Pareto frontiers, and budget-aware routing
+//! (DESIGN.md §9) — the subsystem that turns the paper's headline
+//! quality-vs-NFE tradeoff into a serving primitive.
+//!
+//! Three layers:
+//!
+//! * [`scorecard`] — the measured data: background eval jobs sweep a
+//!   (solver template × n-grid) matrix per model through
+//!   `eval::evaluate_sampler` (RMSE/PSNR/FD/SWD/wall-ms vs cached GT
+//!   batches) and persist versioned `v<k>.eval.json` scorecards into the
+//!   registry store beside the thetas, hash-checked and manifest-tracked
+//!   like them.
+//! * [`frontier`] — the efficient set: a deterministic per-model Pareto
+//!   frontier over all scorecard rows (base RK grids, dopri5, every
+//!   bespoke artifact version), cached and invalidated by the registry
+//!   manifest stamp.
+//! * [`eval_jobs`] + budget routing — `{"cmd":"evaluate"}` runs sweeps on
+//!   the generic `registry::JobManager` machinery, and a `SampleRequest`
+//!   `budget` (`nfe_max` | `latency_ms` | `quality: rmse<=X`) resolves
+//!   against the frontier to a concrete `SolverSpec` before routing
+//!   (`budget_routed` / `budget_unsatisfiable` metrics events).
+//!
+//! The registry stores scorecard *bytes* (integrity, versioning, GC — with
+//! frontier-referenced artifact versions pinned); this module owns their
+//! semantics.
+
+pub mod eval_jobs;
+pub mod frontier;
+pub mod scorecard;
+
+pub use eval_jobs::{
+    load_scorecard, register_scorecard, EvalJobManager, EvalJobSnapshot, EvalJobSpec, EvalRunner,
+    EvalRunnerDyn,
+};
+pub use frontier::{build_frontier, frontier_pins, Budget, Frontier, FrontierCache, FrontierPoint};
+pub use scorecard::{ScoreRow, Scorecard};

@@ -1,0 +1,250 @@
+//! Scorecards: the persisted output of one eval sweep — quality-vs-NFE
+//! metric rows for a (model, solver template) cell, measured by
+//! `eval::evaluate_sampler` against cached GT batches.
+//!
+//! A scorecard file (`v<k>.eval.json`) lives in the registry store beside
+//! the thetas (artifact-bound cards) or under `evals/` (baseline sweeps)
+//! and is hash-checked through `registry::Registry::load_eval_bytes`; this
+//! module owns only the content codec. All metric numbers are NaN-safe:
+//! non-finite values serialize as explicit JSON `null` and decode back to
+//! NaN, like every other registry record.
+
+use anyhow::{bail, Result};
+
+use crate::eval::SamplerReport;
+use crate::json::Value;
+use crate::registry::{ArtifactKey, META_SCHEMA_VERSION};
+use crate::solvers::theta::Base;
+
+/// One measured (concrete spec, NFE) point of a sweep.
+#[derive(Clone, Debug)]
+pub struct ScoreRow {
+    /// The concrete, buildable spec this row measured (`rk2:n=4`,
+    /// `bespoke:path=...`, ...).
+    pub solver: String,
+    /// Measured model evaluations per batch.
+    pub nfe: u64,
+    pub rmse: f32,
+    pub psnr: f32,
+    pub fd: f64,
+    pub swd: f32,
+    /// Fréchet distance vs the target dataset; NaN when no reference.
+    pub fd_data: f64,
+    pub wall_ms: f64,
+}
+
+impl ScoreRow {
+    pub fn from_report(solver: &str, rep: &SamplerReport) -> ScoreRow {
+        ScoreRow {
+            solver: solver.to_string(),
+            nfe: rep.nfe,
+            rmse: rep.rmse,
+            psnr: rep.psnr,
+            fd: rep.fd,
+            swd: rep.swd,
+            fd_data: rep.fd_data,
+            wall_ms: rep.wall_ms_per_batch,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("solver", Value::Str(self.solver.clone())),
+            ("nfe", Value::Num(self.nfe as f64)),
+            ("rmse", Value::num_or_null(self.rmse as f64)),
+            ("psnr", Value::num_or_null(self.psnr as f64)),
+            ("fd", Value::num_or_null(self.fd)),
+            ("swd", Value::num_or_null(self.swd as f64)),
+            ("fd_data", Value::num_or_null(self.fd_data)),
+            ("wall_ms", Value::num_or_null(self.wall_ms)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<ScoreRow> {
+        let num = |key: &str| -> Result<f64> {
+            match v.get(key)? {
+                Value::Null => Ok(f64::NAN),
+                x => x.as_f64(),
+            }
+        };
+        Ok(ScoreRow {
+            solver: v.get("solver")?.as_str()?.to_string(),
+            nfe: v.get("nfe")?.as_usize()? as u64,
+            rmse: num("rmse")? as f32,
+            psnr: num("psnr")? as f32,
+            fd: num("fd")?,
+            swd: num("swd")? as f32,
+            fd_data: num("fd_data")?,
+            wall_ms: num("wall_ms")?,
+        })
+    }
+}
+
+/// A full scorecard: the sweep's identity (model, solver template, optional
+/// artifact binding, eval settings) plus one [`ScoreRow`] per measured cell.
+#[derive(Clone, Debug)]
+pub struct Scorecard {
+    pub schema_version: u64,
+    pub model: String,
+    /// The solver template that was swept (canonical spec string; for
+    /// registry-form bespoke templates this keeps the `bespoke:model=...`
+    /// spelling — the rows carry the resolved concrete specs).
+    pub solver: String,
+    /// The bespoke artifact this card measured, when the template resolved
+    /// through the registry.
+    pub artifact: Option<(ArtifactKey, u64)>,
+    /// DOPRI5 tolerance of the GT batches the metrics compare against.
+    pub gt_tol: f64,
+    pub seed: u64,
+    /// Number of eval batches behind each row.
+    pub batches: usize,
+    pub created_at: u64,
+    pub rows: Vec<ScoreRow>,
+}
+
+impl Scorecard {
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("schema_version", Value::Num(self.schema_version as f64)),
+            ("model", Value::Str(self.model.clone())),
+            ("solver", Value::Str(self.solver.clone())),
+        ];
+        if let Some((key, ver)) = &self.artifact {
+            fields.push((
+                "artifact",
+                Value::obj(vec![
+                    ("model", Value::Str(key.model.clone())),
+                    ("base", Value::Str(key.base.name().into())),
+                    ("n", Value::Num(key.n as f64)),
+                    ("ablation", Value::Str(key.ablation.clone())),
+                    ("version", Value::Num(*ver as f64)),
+                ]),
+            ));
+        }
+        fields.extend([
+            ("gt_tol", Value::Num(self.gt_tol)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("batches", Value::Num(self.batches as f64)),
+            ("created_at", Value::Num(self.created_at as f64)),
+            (
+                "rows",
+                Value::Arr(self.rows.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Scorecard> {
+        let schema_version = v.get("schema_version")?.as_usize()? as u64;
+        if schema_version > META_SCHEMA_VERSION {
+            bail!(
+                "scorecard schema_version {schema_version} is newer than \
+                 this binary understands ({META_SCHEMA_VERSION})"
+            );
+        }
+        let artifact = match v.get_opt("artifact") {
+            None => None,
+            Some(av) => Some((
+                ArtifactKey {
+                    model: av.get("model")?.as_str()?.to_string(),
+                    base: Base::parse(av.get("base")?.as_str()?)?,
+                    n: av.get("n")?.as_usize()?,
+                    ablation: av.get("ablation")?.as_str()?.to_string(),
+                },
+                av.get("version")?.as_usize()? as u64,
+            )),
+        };
+        let mut rows = Vec::new();
+        for rv in v.get("rows")?.as_arr()? {
+            rows.push(ScoreRow::from_json(rv)?);
+        }
+        Ok(Scorecard {
+            schema_version,
+            model: v.get("model")?.as_str()?.to_string(),
+            solver: v.get("solver")?.as_str()?.to_string(),
+            artifact,
+            gt_tol: v.get("gt_tol")?.as_f64()?,
+            seed: v.get("seed")?.as_usize()? as u64,
+            batches: v.get("batches")?.as_usize()?,
+            created_at: v.get("created_at")?.as_usize()? as u64,
+            rows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_card() -> Scorecard {
+        Scorecard {
+            schema_version: META_SCHEMA_VERSION,
+            model: "checker2-ot".into(),
+            solver: "rk2:n=4".into(),
+            artifact: None,
+            gt_tol: 1e-5,
+            seed: 1234,
+            batches: 4,
+            created_at: 1_753_000_000,
+            rows: vec![
+                ScoreRow {
+                    solver: "rk2:n=2".into(),
+                    nfe: 4,
+                    rmse: 0.5,
+                    psnr: 12.0,
+                    fd: 0.4,
+                    swd: 0.3,
+                    fd_data: f64::NAN,
+                    wall_ms: 1.0,
+                },
+                ScoreRow {
+                    solver: "rk2:n=4".into(),
+                    nfe: 8,
+                    rmse: 0.1,
+                    psnr: 20.0,
+                    fd: 0.1,
+                    swd: 0.05,
+                    fd_data: 0.2,
+                    wall_ms: 2.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trips_with_nan_metrics() {
+        let card = sample_card();
+        let text = card.to_json().to_string_pretty();
+        assert!(text.contains("null"), "NaN fd_data must serialize as null");
+        let back = Scorecard::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.model, card.model);
+        assert_eq!(back.rows.len(), 2);
+        assert!(back.rows[0].fd_data.is_nan());
+        assert_eq!(back.rows[1].fd_data, 0.2);
+        assert_eq!(back.rows[1].nfe, 8);
+        assert_eq!(back.rows[1].rmse, 0.1);
+        assert!(back.artifact.is_none());
+    }
+
+    #[test]
+    fn round_trips_artifact_binding() {
+        let mut card = sample_card();
+        card.artifact = Some((ArtifactKey::new("checker2-ot", Base::Rk2, 4, "full"), 3));
+        card.solver = "bespoke:model=checker2-ot:n=4".into();
+        let text = card.to_json().to_string_compact();
+        let back = Scorecard::from_json(&Value::parse(&text).unwrap()).unwrap();
+        let (key, ver) = back.artifact.unwrap();
+        assert_eq!(ver, 3);
+        assert_eq!(key.n, 4);
+        assert_eq!(key.base, Base::Rk2);
+    }
+
+    #[test]
+    fn rejects_future_schema() {
+        let mut v = sample_card().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("schema_version".into(), Value::Num(999.0));
+        }
+        assert!(Scorecard::from_json(&v).is_err());
+    }
+}

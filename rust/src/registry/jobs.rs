@@ -1,17 +1,23 @@
-//! Asynchronous training jobs: submit Bespoke training through the serving
-//! protocol, run it on background worker threads, and register the outcome
-//! into the [`Registry`] — from where live serving hot-swaps it in (the
-//! coordinator re-resolves `bespoke:model=...` specs per request; see
-//! `coordinator::batcher` and DESIGN.md §8).
+//! Asynchronous background jobs: submit work through the serving protocol,
+//! run it on background worker threads, and publish the outcome into the
+//! [`Registry`] — from where live serving picks it up (trained thetas
+//! hot-swap into routes, eval scorecards rebuild the Pareto frontier; see
+//! DESIGN.md §8–9).
+//!
+//! The machinery is **generic**: [`JobManager<R>`] owns the queue,
+//! coalescing, progress tracking, panic containment and finished-job
+//! pruning for any [`JobRunner`]. Two runners exist today:
+//!
+//! * [`ZooRunner`] — Bespoke training via `bespoke::train` (the
+//!   [`TrainJobManager`] alias, `{"cmd":"train"}`),
+//! * `quality::EvalRunner` — scorecard sweeps via `eval::evaluate_sampler`
+//!   (the `quality::EvalJobManager` alias, `{"cmd":"evaluate"}`).
 //!
 //! Job lifecycle: `queued -> running -> done | failed`. Duplicate
-//! submissions for the same artifact key while a job is queued or running
-//! coalesce onto the existing job (the registry would only race itself
-//! training the same solver twice).
-//!
-//! Execution is abstracted behind [`JobRunner`] so the queueing/coalescing/
-//! registration machinery is testable without compiled HLO artifacts;
-//! [`ZooRunner`] is the real implementation over `bespoke::train`.
+//! submissions for the same coalescing key while a job is queued or running
+//! coalesce onto the existing job (the server would only race itself doing
+//! the same work twice). A panicking runner fails the job instead of
+//! wedging it in `running` forever.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -30,6 +36,12 @@ use crate::runtime::Executable;
 use crate::solvers::theta::{Base, RawTheta};
 
 pub type JobId = u64;
+
+/// The universal per-step progress report. Training reports optimizer
+/// iterations; eval jobs report scorecard cells (with `loss = NaN`). The
+/// trainer's [`TrainProgress`] already carries exactly the fields every job
+/// kind needs, so it doubles as the generic type.
+pub type JobProgress = TrainProgress;
 
 /// Finished (done/failed) jobs retained for `job_status`/`jobs` queries;
 /// older ones are pruned so a long-lived server's job table stays bounded
@@ -53,6 +65,48 @@ impl JobState {
             JobState::Failed => "failed",
         }
     }
+}
+
+/// Pluggable job execution. Implementations describe what a job *is*
+/// (spec), how it *runs* (on a worker thread, reporting progress), and how
+/// its outcome is *published* into the registry; [`JobManager`] supplies
+/// everything else (queueing, coalescing, snapshots, panic containment).
+pub trait JobRunner: Send + Sync {
+    /// What to do: the submitted job description.
+    type Spec: Clone + Send + 'static;
+    /// The raw product of a successful run, before publication.
+    type Output: Send + 'static;
+    /// The published registry record surfaced in job snapshots.
+    type Artifact: Clone + Send + 'static;
+
+    /// Job-kind tag: metrics events are named `<kind>_jobs_submitted` /
+    /// `_coalesced` / `_done` / `_failed`, and logs are prefixed with it.
+    fn kind(&self) -> &'static str;
+
+    /// Coalescing identity: a submission whose key matches a queued or
+    /// running job joins that job instead of enqueueing a duplicate.
+    fn coalesce_key(&self, spec: &Self::Spec) -> String;
+
+    /// Human-readable job description for logs.
+    fn label(&self, spec: &Self::Spec) -> String;
+
+    /// Fail-fast validation at submit time (unknown model, missing
+    /// loss-grad artifact, bad spec).
+    fn validate(&self, _spec: &Self::Spec) -> Result<()> {
+        Ok(())
+    }
+
+    /// Run the job, reporting progress through the callback.
+    fn run(
+        &self,
+        spec: &Self::Spec,
+        progress: &mut dyn FnMut(&JobProgress),
+    ) -> Result<Self::Output>;
+
+    /// Persist a finished run into the registry (register the theta,
+    /// write the scorecard, ...). Runs on the worker thread; an error here
+    /// fails the job like a run error.
+    fn publish(&self, registry: &Registry, out: Self::Output) -> Result<Self::Artifact>;
 }
 
 /// What to train. `iters`/`seed` override the server's `TrainConfig` when
@@ -80,24 +134,18 @@ pub struct TrainedArtifact {
     pub meta: ArtifactMeta,
 }
 
-/// Pluggable job execution.
-pub trait JobRunner: Send + Sync {
-    /// Fail-fast validation at submit time (unknown model, missing
-    /// loss-grad artifact, bad ablation name).
-    fn validate(&self, _spec: &TrainJobSpec) -> Result<()> {
-        Ok(())
-    }
+/// The training-job runner trait object: what [`TrainJobManager`] drives.
+pub type TrainRunner =
+    dyn JobRunner<Spec = TrainJobSpec, Output = TrainedArtifact, Artifact = ArtifactRecord>;
 
-    /// Run the training job, reporting progress through the callback.
-    fn run(
-        &self,
-        spec: &TrainJobSpec,
-        progress: &mut dyn FnMut(&TrainProgress),
-    ) -> Result<TrainedArtifact>;
-}
+/// Background training-job manager (the `{"cmd":"train"}` plane).
+pub type TrainJobManager = JobManager<TrainRunner>;
 
-/// The real runner: loads the model + loss-grad executable from the zoo and
-/// runs paper Algorithm 2 via [`train_with_progress`].
+/// Snapshot of one training job.
+pub type TrainJobSnapshot = JobSnapshot<TrainJobSpec, ArtifactRecord>;
+
+/// The real training runner: loads the model + loss-grad executable from
+/// the zoo and runs paper Algorithm 2 via [`train_with_progress`].
 pub struct ZooRunner {
     zoo: Arc<Zoo>,
     base_cfg: TrainConfig,
@@ -122,6 +170,30 @@ impl ZooRunner {
 }
 
 impl JobRunner for ZooRunner {
+    type Spec = TrainJobSpec;
+    type Output = TrainedArtifact;
+    type Artifact = ArtifactRecord;
+
+    fn kind(&self) -> &'static str {
+        "train"
+    }
+
+    fn coalesce_key(&self, spec: &TrainJobSpec) -> String {
+        // '|' cannot appear in model/ablation names, so the key is
+        // unambiguous even for underscore-heavy model names.
+        format!(
+            "{}|{}|{}|{}",
+            spec.model,
+            spec.base.name(),
+            spec.n,
+            spec.ablation
+        )
+    }
+
+    fn label(&self, spec: &TrainJobSpec) -> String {
+        spec.key().label()
+    }
+
     fn validate(&self, spec: &TrainJobSpec) -> Result<()> {
         // model + exported loss-grad artifact must exist...
         self.zoo
@@ -135,7 +207,7 @@ impl JobRunner for ZooRunner {
     fn run(
         &self,
         spec: &TrainJobSpec,
-        progress: &mut dyn FnMut(&TrainProgress),
+        progress: &mut dyn FnMut(&JobProgress),
     ) -> Result<TrainedArtifact> {
         let model = self.zoo.hlo(&spec.model)?;
         let lg = self
@@ -149,13 +221,24 @@ impl JobRunner for ZooRunner {
         let meta = ArtifactMeta::from_outcome(&spec.model, spec.base, spec.n, &cfg.ablation, &out);
         Ok(TrainedArtifact { theta: out.best, meta })
     }
+
+    fn publish(&self, registry: &Registry, out: TrainedArtifact) -> Result<ArtifactRecord> {
+        let rec = registry.register(&out.theta, &out.meta)?;
+        log_info!(
+            "registered {} v{} val_rmse={:.5}",
+            rec.key.label(),
+            rec.version,
+            rec.val_rmse
+        );
+        Ok(rec)
+    }
 }
 
 /// Point-in-time view of a job for `job_status` / `jobs` responses.
 #[derive(Clone, Debug)]
-pub struct JobSnapshot {
+pub struct JobSnapshot<S: Clone, A: Clone> {
     pub id: JobId,
-    pub spec: TrainJobSpec,
+    pub spec: S,
     pub state: JobState,
     pub iters_done: usize,
     /// 0 until the first progress report arrives.
@@ -165,27 +248,28 @@ pub struct JobSnapshot {
     /// NaN until the first validation pass.
     pub val_rmse: f32,
     pub error: Option<String>,
-    /// The registered artifact, once `Done`.
-    pub artifact: Option<ArtifactRecord>,
+    /// The published registry record, once `Done`.
+    pub artifact: Option<A>,
     /// Seconds spent running so far (final once finished; 0 while queued).
     pub wall_secs: f64,
 }
 
-struct Slot {
-    spec: TrainJobSpec,
+struct Slot<S, A> {
+    spec: S,
+    coalesce_key: String,
     state: JobState,
     iters_done: usize,
     iters_total: usize,
     loss: f32,
     val_rmse: f32,
     error: Option<String>,
-    artifact: Option<ArtifactRecord>,
+    artifact: Option<A>,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
 
-impl Slot {
-    fn snapshot(&self, id: JobId) -> JobSnapshot {
+impl<S: Clone, A: Clone> Slot<S, A> {
+    fn snapshot(&self, id: JobId) -> JobSnapshot<S, A> {
         let wall_secs = match (self.started, self.finished) {
             (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
             (Some(s), None) => s.elapsed().as_secs_f64(),
@@ -206,37 +290,37 @@ impl Slot {
     }
 }
 
-struct JobsState {
-    jobs: BTreeMap<JobId, Slot>,
+struct JobsState<S, A> {
+    jobs: BTreeMap<JobId, Slot<S, A>>,
     pending: VecDeque<JobId>,
     next_id: JobId,
     shutdown: bool,
 }
 
-struct Inner {
-    state: Mutex<JobsState>,
+struct Inner<S, A> {
+    state: Mutex<JobsState<S, A>>,
     ready: Condvar,
 }
 
-/// Background training-job manager: `max_jobs` worker threads drain a FIFO
-/// of submitted jobs; completed artifacts are registered into the shared
-/// [`Registry`].
-pub struct TrainJobManager {
-    inner: Arc<Inner>,
+/// Background job manager: `max_jobs` worker threads drain a FIFO of
+/// submitted jobs; completed outcomes are published into the shared
+/// [`Registry`] through the runner's `publish` hook.
+pub struct JobManager<R: JobRunner + ?Sized> {
+    inner: Arc<Inner<R::Spec, R::Artifact>>,
     registry: Arc<Registry>,
-    runner: Arc<dyn JobRunner>,
+    runner: Arc<R>,
     metrics: Option<Arc<Metrics>>,
 }
 
-impl TrainJobManager {
+impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
     /// Errors if a worker thread cannot be spawned (resource exhaustion) —
     /// a manager with zero workers would queue jobs forever.
     pub fn new(
         registry: Arc<Registry>,
-        runner: Arc<dyn JobRunner>,
+        runner: Arc<R>,
         max_jobs: usize,
         metrics: Option<Arc<Metrics>>,
-    ) -> Result<TrainJobManager> {
+    ) -> Result<JobManager<R>> {
         let inner = Arc::new(Inner {
             state: Mutex::new(JobsState {
                 jobs: BTreeMap::new(),
@@ -251,20 +335,20 @@ impl TrainJobManager {
             let registry = registry.clone();
             let runner = runner.clone();
             let metrics = metrics.clone();
-            // Detached: a worker stuck in a long training run outlives the
-            // manager and still registers its artifact (the registry Arc
-            // keeps the store alive).
+            // Detached: a worker stuck in a long run outlives the manager
+            // and still publishes its outcome (the registry Arc keeps the
+            // store alive).
             let spawned = std::thread::Builder::new()
-                .name(format!("train-job-{wi}"))
+                .name(format!("{}-job-{wi}", runner.kind()))
                 .spawn(move || worker_loop(worker_inner, registry, runner, metrics));
             if let Err(e) = spawned {
                 // Tell already-spawned workers to exit before bailing.
                 inner.state.lock().unwrap().shutdown = true;
                 inner.ready.notify_all();
-                return Err(anyhow::Error::from(e).context("spawning training-job worker"));
+                return Err(anyhow::Error::from(e).context("spawning job worker"));
             }
         }
-        Ok(TrainJobManager { inner, registry, runner, metrics })
+        Ok(JobManager { inner, registry, runner, metrics })
     }
 
     pub fn registry(&self) -> &Arc<Registry> {
@@ -272,17 +356,17 @@ impl TrainJobManager {
     }
 
     /// Submit a job. Returns `(job_id, coalesced)`: when a job for the same
-    /// artifact key is already queued or running, the existing job id is
+    /// coalescing key is already queued or running, the existing job id is
     /// returned with `coalesced = true` and nothing new is enqueued.
-    pub fn submit(&self, spec: TrainJobSpec) -> Result<(JobId, bool)> {
+    pub fn submit(&self, spec: R::Spec) -> Result<(JobId, bool)> {
         self.runner.validate(&spec)?;
-        let key = spec.key();
+        let key = self.runner.coalesce_key(&spec);
         let mut st = self.inner.state.lock().unwrap();
         let in_flight = st.jobs.iter().find(|(_, s)| {
-            s.spec.key() == key && matches!(s.state, JobState::Queued | JobState::Running)
+            s.coalesce_key == key && matches!(s.state, JobState::Queued | JobState::Running)
         });
         if let Some((&id, _)) = in_flight {
-            self.record("train_jobs_coalesced");
+            self.record("coalesced");
             return Ok((id, true));
         }
         let id = st.next_id;
@@ -291,6 +375,7 @@ impl TrainJobManager {
             id,
             Slot {
                 spec,
+                coalesce_key: key,
                 state: JobState::Queued,
                 iters_done: 0,
                 iters_total: 0,
@@ -305,41 +390,42 @@ impl TrainJobManager {
         st.pending.push_back(id);
         drop(st);
         self.inner.ready.notify_one();
-        self.record("train_jobs_submitted");
+        self.record("submitted");
         Ok((id, false))
     }
 
-    pub fn status(&self, id: JobId) -> Option<JobSnapshot> {
+    pub fn status(&self, id: JobId) -> Option<JobSnapshot<R::Spec, R::Artifact>> {
         let st = self.inner.state.lock().unwrap();
         st.jobs.get(&id).map(|s| s.snapshot(id))
     }
 
     /// All jobs, oldest first.
-    pub fn jobs(&self) -> Vec<JobSnapshot> {
+    pub fn jobs(&self) -> Vec<JobSnapshot<R::Spec, R::Artifact>> {
         let st = self.inner.state.lock().unwrap();
         st.jobs.iter().map(|(&id, s)| s.snapshot(id)).collect()
     }
 
-    fn record(&self, event: &str) {
+    fn record(&self, suffix: &str) {
         if let Some(m) = &self.metrics {
-            m.record_event(event);
+            m.record_event(&format!("{}_jobs_{suffix}", self.runner.kind()));
         }
     }
 }
 
-impl Drop for TrainJobManager {
+impl<R: JobRunner + ?Sized> Drop for JobManager<R> {
     fn drop(&mut self) {
         self.inner.state.lock().unwrap().shutdown = true;
         self.inner.ready.notify_all();
     }
 }
 
-fn worker_loop(
-    inner: Arc<Inner>,
+fn worker_loop<R: JobRunner + ?Sized>(
+    inner: Arc<Inner<R::Spec, R::Artifact>>,
     registry: Arc<Registry>,
-    runner: Arc<dyn JobRunner>,
+    runner: Arc<R>,
     metrics: Option<Arc<Metrics>>,
 ) {
+    let kind = runner.kind();
     loop {
         // Block until a job is pending (or shutdown).
         let (id, spec) = {
@@ -357,28 +443,29 @@ fn worker_loop(
                 st = inner.ready.wait(st).unwrap();
             }
         };
-        log_info!("[job {id}] training {}", spec.key().label());
+        log_info!("[{kind} job {id}] {}", runner.label(&spec));
 
-        // Run outside the lock; a panicking runner fails the job instead of
-        // wedging it in `running` forever.
+        // Run + publish outside the lock; a panicking runner fails the job
+        // instead of wedging it in `running` forever.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            runner.run(&spec, &mut |p: &TrainProgress| {
-                let mut st = inner.state.lock().unwrap();
-                if let Some(s) = st.jobs.get_mut(&id) {
-                    s.iters_done = p.iter;
-                    s.iters_total = p.iters_total;
-                    s.loss = p.loss;
-                    if !p.val_rmse.is_nan() {
-                        s.val_rmse = p.val_rmse;
+            runner
+                .run(&spec, &mut |p: &JobProgress| {
+                    let mut st = inner.state.lock().unwrap();
+                    if let Some(s) = st.jobs.get_mut(&id) {
+                        s.iters_done = p.iter;
+                        s.iters_total = p.iters_total;
+                        s.loss = p.loss;
+                        if !p.val_rmse.is_nan() {
+                            s.val_rmse = p.val_rmse;
+                        }
                     }
-                }
-            })
+                })
+                .and_then(|out| runner.publish(&registry, out))
         }));
-        let registered = match run {
-            Ok(Ok(out)) => registry.register(&out.theta, &out.meta),
-            Ok(Err(e)) => Err(e),
+        let published = match run {
+            Ok(result) => result,
             Err(panic) => Err(anyhow::anyhow!(
-                "training job panicked: {}",
+                "{kind} job panicked: {}",
                 panic_message(&panic)
             )),
         };
@@ -387,26 +474,21 @@ fn worker_loop(
         prune_finished(&mut st);
         if let Some(slot) = st.jobs.get_mut(&id) {
             slot.finished = Some(Instant::now());
-            match registered {
+            match published {
                 Ok(rec) => {
-                    log_info!(
-                        "[job {id}] done: {} v{} val_rmse={:.5}",
-                        rec.key.label(),
-                        rec.version,
-                        rec.val_rmse
-                    );
+                    log_info!("[{kind} job {id}] done");
                     slot.state = JobState::Done;
                     slot.artifact = Some(rec);
                     if let Some(m) = &metrics {
-                        m.record_event("train_jobs_done");
+                        m.record_event(&format!("{kind}_jobs_done"));
                     }
                 }
                 Err(e) => {
-                    log_info!("[job {id}] failed: {e:#}");
+                    log_info!("[{kind} job {id}] failed: {e:#}");
                     slot.state = JobState::Failed;
                     slot.error = Some(format!("{e:#}"));
                     if let Some(m) = &metrics {
-                        m.record_event("train_jobs_failed");
+                        m.record_event(&format!("{kind}_jobs_failed"));
                     }
                 }
             }
@@ -418,7 +500,7 @@ fn worker_loop(
 /// iterates in id order, so the first finished entries are the oldest).
 /// In-flight jobs are never pruned; the job about to be finalized by the
 /// caller still counts as in-flight here and survives.
-fn prune_finished(st: &mut JobsState) {
+fn prune_finished<S, A>(st: &mut JobsState<S, A>) {
     let finished: Vec<JobId> = st
         .jobs
         .iter()

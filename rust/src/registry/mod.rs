@@ -12,11 +12,15 @@
 //!   the last-k versions plus the best.
 //! * [`meta::ArtifactMeta`] — the NaN-safe training-outcome record, also
 //!   written as a `*.meta.json` sidecar by `repro train-bespoke`.
-//! * [`jobs::TrainJobManager`] — background worker threads running
-//!   `bespoke::train` with progress reporting; completed artifacts are
-//!   registered and hot-swapped into live serving (the coordinator
-//!   re-resolves `bespoke:model=M:n=8` specs against the registry per
-//!   request and retires stale routes).
+//! * [`jobs::JobManager`] — generic background-job machinery (queue,
+//!   coalescing, progress, panic containment) parameterized by a
+//!   [`jobs::JobRunner`]. [`jobs::TrainJobManager`] runs `bespoke::train`
+//!   (completed artifacts are registered and hot-swapped into live
+//!   serving); `quality::EvalJobManager` runs scorecard sweeps
+//!   (DESIGN.md §9).
+//! * [`store::EvalRecord`] — manifest-tracked, hash-checked scorecard
+//!   files (`v<k>.eval.json`) persisted beside the thetas; their content
+//!   codec lives in `crate::quality`.
 //!
 //! The `solvers` module never depends on this one: registry-form specs are
 //! resolved to `bespoke:path=...` by [`store::Registry::resolve_spec`]
@@ -29,8 +33,8 @@ pub mod store;
 
 pub use hash::{content_hash, fnv1a64};
 pub use jobs::{
-    JobId, JobRunner, JobSnapshot, JobState, TrainedArtifact, TrainJobManager, TrainJobSpec,
-    ZooRunner,
+    JobId, JobManager, JobProgress, JobRunner, JobSnapshot, JobState, TrainedArtifact,
+    TrainJobManager, TrainJobSnapshot, TrainJobSpec, TrainRunner, ZooRunner,
 };
 pub use meta::{sidecar_path, ArtifactMeta, META_SCHEMA_VERSION};
-pub use store::{ArtifactKey, ArtifactRecord, Registry};
+pub use store::{ArtifactKey, ArtifactRecord, EvalRecord, ManifestStamp, Registry};

@@ -8,6 +8,9 @@
 //! <root>/artifacts/<model>_<base>_n<n>_<ablation>/
 //!     v<version>.theta.json                 the RawTheta checkpoint
 //!     v<version>.meta.json                  ArtifactMeta sidecar
+//!     v<version>.eval.json                  quality scorecard (DESIGN.md §9)
+//! <root>/evals/<model>/<solver-dir>/
+//!     v<k>.eval.json                        baseline-solver scorecards
 //! ```
 //!
 //! The manifest is the source of truth: a flat list of [`ArtifactRecord`]s
@@ -145,16 +148,104 @@ impl ArtifactRecord {
     }
 }
 
+/// One registered eval scorecard, as recorded in the manifest (`evals`
+/// array). A scorecard is the persisted output of one `evaluate` sweep:
+/// quality-vs-NFE metric rows for a (model, solver template) cell, stored
+/// beside the thetas and hash-checked like them (DESIGN.md §9). The
+/// scorecard *content* codec lives in `quality::scorecard`; the store only
+/// knows bytes + integrity.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub model: String,
+    /// The solver template the sweep evaluated (canonical spec string).
+    pub solver: String,
+    /// For artifact-bound scorecards: the bespoke artifact lineage +
+    /// version the sweep measured (the card lives beside that theta).
+    pub artifact: Option<(ArtifactKey, u64)>,
+    /// Scorecard version (equals the artifact version for artifact-bound
+    /// cards; per-(model, solver) monotonic for baseline sweeps).
+    pub version: u64,
+    /// Scorecard path, relative to the registry root.
+    pub file: String,
+    /// Tagged content hash of the scorecard file bytes.
+    pub content_hash: String,
+    pub created_at: u64,
+    pub schema_version: u64,
+}
+
+impl EvalRecord {
+    /// Also the wire form (`eval_status` scorecard field): one serializer
+    /// for manifest and protocol, so the two can't drift.
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("model", Value::Str(self.model.clone())),
+            ("solver", Value::Str(self.solver.clone())),
+            ("version", Value::Num(self.version as f64)),
+            ("file", Value::Str(self.file.clone())),
+            ("content_hash", Value::Str(self.content_hash.clone())),
+            ("created_at", Value::Num(self.created_at as f64)),
+            ("schema_version", Value::Num(self.schema_version as f64)),
+        ];
+        if let Some((key, ver)) = &self.artifact {
+            fields.push((
+                "artifact",
+                Value::obj(vec![
+                    ("model", Value::Str(key.model.clone())),
+                    ("base", Value::Str(key.base.name().into())),
+                    ("n", Value::Num(key.n as f64)),
+                    ("ablation", Value::Str(key.ablation.clone())),
+                    ("version", Value::Num(*ver as f64)),
+                ]),
+            ));
+        }
+        Value::obj(fields)
+    }
+
+    fn from_json(v: &Value) -> Result<EvalRecord> {
+        let schema_version = v.get("schema_version")?.as_usize()? as u64;
+        if schema_version > META_SCHEMA_VERSION {
+            bail!(
+                "eval record schema_version {schema_version} is newer than \
+                 this binary understands ({META_SCHEMA_VERSION})"
+            );
+        }
+        let artifact = match v.get_opt("artifact") {
+            None => None,
+            Some(av) => Some((
+                ArtifactKey {
+                    model: av.get("model")?.as_str()?.to_string(),
+                    base: Base::parse(av.get("base")?.as_str()?)?,
+                    n: av.get("n")?.as_usize()?,
+                    ablation: av.get("ablation")?.as_str()?.to_string(),
+                },
+                av.get("version")?.as_usize()? as u64,
+            )),
+        };
+        Ok(EvalRecord {
+            model: v.get("model")?.as_str()?.to_string(),
+            solver: v.get("solver")?.as_str()?.to_string(),
+            artifact,
+            version: v.get("version")?.as_usize()? as u64,
+            file: v.get("file")?.as_str()?.to_string(),
+            content_hash: v.get("content_hash")?.as_str()?.to_string(),
+            created_at: v.get("created_at")?.as_usize()? as u64,
+            schema_version,
+        })
+    }
+}
+
 /// On-disk identity of a manifest read: (mtime, byte length). Length is
 /// included so a rewrite landing within one mtime granule (coarse
 /// filesystems: 1s) is still detected unless it is also byte-identical in
-/// size — in which case it is almost certainly the same content.
-type ManifestStamp = Option<(std::time::SystemTime, u64)>;
+/// size — in which case it is almost certainly the same content. Public so
+/// the quality-frontier cache can key its invalidation on it.
+pub type ManifestStamp = Option<(std::time::SystemTime, u64)>;
 
 /// In-memory view of the manifest plus the stamp it was read at (the
 /// staleness signal for cross-process refresh).
 struct StoreState {
     records: Vec<ArtifactRecord>,
+    evals: Vec<EvalRecord>,
     manifest_stamp: ManifestStamp,
 }
 
@@ -174,8 +265,10 @@ pub struct Registry {
     state: Mutex<StoreState>,
 }
 
-/// Parse the manifest file (which must exist) into records.
-fn parse_manifest(path: &Path) -> Result<Vec<ArtifactRecord>> {
+/// Parse the manifest file (which must exist) into records. The `evals`
+/// array is optional: pre-quality manifests (and fixture stores) simply
+/// have no scorecards yet.
+fn parse_manifest(path: &Path) -> Result<(Vec<ArtifactRecord>, Vec<EvalRecord>)> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading registry manifest {}", path.display()))?;
     let v = Value::parse(&text).context("parsing registry manifest")?;
@@ -190,12 +283,28 @@ fn parse_manifest(path: &Path) -> Result<Vec<ArtifactRecord>> {
     for rv in v.get("artifacts")?.as_arr()? {
         out.push(ArtifactRecord::from_json(rv).context("parsing artifact record")?);
     }
-    Ok(out)
+    let mut evals = Vec::new();
+    if let Some(ev) = v.get_opt("evals") {
+        for rv in ev.as_arr()? {
+            evals.push(EvalRecord::from_json(rv).context("parsing eval record")?);
+        }
+    }
+    Ok((out, evals))
 }
 
 fn manifest_stamp(path: &Path) -> ManifestStamp {
     let meta = std::fs::metadata(path).ok()?;
     Some((meta.modified().ok()?, meta.len()))
+}
+
+/// Filesystem-safe directory component for baseline scorecard paths:
+/// alphanumerics, '.', '_' and '-' pass through, everything else (spec
+/// separators ':' and '=', path chars, ...) maps to '-'. Deterministic, so
+/// the same (model, solver) cell always lands in the same directory.
+fn sanitize_component(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '-' })
+        .collect()
 }
 
 impl Registry {
@@ -205,14 +314,14 @@ impl Registry {
     /// error — a corrupt store must not silently read as empty.
     pub fn open(root: &Path) -> Result<Registry> {
         let manifest = root.join("manifest.json");
-        let (records, stamp) = if manifest.exists() {
+        let ((records, evals), stamp) = if manifest.exists() {
             (parse_manifest(&manifest)?, manifest_stamp(&manifest))
         } else {
-            (Vec::new(), None)
+            ((Vec::new(), Vec::new()), None)
         };
         Ok(Registry {
             root: root.to_path_buf(),
-            state: Mutex::new(StoreState { records, manifest_stamp: stamp }),
+            state: Mutex::new(StoreState { records, evals, manifest_stamp: stamp }),
         })
     }
 
@@ -230,9 +339,25 @@ impl Registry {
         if stamp == st.manifest_stamp {
             return Ok(());
         }
-        st.records = if path.exists() { parse_manifest(&path)? } else { Vec::new() };
+        let (records, evals) = if path.exists() {
+            parse_manifest(&path)?
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        st.records = records;
+        st.evals = evals;
         st.manifest_stamp = stamp;
         Ok(())
+    }
+
+    /// The manifest's current on-disk stamp (refreshing the in-memory view
+    /// first). This is the staleness signal the quality-frontier cache
+    /// keys on: any registration — theta or scorecard, this process or
+    /// another — moves the stamp.
+    pub fn current_stamp(&self) -> ManifestStamp {
+        let mut st = self.state.lock().unwrap();
+        let _ = self.refresh(&mut st); // a stale stamp just means a rebuild
+        st.manifest_stamp
     }
 
     /// All records, sorted by (key, version).
@@ -336,6 +461,16 @@ impl Registry {
             .cloned()
     }
 
+    /// The record for an exact (key, version), if registered.
+    pub fn find(&self, key: &ArtifactKey, version: u64) -> Option<ArtifactRecord> {
+        let mut st = self.state.lock().unwrap();
+        let _ = self.refresh(&mut st); // serve the previous view on error
+        st.records
+            .iter()
+            .find(|r| r.key == *key && r.version == version)
+            .cloned()
+    }
+
     /// Resolve a registry-form spec (`bespoke:model=M:n=8[:base=..][:ablation=..]`)
     /// to the concrete checkpoint form (`bespoke:path=...`) of its current
     /// best artifact. Non-registry specs pass through unchanged.
@@ -397,12 +532,32 @@ impl Registry {
     /// Garbage-collect old versions: for every key, keep the `keep_last_k`
     /// newest versions plus (always) the best-RMSE one. Returns the removed
     /// records; their theta/meta files are deleted best-effort.
+    ///
+    /// Equivalent to [`Registry::gc_with_pins`] with no pins — callers that
+    /// can compute the current Pareto frontier (CLI, quality subsystem)
+    /// should pass its referenced versions so budget routing never loses a
+    /// checkpoint it would serve.
     pub fn gc(&self, keep_last_k: usize) -> Result<Vec<ArtifactRecord>> {
+        self.gc_with_pins(keep_last_k, &[])
+    }
+
+    /// [`Registry::gc`], additionally keeping every `(key, version)` in
+    /// `pins` — the versions referenced by the current Pareto frontier
+    /// (see `quality::frontier_pins`). Scorecards bound to a dropped
+    /// artifact version are dropped with it (record + file).
+    pub fn gc_with_pins(
+        &self,
+        keep_last_k: usize,
+        pins: &[(ArtifactKey, u64)],
+    ) -> Result<Vec<ArtifactRecord>> {
         let mut st = self.state.lock().unwrap();
         self.refresh(&mut st)?;
         let mut keys: Vec<ArtifactKey> = st.records.iter().map(|r| r.key.clone()).collect();
         keys.sort();
         keys.dedup();
+
+        let pinned =
+            |rec: &ArtifactRecord| pins.iter().any(|(k, v)| *k == rec.key && *v == rec.version);
 
         let mut keep: Vec<ArtifactRecord> = Vec::new();
         let mut dropped: Vec<ArtifactRecord> = Vec::new();
@@ -420,7 +575,7 @@ impl Registry {
                 })
                 .map(|r| r.version);
             for (i, rec) in versions.into_iter().enumerate() {
-                if i < keep_last_k || Some(rec.version) == best_version {
+                if i < keep_last_k || Some(rec.version) == best_version || pinned(&rec) {
                     keep.push(rec);
                 } else {
                     dropped.push(rec);
@@ -430,13 +585,155 @@ impl Registry {
         if dropped.is_empty() {
             return Ok(dropped);
         }
+        // A scorecard for a dropped artifact version describes a checkpoint
+        // that no longer exists: drop it from the manifest and disk too.
+        let (kept_evals, dropped_evals): (Vec<EvalRecord>, Vec<EvalRecord>) =
+            st.evals.iter().cloned().partition(|e| match &e.artifact {
+                Some((key, ver)) => !dropped
+                    .iter()
+                    .any(|d| d.key == *key && d.version == *ver),
+                None => true,
+            });
         st.records = keep;
+        st.evals = kept_evals;
         self.save_manifest(&mut st)?;
         for rec in &dropped {
             let _ = std::fs::remove_file(self.root.join(&rec.file));
             let _ = std::fs::remove_file(self.root.join(&rec.meta_file));
         }
+        for e in &dropped_evals {
+            let _ = std::fs::remove_file(self.root.join(&e.file));
+        }
         Ok(dropped)
+    }
+
+    // ---- eval scorecards -------------------------------------------------
+
+    /// All eval records, sorted by (model, solver, artifact version,
+    /// scorecard version).
+    pub fn eval_records(&self) -> Vec<EvalRecord> {
+        let mut st = self.state.lock().unwrap();
+        let _ = self.refresh(&mut st); // serve the previous view on error
+        let mut out = st.evals.clone();
+        out.sort_by(|a, b| {
+            let av = a.artifact.as_ref().map(|(_, v)| *v).unwrap_or(0);
+            let bv = b.artifact.as_ref().map(|(_, v)| *v).unwrap_or(0);
+            a.model
+                .cmp(&b.model)
+                .then(a.solver.cmp(&b.solver))
+                .then(av.cmp(&bv))
+                .then(a.version.cmp(&b.version))
+        });
+        out
+    }
+
+    /// Register a scorecard's serialized bytes for a (model, solver
+    /// template) cell. Artifact-bound cards (`artifact = Some((key, v))`)
+    /// are stored beside that theta as `v<v>.eval.json` and require the
+    /// artifact record to exist; baseline cards go under
+    /// `evals/<model>/<solver-dir>/v<k>.eval.json` with a per-cell
+    /// monotonic version. Re-registering the same cell replaces the old
+    /// record (and, for baselines, deletes the superseded file).
+    pub fn register_eval(
+        &self,
+        model: &str,
+        solver: &str,
+        artifact: Option<(&ArtifactKey, u64)>,
+        bytes: &str,
+    ) -> Result<EvalRecord> {
+        let mut st = self.state.lock().unwrap();
+        self.refresh(&mut st)?;
+
+        let (file, version, binding) = match artifact {
+            Some((key, ver)) => {
+                if !st
+                    .records
+                    .iter()
+                    .any(|r| r.key == *key && r.version == ver)
+                {
+                    bail!(
+                        "cannot register scorecard for {} v{ver}: no such \
+                         artifact in the registry",
+                        key.label()
+                    );
+                }
+                let file = PathBuf::from("artifacts")
+                    .join(key.dir_name())
+                    .join(format!("v{ver}.eval.json"));
+                (file, ver, Some((key.clone(), ver)))
+            }
+            None => {
+                let version = st
+                    .evals
+                    .iter()
+                    .filter(|e| e.model == model && e.solver == solver && e.artifact.is_none())
+                    .map(|e| e.version)
+                    .max()
+                    .unwrap_or(0)
+                    + 1;
+                let file = PathBuf::from("evals")
+                    .join(sanitize_component(model))
+                    .join(sanitize_component(solver))
+                    .join(format!("v{version}.eval.json"));
+                (file, version, None)
+            }
+        };
+
+        let abs = self.root.join(&file);
+        if let Some(parent) = abs.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        std::fs::write(&abs, bytes).with_context(|| format!("writing {}", abs.display()))?;
+
+        let rec = EvalRecord {
+            model: model.to_string(),
+            solver: solver.to_string(),
+            artifact: binding,
+            version,
+            file: file.to_string_lossy().into_owned(),
+            content_hash: content_hash(bytes.as_bytes()),
+            created_at: super::meta::unix_now(),
+            schema_version: META_SCHEMA_VERSION,
+        };
+        // Replace any previous record for the same cell: same (model,
+        // solver, artifact binding) for bound cards, same (model, solver)
+        // for baselines (a cell has one live scorecard).
+        let (kept, replaced): (Vec<EvalRecord>, Vec<EvalRecord>) =
+            st.evals.iter().cloned().partition(|e| {
+                !(e.model == rec.model
+                    && e.solver == rec.solver
+                    && e.artifact.as_ref().map(|(k, v)| (k.clone(), *v))
+                        == rec.artifact.as_ref().map(|(k, v)| (k.clone(), *v)))
+            });
+        st.evals = kept;
+        st.evals.push(rec.clone());
+        self.save_manifest(&mut st)?;
+        for old in &replaced {
+            if old.file != rec.file {
+                let _ = std::fs::remove_file(self.root.join(&old.file));
+            }
+        }
+        Ok(rec)
+    }
+
+    /// Load a scorecard's bytes with the same integrity discipline as
+    /// thetas: the file must hash to the recorded content hash.
+    pub fn load_eval_bytes(&self, rec: &EvalRecord) -> Result<String> {
+        let path = self.root.join(&rec.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading scorecard {}", path.display()))?;
+        let got = content_hash(&bytes);
+        if got != rec.content_hash {
+            bail!(
+                "scorecard {} v{} failed integrity check: manifest says {}, \
+                 file hashes to {got} (truncated or corrupted scorecard)",
+                rec.file,
+                rec.version,
+                rec.content_hash
+            );
+        }
+        String::from_utf8(bytes).context("scorecard is not UTF-8")
     }
 
     /// Atomic manifest rewrite: temp file in the same directory + rename,
@@ -453,6 +750,10 @@ impl Registry {
             (
                 "artifacts",
                 Value::Arr(st.records.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "evals",
+                Value::Arr(st.evals.iter().map(|r| r.to_json()).collect()),
             ),
         ]);
         let path = self.root.join("manifest.json");

@@ -33,6 +33,7 @@ fn req(n_samples: usize, seed: u64) -> SampleRequest {
         n_samples,
         seed,
         return_samples: true,
+        budget: None,
     }
 }
 

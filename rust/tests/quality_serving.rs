@@ -1,0 +1,201 @@
+//! Integration: the quality plane end to end over real TCP — `train` a
+//! bespoke solver, `evaluate` the registered artifact into a scorecard,
+//! watch the `frontier` surface it, then `sample` with a budget and verify
+//! the routed output is bitwise identical to the equivalent explicit
+//! `bespoke:path=...` request.
+//!
+//! Needs compiled HLO artifacts (`make artifacts`), like the other
+//! coordinator integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bespoke_flow::config::{EvalConfig, QualityConfig, ServeConfig, TrainConfig};
+use bespoke_flow::coordinator::{serve, Coordinator, ServerState};
+use bespoke_flow::json::Value;
+use bespoke_flow::models::Zoo;
+use bespoke_flow::quality::{EvalRunner, EvalRunnerDyn};
+use bespoke_flow::registry::{JobManager, Registry, TrainJobManager, ZooRunner};
+
+fn temp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bespoke_qualserve_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn server_state(root: &Path) -> (ServerState, Arc<Registry>) {
+    let zoo = Arc::new(Zoo::open_default().expect("run `make artifacts`"));
+    let registry = Arc::new(Registry::open(root).unwrap());
+    let cfg = ServeConfig { max_batch: 256, max_wait_ms: 1, ..ServeConfig::default() };
+    let coord = Arc::new(Coordinator::with_registry(zoo.clone(), cfg, registry.clone()));
+    let train_cfg = TrainConfig {
+        iters: 30,
+        pool_batches: 2,
+        val_batches: 1,
+        val_every: 10,
+        ..TrainConfig::default()
+    };
+    let jobs = Arc::new(
+        TrainJobManager::new(
+            registry.clone(),
+            Arc::new(ZooRunner::new(zoo.clone(), train_cfg)),
+            1,
+            Some(coord.metrics.clone()),
+        )
+        .unwrap(),
+    );
+    let eval_runner = Arc::new(EvalRunner::new(
+        zoo,
+        registry.clone(),
+        EvalConfig { gt_tol: 1e-4, seed: 5, ..EvalConfig::default() },
+        QualityConfig { eval_batches: 2, ..QualityConfig::default() },
+    ));
+    let eval_jobs = Arc::new(
+        JobManager::new(
+            registry.clone(),
+            eval_runner as Arc<EvalRunnerDyn>,
+            1,
+            Some(coord.metrics.clone()),
+        )
+        .unwrap(),
+    );
+    (
+        ServerState::with_jobs(coord, jobs).with_eval_jobs(eval_jobs),
+        registry,
+    )
+}
+
+#[test]
+fn train_evaluate_frontier_then_budget_routed_sampling_over_tcp() {
+    let root = temp_root("e2e");
+    let (state, _registry) = server_state(&root);
+    let metrics = state.coord.metrics.clone();
+    let addr = "127.0.0.1:7394";
+    {
+        let state = state.clone();
+        std::thread::spawn(move || serve(state, addr));
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |line: &str| -> Value {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut out = String::new();
+        reader.read_line(&mut out).unwrap();
+        Value::parse(&out).unwrap()
+    };
+
+    // before anything is measured, budgets are cleanly unsatisfiable
+    let v = ask(
+        r#"{"cmd":"sample","model":"checker2-ot","budget":{"nfe_max":8},"n_samples":2}"#,
+    );
+    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+
+    // train -> job completes -> artifact v1 registered
+    let v = ask(r#"{"cmd":"train","model":"checker2-ot","base":"rk2","n":4,"iters":30,"seed":11}"#);
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "train rejected: {v:?}");
+    let train_id = v.get("job_id").unwrap().as_usize().unwrap();
+    let mut artifact_file = String::new();
+    for i in 0.. {
+        assert!(i < 1200, "training job did not finish in time");
+        let s = ask(&format!(r#"{{"cmd":"job_status","job_id":{train_id}}}"#));
+        match s.get("state").unwrap().as_str().unwrap() {
+            "done" => {
+                artifact_file = s
+                    .get("artifact")
+                    .unwrap()
+                    .get("file")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string();
+                break;
+            }
+            "failed" => panic!("training job failed: {s:?}"),
+            _ => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+
+    // evaluate the registered artifact into a scorecard
+    let v = ask(
+        r#"{"cmd":"evaluate","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4"}"#,
+    );
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "evaluate rejected: {v:?}");
+    let eval_id = v.get("job_id").unwrap().as_usize().unwrap();
+    for i in 0.. {
+        assert!(i < 1200, "eval job did not finish in time");
+        let s = ask(&format!(r#"{{"cmd":"eval_status","job_id":{eval_id}}}"#));
+        assert!(s.get("ok").unwrap().as_bool().unwrap(), "eval_status failed: {s:?}");
+        match s.get("state").unwrap().as_str().unwrap() {
+            "done" => {
+                let card = s.get("scorecard").unwrap();
+                // the scorecard is bound to artifact v1, beside its theta
+                assert_eq!(
+                    card.get("artifact").unwrap().get("version").unwrap().as_usize().unwrap(),
+                    1
+                );
+                assert!(card
+                    .get("file")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .ends_with("v1.eval.json"));
+                break;
+            }
+            "failed" => panic!("eval job failed: {s:?}"),
+            _ => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+
+    // the frontier shows the artifact (nfe 8 = rk2 with n=4)
+    let f = ask(r#"{"cmd":"frontier","model":"checker2-ot"}"#);
+    assert!(f.get("ok").unwrap().as_bool().unwrap(), "{f:?}");
+    let points = f.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 1, "one measured artifact -> one point: {f:?}");
+    assert_eq!(points[0].get("nfe").unwrap().as_usize().unwrap(), 8);
+    assert_eq!(
+        points[0].get("artifact").unwrap().get("version").unwrap().as_usize().unwrap(),
+        1
+    );
+    let routed_spec = points[0].get("solver").unwrap().as_str().unwrap().to_string();
+    assert!(routed_spec.starts_with("bespoke:path="), "{routed_spec}");
+
+    // budget-routed sampling == explicit-path sampling, bitwise
+    let via_budget = ask(
+        r#"{"cmd":"sample","model":"checker2-ot","budget":{"nfe_max":8},"n_samples":5,"seed":7,"return_samples":true}"#,
+    );
+    assert!(via_budget.get("ok").unwrap().as_bool().unwrap(), "budget sample failed: {via_budget:?}");
+    // rk2-based bespoke with n=4 spends 8 evals per executable batch
+    let nfe = via_budget.get("nfe").unwrap().as_usize().unwrap();
+    assert!(nfe >= 8 && nfe % 8 == 0, "unexpected nfe {nfe}");
+    let theta_path = root.join(&artifact_file);
+    assert!(theta_path.exists());
+    let via_path = ask(&format!(
+        r#"{{"cmd":"sample","model":"checker2-ot","solver":"bespoke:path={}","n_samples":5,"seed":7,"return_samples":true}}"#,
+        theta_path.display()
+    ));
+    assert!(via_path.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(
+        via_budget.get("samples").unwrap(),
+        via_path.get("samples").unwrap(),
+        "budget-routed sampling must match the explicit checkpoint bitwise"
+    );
+    assert!(metrics.event_count("budget_routed") >= 1);
+    assert!(metrics.event_count("eval_jobs_done") >= 1);
+
+    // a quality budget the artifact cannot meet is rejected with the
+    // unsatisfiable event, not a silent fallback
+    let v = ask(
+        r#"{"cmd":"sample","model":"checker2-ot","budget":{"quality":"rmse<=0.0000000001"},"n_samples":2}"#,
+    );
+    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+    assert!(metrics.event_count("budget_unsatisfiable") >= 2);
+
+    std::fs::remove_dir_all(&root).ok();
+}

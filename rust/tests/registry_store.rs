@@ -150,6 +150,70 @@ fn gc_keeps_last_k_plus_best() {
 }
 
 #[test]
+fn gc_pins_frontier_referenced_versions() {
+    use bespoke_flow::quality::{frontier_pins, register_scorecard, ScoreRow, Scorecard};
+
+    let root = temp_root("gc_pins");
+    let reg = Registry::open(&root).unwrap();
+    let th = RawTheta::identity(Base::Rk2, 4);
+    // v1..v4; v2 is the best (lowest recorded val RMSE)
+    for rmse in [0.5, 0.05, 0.4, 0.3] {
+        reg.register(&th, &meta("m", Base::Rk2, 4, "full", rmse)).unwrap();
+    }
+    let key = reg.list()[0].key.clone();
+
+    let card = |ver: u64, nfe: u64, rmse: f32| Scorecard {
+        schema_version: META_SCHEMA_VERSION,
+        model: "m".into(),
+        solver: "bespoke:model=m:n=4".into(),
+        artifact: Some((key.clone(), ver)),
+        gt_tol: 1e-5,
+        seed: 1,
+        batches: 2,
+        created_at: 1,
+        rows: vec![ScoreRow {
+            solver: format!("bespoke:path=artifacts/{}/v{ver}.theta.json", key.dir_name()),
+            nfe,
+            rmse,
+            psnr: 10.0,
+            fd: 0.1,
+            swd: 0.1,
+            fd_data: f64::NAN,
+            wall_ms: 1.0,
+        }],
+    };
+    // v1 measures best-at-its-NFE -> on the frontier; v3's card is
+    // dominated by v1 (same NFE, worse RMSE) -> off the frontier.
+    let rec1 = register_scorecard(&reg, &card(1, 8, 0.01)).unwrap();
+    let rec3 = register_scorecard(&reg, &card(3, 8, 0.2)).unwrap();
+    assert_eq!(reg.eval_records().len(), 2);
+
+    let pins = frontier_pins(&reg).unwrap();
+    assert_eq!(pins, vec![(key.clone(), 1)], "only v1 is on the frontier");
+
+    // keep-last-1 would normally drop v1 and v3 (v4 = newest, v2 = best);
+    // the frontier pin keeps v1.
+    let removed = reg.gc_with_pins(1, &pins).unwrap();
+    let mut gone: Vec<u64> = removed.iter().map(|r| r.version).collect();
+    gone.sort();
+    assert_eq!(gone, vec![3], "v4 last, v2 best, v1 pinned -> only v3 drops");
+
+    let reg2 = Registry::open(&root).unwrap();
+    let versions: Vec<u64> = reg2.list().iter().map(|r| r.version).collect();
+    assert_eq!(versions, vec![1, 2, 4]);
+    // the pinned version still loads and its scorecard survived...
+    reg2.load_theta(&reg2.list()[0]).unwrap();
+    let evals = reg2.eval_records();
+    assert_eq!(evals.len(), 1);
+    assert_eq!(evals[0].artifact.as_ref().unwrap().1, 1);
+    assert!(root.join(&rec1.file).exists());
+    // ...while the dropped version's scorecard went with it (record + file)
+    assert!(!root.join(&rec3.file).exists());
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
 fn resolve_spec_picks_best_and_respects_filters() {
     let root = temp_root("resolve");
     let reg = Registry::open(&root).unwrap();
@@ -206,6 +270,19 @@ fn fixture_store_opens_and_verifies() {
     assert_eq!(m.best_val_rmse, 0.03125);
     let best = reg.best("checker2-ot", 4, Some(Base::Rk2), None).unwrap();
     assert_eq!(best.version, 1);
+
+    // the fixture scorecard loads hash-clean, decodes, and builds a frontier
+    let evals = reg.eval_records();
+    assert_eq!(evals.len(), 1);
+    let card = bespoke_flow::quality::load_scorecard(&reg, &evals[0]).unwrap();
+    assert_eq!(card.rows.len(), 1);
+    assert_eq!(card.rows[0].nfe, 8);
+    assert!(card.rows[0].fd_data.is_nan());
+    assert_eq!(card.artifact.as_ref().unwrap().1, 1);
+    let f = bespoke_flow::quality::build_frontier(&reg, "checker2-ot").unwrap();
+    assert_eq!(f.points.len(), 1);
+    assert_eq!(f.points[0].nfe, 8);
+    assert_eq!(f.points[0].rmse, 0.03125);
 }
 
 /// Runner that blocks until released, counting invocations — lets the test
@@ -216,6 +293,30 @@ struct SlowRunner {
 }
 
 impl JobRunner for SlowRunner {
+    type Spec = TrainJobSpec;
+    type Output = TrainedArtifact;
+    type Artifact = bespoke_flow::registry::ArtifactRecord;
+
+    fn kind(&self) -> &'static str {
+        "train"
+    }
+
+    fn coalesce_key(&self, spec: &TrainJobSpec) -> String {
+        format!("{:?}", spec.key())
+    }
+
+    fn label(&self, spec: &TrainJobSpec) -> String {
+        spec.key().label()
+    }
+
+    fn publish(
+        &self,
+        registry: &Registry,
+        out: TrainedArtifact,
+    ) -> Result<bespoke_flow::registry::ArtifactRecord> {
+        registry.register(&out.theta, &out.meta)
+    }
+
     fn run(
         &self,
         spec: &TrainJobSpec,
@@ -335,6 +436,30 @@ fn duplicate_train_submissions_coalesce() {
 struct FailingRunner;
 
 impl JobRunner for FailingRunner {
+    type Spec = TrainJobSpec;
+    type Output = TrainedArtifact;
+    type Artifact = bespoke_flow::registry::ArtifactRecord;
+
+    fn kind(&self) -> &'static str {
+        "train"
+    }
+
+    fn coalesce_key(&self, spec: &TrainJobSpec) -> String {
+        format!("{:?}", spec.key())
+    }
+
+    fn label(&self, spec: &TrainJobSpec) -> String {
+        spec.key().label()
+    }
+
+    fn publish(
+        &self,
+        registry: &Registry,
+        out: TrainedArtifact,
+    ) -> Result<bespoke_flow::registry::ArtifactRecord> {
+        registry.register(&out.theta, &out.meta)
+    }
+
     fn run(
         &self,
         _spec: &TrainJobSpec,
