@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     // --- server -----------------------------------------------------------
     let zoo = Arc::new(Zoo::open_default()?);
     let cfg =
-        ServeConfig { addr: addr.into(), max_batch: 256, max_wait_ms: 3, ..ServeConfig::default() };
+        ServeConfig { addr: addr.into(), max_batch: 256, fuse_window_us: 3_000, ..ServeConfig::default() };
     let registry_root = std::env::temp_dir().join(format!("serve_demo_reg_{}", std::process::id()));
     let registry = Arc::new(Registry::open(&registry_root)?);
     let coord = Arc::new(Coordinator::with_registry(zoo.clone(), cfg, registry.clone()));

@@ -15,8 +15,17 @@ pub struct ServeConfig {
     pub addr: String,
     /// Max requests folded into one executable launch (<= model batch).
     pub max_batch: usize,
-    /// Max time a request waits for batch-mates before launch (ms).
-    pub max_wait_ms: u64,
+    /// Fusion gather window: how long the lead request of a fused batch
+    /// waits for compatible batch-mates before the solve launches, in
+    /// microseconds (DESIGN.md §10). 0 = no waiting (each flush takes only
+    /// the jobs already queued). The legacy `max_wait_ms` config key is an
+    /// alias (x1000).
+    pub fuse_window_us: u64,
+    /// Max rows from concurrent requests fused into one lockstep solve
+    /// (clamped to `max_batch` and the model batch). 0 = auto (the clamp
+    /// alone); 1 = cross-request fusion off — every request chunk solves
+    /// in its own launch.
+    pub fuse_max_rows: usize,
     /// Worker threads per (model, solver) route: concurrent requests to one
     /// route overlap solves across this many executors instead of queueing
     /// behind a single thread. Per-chunk RNG streams keep same-seed output
@@ -33,7 +42,8 @@ impl Default for ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:7777".into(),
             max_batch: 64,
-            max_wait_ms: 5,
+            fuse_window_us: 5_000,
+            fuse_max_rows: 0,
             workers_per_route: 1,
             compute_threads: 0,
         }
@@ -163,7 +173,14 @@ impl Config {
                         match k.as_str() {
                             "addr" => self.serve.addr = val.as_str()?.to_string(),
                             "max_batch" => self.serve.max_batch = val.as_usize()?,
-                            "max_wait_ms" => self.serve.max_wait_ms = val.as_usize()? as u64,
+                            // "max_wait_ms" kept as an alias for old configs
+                            "max_wait_ms" => {
+                                self.serve.fuse_window_us = val.as_usize()? as u64 * 1000
+                            }
+                            "fuse_window_us" => {
+                                self.serve.fuse_window_us = val.as_usize()? as u64
+                            }
+                            "fuse_max_rows" => self.serve.fuse_max_rows = val.as_usize()?,
                             // "workers" kept as an alias for old configs
                             "workers" | "workers_per_route" => {
                                 self.serve.workers_per_route = val.as_usize()?
@@ -255,7 +272,8 @@ mod tests {
         assert_eq!(cfg.registry.max_jobs, 1);
         let v = Value::parse(
             r#"{"train": {"iters": 42, "ablation": "time-only"},
-                "serve": {"max_batch": 8, "workers_per_route": 4, "compute_threads": 2},
+                "serve": {"max_batch": 8, "workers_per_route": 4, "compute_threads": 2,
+                          "fuse_window_us": 250, "fuse_max_rows": 16},
                 "registry": {"root": "/tmp/reg", "max_jobs": 2, "keep_last_k": 5},
                 "out_dir": "/tmp/x"}"#,
         )
@@ -266,6 +284,12 @@ mod tests {
         assert_eq!(cfg.serve.max_batch, 8);
         assert_eq!(cfg.serve.workers_per_route, 4);
         assert_eq!(cfg.serve.compute_threads, 2);
+        assert_eq!(cfg.serve.fuse_window_us, 250);
+        assert_eq!(cfg.serve.fuse_max_rows, 16);
+        // legacy gather-window alias still parses (ms -> us)
+        let v_wait = Value::parse(r#"{"serve": {"max_wait_ms": 3}}"#).unwrap();
+        cfg.apply(&v_wait).unwrap();
+        assert_eq!(cfg.serve.fuse_window_us, 3_000);
         assert_eq!(cfg.registry.root, "/tmp/reg");
         assert_eq!(cfg.registry.max_jobs, 2);
         assert_eq!(cfg.registry.keep_last_k, 5);

@@ -1,10 +1,26 @@
-//! The coordinator core: a per-(model, solver) **worker pool** with dynamic
-//! batching over the fixed-shape HLO executables. Each route owns one
-//! shared job queue (`Mutex<VecDeque> + Condvar`) drained by
-//! `workers_per_route` threads, so concurrent requests to one route
-//! overlap solves instead of serializing behind a single worker. Output is
+//! The coordinator core: a per-(model, solver) **worker pool** with a
+//! cross-request **fusion plane** over the fixed-shape HLO executables.
+//! Each route owns one shared job queue (`Mutex<VecDeque> + Condvar`)
+//! drained by `workers_per_route` threads, so concurrent requests to one
+//! route overlap solves instead of serializing behind a single worker.
+//!
+//! Fusion (DESIGN.md §10): a fixed-grid Bespoke/RK/transfer step is
+//! lockstep across rows, so concurrent requests on one route ride a single
+//! fused model evaluation per stage. A worker that pops a job gathers
+//! compatible batch-mates for up to `fuse_window_us`, stacks each
+//! request's seed-derived noise rows into one tensor
+//! ([`Tensor::stack_rows`]), drives a single reusable [`SolveSession`]
+//! over the fused batch, and scatters the result rows back to each
+//! waiting request. Adaptive solvers (dopri5) bypass fusion — their step
+//! acceptance couples rows through the batch error norm — and mismatched
+//! specs never meet (the route key *is* the resolved spec).
+//!
+//! The invariant that makes fusion safe: every kernel in the hot loop is
+//! row-independent, so a request's samples are **byte-identical** whether
+//! it was fused with neighbors or solved alone, for any fusion grouping
+//! (pinned by `rust/tests/fusion_equivalence.rs`). Output is likewise
 //! identical for any pool size: noise streams are forked per request
-//! chunk, not per worker, and solves are row-independent.
+//! chunk, not per worker.
 //!
 //! Registry-resolved specs (`bespoke:model=M:n=8`) are re-resolved against
 //! the artifact registry on every request; when a better artifact lands
@@ -26,7 +42,7 @@ use crate::log_info;
 use crate::models::{CountingModel, VelocityModel, Zoo};
 use crate::quality::{Budget, Frontier, FrontierCache};
 use crate::registry::Registry;
-use crate::solvers::SolverSpec;
+use crate::solvers::{Sampler, SolveSession, SolverSpec};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -81,6 +97,13 @@ pub struct SampleResponse {
     pub batches: u64,
     pub queue_ms: f64,
     pub latency_ms: f64,
+    /// Wall time spent inside the solver (max over this request's
+    /// launches) — the per-request share of `latency_ms` that was compute,
+    /// not queueing/gathering.
+    pub solve_ms: f64,
+    /// Largest fused-launch row count this request's chunks rode in (its
+    /// own rows included). Equal to the chunk size when it solved alone.
+    pub fused_rows: u64,
 }
 
 /// One chunk of a request (<= model batch rows), awaiting a worker.
@@ -96,6 +119,10 @@ struct ChunkDone {
     samples: Option<Vec<Vec<f32>>>,
     nfe: u64,
     queue_ms: f64,
+    /// Solver wall time of the launch this chunk rode in.
+    solve_ms: f64,
+    /// Total request rows in that launch (this chunk's included).
+    fused_rows: u64,
 }
 
 /// The one shutdown handshake for a route's worker pool: set `closed`,
@@ -429,6 +456,8 @@ impl Coordinator {
         let mut samples = req.return_samples.then(Vec::new);
         let mut nfe = 0u64;
         let mut queue_ms = 0.0f64;
+        let mut solve_ms = 0.0f64;
+        let mut fused_rows = 0u64;
         let batches = pending.len() as u64;
         for rx in pending {
             // A dropped reply sender means the route's workers exited with
@@ -439,13 +468,15 @@ impl Coordinator {
             })??;
             nfe += done.nfe;
             queue_ms = queue_ms.max(done.queue_ms);
+            solve_ms = solve_ms.max(done.solve_ms);
+            fused_rows = fused_rows.max(done.fused_rows);
             if let (Some(acc), Some(got)) = (samples.as_mut(), done.samples) {
                 acc.extend(got);
             }
         }
         let latency_ms = started.elapsed().as_secs_f64() * 1e3;
         self.metrics
-            .record_request(&key, req.n_samples, latency_ms, queue_ms);
+            .record_request(&key, req.n_samples, latency_ms, queue_ms, solve_ms);
         Ok(SampleResponse {
             n_samples: req.n_samples,
             samples,
@@ -453,6 +484,8 @@ impl Coordinator {
             batches,
             queue_ms,
             latency_ms,
+            solve_ms,
+            fused_rows,
         })
     }
 
@@ -472,10 +505,10 @@ impl Coordinator {
             bail!("n_samples must be positive");
         }
         let (solver, spec) = self.resolve_solver(&req.model, &req.solver)?;
-        let hlo = self.zoo.hlo(&req.model)?;
+        let model = self.zoo.serving_model(&req.model)?;
         let sched = self.zoo.scheduler(&req.model)?;
         let sampler = spec.build(sched)?;
-        let (b, d) = (hlo.batch(), hlo.dim());
+        let (b, d) = (model.batch(), model.dim());
         if req.n_samples > b {
             bail!(
                 "trajectory requests are unbatched: n_samples {} exceeds the \
@@ -502,7 +535,7 @@ impl Coordinator {
         }
         let x0 = Tensor::new(data, vec![b, d])?;
 
-        let counting = CountingModel::new(hlo.as_ref() as &dyn VelocityModel);
+        let counting = CountingModel::new(model.as_ref());
         let mut session = sampler.begin(&x0)?;
         let steps_total = session.steps_total();
         let mut samples = Vec::new();
@@ -530,7 +563,7 @@ impl Coordinator {
         let key = format!("{}/{solver}", req.model);
         self.metrics.record_batch(&key, req.n_samples, b, nfe);
         self.metrics
-            .record_request(&key, req.n_samples, latency_ms, 0.0);
+            .record_request(&key, req.n_samples, latency_ms, 0.0, latency_ms);
         Ok(SampleResponse {
             n_samples: req.n_samples,
             samples: Some(samples),
@@ -538,6 +571,8 @@ impl Coordinator {
             batches: 1,
             queue_ms: 0.0,
             latency_ms,
+            solve_ms: latency_ms,
+            fused_rows: req.n_samples as u64,
         })
     }
 
@@ -547,12 +582,16 @@ impl Coordinator {
             return Ok(q.clone());
         }
         // Validate + load outside the lock (compilation can take a moment).
-        let hlo = self.zoo.hlo(model)?;
+        let served = self.zoo.serving_model(model)?;
         let sched = self.zoo.scheduler(model)?;
-        let sampler: Arc<dyn crate::solvers::Sampler> = Arc::from(spec.build(sched)?);
-        if hlo.dim() == 0 {
+        let sampler: Arc<dyn Sampler> = Arc::from(spec.build(sched)?);
+        if served.dim() == 0 {
             bail!("model {model} has zero dim");
         }
+        // Fixed-grid solvers (rk/bespoke/transfer) are lockstep across rows
+        // and join the fusion plane; adaptive dopri5 couples rows through
+        // the batch error norm, so its requests always solve alone.
+        let lockstep = !matches!(spec, SolverSpec::Dopri5 { .. });
 
         let mut routes = self.routes.lock().unwrap();
         if let Some(q) = routes.get(key) {
@@ -567,14 +606,16 @@ impl Coordinator {
         });
         for wi in 0..n_workers {
             let worker_queue = queue.clone();
-            let model = hlo.clone();
+            let model = served.clone();
             let sampler = sampler.clone();
             let metrics = self.metrics.clone();
             let cfg = self.cfg.clone();
             let key_owned = key.to_string();
             let spawned = std::thread::Builder::new()
                 .name(format!("worker-{key}-{wi}"))
-                .spawn(move || worker_loop(worker_queue, model, sampler, cfg, metrics, key_owned));
+                .spawn(move || {
+                    worker_loop(worker_queue, model, sampler, lockstep, cfg, metrics, key_owned)
+                });
             if let Err(e) = spawned {
                 // Partial pool: tell the already-spawned workers to exit
                 // (the queue never enters the routes map, so Coordinator's
@@ -591,8 +632,9 @@ impl Coordinator {
 
 fn worker_loop(
     queue: Arc<RouteQueue>,
-    model: Arc<crate::models::HloModel>,
-    sampler: Arc<dyn crate::solvers::Sampler>,
+    model: Arc<dyn VelocityModel>,
+    sampler: Arc<dyn Sampler>,
+    lockstep: bool,
     cfg: ServeConfig,
     metrics: Arc<Metrics>,
     key: String,
@@ -600,8 +642,26 @@ fn worker_loop(
     let _alive = WorkerAliveGuard(queue.clone());
     let b = model.batch();
     let d = model.dim();
-    let max_rows = cfg.max_batch.min(b).max(1);
-    let max_wait = Duration::from_millis(cfg.max_wait_ms);
+    // Rows one fused launch may carry: the fixed HLO batch bounds it, the
+    // config knobs tighten it. `fuse_max_rows = 1` — or a non-lockstep
+    // solver — disables cross-request fusion: every chunk solves alone.
+    let cap = if lockstep {
+        let clamp = cfg.max_batch.min(b).max(1);
+        if cfg.fuse_max_rows == 0 {
+            clamp
+        } else {
+            clamp.min(cfg.fuse_max_rows)
+        }
+    } else {
+        1
+    };
+    let window = Duration::from_micros(cfg.fuse_window_us);
+    let sampler_ref: &dyn Sampler = sampler.as_ref();
+    // One SolveSession reused across launches: every launch is the same
+    // padded [b, d] shape, so `init()` rewinds without reallocating the
+    // stage buffers (and `init` == fresh `begin` bitwise, pinned by the
+    // solver session tests).
+    let mut session: Option<Box<dyn SolveSession + '_>> = None;
 
     loop {
         // Block until a job arrives (or the coordinator shuts down).
@@ -618,128 +678,159 @@ fn worker_loop(
             }
         };
 
-        // Dynamic batching: collect batch-mates until full or deadline.
-        // The queue lock is only held while popping, never while executing,
-        // so pool-mates drain the queue concurrently.
-        let mut jobs = VecDeque::new();
-        let mut rows = first.rows;
-        jobs.push_back(first);
-        let deadline = Instant::now() + max_wait;
-        'collect: while rows < max_rows {
+        let group = gather_mates(&queue, first, cap, window);
+        if group.len() > 1 {
+            let fused: usize = group.iter().map(|j| j.rows).sum();
+            metrics.record_event("fuse_flush");
+            metrics.record_event_add("fused_rows", fused as u64);
+        }
+        execute_fused(model.as_ref(), sampler_ref, &mut session, &metrics, &key, b, d, group);
+    }
+}
+
+/// The fusion gather: collect batch-mates for `first` until the fused row
+/// cap is reached or the gather window closes. A job whose rows would
+/// overflow the cap stays queued for the next launch — jobs are never
+/// split across launches. The queue lock is held only while peeking/
+/// popping (and inside the condvar wait), never while executing, so
+/// pool-mates drain the queue concurrently.
+fn gather_mates(queue: &RouteQueue, first: Job, cap: usize, window: Duration) -> VecDeque<Job> {
+    let mut group = VecDeque::new();
+    let mut rows = first.rows;
+    group.push_back(first);
+    let deadline = Instant::now() + window;
+    'gather: while rows < cap {
+        let mut q = queue.jobs.lock().unwrap();
+        loop {
+            let take = match q.front() {
+                Some(j) if rows + j.rows <= cap => true,
+                Some(_) => {
+                    // Next job would overflow the fused cap: flush now. The
+                    // wake-up that delivered this job was consumed without a
+                    // pop — re-signal so an idle pool-mate picks it up
+                    // instead of it waiting out this worker's entire solve.
+                    queue.ready.notify_one();
+                    break 'gather;
+                }
+                None => false,
+            };
+            if take {
+                let j = q.pop_front().expect("front() said non-empty");
+                drop(q);
+                rows += j.rows;
+                group.push_back(j);
+                continue 'gather;
+            }
+            if queue.closed.load(Ordering::SeqCst) {
+                break 'gather;
+            }
             let now = Instant::now();
             if now >= deadline {
-                break;
+                break 'gather;
             }
-            let q = queue.jobs.lock().unwrap();
-            let job = match q.pop_front_or_wait(&queue.ready, deadline - now) {
-                Some(j) => j,
-                None => {
-                    if queue.closed.load(Ordering::SeqCst) {
-                        break 'collect;
-                    }
-                    continue 'collect; // timeout or spurious wake; re-check deadline
-                }
-            };
-            let overflow = rows + job.rows > max_rows;
-            rows += job.rows;
-            jobs.push_back(job);
-            if overflow {
-                // Oversized tail: execute_jobs splits it into its own
-                // fixed-shape batch after this one.
-                break;
-            }
+            let (guard, _timed_out) = queue.ready.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
         }
-
-        // May exceed max_rows by one job; split executions over the fixed
-        // HLO batch b as needed.
-        execute_jobs(&model, sampler.as_ref(), &metrics, &key, b, d, jobs);
     }
+    group
 }
 
-/// Pop the next job, waiting on `cv` up to `timeout` if the queue is empty.
-trait PopOrWait {
-    fn pop_front_or_wait(self, cv: &Condvar, timeout: Duration) -> Option<Job>;
-}
-
-impl PopOrWait for std::sync::MutexGuard<'_, VecDeque<Job>> {
-    fn pop_front_or_wait(mut self, cv: &Condvar, timeout: Duration) -> Option<Job> {
-        if let Some(j) = self.pop_front() {
-            return Some(j);
-        }
-        let (mut guard, _timed_out) = cv.wait_timeout(self, timeout).unwrap();
-        guard.pop_front()
-    }
-}
-
-/// Run a group of jobs through the executable in row-packed batches of b.
-fn execute_jobs(
-    model: &Arc<crate::models::HloModel>,
-    sampler: &dyn crate::solvers::Sampler,
+/// Run one fused group through a single solve: stack each job's
+/// seed-derived noise rows into one zero-padded [b, d] batch
+/// ([`stack_noise`]), drive the worker's reusable session to completion,
+/// then scatter the result rows back to each waiting request.
+/// Every job's noise comes from its own RNG stream — the exact bytes the
+/// chunk would get solving alone — and every hot-loop kernel is
+/// row-independent, so fusion never changes a request's samples.
+#[allow(clippy::too_many_arguments)]
+fn execute_fused<'s>(
+    model: &dyn VelocityModel,
+    sampler: &'s dyn Sampler,
+    session: &mut Option<Box<dyn SolveSession + 's>>,
     metrics: &Metrics,
     key: &str,
     b: usize,
     d: usize,
     mut jobs: VecDeque<Job>,
 ) {
-    while !jobs.is_empty() {
-        // Take jobs until the fixed batch is full (O(1) pops, satellite of
-        // the pool change: no more O(n²) `remove(0)` draining).
-        let mut take = Vec::new();
-        let mut rows = 0usize;
-        while let Some(j) = jobs.front() {
-            if rows + j.rows > b && !take.is_empty() {
-                break;
-            }
-            let j = jobs.pop_front().expect("front() said non-empty");
-            rows += j.rows;
-            take.push(j);
-            if rows >= b {
-                break;
-            }
-        }
-        // A single job can still exceed b rows only if submit() mis-chunked;
-        // clamp defensively.
-        let used = rows.min(b);
+    let used: usize = jobs.iter().map(|j| j.rows).sum();
 
-        // Build the noise batch: each job's rows from its own RNG stream;
-        // padding rows are zero (discarded after the solve).
-        let mut data = vec![0.0f32; b * d];
-        {
+    let counting = CountingModel::new(model);
+    let solve_started = Instant::now();
+    let result = stack_noise(&mut jobs, b, d)
+        .and_then(|x0| drive_session(sampler, session, &counting, &x0));
+    let solve_ms = solve_started.elapsed().as_secs_f64() * 1e3;
+    let nfe = counting.nfe();
+    metrics.record_batch(key, used.min(b), b, nfe);
+
+    match result {
+        Ok(out) => {
             let mut offset = 0usize;
-            for j in take.iter_mut() {
-                let cnt = j.rows.min(b - offset);
-                j.rng.fill_normal(&mut data[offset * d..(offset + cnt) * d]);
-                offset += cnt;
+            for j in jobs {
+                let queue_ms = j.enqueued.elapsed().as_secs_f64() * 1e3;
+                let samples = j.want_samples.then(|| {
+                    (offset..offset + j.rows)
+                        .map(|r| out.row(r).to_vec())
+                        .collect::<Vec<_>>()
+                });
+                offset += j.rows;
+                let _ = j.reply.send(Ok(ChunkDone {
+                    samples,
+                    nfe,
+                    queue_ms,
+                    solve_ms,
+                    fused_rows: used as u64,
+                }));
             }
         }
-        let x0 = Tensor::new(data, vec![b, d]).expect("noise shape");
-        let counting = CountingModel::new(model.as_ref() as &dyn VelocityModel);
-        let result = sampler.sample(&counting, &x0);
-        let nfe = counting.nfe();
-        metrics.record_batch(key, used, b, nfe);
-
-        match result {
-            Ok(out) => {
-                let mut offset = 0usize;
-                for j in take {
-                    let queue_ms = j.enqueued.elapsed().as_secs_f64() * 1e3;
-                    let samples = j.want_samples.then(|| {
-                        (offset..offset + j.rows)
-                            .map(|r| out.row(r).to_vec())
-                            .collect::<Vec<_>>()
-                    });
-                    offset += j.rows;
-                    let _ = j.reply.send(Ok(ChunkDone { samples, nfe, queue_ms }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for j in take {
-                    let _ = j
-                        .reply
-                        .send(Err(anyhow::anyhow!("sampler failed: {msg}")));
-                }
+        Err(e) => {
+            // A failed solve may leave the reused session mid-flight;
+            // rebuild it on the next launch.
+            *session = None;
+            let msg = format!("{e:#}");
+            for j in jobs {
+                let _ = j
+                    .reply
+                    .send(Err(anyhow::anyhow!("sampler failed: {msg}")));
             }
         }
     }
+}
+
+/// The fused-batch gather: one zero-padded [b, d] noise tensor with each
+/// job's rows filled in place from its own RNG stream — the in-place twin
+/// of [`Tensor::stack_rows`] (which the equivalence tests use to rebuild
+/// this layout), kept to a single allocation per launch.
+fn stack_noise(jobs: &mut VecDeque<Job>, b: usize, d: usize) -> Result<Tensor> {
+    let total: usize = jobs.iter().map(|j| j.rows).sum();
+    if total > b {
+        bail!("fused group of {total} rows exceeds the launch batch {b}");
+    }
+    let mut x0 = Tensor::zeros(&[b, d]);
+    let mut offset = 0usize;
+    for j in jobs.iter_mut() {
+        j.rng.fill_normal(&mut x0.data_mut()[offset * d..(offset + j.rows) * d]);
+        offset += j.rows;
+    }
+    Ok(x0)
+}
+
+/// Drive the worker's persistent session over `x0`: the first launch opens
+/// it via [`Sampler::begin`], later launches rewind with
+/// [`SolveSession::init`] and reuse its pre-allocated stage buffers.
+fn drive_session<'s>(
+    sampler: &'s dyn Sampler,
+    slot: &mut Option<Box<dyn SolveSession + 's>>,
+    model: &dyn VelocityModel,
+    x0: &Tensor,
+) -> Result<Tensor> {
+    match slot {
+        Some(s) => s.init(x0)?,
+        None => *slot = Some(sampler.begin(x0)?),
+    }
+    let s = slot.as_mut().expect("session just installed");
+    while !s.is_done() {
+        s.step(model)?;
+    }
+    Ok(s.state().clone())
 }

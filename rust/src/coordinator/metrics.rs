@@ -18,6 +18,9 @@ struct Entry {
     nfe: u64,
     latency: Percentiles,
     queue: Percentiles,
+    /// Per-request solver wall time (the compute share of latency; the
+    /// fused-launch time the request's slowest chunk rode in).
+    solve: Percentiles,
 }
 
 pub struct Metrics {
@@ -41,7 +44,13 @@ impl Default for Metrics {
 impl Metrics {
     /// Bump a named lifecycle counter.
     pub fn record_event(&self, name: &str) {
-        *self.events.lock().unwrap().entry(name.to_string()).or_default() += 1;
+        self.record_event_add(name, 1);
+    }
+
+    /// Add `n` to a named counter (e.g. `fused_rows` grows by the fused
+    /// batch's row count per flush, not by 1).
+    pub fn record_event_add(&self, name: &str, n: u64) {
+        *self.events.lock().unwrap().entry(name.to_string()).or_default() += n;
     }
 
     /// Current value of a named counter (0 if never recorded).
@@ -58,13 +67,21 @@ impl Metrics {
         e.nfe += nfe;
     }
 
-    pub fn record_request(&self, key: &str, n_samples: usize, latency_ms: f64, queue_ms: f64) {
+    pub fn record_request(
+        &self,
+        key: &str,
+        n_samples: usize,
+        latency_ms: f64,
+        queue_ms: f64,
+        solve_ms: f64,
+    ) {
         let mut g = self.inner.lock().unwrap();
         let e = g.entry(key.to_string()).or_default();
         e.requests += 1;
         e.samples += n_samples as u64;
         e.latency.record(latency_ms);
         e.queue.record(queue_ms);
+        e.solve.record(solve_ms);
     }
 
     pub fn snapshot(&self) -> Value {
@@ -89,6 +106,8 @@ impl Metrics {
                     ("latency_p50_ms", Value::Num(e.latency.quantile(0.5))),
                     ("latency_p99_ms", Value::Num(e.latency.quantile(0.99))),
                     ("queue_p50_ms", Value::Num(e.queue.quantile(0.5))),
+                    ("solve_p50_ms", Value::Num(e.solve.quantile(0.5))),
+                    ("solve_p99_ms", Value::Num(e.solve.quantile(0.99))),
                 ]),
             ));
         }
@@ -115,8 +134,8 @@ mod tests {
         let m = Metrics::default();
         m.record_batch("m/rk2", 48, 64, 16);
         m.record_batch("m/rk2", 64, 64, 16);
-        m.record_request("m/rk2", 48, 12.0, 1.0);
-        m.record_request("m/rk2", 64, 8.0, 0.5);
+        m.record_request("m/rk2", 48, 12.0, 1.0, 9.0);
+        m.record_request("m/rk2", 64, 8.0, 0.5, 6.0);
         let snap = m.snapshot();
         let route = snap.get("per_route").unwrap().get("m/rk2").unwrap();
         assert_eq!(route.get("requests").unwrap().as_usize().unwrap(), 2);
@@ -124,6 +143,7 @@ mod tests {
         let fill = route.get("batch_fill").unwrap().as_f64().unwrap();
         assert!((fill - 112.0 / 128.0).abs() < 1e-9);
         assert!(route.get("latency_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(route.get("solve_p50_ms").unwrap().as_f64().unwrap() >= 6.0);
     }
 
     #[test]
@@ -133,7 +153,10 @@ mod tests {
         m.record_event("hot_swap");
         m.record_event("hot_swap");
         m.record_event("train_jobs_done");
+        m.record_event_add("fused_rows", 7);
+        m.record_event_add("fused_rows", 3);
         assert_eq!(m.event_count("hot_swap"), 2);
+        assert_eq!(m.event_count("fused_rows"), 10);
         let snap = m.snapshot();
         let ev = snap.get("events").unwrap();
         assert_eq!(ev.get("hot_swap").unwrap().as_usize().unwrap(), 2);

@@ -10,9 +10,12 @@
 //!                            +<------ reply channel <--------+  over HLO
 //! ```
 //!
-//! * Batching folds concurrent requests into one fixed-shape executable
-//!   launch (HLO batch sizes are static; remainders are padded and the pad
-//!   rows discarded).
+//! * The fusion plane folds concurrent lockstep requests into one
+//!   fixed-shape executable launch (HLO batch sizes are static; remainders
+//!   are padded and the pad rows discarded): per route, a gather window
+//!   (`fuse_window_us` / `fuse_max_rows`) coalesces compatible `sample`
+//!   requests into one stacked solve whose rows are byte-identical to the
+//!   solo solves — adaptive dopri5 bypasses fusion (DESIGN.md §10).
 //! * One worker thread per (model, solver) pair, created on demand; the
 //!   PJRT CPU client is shared and thread-safe.
 //! * Every response carries NFE + queue/latency breakdowns; `metrics`

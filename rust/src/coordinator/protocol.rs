@@ -298,6 +298,8 @@ pub fn response_to_json(resp: &SampleResponse) -> Value {
         ("batches", Value::Num(resp.batches as f64)),
         ("queue_ms", Value::Num(resp.queue_ms)),
         ("latency_ms", Value::Num(resp.latency_ms)),
+        ("solve_ms", Value::Num(resp.solve_ms)),
+        ("fused_rows", Value::Num(resp.fused_rows as f64)),
     ];
     if let Some(s) = &resp.samples {
         fields.push((

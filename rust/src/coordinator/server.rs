@@ -13,6 +13,11 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
+/// Max accepted request-line length. Longer lines get a structured JSON
+/// error (and are discarded up to the next newline) instead of an
+/// unbounded buffer or a dropped connection.
+pub const MAX_LINE_BYTES: usize = 4 << 20;
+
 use anyhow::Result;
 
 use super::batcher::Coordinator;
@@ -82,12 +87,75 @@ fn write_event<W: Write>(writer: &mut W, v: &Value) -> Result<()> {
     Ok(())
 }
 
+/// One request line read off the wire.
+enum LineRead {
+    /// A complete line (without the trailing newline), lossily decoded —
+    /// invalid UTF-8 becomes a JSON parse error downstream, not a dropped
+    /// connection.
+    Line(String),
+    /// The line exceeded [`MAX_LINE_BYTES`]; the excess was discarded up
+    /// to the next newline.
+    TooLong(usize),
+    Eof,
+}
+
+/// Read one newline-terminated line with a hard length cap, so a
+/// malicious or buggy client cannot balloon the server's line buffer.
+fn read_line_capped(reader: &mut impl BufRead) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut dropped = 0usize;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: a capped (oversized) partial line still reports TooLong.
+            return Ok(match (buf.is_empty(), dropped) {
+                (true, 0) => LineRead::Eof,
+                (_, 0) => LineRead::Line(String::from_utf8_lossy(&buf).into_owned()),
+                _ => LineRead::TooLong(buf.len() + dropped),
+            });
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let upto = newline.map(|i| i + 1).unwrap_or(chunk.len());
+        let take = &chunk[..upto.min(chunk.len())];
+        let body = match newline {
+            Some(i) => &take[..i],
+            None => take,
+        };
+        if dropped == 0 && buf.len() + body.len() <= MAX_LINE_BYTES {
+            buf.extend_from_slice(body);
+        } else {
+            dropped += body.len();
+        }
+        let done = newline.is_some();
+        reader.consume(upto);
+        if done {
+            return Ok(if dropped == 0 {
+                LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+            } else {
+                LineRead::TooLong(buf.len() + dropped)
+            });
+        }
+    }
+}
+
 pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_capped(&mut reader)? {
+            LineRead::Eof => break,
+            LineRead::TooLong(n) => {
+                write_event(
+                    &mut writer,
+                    &error_json(&format!(
+                        "request line of {n} bytes exceeds the {MAX_LINE_BYTES}-byte limit"
+                    )),
+                )?;
+                continue;
+            }
+            LineRead::Line(l) => l,
+        };
         if line.trim().is_empty() {
             continue;
         }

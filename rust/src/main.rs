@@ -29,6 +29,7 @@ use bespoke_flow::registry::{
 use bespoke_flow::runtime::{Executable, Manifest};
 use bespoke_flow::solvers::theta::Base;
 use bespoke_flow::solvers::SolverSpec;
+use bespoke_flow::testing::loadgen;
 use bespoke_flow::{bail, Context, Result};
 
 fn main() {
@@ -45,7 +46,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence == true).
-const BOOL_FLAGS: &[&str] = &["traj", "register"];
+const BOOL_FLAGS: &[&str] = &["traj", "register", "smoke"];
 
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
@@ -89,6 +90,12 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(t) = args.flags.get("threads") {
         cfg.serve.compute_threads = t.parse().context("bad --threads")?;
+    }
+    if let Some(w) = args.flags.get("fuse-window-us") {
+        cfg.serve.fuse_window_us = w.parse().context("bad --fuse-window-us")?;
+    }
+    if let Some(r) = args.flags.get("fuse-max-rows") {
+        cfg.serve.fuse_max_rows = r.parse().context("bad --fuse-max-rows")?;
     }
     if let Some(r) = args.flags.get("registry") {
         cfg.registry.root = r.clone();
@@ -408,6 +415,169 @@ fn run() -> Result<()> {
             let registry = open_registry(&cfg)?;
             registry_cmd(&args, &cfg, &registry)
         }
+        "loadgen" => {
+            // Deterministic load harness: replay a seeded multi-client
+            // schedule twice — fusion on, then `fuse_max_rows = 1` — and
+            // record throughput/latency percentiles plus the fused/solo
+            // speedup into BENCH_5.json. Errors if the two runs are not
+            // byte-identical (the fusion plane's core invariant).
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let model = args.flags.get("model").context("--model required")?.clone();
+            let solvers: Vec<String> = args
+                .flags
+                .get("solver")
+                .map(String::as_str)
+                .unwrap_or("rk2:n=8")
+                .split(',')
+                .map(|s| SolverSpec::parse(s.trim()).map(|sp| sp.to_string()))
+                .collect::<Result<_>>()?;
+            let n_choices: Vec<usize> = args
+                .flags
+                .get("n")
+                .map(String::as_str)
+                .unwrap_or("8")
+                .split(',')
+                .map(|s| s.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .context("bad --n (expected e.g. 8 or 1,8)")?;
+            if n_choices.iter().any(|&n| n == 0) {
+                bail!("--n entries must be >= 1");
+            }
+            let smoke = args.flags.contains_key("smoke");
+            let mut spec = loadgen::LoadSpec::new(&model, &solvers[0]);
+            spec.solvers = solvers;
+            spec.n_choices = n_choices;
+            spec.clients = args
+                .flags
+                .get("clients")
+                .map(|s| s.parse())
+                .transpose()
+                .context("bad --clients")?
+                .unwrap_or(8);
+            spec.requests_per_client = args
+                .flags
+                .get("requests")
+                .map(|s| s.parse())
+                .transpose()
+                .context("bad --requests")?
+                .unwrap_or(if smoke { 6 } else { 32 });
+            if let Some(s) = args.flags.get("seed") {
+                spec.seed = s.parse().context("bad --seed")?;
+            }
+
+            let mut solo_serve = cfg.serve.clone();
+            solo_serve.fuse_max_rows = 1;
+            let fused_coord = Arc::new(Coordinator::with_registry(
+                zoo.clone(),
+                cfg.serve.clone(),
+                open_registry(&cfg)?,
+            ));
+            let solo_coord =
+                Arc::new(Coordinator::with_registry(zoo, solo_serve, open_registry(&cfg)?));
+
+            // Warm both coordinators' routes (spawns workers, compiles
+            // models, opens sessions) so the timed runs measure serving.
+            for s in &spec.solvers {
+                let warm = SampleRequest {
+                    model: model.clone(),
+                    solver: s.clone(),
+                    n_samples: 1,
+                    seed: 0,
+                    return_samples: false,
+                    budget: None,
+                };
+                fused_coord.submit(&warm)?;
+                solo_coord.submit(&warm)?;
+            }
+
+            let solo_run = loadgen::run(&solo_coord, &spec)?;
+            let fused_run = loadgen::run(&fused_coord, &spec)?;
+            let speedup =
+                fused_run.report.rows_per_sec / solo_run.report.rows_per_sec.max(1e-9);
+            let bitwise = fused_run.bitwise_matches(&solo_run);
+
+            for (name, r) in [("fused", &fused_run.report), ("solo", &solo_run.report)] {
+                println!(
+                    "{name:<6} {} requests ({} rows) in {:.3}s  \
+                     {:.1} req/s  {:.1} rows/s  p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms",
+                    r.requests,
+                    r.rows,
+                    r.wall_secs,
+                    r.throughput_rps,
+                    r.rows_per_sec,
+                    r.latency_p50_ms,
+                    r.latency_p90_ms,
+                    r.latency_p99_ms
+                );
+            }
+            println!(
+                "speedup (rows/s, fused vs fuse_max_rows=1): {speedup:.2}x  \
+                 bitwise_match: {bitwise}"
+            );
+            let fused_events = fused_coord.metrics.event_count("fused_rows");
+            println!("fused_rows counter: {fused_events}");
+
+            let out_path = args.flags.get("out").cloned().unwrap_or_else(|| {
+                format!("{}/../BENCH_5.json", env!("CARGO_MANIFEST_DIR"))
+            });
+            let doc = bespoke_flow::json::Value::obj(vec![
+                ("bench", bespoke_flow::json::Value::Str("loadgen".into())),
+                (
+                    "threads",
+                    bespoke_flow::json::Value::Num(bespoke_flow::util::threads::get() as f64),
+                ),
+                ("model", bespoke_flow::json::Value::Str(model.clone())),
+                (
+                    "solvers",
+                    bespoke_flow::json::Value::Arr(
+                        spec.solvers
+                            .iter()
+                            .map(|s| bespoke_flow::json::Value::Str(s.clone()))
+                            .collect(),
+                    ),
+                ),
+                ("clients", bespoke_flow::json::Value::Num(spec.clients as f64)),
+                (
+                    "requests_per_client",
+                    bespoke_flow::json::Value::Num(spec.requests_per_client as f64),
+                ),
+                (
+                    "n_choices",
+                    bespoke_flow::json::Value::Arr(
+                        spec.n_choices
+                            .iter()
+                            .map(|&n| bespoke_flow::json::Value::Num(n as f64))
+                            .collect(),
+                    ),
+                ),
+                ("seed", bespoke_flow::json::Value::Num(spec.seed as f64)),
+                (
+                    "fuse_window_us",
+                    bespoke_flow::json::Value::Num(cfg.serve.fuse_window_us as f64),
+                ),
+                ("fused_rows_events", bespoke_flow::json::Value::Num(fused_events as f64)),
+                (
+                    "results",
+                    bespoke_flow::json::Value::Arr(vec![
+                        fused_run.report.to_json("loadgen/fused"),
+                        solo_run.report.to_json("loadgen/solo"),
+                    ]),
+                ),
+                ("speedup_rows_per_sec", bespoke_flow::json::Value::Num(speedup)),
+                ("bitwise_match", bespoke_flow::json::Value::Bool(bitwise)),
+            ]);
+            std::fs::write(&out_path, doc.to_string_pretty())
+                .with_context(|| format!("writing {out_path}"))?;
+            println!("wrote {out_path}");
+            if !bitwise {
+                bail!(
+                    "fused and solo runs disagree byte-for-byte — the fusion \
+                     row-equivalence invariant is broken"
+                );
+            }
+            Ok(())
+        }
         "exp" => {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
@@ -532,6 +702,16 @@ COMMANDS:
                                    metrics, ping, train, job_status, jobs,
                                    evaluate, eval_status, frontier —
                                    one JSON object per line)
+    loadgen                       deterministic multi-client load harness:
+        --model M  [--solver S[,S2...]]  [--clients 8]  [--requests 32]
+        [--n 8[,1,...]]  [--seed S]  [--smoke]  [--out BENCH_5.json]
+                                  replays a seeded schedule with fusion on
+                                  and with fuse_max_rows=1, checks the runs
+                                  are byte-identical, and records the
+                                  throughput/latency comparison + speedup
+                                  to BENCH_5.json (works artifact-free on
+                                  the fixture zoo: --artifacts
+                                  rust/tests/fixtures/zoo)
     registry list                 show registered solver artifacts
     registry show                 inspect one key (integrity-checked)
         --model M  --n STEPS  [--base B]  [--ablation A]
@@ -560,4 +740,10 @@ GLOBAL FLAGS:
                          also: BESPOKE_THREADS env, serve.compute_threads)
     --workers N          worker threads per (model, solver) serving route
                          (serve.workers_per_route)
+    --fuse-window-us U   cross-request fusion gather window in microseconds
+                         (serve.fuse_window_us, default 5000; legacy config
+                         alias: max_wait_ms — milliseconds x1000)
+    --fuse-max-rows R    max rows fused into one lockstep solve (clamped to
+                         max_batch and the model batch; 0 = auto, 1 = off —
+                         serve.fuse_max_rows; dopri5 never fuses)
 "#;

@@ -14,11 +14,18 @@ use crate::schedulers::Scheduler;
 pub struct Zoo {
     man: Arc<Manifest>,
     cache: Mutex<BTreeMap<String, Arc<HloModel>>>,
+    /// Analytic oracles standing in for missing HLO artifacts of `ideal`
+    /// models (see [`Zoo::serving_model`]).
+    analytic_cache: Mutex<BTreeMap<String, Arc<AnalyticModel>>>,
 }
 
 impl Zoo {
     pub fn new(man: Arc<Manifest>) -> Zoo {
-        Zoo { man, cache: Mutex::new(BTreeMap::new()) }
+        Zoo {
+            man,
+            cache: Mutex::new(BTreeMap::new()),
+            analytic_cache: Mutex::new(BTreeMap::new()),
+        }
     }
 
     pub fn open_default() -> Result<Zoo> {
@@ -68,5 +75,27 @@ impl Zoo {
     /// Convenience: model as a trait object.
     pub fn velocity(&self, name: &str) -> Result<Arc<dyn VelocityModel>> {
         Ok(self.hlo(name)? as Arc<dyn VelocityModel>)
+    }
+
+    /// The model the *serving* plane should run: the compiled HLO when the
+    /// artifact exists, else — for `ideal` models only — the pure-Rust
+    /// analytic oracle (the same fallback the eval plane uses, DESIGN.md
+    /// §9), so the coordinator, the stress/fusion tests and `repro loadgen`
+    /// work against the fixture zoo with no `make artifacts`. `mlp` models
+    /// have no oracle and keep the original HLO error.
+    pub fn serving_model(&self, name: &str) -> Result<Arc<dyn VelocityModel>> {
+        let hlo_err = match self.hlo(name) {
+            Ok(m) => return Ok(m),
+            Err(e) => e,
+        };
+        if self.man.model(name)?.kind != "ideal" {
+            return Err(hlo_err);
+        }
+        if let Some(m) = self.analytic_cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let m = Arc::new(self.analytic(name)?);
+        self.analytic_cache.lock().unwrap().insert(name.to_string(), m.clone());
+        Ok(m)
     }
 }

@@ -150,8 +150,10 @@ impl SolveSession for BespokeSession<'_> {
         if self.x.shape() == x0.shape() {
             self.x.copy_from(x0)?;
         } else {
+            // Width-agnostic re-init: top the pool up for the new shape,
+            // keeping buffers of widths already visited (DESIGN.md §10).
             self.x = x0.clone();
-            self.ws = Workspace::preallocate(x0.shape(), self.solver.stage_buffers());
+            self.ws.ensure(x0.shape(), self.solver.stage_buffers());
         }
         self.i = 0;
         Ok(())

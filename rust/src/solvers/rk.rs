@@ -213,8 +213,11 @@ impl SolveSession for FixedGridSession<'_> {
         if self.x.shape() == x0.shape() {
             self.x.copy_from(x0)?;
         } else {
+            // Batch-width-agnostic re-init: keep the pool and top it up for
+            // the new shape, so a session hopping between fused widths
+            // allocates each width's stage buffers once (DESIGN.md §10).
             self.x = x0.clone();
-            self.ws = Workspace::preallocate(x0.shape(), self.solver.base.stage_buffers());
+            self.ws.ensure(x0.shape(), self.solver.base.stage_buffers());
         }
         self.i = 0;
         Ok(())

@@ -122,11 +122,13 @@ impl SolveSession for TransferSession<'_> {
             self.xbar.copy_from(x0)?;
             self.x.copy_from(x0)?;
         } else {
+            // Width-agnostic re-init: top the pool up for the new shape,
+            // keeping buffers of widths already visited (DESIGN.md §10).
             self.xbar = x0.clone();
             self.x = x0.clone();
             self.scratch_x = Tensor::zeros(x0.shape());
             self.scratch_u = Tensor::zeros(x0.shape());
-            self.ws = Workspace::preallocate(x0.shape(), self.solver.base.stage_buffers());
+            self.ws.ensure(x0.shape(), self.solver.base.stage_buffers());
         }
         self.i = 0;
         Ok(())

@@ -394,6 +394,76 @@ impl Tensor {
         }
         Tensor { data, shape: vec![idx.len(), d] }
     }
+
+    // ---- row-slice stack/scatter ------------------------------------------
+    //
+    // The reference spellings of the fusion plane's batch layout
+    // (DESIGN.md §10): `stack_rows` reproduces exactly the zero-padded
+    // gather the coordinator's `stack_noise` fills in place on the hot
+    // path, and `rows_block`/`copy_row_block` are the scatter inverses the
+    // equivalence tests slice fused results with.
+
+    /// Stack 2-D tensors along axis 0 into a `[rows, d]` tensor, zero-
+    /// padding the tail — each part one request's rows, the padding rows
+    /// discarded after a solve. Errors if the parts exceed `rows` or
+    /// disagree on columns.
+    pub fn stack_rows(parts: &[&Tensor], rows: usize) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack_rows: empty");
+        }
+        let d = parts[0].cols();
+        let mut out = Tensor::zeros(&[rows, d]);
+        let mut at = 0usize;
+        for p in parts {
+            if p.cols() != d {
+                bail!("stack_rows: column mismatch ({} vs {d})", p.cols());
+            }
+            if at + p.rows() > rows {
+                bail!(
+                    "stack_rows: {} total rows exceed the batch capacity {rows}",
+                    at + p.rows()
+                );
+            }
+            out.data[at * d..(at + p.rows()) * d].copy_from_slice(p.data());
+            at += p.rows();
+        }
+        Ok(out)
+    }
+
+    /// A contiguous row block `[lo, lo + rows)` as an owned `[rows, d]`
+    /// tensor — slices one request's rows back out of a stacked solve.
+    pub fn rows_block(&self, lo: usize, rows: usize) -> Result<Tensor> {
+        let (b, d) = (self.rows(), self.cols());
+        if lo + rows > b {
+            bail!("rows_block: [{lo}, {}) out of range for {b} rows", lo + rows);
+        }
+        Tensor::new(self.data[lo * d..(lo + rows) * d].to_vec(), vec![rows, d])
+    }
+
+    /// Copy `rows` rows from `src` (starting at `src_lo`) into `self`
+    /// starting at `dst_lo`. Both must be 2-D with equal column counts.
+    pub fn copy_row_block(
+        &mut self,
+        dst_lo: usize,
+        src: &Tensor,
+        src_lo: usize,
+        rows: usize,
+    ) -> Result<()> {
+        let d = self.cols();
+        if src.cols() != d {
+            bail!("copy_row_block: column mismatch ({} vs {d})", src.cols());
+        }
+        if src_lo + rows > src.rows() || dst_lo + rows > self.rows() {
+            bail!(
+                "copy_row_block: [{src_lo}, {}) -> [{dst_lo}, {}) out of range",
+                src_lo + rows,
+                dst_lo + rows
+            );
+        }
+        self.data[dst_lo * d..(dst_lo + rows) * d]
+            .copy_from_slice(&src.data[src_lo * d..(src_lo + rows) * d]);
+        Ok(())
+    }
 }
 
 /// A scratch-buffer pool keyed by shape: the allocation-free backing store
@@ -433,6 +503,19 @@ impl Workspace {
     /// Return a buffer to the pool for reuse.
     pub fn release(&mut self, t: Tensor) {
         self.pool.push(t);
+    }
+
+    /// Top the pool up to `count` buffers of `shape`, keeping whatever it
+    /// already holds (including buffers of *other* shapes). Sessions call
+    /// this from `init()` so re-initializing at a new fused batch width
+    /// allocates only the missing buffers — alternating widths after the
+    /// first visit to each is allocation-free (DESIGN.md §10).
+    pub fn ensure(&mut self, shape: &[usize], count: usize) {
+        let have = self.pool.iter().filter(|t| t.shape() == shape).count();
+        self.pool.reserve(count.saturating_sub(have) + 2);
+        for _ in have..count {
+            self.pool.push(Tensor::zeros(shape));
+        }
     }
 
     /// Buffers currently sitting in the pool.
@@ -554,6 +637,46 @@ mod tests {
         // acquire prefers pooled buffers of the right shape
         assert_eq!(ws.acquire(&[4]).shape(), &[4]);
         assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn stack_and_scatter_row_blocks() {
+        let a = t2(&[&[1.0, 2.0]]);
+        let b = t2(&[&[3.0, 4.0], &[5.0, 6.0]]);
+        // stack with zero padding to 4 rows
+        let s = Tensor::stack_rows(&[&a, &b], 4).unwrap();
+        assert_eq!(s.shape(), &[4, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0]);
+        // scatter blocks back out
+        assert_eq!(s.rows_block(0, 1).unwrap().data(), a.data());
+        assert_eq!(s.rows_block(1, 2).unwrap().data(), b.data());
+        assert!(s.rows_block(3, 2).is_err());
+        // overflow and mismatches are rejected
+        assert!(Tensor::stack_rows(&[&a, &b], 2).is_err());
+        assert!(Tensor::stack_rows(&[], 2).is_err());
+        let c = Tensor::zeros(&[1, 3]);
+        assert!(Tensor::stack_rows(&[&a, &c], 4).is_err());
+        // copy_row_block writes into place
+        let mut dst = Tensor::zeros(&[3, 2]);
+        dst.copy_row_block(1, &b, 0, 2).unwrap();
+        assert_eq!(dst.data(), &[0.0, 0.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(dst.copy_row_block(2, &b, 0, 2).is_err());
+        assert!(dst.copy_row_block(0, &c, 0, 1).is_err());
+    }
+
+    #[test]
+    fn workspace_ensure_tops_up_per_shape() {
+        let mut ws = Workspace::new();
+        ws.ensure(&[2, 2], 3);
+        assert_eq!(ws.pooled(), 3);
+        // same shape again: no growth
+        ws.ensure(&[2, 2], 3);
+        assert_eq!(ws.pooled(), 3);
+        // a second shape adds only its own buffers, keeping the first
+        ws.ensure(&[4, 2], 2);
+        assert_eq!(ws.pooled(), 5);
+        assert_eq!(ws.acquire(&[2, 2]).shape(), &[2, 2]);
+        assert_eq!(ws.acquire(&[4, 2]).shape(), &[4, 2]);
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! In-tree property-testing harness (no external proptest dependency —
 //! builds are fully offline). `forall` drives a deterministic RNG through N
 //! cases and reports the first failing seed so failures reproduce exactly.
+//! The [`loadgen`] submodule is the deterministic multi-client load
+//! harness behind `repro loadgen`, the stress tests and `BENCH_5.json`.
+
+pub mod loadgen;
 
 use crate::util::Rng;
 

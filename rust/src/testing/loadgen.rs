@@ -1,0 +1,294 @@
+//! Deterministic in-process load harness: seeded multi-client `sample`
+//! schedules, replayable bit-for-bit in tests and from the `repro loadgen`
+//! CLI subcommand (DESIGN.md §10).
+//!
+//! A [`LoadSpec`] expands — via one forked RNG stream per client — into a
+//! fixed per-client list of [`SampleRequest`]s. The *schedule* (which
+//! client sends which request with which seed) is fully determined by
+//! `spec.seed`; only the thread interleaving varies between runs, and the
+//! coordinator's bitwise fusion invariant makes the results independent of
+//! that interleaving. Each response's sample rows are folded into an
+//! fnv1a64 digest, so two runs (e.g. fused vs `fuse_max_rows = 1`) can be
+//! compared byte-for-byte without retaining every sample.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, SampleRequest};
+use crate::json::Value;
+use crate::registry::fnv1a64;
+use crate::util::timer::Percentiles;
+use crate::util::Rng;
+
+/// What workload to generate. Every field is part of the schedule seed:
+/// the same spec always expands to the same requests.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub model: String,
+    /// Solver specs drawn round-robin-free: each request picks one from
+    /// this list with the schedule RNG.
+    pub solvers: Vec<String>,
+    /// Per-request batch-size choices, picked with the schedule RNG.
+    pub n_choices: Vec<usize>,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Root seed: forks one stream per client, which yields each request's
+    /// sample seed.
+    pub seed: u64,
+}
+
+impl LoadSpec {
+    pub fn new(model: &str, solver: &str) -> LoadSpec {
+        LoadSpec {
+            model: model.to_string(),
+            solvers: vec![solver.to_string()],
+            n_choices: vec![8],
+            clients: 8,
+            requests_per_client: 16,
+            seed: 0x10ad_9e4e,
+        }
+    }
+}
+
+/// One planned request: `client`/`index` name its slot in the schedule,
+/// stable across replays.
+#[derive(Clone, Debug)]
+pub struct PlannedRequest {
+    pub client: usize,
+    pub index: usize,
+    pub req: SampleRequest,
+}
+
+/// Expand a spec into per-client request schedules. Deterministic in
+/// `spec` alone.
+pub fn schedule(spec: &LoadSpec) -> Vec<Vec<PlannedRequest>> {
+    let mut root = Rng::new(spec.seed);
+    (0..spec.clients)
+        .map(|client| {
+            let mut rng = root.fork(client as u64 + 1);
+            (0..spec.requests_per_client)
+                .map(|index| {
+                    let solver = spec.solvers[rng.below(spec.solvers.len().max(1))].clone();
+                    let n_samples = spec.n_choices[rng.below(spec.n_choices.len().max(1))];
+                    PlannedRequest {
+                        client,
+                        index,
+                        req: SampleRequest {
+                            model: spec.model.clone(),
+                            solver,
+                            n_samples,
+                            seed: rng.next_u64(),
+                            return_samples: true,
+                            budget: None,
+                        },
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// fnv1a64 over the little-endian bytes of every sample row, row order
+/// preserved — byte-identical samples <=> equal digests.
+pub fn sample_digest(rows: &[Vec<f32>]) -> u64 {
+    let mut bytes = Vec::with_capacity(rows.iter().map(|r| r.len() * 4).sum());
+    for r in rows {
+        for v in r {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fnv1a64(&bytes)
+}
+
+/// One completed request: its schedule slot, digest and latency.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub client: usize,
+    pub index: usize,
+    pub rows: usize,
+    pub latency_ms: f64,
+    pub digest: u64,
+}
+
+/// Aggregate numbers of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub rows: usize,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub rows_per_sec: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p90_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self, name: &str) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(name.to_string())),
+            ("requests", Value::Num(self.requests as f64)),
+            ("rows", Value::Num(self.rows as f64)),
+            ("wall_secs", Value::Num(self.wall_secs)),
+            ("throughput_rps", Value::Num(self.throughput_rps)),
+            ("rows_per_sec", Value::Num(self.rows_per_sec)),
+            ("latency_p50_ms", Value::Num(self.latency_p50_ms)),
+            ("latency_p90_ms", Value::Num(self.latency_p90_ms)),
+            ("latency_p99_ms", Value::Num(self.latency_p99_ms)),
+        ])
+    }
+}
+
+/// A finished run: the report plus per-slot outcomes (sorted by
+/// (client, index)) for digest comparison against another run.
+pub struct LoadRun {
+    pub report: LoadReport,
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+impl LoadRun {
+    /// True iff both runs produced byte-identical samples slot-for-slot.
+    pub fn bitwise_matches(&self, other: &LoadRun) -> bool {
+        self.outcomes.len() == other.outcomes.len()
+            && self
+                .outcomes
+                .iter()
+                .zip(&other.outcomes)
+                .all(|(a, b)| {
+                    (a.client, a.index, a.digest) == (b.client, b.index, b.digest)
+                })
+    }
+}
+
+fn aggregate(outcomes: Vec<RequestOutcome>, wall_secs: f64) -> LoadRun {
+    let mut outcomes = outcomes;
+    outcomes.sort_by_key(|o| (o.client, o.index));
+    let mut lat = Percentiles::default();
+    let mut rows = 0usize;
+    for o in &outcomes {
+        lat.record(o.latency_ms);
+        rows += o.rows;
+    }
+    let wall = wall_secs.max(1e-9);
+    let report = LoadReport {
+        requests: outcomes.len(),
+        rows,
+        wall_secs,
+        throughput_rps: outcomes.len() as f64 / wall,
+        rows_per_sec: rows as f64 / wall,
+        latency_p50_ms: lat.quantile(0.5),
+        latency_p90_ms: lat.quantile(0.9),
+        latency_p99_ms: lat.quantile(0.99),
+    };
+    LoadRun { report, outcomes }
+}
+
+/// Fire the schedule at a coordinator: one thread per client, each issuing
+/// its requests back-to-back. Any request error fails the whole run (the
+/// harness drives known-good routes; an error is a bug, not load).
+pub fn run(coord: &Arc<Coordinator>, spec: &LoadSpec) -> Result<LoadRun> {
+    let plan = schedule(spec);
+    let started = Instant::now();
+    let results: Vec<Result<Vec<RequestOutcome>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .into_iter()
+            .map(|client_plan| {
+                let coord = coord.clone();
+                s.spawn(move || {
+                    client_plan
+                        .into_iter()
+                        .map(|p| run_one(&coord, p))
+                        .collect::<Result<Vec<_>>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("loadgen client panicked")),
+            })
+            .collect()
+    });
+    let wall_secs = started.elapsed().as_secs_f64();
+    let mut outcomes = Vec::new();
+    for r in results {
+        outcomes.extend(r?);
+    }
+    Ok(aggregate(outcomes, wall_secs))
+}
+
+/// The golden twin of [`run`]: the same schedule issued sequentially on
+/// the caller's thread, so every request solves without concurrent
+/// batch-mates. Fused runs must match its digests bit-for-bit.
+pub fn run_sequential(coord: &Arc<Coordinator>, spec: &LoadSpec) -> Result<LoadRun> {
+    let started = Instant::now();
+    let mut outcomes = Vec::new();
+    for client_plan in schedule(spec) {
+        for p in client_plan {
+            outcomes.push(run_one(coord, p)?);
+        }
+    }
+    Ok(aggregate(outcomes, started.elapsed().as_secs_f64()))
+}
+
+fn run_one(coord: &Arc<Coordinator>, p: PlannedRequest) -> Result<RequestOutcome> {
+    let resp = coord
+        .submit(&p.req)
+        .with_context(|| format!("loadgen client {} request {}", p.client, p.index))?;
+    let samples = resp
+        .samples
+        .as_ref()
+        .context("loadgen requests always ask for samples")?;
+    Ok(RequestOutcome {
+        client: p.client,
+        index: p.index,
+        rows: samples.len(),
+        latency_ms: resp.latency_ms,
+        digest: sample_digest(samples),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_and_distinct() {
+        let spec = LoadSpec {
+            solvers: vec!["rk2:n=4".into(), "rk1:n=2".into()],
+            n_choices: vec![1, 3],
+            clients: 3,
+            requests_per_client: 5,
+            ..LoadSpec::new("m", "rk2:n=4")
+        };
+        let a = schedule(&spec);
+        let b = schedule(&spec);
+        assert_eq!(a.len(), 3);
+        for (ca, cb) in a.iter().zip(&b) {
+            assert_eq!(ca.len(), 5);
+            for (pa, pb) in ca.iter().zip(cb) {
+                assert_eq!(pa.req.seed, pb.req.seed, "replay must be identical");
+                assert_eq!(pa.req.solver, pb.req.solver);
+                assert_eq!(pa.req.n_samples, pb.req.n_samples);
+                assert!(spec.n_choices.contains(&pa.req.n_samples));
+            }
+        }
+        // different clients draw different seeds
+        assert_ne!(a[0][0].req.seed, a[1][0].req.seed);
+        // a different root seed reshuffles the schedule
+        let other = schedule(&LoadSpec { seed: 99, ..spec });
+        assert_ne!(a[0][0].req.seed, other[0][0].req.seed);
+    }
+
+    #[test]
+    fn digest_distinguishes_bytes() {
+        let rows_a = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let mut rows_b = rows_a.clone();
+        assert_eq!(sample_digest(&rows_a), sample_digest(&rows_b));
+        rows_b[1][1] = 4.0000005;
+        assert_ne!(sample_digest(&rows_a), sample_digest(&rows_b));
+    }
+}

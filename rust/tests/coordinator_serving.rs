@@ -10,16 +10,16 @@ use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, ServerState, 
 use bespoke_flow::json::Value;
 use bespoke_flow::models::Zoo;
 
-fn coordinator(max_wait_ms: u64) -> Arc<Coordinator> {
-    coordinator_with_workers(max_wait_ms, 1)
+fn coordinator(fuse_window_ms: u64) -> Arc<Coordinator> {
+    coordinator_with_workers(fuse_window_ms, 1)
 }
 
-fn coordinator_with_workers(max_wait_ms: u64, workers_per_route: usize) -> Arc<Coordinator> {
+fn coordinator_with_workers(fuse_window_ms: u64, workers_per_route: usize) -> Arc<Coordinator> {
     let zoo = Arc::new(Zoo::open_default().expect("run `make artifacts`"));
     let cfg = ServeConfig {
         addr: "unused".into(),
         max_batch: 256,
-        max_wait_ms,
+        fuse_window_us: fuse_window_ms * 1000,
         workers_per_route,
         ..ServeConfig::default()
     };

@@ -1,0 +1,279 @@
+//! Tentpole acceptance for the fusion plane (DESIGN.md §10): a request's
+//! samples are **byte-identical** whether it was fused with neighbors or
+//! solved alone, for every fusable solver family, across fusion widths
+//! {2, 3, 7} and mixed per-request batch sizes — at the session level
+//! (row-independence of the hot-loop kernels) and through the live
+//! coordinator (gather/scatter + padded stacking + session reuse).
+//!
+//! Artifact-free: runs against the analytic fixture zoo
+//! (`tests/fixtures/zoo`), no `make artifacts` needed.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+use bespoke_flow::config::ServeConfig;
+use bespoke_flow::coordinator::{Coordinator, SampleRequest};
+use bespoke_flow::models::{AnalyticModel, Zoo};
+use bespoke_flow::runtime::Manifest;
+use bespoke_flow::schedulers::Scheduler;
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::{make_sampler, Sampler, SolveSession};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+fn toy_model(batch: usize) -> AnalyticModel {
+    let pts =
+        Tensor::from_rows(&[vec![0.9, 0.1], vec![-0.7, -0.5], vec![0.2, 1.1]]).unwrap();
+    AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, batch).unwrap()
+}
+
+/// Write an identity theta checkpoint and return its path (the bespoke
+/// family's fixture; identity is enough — fusion cares about row layout,
+/// not theta values).
+fn theta_fixture(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bespoke_fusion_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("theta.json");
+    RawTheta::identity(Base::Rk2, 4).save(&path).unwrap();
+    path
+}
+
+/// Every fusable solver family: fixed-grid RK (uniform + warped grid),
+/// scheduler transfer, and bespoke (rk1 + rk2 bases). dopri5 is
+/// deliberately absent — adaptive step acceptance couples rows through
+/// the batch error norm, so it bypasses fusion (tested separately).
+fn fusable_specs(theta: &std::path::Path) -> Vec<String> {
+    vec![
+        "rk1:n=5".into(),
+        "rk2:n=4".into(),
+        "rk4:n=3".into(),
+        "rk2:n=4:grid=edm".into(),
+        "rk2-target:n=4:sched=vp".into(),
+        format!("bespoke:path={}", theta.display()),
+    ]
+}
+
+/// Mixed per-request row counts for a fusion width (deterministic, all in
+/// 1..=4, summing well under the batch).
+fn mixed_sizes(width: usize) -> Vec<usize> {
+    (0..width).map(|i| 1 + (i * 3 + 1) % 4).collect()
+}
+
+#[test]
+fn fused_rows_equal_solo_rows_for_every_fusable_family() {
+    let b = 24;
+    let model = toy_model(b);
+    let theta = theta_fixture("session");
+    for spec in fusable_specs(&theta) {
+        let sampler = make_sampler(&spec, Scheduler::CondOt).unwrap();
+        for width in [2usize, 3, 7] {
+            let sizes = mixed_sizes(width);
+            assert!(sizes.iter().sum::<usize>() <= b);
+            // per-request noise, each from its own stream — as the
+            // coordinator forks them
+            let parts: Vec<Tensor> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &rows)| {
+                    let mut rng = Rng::new(7_000 + 13 * i as u64);
+                    Tensor::new(rng.normal_vec(rows * 2), vec![rows, 2]).unwrap()
+                })
+                .collect();
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            let fused_x0 = Tensor::stack_rows(&refs, b).unwrap();
+            let fused = sampler.sample(&model, &fused_x0).unwrap();
+            let mut offset = 0usize;
+            for part in &parts {
+                // solo: the same request alone in the zero-padded batch
+                let solo_x0 = Tensor::stack_rows(&[part], b).unwrap();
+                let solo = sampler.sample(&model, &solo_x0).unwrap();
+                assert_eq!(
+                    fused.rows_block(offset, part.rows()).unwrap().data(),
+                    solo.rows_block(0, part.rows()).unwrap().data(),
+                    "{spec}: width {width}, rows at offset {offset} changed under fusion"
+                );
+                offset += part.rows();
+            }
+        }
+    }
+}
+
+#[test]
+fn session_reinit_across_fused_widths_matches_fresh_sessions() {
+    let b = 24;
+    let model = toy_model(b);
+    let theta = theta_fixture("widths");
+    for spec in fusable_specs(&theta) {
+        let sampler = make_sampler(&spec, Scheduler::CondOt).unwrap();
+        let noise = |rows: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            Tensor::new(rng.normal_vec(rows * 2), vec![rows, 2]).unwrap()
+        };
+        // one session hopping widths 6 -> 2 -> 6, vs a fresh session each time
+        let mut session = sampler.begin(&noise(6, 1)).unwrap();
+        for (rows, seed) in [(6usize, 1u64), (2, 2), (6, 3), (3, 4)] {
+            let x0 = noise(rows, seed);
+            session.init(&x0).unwrap();
+            while !session.is_done() {
+                session.step(&model).unwrap();
+            }
+            let fresh = sampler.sample(&model, &x0).unwrap();
+            assert_eq!(
+                session.state().data(),
+                fresh.data(),
+                "{spec}: re-init at width {rows} diverged from a fresh session"
+            );
+        }
+    }
+}
+
+// ---- coordinator-level: gather/scatter through the live fusion plane ----
+
+fn fixture_zoo() -> Arc<Zoo> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/zoo");
+    Arc::new(Zoo::new(Arc::new(Manifest::load(&dir).unwrap())))
+}
+
+fn coordinator(
+    fuse_window_us: u64,
+    fuse_max_rows: usize,
+    workers_per_route: usize,
+) -> Arc<Coordinator> {
+    let cfg = ServeConfig {
+        addr: "unused".into(),
+        fuse_window_us,
+        fuse_max_rows,
+        workers_per_route,
+        ..ServeConfig::default()
+    };
+    Arc::new(Coordinator::new(fixture_zoo(), cfg))
+}
+
+fn req(solver: &str, n_samples: usize, seed: u64) -> SampleRequest {
+    SampleRequest {
+        model: "checker2-ot".into(),
+        solver: solver.into(),
+        n_samples,
+        seed,
+        return_samples: true,
+        budget: None,
+    }
+}
+
+#[test]
+fn concurrent_fused_requests_match_solo_golden_bitwise() {
+    let theta = theta_fixture("coord");
+    let specs = [
+        "rk2:n=4".to_string(),
+        "rk2:n=4:grid=edm".to_string(),
+        "rk2-target:n=4:sched=vp".to_string(),
+        format!("bespoke:path={}", theta.display()),
+    ];
+    // fuse_max_rows = 1: the solo golden — every chunk solves alone
+    let solo = coordinator(0, 1, 1);
+    // long gather window so concurrent requests reliably fuse
+    let fused = coordinator(80_000, 0, 1);
+    for solver in &specs {
+        for width in [2usize, 3, 7] {
+            let reqs: Vec<SampleRequest> = (0..width)
+                .map(|i| req(solver, 1 + i % 2, 40_000 + 17 * width as u64 + i as u64))
+                .collect();
+            let golden: Vec<Vec<Vec<f32>>> = reqs
+                .iter()
+                .map(|r| solo.submit(r).unwrap().samples.unwrap())
+                .collect();
+            let barrier = Arc::new(Barrier::new(width));
+            let got: Vec<(usize, Vec<Vec<f32>>, u64)> = std::thread::scope(|s| {
+                let handles: Vec<_> = reqs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        let fused = fused.clone();
+                        let barrier = barrier.clone();
+                        s.spawn(move || {
+                            barrier.wait();
+                            let resp = fused.submit(r).unwrap();
+                            (i, resp.samples.unwrap(), resp.fused_rows)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (i, samples, fused_rows) in got {
+                assert_eq!(
+                    samples, golden[i],
+                    "{solver}: request {i} of width-{width} group not bitwise \
+                     equal to its solo run"
+                );
+                assert!(
+                    fused_rows >= reqs[i].n_samples as u64,
+                    "fused_rows accounting below the request's own rows"
+                );
+            }
+        }
+    }
+    // the storm above must actually have exercised fusion
+    assert!(
+        fused.metrics.event_count("fuse_flush") > 0,
+        "no fused flush happened — gather window logic broken?"
+    );
+    assert!(fused.metrics.event_count("fused_rows") >= 2);
+    // and the solo coordinator must never have fused
+    assert_eq!(solo.metrics.event_count("fuse_flush"), 0);
+    assert_eq!(solo.metrics.event_count("fused_rows"), 0);
+}
+
+#[test]
+fn dopri5_bypasses_fusion_and_stays_deterministic() {
+    let fused = coordinator(60_000, 0, 1);
+    let solo = coordinator(0, 1, 1);
+    let reqs: Vec<SampleRequest> =
+        (0..3).map(|i| req("dopri5:tol=1e-4", 1 + i % 2, 90 + i as u64)).collect();
+    let golden: Vec<Vec<Vec<f32>>> =
+        reqs.iter().map(|r| solo.submit(r).unwrap().samples.unwrap()).collect();
+    let barrier = Arc::new(Barrier::new(reqs.len()));
+    let got: Vec<(usize, Vec<Vec<f32>>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let fused = fused.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    (i, fused.submit(r).unwrap().samples.unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, samples) in got {
+        assert_eq!(samples, golden[i], "dopri5 request {i} not deterministic");
+    }
+    // adaptive solves never share a launch, so no fusion events ever fire
+    assert_eq!(fused.metrics.event_count("fuse_flush"), 0);
+    assert_eq!(fused.metrics.event_count("fused_rows"), 0);
+}
+
+#[test]
+fn fuse_max_rows_caps_fused_launches() {
+    // cap of 2: four concurrent 1-row requests need >= 2 launches
+    let coord = coordinator(60_000, 2, 1);
+    let barrier = Arc::new(Barrier::new(4));
+    std::thread::scope(|s| {
+        for i in 0..4u64 {
+            let coord = coord.clone();
+            let barrier = barrier.clone();
+            s.spawn(move || {
+                barrier.wait();
+                let resp = coord.submit(&req("rk2:n=4", 1, 500 + i)).unwrap();
+                assert!(resp.fused_rows <= 2, "cap ignored: {} rows", resp.fused_rows);
+                assert_eq!(resp.samples.unwrap().len(), 1);
+            });
+        }
+    });
+    let snap = coord.metrics.snapshot();
+    let route = snap.get("per_route").unwrap().get("checker2-ot/rk2:n=4").unwrap();
+    let batches = route.get("batches").unwrap().as_usize().unwrap();
+    assert!(batches >= 2, "4 one-row requests under a 2-row cap need >= 2 launches");
+}

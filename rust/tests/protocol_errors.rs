@@ -1,0 +1,115 @@
+//! Protocol error paths: unknown `cmd`, malformed JSON, invalid UTF-8,
+//! oversized request lines, and `budget` + `solver` both set must each
+//! produce a structured `{"ok": false, "error": ...}` response — never a
+//! panic, never a dropped connection. The connection stays usable after
+//! every error.
+//!
+//! Artifact-free: runs a sampling-only server over the analytic fixture
+//! zoo.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bespoke_flow::config::ServeConfig;
+use bespoke_flow::coordinator::{handle_line, serve, Coordinator, ServerState};
+use bespoke_flow::json::Value;
+use bespoke_flow::models::Zoo;
+use bespoke_flow::runtime::Manifest;
+
+fn fixture_state() -> ServerState {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/zoo");
+    let zoo = Arc::new(Zoo::new(Arc::new(Manifest::load(&dir).unwrap())));
+    ServerState::sampling_only(Arc::new(Coordinator::new(zoo, ServeConfig::default())))
+}
+
+fn expect_error(v: &Value, needle: &str) {
+    assert!(
+        !v.get("ok").unwrap().as_bool().unwrap(),
+        "expected an error, got: {}",
+        v.to_string_compact()
+    );
+    let msg = v.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(
+        msg.to_lowercase().contains(&needle.to_lowercase()),
+        "error {msg:?} does not mention {needle:?}"
+    );
+}
+
+#[test]
+fn handle_line_rejects_every_malformed_shape_structurally() {
+    let state = fixture_state();
+    expect_error(&handle_line(&state, r#"{"cmd":"warp"}"#), "unknown cmd");
+    expect_error(&handle_line(&state, "not json at all"), "bad request");
+    expect_error(&handle_line(&state, r#"{"cmd":"sample""#), "bad request");
+    expect_error(&handle_line(&state, r#"{"n_samples":4}"#), "bad request");
+    expect_error(
+        &handle_line(
+            &state,
+            r#"{"cmd":"sample","model":"checker2-ot","solver":"rk2:n=4","budget":{"nfe_max":8},"n_samples":2}"#,
+        ),
+        "either solver or budget",
+    );
+    expect_error(
+        &handle_line(&state, r#"{"cmd":"sample","model":"checker2-ot","n_samples":2}"#),
+        "solver spec or a budget",
+    );
+    // valid commands still work on the same state
+    let pong = handle_line(&state, r#"{"cmd":"ping"}"#);
+    assert!(pong.get("ok").unwrap().as_bool().unwrap());
+}
+
+#[test]
+fn tcp_error_paths_answer_structurally_and_keep_the_connection() {
+    let addr = "127.0.0.1:7398";
+    {
+        let state = fixture_state();
+        std::thread::spawn(move || serve(state, addr));
+    }
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask_raw = |bytes: &[u8]| -> Value {
+        writer.write_all(bytes).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut out = String::new();
+        reader.read_line(&mut out).expect("server must answer every line");
+        assert!(!out.is_empty(), "server dropped the connection");
+        Value::parse(&out).unwrap_or_else(|e| panic!("unparseable response {out:?}: {e:#}"))
+    };
+
+    expect_error(&ask_raw(br#"{"cmd":"warp"}"#), "unknown cmd");
+    expect_error(&ask_raw(b"{ this is not json"), "bad request");
+    expect_error(
+        &ask_raw(
+            br#"{"cmd":"sample","model":"checker2-ot","solver":"rk2:n=4","budget":{"nfe_max":8},"n_samples":2}"#,
+        ),
+        "either solver or budget",
+    );
+    // invalid UTF-8: lossily decoded, fails JSON parsing, connection lives
+    expect_error(&ask_raw(&[0xff, 0xfe, 0x80, b'x']), "bad request");
+
+    // oversized request line: structured error, excess discarded, and the
+    // connection still serves afterwards
+    let oversized = vec![b'a'; bespoke_flow::coordinator::server::MAX_LINE_BYTES + 4096];
+    expect_error(&ask_raw(&oversized), "exceeds");
+
+    // a real command straight after every error path
+    let resp = ask_raw(
+        br#"{"cmd":"sample","model":"checker2-ot","solver":"rk2:n=4","n_samples":3,"seed":1,"return_samples":true}"#,
+    );
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{}", resp.to_string_compact());
+    assert_eq!(resp.get("samples").unwrap().as_arr().unwrap().len(), 3);
+    // fusion accounting fields are present on the wire
+    assert!(resp.get("solve_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(resp.get("fused_rows").unwrap().as_usize().unwrap() >= 3);
+}

@@ -332,14 +332,17 @@ fn evaluate_and_frontier_server_plane_without_hlo_artifacts() {
     let unknown = handle_line(&state, r#"{"cmd":"frontier","model":"nope"}"#);
     assert!(!unknown.get("ok").unwrap().as_bool().unwrap());
 
-    // budget routing now resolves (the sample itself still needs the HLO
-    // executable, which the fixture zoo deliberately lacks — resolution
-    // happens first and is what this test pins)
+    // budget routing now resolves, and the routed sample itself serves:
+    // the fixture zoo deliberately lacks the HLO executable, so serving
+    // rides the analytic-oracle fallback (`Zoo::serving_model`, DESIGN.md
+    // §10) — the whole budget plane is artifact-free end to end
     let v = handle_line(
         &state,
-        r#"{"cmd":"sample","model":"checker2-ot","budget":{"nfe_max":8},"n_samples":2}"#,
+        r#"{"cmd":"sample","model":"checker2-ot","budget":{"nfe_max":8},"n_samples":2,"return_samples":true}"#,
     );
-    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "budget sample failed: {v:?}");
+    assert_eq!(v.get("samples").unwrap().as_arr().unwrap().len(), 2);
+    assert!(v.get("nfe").unwrap().as_usize().unwrap() <= 8);
     assert_eq!(coord.metrics.event_count("budget_routed"), 1);
 
     std::fs::remove_dir_all(&root).ok();

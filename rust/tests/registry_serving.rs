@@ -32,7 +32,7 @@ fn temp_root(name: &str) -> PathBuf {
 fn server_state(root: &Path) -> (ServerState, Arc<Registry>) {
     let zoo = Arc::new(Zoo::open_default().expect("run `make artifacts`"));
     let registry = Arc::new(Registry::open(root).unwrap());
-    let cfg = ServeConfig { max_batch: 256, max_wait_ms: 1, ..ServeConfig::default() };
+    let cfg = ServeConfig { max_batch: 256, fuse_window_us: 1_000, ..ServeConfig::default() };
     let coord = Arc::new(Coordinator::with_registry(zoo.clone(), cfg, registry.clone()));
     let train_cfg = TrainConfig {
         iters: 30,

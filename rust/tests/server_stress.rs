@@ -1,0 +1,299 @@
+//! Concurrency stress: 16 loadgen-style clients hammering one JSONL server
+//! over real TCP with a deterministic mixed schedule — `sample` (explicit
+//! and registry-resolved specs), `train`, `evaluate`, `frontier`,
+//! `metrics`, `ping` — while a fresher artifact registers mid-storm to
+//! force hot-swap route retirements under load.
+//!
+//! Assertions: no deadlock or wedge (every client finishes under a
+//! watchdog; every request gets exactly one JSON response), and every
+//! per-seed `sample` payload is byte-identical to a solo golden run
+//! fetched from a `fuse_max_rows = 1` server before the storm.
+//!
+//! Artifact-free: both servers run the analytic fixture zoo.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use bespoke_flow::config::{EvalConfig, QualityConfig, ServeConfig, TrainConfig};
+use bespoke_flow::coordinator::{serve, Coordinator, ServerState};
+use bespoke_flow::json::Value;
+use bespoke_flow::models::Zoo;
+use bespoke_flow::quality::{EvalRunner, EvalRunnerDyn};
+use bespoke_flow::registry::{
+    ArtifactMeta, JobManager, Registry, TrainJobManager, ZooRunner, META_SCHEMA_VERSION,
+};
+use bespoke_flow::runtime::Manifest;
+use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::testing::loadgen::sample_digest;
+
+const CLIENTS: usize = 16;
+const OPS_PER_CLIENT: usize = 12;
+
+fn fixture_zoo() -> Arc<Zoo> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/zoo");
+    Arc::new(Zoo::new(Arc::new(Manifest::load(&dir).unwrap())))
+}
+
+fn identity_meta(val_rmse: f32) -> ArtifactMeta {
+    ArtifactMeta {
+        schema_version: META_SCHEMA_VERSION,
+        model: "checker2-ot".into(),
+        base: Base::Rk2,
+        n: 4,
+        ablation: "full".into(),
+        best_val_rmse: val_rmse,
+        gt_nfe: 100,
+        wall_secs: 0.1,
+        iters: 1,
+        created_at: 1_753_000_000,
+        history: vec![],
+    }
+}
+
+fn server_state(registry: Arc<Registry>, serve_cfg: ServeConfig) -> ServerState {
+    let zoo = fixture_zoo();
+    let coord = Arc::new(Coordinator::with_registry(zoo.clone(), serve_cfg, registry.clone()));
+    let jobs = Arc::new(
+        TrainJobManager::new(
+            registry.clone(),
+            Arc::new(ZooRunner::new(zoo.clone(), TrainConfig::default())),
+            1,
+            Some(coord.metrics.clone()),
+        )
+        .unwrap(),
+    );
+    let eval_runner = Arc::new(EvalRunner::new(
+        zoo,
+        registry.clone(),
+        EvalConfig { gt_tol: 1e-4, seed: 5, metric_samples: 64 },
+        QualityConfig { eval_batches: 1, ..QualityConfig::default() },
+    ));
+    let eval_jobs = Arc::new(
+        JobManager::new(registry, eval_runner as Arc<EvalRunnerDyn>, 1, Some(coord.metrics.clone()))
+            .unwrap(),
+    );
+    ServerState::with_jobs(coord, jobs).with_eval_jobs(eval_jobs)
+}
+
+/// One JSONL connection with a read timeout: a missing response (server
+/// wedge / dropped line) fails the test instead of hanging it.
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn open(addr: &str) -> Conn {
+        let mut last_err = None;
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream
+                        .set_read_timeout(Some(Duration::from_secs(30)))
+                        .unwrap();
+                    let writer = stream.try_clone().unwrap();
+                    return Conn { writer, reader: BufReader::new(stream) };
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        panic!("could not connect to {addr}: {last_err:?}");
+    }
+
+    fn ask(&mut self, line: &str) -> Value {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut out = String::new();
+        self.reader
+            .read_line(&mut out)
+            .expect("response arrived before the 30s read timeout");
+        assert!(!out.is_empty(), "server closed the connection mid-request");
+        Value::parse(&out).unwrap_or_else(|e| panic!("unparseable response {out:?}: {e:#}"))
+    }
+}
+
+/// The deterministic per-client schedule. Sample ops are the ones with a
+/// golden digest; the rest only require a well-formed response.
+enum Op {
+    Sample { solver: String, n: usize, seed: u64 },
+    Train,
+    Evaluate,
+    Frontier,
+    Metrics,
+    Ping,
+}
+
+fn op_for(client: usize, j: usize) -> Op {
+    match (client + j) % 8 {
+        0 | 1 | 2 => Op::Sample {
+            solver: "rk2:n=4".into(),
+            n: 1 + (client * 7 + j) % 8,
+            seed: (1000 * client + j) as u64,
+        },
+        3 => Op::Sample {
+            // registry-resolved: rides the hot-swap retirements
+            solver: "bespoke:model=checker2-ot:n=4".into(),
+            n: 1 + j % 4,
+            seed: (9000 * client + j) as u64,
+        },
+        4 => Op::Train,
+        5 => Op::Evaluate,
+        6 => Op::Frontier,
+        7 => {
+            if j % 2 == 0 {
+                Op::Metrics
+            } else {
+                Op::Ping
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn sample_line(solver: &str, n: usize, seed: u64) -> String {
+    format!(
+        r#"{{"cmd":"sample","model":"checker2-ot","solver":"{solver}","n_samples":{n},"seed":{seed},"return_samples":true}}"#
+    )
+}
+
+fn response_digest(v: &Value) -> u64 {
+    assert!(
+        v.get("ok").unwrap().as_bool().unwrap(),
+        "sample failed: {}",
+        v.to_string_compact()
+    );
+    let rows: Vec<Vec<f32>> = v
+        .get("samples")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_f32_vec().unwrap())
+        .collect();
+    sample_digest(&rows)
+}
+
+#[test]
+fn sixteen_clients_survive_the_storm_with_bitwise_samples() {
+    let root =
+        std::env::temp_dir().join(format!("bespoke_stress_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let registry = Arc::new(Registry::open(&root).unwrap());
+    // v1: the artifact registry-resolved specs serve before the swap
+    let theta = RawTheta::identity(Base::Rk2, 4);
+    registry.register(&theta, &identity_meta(0.5)).unwrap();
+
+    // Golden server: fusion off, queried sequentially before the storm.
+    let golden_addr = "127.0.0.1:7396";
+    {
+        let state = server_state(
+            Arc::new(Registry::open(&root).unwrap()),
+            ServeConfig { fuse_max_rows: 1, ..ServeConfig::default() },
+        );
+        std::thread::spawn(move || serve(state, golden_addr));
+    }
+    let mut golden: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+    {
+        let mut conn = Conn::open(golden_addr);
+        for client in 0..CLIENTS {
+            for j in 0..OPS_PER_CLIENT {
+                if let Op::Sample { solver, n, seed } = op_for(client, j) {
+                    let v = conn.ask(&sample_line(&solver, n, seed));
+                    golden.insert((client, j), response_digest(&v));
+                }
+            }
+        }
+    }
+
+    // Storm server: fusion on, pooled workers, hot-swap mid-storm.
+    let storm_addr = "127.0.0.1:7397";
+    let storm_state = server_state(
+        registry.clone(),
+        ServeConfig { fuse_window_us: 5_000, workers_per_route: 2, ..ServeConfig::default() },
+    );
+    let storm_metrics = storm_state.coord.metrics.clone();
+    {
+        let state = storm_state.clone();
+        std::thread::spawn(move || serve(state, storm_addr));
+    }
+    // wait for the listener
+    drop(Conn::open(storm_addr));
+
+    let (tx, rx) = mpsc::channel::<(usize, usize)>();
+    let golden = Arc::new(golden);
+    let mut handles = Vec::new();
+    for client in 0..CLIENTS {
+        let tx = tx.clone();
+        let golden = golden.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut conn = Conn::open(storm_addr);
+            let mut responses = 0usize;
+            for j in 0..OPS_PER_CLIENT {
+                let v = match op_for(client, j) {
+                    Op::Sample { solver, n, seed } => {
+                        let v = conn.ask(&sample_line(&solver, n, seed));
+                        assert_eq!(
+                            response_digest(&v),
+                            golden[&(client, j)],
+                            "client {client} op {j}: fused storm bytes != solo golden"
+                        );
+                        v
+                    }
+                    // the fixture zoo exports no loss-grad artifacts, so
+                    // train must fail *cleanly* (structured error, no wedge)
+                    Op::Train => conn.ask(
+                        r#"{"cmd":"train","model":"checker2-ot","n":4,"iters":5}"#,
+                    ),
+                    // one shared spec: the storm's evaluate ops coalesce
+                    Op::Evaluate => conn.ask(
+                        r#"{"cmd":"evaluate","model":"checker2-ot","solver":"rk2:n=2","grid":[2],"seed":3}"#,
+                    ),
+                    Op::Frontier => conn.ask(r#"{"cmd":"frontier","model":"checker2-ot"}"#),
+                    Op::Metrics => conn.ask(r#"{"cmd":"metrics"}"#),
+                    Op::Ping => conn.ask(r#"{"cmd":"ping"}"#),
+                };
+                // every response is a JSON object with an "ok" field
+                assert!(v.get("ok").is_ok(), "response without ok: {}", v.to_string_compact());
+                responses += 1;
+            }
+            tx.send((client, responses)).unwrap();
+        }));
+    }
+    drop(tx);
+
+    // Mid-storm hot swap: a fresher (better-RMSE, identical-theta) version
+    // retires the live bespoke route under load. Identical theta bytes
+    // keep the golden digests valid across the swap.
+    std::thread::sleep(Duration::from_millis(10));
+    registry.register(&theta, &identity_meta(0.1)).unwrap();
+
+    // Watchdog: every client must report in; a wedged server trips the
+    // 120s recv timeout instead of hanging the suite.
+    let mut seen = 0usize;
+    for _ in 0..CLIENTS {
+        let (client, responses) = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a client wedged (no result within 120s)");
+        assert_eq!(responses, OPS_PER_CLIENT, "client {client} lost responses");
+        seen += 1;
+    }
+    assert_eq!(seen, CLIENTS);
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+
+    // The storm must have exercised the machinery it claims to cover.
+    assert!(
+        storm_metrics.event_count("fused_rows") > 0,
+        "no cross-request fusion happened during the storm"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}

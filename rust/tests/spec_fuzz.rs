@@ -1,0 +1,185 @@
+//! Property/fuzz round-trip for the solver-spec grammar: ~1k specs drawn
+//! from a seeded RNG across **all** variants (fixed-grid, transfer,
+//! dopri5, checkpoint bespoke, registry-resolved bespoke) plus budget
+//! forms, asserting
+//!
+//! * `parse(display(s)) == s` and `from_json(to_json(s)) == s`, and
+//! * malformed mutations — truncation, duplicated keys, bad numbers,
+//!   empty segments — are rejected with an `Err`, never a panic (a panic
+//!   anywhere inside `parse` fails the property with its reproducing
+//!   seed via `testing::forall`).
+
+use bespoke_flow::json::Value;
+use bespoke_flow::quality::Budget;
+use bespoke_flow::schedulers::Scheduler;
+use bespoke_flow::solvers::grids::GridKind;
+use bespoke_flow::solvers::rk::BaseRk;
+use bespoke_flow::solvers::theta::Base;
+use bespoke_flow::solvers::SolverSpec;
+use bespoke_flow::testing::forall;
+use bespoke_flow::util::Rng;
+
+/// Path/name-safe alphabet: everything the colon-separated grammar can
+/// carry (':' is the segment separator and must not appear; '=' inside a
+/// *value* is legal and deliberately included).
+const NAME_CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_-";
+const PATH_CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_-./=";
+
+fn rand_str(rng: &mut Rng, alphabet: &[u8], max_len: usize) -> String {
+    let len = 1 + rng.below(max_len);
+    (0..len).map(|_| alphabet[rng.below(alphabet.len())] as char).collect()
+}
+
+fn rand_tol(rng: &mut Rng) -> f64 {
+    // positive, finite, spanning the exponent range specs use
+    (1 + rng.below(97)) as f64 * 10f64.powi(-(rng.below(9) as i32))
+}
+
+fn gen_spec(rng: &mut Rng) -> SolverSpec {
+    let bases = [BaseRk::Rk1, BaseRk::Rk2, BaseRk::Rk4];
+    let grids = [GridKind::Uniform, GridKind::Edm, GridKind::Cosine, GridKind::LogSnr];
+    let scheds = [Scheduler::CondOt, Scheduler::Cosine, Scheduler::VarPres, Scheduler::Edm];
+    match rng.below(5) {
+        0 => SolverSpec::Rk {
+            base: bases[rng.below(3)],
+            n: 1 + rng.below(64),
+            grid: grids[rng.below(4)],
+        },
+        1 => SolverSpec::Transfer {
+            base: bases[rng.below(3)],
+            n: 1 + rng.below(64),
+            sched: scheds[rng.below(4)],
+        },
+        2 => {
+            let rtol = rand_tol(rng);
+            // half the cases share rtol == atol to hit the `tol=` form
+            let atol = if rng.below(2) == 0 {
+                rand_tol(rng)
+            } else {
+                rtol
+            };
+            SolverSpec::Dopri5 { rtol, atol, max_steps: 1 + rng.below(1_000_000) }
+        }
+        3 => SolverSpec::Bespoke { path: rand_str(rng, PATH_CHARS, 24) },
+        _ => SolverSpec::BespokeRegistry {
+            model: rand_str(rng, NAME_CHARS, 12),
+            n: 1 + rng.below(64),
+            base: match rng.below(3) {
+                0 => None,
+                1 => Some(Base::Rk1),
+                _ => Some(Base::Rk2),
+            },
+            ablation: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(rand_str(rng, NAME_CHARS, 10))
+            },
+        },
+    }
+}
+
+#[test]
+fn random_specs_roundtrip_through_string_and_json() {
+    forall("spec string+json roundtrip", 1000, |rng, case| {
+        let spec = gen_spec(rng);
+        let shown = spec.to_string();
+        let back = SolverSpec::parse(&shown)
+            .unwrap_or_else(|e| panic!("case {case}: reparse {shown:?}: {e:#}"));
+        assert_eq!(back, spec, "case {case}: display/parse mismatch for {shown:?}");
+        let json = spec.to_json().to_string_compact();
+        let back = SolverSpec::from_json(&Value::parse(&json).unwrap())
+            .unwrap_or_else(|e| panic!("case {case}: JSON reparse {json}: {e:#}"));
+        assert_eq!(back, spec, "case {case}: JSON mismatch for {json}");
+    });
+}
+
+#[test]
+fn malformed_mutations_error_but_never_panic() {
+    forall("spec mutations rejected", 1000, |rng, case| {
+        let spec = gen_spec(rng);
+        let shown = spec.to_string();
+
+        // duplicated key: re-append the first k=v segment
+        if let Some(seg) = shown.split(':').nth(1) {
+            let dup = format!("{shown}:{seg}");
+            assert!(
+                SolverSpec::parse(&dup).is_err(),
+                "case {case}: duplicate key accepted: {dup:?}"
+            );
+        }
+
+        // bad number: corrupt the first digit run after a '='
+        if let Some(pos) = shown
+            .char_indices()
+            .find(|&(i, c)| c.is_ascii_digit() && i > 0 && shown.as_bytes()[i - 1] == b'=')
+            .map(|(i, _)| i)
+        {
+            let bad = format!("{}x{}", &shown[..pos], &shown[pos..]);
+            // paths/names legally contain digits after '=', so only the
+            // numeric kinds must reject; either way parse must not panic
+            let parsed = SolverSpec::parse(&bad);
+            if !matches!(spec, SolverSpec::Bespoke { .. } | SolverSpec::BespokeRegistry { .. }) {
+                assert!(parsed.is_err(), "case {case}: bad number accepted: {bad:?}");
+            }
+        }
+
+        // empty trailing segment and empty value
+        assert!(SolverSpec::parse(&format!("{shown}:")).is_err(), "case {case}");
+        assert!(SolverSpec::parse(&format!("{shown}:n=")).is_err(), "case {case}");
+
+        // truncation sweep: never a panic; anything that still parses must
+        // itself round-trip
+        for cut in 0..shown.len() {
+            if !shown.is_char_boundary(cut) {
+                continue;
+            }
+            if let Ok(sub) = SolverSpec::parse(&shown[..cut]) {
+                let again = SolverSpec::parse(&sub.to_string())
+                    .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+                assert_eq!(again, sub, "case {case}: truncated-spec re-display broke");
+            }
+        }
+    });
+}
+
+#[test]
+fn random_budgets_roundtrip_and_reject_malformed() {
+    forall("budget roundtrip", 256, |rng, case| {
+        let budget = match rng.below(3) {
+            0 => Budget::NfeMax(1 + rng.below(1_000_000) as u64),
+            1 => Budget::LatencyMs((1 + rng.below(100_000)) as f64 / 64.0),
+            _ => Budget::RmseMax((1 + rng.below(100_000)) as f32 / 4096.0),
+        };
+        let shown = budget.to_string();
+        let back =
+            Budget::parse(&shown).unwrap_or_else(|e| panic!("case {case}: {shown:?}: {e:#}"));
+        assert_eq!(back, budget, "case {case}: CLI budget mismatch for {shown:?}");
+        let json = budget.to_json().to_string_compact();
+        let back = Budget::from_json(&Value::parse(&json).unwrap())
+            .unwrap_or_else(|e| panic!("case {case}: {json}: {e:#}"));
+        assert_eq!(back, budget, "case {case}: JSON budget mismatch for {json}");
+    });
+    for bad in [
+        "nfe_max=0",
+        "nfe_max=-3",
+        "nfe_max=abc",
+        "latency_ms=0",
+        "latency_ms=inf",
+        "rmse<=-1",
+        "rmse<=",
+        "steps=4",
+        "",
+    ] {
+        assert!(Budget::parse(bad).is_err(), "should reject {bad:?}");
+    }
+    for bad in [
+        r#"{"nfe_max":0}"#,
+        r#"{}"#,
+        r#"{"nfe_max":1,"latency_ms":2}"#,
+        r#"{"quality":"psnr>=3"}"#,
+        r#"[]"#,
+    ] {
+        let v = Value::parse(bad).unwrap();
+        assert!(Budget::from_json(&v).is_err(), "should reject {bad}");
+    }
+}
