@@ -1,0 +1,339 @@
+//! Analytic trainers for the non-stationary solver families (DESIGN.md
+//! §11): BNS per-step coefficients and the learned-multistep variant.
+//!
+//! Both families keep the time grid fixed and uniform, so each step's
+//! prediction is *linear* in its coefficients and the GT-matching loss
+//!
+//! ```text
+//! L = (1 / (n B d)) sum_i || pred_i(theta) - x*_{i+1} ||^2
+//! ```
+//!
+//! has an exact closed-form gradient — no AOT'd loss-grad executable is
+//! needed (unlike the stationary trainer, whose learned time/scale warp
+//! makes the loss nonlinear in theta). Snapshots are teacher-forced from
+//! the DOPRI5 dense GT solution exactly like `bespoke::trainer`: x*_i is
+//! the trajectory at t_i = i/n and the velocities come from the model
+//! (`snap_velocity = "model"`) or the Hermite derivative of the dense
+//! interpolant (`"hermite"`, the default — zero extra model launches at
+//! O(h^2) snapshot error).
+
+use anyhow::{bail, Result};
+
+use super::adam::Adam;
+use super::gt::GtPool;
+use super::trainer::{TrainOutcome, TrainPoint, TrainProgress};
+use crate::config::TrainConfig;
+use crate::eval::rmse;
+use crate::models::VelocityModel;
+use crate::solvers::bns::{BnsSolver, MultistepSolver};
+use crate::solvers::dopri5::Dopri5;
+use crate::solvers::theta::{Base, Family, RawTheta};
+use crate::solvers::Sampler;
+use crate::tensor::Tensor;
+use crate::util::{Rng, Timer};
+use crate::{log_debug, log_info};
+
+fn dot(a: &Tensor, b: &Tensor) -> f32 {
+    a.data().iter().zip(b.data()).map(|(x, y)| x * y).sum()
+}
+
+/// Train a non-stationary solver family against `model`'s GT trajectories.
+/// `window` is only read for [`Family::Multistep`].
+pub fn train_family(
+    model: &dyn VelocityModel,
+    family: Family,
+    base: Base,
+    n: usize,
+    window: usize,
+    cfg: &TrainConfig,
+) -> Result<TrainOutcome> {
+    train_family_with_progress(model, family, base, n, window, cfg, &mut |_| {})
+}
+
+/// [`train_family`] with a per-iteration progress callback (the hook
+/// `TrainJobManager` uses for live `job_status`), mirroring
+/// `bespoke::trainer::train_with_progress`.
+pub fn train_family_with_progress(
+    model: &dyn VelocityModel,
+    family: Family,
+    base: Base,
+    n: usize,
+    window: usize,
+    cfg: &TrainConfig,
+    on_progress: &mut dyn FnMut(&TrainProgress),
+) -> Result<TrainOutcome> {
+    if family == Family::Stationary {
+        bail!("stationary bespoke trains via bespoke::train (AOT loss-grad path)");
+    }
+    if cfg.ablation != "full" {
+        bail!(
+            "family {} has no time/scale split: only ablation=full is supported (got {:?})",
+            family.name(),
+            cfg.ablation
+        );
+    }
+    let timer = Timer::start();
+    let b = model.batch();
+    let d = model.dim();
+    let p = RawTheta::n_params_for(family, base, n, window)?;
+    let mut theta = RawTheta::identity_for(family, base, n, window)?;
+
+    // Multistep: coefficients for history that does not exist yet (j > i,
+    // the warm-up steps) are dead at serving time; mask their grads so
+    // they stay at their identity init of 0.
+    let mask: Option<Vec<f32>> = match family {
+        Family::Multistep => {
+            let k = 1 + window;
+            let mut m = vec![1.0f32; p];
+            for i in 0..n {
+                for j in 0..window {
+                    if j > i {
+                        m[k * i + 1 + j] = 0.0;
+                    }
+                }
+            }
+            Some(m)
+        }
+        _ => None,
+    };
+
+    let mut opt = Adam::new(p, cfg.lr);
+    let mut pool = GtPool::new(model, cfg.pool_batches, cfg.gt_tol, cfg.seed)?;
+
+    // Validation set: fresh noise batches + their GT solutions (same seed
+    // split as the stationary trainer).
+    let mut vrng = Rng::new(cfg.seed ^ 0x7a11d);
+    let gt_solver = Dopri5 { rtol: cfg.gt_tol, atol: cfg.gt_tol, max_steps: 100_000 };
+    let mut val: Vec<(Tensor, Tensor)> = Vec::new();
+    for _ in 0..cfg.val_batches {
+        let x0 = Tensor::new(vrng.normal_vec(b * d), vec![b, d])?;
+        let sol = gt_solver.solve_model_dense(model, &x0)?;
+        pool.gt_nfe += sol.nfe as u64;
+        val.push((x0, sol.final_state().clone()));
+    }
+
+    let h = 1.0f32 / n as f32;
+    let norm = 2.0 / (n as f32 * (b * d) as f32);
+    let use_model_velocity = cfg.snap_velocity == "model";
+    let rk2 = base == Base::Rk2;
+
+    let mut best = theta.clone();
+    let mut best_val = f32::INFINITY;
+    let mut history = Vec::new();
+
+    for iter in 1..=cfg.iters {
+        if cfg.refresh_every > 0 && iter % cfg.refresh_every == 0 {
+            pool.refresh_one(model)?;
+        }
+
+        // --- teacher-forced snapshots on the fixed uniform grid ----------
+        // x*_i = x(t_i); u*_i the matching velocities; for bns-rk2 also
+        // the inner-stage velocity at the Euler midpoint ("hermite"
+        // substitutes the trajectory derivative at t_i + h/2, an O(h^2)
+        // approximation of u(mid, t_i + h/2) since mid deviates from the
+        // trajectory by O(h^2)).
+        let (xs, us, u2s) = {
+            let entry = pool.pick();
+            let mut xs = Vec::with_capacity(n + 1);
+            for i in 0..=n {
+                xs.push(entry.dense.eval(i as f32 * h));
+            }
+            let mut us = Vec::with_capacity(n);
+            for (i, x) in xs.iter().enumerate().take(n) {
+                let t = i as f32 * h;
+                if use_model_velocity {
+                    us.push(model.eval(x, t)?);
+                } else {
+                    us.push(entry.dense.eval_deriv(t));
+                }
+            }
+            let mut u2s = Vec::new();
+            if family == Family::Bns && rk2 {
+                for i in 0..n {
+                    let t_mid = (i as f32 + 0.5) * h;
+                    if use_model_velocity {
+                        let mut mid = xs[i].clone();
+                        mid.axpy(0.5 * h, &us[i])?;
+                        u2s.push(model.eval(&mid, t_mid)?);
+                    } else {
+                        u2s.push(entry.dense.eval_deriv(t_mid));
+                    }
+                }
+            }
+            (xs, us, u2s)
+        };
+
+        // --- closed-form loss + gradient ---------------------------------
+        //   r_i      = pred_i(theta) - x*_{i+1}
+        //   dL/dcoef = (2 / (n B d)) <r_i, d pred_i / d coef>
+        let mut grad = vec![0.0f32; p];
+        let mut acc = 0.0f32;
+        match family {
+            Family::Bns => {
+                let k = 1 + base.evals_per_step();
+                for i in 0..n {
+                    let c = &theta.raw[k * i..k * (i + 1)];
+                    let mut r = xs[i].scale(c[0]);
+                    r.axpy(h * c[1], &us[i])?;
+                    if rk2 {
+                        r.axpy(h * c[2], &u2s[i])?;
+                    }
+                    r.axpy(-1.0, &xs[i + 1])?;
+                    acc += dot(&r, &r);
+                    grad[k * i] = norm * dot(&r, &xs[i]);
+                    grad[k * i + 1] = norm * h * dot(&r, &us[i]);
+                    if rk2 {
+                        grad[k * i + 2] = norm * h * dot(&r, &u2s[i]);
+                    }
+                }
+            }
+            Family::Multistep => {
+                let k = 1 + window;
+                for i in 0..n {
+                    let c = &theta.raw[k * i..k * (i + 1)];
+                    let mut r = xs[i].scale(c[0]);
+                    for j in 0..=i.min(window - 1) {
+                        r.axpy(h * c[1 + j], &us[i - j])?;
+                    }
+                    r.axpy(-1.0, &xs[i + 1])?;
+                    acc += dot(&r, &r);
+                    grad[k * i] = norm * dot(&r, &xs[i]);
+                    for j in 0..=i.min(window - 1) {
+                        grad[k * i + 1 + j] = norm * h * dot(&r, &us[i - j]);
+                    }
+                }
+            }
+            Family::Stationary => unreachable!(),
+        }
+        let loss = acc / (n as f32 * (b * d) as f32);
+
+        opt.update(&mut theta.raw, &grad, mask.as_deref());
+
+        // --- validation ---------------------------------------------------
+        let mut val_rmse = f32::NAN;
+        if iter % cfg.val_every == 0 || iter == cfg.iters {
+            let sampler: Box<dyn Sampler> = match family {
+                Family::Bns => Box::new(BnsSolver::new(&theta)?),
+                Family::Multistep => Box::new(MultistepSolver::new(&theta)?),
+                Family::Stationary => unreachable!(),
+            };
+            let mut accv = 0.0f32;
+            for (x0, gt) in &val {
+                let out = sampler.sample(model, x0)?;
+                accv += rmse(&out, gt);
+            }
+            val_rmse = accv / val.len() as f32;
+            if val_rmse < best_val {
+                best_val = val_rmse;
+                best = theta.clone();
+            }
+            log_info!(
+                "[train-{} {} {} n={}] iter {:4} loss {:.5} val_rmse {:.5}",
+                family.name(),
+                model.name(),
+                base.name(),
+                n,
+                iter,
+                loss,
+                val_rmse
+            );
+        } else {
+            log_debug!("[train-{}] iter {iter} loss {loss:.5}", family.name());
+        }
+        history.push(TrainPoint { iter, loss, val_rmse });
+        on_progress(&TrainProgress { iter, iters_total: cfg.iters, loss, val_rmse });
+    }
+
+    Ok(TrainOutcome {
+        best,
+        best_val_rmse: best_val,
+        last: theta,
+        history,
+        gt_nfe: pool.gt_nfe,
+        wall_secs: timer.elapsed_secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticModel;
+    use crate::schedulers::Scheduler;
+
+    fn toy() -> AnalyticModel {
+        let pts = Tensor::from_rows(&[vec![0.9, 0.1], vec![-0.7, -0.5], vec![0.2, 1.1]]).unwrap();
+        AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, 8).unwrap()
+    }
+
+    fn quick_cfg(iters: usize) -> TrainConfig {
+        TrainConfig {
+            iters,
+            lr: 0.02,
+            pool_batches: 2,
+            val_batches: 1,
+            val_every: 25,
+            ..TrainConfig::default()
+        }
+    }
+
+    /// RMSE of a sampler on fresh GT batches (identity baseline metric).
+    fn eval_rmse(model: &AnalyticModel, sampler: &dyn Sampler, seed: u64) -> f32 {
+        let gt = Dopri5 { rtol: 1e-5, atol: 1e-5, max_steps: 100_000 };
+        let mut rng = Rng::new(seed);
+        let x0 = Tensor::new(rng.normal_vec(8 * 2), vec![8, 2]).unwrap();
+        let sol = gt.solve_model_dense(model, &x0).unwrap();
+        let out = sampler.sample(model, &x0).unwrap();
+        rmse(&out, sol.final_state())
+    }
+
+    #[test]
+    fn bns_training_beats_identity() {
+        let model = toy();
+        for base in [Base::Rk1, Base::Rk2] {
+            let out =
+                train_family(&model, Family::Bns, base, 4, 0, &quick_cfg(150)).unwrap();
+            assert!(out.best_val_rmse.is_finite());
+            assert_eq!(out.history.len(), 150);
+            let identity = RawTheta::identity_for(Family::Bns, base, 4, 0).unwrap();
+            let id_rmse =
+                eval_rmse(&model, &BnsSolver::new(&identity).unwrap(), 77);
+            let tr_rmse =
+                eval_rmse(&model, &BnsSolver::new(&out.best).unwrap(), 77);
+            assert!(
+                tr_rmse < id_rmse,
+                "{base:?}: trained {tr_rmse} not better than identity {id_rmse}"
+            );
+        }
+    }
+
+    #[test]
+    fn multistep_training_beats_identity_and_masks_warmup() {
+        let model = toy();
+        let (n, window) = (4usize, 3usize);
+        let out =
+            train_family(&model, Family::Multistep, Base::Rk1, n, window, &quick_cfg(150))
+                .unwrap();
+        let identity = RawTheta::identity_for(Family::Multistep, Base::Rk1, n, window).unwrap();
+        let id_rmse = eval_rmse(&model, &MultistepSolver::new(&identity).unwrap(), 78);
+        let tr_rmse = eval_rmse(&model, &MultistepSolver::new(&out.best).unwrap(), 78);
+        assert!(tr_rmse < id_rmse, "trained {tr_rmse} not better than identity {id_rmse}");
+        // warm-up coefficients (j > i) must never move off their 0 init
+        let k = 1 + window;
+        for i in 0..n {
+            for j in 0..window {
+                if j > i {
+                    assert_eq!(out.last.raw[k * i + 1 + j], 0.0, "step {i} coeff j={j} moved");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_stationary_and_ablations() {
+        let model = toy();
+        assert!(train_family(&model, Family::Stationary, Base::Rk2, 4, 0, &quick_cfg(1))
+            .is_err());
+        let cfg = TrainConfig { ablation: "time-only".into(), ..quick_cfg(1) };
+        assert!(train_family(&model, Family::Bns, Base::Rk2, 4, 0, &cfg).is_err());
+    }
+}

@@ -15,11 +15,19 @@
 //! The GT pool implements the paper's suggested "pre-process sampling
 //! paths" optimization: DOPRI5 runs once per pool slot instead of once per
 //! iteration (`pool_batches`, `refresh_every` in `TrainConfig`).
+//!
+//! The non-stationary families (BNS per-step coefficients and learned
+//! multistep, DESIGN.md §11) train in [`families`] with the same GT pool
+//! and teacher-forced snapshots, but the fixed uniform grid makes their
+//! loss linear in the coefficients — the gradient is closed-form and no
+//! AOT'd loss-grad executable is needed.
 
 pub mod adam;
+pub mod families;
 pub mod gt;
 pub mod trainer;
 
 pub use adam::Adam;
+pub use families::{train_family, train_family_with_progress};
 pub use gt::GtPool;
 pub use trainer::{train, train_with_progress, TrainOutcome, TrainPoint, TrainProgress};

@@ -72,6 +72,12 @@ pub struct TrainConfig {
     /// (exact, n+1 launches/iter); "hermite" differentiates the dense GT
     /// interpolant (no launches; error O(h^2) << GT tol). §Perf knob.
     pub snap_velocity: String,
+    /// Solver family to train: "stationary" (paper's Bespoke theta) |
+    /// "bns" (per-step coefficients) | "multistep" (learned multistep).
+    /// See DESIGN.md §11.
+    pub family: String,
+    /// History window for family = "multistep" (ignored otherwise).
+    pub window: usize,
 }
 
 impl Default for TrainConfig {
@@ -87,6 +93,8 @@ impl Default for TrainConfig {
             val_every: 50,
             ablation: "full".into(),
             snap_velocity: "hermite".into(),
+            family: "stationary".into(),
+            window: 2,
         }
     }
 }
@@ -205,6 +213,8 @@ impl Config {
                             "snap_velocity" => {
                                 self.train.snap_velocity = val.as_str()?.to_string()
                             }
+                            "family" => self.train.family = val.as_str()?.to_string(),
+                            "window" => self.train.window = val.as_usize()?,
                             _ => anyhow::bail!("unknown train key {k:?}"),
                         }
                     }
@@ -270,8 +280,10 @@ mod tests {
         assert_eq!(cfg.train.lr, 2e-3);
         assert_eq!(cfg.registry.root, "out/registry");
         assert_eq!(cfg.registry.max_jobs, 1);
+        assert_eq!(cfg.train.family, "stationary");
+        assert_eq!(cfg.train.window, 2);
         let v = Value::parse(
-            r#"{"train": {"iters": 42, "ablation": "time-only"},
+            r#"{"train": {"iters": 42, "ablation": "time-only", "family": "bns", "window": 3},
                 "serve": {"max_batch": 8, "workers_per_route": 4, "compute_threads": 2,
                           "fuse_window_us": 250, "fuse_max_rows": 16},
                 "registry": {"root": "/tmp/reg", "max_jobs": 2, "keep_last_k": 5},
@@ -281,6 +293,8 @@ mod tests {
         cfg.apply(&v).unwrap();
         assert_eq!(cfg.train.iters, 42);
         assert_eq!(cfg.train.ablation, "time-only");
+        assert_eq!(cfg.train.family, "bns");
+        assert_eq!(cfg.train.window, 3);
         assert_eq!(cfg.serve.max_batch, 8);
         assert_eq!(cfg.serve.workers_per_route, 4);
         assert_eq!(cfg.serve.compute_threads, 2);

@@ -588,9 +588,12 @@ impl Coordinator {
         if served.dim() == 0 {
             bail!("model {model} has zero dim");
         }
-        // Fixed-grid solvers (rk/bespoke/transfer) are lockstep across rows
-        // and join the fusion plane; adaptive dopri5 couples rows through
-        // the batch error norm, so its requests always solve alone.
+        // Fixed-grid solvers (rk/bespoke/transfer/bns/multistep/ab) are
+        // lockstep across rows and join the fusion plane — the non-
+        // stationary families keep per-row state (history rings) strictly
+        // row-independent, so fused and solo solves stay byte-identical.
+        // Adaptive dopri5 couples rows through the batch error norm, so
+        // its requests always solve alone.
         let lockstep = !matches!(spec, SolverSpec::Dopri5 { .. });
 
         let mut routes = self.routes.lock().unwrap();

@@ -11,6 +11,9 @@
 //! {"cmd": "ping"}
 //! {"cmd": "train", "model": "checker2-ot", "n": 8, "base": "rk2",
 //!  "ablation": "full", "iters": 300, "seed": 17}
+//! {"cmd": "train", "model": "checker2-ot", "n": 8, "family": "bns"}
+//! {"cmd": "train", "model": "checker2-ot", "n": 8, "base": "rk1",
+//!  "family": "multistep", "window": 3}
 //! {"cmd": "job_status", "job_id": 1}
 //! {"cmd": "jobs"}
 //! {"cmd": "evaluate", "model": "checker2-ot", "solver": "rk2:n=8",
@@ -34,7 +37,8 @@
 //! `{"ok": true, "event": "done", ...}` summary line.
 //!
 //! `train` enqueues an asynchronous training job (`base`, `ablation`,
-//! `iters`, `seed` optional; defaults rk2 / full / server TrainConfig) and
+//! `family`, `window`, `iters`, `seed` optional; defaults rk2 / full /
+//! stationary / server TrainConfig) and
 //! replies immediately with `{"ok": true, "job_id": N, "state": "queued",
 //! "coalesced": false}`; poll with `job_status`. Once `"state"` is
 //! `"done"`, `{"cmd": "sample", "solver": "bespoke:model=M:n=K"}` resolves
@@ -46,7 +50,7 @@ use super::batcher::{SampleRequest, SampleResponse, TrajRequest, TrajStep};
 use crate::json::Value;
 use crate::quality::{Budget, EvalJobSnapshot, EvalJobSpec, Frontier};
 use crate::registry::{ArtifactRecord, EvalRecord, JobId, TrainJobSnapshot, TrainJobSpec};
-use crate::solvers::theta::Base;
+use crate::solvers::theta::{Base, Family};
 
 #[derive(Debug)]
 pub enum Command {
@@ -130,6 +134,11 @@ pub fn parse_command(line: &str) -> Result<Command> {
                     .transpose()?
                     .unwrap_or("full")
                     .to_string(),
+                family: match v.get_opt("family") {
+                    Some(f) => Family::parse(f.as_str()?)?,
+                    None => Family::Stationary,
+                },
+                window: v.get_opt("window").map(|s| s.as_usize()).transpose()?,
                 iters: v.get_opt("iters").map(|s| s.as_usize()).transpose()?,
                 seed: v.get_opt("seed").map(|s| s.as_usize()).transpose()?.map(|s| s as u64),
             };
@@ -138,6 +147,9 @@ pub fn parse_command(line: &str) -> Result<Command> {
             }
             if spec.iters == Some(0) {
                 bail!("iters must be >= 1");
+            }
+            if spec.window == Some(0) {
+                bail!("window must be >= 1");
             }
             Ok(Command::Train(spec))
         }
@@ -179,6 +191,7 @@ pub fn artifact_json(rec: &ArtifactRecord) -> Value {
         ("base", Value::Str(rec.key.base.name().into())),
         ("n", Value::Num(rec.key.n as f64)),
         ("ablation", Value::Str(rec.key.ablation.clone())),
+        ("family", Value::Str(rec.family.name().into())),
         ("version", Value::Num(rec.version as f64)),
         ("file", Value::Str(rec.file.clone())),
         ("content_hash", Value::Str(rec.content_hash.clone())),
@@ -197,6 +210,7 @@ pub fn job_json(s: &TrainJobSnapshot) -> Value {
         ("base", Value::Str(s.spec.base.name().into())),
         ("n", Value::Num(s.spec.n as f64)),
         ("ablation", Value::Str(s.spec.ablation.clone())),
+        ("family", Value::Str(s.spec.family.name().into())),
         ("state", Value::Str(s.state.name().into())),
         ("iters_done", Value::Num(s.iters_done as f64)),
         ("iters_total", Value::Num(s.iters_total as f64)),
@@ -407,6 +421,8 @@ mod tests {
                 assert_eq!(s.n, 8);
                 assert_eq!(s.base, Base::Rk2);
                 assert_eq!(s.ablation, "full");
+                assert_eq!(s.family, Family::Stationary);
+                assert_eq!(s.window, None);
                 assert_eq!(s.iters, None);
                 assert_eq!(s.seed, None);
             }
@@ -425,12 +441,37 @@ mod tests {
             }
             _ => panic!("wrong command"),
         }
-        // rejections: missing model/n, bad base, zero n/iters
+        // non-stationary families and the multistep window parse through
+        let c = parse_command(
+            r#"{"cmd":"train","model":"m","n":4,"base":"rk1","family":"multistep","window":3}"#,
+        )
+        .unwrap();
+        match c {
+            Command::Train(s) => {
+                assert_eq!(s.family, Family::Multistep);
+                assert_eq!(s.window, Some(3));
+            }
+            _ => panic!("wrong command"),
+        }
+        match parse_command(r#"{"cmd":"train","model":"m","n":4,"family":"bns"}"#).unwrap() {
+            Command::Train(s) => {
+                assert_eq!(s.family, Family::Bns);
+                assert_eq!(s.window, None);
+            }
+            _ => panic!("wrong command"),
+        }
+        // rejections: missing model/n, bad base, zero n/iters/window,
+        // unknown family
         assert!(parse_command(r#"{"cmd":"train","n":4}"#).is_err());
         assert!(parse_command(r#"{"cmd":"train","model":"m"}"#).is_err());
         assert!(parse_command(r#"{"cmd":"train","model":"m","n":0}"#).is_err());
         assert!(parse_command(r#"{"cmd":"train","model":"m","n":4,"base":"rk9"}"#).is_err());
         assert!(parse_command(r#"{"cmd":"train","model":"m","n":4,"iters":0}"#).is_err());
+        assert!(parse_command(r#"{"cmd":"train","model":"m","n":4,"family":"warp"}"#).is_err());
+        assert!(parse_command(
+            r#"{"cmd":"train","model":"m","n":4,"family":"multistep","window":0}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -558,6 +599,8 @@ mod tests {
                 base: Base::Rk2,
                 n: 4,
                 ablation: "full".into(),
+                family: Family::Stationary,
+                window: None,
                 iters: None,
                 seed: None,
             },

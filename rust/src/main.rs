@@ -27,8 +27,8 @@ use bespoke_flow::registry::{
     sidecar_path, ArtifactMeta, JobManager, JobRunner, Registry, TrainJobManager, ZooRunner,
 };
 use bespoke_flow::runtime::{Executable, Manifest};
-use bespoke_flow::solvers::theta::Base;
-use bespoke_flow::solvers::SolverSpec;
+use bespoke_flow::solvers::theta::{Base, Family};
+use bespoke_flow::solvers::{sampler_for_theta, Dopri5, Sampler, SolverSpec};
 use bespoke_flow::testing::loadgen;
 use bespoke_flow::{bail, Context, Result};
 
@@ -257,18 +257,55 @@ fn run() -> Result<()> {
             let model_name = args.flags.get("model").context("--model required")?;
             let base = Base::parse(args.flags.get("base").map(String::as_str).unwrap_or("rk2"))?;
             let n: usize = args.flags.get("n").context("--n required")?.parse()?;
-            let model = zoo.hlo(model_name)?;
-            let lg = zoo.manifest().lossgrad(model_name, base.name(), n)?;
-            let exe = Executable::load(&zoo.manifest().path(&lg.file))?;
-            let out = bespoke_flow::bespoke::train(&model, &exe, base, n, &cfg.train)?;
+            let family = match args.flags.get("family") {
+                Some(f) => Family::parse(f)?,
+                None => Family::Stationary,
+            };
+            let window = args
+                .flags
+                .get("window")
+                .map(|w| w.parse::<usize>())
+                .transpose()
+                .context("bad --window")?;
+            if window.is_some() && family != Family::Multistep {
+                bail!("--window is only valid with --family multistep");
+            }
+            let out = match family {
+                Family::Stationary => {
+                    let model = zoo.hlo(model_name)?;
+                    let lg = zoo.manifest().lossgrad(model_name, base.name(), n)?;
+                    let exe = Executable::load(&zoo.manifest().path(&lg.file))?;
+                    bespoke_flow::bespoke::train(&model, &exe, base, n, &cfg.train)?
+                }
+                _ => {
+                    // Closed-form family trainer: needs a servable model
+                    // only, no AOT'd loss-grad artifact.
+                    let model = zoo.serving_model(model_name)?;
+                    let w = window.unwrap_or(cfg.train.window);
+                    bespoke_flow::bespoke::train_family(
+                        model.as_ref(),
+                        family,
+                        base,
+                        n,
+                        w,
+                        &cfg.train,
+                    )?
+                }
+            };
             println!(
-                "trained {model_name} {} n={n}: best val RMSE {:.5} in {:.1}s",
+                "trained {model_name} {} {} n={n}: best val RMSE {:.5} in {:.1}s",
+                family.name(),
                 base.name(),
                 out.best_val_rmse,
                 out.wall_secs
             );
+            let family_tag = if family == Family::Stationary {
+                String::new()
+            } else {
+                format!("_{}", family.name())
+            };
             let default_path = format!(
-                "out/thetas/theta_{model_name}_{}_n{n}{}.json",
+                "out/thetas/theta_{model_name}{family_tag}_{}_n{n}{}.json",
                 base.name(),
                 if cfg.train.ablation == "full" {
                     String::new()
@@ -578,6 +615,144 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
+        "bench-families" => {
+            // Solver-family bench: train tiny BNS + multistep artifacts
+            // against the model's GT paths, then measure RMSE-at-NFE and
+            // per-solve wall-time percentiles for the stationary base-RK
+            // baselines, the trained families, and the training-free
+            // Adams–Bashforth solver. Writes BENCH_6.json; works
+            // artifact-free on the fixture zoo (`ideal` models fall back
+            // to the analytic oracle).
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let model_name = args.flags.get("model").context("--model required")?.clone();
+            let n: usize = args
+                .flags
+                .get("n")
+                .map(|s| s.parse())
+                .transpose()
+                .context("bad --n")?
+                .unwrap_or(4);
+            if n == 0 {
+                bail!("--n must be >= 1");
+            }
+            let repeats: usize = args
+                .flags
+                .get("repeats")
+                .map(|s| s.parse())
+                .transpose()
+                .context("bad --repeats")?
+                .unwrap_or(5);
+            let model = zoo.serving_model(&model_name)?;
+            let sched = zoo.scheduler(&model_name)?;
+
+            // GT batches — the eval runner's recipe, inline.
+            let gt_solver = Dopri5 {
+                rtol: cfg.eval.gt_tol,
+                atol: cfg.eval.gt_tol,
+                max_steps: 100_000,
+            };
+            let nb = cfg.quality.eval_batches.max(1);
+            let (b, d) = (model.batch(), model.dim());
+            let mut rng = bespoke_flow::util::Rng::new(cfg.eval.seed);
+            let mut x0 = Vec::with_capacity(nb);
+            let mut gt = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                let noise =
+                    bespoke_flow::tensor::Tensor::new(rng.normal_vec(b * d), vec![b, d])?;
+                gt.push(gt_solver.sample(model.as_ref(), &noise)?);
+                x0.push(noise);
+            }
+
+            println!(
+                "training bns (rk2, n={n}) and multistep (rk1, n={n}, window={})",
+                cfg.train.window
+            );
+            let bns = bespoke_flow::bespoke::train_family(
+                model.as_ref(),
+                Family::Bns,
+                Base::Rk2,
+                n,
+                cfg.train.window,
+                &cfg.train,
+            )?;
+            let ms = bespoke_flow::bespoke::train_family(
+                model.as_ref(),
+                Family::Multistep,
+                Base::Rk1,
+                n,
+                cfg.train.window,
+                &cfg.train,
+            )?;
+
+            let entries: Vec<(&str, Box<dyn Sampler>)> = vec![
+                // stationary-identity baselines at the families' NFE points
+                ("stationary", SolverSpec::parse(&format!("rk1:n={n}"))?.build(sched)?),
+                ("stationary", SolverSpec::parse(&format!("rk2:n={n}"))?.build(sched)?),
+                ("bns", sampler_for_theta(&bns.best)?),
+                ("multistep", sampler_for_theta(&ms.best)?),
+                ("ab", SolverSpec::parse(&format!("ab:n={n}"))?.build(sched)?),
+            ];
+            let mut rows = Vec::new();
+            for (tag, sampler) in &entries {
+                let rep = bespoke_flow::eval::evaluate_sampler(
+                    model.as_ref(),
+                    sampler.as_ref(),
+                    &x0,
+                    &gt,
+                    None,
+                )?;
+                let mut times_ms = Vec::with_capacity(nb * repeats);
+                for _ in 0..repeats {
+                    for x in &x0 {
+                        let t0 = std::time::Instant::now();
+                        sampler.sample(model.as_ref(), x)?;
+                        times_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                let (p50, p90, p99) = (
+                    percentile_ms(&mut times_ms, 50.0),
+                    percentile_ms(&mut times_ms, 90.0),
+                    percentile_ms(&mut times_ms, 99.0),
+                );
+                println!(
+                    "{tag:<10} {:<28} nfe={:<3} rmse={:.6}  p50={p50:.3}ms p90={p90:.3}ms p99={p99:.3}ms",
+                    rep.sampler, rep.nfe, rep.rmse
+                );
+                rows.push(bespoke_flow::json::Value::obj(vec![
+                    ("family", bespoke_flow::json::Value::Str((*tag).into())),
+                    ("solver", bespoke_flow::json::Value::Str(rep.sampler.clone())),
+                    ("nfe", bespoke_flow::json::Value::Num(rep.nfe as f64)),
+                    ("rmse", bespoke_flow::json::Value::num_or_null(rep.rmse as f64)),
+                    ("wall_ms_p50", bespoke_flow::json::Value::Num(p50)),
+                    ("wall_ms_p90", bespoke_flow::json::Value::Num(p90)),
+                    ("wall_ms_p99", bespoke_flow::json::Value::Num(p99)),
+                ]));
+            }
+
+            let out_path = args.flags.get("out").cloned().unwrap_or_else(|| {
+                format!("{}/../BENCH_6.json", env!("CARGO_MANIFEST_DIR"))
+            });
+            let doc = bespoke_flow::json::Value::obj(vec![
+                ("bench", bespoke_flow::json::Value::Str("families".into())),
+                (
+                    "threads",
+                    bespoke_flow::json::Value::Num(bespoke_flow::util::threads::get() as f64),
+                ),
+                ("model", bespoke_flow::json::Value::Str(model_name)),
+                ("n", bespoke_flow::json::Value::Num(n as f64)),
+                ("window", bespoke_flow::json::Value::Num(cfg.train.window as f64)),
+                ("iters", bespoke_flow::json::Value::Num(cfg.train.iters as f64)),
+                ("seed", bespoke_flow::json::Value::Num(cfg.eval.seed as f64)),
+                ("eval_batches", bespoke_flow::json::Value::Num(nb as f64)),
+                ("repeats", bespoke_flow::json::Value::Num(repeats as f64)),
+                ("results", bespoke_flow::json::Value::Arr(rows)),
+            ]);
+            std::fs::write(&out_path, doc.to_string_pretty())
+                .with_context(|| format!("writing {out_path}"))?;
+            println!("wrote {out_path}");
+            Ok(())
+        }
         "exp" => {
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
@@ -591,6 +766,16 @@ fn run() -> Result<()> {
     }
 }
 
+/// Nearest-rank percentile over millisecond samples (sorts in place).
+fn percentile_ms(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite timings"));
+    let idx = ((p / 100.0) * (samples.len() - 1) as f64).round() as usize;
+    samples[idx.min(samples.len() - 1)]
+}
+
 /// `repro registry list|show|gc` — operate on the artifact store without
 /// touching the model zoo (works with no compiled HLO artifacts present).
 fn registry_cmd(args: &Args, cfg: &Config, registry: &Registry) -> Result<()> {
@@ -599,16 +784,17 @@ fn registry_cmd(args: &Args, cfg: &Config, registry: &Registry) -> Result<()> {
             let records = registry.list();
             println!("registry: {} ({} artifacts)", registry.root().display(), records.len());
             println!(
-                "{:<14} {:>4} {:>3} {:<10} {:>3} {:>10} {:>9} {:>10}",
-                "model", "base", "n", "ablation", "v", "val_rmse", "gt_nfe", "created"
+                "{:<14} {:>4} {:>3} {:<10} {:<10} {:>3} {:>10} {:>9} {:>10}",
+                "model", "base", "n", "ablation", "family", "v", "val_rmse", "gt_nfe", "created"
             );
             for r in records {
                 println!(
-                    "{:<14} {:>4} {:>3} {:<10} {:>3} {:>10.5} {:>9} {:>10}",
+                    "{:<14} {:>4} {:>3} {:<10} {:<10} {:>3} {:>10.5} {:>9} {:>10}",
                     r.key.model,
                     r.key.base.name(),
                     r.key.n,
                     r.key.ablation,
+                    r.family.name(),
                     r.version,
                     r.val_rmse,
                     r.gt_nfe,
@@ -626,8 +812,9 @@ fn registry_cmd(args: &Args, cfg: &Config, registry: &Registry) -> Result<()> {
                 .map(|b| Base::parse(b))
                 .transpose()?;
             let ablation = args.flags.get("ablation").map(String::as_str);
+            let family = args.flags.get("family").map(|f| Family::parse(f)).transpose()?;
             let best = registry
-                .best(model, n, base, ablation)
+                .best(model, n, base, ablation, family)
                 .context("no matching artifact registered")?;
             println!("best: v{} (val_rmse {:.5})", best.version, best.val_rmse);
             println!("  theta: {}", registry.theta_path(&best).display());
@@ -687,6 +874,11 @@ COMMANDS:
     train-bespoke                 train a Bespoke solver (Algorithm 2)
         --model M  [--base rk1|rk2]  --n STEPS  [--iters I]
         [--ablation full|time-only|scale-only]  [--out theta.json]
+        [--family stationary|bns|multistep]   solver family (DESIGN.md §11):
+                                  bns = per-step coefficients, multistep =
+                                  learned history reuse (closed-form trainer,
+                                  no loss-grad artifact needed; multistep
+                                  takes [--window W], base rk1, full only)
         [--register]              register the artifact in the registry
                                   (a *.meta.json sidecar is always written)
     eval                          evaluate a solver spec vs the GT solver
@@ -712,9 +904,15 @@ COMMANDS:
                                   to BENCH_5.json (works artifact-free on
                                   the fixture zoo: --artifacts
                                   rust/tests/fixtures/zoo)
+    bench-families                train tiny bns + multistep artifacts and
+        --model M  [--n 4]        bench RMSE-at-NFE + wall-time percentiles
+        [--repeats 5]  [--iters I]  [--out BENCH_6.json]
+                                  vs stationary base-RK and ab baselines
+                                  (artifact-free on the fixture zoo)
     registry list                 show registered solver artifacts
     registry show                 inspect one key (integrity-checked)
         --model M  --n STEPS  [--base B]  [--ablation A]
+        [--family stationary|bns|multistep]
     registry gc [--keep K]        drop old versions (keeps last K + best +
                                   every version on the Pareto frontier)
     exp <id>|all                  reproduce a paper table/figure (out/reports/)
@@ -728,8 +926,22 @@ SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
     dopri5:tol=1e-5               adaptive GT solver (tol sets rtol+atol)
     dopri5:rtol=1e-6:atol=1e-8:max_steps=100000   ...or independently
     bespoke:path=out/thetas/theta_checker2-ot_rk2_n8.json
-    bespoke:model=checker2-ot:n=8 best registered artifact for (model, n)
-        [:base=rk1|rk2] [:ablation=A]   (hot-swaps as training jobs finish)
+                                  (serves whatever family the checkpoint
+                                   declares: stationary, bns or multistep)
+    bespoke:model=checker2-ot:n=8 best registered artifact for (model, n),
+        [:base=rk1|rk2] [:ablation=A]   any family (hot-swaps as training
+                                         jobs finish)
+    bns:path=theta.json           BNS per-step-coefficient solver (family-
+                                  checked: the checkpoint must be bns)
+    bns:model=checker2-ot:n=8     best registered *bns* artifact
+        [:base=rk1|rk2] [:ablation=A]
+    multistep:path=theta.json     learned-multistep solver (window comes
+                                  from the checkpoint; family-checked)
+    multistep:model=checker2-ot:n=8  best registered *multistep* artifact
+        [:ablation=A]
+    ab:n=8                        training-free Adams–Bashforth history
+        [:base=rk1|rk2|rk4] [:order=1..4]   reuse (defaults base=rk2,
+                                             order=2; base RK warm-up)
 
 GLOBAL FLAGS:
     --config file.json   --artifacts dir

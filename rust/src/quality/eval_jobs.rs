@@ -23,7 +23,7 @@ use crate::registry::{
     ArtifactKey, EvalRecord, JobManager, JobProgress, JobRunner, JobSnapshot, Registry,
     META_SCHEMA_VERSION,
 };
-use crate::solvers::{Dopri5, Sampler, SolverSpec};
+use crate::solvers::{Dopri5, Family, Sampler, SolverSpec};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -173,36 +173,66 @@ impl EvalRunner {
                     .collect(),
                 None,
             )),
-            SolverSpec::Dopri5 { .. } | SolverSpec::Bespoke { .. } => {
+            SolverSpec::Ab { base, n, order } => Ok((
+                sweep(*n)
+                    .into_iter()
+                    .map(|k| SolverSpec::Ab { base: *base, n: k, order: *order })
+                    .collect(),
+                None,
+            )),
+            SolverSpec::Dopri5 { .. }
+            | SolverSpec::Bespoke { .. }
+            | SolverSpec::Bns { .. }
+            | SolverSpec::Multistep { .. } => {
                 if !spec.grid.is_empty() {
                     bail!(
                         "solver {} has a fixed configuration; grid sweeps \
-                         apply to rk/transfer templates only",
+                         apply to rk/transfer/ab templates only",
                         spec.solver
                     );
                 }
                 Ok((vec![template.clone()], None))
             }
-            SolverSpec::BespokeRegistry { model, n, base, ablation } => {
+            SolverSpec::BespokeRegistry { .. }
+            | SolverSpec::BnsRegistry { .. }
+            | SolverSpec::MultistepRegistry { .. } => {
                 if !spec.grid.is_empty() {
                     bail!(
-                        "bespoke artifacts are trained for a fixed n; grid \
-                         sweeps apply to rk/transfer templates only"
+                        "learned artifacts are trained for a fixed n; grid \
+                         sweeps apply to rk/transfer/ab templates only"
                     );
                 }
-                let rec = self
-                    .registry
-                    .best(model, *n, *base, ablation.as_deref())
-                    .with_context(|| {
-                        format!("no registered bespoke artifact to evaluate for {}", spec.solver)
+                // Family-filtered best(): bespoke accepts any family,
+                // bns/multistep pin theirs — mirroring `resolve_spec`.
+                let (model, n, base, ablation, family) = match &template {
+                    SolverSpec::BespokeRegistry { model, n, base, ablation } => {
+                        (model, *n, *base, ablation.as_deref(), None)
+                    }
+                    SolverSpec::BnsRegistry { model, n, base, ablation } => {
+                        (model, *n, *base, ablation.as_deref(), Some(Family::Bns))
+                    }
+                    SolverSpec::MultistepRegistry { model, n, ablation } => {
+                        (model, *n, None, ablation.as_deref(), Some(Family::Multistep))
+                    }
+                    _ => unreachable!("outer match arm guarantees a registry form"),
+                };
+                let rec =
+                    self.registry.best(model, n, base, ablation, family).with_context(|| {
+                        format!("no registered artifact to evaluate for {}", spec.solver)
                     })?;
                 // Derive the concrete spec from this exact record (not a
                 // second `resolve_spec` lookup): a training job registering
                 // a better version between two lookups must not make the
                 // card's artifact binding disagree with the theta it
                 // actually measured.
-                let concrete = SolverSpec::Bespoke {
-                    path: self.registry.theta_path(&rec).to_string_lossy().into_owned(),
+                let path = self.registry.theta_path(&rec).to_string_lossy().into_owned();
+                let concrete = match family {
+                    None => SolverSpec::Bespoke { path },
+                    Some(Family::Bns) => SolverSpec::Bns { path },
+                    Some(Family::Multistep) => SolverSpec::Multistep { path },
+                    Some(Family::Stationary) => {
+                        unreachable!("registry forms never pin family=stationary")
+                    }
                 };
                 Ok((vec![concrete], Some((rec.key, rec.version))))
             }

@@ -27,13 +27,13 @@ use anyhow::{Context, Result};
 
 use super::meta::ArtifactMeta;
 use super::store::{ArtifactKey, ArtifactRecord, Registry};
-use crate::bespoke::{train_with_progress, TrainProgress};
+use crate::bespoke::{train_family_with_progress, train_with_progress, TrainProgress};
 use crate::config::TrainConfig;
 use crate::coordinator::Metrics;
 use crate::log_info;
 use crate::models::Zoo;
 use crate::runtime::Executable;
-use crate::solvers::theta::{Base, RawTheta};
+use crate::solvers::theta::{Base, Family, RawTheta};
 
 pub type JobId = u64;
 
@@ -118,6 +118,12 @@ pub struct TrainJobSpec {
     pub base: Base,
     pub n: usize,
     pub ablation: String,
+    /// Solver family (DESIGN.md §11): stationary trains paper Algorithm 2
+    /// over the AOT'd loss-grad; bns/multistep train the closed-form
+    /// family trainer over the zoo's serving model.
+    pub family: Family,
+    /// History window for `family = multistep` (`None` -> server default).
+    pub window: Option<usize>,
     pub iters: Option<usize>,
     pub seed: Option<u64>,
 }
@@ -127,6 +133,11 @@ impl TrainJobSpec {
         ArtifactKey::new(&self.model, self.base, self.n, &self.ablation)
     }
 }
+
+/// Largest accepted multistep history window — bounds the dead warm-up
+/// coefficients (layout keeps `window` slots per step, step i uses
+/// `min(i+1, window)`).
+pub const MAX_WINDOW: usize = 8;
 
 /// A finished training run, ready for registration.
 pub struct TrainedArtifact {
@@ -180,27 +191,65 @@ impl JobRunner for ZooRunner {
 
     fn coalesce_key(&self, spec: &TrainJobSpec) -> String {
         // '|' cannot appear in model/ablation names, so the key is
-        // unambiguous even for underscore-heavy model names.
+        // unambiguous even for underscore-heavy model names. Family and
+        // window are part of the identity: a bns job must not coalesce
+        // onto a stationary one for the same (model, base, n, ablation).
         format!(
-            "{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}",
             spec.model,
             spec.base.name(),
             spec.n,
-            spec.ablation
+            spec.ablation,
+            spec.family.name(),
+            spec.window.unwrap_or(0)
         )
     }
 
     fn label(&self, spec: &TrainJobSpec) -> String {
-        spec.key().label()
+        if spec.family == Family::Stationary {
+            spec.key().label()
+        } else {
+            format!("{} [{}]", spec.key().label(), spec.family.name())
+        }
     }
 
     fn validate(&self, spec: &TrainJobSpec) -> Result<()> {
-        // model + exported loss-grad artifact must exist...
-        self.zoo
-            .manifest()
-            .lossgrad(&spec.model, spec.base.name(), spec.n)?;
-        // ...and the ablation name must be one the mask codec knows.
-        RawTheta::ablation_mask(spec.base, spec.n, &spec.ablation)?;
+        match spec.family {
+            Family::Stationary => {
+                if spec.window.is_some() {
+                    anyhow::bail!("window is only valid for family=multistep");
+                }
+                // model + exported loss-grad artifact must exist...
+                self.zoo
+                    .manifest()
+                    .lossgrad(&spec.model, spec.base.name(), spec.n)?;
+                // ...and the ablation name must be one the mask codec knows.
+                RawTheta::ablation_mask(spec.base, spec.n, &spec.ablation)?;
+            }
+            Family::Bns | Family::Multistep => {
+                // no AOT'd loss-grad needed: the closed-form trainer only
+                // needs a servable model
+                self.zoo.serving_model(&spec.model)?;
+                if spec.ablation != "full" {
+                    anyhow::bail!(
+                        "family {} supports only ablation=full (got {:?})",
+                        spec.family.name(),
+                        spec.ablation
+                    );
+                }
+                if spec.family == Family::Multistep {
+                    if spec.base != Base::Rk1 {
+                        anyhow::bail!("family multistep requires base=rk1 (1 eval/step)");
+                    }
+                    let w = spec.window.unwrap_or(self.base_cfg.window);
+                    if !(1..=MAX_WINDOW).contains(&w) {
+                        anyhow::bail!("window must be in 1..={MAX_WINDOW}, got {w}");
+                    }
+                } else if spec.window.is_some() {
+                    anyhow::bail!("window is only valid for family=multistep");
+                }
+            }
+        }
         Ok(())
     }
 
@@ -209,15 +258,32 @@ impl JobRunner for ZooRunner {
         spec: &TrainJobSpec,
         progress: &mut dyn FnMut(&JobProgress),
     ) -> Result<TrainedArtifact> {
-        let model = self.zoo.hlo(&spec.model)?;
-        let lg = self
-            .zoo
-            .manifest()
-            .lossgrad(&spec.model, spec.base.name(), spec.n)?;
-        let exe = Executable::load(&self.zoo.manifest().path(&lg.file))
-            .context("loading loss-grad executable")?;
         let cfg = self.job_cfg(spec);
-        let out = train_with_progress(&model, &exe, spec.base, spec.n, &cfg, progress)?;
+        let out = match spec.family {
+            Family::Stationary => {
+                let model = self.zoo.hlo(&spec.model)?;
+                let lg = self
+                    .zoo
+                    .manifest()
+                    .lossgrad(&spec.model, spec.base.name(), spec.n)?;
+                let exe = Executable::load(&self.zoo.manifest().path(&lg.file))
+                    .context("loading loss-grad executable")?;
+                train_with_progress(&model, &exe, spec.base, spec.n, &cfg, progress)?
+            }
+            family => {
+                let model = self.zoo.serving_model(&spec.model)?;
+                let window = spec.window.unwrap_or(self.base_cfg.window);
+                train_family_with_progress(
+                    model.as_ref(),
+                    family,
+                    spec.base,
+                    spec.n,
+                    window,
+                    &cfg,
+                    progress,
+                )?
+            }
+        };
         let meta = ArtifactMeta::from_outcome(&spec.model, spec.base, spec.n, &cfg.ablation, &out);
         Ok(TrainedArtifact { theta: out.best, meta })
     }

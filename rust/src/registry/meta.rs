@@ -13,7 +13,7 @@ use anyhow::{bail, Result};
 
 use crate::bespoke::{TrainOutcome, TrainPoint};
 use crate::json::Value;
-use crate::solvers::theta::Base;
+use crate::solvers::theta::{Base, Family};
 
 /// Bumped when the meta/manifest record layout changes incompatibly.
 pub const META_SCHEMA_VERSION: u64 = 1;
@@ -25,6 +25,10 @@ pub struct ArtifactMeta {
     pub model: String,
     pub base: Base,
     pub n: usize,
+    /// Solver family of the trained theta (DESIGN.md §11). Serialized only
+    /// when non-stationary, so pre-family meta files — and the bytes of
+    /// stationary ones — are unchanged; absent on read means stationary.
+    pub family: Family,
     /// Ablation mode the theta was trained under ("full" unless a paper
     /// Fig. 15 ablation was requested).
     pub ablation: String,
@@ -74,6 +78,7 @@ impl ArtifactMeta {
             model: model.to_string(),
             base,
             n,
+            family: out.best.family,
             ablation: ablation.to_string(),
             best_val_rmse: out.best_val_rmse,
             gt_nfe: out.gt_nfe,
@@ -96,7 +101,7 @@ impl ArtifactMeta {
                 ])
             })
             .collect();
-        Value::obj(vec![
+        let mut fields = vec![
             ("schema_version", Value::Num(self.schema_version as f64)),
             ("model", Value::Str(self.model.clone())),
             ("base", Value::Str(self.base.name().into())),
@@ -108,7 +113,13 @@ impl ArtifactMeta {
             ("iters", Value::Num(self.iters as f64)),
             ("created_at", Value::Num(self.created_at as f64)),
             ("history", Value::Arr(history)),
-        ])
+        ];
+        // written only when non-stationary: stationary meta stays
+        // byte-identical to the pre-family layout
+        if self.family != Family::Stationary {
+            fields.push(("family", Value::Str(self.family.name().into())));
+        }
+        Value::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<ArtifactMeta> {
@@ -127,11 +138,16 @@ impl ArtifactMeta {
                 val_rmse: f32_from(p.get("val_rmse")?)?,
             });
         }
+        let family = match v.get_opt("family") {
+            Some(f) => Family::parse(f.as_str()?)?,
+            None => Family::Stationary,
+        };
         Ok(ArtifactMeta {
             schema_version,
             model: v.get("model")?.as_str()?.to_string(),
             base: Base::parse(v.get("base")?.as_str()?)?,
             n: v.get("n")?.as_usize()?,
+            family,
             ablation: v.get("ablation")?.as_str()?.to_string(),
             best_val_rmse: f32_from(v.get("best_val_rmse")?)?,
             gt_nfe: v.get("gt_nfe")?.as_usize()? as u64,
@@ -171,6 +187,7 @@ mod tests {
             model: "checker2-ot".into(),
             base: Base::Rk2,
             n: 4,
+            family: Family::Stationary,
             ablation: "full".into(),
             best_val_rmse: 0.0123,
             gt_nfe: 4567,
@@ -204,6 +221,28 @@ mod tests {
         assert_eq!(back.gt_nfe, 4567);
         assert_eq!(back.created_at, meta.created_at);
         assert_eq!(back.best_val_rmse, meta.best_val_rmse);
+    }
+
+    #[test]
+    fn family_serialization_compat() {
+        // stationary meta must not mention family at all (pre-family bytes)
+        let text = sample_meta().to_json().to_string_pretty();
+        assert!(!text.contains("family"), "stationary meta grew a family key:\n{text}");
+        // ...and absent family reads back as stationary
+        let back = ArtifactMeta::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.family, Family::Stationary);
+        // non-stationary family round-trips
+        let meta = ArtifactMeta { family: Family::Bns, ..sample_meta() };
+        let text = meta.to_json().to_string_pretty();
+        assert!(text.contains("\"family\""));
+        let back = ArtifactMeta::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.family, Family::Bns);
+        // corrupted family is an error, not a panic or silent default
+        let mut v = meta.to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("family".into(), Value::Str("warp-drive".into()));
+        }
+        assert!(ArtifactMeta::from_json(&v).is_err());
     }
 
     #[test]

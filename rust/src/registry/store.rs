@@ -29,7 +29,7 @@ use anyhow::{bail, Context, Result};
 use super::hash::content_hash;
 use super::meta::{ArtifactMeta, META_SCHEMA_VERSION};
 use crate::json::Value;
-use crate::solvers::theta::{Base, RawTheta};
+use crate::solvers::theta::{Base, Family, RawTheta};
 use crate::solvers::SolverSpec;
 
 /// The identity of one trained-solver lineage: every version registered for
@@ -75,6 +75,10 @@ pub struct ArtifactRecord {
     pub key: ArtifactKey,
     /// Monotonic per-key version, starting at 1.
     pub version: u64,
+    /// Solver family of the checkpoint (DESIGN.md §11). Serialized only
+    /// when non-stationary so pre-family manifests parse (absent ->
+    /// stationary) and stationary manifests keep their exact bytes.
+    pub family: Family,
     /// Theta checkpoint path, relative to the registry root.
     pub file: String,
     /// Meta sidecar path, relative to the registry root.
@@ -90,7 +94,7 @@ pub struct ArtifactRecord {
 
 impl ArtifactRecord {
     fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("model", Value::Str(self.key.model.clone())),
             ("base", Value::Str(self.key.base.name().into())),
             ("n", Value::Num(self.key.n as f64)),
@@ -104,7 +108,11 @@ impl ArtifactRecord {
             ("wall_secs", Value::Num(self.wall_secs)),
             ("created_at", Value::Num(self.created_at as f64)),
             ("schema_version", Value::Num(self.schema_version as f64)),
-        ])
+        ];
+        if self.family != Family::Stationary {
+            fields.push(("family", Value::Str(self.family.name().into())));
+        }
+        Value::obj(fields)
     }
 
     fn from_json(v: &Value) -> Result<ArtifactRecord> {
@@ -119,6 +127,10 @@ impl ArtifactRecord {
             Value::Null => f32::NAN,
             x => x.as_f64()? as f32,
         };
+        let family = match v.get_opt("family") {
+            Some(f) => Family::parse(f.as_str()?)?,
+            None => Family::Stationary,
+        };
         Ok(ArtifactRecord {
             key: ArtifactKey {
                 model: v.get("model")?.as_str()?.to_string(),
@@ -127,6 +139,7 @@ impl ArtifactRecord {
                 ablation: v.get("ablation")?.as_str()?.to_string(),
             },
             version: v.get("version")?.as_usize()? as u64,
+            family,
             file: v.get("file")?.as_str()?.to_string(),
             meta_file: v.get("meta_file")?.as_str()?.to_string(),
             content_hash: v.get("content_hash")?.as_str()?.to_string(),
@@ -378,11 +391,14 @@ impl Registry {
     /// key. Writes the theta and meta files, then atomically rewrites the
     /// manifest. Returns the new record.
     pub fn register(&self, theta: &RawTheta, meta: &ArtifactMeta) -> Result<ArtifactRecord> {
-        if theta.base != meta.base || theta.n != meta.n {
+        if theta.base != meta.base || theta.n != meta.n || theta.family != meta.family {
             bail!(
-                "theta (base={}, n={}) does not match meta (base={}, n={})",
+                "theta (family={}, base={}, n={}) does not match meta \
+                 (family={}, base={}, n={})",
+                theta.family.name(),
                 theta.base.name(),
                 theta.n,
+                meta.family.name(),
                 meta.base.name(),
                 meta.n
             );
@@ -412,6 +428,7 @@ impl Registry {
         let rec = ArtifactRecord {
             key,
             version,
+            family: meta.family,
             file: file.to_string_lossy().into_owned(),
             meta_file: meta_file.to_string_lossy().into_owned(),
             content_hash: content_hash(theta_bytes.as_bytes()),
@@ -427,15 +444,17 @@ impl Registry {
     }
 
     /// The best (lowest validation RMSE; ties -> newest version) artifact
-    /// matching the query. `base: None` matches any base; an unspecified
-    /// ablation resolves against `"full"` artifacts only — the crippled
-    /// Fig. 15 ablations must be asked for by name.
+    /// matching the query. `base: None` matches any base, `family: None`
+    /// matches any family; an unspecified ablation resolves against
+    /// `"full"` artifacts only — the crippled Fig. 15 ablations must be
+    /// asked for by name.
     pub fn best(
         &self,
         model: &str,
         n: usize,
         base: Option<Base>,
         ablation: Option<&str>,
+        family: Option<Family>,
     ) -> Option<ArtifactRecord> {
         let ablation = ablation.unwrap_or("full");
         let base_ok = |rb: Base| match base {
@@ -451,6 +470,7 @@ impl Registry {
                     && r.key.n == n
                     && r.key.ablation == ablation
                     && base_ok(r.key.base)
+                    && family.is_none_or(|f| r.family == f)
             })
             .min_by(|a, b| {
                 a.rmse_rank()
@@ -471,24 +491,44 @@ impl Registry {
             .cloned()
     }
 
-    /// Resolve a registry-form spec (`bespoke:model=M:n=8[:base=..][:ablation=..]`)
-    /// to the concrete checkpoint form (`bespoke:path=...`) of its current
-    /// best artifact. Non-registry specs pass through unchanged.
+    /// Resolve a registry-form spec (`bespoke:model=M:n=8[:base=..][:ablation=..]`,
+    /// `bns:model=...`, `multistep:model=...`) to the concrete checkpoint
+    /// form of its current best artifact. `bespoke:` matches any family
+    /// (and resolves to the family-dispatching `bespoke:path=...`);
+    /// `bns:`/`multistep:` filter to their family and resolve to the
+    /// family-pinned path forms. Non-registry specs pass through unchanged.
     pub fn resolve_spec(&self, spec: &SolverSpec) -> Result<SolverSpec> {
+        let missing = |kind: &str, model: &str, n: usize, base: Option<Base>, abl: &Option<String>| {
+            format!(
+                "no registered {kind} artifact for model={model} n={n} \
+                 base={} ablation={} in registry {}",
+                base.map(|b| b.name()).unwrap_or("any"),
+                abl.as_deref().unwrap_or("full"),
+                self.root.display()
+            )
+        };
         match spec {
             SolverSpec::BespokeRegistry { model, n, base, ablation } => {
                 let rec = self
-                    .best(model, *n, *base, ablation.as_deref())
-                    .with_context(|| {
-                        format!(
-                            "no registered bespoke artifact for model={model} n={n} \
-                             base={} ablation={} in registry {}",
-                            base.map(|b| b.name()).unwrap_or("any"),
-                            ablation.as_deref().unwrap_or("full"),
-                            self.root.display()
-                        )
-                    })?;
+                    .best(model, *n, *base, ablation.as_deref(), None)
+                    .with_context(|| missing("bespoke", model, *n, *base, ablation))?;
                 Ok(SolverSpec::Bespoke {
+                    path: self.theta_path(&rec).to_string_lossy().into_owned(),
+                })
+            }
+            SolverSpec::BnsRegistry { model, n, base, ablation } => {
+                let rec = self
+                    .best(model, *n, *base, ablation.as_deref(), Some(Family::Bns))
+                    .with_context(|| missing("bns", model, *n, *base, ablation))?;
+                Ok(SolverSpec::Bns {
+                    path: self.theta_path(&rec).to_string_lossy().into_owned(),
+                })
+            }
+            SolverSpec::MultistepRegistry { model, n, ablation } => {
+                let rec = self
+                    .best(model, *n, None, ablation.as_deref(), Some(Family::Multistep))
+                    .with_context(|| missing("multistep", model, *n, None, ablation))?;
+                Ok(SolverSpec::Multistep {
                     path: self.theta_path(&rec).to_string_lossy().into_owned(),
                 })
             }
@@ -517,13 +557,16 @@ impl Registry {
             &Value::parse(std::str::from_utf8(&bytes).context("artifact is not UTF-8")?)
                 .context("parsing artifact JSON")?,
         )?;
-        if theta.base != rec.key.base || theta.n != rec.key.n {
+        if theta.base != rec.key.base || theta.n != rec.key.n || theta.family != rec.family {
             bail!(
-                "artifact {} v{} decodes to base={} n={}, manifest disagrees",
+                "artifact {} v{} decodes to family={} base={} n={}, manifest disagrees \
+                 (family={})",
                 rec.key.label(),
                 rec.version,
+                theta.family.name(),
                 theta.base.name(),
-                theta.n
+                theta.n,
+                rec.family.name()
             );
         }
         Ok(theta)

@@ -1,0 +1,330 @@
+//! Training-free Adams–Bashforth history-reuse sampler (arXiv 2411.07627):
+//! classical order-M multistep coefficients on the uniform grid, zero
+//! training cost — the free quality-per-NFE baseline that pressure-tests
+//! whether BNS/multistep training earns its cost.
+//!
+//! Steps `i < M-1` are warm-up: a full base-RK step (the velocity at the
+//! node doubles as the RK stage k1 and is recorded into the history
+//! ring). From step `M-1` on, each step costs one evaluation:
+//!
+//! ```text
+//! u_i = u(x, t_i)
+//! x'  = x + h * sum_{j=0..M-1} beta_j u_{i-j}
+//! ```
+//!
+//! History is a ring of full-batch tensors owned by the session — every
+//! kernel is elementwise, rows never mix, so AB is fusion-safe like the
+//! learned families.
+
+use anyhow::{bail, Result};
+
+use crate::models::VelocityModel;
+use crate::solvers::rk::BaseRk;
+use crate::solvers::{Sampler, SolveSession, StepInfo};
+use crate::tensor::{Tensor, Workspace};
+
+pub struct AbSolver {
+    pub base: BaseRk,
+    pub n: usize,
+    pub order: usize,
+    /// Classical AB coefficients beta_0..beta_{M-1} (precomputed so the
+    /// step loop never allocates).
+    beta: Vec<f32>,
+    label: String,
+}
+
+impl AbSolver {
+    pub fn new(base: BaseRk, n: usize, order: usize) -> Result<AbSolver> {
+        if n == 0 {
+            bail!("ab solver needs n >= 1");
+        }
+        let beta: Vec<f32> = match order {
+            1 => vec![1.0],
+            2 => vec![1.5, -0.5],
+            3 => vec![23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0],
+            4 => vec![55.0 / 24.0, -59.0 / 24.0, 37.0 / 24.0, -9.0 / 24.0],
+            _ => bail!("ab order must be in 1..=4 (got {order})"),
+        };
+        // label == canonical spec Display (defaults base=rk2, order=2
+        // omitted), so routed and explicit requests agree on the name
+        let mut label = String::from("ab");
+        if base != BaseRk::Rk2 {
+            label.push_str(&format!(":base={}", base.name()));
+        }
+        label.push_str(&format!(":n={n}"));
+        if order != 2 {
+            label.push_str(&format!(":order={order}"));
+        }
+        Ok(AbSolver { base, n, order, beta, label })
+    }
+
+    /// Warm-up steps that run the full base RK method instead of AB.
+    fn startup_steps(&self) -> usize {
+        (self.order - 1).min(self.n)
+    }
+
+    /// Scratch tensors one warm-up step draws from the workspace (the
+    /// node velocity lives in the history ring, not the pool).
+    pub fn stage_buffers(&self) -> usize {
+        match self.base {
+            BaseRk::Rk1 => 0,
+            BaseRk::Rk2 => 2,
+            BaseRk::Rk4 => 4,
+        }
+    }
+
+    /// Complete a warm-up base-RK step in place, reusing the already
+    /// evaluated node velocity `k1 = u(x, t)` from the history ring.
+    fn finish_startup_step(
+        &self,
+        model: &dyn VelocityModel,
+        x: &mut Tensor,
+        t: f32,
+        h: f32,
+        k1: &Tensor,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        match self.base {
+            BaseRk::Rk1 => {
+                x.axpy(h, k1)?;
+            }
+            BaseRk::Rk2 => {
+                let mut mid = ws.acquire(x.shape());
+                mid.copy_from(x)?;
+                mid.axpy(0.5 * h, k1)?;
+                let mut k2 = ws.acquire(x.shape());
+                model.eval_into(&mid, t + 0.5 * h, &mut k2)?;
+                x.axpy(h, &k2)?;
+                ws.release(k2);
+                ws.release(mid);
+            }
+            BaseRk::Rk4 => {
+                let mut xs = ws.acquire(x.shape());
+                xs.copy_from(x)?;
+                xs.axpy(0.5 * h, k1)?;
+                let mut k2 = ws.acquire(x.shape());
+                model.eval_into(&xs, t + 0.5 * h, &mut k2)?;
+                xs.copy_from(x)?;
+                xs.axpy(0.5 * h, &k2)?;
+                let mut k3 = ws.acquire(x.shape());
+                model.eval_into(&xs, t + 0.5 * h, &mut k3)?;
+                xs.copy_from(x)?;
+                xs.axpy(h, &k3)?;
+                let mut k4 = ws.acquire(x.shape());
+                model.eval_into(&xs, t + h, &mut k4)?;
+                x.axpy(h / 6.0, k1)?;
+                x.axpy(h / 3.0, &k2)?;
+                x.axpy(h / 3.0, &k3)?;
+                x.axpy(h / 6.0, &k4)?;
+                for buf in [k2, k3, k4, xs] {
+                    ws.release(buf);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Clone-per-step reference solve with an explicit history vector —
+    /// the arithmetic anchor the session path is pinned against, bitwise.
+    pub fn solve_reference(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
+        let (n, h) = (self.n, 1.0f32 / self.n as f32);
+        let startup = self.startup_steps();
+        let mut x = x0.clone();
+        let mut hist: Vec<Tensor> = Vec::with_capacity(n);
+        let mut ws = Workspace::preallocate(x0.shape(), self.stage_buffers());
+        for i in 0..n {
+            let t = i as f32 / n as f32;
+            hist.push(model.eval(&x, t)?);
+            if i < startup {
+                self.finish_startup_step(model, &mut x, t, h, &hist[i], &mut ws)?;
+            } else {
+                for (j, &b) in self.beta.iter().enumerate() {
+                    x.axpy(h * b, &hist[i - j])?;
+                }
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// Step-wise execution of an [`AbSolver`]: the node velocity of each step
+/// is written straight into its history ring slot, warm-up stage scratch
+/// comes from the pre-warmed workspace — zero heap allocation per step.
+pub struct AbSession<'a> {
+    solver: &'a AbSolver,
+    x: Tensor,
+    i: usize,
+    /// Ring of the last `order` node velocities; slot `i % order` holds u_i.
+    hist: Vec<Tensor>,
+    ws: Workspace,
+}
+
+impl SolveSession for AbSession<'_> {
+    fn init(&mut self, x0: &Tensor) -> Result<()> {
+        if self.x.shape() == x0.shape() {
+            self.x.copy_from(x0)?;
+            // hist slots are rewritten before first read each solve
+        } else {
+            // Width-agnostic re-init (DESIGN.md §10)
+            self.x = x0.clone();
+            self.hist = (0..self.solver.order).map(|_| Tensor::zeros(x0.shape())).collect();
+            self.ws.ensure(x0.shape(), self.solver.stage_buffers());
+        }
+        self.i = 0;
+        Ok(())
+    }
+
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
+        if self.is_done() {
+            bail!("session already complete ({} steps)", self.i);
+        }
+        let s = self.solver;
+        let (n, h) = (s.n, 1.0f32 / s.n as f32);
+        let i = self.i;
+        let t = i as f32 / n as f32;
+        let slot = i % s.order;
+        model.eval_into(&self.x, t, &mut self.hist[slot])?;
+        let nfe = if i < s.startup_steps() {
+            s.finish_startup_step(model, &mut self.x, t, h, &self.hist[slot], &mut self.ws)?;
+            s.base.evals_per_step()
+        } else {
+            for (j, &b) in s.beta.iter().enumerate() {
+                self.x.axpy(h * b, &self.hist[(i - j) % s.order])?;
+            }
+            1
+        };
+        self.i += 1;
+        Ok(StepInfo {
+            step: self.i - 1,
+            t: self.i as f32 / n as f32,
+            nfe,
+            done: self.is_done(),
+        })
+    }
+
+    fn is_done(&self) -> bool {
+        self.i >= self.solver.n
+    }
+
+    fn state(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn steps_total(&self) -> Option<usize> {
+        Some(self.solver.n)
+    }
+}
+
+impl Sampler for AbSolver {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn nfe(&self) -> usize {
+        let startup = self.startup_steps();
+        startup * self.base.evals_per_step() + (self.n - startup)
+    }
+
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
+        Ok(Box::new(AbSession {
+            solver: self,
+            x: x0.clone(),
+            i: 0,
+            hist: (0..self.order).map(|_| Tensor::zeros(x0.shape())).collect(),
+            ws: Workspace::preallocate(x0.shape(), self.stage_buffers()),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticModel;
+    use crate::schedulers::Scheduler;
+    use crate::solvers::dopri5::Dopri5;
+    use crate::solvers::rk::FixedGridSolver;
+    use crate::util::Rng;
+
+    fn toy() -> AnalyticModel {
+        let pts = Tensor::from_rows(&[vec![0.9, 0.1], vec![-0.7, -0.5], vec![0.2, 1.1]]).unwrap();
+        AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, 8).unwrap()
+    }
+
+    #[test]
+    fn order_one_is_euler() {
+        let model = toy();
+        let mut rng = Rng::new(3);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let ab = AbSolver::new(BaseRk::Rk1, 7, 1).unwrap();
+        let euler = FixedGridSolver::uniform(BaseRk::Rk1, 7);
+        let a = ab.sample(&model, &x0).unwrap();
+        let b = euler.sample(&model, &x0).unwrap();
+        assert_eq!(a.data(), b.data(), "AB(1) must be exactly Euler");
+    }
+
+    /// AB2 with one-step RK warm-up has empirical convergence order ~2.
+    #[test]
+    fn ab2_converges_at_order_two() {
+        let model = toy();
+        let mut rng = Rng::new(5);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let gt = Dopri5 { rtol: 1e-8, atol: 1e-8, max_steps: 100_000 }
+            .sample(&model, &x0)
+            .unwrap();
+        let err = |n: usize| {
+            let ab = AbSolver::new(BaseRk::Rk2, n, 2).unwrap();
+            ab.sample(&model, &x0).unwrap().sub(&gt).unwrap().rms()
+        };
+        let (e8, e16) = (err(8), err(16));
+        let order = (e8 / e16).log2();
+        assert!(order > 1.5, "expected order ~2, got {order} (e8={e8}, e16={e16})");
+    }
+
+    #[test]
+    fn nfe_accounting_counts_warmup() {
+        // order 3 on rk2 base: 2 warm-up steps at 2 evals + 6 AB steps
+        let ab = AbSolver::new(BaseRk::Rk2, 8, 3).unwrap();
+        assert_eq!(ab.nfe(), 2 * 2 + 6);
+        // order 1: no warm-up at all
+        assert_eq!(AbSolver::new(BaseRk::Rk4, 5, 1).unwrap().nfe(), 5);
+        // n smaller than the warm-up: every step is a full RK step
+        assert_eq!(AbSolver::new(BaseRk::Rk4, 2, 4).unwrap().nfe(), 8);
+        assert!(AbSolver::new(BaseRk::Rk2, 4, 5).is_err());
+        assert!(AbSolver::new(BaseRk::Rk2, 0, 2).is_err());
+    }
+
+    /// Session == clone-per-step reference, bitwise, across bases/orders —
+    /// including warm-up, and the measured per-step NFE totals.
+    #[test]
+    fn session_matches_reference_bitwise() {
+        let model = toy();
+        let mut rng = Rng::new(9);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        for (base, order) in [
+            (BaseRk::Rk1, 2),
+            (BaseRk::Rk2, 2),
+            (BaseRk::Rk2, 3),
+            (BaseRk::Rk4, 4),
+        ] {
+            let ab = AbSolver::new(base, 6, order).unwrap();
+            let reference = ab.solve_reference(&model, &x0).unwrap();
+            let one_shot = ab.sample(&model, &x0).unwrap();
+            assert_eq!(one_shot.data(), reference.data(), "{base:?} order={order}");
+            let mut sess = ab.begin(&x0).unwrap();
+            assert_eq!(sess.steps_total(), Some(6));
+            let mut nfe = 0usize;
+            while !sess.is_done() {
+                nfe += sess.step(&model).unwrap().nfe;
+            }
+            assert_eq!(sess.state().data(), reference.data(), "{base:?} order={order}");
+            assert_eq!(nfe, ab.nfe(), "{base:?} order={order}");
+            assert!(sess.step(&model).is_err());
+            // re-init rewinds; stale history must not leak into the redo
+            sess.init(&x0).unwrap();
+            while !sess.is_done() {
+                sess.step(&model).unwrap();
+            }
+            assert_eq!(sess.state().data(), reference.data(), "{base:?} order={order} reinit");
+        }
+    }
+}

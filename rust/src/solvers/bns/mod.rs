@@ -1,0 +1,55 @@
+//! Non-stationary solver families (DESIGN.md §11): per-step learned
+//! coefficients instead of one stationary step transform.
+//!
+//! * [`BnsSolver`] — BNS-style per-step coefficient steps (arXiv
+//!   2403.01329): each step i applies its own `(a_i, b_i)` (rk1) or
+//!   `(a_i, b1_i, b2_i)` (rk2) mix of the previous state and the stage
+//!   velocities, on a fixed uniform time grid `t_i = i/n`.
+//! * [`MultistepSolver`] — S4S-style learned multistep (arXiv 2502.17423):
+//!   one velocity evaluation per step, mixed with a ring buffer of the
+//!   previous `window` evaluations via learned per-step coefficients.
+//! * [`AbSolver`] — classical Adams–Bashforth history reuse (arXiv
+//!   2411.07627): the training-free baseline that pressure-tests whether
+//!   BNS/multistep training earns its cost.
+//!
+//! All three are [`Sampler`]s whose sessions follow the bespoke idioms:
+//! stage scratch comes from a pre-warmed [`crate::tensor::Workspace`]
+//! (zero heap allocation per step), `init` is width-agnostic for the
+//! fusion plane, and every kernel is row-independent — history tensors
+//! are full-batch, so fused and solo solves stay byte-identical.
+
+pub mod ab;
+pub mod multistep;
+pub mod solver;
+
+pub use ab::AbSolver;
+pub use multistep::MultistepSolver;
+pub use solver::BnsSolver;
+
+use anyhow::{bail, Result};
+
+use super::theta::{Family, RawTheta};
+use super::Sampler;
+
+/// Build the right sampler for a loaded theta, dispatching on its family.
+/// This is what lets `bespoke:path=...` (and the registry/budget-routing
+/// paths built on it) serve any trained family transparently.
+pub fn sampler_for_theta(raw: &RawTheta) -> Result<Box<dyn Sampler>> {
+    Ok(match raw.family {
+        Family::Stationary => Box::new(super::bespoke::BespokeSolver::new(raw)),
+        Family::Bns => Box::new(BnsSolver::new(raw)?),
+        Family::Multistep => Box::new(MultistepSolver::new(raw)?),
+    })
+}
+
+/// Shared guard for the family-specific constructors.
+pub(crate) fn expect_family(raw: &RawTheta, want: Family) -> Result<()> {
+    if raw.family != want {
+        bail!(
+            "theta is family={}, expected {}",
+            raw.family.name(),
+            want.name()
+        );
+    }
+    Ok(())
+}

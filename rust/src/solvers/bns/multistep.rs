@@ -1,0 +1,238 @@
+//! The learned-multistep sampler: one velocity evaluation per step, mixed
+//! with a window of previous evaluations via learned per-step
+//! coefficients. Step i of an n-step solve (h = 1/n, t_i = i/n, window W):
+//!
+//! ```text
+//! u_i = u(x, t_i)
+//! x'  = a_i x + h * sum_{j=0..min(i, W-1)} c_{i,j} u_{i-j}
+//! ```
+//!
+//! Raw layout: per step `[a_i, c_{i,0}, ..., c_{i,W-1}]`. Coefficients for
+//! history that does not exist yet (j > i, the warm-up steps) are present
+//! in the layout but ignored here and gradient-masked in training, so
+//! they stay at their identity init of 0.
+//!
+//! The history ring holds full-batch `[B, d]` tensors owned by the
+//! session (not the workspace), and every kernel is elementwise — rows
+//! never mix, so the fusion plane can stack requests freely and fused vs
+//! solo stays byte-identical. A slot is always written (step i writes
+//! `hist[i % W]`) before any read of it in the same solve, so stale
+//! history from a previous `init` is never observed.
+
+use anyhow::{bail, Result};
+
+use super::expect_family;
+use crate::models::VelocityModel;
+use crate::solvers::theta::{Family, RawTheta};
+use crate::solvers::{Sampler, SolveSession, StepInfo};
+use crate::tensor::Tensor;
+
+pub struct MultistepSolver {
+    pub theta: RawTheta,
+    label: String,
+}
+
+impl MultistepSolver {
+    pub fn new(raw: &RawTheta) -> Result<MultistepSolver> {
+        expect_family(raw, Family::Multistep)?;
+        Ok(MultistepSolver {
+            theta: raw.clone(),
+            label: format!("multistep:n={}:window={}", raw.n, raw.window),
+        })
+    }
+
+    pub fn with_label(raw: &RawTheta, label: impl Into<String>) -> Result<MultistepSolver> {
+        expect_family(raw, Family::Multistep)?;
+        Ok(MultistepSolver { theta: raw.clone(), label: label.into() })
+    }
+
+    /// The coefficients of step i: `[a_i, c_{i,0}, ..., c_{i,W-1}]`.
+    pub fn coeffs(&self, i: usize) -> &[f32] {
+        let k = 1 + self.theta.window;
+        &self.theta.raw[k * i..k * (i + 1)]
+    }
+
+    /// Clone-per-step reference solve with an explicit history vector —
+    /// the arithmetic anchor the session path is pinned against, bitwise.
+    pub fn solve_reference(&self, model: &dyn VelocityModel, x0: &Tensor) -> Result<Tensor> {
+        let n = self.theta.n;
+        let w = self.theta.window;
+        let h = 1.0f32 / n as f32;
+        let mut x = x0.clone();
+        let mut hist: Vec<Tensor> = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = i as f32 / n as f32;
+            hist.push(model.eval(&x, t)?);
+            let c = self.coeffs(i);
+            let mut out = x.scale(c[0]);
+            for j in 0..=i.min(w - 1) {
+                out.axpy(h * c[1 + j], &hist[i - j])?;
+            }
+            x = out;
+        }
+        Ok(x)
+    }
+}
+
+/// Step-wise execution of a [`MultistepSolver`]. The velocity of each step
+/// is written straight into its history ring slot (`eval_into`), then the
+/// state update runs in place — zero heap allocation per step.
+pub struct MultistepSession<'a> {
+    solver: &'a MultistepSolver,
+    x: Tensor,
+    i: usize,
+    /// Ring of the last `window` velocity evaluations; slot `i % window`
+    /// holds u_i. Full-batch tensors: row-independent, fusion-safe.
+    hist: Vec<Tensor>,
+}
+
+impl SolveSession for MultistepSession<'_> {
+    fn init(&mut self, x0: &Tensor) -> Result<()> {
+        if self.x.shape() == x0.shape() {
+            self.x.copy_from(x0)?;
+            // hist slots are overwritten before first read (j <= i guard),
+            // so stale bytes from the previous solve are never observed
+        } else {
+            // Width-agnostic re-init (DESIGN.md §10): rebuild the ring at
+            // the new shape.
+            self.x = x0.clone();
+            self.hist = (0..self.solver.theta.window).map(|_| Tensor::zeros(x0.shape())).collect();
+        }
+        self.i = 0;
+        Ok(())
+    }
+
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
+        if self.is_done() {
+            bail!("session already complete ({} steps)", self.i);
+        }
+        let n = self.solver.theta.n;
+        let w = self.solver.theta.window;
+        let h = 1.0f32 / n as f32;
+        let i = self.i;
+        let t = i as f32 / n as f32;
+        let slot = i % w;
+        model.eval_into(&self.x, t, &mut self.hist[slot])?;
+        let c = self.solver.coeffs(i);
+        // x' = a x + h c_0 u_i, then the older history terms
+        self.x.scale_axpy(c[0], h * c[1], &self.hist[slot])?;
+        for j in 1..=i.min(w - 1) {
+            self.x.axpy(h * c[1 + j], &self.hist[(i - j) % w])?;
+        }
+        self.i += 1;
+        Ok(StepInfo {
+            step: self.i - 1,
+            t: self.i as f32 / n as f32,
+            nfe: 1,
+            done: self.is_done(),
+        })
+    }
+
+    fn is_done(&self) -> bool {
+        self.i >= self.solver.theta.n
+    }
+
+    fn state(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn steps_total(&self) -> Option<usize> {
+        Some(self.solver.theta.n)
+    }
+}
+
+impl Sampler for MultistepSolver {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn nfe(&self) -> usize {
+        self.theta.n
+    }
+
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
+        Ok(Box::new(MultistepSession {
+            solver: self,
+            x: x0.clone(),
+            i: 0,
+            hist: (0..self.theta.window).map(|_| Tensor::zeros(x0.shape())).collect(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticModel;
+    use crate::schedulers::Scheduler;
+    use crate::solvers::rk::{BaseRk, FixedGridSolver};
+    use crate::solvers::theta::Base;
+    use crate::util::Rng;
+
+    fn toy() -> AnalyticModel {
+        let pts = Tensor::from_rows(&[vec![0.9, 0.1], vec![-0.7, -0.5], vec![0.2, 1.1]]).unwrap();
+        AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, 8).unwrap()
+    }
+
+    fn random_theta(n: usize, window: usize, seed: u64) -> RawTheta {
+        let mut rng = Rng::new(seed);
+        let p = RawTheta::n_params_for(Family::Multistep, Base::Rk1, n, window).unwrap();
+        let raw: Vec<f32> = (0..p).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+        RawTheta::from_raw_for(Family::Multistep, Base::Rk1, n, window, raw).unwrap()
+    }
+
+    /// Identity coefficients (a=1, c0=1, older 0) == Euler.
+    #[test]
+    fn identity_coeffs_equal_euler() {
+        let model = toy();
+        let mut rng = Rng::new(3);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        let raw = RawTheta::identity_for(Family::Multistep, Base::Rk1, 6, 3).unwrap();
+        let ms = MultistepSolver::new(&raw).unwrap();
+        let euler = FixedGridSolver::uniform(BaseRk::Rk1, 6);
+        let a = ms.sample(&model, &x0).unwrap();
+        let b = euler.sample(&model, &x0).unwrap();
+        let err = a.sub(&b).unwrap().linf();
+        assert!(err < 1e-5, "identity mismatch linf={err}");
+    }
+
+    /// Session == clone-per-step reference, bitwise, for random
+    /// non-stationary coefficients — including the warm-up steps where
+    /// only part of the window exists.
+    #[test]
+    fn session_matches_reference_bitwise() {
+        let model = toy();
+        let mut rng = Rng::new(9);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        for window in [1usize, 2, 4] {
+            let th = random_theta(6, window, 100 + window as u64);
+            let ms = MultistepSolver::new(&th).unwrap();
+            let reference = ms.solve_reference(&model, &x0).unwrap();
+            let one_shot = ms.sample(&model, &x0).unwrap();
+            assert_eq!(one_shot.data(), reference.data(), "window={window}");
+            let mut sess = ms.begin(&x0).unwrap();
+            assert_eq!(sess.steps_total(), Some(6));
+            let mut nfe = 0usize;
+            while !sess.is_done() {
+                nfe += sess.step(&model).unwrap().nfe;
+            }
+            assert_eq!(sess.state().data(), reference.data(), "window={window}");
+            assert_eq!(nfe, ms.nfe());
+            assert!(sess.step(&model).is_err());
+            // re-init rewinds; stale history must not leak into the redo
+            sess.init(&x0).unwrap();
+            while !sess.is_done() {
+                sess.step(&model).unwrap();
+            }
+            assert_eq!(sess.state().data(), reference.data(), "window={window} reinit");
+        }
+    }
+
+    #[test]
+    fn one_eval_per_step_and_family_guard() {
+        let th = random_theta(8, 3, 5);
+        let ms = MultistepSolver::new(&th).unwrap();
+        assert_eq!(ms.nfe(), 8);
+        assert!(MultistepSolver::new(&RawTheta::identity(Base::Rk1, 4)).is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! The BNS (non-stationary) sampler: per-step learned coefficients on a
+//! fixed uniform time grid. Step i of an n-step solve (h = 1/n, t_i = i/n):
+//!
+//! ```text
+//! rk1:  u1 = u(x, t_i)
+//!       x' = a_i x + h b_i u1
+//! rk2:  u1 = u(x, t_i);  z = x + (h/2) u1;  u2 = u(z, t_i + h/2)
+//!       x' = a_i x + h b1_i u1 + h b2_i u2
+//! ```
+//!
+//! At identity coefficients (a=1, b=1 / a=1, b1=0, b2=1) this is exactly
+//! the plain base RK solver. Keeping the grid fixed (not learned) keeps
+//! the GT-matching loss linear in the coefficients, which is what makes
+//! the closed-form trainer in `bespoke::families` possible.
+
+use anyhow::{bail, Result};
+
+use super::expect_family;
+use crate::models::VelocityModel;
+use crate::solvers::theta::{Base, Family, RawTheta};
+use crate::solvers::{Sampler, SolveSession, StepInfo};
+use crate::tensor::{Tensor, Workspace};
+
+pub struct BnsSolver {
+    pub theta: RawTheta,
+    label: String,
+}
+
+impl BnsSolver {
+    pub fn new(raw: &RawTheta) -> Result<BnsSolver> {
+        expect_family(raw, Family::Bns)?;
+        Ok(BnsSolver {
+            theta: raw.clone(),
+            label: format!("bns-{}:n={}", raw.base.name(), raw.n),
+        })
+    }
+
+    pub fn with_label(raw: &RawTheta, label: impl Into<String>) -> Result<BnsSolver> {
+        expect_family(raw, Family::Bns)?;
+        Ok(BnsSolver { theta: raw.clone(), label: label.into() })
+    }
+
+    /// Per-step coefficient stride in `raw`: `[a, b]` (rk1) or
+    /// `[a, b1, b2]` (rk2).
+    pub fn stride(&self) -> usize {
+        1 + self.theta.base.evals_per_step()
+    }
+
+    /// The coefficients of step i.
+    pub fn coeffs(&self, i: usize) -> &[f32] {
+        let k = self.stride();
+        &self.theta.raw[k * i..k * (i + 1)]
+    }
+
+    /// Scratch tensors one [`BnsSolver::step_into`] call draws from its
+    /// workspace.
+    pub fn stage_buffers(&self) -> usize {
+        match self.theta.base {
+            Base::Rk1 => 1,
+            Base::Rk2 => 3,
+        }
+    }
+
+    /// One BNS step computed **in place**, with scratch drawn from `ws`:
+    /// zero heap allocation once the pool is warm, element-for-element
+    /// identical to [`BnsSolver::step`].
+    pub fn step_into(
+        &self,
+        model: &dyn VelocityModel,
+        x: &mut Tensor,
+        i: usize,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let n = self.theta.n;
+        if i >= n {
+            bail!("step index {i} out of range for n={n}");
+        }
+        let h = 1.0f32 / n as f32;
+        let t = i as f32 / n as f32;
+        let c = self.coeffs(i);
+        match self.theta.base {
+            Base::Rk1 => {
+                let mut u = ws.acquire(x.shape());
+                model.eval_into(x, t, &mut u)?;
+                // x' = a x + h b u
+                x.scale_axpy(c[0], h * c[1], &u)?;
+                ws.release(u);
+            }
+            Base::Rk2 => {
+                let mut u1 = ws.acquire(x.shape());
+                model.eval_into(x, t, &mut u1)?;
+                let mut mid = ws.acquire(x.shape());
+                mid.copy_from(x)?;
+                mid.axpy(0.5 * h, &u1)?;
+                let mut u2 = ws.acquire(x.shape());
+                model.eval_into(&mid, t + 0.5 * h, &mut u2)?;
+                // x' = a x + h b1 u1 + h b2 u2
+                x.scale_axpy(c[0], h * c[1], &u1)?;
+                x.axpy(h * c[2], &u2)?;
+                ws.release(u2);
+                ws.release(mid);
+                ws.release(u1);
+            }
+        }
+        Ok(())
+    }
+
+    /// One BNS step from integer step index i. Clone-per-stage reference
+    /// path; the session loop uses [`BnsSolver::step_into`].
+    pub fn step(&self, model: &dyn VelocityModel, x: &Tensor, i: usize) -> Result<Tensor> {
+        let n = self.theta.n;
+        if i >= n {
+            bail!("step index {i} out of range for n={n}");
+        }
+        let h = 1.0f32 / n as f32;
+        let t = i as f32 / n as f32;
+        let c = self.coeffs(i);
+        match self.theta.base {
+            Base::Rk1 => {
+                let u = model.eval(x, t)?;
+                let mut out = x.scale(c[0]);
+                out.axpy(h * c[1], &u)?;
+                Ok(out)
+            }
+            Base::Rk2 => {
+                let u1 = model.eval(x, t)?;
+                let mut mid = x.clone();
+                mid.axpy(0.5 * h, &u1)?;
+                let u2 = model.eval(&mid, t + 0.5 * h)?;
+                let mut out = x.scale(c[0]);
+                out.axpy(h * c[1], &u1)?;
+                out.axpy(h * c[2], &u2)?;
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Step-wise execution of a [`BnsSolver`]: one per-step-coefficient step
+/// per [`SolveSession::step`], identical arithmetic to the one-shot loop.
+/// Scratch tensors are pre-allocated in [`Sampler::begin`] and recycled
+/// through the session's [`Workspace`]: zero heap allocation per step.
+pub struct BnsSession<'a> {
+    solver: &'a BnsSolver,
+    x: Tensor,
+    i: usize,
+    ws: Workspace,
+}
+
+impl SolveSession for BnsSession<'_> {
+    fn init(&mut self, x0: &Tensor) -> Result<()> {
+        if self.x.shape() == x0.shape() {
+            self.x.copy_from(x0)?;
+        } else {
+            // Width-agnostic re-init: top the pool up for the new shape,
+            // keeping buffers of widths already visited (DESIGN.md §10).
+            self.x = x0.clone();
+            self.ws.ensure(x0.shape(), self.solver.stage_buffers());
+        }
+        self.i = 0;
+        Ok(())
+    }
+
+    fn step(&mut self, model: &dyn VelocityModel) -> Result<StepInfo> {
+        if self.is_done() {
+            bail!("session already complete ({} steps)", self.i);
+        }
+        self.solver.step_into(model, &mut self.x, self.i, &mut self.ws)?;
+        self.i += 1;
+        Ok(StepInfo {
+            step: self.i - 1,
+            t: self.i as f32 / self.solver.theta.n as f32,
+            nfe: self.solver.theta.base.evals_per_step(),
+            done: self.is_done(),
+        })
+    }
+
+    fn is_done(&self) -> bool {
+        self.i >= self.solver.theta.n
+    }
+
+    fn state(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn steps_total(&self) -> Option<usize> {
+        Some(self.solver.theta.n)
+    }
+}
+
+impl Sampler for BnsSolver {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn nfe(&self) -> usize {
+        self.theta.n * self.theta.base.evals_per_step()
+    }
+
+    fn begin(&self, x0: &Tensor) -> Result<Box<dyn SolveSession + '_>> {
+        Ok(Box::new(BnsSession {
+            solver: self,
+            x: x0.clone(),
+            i: 0,
+            ws: Workspace::preallocate(x0.shape(), self.stage_buffers()),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AnalyticModel;
+    use crate::schedulers::Scheduler;
+    use crate::solvers::rk::{BaseRk, FixedGridSolver};
+    use crate::util::Rng;
+
+    fn toy() -> AnalyticModel {
+        let pts = Tensor::from_rows(&[vec![0.9, 0.1], vec![-0.7, -0.5], vec![0.2, 1.1]]).unwrap();
+        AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, 8).unwrap()
+    }
+
+    /// Consistency anchor: identity coefficients == plain base solver.
+    /// (Tolerance, not bitwise: `0*u1` and the base's own update differ in
+    /// op order, so last-bit drift is expected.)
+    #[test]
+    fn identity_coeffs_equal_base_solver() {
+        let model = toy();
+        let mut rng = Rng::new(3);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        for (base, rk, n) in [(Base::Rk1, BaseRk::Rk1, 6), (Base::Rk2, BaseRk::Rk2, 6)] {
+            let raw = RawTheta::identity_for(Family::Bns, base, n, 0).unwrap();
+            let bns = BnsSolver::new(&raw).unwrap();
+            let plain = FixedGridSolver::uniform(rk, n);
+            let a = bns.sample(&model, &x0).unwrap();
+            let b = plain.sample(&model, &x0).unwrap();
+            let err = a.sub(&b).unwrap().linf();
+            assert!(err < 1e-5, "{base:?}: identity mismatch linf={err}");
+        }
+    }
+
+    #[test]
+    fn nfe_counts_and_family_guard() {
+        let rk1 = RawTheta::identity_for(Family::Bns, Base::Rk1, 10, 0).unwrap();
+        let rk2 = RawTheta::identity_for(Family::Bns, Base::Rk2, 10, 0).unwrap();
+        assert_eq!(BnsSolver::new(&rk1).unwrap().nfe(), 10);
+        assert_eq!(BnsSolver::new(&rk2).unwrap().nfe(), 20);
+        assert!(BnsSolver::new(&RawTheta::identity(Base::Rk2, 4)).is_err());
+    }
+
+    #[test]
+    fn step_index_bounds() {
+        let model = toy();
+        let raw = RawTheta::identity_for(Family::Bns, Base::Rk2, 3, 0).unwrap();
+        let bns = BnsSolver::new(&raw).unwrap();
+        let x = Tensor::zeros(&[8, 2]);
+        assert!(bns.step(&model, &x, 3).is_err());
+    }
+
+    /// Step-wise session == the explicit step loop, bitwise — for a
+    /// genuinely non-stationary theta (random per-step coefficients).
+    #[test]
+    fn session_matches_step_loop_bitwise() {
+        let model = toy();
+        let mut rng = Rng::new(9);
+        let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+        for base in [Base::Rk1, Base::Rk2] {
+            let n = 5;
+            let p = RawTheta::n_params_for(Family::Bns, base, n, 0).unwrap();
+            let raw_vals: Vec<f32> = (0..p).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+            let raw = RawTheta::from_raw_for(Family::Bns, base, n, 0, raw_vals).unwrap();
+            let bns = BnsSolver::new(&raw).unwrap();
+            let mut x = x0.clone();
+            for i in 0..n {
+                x = bns.step(&model, &x, i).unwrap();
+            }
+            let one_shot = bns.sample(&model, &x0).unwrap();
+            assert_eq!(one_shot.data(), x.data());
+            let mut sess = bns.begin(&x0).unwrap();
+            assert_eq!(sess.steps_total(), Some(n));
+            let mut nfe = 0usize;
+            while !sess.is_done() {
+                nfe += sess.step(&model).unwrap().nfe;
+            }
+            assert_eq!(sess.state().data(), x.data());
+            assert_eq!(nfe, bns.nfe());
+            assert!(sess.step(&model).is_err());
+        }
+    }
+}

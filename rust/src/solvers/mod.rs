@@ -10,7 +10,10 @@
 //!   the DDIM / DPM-Solver / EDM analogs, which the paper shows are fixed
 //!   members of the scale-time family,
 //! * the learned **Bespoke** samplers ([`bespoke`]) over the raw-theta
-//!   parameterization ([`theta`]).
+//!   parameterization ([`theta`]),
+//! * the non-stationary families ([`bns`]): BNS per-step coefficients,
+//!   learned multistep, and the training-free Adams–Bashforth baseline
+//!   (DESIGN.md §11).
 //!
 //! # The two-layer solver API
 //!
@@ -34,6 +37,7 @@
 //! drives a session to completion, so one-shot call sites are unchanged.
 
 pub mod bespoke;
+pub mod bns;
 pub mod dopri5;
 pub mod grids;
 pub mod rk;
@@ -42,11 +46,12 @@ pub mod theta;
 pub mod transfer;
 
 pub use bespoke::BespokeSolver;
+pub use bns::{sampler_for_theta, AbSolver, BnsSolver, MultistepSolver};
 pub use dopri5::{DenseSolution, Dopri5};
 pub use grids::GridKind;
 pub use rk::{BaseRk, FixedGridSolver};
 pub use spec::{make_sampler, SolverSpec};
-pub use theta::{Base, DecodedTheta, RawTheta};
+pub use theta::{Base, DecodedTheta, Family, RawTheta};
 pub use transfer::TransferSolver;
 
 use anyhow::Result;

@@ -12,19 +12,28 @@
 //!
 //! [`SolverSpec::build`] instantiates the described [`Sampler`] against a
 //! model's scheduler; [`make_sampler`] is a thin `parse` + `build` wrapper.
-//! The *registry-resolved* bespoke form (`bespoke:model=M:n=8` — no path)
-//! cannot be built directly: it names "the best trained artifact for this
-//! key", and `crate::registry::Registry::resolve_spec` rewrites it to the
-//! concrete `bespoke:path=...` form (the coordinator and CLI do this
-//! automatically, re-resolving per request so freshly registered artifacts
-//! hot-swap into serving without a restart).
+//! The *registry-resolved* forms (`bespoke:model=M:n=8`,
+//! `bns:model=M:n=8`, `multistep:model=M:n=8` — no path) cannot be built
+//! directly: they name "the best trained artifact for this key", and
+//! `crate::registry::Registry::resolve_spec` rewrites them to the concrete
+//! `...:path=...` form (the coordinator and CLI do this automatically,
+//! re-resolving per request so freshly registered artifacts hot-swap into
+//! serving without a restart).
+//!
+//! The non-stationary families (DESIGN.md §11) follow the same grammar:
+//! `bns:path=...` / `multistep:path=...` pin a checkpoint of that family
+//! (family mismatch is an error), while `bespoke:path=...` dispatches on
+//! whatever family the checkpoint declares — that permissiveness is what
+//! lets budget routing and the frontier serve every trained family through
+//! one resolved form. `ab:n=K[:base=rk][:order=M]` is the training-free
+//! Adams–Bashforth baseline and builds with no checkpoint at all.
 
 use std::fmt;
 use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
-use super::bespoke::BespokeSolver;
+use super::bns::{sampler_for_theta, AbSolver, BnsSolver, MultistepSolver};
 use super::dopri5::Dopri5;
 use super::grids::GridKind;
 use super::rk::{BaseRk, FixedGridSolver};
@@ -54,15 +63,45 @@ pub enum SolverSpec {
     Bespoke { path: String },
     /// Learned Bespoke solver resolved from the artifact registry: the best
     /// registered theta for `(model, n)` (optionally pinned to a base RK
-    /// scheme / ablation). Must be resolved to [`SolverSpec::Bespoke`] via
-    /// `registry::Registry::resolve_spec` before building.
+    /// scheme / ablation), any family. Must be resolved to
+    /// [`SolverSpec::Bespoke`] via `registry::Registry::resolve_spec`
+    /// before building.
     BespokeRegistry {
         model: String,
         n: usize,
         base: Option<Base>,
         ablation: Option<String>,
     },
+    /// BNS (per-step coefficient) solver loaded from a theta checkpoint;
+    /// the checkpoint must declare `family=bns`.
+    Bns { path: String },
+    /// BNS solver resolved from the registry: the best `family=bns`
+    /// artifact for `(model, n)`.
+    BnsRegistry {
+        model: String,
+        n: usize,
+        base: Option<Base>,
+        ablation: Option<String>,
+    },
+    /// Learned-multistep solver loaded from a theta checkpoint; the
+    /// checkpoint must declare `family=multistep` (and carries its window).
+    Multistep { path: String },
+    /// Multistep solver resolved from the registry: the best
+    /// `family=multistep` artifact for `(model, n)`, any window.
+    MultistepRegistry {
+        model: String,
+        n: usize,
+        ablation: Option<String>,
+    },
+    /// Training-free Adams–Bashforth history-reuse solver of the given
+    /// order, with base-RK warm-up steps.
+    Ab { base: BaseRk, n: usize, order: usize },
 }
+
+/// Default base RK method for `ab:` specs.
+pub const AB_DEFAULT_BASE: BaseRk = BaseRk::Rk2;
+/// Default Adams–Bashforth order for `ab:` specs.
+pub const AB_DEFAULT_ORDER: usize = 2;
 
 /// Strict `k=v` segment list: rejects malformed segments and duplicates,
 /// and tracks consumption so unknown keys can be reported.
@@ -174,9 +213,54 @@ impl SolverSpec {
                     ablation: kv.take("ablation"),
                 },
             },
+            "bns" => match kv.take("path") {
+                Some(path) => {
+                    if kv.pairs.iter().any(|(k, _)| k == "model" || k == "n") {
+                        bail!(
+                            "bns spec takes either path=... or \
+                             model=.../n=..., not both"
+                        );
+                    }
+                    SolverSpec::Bns { path }
+                }
+                None => SolverSpec::BnsRegistry {
+                    model: kv.require("model").context("need path=... or model=M:n=K")?,
+                    n: parse_usize("n", &kv.require("n")?)?,
+                    base: kv.take("base").map(|b| Base::parse(&b)).transpose()?,
+                    ablation: kv.take("ablation"),
+                },
+            },
+            "multistep" => match kv.take("path") {
+                Some(path) => {
+                    if kv.pairs.iter().any(|(k, _)| k == "model" || k == "n") {
+                        bail!(
+                            "multistep spec takes either path=... or \
+                             model=.../n=..., not both"
+                        );
+                    }
+                    SolverSpec::Multistep { path }
+                }
+                None => SolverSpec::MultistepRegistry {
+                    model: kv.require("model").context("need path=... or model=M:n=K")?,
+                    n: parse_usize("n", &kv.require("n")?)?,
+                    ablation: kv.take("ablation"),
+                },
+            },
+            "ab" => SolverSpec::Ab {
+                base: match kv.take("base") {
+                    Some(b) => BaseRk::parse(&b)?,
+                    None => AB_DEFAULT_BASE,
+                },
+                n: parse_usize("n", &kv.require("n")?)?,
+                order: match kv.take("order") {
+                    Some(o) => parse_usize("order", &o)?,
+                    None => AB_DEFAULT_ORDER,
+                },
+            },
             _ => bail!(
                 "unknown solver kind {kind:?} \
-                 (rk1|rk2|rk4|rk1-target|rk2-target|rk4-target|dopri5|bespoke)"
+                 (rk1|rk2|rk4|rk1-target|rk2-target|rk4-target|dopri5|bespoke|\
+                  bns|multistep|ab)"
             ),
         };
         kv.finish(kind)?;
@@ -208,15 +292,35 @@ impl SolverSpec {
                     bail!("bespoke path must be non-empty");
                 }
             }
-            SolverSpec::BespokeRegistry { model, n, ablation, .. } => {
+            SolverSpec::Bns { path } => {
+                if path.is_empty() {
+                    bail!("bns path must be non-empty");
+                }
+            }
+            SolverSpec::Multistep { path } => {
+                if path.is_empty() {
+                    bail!("multistep path must be non-empty");
+                }
+            }
+            SolverSpec::BespokeRegistry { model, n, ablation, .. }
+            | SolverSpec::BnsRegistry { model, n, ablation, .. }
+            | SolverSpec::MultistepRegistry { model, n, ablation } => {
                 if model.is_empty() {
-                    bail!("bespoke model must be non-empty");
+                    bail!("{} model must be non-empty", self.kind());
                 }
                 if *n == 0 {
                     bail!("n must be >= 1");
                 }
                 if ablation.as_deref() == Some("") {
                     bail!("ablation must be non-empty when given");
+                }
+            }
+            SolverSpec::Ab { n, order, .. } => {
+                if *n == 0 {
+                    bail!("n must be >= 1");
+                }
+                if !(1..=4).contains(order) {
+                    bail!("ab order must be in 1..=4, got {order}");
                 }
             }
         }
@@ -234,13 +338,21 @@ impl SolverSpec {
             },
             SolverSpec::Dopri5 { .. } => "dopri5",
             SolverSpec::Bespoke { .. } | SolverSpec::BespokeRegistry { .. } => "bespoke",
+            SolverSpec::Bns { .. } | SolverSpec::BnsRegistry { .. } => "bns",
+            SolverSpec::Multistep { .. } | SolverSpec::MultistepRegistry { .. } => "multistep",
+            SolverSpec::Ab { .. } => "ab",
         }
     }
 
-    /// True for the registry-resolved bespoke form, which needs a
+    /// True for the registry-resolved forms, which need a
     /// `registry::Registry` to become buildable.
     pub fn needs_registry(&self) -> bool {
-        matches!(self, SolverSpec::BespokeRegistry { .. })
+        matches!(
+            self,
+            SolverSpec::BespokeRegistry { .. }
+                | SolverSpec::BnsRegistry { .. }
+                | SolverSpec::MultistepRegistry { .. }
+        )
     }
 
     // ---- JSON (de)serialization -----------------------------------------
@@ -283,6 +395,45 @@ impl SolverSpec {
                 }
                 Value::obj(fields)
             }
+            SolverSpec::Bns { path } => Value::obj(vec![
+                ("kind", Value::Str("bns".into())),
+                ("path", Value::Str(path.clone())),
+            ]),
+            SolverSpec::BnsRegistry { model, n, base, ablation } => {
+                let mut fields = vec![
+                    ("kind", Value::Str("bns-registry".into())),
+                    ("model", Value::Str(model.clone())),
+                    ("n", Value::Num(*n as f64)),
+                ];
+                if let Some(b) = base {
+                    fields.push(("base", Value::Str(b.name().into())));
+                }
+                if let Some(a) = ablation {
+                    fields.push(("ablation", Value::Str(a.clone())));
+                }
+                Value::obj(fields)
+            }
+            SolverSpec::Multistep { path } => Value::obj(vec![
+                ("kind", Value::Str("multistep".into())),
+                ("path", Value::Str(path.clone())),
+            ]),
+            SolverSpec::MultistepRegistry { model, n, ablation } => {
+                let mut fields = vec![
+                    ("kind", Value::Str("multistep-registry".into())),
+                    ("model", Value::Str(model.clone())),
+                    ("n", Value::Num(*n as f64)),
+                ];
+                if let Some(a) = ablation {
+                    fields.push(("ablation", Value::Str(a.clone())));
+                }
+                Value::obj(fields)
+            }
+            SolverSpec::Ab { base, n, order } => Value::obj(vec![
+                ("kind", Value::Str("ab".into())),
+                ("base", Value::Str(base.name().into())),
+                ("n", Value::Num(*n as f64)),
+                ("order", Value::Num(*order as f64)),
+            ]),
         }
     }
 
@@ -313,6 +464,30 @@ impl SolverSpec {
                     .map(|a| Ok::<_, anyhow::Error>(a.as_str()?.to_string()))
                     .transpose()?,
             },
+            "bns" => SolverSpec::Bns { path: v.get("path")?.as_str()?.to_string() },
+            "bns-registry" => SolverSpec::BnsRegistry {
+                model: v.get("model")?.as_str()?.to_string(),
+                n: v.get("n")?.as_usize()?,
+                base: v.get_opt("base").map(|b| Base::parse(b.as_str()?)).transpose()?,
+                ablation: v
+                    .get_opt("ablation")
+                    .map(|a| Ok::<_, anyhow::Error>(a.as_str()?.to_string()))
+                    .transpose()?,
+            },
+            "multistep" => SolverSpec::Multistep { path: v.get("path")?.as_str()?.to_string() },
+            "multistep-registry" => SolverSpec::MultistepRegistry {
+                model: v.get("model")?.as_str()?.to_string(),
+                n: v.get("n")?.as_usize()?,
+                ablation: v
+                    .get_opt("ablation")
+                    .map(|a| Ok::<_, anyhow::Error>(a.as_str()?.to_string()))
+                    .transpose()?,
+            },
+            "ab" => SolverSpec::Ab {
+                base: BaseRk::parse(v.get("base")?.as_str()?)?,
+                n: v.get("n")?.as_usize()?,
+                order: v.get("order")?.as_usize()?,
+            },
             other => bail!("unknown solver spec kind {other:?} in JSON"),
         };
         out.validate()?;
@@ -339,14 +514,36 @@ impl SolverSpec {
                 max_steps: *max_steps,
             })),
             SolverSpec::Bespoke { path } => {
+                // permissive: serves whatever family the checkpoint
+                // declares, so registry-resolved and budget-routed paths
+                // work for every trained family
                 let raw = RawTheta::load(std::path::Path::new(path))
                     .with_context(|| format!("loading theta from {path}"))?;
-                Ok(Box::new(BespokeSolver::new(&raw)))
+                sampler_for_theta(&raw)
             }
-            SolverSpec::BespokeRegistry { .. } => bail!(
+            SolverSpec::Bns { path } => {
+                let raw = RawTheta::load(std::path::Path::new(path))
+                    .with_context(|| format!("loading theta from {path}"))?;
+                Ok(Box::new(
+                    BnsSolver::new(&raw).with_context(|| format!("building bns from {path}"))?,
+                ))
+            }
+            SolverSpec::Multistep { path } => {
+                let raw = RawTheta::load(std::path::Path::new(path))
+                    .with_context(|| format!("loading theta from {path}"))?;
+                Ok(Box::new(
+                    MultistepSolver::new(&raw)
+                        .with_context(|| format!("building multistep from {path}"))?,
+                ))
+            }
+            SolverSpec::Ab { base, n, order } => Ok(Box::new(AbSolver::new(*base, *n, *order)?)),
+            SolverSpec::BespokeRegistry { .. }
+            | SolverSpec::BnsRegistry { .. }
+            | SolverSpec::MultistepRegistry { .. } => bail!(
                 "spec {self} is registry-resolved; resolve it to a concrete \
-                 bespoke:path=... via registry::Registry::resolve_spec first \
-                 (serve/sample attach the registry automatically)"
+                 {}:path=... via registry::Registry::resolve_spec first \
+                 (serve/sample attach the registry automatically)",
+                self.kind()
             ),
         }
     }
@@ -394,6 +591,36 @@ impl fmt::Display for SolverSpec {
                 }
                 Ok(())
             }
+            SolverSpec::Bns { path } => write!(f, "bns:path={path}"),
+            SolverSpec::BnsRegistry { model, n, base, ablation } => {
+                write!(f, "bns:model={model}:n={n}")?;
+                if let Some(b) = base {
+                    write!(f, ":base={}", b.name())?;
+                }
+                if let Some(a) = ablation {
+                    write!(f, ":ablation={a}")?;
+                }
+                Ok(())
+            }
+            SolverSpec::Multistep { path } => write!(f, "multistep:path={path}"),
+            SolverSpec::MultistepRegistry { model, n, ablation } => {
+                write!(f, "multistep:model={model}:n={n}")?;
+                if let Some(a) = ablation {
+                    write!(f, ":ablation={a}")?;
+                }
+                Ok(())
+            }
+            SolverSpec::Ab { base, n, order } => {
+                write!(f, "ab")?;
+                if *base != AB_DEFAULT_BASE {
+                    write!(f, ":base={}", base.name())?;
+                }
+                write!(f, ":n={n}")?;
+                if *order != AB_DEFAULT_ORDER {
+                    write!(f, ":order={order}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -409,6 +636,7 @@ impl FromStr for SolverSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solvers::theta::Family;
 
     /// Every spec shape documented in the CLI HELP text.
     const DOCUMENTED: &[&str] = &[
@@ -429,6 +657,18 @@ mod tests {
         "bespoke:model=checker2-ot:n=8",
         "bespoke:model=checker2-ot:n=8:base=rk1",
         "bespoke:model=checker2-ot:n=8:base=rk2:ablation=time-only",
+        "bns:path=out/thetas/bns_checker2-ot_rk2_n8.json",
+        "bns:model=checker2-ot:n=8",
+        "bns:model=checker2-ot:n=8:base=rk2",
+        "bns:model=checker2-ot:n=8:base=rk1:ablation=full",
+        "multistep:path=out/thetas/ms_checker2-ot_n8.json",
+        "multistep:model=checker2-ot:n=8",
+        "multistep:model=checker2-ot:n=8:ablation=full",
+        "ab:n=8",
+        "ab:base=rk1:n=8",
+        "ab:base=rk4:n=6:order=3",
+        "ab:n=8:order=1",
+        "ab:n=8:order=4",
     ];
 
     #[test]
@@ -460,6 +700,11 @@ mod tests {
             r#"{"kind":"dopri5","rtol":-1,"atol":1e-5,"max_steps":100}"#,
             r#"{"kind":"dopri5","rtol":1e-5,"atol":1e-5,"max_steps":0}"#,
             r#"{"kind":"bespoke","path":""}"#,
+            r#"{"kind":"bns","path":""}"#,
+            r#"{"kind":"multistep","path":""}"#,
+            r#"{"kind":"bns-registry","model":"m","n":0}"#,
+            r#"{"kind":"ab","base":"rk2","n":4,"order":5}"#,
+            r#"{"kind":"ab","base":"rk2","n":0,"order":2}"#,
             r#"{"kind":"nope"}"#,
         ] {
             let v = Value::parse(j).unwrap();
@@ -527,6 +772,19 @@ mod tests {
             "bespoke:model=m:n=4:base=rk4",  // no rk4 bespoke base
             "bespoke:path=x:model=m:n=4",    // path and model are exclusive
             "bespoke:model=m:n=4:foo=1",     // unknown key
+            "bns",                           // missing path and model
+            "bns:path=x:model=m:n=4",        // path and model are exclusive
+            "bns:model=m",                   // registry form missing n
+            "bns:model=m:n=0",               // zero steps
+            "bns:model=m:n=4:base=rk4",      // no rk4 bns base
+            "multistep",                     // missing path and model
+            "multistep:model=m:n=4:base=rk1", // multistep has no base key
+            "multistep:model=m:n=0",         // zero steps
+            "ab",                            // missing n
+            "ab:n=0",                        // zero steps
+            "ab:n=4:order=0",                // order out of range
+            "ab:n=4:order=5",                // order out of range
+            "ab:n=4:window=2",               // unknown key
         ] {
             assert!(SolverSpec::parse(s).is_err(), "should reject {s:?}");
         }
@@ -534,12 +792,20 @@ mod tests {
 
     #[test]
     fn registry_form_needs_resolution() {
-        let spec = SolverSpec::parse("bespoke:model=m:n=4").unwrap();
-        assert!(spec.needs_registry());
-        assert_eq!(spec.kind(), "bespoke");
-        let err = spec.build(Scheduler::CondOt).unwrap_err().to_string();
-        assert!(err.contains("registry"), "unhelpful error: {err}");
-        assert!(!SolverSpec::parse("bespoke:path=x.json").unwrap().needs_registry());
+        for (s, kind) in [
+            ("bespoke:model=m:n=4", "bespoke"),
+            ("bns:model=m:n=4", "bns"),
+            ("multistep:model=m:n=4", "multistep"),
+        ] {
+            let spec = SolverSpec::parse(s).unwrap();
+            assert!(spec.needs_registry(), "{s}");
+            assert_eq!(spec.kind(), kind);
+            let err = spec.build(Scheduler::CondOt).unwrap_err().to_string();
+            assert!(err.contains("registry"), "unhelpful error for {s}: {err}");
+        }
+        for s in ["bespoke:path=x.json", "bns:path=x.json", "multistep:path=x.json", "ab:n=4"] {
+            assert!(!SolverSpec::parse(s).unwrap().needs_registry(), "{s}");
+        }
     }
 
     #[test]
@@ -555,11 +821,21 @@ mod tests {
             "dopri5:tol=1e-4",
             "dopri5:rtol=1e-4:atol=1e-6",
             "dopri5",
+            "ab:n=4",
+            "ab:base=rk1:n=4:order=1",
+            "ab:base=rk4:n=3:order=4",
         ] {
             let sampler = make_sampler(spec, s).unwrap_or_else(|e| panic!("{spec}: {e}"));
             assert!(!sampler.name().is_empty());
         }
-        for spec in ["nope:n=4", "rk2", "rk2:n=4:n=8", "bespoke:model=m:n=4"] {
+        for spec in [
+            "nope:n=4",
+            "rk2",
+            "rk2:n=4:n=8",
+            "bespoke:model=m:n=4",
+            "bns:model=m:n=4",
+            "multistep:model=m:n=4",
+        ] {
             assert!(make_sampler(spec, s).is_err(), "should reject {spec}");
         }
     }
@@ -583,7 +859,7 @@ mod tests {
     #[test]
     fn builds_non_checkpoint_kinds() {
         for s in DOCUMENTED {
-            if s.starts_with("bespoke") {
+            if s.starts_with("bespoke") || s.starts_with("bns") || s.starts_with("multistep") {
                 // needs a checkpoint on disk (covered above) or a registry
                 continue;
             }
@@ -597,10 +873,61 @@ mod tests {
 
     #[test]
     fn built_sampler_name_matches_canonical_spec() {
-        for s in ["rk2:n=8", "rk2:n=8:grid=edm", "rk1:n=4"] {
+        for s in [
+            "rk2:n=8",
+            "rk2:n=8:grid=edm",
+            "rk1:n=4",
+            "ab:n=8",
+            "ab:base=rk1:n=8",
+            "ab:base=rk4:n=6:order=3",
+            "ab:n=8:order=1",
+        ] {
             let spec = SolverSpec::parse(s).unwrap();
             let sampler = spec.build(Scheduler::CondOt).unwrap();
             assert_eq!(sampler.name(), spec.to_string());
         }
+    }
+
+    /// `bespoke:path=...` dispatches on the checkpoint's declared family
+    /// (serves whatever the theta is), while `bns:path=...` /
+    /// `multistep:path=...` pin the family and reject mismatches.
+    #[test]
+    fn path_forms_dispatch_on_checkpoint_family() {
+        let dir = std::env::temp_dir().join(format!("family_spec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let bns = RawTheta::identity_for(Family::Bns, Base::Rk2, 4, 0).unwrap();
+        let bns_path = dir.join("bns.json");
+        bns.save(&bns_path).unwrap();
+        let ms = RawTheta::identity_for(Family::Multistep, Base::Rk1, 4, 2).unwrap();
+        let ms_path = dir.join("ms.json");
+        ms.save(&ms_path).unwrap();
+        let st = RawTheta::identity(Base::Rk2, 4);
+        let st_path = dir.join("stationary.json");
+        st.save(&st_path).unwrap();
+
+        // bespoke:path serves every family
+        for (p, nfe) in [(&bns_path, 8), (&ms_path, 4), (&st_path, 8)] {
+            let s = make_sampler(&format!("bespoke:path={}", p.display()), Scheduler::CondOt)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));
+            assert_eq!(s.nfe(), nfe);
+        }
+        // pinned forms accept their own family...
+        assert!(make_sampler(&format!("bns:path={}", bns_path.display()), Scheduler::CondOt).is_ok());
+        assert!(
+            make_sampler(&format!("multistep:path={}", ms_path.display()), Scheduler::CondOt)
+                .is_ok()
+        );
+        // ...and reject others with a family-mismatch error
+        let err = make_sampler(&format!("bns:path={}", st_path.display()), Scheduler::CondOt)
+            .map(|_| ())
+            .unwrap_err();
+        let err = format!("{err:#}");
+        assert!(err.contains("bns") || err.contains("family"), "unhelpful error: {err}");
+        assert!(
+            make_sampler(&format!("multistep:path={}", bns_path.display()), Scheduler::CondOt)
+                .is_err()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

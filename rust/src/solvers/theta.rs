@@ -1,19 +1,64 @@
 //! Raw-theta codec for the Bespoke scale-time transform — the bit-exact
-//! Rust mirror of `python/compile/theta.py` (paper eq. 74/76, Appendix F).
+//! Rust mirror of `python/compile/theta.py` (paper eq. 74/76, Appendix F) —
+//! plus the non-stationary solver families layered on the same checkpoint
+//! format (DESIGN.md §11).
 //!
-//! Grid convention: base-RK1 n-step solvers use grid points i = 0..n
-//! (g = n+1); base-RK2 uses i = 0, 1/2, 1, ..., n (g = 2n+1). Raw layout
-//! (p = 4(g-1) floats):
+//! Stationary grid convention: base-RK1 n-step solvers use grid points
+//! i = 0..n (g = n+1); base-RK2 uses i = 0, 1/2, 1, ..., n (g = 2n+1).
+//! Raw layout (p = 4(g-1) floats):
 //!
 //! ```text
 //! [ dt_raw (g-1) | tdot_raw (g-1) | log_s (g-1) | sdot (g-1) ]
 //! ```
+//!
+//! Non-stationary layouts (uniform time grid t_i = i/n, coefficients only):
+//!
+//! ```text
+//! bns/rk1:   [ a_0 b_0 | a_1 b_1 | ... ]                 (p = 2n)
+//! bns/rk2:   [ a_0 b1_0 b2_0 | ... ]                     (p = 3n)
+//! multistep: [ a_0 c_{0,0}..c_{0,W-1} | ... ]            (p = n(1+W))
+//! ```
+//!
+//! On disk, stationary checkpoints serialize to exactly the legacy
+//! `{base, n, raw}` object (byte-identical, so pre-family content hashes
+//! re-verify); non-stationary checkpoints add a `"family"` key (and
+//! `"window"` for multistep). A missing `family` reads as stationary.
 
 use anyhow::{bail, Result};
 
 use crate::json::Value;
 
 const EPS: f32 = 1e-6;
+
+/// Which solver family a theta parameterizes. The stationary family is the
+/// paper's scale-time transform (one step transform reused at every step);
+/// `Bns` holds independent per-step coefficients (arXiv 2403.01329) and
+/// `Multistep` learned history-mixing coefficients (arXiv 2502.17423).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Family {
+    Stationary,
+    Bns,
+    Multistep,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Result<Family> {
+        Ok(match s {
+            "stationary" => Family::Stationary,
+            "bns" => Family::Bns,
+            "multistep" => Family::Multistep,
+            _ => bail!("unknown solver family {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Stationary => "stationary",
+            Family::Bns => "bns",
+            Family::Multistep => "multistep",
+        }
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Base {
@@ -54,12 +99,16 @@ impl Base {
     }
 }
 
-/// Raw learnable parameters of one Bespoke solver.
+/// Raw learnable parameters of one trained solver. `family` selects the
+/// layout of `raw`; `window` is the multistep history length W (0 for the
+/// other families).
 #[derive(Clone, Debug)]
 pub struct RawTheta {
     pub base: Base,
     pub n: usize,
     pub raw: Vec<f32>,
+    pub family: Family,
+    pub window: usize,
 }
 
 /// Decoded grid sequences (paper notation): `t[g]`, `tdot[g-1]`, `s[g]`,
@@ -79,6 +128,24 @@ impl RawTheta {
         4 * (base.grid_points(n) - 1)
     }
 
+    /// Parameter count for any family. `window` is only consulted for
+    /// multistep; multistep requires `base == rk1` and `window >= 1`.
+    pub fn n_params_for(family: Family, base: Base, n: usize, window: usize) -> Result<usize> {
+        Ok(match family {
+            Family::Stationary => Self::n_params(base, n),
+            Family::Bns => (1 + base.evals_per_step()) * n,
+            Family::Multistep => {
+                if base != Base::Rk1 {
+                    bail!("multistep thetas require base=rk1 (got {})", base.name());
+                }
+                if window == 0 {
+                    bail!("multistep thetas require window >= 1");
+                }
+                n * (1 + window)
+            }
+        })
+    }
+
     /// Identity-transform initialization (paper eq. 77-80): the decoded
     /// Bespoke solver coincides with the plain base RK solver.
     pub fn identity(base: Base, n: usize) -> RawTheta {
@@ -88,7 +155,36 @@ impl RawTheta {
         raw.extend(std::iter::repeat(1.0f32 / m as f32).take(m)); // tdot -> 1
         raw.extend(std::iter::repeat(0.0f32).take(m)); // log_s -> s = 1
         raw.extend(std::iter::repeat(0.0f32).take(m)); // sdot -> 0
-        RawTheta { base, n, raw }
+        RawTheta { base, n, raw, family: Family::Stationary, window: 0 }
+    }
+
+    /// Identity initialization for any family: the solver coincides with
+    /// the plain base RK solver (bns: a=1 plus the base's own stage
+    /// weights; multistep: a=1, c_{i,0}=1, older history 0 — Euler).
+    pub fn identity_for(family: Family, base: Base, n: usize, window: usize) -> Result<RawTheta> {
+        let p = Self::n_params_for(family, base, n, window)?;
+        Ok(match family {
+            Family::Stationary => Self::identity(base, n),
+            Family::Bns => {
+                let mut raw = Vec::with_capacity(p);
+                for _ in 0..n {
+                    match base {
+                        Base::Rk1 => raw.extend_from_slice(&[1.0, 1.0]), // a, b
+                        Base::Rk2 => raw.extend_from_slice(&[1.0, 0.0, 1.0]), // a, b1, b2
+                    }
+                }
+                RawTheta { base, n, raw, family, window: 0 }
+            }
+            Family::Multistep => {
+                let mut raw = Vec::with_capacity(p);
+                for _ in 0..n {
+                    raw.push(1.0); // a
+                    raw.push(1.0); // c_{i,0}
+                    raw.extend(std::iter::repeat(0.0f32).take(window - 1));
+                }
+                RawTheta { base, n, raw, family, window }
+            }
+        })
     }
 
     pub fn from_raw(base: Base, n: usize, raw: Vec<f32>) -> Result<RawTheta> {
@@ -100,11 +196,41 @@ impl RawTheta {
                 base.name()
             );
         }
-        Ok(RawTheta { base, n, raw })
+        Ok(RawTheta { base, n, raw, family: Family::Stationary, window: 0 })
+    }
+
+    /// [`RawTheta::from_raw`] for any family, with the family's own length
+    /// validation.
+    pub fn from_raw_for(
+        family: Family,
+        base: Base,
+        n: usize,
+        window: usize,
+        raw: Vec<f32>,
+    ) -> Result<RawTheta> {
+        let p = Self::n_params_for(family, base, n, window)?;
+        if raw.len() != p {
+            bail!(
+                "theta length {} != expected {p} for family={} base={} n={n}",
+                raw.len(),
+                family.name(),
+                base.name()
+            );
+        }
+        let window = if family == Family::Multistep { window } else { 0 };
+        Ok(RawTheta { base, n, raw, family, window })
     }
 
     /// Decode raw -> grid sequences (mirror of python `theta.decode`).
+    /// Only the stationary layout decodes to scale-time grids; the
+    /// non-stationary families consume `raw` directly in their steppers.
     pub fn decode(&self) -> DecodedTheta {
+        assert_eq!(
+            self.family,
+            Family::Stationary,
+            "decode() is only defined for stationary thetas (got {})",
+            self.family.name()
+        );
         let g = self.base.grid_points(self.n);
         let m = g - 1;
         let (dt_raw, rest) = self.raw.split_at(m);
@@ -158,18 +284,47 @@ impl RawTheta {
 
     // ---- persistence --------------------------------------------------------
 
+    /// Stationary thetas serialize to exactly the legacy `{base, n, raw}`
+    /// object — byte-identical to pre-family checkpoints, so registry
+    /// content hashes of old artifacts keep verifying. Non-stationary
+    /// thetas add `"family"` (and `"window"` for multistep).
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("base", Value::Str(self.base.name().into())),
             ("n", Value::Num(self.n as f64)),
-            ("raw", Value::from_f32s(&self.raw)),
-        ])
+        ];
+        if self.family != Family::Stationary {
+            fields.push(("family", Value::Str(self.family.name().into())));
+        }
+        if self.family == Family::Multistep {
+            fields.push(("window", Value::Num(self.window as f64)));
+        }
+        fields.push(("raw", Value::from_f32s(&self.raw)));
+        Value::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<RawTheta> {
         let base = Base::parse(v.get("base")?.as_str()?)?;
         let n = v.get("n")?.as_usize()?;
-        Self::from_raw(base, n, v.get("raw")?.as_f32_vec()?)
+        let family = match v.get_opt("family") {
+            Some(f) => Family::parse(f.as_str()?)?,
+            None => Family::Stationary,
+        };
+        let window = match v.get_opt("window") {
+            Some(w) => {
+                if family != Family::Multistep {
+                    bail!("theta key \"window\" is only valid for family=multistep");
+                }
+                w.as_usize()?
+            }
+            None => {
+                if family == Family::Multistep {
+                    bail!("multistep theta is missing required key \"window\"");
+                }
+                0
+            }
+        };
+        Self::from_raw_for(family, base, n, window, v.get("raw")?.as_f32_vec()?)
     }
 
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
@@ -299,5 +454,90 @@ mod tests {
     #[test]
     fn length_validation() {
         assert!(RawTheta::from_raw(Base::Rk1, 4, vec![0.0; 3]).is_err());
+        assert!(RawTheta::from_raw_for(Family::Bns, Base::Rk2, 4, 0, vec![0.0; 11]).is_err());
+        assert!(
+            RawTheta::from_raw_for(Family::Multistep, Base::Rk1, 4, 2, vec![0.0; 11]).is_err()
+        );
+    }
+
+    #[test]
+    fn family_param_counts() {
+        assert_eq!(RawTheta::n_params_for(Family::Stationary, Base::Rk2, 10, 0).unwrap(), 80);
+        assert_eq!(RawTheta::n_params_for(Family::Bns, Base::Rk1, 6, 0).unwrap(), 12);
+        assert_eq!(RawTheta::n_params_for(Family::Bns, Base::Rk2, 6, 0).unwrap(), 18);
+        assert_eq!(RawTheta::n_params_for(Family::Multistep, Base::Rk1, 6, 3).unwrap(), 24);
+        // multistep is rk1-only and needs a window
+        assert!(RawTheta::n_params_for(Family::Multistep, Base::Rk2, 6, 3).is_err());
+        assert!(RawTheta::n_params_for(Family::Multistep, Base::Rk1, 6, 0).is_err());
+    }
+
+    #[test]
+    fn stationary_json_is_byte_identical_to_legacy() {
+        // the exact serialized form old registries hashed: {base, n, raw}
+        let th = RawTheta::identity(Base::Rk1, 2);
+        let text = th.to_json().to_string_compact();
+        assert!(!text.contains("family"), "{text}");
+        assert!(!text.contains("window"), "{text}");
+        let legacy = Value::obj(vec![
+            ("base", Value::Str("rk1".into())),
+            ("n", Value::Num(2.0)),
+            ("raw", Value::from_f32s(&th.raw)),
+        ]);
+        assert_eq!(text, legacy.to_string_compact());
+        // and a legacy object (no family key) reads back as stationary
+        let back = RawTheta::from_json(&legacy).unwrap();
+        assert_eq!(back.family, Family::Stationary);
+        assert_eq!(back.window, 0);
+    }
+
+    #[test]
+    fn family_json_roundtrips() {
+        for th in [
+            RawTheta::identity_for(Family::Bns, Base::Rk1, 5, 0).unwrap(),
+            RawTheta::identity_for(Family::Bns, Base::Rk2, 3, 0).unwrap(),
+            RawTheta::identity_for(Family::Multistep, Base::Rk1, 6, 3).unwrap(),
+        ] {
+            let back = RawTheta::from_json(&th.to_json()).unwrap();
+            assert_eq!(back.family, th.family);
+            assert_eq!(back.base, th.base);
+            assert_eq!(back.n, th.n);
+            assert_eq!(back.window, th.window);
+            assert_eq!(back.raw, th.raw);
+        }
+    }
+
+    #[test]
+    fn json_rejects_bad_family_and_window() {
+        let good = RawTheta::identity_for(Family::Bns, Base::Rk1, 4, 0).unwrap().to_json();
+        let with = |key: &str, val: Value| match &good {
+            Value::Obj(map) => {
+                let mut map = map.clone();
+                map.insert(key.to_string(), val);
+                Value::Obj(map)
+            }
+            _ => unreachable!(),
+        };
+        // unknown family string errors (never panics)
+        assert!(RawTheta::from_json(&with("family", Value::Str("quantum".into()))).is_err());
+        // window on a non-multistep family errors
+        assert!(RawTheta::from_json(&with("window", Value::Num(2.0))).is_err());
+        // multistep without window errors
+        let ms = RawTheta::identity_for(Family::Multistep, Base::Rk1, 4, 2).unwrap().to_json();
+        let stripped = match &ms {
+            Value::Obj(map) => {
+                let mut map = map.clone();
+                map.remove("window");
+                Value::Obj(map)
+            }
+            _ => unreachable!(),
+        };
+        assert!(RawTheta::from_json(&stripped).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "only defined for stationary")]
+    fn decode_rejects_non_stationary() {
+        let th = RawTheta::identity_for(Family::Bns, Base::Rk1, 4, 0).unwrap();
+        let _ = th.decode();
     }
 }

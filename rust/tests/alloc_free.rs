@@ -1,8 +1,9 @@
 //! Integration: the solver step loops really are allocation-free. A
 //! counting global allocator tracks this thread's heap allocations; after
 //! `begin()` (plus one warm pass to populate per-thread scratch), driving
-//! any fixed-grid / bespoke / transfer / dopri5 session over the analytic
-//! model must perform **zero** heap allocations per step.
+//! any fixed-grid / bespoke / bns / multistep / Adams–Bashforth /
+//! transfer / dopri5 session over the analytic model must perform
+//! **zero** heap allocations per step.
 //!
 //! This file intentionally holds a single #[test] so no concurrent test
 //! threads muddy the counter (it is thread-local anyway, belt and braces).
@@ -13,8 +14,10 @@ use std::cell::Cell;
 use bespoke_flow::models::AnalyticModel;
 use bespoke_flow::schedulers::Scheduler;
 use bespoke_flow::solvers::rk::{BaseRk, FixedGridSolver};
-use bespoke_flow::solvers::theta::{Base, RawTheta};
-use bespoke_flow::solvers::{BespokeSolver, Dopri5, Sampler, TransferSolver};
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
+use bespoke_flow::solvers::{
+    AbSolver, BespokeSolver, BnsSolver, Dopri5, MultistepSolver, Sampler, TransferSolver,
+};
 use bespoke_flow::tensor::Tensor;
 use bespoke_flow::util::Rng;
 
@@ -72,6 +75,22 @@ fn solver_step_loops_are_allocation_free() {
         Box::new(FixedGridSolver::uniform(BaseRk::Rk4, 4)),
         Box::new(BespokeSolver::new(&RawTheta::identity(Base::Rk1, 8))),
         Box::new(BespokeSolver::new(&RawTheta::identity(Base::Rk2, 6))),
+        Box::new(
+            BnsSolver::new(&RawTheta::identity_for(Family::Bns, Base::Rk1, 8, 0).unwrap())
+                .unwrap(),
+        ),
+        Box::new(
+            BnsSolver::new(&RawTheta::identity_for(Family::Bns, Base::Rk2, 6, 0).unwrap())
+                .unwrap(),
+        ),
+        Box::new(
+            MultistepSolver::new(
+                &RawTheta::identity_for(Family::Multistep, Base::Rk1, 8, 3).unwrap(),
+            )
+            .unwrap(),
+        ),
+        Box::new(AbSolver::new(BaseRk::Rk2, 6, 2).unwrap()),
+        Box::new(AbSolver::new(BaseRk::Rk1, 8, 3).unwrap()),
         Box::new(TransferSolver::new(Scheduler::CondOt, Scheduler::VarPres, BaseRk::Rk2, 6)),
         Box::new(Dopri5::default()),
     ];

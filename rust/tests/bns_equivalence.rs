@@ -1,0 +1,287 @@
+//! Tentpole acceptance for the non-stationary solver families (DESIGN.md
+//! §11), artifact-free over the fixture zoo's analytic `ideal` model:
+//!
+//! * identity-coefficient BNS / multistep solves match their base RK
+//!   solvers (tolerance: op order differs in the last bit),
+//! * the closed-form family trainers beat both their identity init and
+//!   the plain base-RK baseline at **equal NFE**, and
+//! * the serving plane carries the family end to end over real TCP:
+//!   `train` with `"family":"bns"` registers an artifact, `evaluate`
+//!   writes its scorecard, `frontier` surfaces a `bns:path=` point, and
+//!   a budgeted `sample` routes through it bitwise-identically to the
+//!   explicit-spec request.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bespoke_flow::bespoke::train_family;
+use bespoke_flow::config::{EvalConfig, QualityConfig, ServeConfig, TrainConfig};
+use bespoke_flow::coordinator::{serve, Coordinator, ServerState};
+use bespoke_flow::eval::rmse;
+use bespoke_flow::json::Value;
+use bespoke_flow::models::{VelocityModel, Zoo};
+use bespoke_flow::quality::{EvalRunner, EvalRunnerDyn};
+use bespoke_flow::registry::{JobManager, Registry, TrainJobManager, ZooRunner};
+use bespoke_flow::runtime::Manifest;
+use bespoke_flow::solvers::rk::{BaseRk, FixedGridSolver};
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
+use bespoke_flow::solvers::{BnsSolver, Dopri5, MultistepSolver, Sampler};
+use bespoke_flow::tensor::Tensor;
+use bespoke_flow::util::Rng;
+
+fn fixture_zoo() -> Arc<Zoo> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/zoo");
+    Arc::new(Zoo::new(Arc::new(Manifest::load(&dir).unwrap())))
+}
+
+fn serving_model() -> Arc<dyn VelocityModel> {
+    fixture_zoo().serving_model("checker2-ot").unwrap()
+}
+
+/// RMSE of a sampler against a tight-tolerance DOPRI5 solve on a fresh
+/// noise batch.
+fn gt_rmse(model: &dyn VelocityModel, sampler: &dyn Sampler, seed: u64) -> f32 {
+    let gt = Dopri5 { rtol: 1e-6, atol: 1e-6, max_steps: 100_000 };
+    let (b, d) = (model.batch(), model.dim());
+    let mut rng = Rng::new(seed);
+    let x0 = Tensor::new(rng.normal_vec(b * d), vec![b, d]).unwrap();
+    let reference = gt.sample(model, &x0).unwrap();
+    let out = sampler.sample(model, &x0).unwrap();
+    rmse(&out, &reference)
+}
+
+fn quick_cfg(iters: usize) -> TrainConfig {
+    TrainConfig {
+        iters,
+        lr: 0.02,
+        pool_batches: 2,
+        val_batches: 1,
+        val_every: 20,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn identity_families_match_base_rk_on_the_fixture_model() {
+    let model = serving_model();
+    let mut rng = Rng::new(11);
+    let x0 = Tensor::new(rng.normal_vec(16), vec![8, 2]).unwrap();
+    for (base, rk, n) in [(Base::Rk1, BaseRk::Rk1, 6), (Base::Rk2, BaseRk::Rk2, 5)] {
+        let raw = RawTheta::identity_for(Family::Bns, base, n, 0).unwrap();
+        let bns = BnsSolver::new(&raw).unwrap().sample(model.as_ref(), &x0).unwrap();
+        let plain = FixedGridSolver::uniform(rk, n).sample(model.as_ref(), &x0).unwrap();
+        let err = bns.sub(&plain).unwrap().linf();
+        assert!(err < 1e-5, "bns {base:?}: identity mismatch linf={err}");
+    }
+    let raw = RawTheta::identity_for(Family::Multistep, Base::Rk1, 6, 3).unwrap();
+    let ms = MultistepSolver::new(&raw).unwrap().sample(model.as_ref(), &x0).unwrap();
+    let euler = FixedGridSolver::uniform(BaseRk::Rk1, 6).sample(model.as_ref(), &x0).unwrap();
+    let err = ms.sub(&euler).unwrap().linf();
+    assert!(err < 1e-5, "multistep: identity mismatch linf={err}");
+}
+
+/// The acceptance bar: at equal NFE, a trained BNS solver is at least as
+/// good as the stationary-identity baseline (the plain base RK solve) —
+/// and strictly better than its own identity init.
+#[test]
+fn trained_bns_beats_identity_and_matches_or_beats_base_rk_at_equal_nfe() {
+    let model = serving_model();
+    let n = 4;
+    let out =
+        train_family(model.as_ref(), Family::Bns, Base::Rk2, n, 0, &quick_cfg(200)).unwrap();
+    let trained = BnsSolver::new(&out.best).unwrap();
+    let identity =
+        BnsSolver::new(&RawTheta::identity_for(Family::Bns, Base::Rk2, n, 0).unwrap()).unwrap();
+    let baseline = FixedGridSolver::uniform(BaseRk::Rk2, n);
+    assert_eq!(trained.nfe(), baseline.nfe(), "comparison must be at equal NFE");
+    let (tr, id, rk) = (
+        gt_rmse(model.as_ref(), &trained, 77),
+        gt_rmse(model.as_ref(), &identity, 77),
+        gt_rmse(model.as_ref(), &baseline, 77),
+    );
+    assert!(tr < id, "trained bns rmse {tr} not better than identity {id}");
+    assert!(tr <= rk, "trained bns rmse {tr} worse than base rk2 {rk} at equal NFE");
+}
+
+#[test]
+fn trained_multistep_beats_euler_at_equal_nfe() {
+    let model = serving_model();
+    let (n, window) = (6, 3);
+    let out =
+        train_family(model.as_ref(), Family::Multistep, Base::Rk1, n, window, &quick_cfg(200))
+            .unwrap();
+    let trained = MultistepSolver::new(&out.best).unwrap();
+    let baseline = FixedGridSolver::uniform(BaseRk::Rk1, n);
+    assert_eq!(trained.nfe(), baseline.nfe(), "comparison must be at equal NFE");
+    let tr = gt_rmse(model.as_ref(), &trained, 78);
+    let rk = gt_rmse(model.as_ref(), &baseline, 78);
+    assert!(tr <= rk, "trained multistep rmse {tr} worse than euler {rk} at equal NFE");
+}
+
+// ---- the serving plane, end to end over real TCP ------------------------
+
+fn server_state(root: &std::path::Path) -> (ServerState, Arc<Registry>) {
+    let zoo = fixture_zoo();
+    let registry = Arc::new(Registry::open(root).unwrap());
+    let cfg = ServeConfig { max_batch: 256, fuse_window_us: 1_000, ..ServeConfig::default() };
+    let coord = Arc::new(Coordinator::with_registry(zoo.clone(), cfg, registry.clone()));
+    let train_cfg = quick_cfg(120);
+    let jobs = Arc::new(
+        TrainJobManager::new(
+            registry.clone(),
+            Arc::new(ZooRunner::new(zoo.clone(), train_cfg)),
+            1,
+            Some(coord.metrics.clone()),
+        )
+        .unwrap(),
+    );
+    let eval_runner = Arc::new(EvalRunner::new(
+        zoo,
+        registry.clone(),
+        EvalConfig { gt_tol: 1e-4, seed: 5, metric_samples: 64 },
+        QualityConfig { eval_batches: 1, ..QualityConfig::default() },
+    ));
+    let eval_jobs = Arc::new(
+        JobManager::new(
+            registry.clone(),
+            eval_runner as Arc<EvalRunnerDyn>,
+            1,
+            Some(coord.metrics.clone()),
+        )
+        .unwrap(),
+    );
+    (ServerState::with_jobs(coord, jobs).with_eval_jobs(eval_jobs), registry)
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn open(addr: &str) -> Conn {
+        let mut last_err = None;
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                    let writer = stream.try_clone().unwrap();
+                    return Conn { writer, reader: BufReader::new(stream) };
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        panic!("could not connect to {addr}: {last_err:?}");
+    }
+
+    fn ask(&mut self, line: &str) -> Value {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut out = String::new();
+        self.reader.read_line(&mut out).expect("response before the 60s read timeout");
+        assert!(!out.is_empty(), "server closed the connection mid-request");
+        Value::parse(&out).unwrap_or_else(|e| panic!("unparseable response {out:?}: {e:#}"))
+    }
+
+    /// Poll a `*_status` command until `state == "done"`, returning the
+    /// final snapshot.
+    fn wait_done(&mut self, cmd: &str, job_id: usize) -> Value {
+        for i in 0.. {
+            assert!(i < 1200, "{cmd} {job_id} did not finish in time");
+            let s = self.ask(&format!(r#"{{"cmd":"{cmd}","job_id":{job_id}}}"#));
+            assert!(s.get("ok").unwrap().as_bool().unwrap(), "{cmd} failed: {s:?}");
+            match s.get("state").unwrap().as_str().unwrap() {
+                "done" => return s,
+                "failed" => panic!("{cmd} {job_id} failed: {s:?}"),
+                _ => std::thread::sleep(Duration::from_millis(100)),
+            }
+        }
+        unreachable!()
+    }
+}
+
+#[test]
+fn bns_train_evaluate_frontier_budget_route_over_tcp() {
+    let root = std::env::temp_dir().join(format!("bespoke_bns_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let (state, _registry) = server_state(&root);
+    let metrics = state.coord.metrics.clone();
+    let addr = "127.0.0.1:7399";
+    {
+        let state = state.clone();
+        std::thread::spawn(move || serve(state, addr));
+    }
+    let mut conn = Conn::open(addr);
+
+    // train with family=bns: the closed-form trainer needs no AOT'd
+    // loss-grad, so it runs artifact-free where stationary train cannot
+    let v = conn.ask(
+        r#"{"cmd":"train","model":"checker2-ot","base":"rk2","n":4,"family":"bns","iters":120,"seed":11}"#,
+    );
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "train rejected: {v:?}");
+    let train_id = v.get("job_id").unwrap().as_usize().unwrap();
+    let s = conn.wait_done("job_status", train_id);
+    assert_eq!(s.get("family").unwrap().as_str().unwrap(), "bns");
+    let artifact = s.get("artifact").unwrap();
+    assert_eq!(artifact.get("family").unwrap().as_str().unwrap(), "bns");
+    assert_eq!(artifact.get("version").unwrap().as_usize().unwrap(), 1);
+    let artifact_file = artifact.get("file").unwrap().as_str().unwrap().to_string();
+
+    // the registered theta really is a bns checkpoint
+    let theta_path = root.join(&artifact_file);
+    let th = RawTheta::load(&theta_path).unwrap();
+    assert_eq!(th.family, Family::Bns);
+    assert_eq!((th.base, th.n), (Base::Rk2, 4));
+
+    // evaluate through the family-pinned registry form -> scorecard
+    let line = r#"{"cmd":"evaluate","model":"checker2-ot","solver":"bns:model=checker2-ot:n=4"}"#;
+    let v = conn.ask(line);
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "evaluate rejected: {v:?}");
+    let eval_id = v.get("job_id").unwrap().as_usize().unwrap();
+    let s = conn.wait_done("eval_status", eval_id);
+    let card = s.get("scorecard").unwrap();
+    assert_eq!(card.get("artifact").unwrap().get("version").unwrap().as_usize().unwrap(), 1);
+
+    // the frontier surfaces the bns artifact (nfe 8 = rk2 base, n=4)
+    let f = conn.ask(r#"{"cmd":"frontier","model":"checker2-ot"}"#);
+    assert!(f.get("ok").unwrap().as_bool().unwrap(), "{f:?}");
+    let points = f.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 1, "one measured artifact -> one point: {f:?}");
+    assert_eq!(points[0].get("nfe").unwrap().as_usize().unwrap(), 8);
+    let routed_spec = points[0].get("solver").unwrap().as_str().unwrap().to_string();
+    assert!(routed_spec.starts_with("bns:path="), "{routed_spec}");
+
+    // budget-routed sampling == the explicit bns:path spec, bitwise
+    let via_budget = conn.ask(
+        r#"{"cmd":"sample","model":"checker2-ot","budget":{"nfe_max":8},"n_samples":5,"seed":7,"return_samples":true}"#,
+    );
+    assert!(
+        via_budget.get("ok").unwrap().as_bool().unwrap(),
+        "budget sample failed: {via_budget:?}"
+    );
+    let via_path = conn.ask(&format!(
+        r#"{{"cmd":"sample","model":"checker2-ot","solver":"{routed_spec}","n_samples":5,"seed":7,"return_samples":true}}"#
+    ));
+    assert!(via_path.get("ok").unwrap().as_bool().unwrap(), "{via_path:?}");
+    assert_eq!(
+        via_budget.get("samples").unwrap(),
+        via_path.get("samples").unwrap(),
+        "budget-routed sampling must match the explicit bns checkpoint bitwise"
+    );
+    assert!(metrics.event_count("budget_routed") >= 1);
+
+    // a multistep registry form has nothing to resolve -> clean error
+    let line =
+        r#"{"cmd":"evaluate","model":"checker2-ot","solver":"multistep:model=checker2-ot:n=4"}"#;
+    let v = conn.ask(line);
+    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -16,7 +16,7 @@ use bespoke_flow::coordinator::{Coordinator, SampleRequest};
 use bespoke_flow::models::{AnalyticModel, Zoo};
 use bespoke_flow::runtime::Manifest;
 use bespoke_flow::schedulers::Scheduler;
-use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
 use bespoke_flow::solvers::{make_sampler, Sampler, SolveSession};
 use bespoke_flow::tensor::Tensor;
 use bespoke_flow::util::Rng;
@@ -27,29 +27,42 @@ fn toy_model(batch: usize) -> AnalyticModel {
     AnalyticModel::new("toy", pts, Scheduler::CondOt, 0.08, batch).unwrap()
 }
 
-/// Write an identity theta checkpoint and return its path (the bespoke
-/// family's fixture; identity is enough — fusion cares about row layout,
-/// not theta values).
+/// Write identity theta checkpoints for every learned family (stationary,
+/// bns, multistep) into a fresh temp dir and return it — identity is
+/// enough; fusion cares about row layout, not theta values.
 fn theta_fixture(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("bespoke_fusion_{}_{tag}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("theta.json");
-    RawTheta::identity(Base::Rk2, 4).save(&path).unwrap();
-    path
+    RawTheta::identity(Base::Rk2, 4).save(&dir.join("theta.json")).unwrap();
+    RawTheta::identity_for(Family::Bns, Base::Rk2, 4, 0)
+        .unwrap()
+        .save(&dir.join("bns.json"))
+        .unwrap();
+    RawTheta::identity_for(Family::Multistep, Base::Rk1, 4, 3)
+        .unwrap()
+        .save(&dir.join("multistep.json"))
+        .unwrap();
+    dir
 }
 
 /// Every fusable solver family: fixed-grid RK (uniform + warped grid),
-/// scheduler transfer, and bespoke (rk1 + rk2 bases). dopri5 is
-/// deliberately absent — adaptive step acceptance couples rows through
-/// the batch error norm, so it bypasses fusion (tested separately).
-fn fusable_specs(theta: &std::path::Path) -> Vec<String> {
+/// scheduler transfer, bespoke (stationary), bns per-step coefficients,
+/// learned multistep (history ring is per-row), and Adams–Bashforth.
+/// dopri5 is deliberately absent — adaptive step acceptance couples rows
+/// through the batch error norm, so it bypasses fusion (tested
+/// separately).
+fn fusable_specs(dir: &std::path::Path) -> Vec<String> {
     vec![
         "rk1:n=5".into(),
         "rk2:n=4".into(),
         "rk4:n=3".into(),
         "rk2:n=4:grid=edm".into(),
         "rk2-target:n=4:sched=vp".into(),
-        format!("bespoke:path={}", theta.display()),
+        format!("bespoke:path={}", dir.join("theta.json").display()),
+        format!("bns:path={}", dir.join("bns.json").display()),
+        format!("multistep:path={}", dir.join("multistep.json").display()),
+        "ab:n=4".into(),
+        "ab:base=rk1:n=5:order=3".into(),
     ]
 }
 
@@ -63,8 +76,8 @@ fn mixed_sizes(width: usize) -> Vec<usize> {
 fn fused_rows_equal_solo_rows_for_every_fusable_family() {
     let b = 24;
     let model = toy_model(b);
-    let theta = theta_fixture("session");
-    for spec in fusable_specs(&theta) {
+    let dir = theta_fixture("session");
+    for spec in fusable_specs(&dir) {
         let sampler = make_sampler(&spec, Scheduler::CondOt).unwrap();
         for width in [2usize, 3, 7] {
             let sizes = mixed_sizes(width);
@@ -102,8 +115,8 @@ fn fused_rows_equal_solo_rows_for_every_fusable_family() {
 fn session_reinit_across_fused_widths_matches_fresh_sessions() {
     let b = 24;
     let model = toy_model(b);
-    let theta = theta_fixture("widths");
-    for spec in fusable_specs(&theta) {
+    let dir = theta_fixture("widths");
+    for spec in fusable_specs(&dir) {
         let sampler = make_sampler(&spec, Scheduler::CondOt).unwrap();
         let noise = |rows: usize, seed: u64| {
             let mut rng = Rng::new(seed);
@@ -162,12 +175,15 @@ fn req(solver: &str, n_samples: usize, seed: u64) -> SampleRequest {
 
 #[test]
 fn concurrent_fused_requests_match_solo_golden_bitwise() {
-    let theta = theta_fixture("coord");
+    let dir = theta_fixture("coord");
     let specs = [
         "rk2:n=4".to_string(),
         "rk2:n=4:grid=edm".to_string(),
         "rk2-target:n=4:sched=vp".to_string(),
-        format!("bespoke:path={}", theta.display()),
+        format!("bespoke:path={}", dir.join("theta.json").display()),
+        format!("bns:path={}", dir.join("bns.json").display()),
+        format!("multistep:path={}", dir.join("multistep.json").display()),
+        "ab:n=4".to_string(),
     ];
     // fuse_max_rows = 1: the solo golden — every chunk solves alone
     let solo = coordinator(0, 1, 1);

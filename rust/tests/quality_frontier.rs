@@ -17,7 +17,7 @@ use bespoke_flow::quality::{
 };
 use bespoke_flow::registry::{ArtifactKey, ArtifactMeta, JobManager, META_SCHEMA_VERSION, Registry};
 use bespoke_flow::runtime::Manifest;
-use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
 
 fn temp_root(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("bespoke_quality_{}_{name}", std::process::id()));
@@ -31,6 +31,7 @@ fn meta(model: &str, val_rmse: f32) -> ArtifactMeta {
         model: model.into(),
         base: Base::Rk2,
         n: 4,
+        family: Family::Stationary,
         ablation: "full".into(),
         best_val_rmse: val_rmse,
         gt_nfe: 100,

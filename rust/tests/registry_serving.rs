@@ -21,7 +21,7 @@ use bespoke_flow::models::Zoo;
 use bespoke_flow::registry::{
     ArtifactMeta, META_SCHEMA_VERSION, Registry, TrainJobManager, ZooRunner,
 };
-use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
 
 fn temp_root(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("bespoke_regserve_{}_{name}", std::process::id()));
@@ -147,6 +147,7 @@ fn better_artifact_hot_swaps_the_live_route() {
         model: "checker2-ot".into(),
         base: Base::Rk2,
         n: 4,
+        family: Family::Stationary,
         ablation: "full".into(),
         best_val_rmse: rmse,
         gt_nfe: 1,
@@ -182,7 +183,7 @@ fn better_artifact_hot_swaps_the_live_route() {
     assert_eq!(state.coord.metrics.event_count("hot_swap"), 1);
 
     // and v2's output matches its explicit-path form bitwise
-    let rec = registry.best("checker2-ot", 4, None, None).unwrap();
+    let rec = registry.best("checker2-ot", 4, None, None, None).unwrap();
     let via_path = handle_line(
         &state,
         &format!(

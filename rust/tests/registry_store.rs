@@ -12,7 +12,7 @@ use bespoke_flow::registry::{
     ArtifactMeta, JobRunner, JobState, META_SCHEMA_VERSION, Registry, TrainedArtifact,
     TrainJobManager, TrainJobSpec,
 };
-use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
 use bespoke_flow::solvers::SolverSpec;
 use bespoke_flow::Result;
 
@@ -30,6 +30,7 @@ fn meta(model: &str, base: Base, n: usize, ablation: &str, val_rmse: f32) -> Art
         model: model.into(),
         base,
         n,
+        family: Family::Stationary,
         ablation: ablation.into(),
         best_val_rmse: val_rmse,
         gt_nfe: 100,
@@ -71,10 +72,10 @@ fn manifest_roundtrip_and_integrity() {
     assert_eq!(m.best_val_rmse, 0.2);
 
     // best = lowest val RMSE, not newest-blind
-    let best = reg2.best("m", 4, None, None).unwrap();
+    let best = reg2.best("m", 4, None, None, None).unwrap();
     assert_eq!(best.version, 2);
-    assert!(reg2.best("m", 5, None, None).is_none());
-    assert!(reg2.best("other", 4, None, None).is_none());
+    assert!(reg2.best("m", 5, None, None, None).is_none());
+    assert!(reg2.best("other", 4, None, None, None).is_none());
 
     std::fs::remove_dir_all(&root).ok();
 }
@@ -137,7 +138,7 @@ fn gc_keeps_last_k_plus_best() {
         .map(|r| r.version)
         .collect();
     assert_eq!(versions, vec![2, 4, 5]);
-    assert_eq!(reg2.best("m", 4, None, None).unwrap().version, 2);
+    assert_eq!(reg2.best("m", 4, None, None, None).unwrap().version, 2);
     assert_eq!(reg2.list().iter().filter(|r| r.key.model == "other").count(), 1);
     // survivors still load (GC must not touch kept files)
     for r in reg2.list() {
@@ -252,6 +253,99 @@ fn resolve_spec_picks_best_and_respects_filters() {
 }
 
 #[test]
+fn family_filtered_best_and_registry_forms() {
+    let root = temp_root("family");
+    let reg = Registry::open(&root).unwrap();
+    // same (model, base, n, ablation) key: stationary and bns lineages
+    let th_st = RawTheta::identity(Base::Rk2, 4);
+    reg.register(&th_st, &meta("m", Base::Rk2, 4, "full", 0.3)).unwrap();
+    let th_bns = RawTheta::identity_for(Family::Bns, Base::Rk2, 4, 0).unwrap();
+    let meta_bns = ArtifactMeta { family: Family::Bns, ..meta("m", Base::Rk2, 4, "full", 0.2) };
+    let rec_bns = reg.register(&th_bns, &meta_bns).unwrap();
+    assert_eq!(rec_bns.version, 2);
+    assert_eq!(rec_bns.family, Family::Bns);
+
+    // family=None picks across families (bns wins on RMSE here); the
+    // filtered queries pin their lineage
+    assert_eq!(reg.best("m", 4, None, None, None).unwrap().version, 2);
+    let st = reg.best("m", 4, None, None, Some(Family::Stationary)).unwrap();
+    assert_eq!((st.version, st.family), (1, Family::Stationary));
+    assert_eq!(reg.best("m", 4, None, None, Some(Family::Bns)).unwrap().family, Family::Bns);
+    assert!(reg.best("m", 4, None, None, Some(Family::Multistep)).is_none());
+
+    // bns:model resolves to the family-pinned path form
+    match reg.resolve_spec(&SolverSpec::parse("bns:model=m:n=4").unwrap()).unwrap() {
+        SolverSpec::Bns { path } => assert!(path.contains("v2.theta.json"), "wrong pick: {path}"),
+        s => panic!("wrong spec {s:?}"),
+    }
+    // bespoke:model matches any family -> resolves to the dispatching form
+    match reg.resolve_spec(&SolverSpec::parse("bespoke:model=m:n=4").unwrap()).unwrap() {
+        SolverSpec::Bespoke { path } => assert!(path.contains("v2.theta.json")),
+        s => panic!("wrong spec {s:?}"),
+    }
+    // no multistep artifact registered -> family-specific error
+    let err = reg
+        .resolve_spec(&SolverSpec::parse("multistep:model=m:n=4").unwrap())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("multistep"), "wrong error: {err:#}");
+
+    // both lineages survive a reopen and load integrity-clean with their
+    // families intact
+    let reg2 = Registry::open(&root).unwrap();
+    for r in reg2.list() {
+        let th = reg2.load_theta(&r).unwrap();
+        assert_eq!(th.family, r.family);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn pre_family_store_loads_as_stationary() {
+    use bespoke_flow::json::Value;
+
+    let root = temp_root("prefamily");
+    let reg = Registry::open(&root).unwrap();
+    let th = RawTheta::identity(Base::Rk2, 4);
+    let rec = reg.register(&th, &meta("m", Base::Rk2, 4, "full", 0.25)).unwrap();
+    drop(reg);
+
+    // The writer emits the pre-family layout for stationary artifacts —
+    // no "family" key anywhere on disk — so pre-PR stores and freshly
+    // written stationary ones are byte-compatible.
+    let manifest = std::fs::read_to_string(root.join("manifest.json")).unwrap();
+    assert!(!manifest.contains("family"), "stationary manifest grew a family key:\n{manifest}");
+    for file in [&rec.file, &rec.meta_file] {
+        let text = std::fs::read_to_string(root.join(file)).unwrap();
+        assert!(!text.contains("family"), "{file} grew a family key");
+    }
+
+    // absent family reads back as stationary and re-hashes clean
+    let reg2 = Registry::open(&root).unwrap();
+    let recs = reg2.list();
+    assert_eq!(recs[0].family, Family::Stationary);
+    assert_eq!(reg2.load_theta(&recs[0]).unwrap().family, Family::Stationary);
+    drop(reg2);
+
+    // a corrupted family string in the manifest is an error on open — not
+    // a panic, not a silent stationary default
+    let mut v = Value::parse(&manifest).unwrap();
+    if let Value::Obj(m) = &mut v {
+        if let Some(Value::Arr(arts)) = m.get_mut("artifacts") {
+            if let Value::Obj(rec) = &mut arts[0] {
+                rec.insert("family".into(), Value::Str("warp-drive".into()));
+            }
+        }
+    }
+    std::fs::write(root.join("manifest.json"), v.to_string_pretty()).unwrap();
+    let err = match Registry::open(&root) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("corrupted family must not open"),
+    };
+    assert!(err.contains("family"), "wrong error: {err}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
 fn fixture_store_opens_and_verifies() {
     // The checked-in fixture store that CI's `repro registry list` smoke
     // step runs against: keep it loadable and integrity-clean.
@@ -268,7 +362,7 @@ fn fixture_store_opens_and_verifies() {
     let m = ArtifactMeta::load(&root.join(&rec.meta_file)).unwrap();
     assert!(m.history[0].val_rmse.is_nan());
     assert_eq!(m.best_val_rmse, 0.03125);
-    let best = reg.best("checker2-ot", 4, Some(Base::Rk2), None).unwrap();
+    let best = reg.best("checker2-ot", 4, Some(Base::Rk2), None, None).unwrap();
     assert_eq!(best.version, 1);
 
     // the fixture scorecard loads hash-clean, decodes, and builds a frontier
@@ -343,6 +437,7 @@ impl JobRunner for SlowRunner {
                 model: spec.model.clone(),
                 base: spec.base,
                 n: spec.n,
+                family: Family::Stationary,
                 ablation: spec.ablation.clone(),
                 best_val_rmse: 0.125,
                 gt_nfe: 42,
@@ -361,6 +456,8 @@ fn job_spec(model: &str, n: usize) -> TrainJobSpec {
         base: Base::Rk2,
         n,
         ablation: "full".into(),
+        family: Family::Stationary,
+        window: None,
         iters: None,
         seed: None,
     }

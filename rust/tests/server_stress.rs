@@ -27,7 +27,7 @@ use bespoke_flow::registry::{
     ArtifactMeta, JobManager, Registry, TrainJobManager, ZooRunner, META_SCHEMA_VERSION,
 };
 use bespoke_flow::runtime::Manifest;
-use bespoke_flow::solvers::theta::{Base, RawTheta};
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
 use bespoke_flow::testing::loadgen::sample_digest;
 
 const CLIENTS: usize = 16;
@@ -44,6 +44,7 @@ fn identity_meta(val_rmse: f32) -> ArtifactMeta {
         model: "checker2-ot".into(),
         base: Base::Rk2,
         n: 4,
+        family: Family::Stationary,
         ablation: "full".into(),
         best_val_rmse: val_rmse,
         gt_nfe: 100,

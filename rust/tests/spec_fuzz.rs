@@ -1,7 +1,7 @@
 //! Property/fuzz round-trip for the solver-spec grammar: ~1k specs drawn
 //! from a seeded RNG across **all** variants (fixed-grid, transfer,
-//! dopri5, checkpoint bespoke, registry-resolved bespoke) plus budget
-//! forms, asserting
+//! dopri5, checkpoint bespoke/bns/multistep, registry-resolved
+//! bespoke/bns/multistep, Adams–Bashforth) plus budget forms, asserting
 //!
 //! * `parse(display(s)) == s` and `from_json(to_json(s)) == s`, and
 //! * malformed mutations — truncation, duplicated keys, bad numbers,
@@ -39,7 +39,7 @@ fn gen_spec(rng: &mut Rng) -> SolverSpec {
     let bases = [BaseRk::Rk1, BaseRk::Rk2, BaseRk::Rk4];
     let grids = [GridKind::Uniform, GridKind::Edm, GridKind::Cosine, GridKind::LogSnr];
     let scheds = [Scheduler::CondOt, Scheduler::Cosine, Scheduler::VarPres, Scheduler::Edm];
-    match rng.below(5) {
+    match rng.below(10) {
         0 => SolverSpec::Rk {
             base: bases[rng.below(3)],
             n: 1 + rng.below(64),
@@ -61,7 +61,7 @@ fn gen_spec(rng: &mut Rng) -> SolverSpec {
             SolverSpec::Dopri5 { rtol, atol, max_steps: 1 + rng.below(1_000_000) }
         }
         3 => SolverSpec::Bespoke { path: rand_str(rng, PATH_CHARS, 24) },
-        _ => SolverSpec::BespokeRegistry {
+        4 => SolverSpec::BespokeRegistry {
             model: rand_str(rng, NAME_CHARS, 12),
             n: 1 + rng.below(64),
             base: match rng.below(3) {
@@ -74,6 +74,36 @@ fn gen_spec(rng: &mut Rng) -> SolverSpec {
             } else {
                 Some(rand_str(rng, NAME_CHARS, 10))
             },
+        },
+        5 => SolverSpec::Bns { path: rand_str(rng, PATH_CHARS, 24) },
+        6 => SolverSpec::BnsRegistry {
+            model: rand_str(rng, NAME_CHARS, 12),
+            n: 1 + rng.below(64),
+            base: match rng.below(3) {
+                0 => None,
+                1 => Some(Base::Rk1),
+                _ => Some(Base::Rk2),
+            },
+            ablation: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(rand_str(rng, NAME_CHARS, 10))
+            },
+        },
+        7 => SolverSpec::Multistep { path: rand_str(rng, PATH_CHARS, 24) },
+        8 => SolverSpec::MultistepRegistry {
+            model: rand_str(rng, NAME_CHARS, 12),
+            n: 1 + rng.below(64),
+            ablation: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(rand_str(rng, NAME_CHARS, 10))
+            },
+        },
+        _ => SolverSpec::Ab {
+            base: bases[rng.below(3)],
+            n: 1 + rng.below(64),
+            order: 1 + rng.below(4),
         },
     }
 }
@@ -118,7 +148,16 @@ fn malformed_mutations_error_but_never_panic() {
             // paths/names legally contain digits after '=', so only the
             // numeric kinds must reject; either way parse must not panic
             let parsed = SolverSpec::parse(&bad);
-            if !matches!(spec, SolverSpec::Bespoke { .. } | SolverSpec::BespokeRegistry { .. }) {
+            let name_carrying = matches!(
+                spec,
+                SolverSpec::Bespoke { .. }
+                    | SolverSpec::BespokeRegistry { .. }
+                    | SolverSpec::Bns { .. }
+                    | SolverSpec::BnsRegistry { .. }
+                    | SolverSpec::Multistep { .. }
+                    | SolverSpec::MultistepRegistry { .. }
+            );
+            if !name_carrying {
                 assert!(parsed.is_err(), "case {case}: bad number accepted: {bad:?}");
             }
         }
