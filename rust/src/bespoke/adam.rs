@@ -17,8 +17,27 @@ impl Adam {
         Adam { lr, b1: 0.9, b2: 0.999, eps: 1e-8, m: vec![0.0; p], v: vec![0.0; p], step: 0 }
     }
 
+    /// Rebuild an optimizer mid-run from checkpointed state (lifecycle
+    /// resume, DESIGN.md §12). Hyperparameters are re-derived from the
+    /// config exactly as [`Adam::new`] does; only the moments and step
+    /// counter are state.
+    pub fn from_state(lr: f32, m: Vec<f32>, v: Vec<f32>, step: u64) -> Adam {
+        assert_eq!(m.len(), v.len());
+        Adam { lr, b1: 0.9, b2: 0.999, eps: 1e-8, m, v, step }
+    }
+
     pub fn step_count(&self) -> u64 {
         self.step
+    }
+
+    /// First-moment state (checkpointing).
+    pub fn m(&self) -> &[f32] {
+        &self.m
+    }
+
+    /// Second-moment state (checkpointing).
+    pub fn v(&self) -> &[f32] {
+        &self.v
     }
 
     /// In-place parameter update; `mask` (if given) zeroes selected grads.
@@ -68,6 +87,30 @@ mod tests {
         }
         assert!(x[0] < 1.0);
         assert_eq!(x[1], 1.0, "masked param must not move");
+    }
+
+    #[test]
+    fn from_state_resumes_bitwise() {
+        let grads: Vec<Vec<f32>> = (0..10).map(|i| vec![0.3 * i as f32 - 1.0, 0.7]).collect();
+        // uninterrupted run
+        let mut x_full = vec![1.0f32, -2.0];
+        let mut full = Adam::new(2, 0.05);
+        for g in &grads {
+            full.update(&mut x_full, g, None);
+        }
+        // interrupted after 5 steps, resumed from checkpointed state
+        let mut x = vec![1.0f32, -2.0];
+        let mut opt = Adam::new(2, 0.05);
+        for g in &grads[..5] {
+            opt.update(&mut x, g, None);
+        }
+        let (m, v, step) = (opt.m().to_vec(), opt.v().to_vec(), opt.step_count());
+        let mut resumed = Adam::from_state(0.05, m, v, step);
+        for g in &grads[5..] {
+            resumed.update(&mut x, g, None);
+        }
+        assert_eq!(x, x_full, "resume must be bitwise-identical");
+        assert_eq!(resumed.step_count(), full.step_count());
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Trainer checkpoints (DESIGN.md §12): the complete resumable state of an
+//! interrupted training run, persisted as NaN-safe JSON.
+//!
+//! A checkpoint is *bitwise-sufficient*: together with the original
+//! `TrainConfig` it reproduces the uninterrupted run exactly. The trainers
+//! consume RNG state only through seed-derived streams (the GT pool's
+//! `pick()` draws and optional `refresh_one` solves, plus the fully
+//! seed-derived validation set), so resume rebuilds pool + validation from
+//! the config seed, *replays* the completed iterations' RNG consumption,
+//! restores theta / best / Adam moments from the checkpoint, and continues
+//! the loop — every subsequent float op sees identical inputs. The crate's
+//! JSON writer emits shortest-round-trip f64 (and every f32 is exact in
+//! f64), so raw parameter bytes survive the save/load cycle unchanged;
+//! non-finite values (`val_rmse` on non-validation iters, an untouched
+//! `best_val_rmse`) are written as `null` and mapped back on load.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::trainer::TrainPoint;
+use crate::json::Value;
+use crate::solvers::theta::RawTheta;
+use crate::util::CancelToken;
+
+/// Checkpoint format version (bump on layout change; loaders reject
+/// unknown versions rather than misread them).
+pub const CHECKPOINT_SCHEMA_VERSION: u64 = 1;
+
+/// Everything the trainer needs to continue an interrupted run.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpoint {
+    /// Completed iterations (the loop resumes at `iters_done + 1`).
+    pub iters_done: usize,
+    /// Total iterations of the run being resumed — must match the
+    /// resubmitted config (a different budget is a different run).
+    pub iters_total: usize,
+    /// Current (last-updated) theta.
+    pub theta: RawTheta,
+    /// Best-validation theta so far (depends on past validations, so it
+    /// cannot be recomputed from `theta` alone).
+    pub best: RawTheta,
+    /// +inf until the first validation pass.
+    pub best_val_rmse: f32,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub adam_step: u64,
+    pub history: Vec<TrainPoint>,
+    /// Wall time accumulated across all previous segments.
+    pub wall_secs: f64,
+}
+
+impl TrainCheckpoint {
+    pub fn to_json(&self) -> Value {
+        let history: Vec<Value> = self
+            .history
+            .iter()
+            .map(|p| {
+                Value::obj(vec![
+                    ("iter", Value::Num(p.iter as f64)),
+                    ("loss", Value::num_or_null(p.loss as f64)),
+                    ("val_rmse", Value::num_or_null(p.val_rmse as f64)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema_version", Value::Num(CHECKPOINT_SCHEMA_VERSION as f64)),
+            ("iters_done", Value::Num(self.iters_done as f64)),
+            ("iters_total", Value::Num(self.iters_total as f64)),
+            ("theta", self.theta.to_json()),
+            ("best", self.best.to_json()),
+            ("best_val_rmse", Value::num_or_null(self.best_val_rmse as f64)),
+            ("adam_m", Value::from_f32s(&self.adam_m)),
+            ("adam_v", Value::from_f32s(&self.adam_v)),
+            ("adam_step", Value::Num(self.adam_step as f64)),
+            ("history", Value::Arr(history)),
+            ("wall_secs", Value::Num(self.wall_secs)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<TrainCheckpoint> {
+        let version = v.get("schema_version")?.as_usize()? as u64;
+        if version != CHECKPOINT_SCHEMA_VERSION {
+            bail!("unsupported checkpoint schema_version {version}");
+        }
+        let non_finite_as = |v: &Value, fallback: f32| -> Result<f32> {
+            Ok(match v {
+                Value::Null => fallback,
+                other => other.as_f64()? as f32,
+            })
+        };
+        let mut history = Vec::new();
+        for p in v.get("history")?.as_arr()? {
+            history.push(TrainPoint {
+                iter: p.get("iter")?.as_usize()?,
+                loss: non_finite_as(p.get("loss")?, f32::NAN)?,
+                val_rmse: non_finite_as(p.get("val_rmse")?, f32::NAN)?,
+            });
+        }
+        Ok(TrainCheckpoint {
+            iters_done: v.get("iters_done")?.as_usize()?,
+            iters_total: v.get("iters_total")?.as_usize()?,
+            theta: RawTheta::from_json(v.get("theta")?)?,
+            best: RawTheta::from_json(v.get("best")?)?,
+            best_val_rmse: non_finite_as(v.get("best_val_rmse")?, f32::INFINITY)?,
+            adam_m: v.get("adam_m")?.as_f32_vec()?,
+            adam_v: v.get("adam_v")?.as_f32_vec()?,
+            adam_step: v.get("adam_step")?.as_usize()? as u64,
+            history,
+            wall_secs: v.get("wall_secs")?.as_f64()?,
+        })
+    }
+
+    /// Atomic write (tmp + rename): a crash mid-save leaves either the old
+    /// checkpoint or none, never a truncated one.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_string_pretty())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        TrainCheckpoint::from_json(&Value::parse(&text)?)
+            .with_context(|| format!("parse checkpoint {}", path.display()))
+    }
+}
+
+/// Lifecycle controls threaded into a training loop: a cooperative cancel
+/// token plus optional resume state. `Default` is a fresh, uncancellable
+/// run — the pre-lifecycle behavior.
+#[derive(Default)]
+pub struct TrainCtl {
+    pub cancel: CancelToken,
+    pub resume: Option<TrainCheckpoint>,
+}
+
+/// How a controlled training run ended: complete, or checkpointed at a
+/// cancellation checkpoint (an iteration boundary).
+pub enum TrainRun {
+    Done(super::trainer::TrainOutcome),
+    Cancelled(TrainCheckpoint),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::theta::{Base, Family};
+
+    #[test]
+    fn checkpoint_json_round_trips_bitwise() {
+        let theta = RawTheta {
+            base: Base::Rk2,
+            n: 4,
+            raw: vec![0.1, -0.25, 1.5e-7, 3.0],
+            family: Family::Stationary,
+            window: 0,
+        };
+        let ck = TrainCheckpoint {
+            iters_done: 7,
+            iters_total: 20,
+            theta: theta.clone(),
+            best: theta,
+            best_val_rmse: f32::INFINITY, // no validation yet
+            adam_m: vec![1.0e-8, -2.5],
+            adam_v: vec![0.5, 0.125],
+            adam_step: 7,
+            history: vec![
+                TrainPoint { iter: 1, loss: 0.5, val_rmse: f32::NAN },
+                TrainPoint { iter: 2, loss: 0.25, val_rmse: 0.125 },
+            ],
+            wall_secs: 1.5,
+        };
+        let back =
+            TrainCheckpoint::from_json(&Value::parse(&ck.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.iters_done, 7);
+        assert_eq!(back.iters_total, 20);
+        assert_eq!(back.theta.raw, ck.theta.raw, "theta bytes must survive");
+        assert_eq!(back.adam_m, ck.adam_m);
+        assert_eq!(back.adam_v, ck.adam_v);
+        assert_eq!(back.adam_step, 7);
+        assert!(back.best_val_rmse.is_infinite(), "null maps back to +inf");
+        assert_eq!(back.history.len(), 2);
+        assert!(back.history[0].val_rmse.is_nan(), "null maps back to NaN");
+        assert_eq!(back.history[1].val_rmse, 0.125);
+        assert_eq!(back.wall_secs, 1.5);
+    }
+
+    #[test]
+    fn save_load_atomic_and_versioned() {
+        let dir = std::env::temp_dir().join(format!("bespoke_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("train/key.ckpt.json");
+        let ck = TrainCheckpoint {
+            iters_done: 1,
+            iters_total: 2,
+            theta: RawTheta::identity(Base::Rk1, 2),
+            best: RawTheta::identity(Base::Rk1, 2),
+            best_val_rmse: 0.5,
+            adam_m: vec![0.0; 4],
+            adam_v: vec![0.0; 4],
+            adam_step: 1,
+            history: vec![],
+            wall_secs: 0.0,
+        };
+        ck.save(&path).unwrap();
+        let back = TrainCheckpoint::load(&path).unwrap();
+        assert_eq!(back.iters_done, 1);
+        // a future schema version is rejected, not misread
+        let mut v = ck.to_json();
+        if let Value::Obj(map) = &mut v {
+            map.insert("schema_version".into(), Value::Num(99.0));
+        }
+        std::fs::write(&path, v.to_string_pretty()).unwrap();
+        assert!(TrainCheckpoint::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

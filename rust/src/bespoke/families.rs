@@ -20,6 +20,7 @@
 use anyhow::{bail, Result};
 
 use super::adam::Adam;
+use super::checkpoint::{TrainCheckpoint, TrainCtl, TrainRun};
 use super::gt::GtPool;
 use super::trainer::{TrainOutcome, TrainPoint, TrainProgress};
 use crate::config::TrainConfig;
@@ -62,6 +63,29 @@ pub fn train_family_with_progress(
     cfg: &TrainConfig,
     on_progress: &mut dyn FnMut(&TrainProgress),
 ) -> Result<TrainOutcome> {
+    match train_family_with_ctl(model, family, base, n, window, cfg, &TrainCtl::default(), on_progress)?
+    {
+        TrainRun::Done(out) => Ok(out),
+        TrainRun::Cancelled(_) => bail!("uncancellable run reported cancelled"),
+    }
+}
+
+/// [`train_family_with_progress`] with lifecycle controls (DESIGN.md §12),
+/// mirroring `trainer::train_with_ctl`: the cancel token is checked at
+/// every iteration boundary, and resume replays the completed iterations'
+/// RNG consumption against the seed-rebuilt pool so the continued run is
+/// bitwise-identical to an uninterrupted one.
+#[allow(clippy::too_many_arguments)]
+pub fn train_family_with_ctl(
+    model: &dyn VelocityModel,
+    family: Family,
+    base: Base,
+    n: usize,
+    window: usize,
+    cfg: &TrainConfig,
+    ctl: &TrainCtl,
+    on_progress: &mut dyn FnMut(&TrainProgress),
+) -> Result<TrainRun> {
     if family == Family::Stationary {
         bail!("stationary bespoke trains via bespoke::train (AOT loss-grad path)");
     }
@@ -120,8 +144,65 @@ pub fn train_family_with_progress(
     let mut best = theta.clone();
     let mut best_val = f32::INFINITY;
     let mut history = Vec::new();
+    let mut start_iter = 1usize;
+    let mut base_wall = 0.0f64;
 
-    for iter in 1..=cfg.iters {
+    if let Some(ck) = &ctl.resume {
+        if ck.iters_total != cfg.iters {
+            bail!(
+                "checkpoint is for a {}-iteration run, resubmit asked for {}",
+                ck.iters_total,
+                cfg.iters
+            );
+        }
+        if ck.theta.family != family
+            || ck.theta.base != base
+            || ck.theta.n != n
+            || ck.theta.window != window
+            || ck.theta.raw.len() != p
+        {
+            bail!("checkpoint theta shape does not match (family, base, n, window)");
+        }
+        if ck.adam_m.len() != p || ck.adam_v.len() != p {
+            bail!("checkpoint optimizer state does not match parameter count");
+        }
+        for iter in 1..=ck.iters_done {
+            if cfg.refresh_every > 0 && iter % cfg.refresh_every == 0 {
+                pool.refresh_one(model)?;
+            }
+            let _ = pool.pick();
+        }
+        theta = ck.theta.clone();
+        best = ck.best.clone();
+        best_val = ck.best_val_rmse;
+        opt = Adam::from_state(cfg.lr, ck.adam_m.clone(), ck.adam_v.clone(), ck.adam_step);
+        history = ck.history.clone();
+        start_iter = ck.iters_done + 1;
+        base_wall = ck.wall_secs;
+        log_info!(
+            "[train-{} {}] resuming from checkpoint at iter {}/{}",
+            family.name(),
+            model.name(),
+            ck.iters_done,
+            cfg.iters
+        );
+    }
+
+    for iter in start_iter..=cfg.iters {
+        if ctl.cancel.is_cancelled() {
+            return Ok(TrainRun::Cancelled(TrainCheckpoint {
+                iters_done: iter - 1,
+                iters_total: cfg.iters,
+                theta,
+                best,
+                best_val_rmse: best_val,
+                adam_m: opt.m().to_vec(),
+                adam_v: opt.v().to_vec(),
+                adam_step: opt.step_count(),
+                history,
+                wall_secs: base_wall + timer.elapsed_secs(),
+            }));
+        }
         if cfg.refresh_every > 0 && iter % cfg.refresh_every == 0 {
             pool.refresh_one(model)?;
         }
@@ -244,14 +325,14 @@ pub fn train_family_with_progress(
         on_progress(&TrainProgress { iter, iters_total: cfg.iters, loss, val_rmse });
     }
 
-    Ok(TrainOutcome {
+    Ok(TrainRun::Done(TrainOutcome {
         best,
         best_val_rmse: best_val,
         last: theta,
         history,
         gt_nfe: pool.gt_nfe,
-        wall_secs: timer.elapsed_secs(),
-    })
+        wall_secs: base_wall + timer.elapsed_secs(),
+    }))
 }
 
 #[cfg(test)]
@@ -326,6 +407,68 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cancel_resume_is_bitwise_identical() {
+        use crate::json::Value;
+        use crate::util::CancelToken;
+
+        let model = toy();
+        let cfg = quick_cfg(40);
+        let golden = train_family(&model, Family::Bns, Base::Rk2, 4, 0, &cfg).unwrap();
+
+        // Cancel at iteration 17 via the progress hook; the trainer must
+        // stop at the next iteration boundary with a checkpoint.
+        let cancel = CancelToken::new();
+        let hook = cancel.clone();
+        let run = train_family_with_ctl(
+            &model,
+            Family::Bns,
+            Base::Rk2,
+            4,
+            0,
+            &cfg,
+            &TrainCtl { cancel, resume: None },
+            &mut |p| {
+                if p.iter == 17 {
+                    hook.cancel();
+                }
+            },
+        )
+        .unwrap();
+        let ck = match run {
+            TrainRun::Cancelled(ck) => ck,
+            TrainRun::Done(_) => panic!("run was cancelled but completed"),
+        };
+        assert_eq!(ck.iters_done, 17);
+
+        // Round-trip through the persisted JSON form: resume must work
+        // from what lands on disk, not from in-memory state.
+        let ck = TrainCheckpoint::from_json(
+            &Value::parse(&ck.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        let resumed = match train_family_with_ctl(
+            &model,
+            Family::Bns,
+            Base::Rk2,
+            4,
+            0,
+            &cfg,
+            &TrainCtl { cancel: CancelToken::new(), resume: Some(ck) },
+            &mut |_| {},
+        )
+        .unwrap()
+        {
+            TrainRun::Done(out) => out,
+            TrainRun::Cancelled(_) => panic!("resumed run was not cancelled"),
+        };
+        assert_eq!(resumed.last.raw, golden.last.raw, "last theta must be bitwise-equal");
+        assert_eq!(resumed.best.raw, golden.best.raw, "best theta must be bitwise-equal");
+        assert_eq!(resumed.best_val_rmse.to_bits(), golden.best_val_rmse.to_bits());
+        assert_eq!(resumed.history.len(), golden.history.len());
+        assert_eq!(resumed.gt_nfe, golden.gt_nfe, "replay must reproduce GT-path NFE");
     }
 
     #[test]

@@ -23,11 +23,15 @@
 //! AOT'd loss-grad executable is needed.
 
 pub mod adam;
+pub mod checkpoint;
 pub mod families;
 pub mod gt;
 pub mod trainer;
 
 pub use adam::Adam;
-pub use families::{train_family, train_family_with_progress};
+pub use checkpoint::{TrainCheckpoint, TrainCtl, TrainRun};
+pub use families::{train_family, train_family_with_ctl, train_family_with_progress};
 pub use gt::GtPool;
-pub use trainer::{train, train_with_progress, TrainOutcome, TrainPoint, TrainProgress};
+pub use trainer::{
+    train, train_with_ctl, train_with_progress, TrainOutcome, TrainPoint, TrainProgress,
+};

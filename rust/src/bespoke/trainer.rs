@@ -1,9 +1,10 @@
 //! The Bespoke training loop (paper Algorithm 2) over the AOT'd loss-grad
 //! executable.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::adam::Adam;
+use super::checkpoint::{TrainCheckpoint, TrainCtl, TrainRun};
 use super::gt::GtPool;
 use crate::config::TrainConfig;
 use crate::eval::rmse;
@@ -73,6 +74,31 @@ pub fn train_with_progress(
     cfg: &TrainConfig,
     on_progress: &mut dyn FnMut(&TrainProgress),
 ) -> Result<TrainOutcome> {
+    match train_with_ctl(model, lossgrad_exe, base, n, cfg, &TrainCtl::default(), on_progress)? {
+        TrainRun::Done(out) => Ok(out),
+        TrainRun::Cancelled(_) => bail!("uncancellable run reported cancelled"),
+    }
+}
+
+/// [`train_with_progress`] with lifecycle controls (DESIGN.md §12): a
+/// cooperative [`TrainCtl::cancel`] token checked at every iteration
+/// boundary, and optional [`TrainCtl::resume`] state from a previous
+/// cancelled segment.
+///
+/// Resume is bitwise: the pool and validation set are rebuilt from
+/// `cfg.seed` and the completed iterations' RNG consumption (`pick()`
+/// draws, `refresh_one` solves) is replayed, so the continued run consumes
+/// exactly the RNG stream — and therefore produces exactly the floats —
+/// of an uninterrupted run with the same config.
+pub fn train_with_ctl(
+    model: &HloModel,
+    lossgrad_exe: &Executable,
+    base: Base,
+    n: usize,
+    cfg: &TrainConfig,
+    ctl: &TrainCtl,
+    on_progress: &mut dyn FnMut(&TrainProgress),
+) -> Result<TrainRun> {
     let timer = Timer::start();
     let b = model.batch();
     let d = model.dim();
@@ -98,8 +124,61 @@ pub fn train_with_progress(
     let mut best = theta.clone();
     let mut best_val = f32::INFINITY;
     let mut history = Vec::new();
+    let mut start_iter = 1usize;
+    let mut base_wall = 0.0f64;
 
-    for iter in 1..=cfg.iters {
+    if let Some(ck) = &ctl.resume {
+        if ck.iters_total != cfg.iters {
+            bail!(
+                "checkpoint is for a {}-iteration run, resubmit asked for {}",
+                ck.iters_total,
+                cfg.iters
+            );
+        }
+        if ck.theta.base != base || ck.theta.n != n || ck.theta.raw.len() != p {
+            bail!("checkpoint theta shape does not match (base, n)");
+        }
+        if ck.adam_m.len() != p || ck.adam_v.len() != p {
+            bail!("checkpoint optimizer state does not match parameter count");
+        }
+        // Replay the completed iterations' RNG consumption so the pool
+        // stream continues exactly where the interrupted segment left it.
+        for iter in 1..=ck.iters_done {
+            if cfg.refresh_every > 0 && iter % cfg.refresh_every == 0 {
+                pool.refresh_one(model)?;
+            }
+            let _ = pool.pick();
+        }
+        theta = ck.theta.clone();
+        best = ck.best.clone();
+        best_val = ck.best_val_rmse;
+        opt = Adam::from_state(cfg.lr, ck.adam_m.clone(), ck.adam_v.clone(), ck.adam_step);
+        history = ck.history.clone();
+        start_iter = ck.iters_done + 1;
+        base_wall = ck.wall_secs;
+        log_info!(
+            "[train {}] resuming from checkpoint at iter {}/{}",
+            model.name(),
+            ck.iters_done,
+            cfg.iters
+        );
+    }
+
+    for iter in start_iter..=cfg.iters {
+        if ctl.cancel.is_cancelled() {
+            return Ok(TrainRun::Cancelled(TrainCheckpoint {
+                iters_done: iter - 1,
+                iters_total: cfg.iters,
+                theta,
+                best,
+                best_val_rmse: best_val,
+                adam_m: opt.m().to_vec(),
+                adam_v: opt.v().to_vec(),
+                adam_step: opt.step_count(),
+                history,
+                wall_secs: base_wall + timer.elapsed_secs(),
+            }));
+        }
         if cfg.refresh_every > 0 && iter % cfg.refresh_every == 0 {
             pool.refresh_one(model)?;
         }
@@ -186,12 +265,12 @@ pub fn train_with_progress(
         on_progress(&TrainProgress { iter, iters_total: cfg.iters, loss, val_rmse });
     }
 
-    Ok(TrainOutcome {
+    Ok(TrainRun::Done(TrainOutcome {
         best,
         best_val_rmse: best_val,
         last: theta,
         history,
         gt_nfe: pool.gt_nfe,
-        wall_secs: timer.elapsed_secs(),
-    })
+        wall_secs: base_wall + timer.elapsed_secs(),
+    }))
 }

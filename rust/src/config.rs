@@ -35,6 +35,14 @@ pub struct ServeConfig {
     /// batch statistics, Fréchet). 0 = auto: `BESPOKE_THREADS` env var or
     /// the machine's available parallelism.
     pub compute_threads: usize,
+    /// Per-connection idle read timeout in ms (DESIGN.md §12): a client
+    /// that sends nothing for this long gets a structured `timeout` error
+    /// and a clean close, so abandoned connections can't pin threads
+    /// forever. 0 = no timeout.
+    pub idle_timeout_ms: u64,
+    /// Graceful-drain grace window in ms: how long SIGTERM / `drain` waits
+    /// for in-flight solves and running jobs before cancelling stragglers.
+    pub drain_grace_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -46,6 +54,8 @@ impl Default for ServeConfig {
             fuse_max_rows: 0,
             workers_per_route: 1,
             compute_threads: 0,
+            idle_timeout_ms: 0,
+            drain_grace_ms: 5_000,
         }
     }
 }
@@ -108,11 +118,29 @@ pub struct RegistryConfig {
     /// GC policy: `registry gc` keeps this many newest versions per
     /// artifact key (plus, always, the best-val-RMSE one).
     pub keep_last_k: usize,
+    /// Max queued (not yet running) train jobs; over-limit submissions get
+    /// a structured `overloaded` error. 0 = unbounded.
+    pub max_pending: usize,
+    /// Failed (non-cancelled, non-panicked) train jobs retry up to this
+    /// many times with capped exponential backoff. 0 = no retries.
+    pub retry_max_attempts: usize,
+    /// First retry delay in ms (doubles per attempt).
+    pub retry_base_ms: u64,
+    /// Backoff ceiling in ms.
+    pub retry_cap_ms: u64,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        RegistryConfig { root: "out/registry".into(), max_jobs: 1, keep_last_k: 3 }
+        RegistryConfig {
+            root: "out/registry".into(),
+            max_jobs: 1,
+            keep_last_k: 3,
+            max_pending: 0,
+            retry_max_attempts: 0,
+            retry_base_ms: 250,
+            retry_cap_ms: 30_000,
+        }
     }
 }
 
@@ -142,11 +170,35 @@ pub struct QualityConfig {
     pub eval_batches: usize,
     /// Max concurrent in-server eval jobs.
     pub max_eval_jobs: usize,
+    /// Max queued (not yet running) eval jobs; over-limit submissions get
+    /// a structured `overloaded` error. 0 = unbounded.
+    pub max_pending: usize,
 }
 
 impl Default for QualityConfig {
     fn default() -> Self {
-        QualityConfig { grid: vec![1, 2, 4, 8, 16], eval_batches: 4, max_eval_jobs: 1 }
+        QualityConfig { grid: vec![1, 2, 4, 8, 16], eval_batches: 4, max_eval_jobs: 1, max_pending: 0 }
+    }
+}
+
+/// Minimal cron-like maintenance schedule (DESIGN.md §12): a server-side
+/// tick thread that re-evals stale scorecards (coalescing keeps duplicate
+/// submissions cheap) and garbage-collects the registry. Everything
+/// defaults to off.
+#[derive(Clone, Debug)]
+pub struct ScheduleConfig {
+    /// Scheduler tick interval in ms. 0 = scheduler off.
+    pub tick_ms: u64,
+    /// Re-submit an eval sweep for scorecards older than this many
+    /// seconds. 0 = never.
+    pub refresh_secs: u64,
+    /// Run `registry gc` (with frontier pins) on every tick.
+    pub gc: bool,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        ScheduleConfig { tick_ms: 0, refresh_secs: 0, gc: false }
     }
 }
 
@@ -157,6 +209,7 @@ pub struct Config {
     pub eval: EvalConfig,
     pub registry: RegistryConfig,
     pub quality: QualityConfig,
+    pub schedule: ScheduleConfig,
     /// Directory for trained thetas and experiment reports.
     pub out_dir: String,
 }
@@ -194,6 +247,12 @@ impl Config {
                                 self.serve.workers_per_route = val.as_usize()?
                             }
                             "compute_threads" => self.serve.compute_threads = val.as_usize()?,
+                            "idle_timeout_ms" => {
+                                self.serve.idle_timeout_ms = val.as_usize()? as u64
+                            }
+                            "drain_grace_ms" => {
+                                self.serve.drain_grace_ms = val.as_usize()? as u64
+                            }
                             _ => anyhow::bail!("unknown serve key {k:?}"),
                         }
                     }
@@ -235,6 +294,16 @@ impl Config {
                             "root" => self.registry.root = val.as_str()?.to_string(),
                             "max_jobs" => self.registry.max_jobs = val.as_usize()?,
                             "keep_last_k" => self.registry.keep_last_k = val.as_usize()?,
+                            "max_pending" => self.registry.max_pending = val.as_usize()?,
+                            "retry_max_attempts" => {
+                                self.registry.retry_max_attempts = val.as_usize()?
+                            }
+                            "retry_base_ms" => {
+                                self.registry.retry_base_ms = val.as_usize()? as u64
+                            }
+                            "retry_cap_ms" => {
+                                self.registry.retry_cap_ms = val.as_usize()? as u64
+                            }
                             _ => anyhow::bail!("unknown registry key {k:?}"),
                         }
                     }
@@ -258,7 +327,18 @@ impl Config {
                             }
                             "eval_batches" => self.quality.eval_batches = val.as_usize()?,
                             "max_eval_jobs" => self.quality.max_eval_jobs = val.as_usize()?,
+                            "max_pending" => self.quality.max_pending = val.as_usize()?,
                             _ => anyhow::bail!("unknown quality key {k:?}"),
+                        }
+                    }
+                }
+                "schedule" => {
+                    for (k, val) in sv.as_obj()? {
+                        match k.as_str() {
+                            "tick_ms" => self.schedule.tick_ms = val.as_usize()? as u64,
+                            "refresh_secs" => self.schedule.refresh_secs = val.as_usize()? as u64,
+                            "gc" => self.schedule.gc = val.as_bool()?,
+                            _ => anyhow::bail!("unknown schedule key {k:?}"),
                         }
                     }
                 }
@@ -285,8 +365,12 @@ mod tests {
         let v = Value::parse(
             r#"{"train": {"iters": 42, "ablation": "time-only", "family": "bns", "window": 3},
                 "serve": {"max_batch": 8, "workers_per_route": 4, "compute_threads": 2,
-                          "fuse_window_us": 250, "fuse_max_rows": 16},
-                "registry": {"root": "/tmp/reg", "max_jobs": 2, "keep_last_k": 5},
+                          "fuse_window_us": 250, "fuse_max_rows": 16,
+                          "idle_timeout_ms": 30000, "drain_grace_ms": 1500},
+                "registry": {"root": "/tmp/reg", "max_jobs": 2, "keep_last_k": 5,
+                             "max_pending": 16, "retry_max_attempts": 3,
+                             "retry_base_ms": 100, "retry_cap_ms": 2000},
+                "schedule": {"tick_ms": 60000, "refresh_secs": 3600, "gc": true},
                 "out_dir": "/tmp/x"}"#,
         )
         .unwrap();
@@ -300,6 +384,15 @@ mod tests {
         assert_eq!(cfg.serve.compute_threads, 2);
         assert_eq!(cfg.serve.fuse_window_us, 250);
         assert_eq!(cfg.serve.fuse_max_rows, 16);
+        assert_eq!(cfg.serve.idle_timeout_ms, 30_000);
+        assert_eq!(cfg.serve.drain_grace_ms, 1_500);
+        assert_eq!(cfg.registry.max_pending, 16);
+        assert_eq!(cfg.registry.retry_max_attempts, 3);
+        assert_eq!(cfg.registry.retry_base_ms, 100);
+        assert_eq!(cfg.registry.retry_cap_ms, 2_000);
+        assert_eq!(cfg.schedule.tick_ms, 60_000);
+        assert_eq!(cfg.schedule.refresh_secs, 3_600);
+        assert!(cfg.schedule.gc);
         // legacy gather-window alias still parses (ms -> us)
         let v_wait = Value::parse(r#"{"serve": {"max_wait_ms": 3}}"#).unwrap();
         cfg.apply(&v_wait).unwrap();
@@ -326,6 +419,21 @@ mod tests {
         assert!(cfg.apply(&v3).is_err());
         let v4 = Value::parse(r#"{"quality": {"nfe_grid": [1]}}"#).unwrap();
         assert!(cfg.apply(&v4).is_err());
+        let v5 = Value::parse(r#"{"schedule": {"cron": "* * * * *"}}"#).unwrap();
+        assert!(cfg.apply(&v5).is_err());
+    }
+
+    #[test]
+    fn lifecycle_defaults_are_off() {
+        let cfg = Config::default();
+        assert_eq!(cfg.serve.idle_timeout_ms, 0);
+        assert_eq!(cfg.serve.drain_grace_ms, 5_000);
+        assert_eq!(cfg.registry.max_pending, 0);
+        assert_eq!(cfg.registry.retry_max_attempts, 0);
+        assert_eq!(cfg.quality.max_pending, 0);
+        assert_eq!(cfg.schedule.tick_ms, 0);
+        assert_eq!(cfg.schedule.refresh_secs, 0);
+        assert!(!cfg.schedule.gc);
     }
 
     #[test]

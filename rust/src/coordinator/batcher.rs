@@ -184,7 +184,11 @@ impl Drop for WorkerAliveGuard {
 /// The request router + batching executor.
 pub struct Coordinator {
     zoo: Arc<Zoo>,
-    cfg: ServeConfig,
+    /// Behind a mutex so `{"cmd":"reload"}` / SIGHUP can swap `[serve]`
+    /// knobs on a live server ([`Coordinator::reload_serve`]). Workers
+    /// capture a copy at spawn; a reload retires every route so the next
+    /// request respawns pools under the new knobs.
+    cfg: Mutex<ServeConfig>,
     pub metrics: Arc<Metrics>,
     routes: Mutex<BTreeMap<String, Arc<RouteQueue>>>,
     /// Artifact registry for `bespoke:model=...` specs (None = registry
@@ -212,12 +216,62 @@ impl Coordinator {
     pub fn new(zoo: Arc<Zoo>, cfg: ServeConfig) -> Coordinator {
         Coordinator {
             zoo,
-            cfg,
+            cfg: Mutex::new(cfg),
             metrics: Arc::new(Metrics::default()),
             routes: Mutex::new(BTreeMap::new()),
             registry: None,
             frontiers: None,
             resolved: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// A copy of the live `[serve]` knobs.
+    pub fn serve_cfg(&self) -> ServeConfig {
+        self.cfg.lock().unwrap().clone()
+    }
+
+    /// Hot-reload the `[serve]` knobs (DESIGN.md §12): install the new
+    /// config, then retire every live route so the next request respawns
+    /// its worker pool under the new batching/fusion parameters. Retirement
+    /// is the same mechanism hot-swap uses — retired workers drain their
+    /// queued jobs before exiting and racing requests retry against the
+    /// fresh route — so no in-flight request is dropped.
+    pub fn reload_serve(&self, new_cfg: ServeConfig) {
+        *self.cfg.lock().unwrap() = new_cfg;
+        let keys: Vec<String> = self.routes.lock().unwrap().keys().cloned().collect();
+        for key in &keys {
+            self.retire_route(key);
+        }
+        self.metrics.record_event("serve_reloads");
+        log_info!("serve config reloaded; retired {} route(s)", keys.len());
+    }
+
+    /// Drain for shutdown: close every route (workers finish queued jobs,
+    /// then exit — the fusion-plane flush) and wait up to `grace` for all
+    /// worker pools to wind down. Returns true when every worker exited in
+    /// time.
+    pub fn drain(&self, grace: Duration) -> bool {
+        let queues: Vec<Arc<RouteQueue>> = {
+            let mut routes = self.routes.lock().unwrap();
+            let qs: Vec<Arc<RouteQueue>> = routes.values().cloned().collect();
+            routes.clear();
+            qs
+        };
+        for q in &queues {
+            close_route(q);
+        }
+        let deadline = Instant::now() + grace;
+        loop {
+            let alive: usize =
+                queues.iter().map(|q| q.workers_alive.load(Ordering::SeqCst)).sum();
+            if alive == 0 {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                log_info!("[drain] {alive} route worker(s) still busy after grace window");
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 
@@ -377,7 +431,7 @@ impl Coordinator {
     /// mirrors the same layout so a given seed yields bit-identical samples
     /// from both paths.
     fn chunk_rows(&self, model_batch: usize) -> usize {
-        self.cfg.max_batch.min(model_batch).max(1)
+        self.cfg.lock().unwrap().max_batch.min(model_batch).max(1)
     }
 
     /// Blocking submit: routes, batches, executes, gathers.
@@ -596,11 +650,12 @@ impl Coordinator {
         // its requests always solve alone.
         let lockstep = !matches!(spec, SolverSpec::Dopri5 { .. });
 
+        let route_cfg = self.serve_cfg();
         let mut routes = self.routes.lock().unwrap();
         if let Some(q) = routes.get(key) {
             return Ok(q.clone());
         }
-        let n_workers = self.cfg.workers_per_route.max(1);
+        let n_workers = route_cfg.workers_per_route.max(1);
         let queue = Arc::new(RouteQueue {
             jobs: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
@@ -612,7 +667,7 @@ impl Coordinator {
             let model = served.clone();
             let sampler = sampler.clone();
             let metrics = self.metrics.clone();
-            let cfg = self.cfg.clone();
+            let cfg = route_cfg.clone();
             let key_owned = key.to_string();
             let spawned = std::thread::Builder::new()
                 .name(format!("worker-{key}-{wi}"))

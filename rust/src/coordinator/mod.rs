@@ -39,4 +39,6 @@ pub mod server;
 
 pub use batcher::{Coordinator, SampleRequest, SampleResponse, TrajRequest, TrajStep};
 pub use metrics::Metrics;
-pub use server::{handle_line, serve, ServerState};
+pub use server::{
+    handle_line, perform_reload, serve, serve_daemon, spawn_scheduler, Lifecycle, ServerState,
+};

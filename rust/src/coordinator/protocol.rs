@@ -20,9 +20,21 @@
 //!  "grid": [2, 4, 8], "seed": 7}
 //! {"cmd": "eval_status", "job_id": 1}
 //! {"cmd": "frontier", "model": "checker2-ot"}
+//! {"cmd": "cancel_job", "job_id": 1, "kind": "train"}
+//! {"cmd": "reload"}
+//! {"cmd": "drain"}
 //! ```
 //!
 //! Response: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
+//! Lifecycle rejections additionally carry a machine-readable `"code"`
+//! (`"overloaded"`, `"draining"`, `"timeout"`, `"cancelled"`) so clients
+//! can distinguish back-pressure from real failures (DESIGN.md §12).
+//!
+//! `cancel_job` stops a queued/retrying job immediately or a running job at
+//! its next checkpoint (`kind` selects the train or eval plane; default
+//! train). `reload` re-reads the server's config file and atomically
+//! applies the `[serve]`/`[quality]`/`[registry]` knobs; `drain` puts the
+//! server into draining mode and begins a graceful shutdown.
 //!
 //! `sample` takes either a `solver` spec or a `budget` — an object with
 //! exactly one of `{"nfe_max": N}`, `{"latency_ms": X}`,
@@ -52,6 +64,13 @@ use crate::quality::{Budget, EvalJobSnapshot, EvalJobSpec, Frontier};
 use crate::registry::{ArtifactRecord, EvalRecord, JobId, TrainJobSnapshot, TrainJobSpec};
 use crate::solvers::theta::{Base, Family};
 
+/// Which job plane a `cancel_job` addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Train,
+    Eval,
+}
+
 #[derive(Debug)]
 pub enum Command {
     Sample(SampleRequest),
@@ -65,6 +84,9 @@ pub enum Command {
     Evaluate(EvalJobSpec),
     EvalStatus(JobId),
     Frontier(String),
+    CancelJob { id: JobId, kind: JobKind },
+    Reload,
+    Drain,
 }
 
 pub fn parse_command(line: &str) -> Result<Command> {
@@ -175,6 +197,16 @@ pub fn parse_command(line: &str) -> Result<Command> {
         }
         "eval_status" => Ok(Command::EvalStatus(v.get("job_id")?.as_usize()? as JobId)),
         "frontier" => Ok(Command::Frontier(v.get("model")?.as_str()?.to_string())),
+        "cancel_job" => {
+            let kind = match v.get_opt("kind").map(|k| k.as_str()).transpose()? {
+                None | Some("train") => JobKind::Train,
+                Some("eval") => JobKind::Eval,
+                Some(other) => bail!("unknown job kind {other:?} (train or eval)"),
+            };
+            Ok(Command::CancelJob { id: v.get("job_id")?.as_usize()? as JobId, kind })
+        }
+        "reload" => Ok(Command::Reload),
+        "drain" => Ok(Command::Drain),
         other => bail!("unknown cmd {other:?}"),
     }
 }
@@ -217,6 +249,8 @@ pub fn job_json(s: &TrainJobSnapshot) -> Value {
         ("loss", num_or_null(s.loss as f64)),
         ("val_rmse", num_or_null(s.val_rmse as f64)),
         ("wall_secs", Value::Num(s.wall_secs)),
+        ("attempts", Value::Num(s.attempts as f64)),
+        ("cancel_requested", Value::Bool(s.cancel_requested)),
     ];
     if let Some(e) = &s.error {
         fields.push(("error", Value::Str(e.clone())));
@@ -251,6 +285,8 @@ pub fn eval_job_json(s: &EvalJobSnapshot) -> Value {
         ("cells_total", Value::Num(s.iters_total as f64)),
         ("last_rmse", num_or_null(s.val_rmse as f64)),
         ("wall_secs", Value::Num(s.wall_secs)),
+        ("attempts", Value::Num(s.attempts as f64)),
+        ("cancel_requested", Value::Bool(s.cancel_requested)),
     ];
     if let Some(e) = &s.error {
         fields.push(("error", Value::Str(e.clone())));
@@ -326,6 +362,17 @@ pub fn response_to_json(resp: &SampleResponse) -> Value {
 
 pub fn error_json(msg: &str) -> Value {
     Value::obj(vec![("ok", Value::Bool(false)), ("error", Value::Str(msg.into()))])
+}
+
+/// Error with a machine-readable code (`"overloaded"`, `"draining"`,
+/// `"timeout"`, `"cancelled"`): lifecycle back-pressure that clients can
+/// branch on without parsing the human-readable message.
+pub fn error_json_coded(code: &str, msg: &str) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(false)),
+        ("code", Value::Str(code.into())),
+        ("error", Value::Str(msg.into())),
+    ])
 }
 
 #[cfg(test)]
@@ -475,6 +522,39 @@ mod tests {
     }
 
     #[test]
+    fn parses_lifecycle_commands() {
+        match parse_command(r#"{"cmd":"cancel_job","job_id":4}"#).unwrap() {
+            Command::CancelJob { id, kind } => {
+                assert_eq!(id, 4);
+                assert_eq!(kind, JobKind::Train);
+            }
+            _ => panic!("wrong command"),
+        }
+        match parse_command(r#"{"cmd":"cancel_job","job_id":2,"kind":"eval"}"#).unwrap() {
+            Command::CancelJob { id, kind } => {
+                assert_eq!(id, 2);
+                assert_eq!(kind, JobKind::Eval);
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse_command(r#"{"cmd":"cancel_job"}"#).is_err());
+        assert!(parse_command(r#"{"cmd":"cancel_job","job_id":1,"kind":"solve"}"#).is_err());
+        assert!(matches!(parse_command(r#"{"cmd":"reload"}"#).unwrap(), Command::Reload));
+        assert!(matches!(parse_command(r#"{"cmd":"drain"}"#).unwrap(), Command::Drain));
+    }
+
+    #[test]
+    fn coded_errors_carry_the_code() {
+        let v = error_json_coded("draining", "server is draining");
+        assert!(!v.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "draining");
+        let back = Value::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(back.get("code").unwrap().as_str().unwrap(), "draining");
+        // the plain error shape stays code-free
+        assert!(error_json("x").get_opt("code").is_none());
+    }
+
+    #[test]
     fn parses_job_status_command() {
         match parse_command(r#"{"cmd":"job_status","job_id":7}"#).unwrap() {
             Command::JobStatus(id) => assert_eq!(id, 7),
@@ -577,6 +657,8 @@ mod tests {
             error: None,
             artifact: None,
             wall_secs: 0.5,
+            attempts: 0,
+            cancel_requested: false,
         };
         let v = eval_job_json(&snap);
         assert_eq!(v.get("state").unwrap().as_str().unwrap(), "running");
@@ -612,6 +694,8 @@ mod tests {
             error: None,
             artifact: None,
             wall_secs: 0.0,
+            attempts: 0,
+            cancel_requested: false,
         };
         let v = job_json(&snap);
         assert_eq!(v.get("state").unwrap().as_str().unwrap(), "queued");

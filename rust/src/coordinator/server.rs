@@ -8,45 +8,143 @@
 //! `frontier`) backed by an optional [`EvalJobManager`] — a server started
 //! without either (no registry configured) cleanly rejects those commands
 //! instead of panicking.
+//!
+//! Daemon lifecycle (DESIGN.md §12): a shared [`Lifecycle`] latch drives
+//! graceful drain — once flipped (SIGTERM/SIGINT via [`serve_daemon`], or
+//! the in-band `{"cmd":"drain"}`), new work commands get a structured
+//! `draining` error, in-flight requests finish behind an inflight counter,
+//! the fusion plane flushes, and the job planes persist interrupted specs
+//! for pickup on restart. `{"cmd":"reload"}` (or SIGHUP) re-reads the
+//! config file and atomically installs the `[serve]`/`[quality]`/
+//! `[registry]` knobs without dropping a request.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Max accepted request-line length. Longer lines get a structured JSON
 /// error (and are discarded up to the next newline) instead of an
 /// unbounded buffer or a dropped connection.
 pub const MAX_LINE_BYTES: usize = 4 << 20;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::batcher::Coordinator;
 use super::protocol::{
-    artifact_json, error_json, eval_job_json, frontier_json, job_json, parse_command,
-    response_to_json, traj_done_json, traj_step_json, Command,
+    artifact_json, error_json, error_json_coded, eval_job_json, frontier_json, job_json,
+    parse_command, response_to_json, traj_done_json, traj_step_json, Command, JobKind,
 };
+use crate::config::{Config, RegistryConfig, ScheduleConfig};
 use crate::json::Value;
 use crate::log_info;
-use crate::quality::EvalJobManager;
-use crate::registry::TrainJobManager;
+use crate::quality::{frontier_pins, EvalJobManager, EvalJobSpec, EvalRunner};
+use crate::registry::meta::unix_now;
+use crate::registry::{is_overloaded_err, TrainJobManager};
+use crate::util::lifecycle::{signals, DrainGate};
 
-/// Everything a connection handler needs: the sampling coordinator plus the
-/// (optional) in-server training- and eval-job managers.
+/// Shared daemon-lifecycle state: the draining latch, the in-flight
+/// request counter the drain waits on, the wake address used to unstick a
+/// blocked `accept` (glibc `signal` is SA_RESTART), and the reloadable
+/// bits the dispatcher needs (config path, current `[registry]` knobs).
+#[derive(Default)]
+pub struct Lifecycle {
+    gate: DrainGate,
+    inflight: AtomicUsize,
+    config_path: Mutex<Option<PathBuf>>,
+    wake_addr: Mutex<Option<SocketAddr>>,
+    registry_cfg: Mutex<RegistryConfig>,
+}
+
+impl Lifecycle {
+    pub fn new() -> Lifecycle {
+        Lifecycle::default()
+    }
+
+    /// Register the config file `{"cmd":"reload"}` / SIGHUP re-reads.
+    pub fn set_config_path(&self, path: PathBuf) {
+        *self.config_path.lock().unwrap() = Some(path);
+    }
+
+    pub fn set_registry_cfg(&self, cfg: RegistryConfig) {
+        *self.registry_cfg.lock().unwrap() = cfg;
+    }
+
+    /// Current `[registry]` knobs (hot-reloadable; the scheduler reads
+    /// `keep_last_k` from here each GC tick).
+    pub fn registry_cfg(&self) -> RegistryConfig {
+        self.registry_cfg.lock().unwrap().clone()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.gate.is_draining()
+    }
+
+    /// Flip the draining latch and wake the accept loop so it observes it.
+    pub fn request_drain(&self) {
+        self.gate.begin_drain();
+        // Self-connect defeats SA_RESTART on the blocked accept(2).
+        if let Some(addr) = *self.wake_addr.lock().unwrap() {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+        }
+    }
+
+    fn set_wake_addr(&self, addr: SocketAddr) {
+        *self.wake_addr.lock().unwrap() = Some(addr);
+    }
+
+    fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// RAII in-flight marker: drain waits for the count to reach zero
+    /// before flushing the fusion plane.
+    fn enter(self: &Arc<Self>) -> InflightGuard {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        InflightGuard { lc: self.clone() }
+    }
+}
+
+struct InflightGuard {
+    lc: Arc<Lifecycle>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.lc.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Everything a connection handler needs: the sampling coordinator, the
+/// (optional) in-server training- and eval-job managers, the concrete
+/// eval runner (for hot-reloading `[quality]` knobs), and the shared
+/// lifecycle latch.
 #[derive(Clone)]
 pub struct ServerState {
     pub coord: Arc<Coordinator>,
     pub jobs: Option<Arc<TrainJobManager>>,
     pub eval_jobs: Option<Arc<EvalJobManager>>,
+    pub eval_runner: Option<Arc<EvalRunner>>,
+    pub lifecycle: Arc<Lifecycle>,
 }
 
 impl ServerState {
     /// Sampling only: training and quality commands are rejected.
     pub fn sampling_only(coord: Arc<Coordinator>) -> ServerState {
-        ServerState { coord, jobs: None, eval_jobs: None }
+        ServerState {
+            coord,
+            jobs: None,
+            eval_jobs: None,
+            eval_runner: None,
+            lifecycle: Arc::new(Lifecycle::new()),
+        }
     }
 
     pub fn with_jobs(coord: Arc<Coordinator>, jobs: Arc<TrainJobManager>) -> ServerState {
-        ServerState { coord, jobs: Some(jobs), eval_jobs: None }
+        ServerState { jobs: Some(jobs), ..ServerState::sampling_only(coord) }
     }
 
     /// Enable the quality plane (`evaluate` / `eval_status`).
@@ -54,15 +152,58 @@ impl ServerState {
         self.eval_jobs = Some(eval_jobs);
         self
     }
+
+    /// Register the concrete eval runner so `reload` can hot-swap its
+    /// `[quality]` knobs (the manager only sees the erased trait object).
+    pub fn with_eval_runner(mut self, runner: Arc<EvalRunner>) -> ServerState {
+        self.eval_runner = Some(runner);
+        self
+    }
 }
 
-/// Serve forever on `addr` (blocks). Each accepted connection gets its own
-/// thread; requests on one connection are handled sequentially, batching
-/// happens across connections inside the coordinator.
+/// Serve on `addr` until drained (blocks). Each accepted connection gets
+/// its own thread; requests on one connection are handled sequentially,
+/// batching happens across connections inside the coordinator. Returns
+/// after a graceful drain (`{"cmd":"drain"}` or [`Lifecycle::request_drain`]);
+/// without one it serves forever.
 pub fn serve(state: ServerState, addr: &str) -> Result<()> {
+    serve_inner(state, addr, false)
+}
+
+/// [`serve`] plus process-signal handling: installs SIGTERM/SIGINT →
+/// drain and SIGHUP → reload handlers and a watcher thread that acts on
+/// them. Only the daemon entrypoint uses this — the signal flags are
+/// process-global, so embedding tests use [`serve`] with the in-band
+/// `drain`/`reload` commands instead.
+pub fn serve_daemon(state: ServerState, addr: &str) -> Result<()> {
+    signals::install();
+    serve_inner(state, addr, true)
+}
+
+fn serve_inner(state: ServerState, addr: &str, watch_signals: bool) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
+    state.lifecycle.set_wake_addr(listener.local_addr()?);
     log_info!("serving on {addr}");
+    if watch_signals {
+        let watcher = state.clone();
+        std::thread::spawn(move || loop {
+            if signals::take_reload_request() {
+                match perform_reload(&watcher) {
+                    Ok(path) => log_info!("SIGHUP: reloaded config from {path}"),
+                    Err(e) => log_info!("SIGHUP: reload failed: {e:#}"),
+                }
+            }
+            if signals::drain_requested() || watcher.lifecycle.is_draining() {
+                watcher.lifecycle.request_drain();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        });
+    }
     for stream in listener.incoming() {
+        if state.lifecycle.is_draining() {
+            break;
+        }
         let stream = match stream {
             Ok(s) => s,
             Err(e) => {
@@ -70,6 +211,13 @@ pub fn serve(state: ServerState, addr: &str) -> Result<()> {
                 continue;
             }
         };
+        state.coord.metrics.record_event("connections");
+        // Per-connection idle read timeout ([serve] idle_timeout_ms;
+        // re-read per accept so `reload` applies to new connections).
+        let idle_ms = state.coord.serve_cfg().idle_timeout_ms;
+        if idle_ms > 0 {
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(idle_ms)));
+        }
         let state = state.clone();
         std::thread::spawn(move || {
             if let Err(e) = handle_connection(state, stream) {
@@ -77,7 +225,134 @@ pub fn serve(state: ServerState, addr: &str) -> Result<()> {
             }
         });
     }
+    finish_drain(&state)
+}
+
+/// Re-read the registered config file and atomically install the
+/// reloadable knobs: `[serve]` via coordinator route retirement (live
+/// requests finish on the old routes — drop-free), `[quality]` into the
+/// eval runner, `[registry]` into the lifecycle (scheduler GC). Returns
+/// the path reloaded from.
+pub fn perform_reload(state: &ServerState) -> Result<String> {
+    let path = state
+        .lifecycle
+        .config_path
+        .lock()
+        .unwrap()
+        .clone()
+        .ok_or_else(|| anyhow!("no config file registered (server started without --config)"))?;
+    let cfg = Config::load(&path)?;
+    state.coord.reload_serve(cfg.serve.clone());
+    if let Some(runner) = &state.eval_runner {
+        runner.set_quality(cfg.quality.clone());
+    }
+    state.lifecycle.set_registry_cfg(cfg.registry.clone());
+    Ok(path.display().to_string())
+}
+
+/// Graceful-drain tail, run after the accept loop stops: wait out
+/// in-flight requests (bounded by `[serve] drain_grace_ms`), flush the
+/// fusion plane, then drain both job planes and persist their interrupted
+/// specs so a restarted server resumes them.
+fn finish_drain(state: &ServerState) -> Result<()> {
+    let grace = Duration::from_millis(state.coord.serve_cfg().drain_grace_ms.max(1));
+    let deadline = Instant::now() + grace;
+    while state.lifecycle.inflight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let flushed = state.coord.drain(grace);
+    if let Some(jobs) = &state.jobs {
+        let specs = jobs.drain(grace);
+        if let Err(e) = jobs.persist_interrupted(&specs) {
+            log_info!("drain: persisting interrupted train jobs failed: {e:#}");
+        }
+    }
+    if let Some(jobs) = &state.eval_jobs {
+        let specs = jobs.drain(grace);
+        if let Err(e) = jobs.persist_interrupted(&specs) {
+            log_info!("drain: persisting interrupted eval jobs failed: {e:#}");
+        }
+    }
+    state.coord.metrics.record_event("server_drains");
+    log_info!("drain complete (fusion flushed: {flushed})");
     Ok(())
+}
+
+/// Spawn the minimal cron-like maintenance thread (`[schedule]`): every
+/// `tick_ms` it re-evals scorecards staler than `refresh_secs` (job
+/// coalescing dedupes ones already in flight) and, when `gc` is set, runs
+/// registry GC pinned to the quality frontiers. Returns `None` when
+/// `tick_ms == 0` (scheduling off). The thread exits when drain begins.
+pub fn spawn_scheduler(
+    state: &ServerState,
+    schedule: &ScheduleConfig,
+) -> Option<std::thread::JoinHandle<()>> {
+    if schedule.tick_ms == 0 {
+        return None;
+    }
+    let state = state.clone();
+    let schedule = schedule.clone();
+    Some(std::thread::spawn(move || loop {
+        let mut slept = 0u64;
+        while slept < schedule.tick_ms {
+            if state.lifecycle.is_draining() {
+                return;
+            }
+            let step = (schedule.tick_ms - slept).min(100);
+            std::thread::sleep(Duration::from_millis(step));
+            slept += step;
+        }
+        if state.lifecycle.is_draining() {
+            return;
+        }
+        scheduler_tick(&state, &schedule);
+    }))
+}
+
+fn scheduler_tick(state: &ServerState, schedule: &ScheduleConfig) {
+    let Some(registry) = state.coord.registry() else {
+        return;
+    };
+    if schedule.refresh_secs > 0 {
+        if let Some(eval_jobs) = &state.eval_jobs {
+            // Latest scorecard per (model, solver); only the newest copy
+            // decides staleness.
+            let mut latest: BTreeMap<(String, String), u64> = BTreeMap::new();
+            for rec in registry.eval_records() {
+                let at = latest.entry((rec.model, rec.solver)).or_insert(0);
+                *at = (*at).max(rec.created_at);
+            }
+            let now = unix_now();
+            for ((model, solver), created_at) in latest {
+                if now.saturating_sub(created_at) < schedule.refresh_secs {
+                    continue;
+                }
+                let spec = EvalJobSpec { model, solver, grid: Vec::new(), seed: None };
+                match eval_jobs.submit(spec) {
+                    Ok((_, false)) => state.coord.metrics.record_event("schedule_evals_refreshed"),
+                    Ok((_, true)) => {} // already in flight
+                    Err(e) => log_info!("schedule: eval refresh rejected: {e:#}"),
+                }
+            }
+        }
+    }
+    if schedule.gc {
+        let keep = state.lifecycle.registry_cfg().keep_last_k;
+        if keep > 0 {
+            let pins = frontier_pins(registry).unwrap_or_default();
+            match registry.gc_with_pins(keep, &pins) {
+                Ok(removed) if !removed.is_empty() => {
+                    state
+                        .coord
+                        .metrics
+                        .record_event_add("schedule_gc_removed", removed.len() as u64);
+                    log_info!("schedule: gc removed {} artifacts", removed.len());
+                }
+                Ok(_) => {}
+                Err(e) => log_info!("schedule: gc failed: {e:#}"),
+            }
+        }
+    }
 }
 
 fn write_event<W: Write>(writer: &mut W, v: &Value) -> Result<()> {
@@ -138,14 +413,21 @@ fn read_line_capped(reader: &mut impl BufRead) -> std::io::Result<LineRead> {
     }
 }
 
+fn is_idle_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
 pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     loop {
-        let line = match read_line_capped(&mut reader)? {
-            LineRead::Eof => break,
-            LineRead::TooLong(n) => {
+        let line = match read_line_capped(&mut reader) {
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLong(n)) => {
                 write_event(
                     &mut writer,
                     &error_json(&format!(
@@ -154,7 +436,17 @@ pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
                 )?;
                 continue;
             }
-            LineRead::Line(l) => l,
+            Ok(LineRead::Line(l)) => l,
+            // Idle timeout ([serve] idle_timeout_ms): tell the client
+            // why, then close cleanly instead of holding the slot.
+            Err(e) if is_idle_timeout(&e) => {
+                let _ = write_event(
+                    &mut writer,
+                    &error_json_coded("timeout", "idle timeout exceeded; closing connection"),
+                );
+                break;
+            }
+            Err(e) => return Err(e.into()),
         };
         if line.trim().is_empty() {
             continue;
@@ -163,6 +455,14 @@ pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
             // The streaming command writes multiple lines per request; all
             // other commands reply with exactly one line.
             Ok(Command::SampleTraj(req)) => {
+                let _inflight = state.lifecycle.enter();
+                if state.lifecycle.is_draining() {
+                    write_event(
+                        &mut writer,
+                        &error_json_coded("draining", "server is draining; new work not accepted"),
+                    )?;
+                    continue;
+                }
                 let result = state.coord.sample_traj(&req, &mut |step| {
                     write_event(&mut writer, &traj_step_json(&step))
                 });
@@ -171,7 +471,10 @@ pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
                     Err(e) => write_event(&mut writer, &error_json(&format!("{e:#}")))?,
                 }
             }
-            Ok(cmd) => write_event(&mut writer, &dispatch(&state, cmd))?,
+            Ok(cmd) => {
+                let _inflight = state.lifecycle.enter();
+                write_event(&mut writer, &dispatch(&state, cmd))?
+            }
             Err(e) => write_event(&mut writer, &error_json(&format!("bad request: {e:#}")))?,
         }
     }
@@ -179,8 +482,20 @@ pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
     Ok(())
 }
 
+/// True for the commands a draining server refuses (new work);
+/// introspection, cancel, reload and drain stay available to the end.
+fn rejected_while_draining(cmd: &Command) -> bool {
+    matches!(
+        cmd,
+        Command::Sample(_) | Command::SampleTraj(_) | Command::Train(_) | Command::Evaluate(_)
+    )
+}
+
 /// Execute a single-response command.
 fn dispatch(state: &ServerState, cmd: Command) -> Value {
+    if state.lifecycle.is_draining() && rejected_while_draining(&cmd) {
+        return error_json_coded("draining", "server is draining; new work not accepted");
+    }
     let coord = &state.coord;
     match cmd {
         Command::Ping => Value::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]),
@@ -229,6 +544,7 @@ fn dispatch(state: &ServerState, cmd: Command) -> Value {
                         ("coalesced", Value::Bool(coalesced)),
                     ])
                 }
+                Err(e) if is_overloaded_err(&e) => error_json_coded("overloaded", &format!("{e:#}")),
                 Err(e) => error_json(&format!("{e:#}")),
             },
         },
@@ -267,6 +583,7 @@ fn dispatch(state: &ServerState, cmd: Command) -> Value {
                         ("coalesced", Value::Bool(coalesced)),
                     ])
                 }
+                Err(e) if is_overloaded_err(&e) => error_json_coded("overloaded", &format!("{e:#}")),
                 Err(e) => error_json(&format!("{e:#}")),
             },
         },
@@ -281,6 +598,38 @@ fn dispatch(state: &ServerState, cmd: Command) -> Value {
             Ok(f) => frontier_json(&f),
             Err(e) => error_json(&format!("{e:#}")),
         },
+        Command::CancelJob { id, kind } => {
+            let result = match kind {
+                JobKind::Train => state.jobs.as_ref().map(|j| j.cancel(id)),
+                JobKind::Eval => state.eval_jobs.as_ref().map(|j| j.cancel(id)),
+            };
+            match result {
+                None => error_json("jobs of that kind are not enabled on this server"),
+                Some(Ok(new_state)) => Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("job_id", Value::Num(id as f64)),
+                    ("state", Value::Str(new_state.name().into())),
+                ]),
+                Some(Err(e)) => error_json(&format!("{e:#}")),
+            }
+        }
+        Command::Reload => match perform_reload(state) {
+            Ok(path) => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("reloaded", Value::Bool(true)),
+                ("config", Value::Str(path)),
+            ]),
+            Err(e) => error_json_coded("reload", &format!("{e:#}")),
+        },
+        Command::Drain => {
+            // The latch also stops the accept loop; this connection's ack
+            // still goes out because its handler thread is independent.
+            state.lifecycle.request_drain();
+            Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("draining", Value::Bool(true)),
+            ])
+        }
     }
 }
 
@@ -306,6 +655,32 @@ mod tests {
         let v = parse_command("not json");
         assert!(v.is_err());
         let e = error_json("boom");
-        assert_eq!(e.get("ok").unwrap().as_bool().unwrap(), false);
+        assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn inflight_guard_counts_and_releases() {
+        let lc = Arc::new(Lifecycle::new());
+        assert_eq!(lc.inflight(), 0);
+        {
+            let _a = lc.enter();
+            let _b = lc.enter();
+            assert_eq!(lc.inflight(), 2);
+        }
+        assert_eq!(lc.inflight(), 0);
+        assert!(!lc.is_draining());
+        lc.gate.begin_drain(); // no wake addr registered: latch only
+        assert!(lc.is_draining());
+    }
+
+    #[test]
+    fn draining_rejects_work_commands_only() {
+        let work =
+            parse_command(r#"{"cmd":"sample","model":"m","solver":"s","n_samples":1}"#).unwrap();
+        let ping = parse_command(r#"{"cmd":"ping"}"#).unwrap();
+        let drain = parse_command(r#"{"cmd":"drain"}"#).unwrap();
+        assert!(rejected_while_draining(&work));
+        assert!(!rejected_while_draining(&ping));
+        assert!(!rejected_while_draining(&drain));
     }
 }

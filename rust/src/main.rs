@@ -18,14 +18,18 @@ use std::sync::Arc;
 
 use bespoke_flow::bench_harness::{self, ExpContext};
 use bespoke_flow::config::Config;
-use bespoke_flow::coordinator::{serve, Coordinator, SampleRequest, ServerState, TrajRequest};
+use bespoke_flow::coordinator::{
+    serve, serve_daemon, spawn_scheduler, Coordinator, SampleRequest, ServerState, TrajRequest,
+};
 use bespoke_flow::models::Zoo;
 use bespoke_flow::quality::{
     build_frontier, frontier_pins, register_scorecard, Budget, EvalJobSpec, EvalRunner,
 };
 use bespoke_flow::registry::{
-    sidecar_path, ArtifactMeta, JobManager, JobRunner, Registry, TrainJobManager, ZooRunner,
+    sidecar_path, ArtifactMeta, JobManager, JobOptions, JobRunner, Registry, TrainJobManager,
+    ZooRunner,
 };
+use bespoke_flow::util::RetryPolicy;
 use bespoke_flow::runtime::{Executable, Manifest};
 use bespoke_flow::solvers::theta::{Base, Family};
 use bespoke_flow::solvers::{sampler_for_theta, Dopri5, Sampler, SolverSpec};
@@ -46,7 +50,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence == true).
-const BOOL_FLAGS: &[&str] = &["traj", "register", "smoke"];
+const BOOL_FLAGS: &[&str] = &["traj", "register", "smoke", "chaos"];
 
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
@@ -419,12 +423,18 @@ fn run() -> Result<()> {
                 cfg.serve.clone(),
                 registry.clone(),
             ));
+            let retry = RetryPolicy {
+                max_attempts: cfg.registry.retry_max_attempts as u32,
+                base_ms: cfg.registry.retry_base_ms,
+                cap_ms: cfg.registry.retry_cap_ms,
+            };
             let runner = Arc::new(ZooRunner::new(zoo.clone(), cfg.train.clone()));
-            let jobs = Arc::new(TrainJobManager::new(
+            let jobs = Arc::new(TrainJobManager::with_options(
                 registry.clone(),
                 runner,
                 cfg.registry.max_jobs,
                 Some(coord.metrics.clone()),
+                JobOptions { max_pending: cfg.registry.max_pending, retry },
             )?);
             let eval_runner = Arc::new(EvalRunner::new(
                 zoo,
@@ -432,21 +442,74 @@ fn run() -> Result<()> {
                 cfg.eval.clone(),
                 cfg.quality.clone(),
             ));
-            let eval_jobs = Arc::new(JobManager::new(
+            let eval_jobs = Arc::new(JobManager::with_options(
                 registry,
-                eval_runner as Arc<bespoke_flow::quality::EvalRunnerDyn>,
+                eval_runner.clone() as Arc<bespoke_flow::quality::EvalRunnerDyn>,
                 cfg.quality.max_eval_jobs,
                 Some(coord.metrics.clone()),
+                JobOptions { max_pending: cfg.quality.max_pending, retry },
             )?);
+            // Pick up jobs a previous drain interrupted (pending_*.json).
+            match jobs.resubmit_persisted() {
+                Ok(0) => {}
+                Ok(n) => println!("resubmitted {n} interrupted train job(s)"),
+                Err(e) => eprintln!("warning: resubmitting train jobs failed: {e:#}"),
+            }
+            match eval_jobs.resubmit_persisted() {
+                Ok(0) => {}
+                Ok(n) => println!("resubmitted {n} interrupted eval job(s)"),
+                Err(e) => eprintln!("warning: resubmitting eval jobs failed: {e:#}"),
+            }
+            let state = ServerState::with_jobs(coord, jobs)
+                .with_eval_jobs(eval_jobs)
+                .with_eval_runner(eval_runner);
+            if let Some(p) = args.flags.get("config") {
+                state.lifecycle.set_config_path(std::path::PathBuf::from(p));
+            }
+            state.lifecycle.set_registry_cfg(cfg.registry.clone());
+            let scheduler = spawn_scheduler(&state, &cfg.schedule);
             println!(
                 "serving on {} (JSONL protocol; try {{\"cmd\":\"ping\"}}; registry {})",
                 cfg.serve.addr, cfg.registry.root
             );
-            serve(
-                ServerState::with_jobs(coord, jobs).with_eval_jobs(eval_jobs),
-                &cfg.serve.addr,
-            )
+            // SIGTERM/SIGINT drain gracefully; SIGHUP hot-reloads --config.
+            serve_daemon(state, &cfg.serve.addr)?;
+            if let Some(h) = scheduler {
+                let _ = h.join();
+            }
+            println!("server drained; interrupted jobs persisted for restart");
+            Ok(())
         }
+        // Operational client commands: talk to a running server over TCP.
+        "jobs" => {
+            let cfg = load_config(&args)?;
+            match args.positional.first().map(String::as_str) {
+                Some("cancel") => {
+                    let id: u64 = args
+                        .positional
+                        .get(1)
+                        .context("usage: repro jobs cancel <id> [--kind train|eval]")?
+                        .parse()
+                        .context("bad job id")?;
+                    let kind = args.flags.get("kind").map(String::as_str).unwrap_or("train");
+                    if !matches!(kind, "train" | "eval") {
+                        bail!("--kind must be train or eval");
+                    }
+                    send_server_cmd(
+                        &cfg,
+                        &format!(r#"{{"cmd":"cancel_job","job_id":{id},"kind":"{kind}"}}"#),
+                    )
+                }
+                Some("list") | None => send_server_cmd(&cfg, r#"{"cmd":"jobs"}"#),
+                Some(other) => bail!("unknown jobs subcommand {other:?} (cancel|list)"),
+            }
+        }
+        "server" => match args.positional.first().map(String::as_str) {
+            Some("reload") => send_server_cmd(&load_config(&args)?, r#"{"cmd":"reload"}"#),
+            Some("drain") => send_server_cmd(&load_config(&args)?, r#"{"cmd":"drain"}"#),
+            Some("ping") | None => send_server_cmd(&load_config(&args)?, r#"{"cmd":"ping"}"#),
+            Some(other) => bail!("unknown server subcommand {other:?} (reload|drain|ping)"),
+        },
         "registry" => {
             let cfg = load_config(&args)?;
             let registry = open_registry(&cfg)?;
@@ -501,6 +564,12 @@ fn run() -> Result<()> {
                 .unwrap_or(if smoke { 6 } else { 32 });
             if let Some(s) = args.flags.get("seed") {
                 spec.seed = s.parse().context("bad --seed")?;
+            }
+
+            // Chaos mode: lifecycle events (drain over TCP, hot reloads)
+            // land mid-storm; writes BENCH_7.json instead of BENCH_5.json.
+            if args.flags.contains_key("chaos") {
+                return loadgen_chaos(&args, &cfg, zoo, &model, &spec);
             }
 
             let mut solo_serve = cfg.serve.clone();
@@ -766,6 +835,191 @@ fn run() -> Result<()> {
     }
 }
 
+/// Send one JSONL command to the running server at `serve.addr`, print
+/// the reply line, and fail if the server reports an error.
+fn send_server_cmd(cfg: &Config, line: &str) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(&cfg.serve.addr)
+        .with_context(|| format!("connecting to server at {}", cfg.serve.addr))?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    let resp = resp.trim();
+    if resp.is_empty() {
+        bail!("server closed the connection without a reply");
+    }
+    println!("{resp}");
+    let v = bespoke_flow::json::Value::parse(resp)?;
+    if !v.get("ok")?.as_bool()? {
+        bail!("server reported failure");
+    }
+    Ok(())
+}
+
+/// `repro loadgen --chaos`: byte-digest verification under lifecycle
+/// churn (DESIGN.md §12). Two storms, each checked against a golden
+/// in-process run: (1) hot config reloads retire every route mid-storm —
+/// results must stay byte-identical; (2) a live TCP server drains
+/// mid-storm — every request must end in a byte-correct response or a
+/// structured `draining` rejection, zero silent drops. Tail-latency
+/// percentiles for both storms go to BENCH_7.json.
+fn loadgen_chaos(
+    args: &Args,
+    cfg: &Config,
+    zoo: Arc<Zoo>,
+    model: &str,
+    spec: &loadgen::LoadSpec,
+) -> Result<()> {
+    let coord = Arc::new(Coordinator::with_registry(
+        zoo.clone(),
+        cfg.serve.clone(),
+        open_registry(cfg)?,
+    ));
+    for s in &spec.solvers {
+        let warm = SampleRequest {
+            model: model.to_string(),
+            solver: s.clone(),
+            n_samples: 1,
+            seed: 0,
+            return_samples: false,
+            budget: None,
+        };
+        coord.submit(&warm)?;
+    }
+
+    // Phase 1 — reload storm: concurrent schedule with background route
+    // retirement vs the quiet sequential golden.
+    let reloads: usize = args
+        .flags
+        .get("reloads")
+        .map(|s| s.parse())
+        .transpose()
+        .context("bad --reloads")?
+        .unwrap_or(8);
+    let quiet = loadgen::run_sequential(&coord, spec)?;
+    let reload_run = loadgen::run_with_reloads(&coord, spec, reloads)?;
+    let reload_bitwise = reload_run.bitwise_matches(&quiet);
+    println!(
+        "reload storm: {} requests, {} reloads, bitwise_match: {reload_bitwise}  \
+         p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms",
+        reload_run.report.requests,
+        reloads,
+        reload_run.report.latency_p50_ms,
+        reload_run.report.latency_p90_ms,
+        reload_run.report.latency_p99_ms
+    );
+
+    // Phase 2 — drain storm over TCP: golden digests from the seed-masked
+    // plan, then a live server that begins draining mid-storm.
+    let plan = loadgen::tcp_schedule(spec);
+    let golden = loadgen::run_plan_sequential(&coord, &plan)?;
+    let addr = if args.flags.contains_key("addr") {
+        cfg.serve.addr.clone()
+    } else {
+        "127.0.0.1:7399".to_string()
+    };
+    let state = ServerState::sampling_only(coord.clone());
+    let server = {
+        let state = state.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || serve(state, &addr))
+    };
+    let drain_after_ms: u64 = args
+        .flags
+        .get("drain-after-ms")
+        .map(|s| s.parse())
+        .transpose()
+        .context("bad --drain-after-ms")?
+        .unwrap_or(100);
+    let trigger = {
+        let lifecycle = state.lifecycle.clone();
+        let metrics = state.coord.metrics.clone();
+        let clients = spec.clients as u64;
+        std::thread::spawn(move || {
+            // Zero-loss needs every storm client accepted before the drain
+            // latch stops the accept loop; only then does the knob's delay
+            // start counting.
+            let deadline =
+                std::time::Instant::now() + std::time::Duration::from_secs(10);
+            while metrics.event_count("connections") < clients
+                && std::time::Instant::now() < deadline
+            {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(drain_after_ms));
+            lifecycle.request_drain();
+        })
+    };
+    let drain_report = loadgen::run_tcp(&addr, &plan, &golden)?;
+    let _ = trigger.join();
+    match server.join() {
+        Ok(r) => r?,
+        Err(_) => bail!("server thread panicked during drain"),
+    }
+    let lossless = drain_report.lossless();
+    println!(
+        "drain storm:  {} sent / {} ok / {} drained / {} other / {} mismatched / {} dropped  \
+         lossless: {lossless}  p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms",
+        drain_report.sent,
+        drain_report.ok,
+        drain_report.rejected_draining,
+        drain_report.rejected_other,
+        drain_report.digest_mismatches,
+        drain_report.no_response,
+        drain_report.latency_p50_ms,
+        drain_report.latency_p90_ms,
+        drain_report.latency_p99_ms
+    );
+
+    let out_path = args
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{}/../BENCH_7.json", env!("CARGO_MANIFEST_DIR")));
+    let doc = bespoke_flow::json::Value::obj(vec![
+        ("bench", bespoke_flow::json::Value::Str("chaos".into())),
+        (
+            "threads",
+            bespoke_flow::json::Value::Num(bespoke_flow::util::threads::get() as f64),
+        ),
+        ("model", bespoke_flow::json::Value::Str(model.to_string())),
+        ("clients", bespoke_flow::json::Value::Num(spec.clients as f64)),
+        (
+            "requests_per_client",
+            bespoke_flow::json::Value::Num(spec.requests_per_client as f64),
+        ),
+        ("seed", bespoke_flow::json::Value::Num(spec.seed as f64)),
+        ("reloads", bespoke_flow::json::Value::Num(reloads as f64)),
+        ("drain_after_ms", bespoke_flow::json::Value::Num(drain_after_ms as f64)),
+        (
+            "results",
+            bespoke_flow::json::Value::Arr(vec![
+                quiet.report.to_json("chaos/quiet"),
+                reload_run.report.to_json("chaos/reload-storm"),
+            ]),
+        ),
+        ("reload_bitwise_match", bespoke_flow::json::Value::Bool(reload_bitwise)),
+        ("drain_storm", drain_report.to_json("chaos/drain-storm")),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    if !reload_bitwise {
+        bail!("reload storm broke byte-identity — route retirement dropped or corrupted rows");
+    }
+    if !lossless {
+        bail!(
+            "drain storm was not lossless — {} silent drops, {} digest mismatches",
+            drain_report.no_response,
+            drain_report.digest_mismatches
+        );
+    }
+    Ok(())
+}
+
 /// Nearest-rank percentile over millisecond samples (sorts in place).
 fn percentile_ms(samples: &mut [f64], p: f64) -> f64 {
     if samples.is_empty() {
@@ -892,8 +1146,23 @@ COMMANDS:
     serve                         start the JSONL sampling + training server
         [--addr HOST:PORT]        (commands: sample, sample_traj, list,
                                    metrics, ping, train, job_status, jobs,
-                                   evaluate, eval_status, frontier —
+                                   evaluate, eval_status, frontier,
+                                   cancel_job, reload, drain —
                                    one JSON object per line)
+                                  daemon lifecycle (DESIGN.md §12):
+                                  SIGTERM/SIGINT drain gracefully (in-flight
+                                  work finishes, interrupted jobs persist
+                                  and resume on restart), SIGHUP hot-reloads
+                                  --config ([serve]/[quality]/[registry]);
+                                  [schedule] tick_ms/refresh_secs/gc enables
+                                  periodic scorecard refresh + registry GC
+    jobs cancel <id>              cancel a queued or running server job
+        [--kind train|eval]       (running train jobs checkpoint and resume
+                                   bitwise on resubmit; default kind train)
+    jobs list                     list the server's jobs over TCP
+    server reload|drain|ping      operate a running server over TCP
+                                  (reload re-reads --config atomically;
+                                   drain begins a graceful shutdown)
     loadgen                       deterministic multi-client load harness:
         --model M  [--solver S[,S2...]]  [--clients 8]  [--requests 32]
         [--n 8[,1,...]]  [--seed S]  [--smoke]  [--out BENCH_5.json]
@@ -904,6 +1173,11 @@ COMMANDS:
                                   to BENCH_5.json (works artifact-free on
                                   the fixture zoo: --artifacts
                                   rust/tests/fixtures/zoo)
+        [--chaos]                 lifecycle chaos instead: hot reloads and a
+        [--reloads 8]             mid-storm TCP drain, digest-verified
+        [--drain-after-ms 100]    against a golden run (every request must
+                                  end byte-correct or coded `draining`;
+                                  zero silent drops) — writes BENCH_7.json
     bench-families                train tiny bns + multistep artifacts and
         --model M  [--n 4]        bench RMSE-at-NFE + wall-time percentiles
         [--repeats 5]  [--iters I]  [--out BENCH_6.json]
@@ -946,8 +1220,11 @@ SOLVER SPECS (typed, strictly parsed — unknown keys are errors):
 GLOBAL FLAGS:
     --config file.json   --artifacts dir
     --registry DIR       artifact registry root (default out/registry;
-                         config: [registry] root/max_jobs/keep_last_k,
-                         [quality] grid/eval_batches/max_eval_jobs)
+                         config: [registry] root/max_jobs/keep_last_k/
+                         max_pending/retry_max_attempts/retry_base_ms/
+                         retry_cap_ms, [quality] grid/eval_batches/
+                         max_eval_jobs/max_pending, [serve] idle_timeout_ms/
+                         drain_grace_ms, [schedule] tick_ms/refresh_secs/gc)
     --threads N          compute threads for host kernels (0 = auto;
                          also: BESPOKE_THREADS env, serve.compute_threads)
     --workers N          worker threads per (model, solver) serving route

@@ -20,7 +20,7 @@ use crate::json::Value;
 use crate::models::{VelocityModel, Zoo};
 use crate::registry::meta::unix_now;
 use crate::registry::{
-    ArtifactKey, EvalRecord, JobManager, JobProgress, JobRunner, JobSnapshot, Registry,
+    ArtifactKey, EvalRecord, JobCtx, JobManager, JobProgress, JobRunner, JobSnapshot, Registry,
     META_SCHEMA_VERSION,
 };
 use crate::solvers::{Dopri5, Family, Sampler, SolverSpec};
@@ -66,7 +66,10 @@ pub struct EvalRunner {
     zoo: Arc<Zoo>,
     registry: Arc<Registry>,
     eval_cfg: EvalConfig,
-    quality_cfg: QualityConfig,
+    /// Behind a mutex so `{"cmd":"reload"}` can swap `[quality]` knobs on a
+    /// live server; jobs read it once per use, so a reload mid-sweep
+    /// affects the next cell expansion, never a half-built one.
+    quality_cfg: Mutex<QualityConfig>,
     gt_cache: Mutex<BTreeMap<(String, u64), Arc<GtBundle>>>,
 }
 
@@ -77,7 +80,18 @@ impl EvalRunner {
         eval_cfg: EvalConfig,
         quality_cfg: QualityConfig,
     ) -> EvalRunner {
-        EvalRunner { zoo, registry, eval_cfg, quality_cfg, gt_cache: Mutex::new(BTreeMap::new()) }
+        EvalRunner {
+            zoo,
+            registry,
+            eval_cfg,
+            quality_cfg: Mutex::new(quality_cfg),
+            gt_cache: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Hot-reload the `[quality]` knobs (grid default, eval batch count).
+    pub fn set_quality(&self, cfg: QualityConfig) {
+        *self.quality_cfg.lock().unwrap() = cfg;
     }
 
     /// The model to evaluate: the compiled HLO executable when present,
@@ -105,7 +119,7 @@ impl EvalRunner {
             return Ok(b.clone());
         }
         let (b, d) = (model.batch(), model.dim());
-        let nb = self.quality_cfg.eval_batches.max(1);
+        let nb = self.quality_cfg.lock().unwrap().eval_batches.max(1);
         let gt_solver = Dopri5 {
             rtol: self.eval_cfg.gt_tol,
             atol: self.eval_cfg.gt_tol,
@@ -149,11 +163,12 @@ impl EvalRunner {
         }
         // Sweep grid precedence: request's explicit grid > the configured
         // `[quality] grid` default > the template's own n.
+        let default_grid = self.quality_cfg.lock().unwrap().grid.clone();
         let sweep = |n: usize| -> Vec<usize> {
             if !spec.grid.is_empty() {
                 spec.grid.clone()
-            } else if !self.quality_cfg.grid.is_empty() {
-                self.quality_cfg.grid.clone()
+            } else if !default_grid.is_empty() {
+                default_grid.clone()
             } else {
                 vec![n]
             }
@@ -270,6 +285,7 @@ impl JobRunner for EvalRunner {
     fn run(
         &self,
         spec: &EvalJobSpec,
+        ctx: &JobCtx,
         progress: &mut dyn FnMut(&JobProgress),
     ) -> Result<Scorecard> {
         let model = self.model(&spec.model)?;
@@ -280,6 +296,9 @@ impl JobRunner for EvalRunner {
 
         let mut rows = Vec::with_capacity(cells.len());
         for (i, cell) in cells.iter().enumerate() {
+            // Cell boundaries are the cancel checkpoints: eval jobs have no
+            // resumable state, so a cancelled sweep just stops here.
+            ctx.cancel.bail_if_cancelled()?;
             let sampler = cell.build(sched)?;
             let rep = evaluate_sampler(
                 model.as_ref(),
@@ -306,6 +325,35 @@ impl JobRunner for EvalRunner {
             batches: bundle.x0.len(),
             created_at: unix_now(),
             rows,
+        })
+    }
+
+    fn spec_to_json(&self, spec: &EvalJobSpec) -> Value {
+        let mut pairs = vec![
+            ("model", Value::Str(spec.model.clone())),
+            ("solver", Value::Str(spec.solver.clone())),
+            (
+                "grid",
+                Value::Arr(spec.grid.iter().map(|&n| Value::Num(n as f64)).collect()),
+            ),
+        ];
+        if let Some(seed) = spec.seed {
+            pairs.push(("seed", Value::Num(seed as f64)));
+        }
+        Value::obj(pairs)
+    }
+
+    fn spec_from_json(&self, v: &Value) -> Result<EvalJobSpec> {
+        Ok(EvalJobSpec {
+            model: v.get("model")?.as_str()?.to_string(),
+            solver: v.get("solver")?.as_str()?.to_string(),
+            grid: v
+                .get("grid")?
+                .as_arr()?
+                .iter()
+                .map(|n| n.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            seed: v.get_opt("seed").map(|s| s.as_usize()).transpose()?.map(|s| s as u64),
         })
     }
 

@@ -13,27 +13,54 @@
 //! * `quality::EvalRunner` — scorecard sweeps via `eval::evaluate_sampler`
 //!   (the `quality::EvalJobManager` alias, `{"cmd":"evaluate"}`).
 //!
-//! Job lifecycle: `queued -> running -> done | failed`. Duplicate
+//! Job lifecycle (DESIGN.md §12):
+//! `queued -> running -> done | failed -> retrying | cancelled`. Duplicate
 //! submissions for the same coalescing key while a job is queued or running
 //! coalesce onto the existing job (the server would only race itself doing
 //! the same work twice). A panicking runner fails the job instead of
 //! wedging it in `running` forever.
+//!
+//! Daemon-grade controls layered on top:
+//!
+//! * **Cancellation** — [`JobManager::cancel`] dequeues a queued/retrying
+//!   job immediately and flips a running job's [`CancelToken`]; the runner
+//!   observes it at its next checkpoint (trainer iteration, eval cell),
+//!   persists resumable state (train jobs checkpoint under
+//!   `<registry>/checkpoints/`), and the slot finalizes as `cancelled` —
+//!   a resubmit of the same key resumes instead of restarting.
+//! * **Retry with backoff** — a failed (non-cancelled, non-panicked) run
+//!   re-enqueues itself with a capped-exponential [`RetryPolicy`] delay
+//!   and a per-job attempt budget (`<kind>_jobs_retried` metrics).
+//! * **Bounded queue** — `max_pending` caps the backlog; an over-limit
+//!   submit fails with the typed [`Overloaded`] error the server maps to
+//!   a structured `overloaded` response (`<kind>_jobs_rejected` metrics).
+//! * **Drain** — [`JobManager::drain`] stops new work, gives running jobs
+//!   a bounded grace window, then cancels the stragglers; every
+//!   interrupted spec is returned for [`JobManager::persist_interrupted`]
+//!   so a restarted server resubmits (and train jobs resume) via
+//!   [`JobManager::resubmit_persisted`].
 
 use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use super::hash::fnv1a64;
 use super::meta::ArtifactMeta;
 use super::store::{ArtifactKey, ArtifactRecord, Registry};
-use crate::bespoke::{train_family_with_progress, train_with_progress, TrainProgress};
+use crate::bespoke::{
+    train_family_with_ctl, train_with_ctl, TrainCheckpoint, TrainCtl, TrainProgress, TrainRun,
+};
 use crate::config::TrainConfig;
 use crate::coordinator::Metrics;
+use crate::json::Value;
 use crate::log_info;
 use crate::models::Zoo;
 use crate::runtime::Executable;
 use crate::solvers::theta::{Base, Family, RawTheta};
+use crate::util::lifecycle::{is_cancelled_err, CancelToken, RetryPolicy, CANCELLED};
 
 pub type JobId = u64;
 
@@ -52,8 +79,12 @@ pub const KEEP_FINISHED_JOBS: usize = 256;
 pub enum JobState {
     Queued,
     Running,
+    /// Failed, waiting out its backoff delay before re-running.
+    Retrying,
     Done,
     Failed,
+    /// Cancelled by request or drain; train jobs leave a resume checkpoint.
+    Cancelled,
 }
 
 impl JobState {
@@ -61,16 +92,65 @@ impl JobState {
         match self {
             JobState::Queued => "queued",
             JobState::Running => "running",
+            JobState::Retrying => "retrying",
             JobState::Done => "done",
             JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
         }
     }
+
+    /// Terminal states: the job will never run again.
+    pub fn is_finished(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Typed rejection for a full job queue — the server maps it to the
+/// structured `overloaded` error code.
+#[derive(Debug)]
+pub struct Overloaded {
+    pub kind: &'static str,
+    pub max_pending: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} job queue is full ({} pending jobs); retry later",
+            self.kind, self.max_pending
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// True iff `err` is a bounded-queue rejection (for the server's
+/// structured error codes).
+pub fn is_overloaded_err(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<Overloaded>().is_some())
+}
+
+/// Per-attempt lifecycle context handed to [`JobRunner::run`]: the
+/// cooperative cancel token, the retry attempt number, and (when the
+/// runner supports resumable work) where its checkpoint lives.
+#[derive(Clone, Debug, Default)]
+pub struct JobCtx {
+    pub cancel: CancelToken,
+    /// 0 on the initial run, k on the k-th retry.
+    pub attempt: u32,
+    /// Stable per-coalesce-key checkpoint path under the registry root
+    /// (`<root>/checkpoints/<kind>/<key>.ckpt.json`). A cancelled runner
+    /// persists resumable state here; a fresh run of the same key loads
+    /// and resumes from it.
+    pub checkpoint_path: Option<PathBuf>,
 }
 
 /// Pluggable job execution. Implementations describe what a job *is*
 /// (spec), how it *runs* (on a worker thread, reporting progress), and how
 /// its outcome is *published* into the registry; [`JobManager`] supplies
-/// everything else (queueing, coalescing, snapshots, panic containment).
+/// everything else (queueing, coalescing, snapshots, panic containment,
+/// cancellation, retry, drain persistence).
 pub trait JobRunner: Send + Sync {
     /// What to do: the submitted job description.
     type Spec: Clone + Send + 'static;
@@ -80,7 +160,8 @@ pub trait JobRunner: Send + Sync {
     type Artifact: Clone + Send + 'static;
 
     /// Job-kind tag: metrics events are named `<kind>_jobs_submitted` /
-    /// `_coalesced` / `_done` / `_failed`, and logs are prefixed with it.
+    /// `_coalesced` / `_done` / `_failed` / `_retried` / `_cancelled` /
+    /// `_rejected`, and logs are prefixed with it.
     fn kind(&self) -> &'static str;
 
     /// Coalescing identity: a submission whose key matches a queued or
@@ -96,10 +177,14 @@ pub trait JobRunner: Send + Sync {
         Ok(())
     }
 
-    /// Run the job, reporting progress through the callback.
+    /// Run the job, reporting progress through the callback. A runner
+    /// that honors cancellation checks `ctx.cancel` at its checkpoints
+    /// and returns the [`CANCELLED`] marker error (after persisting
+    /// resumable state to `ctx.checkpoint_path` if it supports resume).
     fn run(
         &self,
         spec: &Self::Spec,
+        ctx: &JobCtx,
         progress: &mut dyn FnMut(&JobProgress),
     ) -> Result<Self::Output>;
 
@@ -107,6 +192,35 @@ pub trait JobRunner: Send + Sync {
     /// write the scorecard, ...). Runs on the worker thread; an error here
     /// fails the job like a run error.
     fn publish(&self, registry: &Registry, out: Self::Output) -> Result<Self::Artifact>;
+
+    /// Wire codec for drain persistence: a spec serialized here must
+    /// round-trip through [`JobRunner::spec_from_json`] so interrupted
+    /// jobs survive a server restart.
+    fn spec_to_json(&self, spec: &Self::Spec) -> Value;
+
+    /// Inverse of [`JobRunner::spec_to_json`].
+    fn spec_from_json(&self, v: &Value) -> Result<Self::Spec>;
+
+    /// File name (not path) of this spec's resumable checkpoint, or None
+    /// when the runner does not support resume (the default). Configs
+    /// that must never resume each other's state (different seed or
+    /// iteration budget) must map to distinct names.
+    fn checkpoint_file(&self, _spec: &Self::Spec) -> Option<String> {
+        None
+    }
+}
+
+/// Make a coalesce key safe to embed in a file name.
+fn sanitize_component(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '.' | '_' | '=') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
 }
 
 /// What to train. `iters`/`seed` override the server's `TrainConfig` when
@@ -256,10 +370,45 @@ impl JobRunner for ZooRunner {
     fn run(
         &self,
         spec: &TrainJobSpec,
+        ctx: &JobCtx,
         progress: &mut dyn FnMut(&JobProgress),
     ) -> Result<TrainedArtifact> {
         let cfg = self.job_cfg(spec);
-        let out = match spec.family {
+        let window = spec.window.unwrap_or(self.base_cfg.window);
+        // Resume from a checkpoint left by a previous cancelled attempt of
+        // this key, when it matches the (possibly overridden) config; a
+        // stale or unreadable checkpoint is discarded, never fatal.
+        let resume = ctx.checkpoint_path.as_deref().and_then(|path| {
+            if !path.exists() {
+                return None;
+            }
+            match TrainCheckpoint::load(path) {
+                Ok(ck) if ck.iters_total == cfg.iters => {
+                    log_info!(
+                        "[train] resuming {} from checkpoint at iter {}/{}",
+                        self.label(spec),
+                        ck.iters_done,
+                        ck.iters_total
+                    );
+                    Some(ck)
+                }
+                Ok(ck) => {
+                    log_info!(
+                        "[train] discarding checkpoint for {} ({} iters, want {})",
+                        self.label(spec),
+                        ck.iters_total,
+                        cfg.iters
+                    );
+                    None
+                }
+                Err(e) => {
+                    log_info!("[train] discarding unreadable checkpoint: {e:#}");
+                    None
+                }
+            }
+        });
+        let ctl = TrainCtl { cancel: ctx.cancel.clone(), resume };
+        let run = match spec.family {
             Family::Stationary => {
                 let model = self.zoo.hlo(&spec.model)?;
                 let lg = self
@@ -268,24 +417,93 @@ impl JobRunner for ZooRunner {
                     .lossgrad(&spec.model, spec.base.name(), spec.n)?;
                 let exe = Executable::load(&self.zoo.manifest().path(&lg.file))
                     .context("loading loss-grad executable")?;
-                train_with_progress(&model, &exe, spec.base, spec.n, &cfg, progress)?
+                train_with_ctl(&model, &exe, spec.base, spec.n, &cfg, &ctl, progress)?
             }
             family => {
                 let model = self.zoo.serving_model(&spec.model)?;
-                let window = spec.window.unwrap_or(self.base_cfg.window);
-                train_family_with_progress(
+                train_family_with_ctl(
                     model.as_ref(),
                     family,
                     spec.base,
                     spec.n,
                     window,
                     &cfg,
+                    &ctl,
                     progress,
                 )?
             }
         };
+        let out = match run {
+            TrainRun::Done(out) => {
+                // a completed run supersedes any resume state
+                if let Some(path) = &ctx.checkpoint_path {
+                    let _ = std::fs::remove_file(path);
+                }
+                out
+            }
+            TrainRun::Cancelled(ck) => {
+                if let Some(path) = &ctx.checkpoint_path {
+                    ck.save(path)?;
+                    log_info!(
+                        "[train] cancelled {} at iter {}/{}; checkpoint saved",
+                        self.label(spec),
+                        ck.iters_done,
+                        ck.iters_total
+                    );
+                }
+                bail!(CANCELLED);
+            }
+        };
         let meta = ArtifactMeta::from_outcome(&spec.model, spec.base, spec.n, &cfg.ablation, &out);
         Ok(TrainedArtifact { theta: out.best, meta })
+    }
+
+    fn spec_to_json(&self, spec: &TrainJobSpec) -> Value {
+        let mut pairs = vec![
+            ("model", Value::Str(spec.model.clone())),
+            ("base", Value::Str(spec.base.name().to_string())),
+            ("n", Value::Num(spec.n as f64)),
+            ("ablation", Value::Str(spec.ablation.clone())),
+            ("family", Value::Str(spec.family.name().to_string())),
+        ];
+        if let Some(w) = spec.window {
+            pairs.push(("window", Value::Num(w as f64)));
+        }
+        if let Some(iters) = spec.iters {
+            pairs.push(("iters", Value::Num(iters as f64)));
+        }
+        if let Some(seed) = spec.seed {
+            pairs.push(("seed", Value::Num(seed as f64)));
+        }
+        Value::obj(pairs)
+    }
+
+    fn spec_from_json(&self, v: &Value) -> Result<TrainJobSpec> {
+        Ok(TrainJobSpec {
+            model: v.get("model")?.as_str()?.to_string(),
+            base: Base::parse(v.get("base")?.as_str()?)?,
+            n: v.get("n")?.as_usize()?,
+            ablation: v.get("ablation")?.as_str()?.to_string(),
+            family: Family::parse(v.get("family")?.as_str()?)?,
+            window: v.get_opt("window").map(|w| w.as_usize()).transpose()?,
+            iters: v.get_opt("iters").map(|w| w.as_usize()).transpose()?,
+            seed: v.get_opt("seed").map(|w| w.as_usize()).transpose()?.map(|s| s as u64),
+        })
+    }
+
+    /// Checkpoints are keyed by the coalesce key *and* the effective
+    /// (seed, iters): a resubmit with a different seed or budget is a
+    /// different run and must start fresh, not resume foreign state.
+    fn checkpoint_file(&self, spec: &TrainJobSpec) -> Option<String> {
+        let cfg = self.job_cfg(spec);
+        let key = self.coalesce_key(spec);
+        Some(format!(
+            "{}-s{}-i{}-{:016x}.ckpt.json",
+            sanitize_component(&key),
+            cfg.seed,
+            cfg.iters,
+            fnv1a64(key.as_bytes())
+        ))
     }
 
     fn publish(&self, registry: &Registry, out: TrainedArtifact) -> Result<ArtifactRecord> {
@@ -318,6 +536,11 @@ pub struct JobSnapshot<S: Clone, A: Clone> {
     pub artifact: Option<A>,
     /// Seconds spent running so far (final once finished; 0 while queued).
     pub wall_secs: f64,
+    /// Retries consumed so far (0 = still on its initial attempt).
+    pub attempts: u32,
+    /// True once `cancel_job` has been requested (even before a running
+    /// job observes it at its next checkpoint).
+    pub cancel_requested: bool,
 }
 
 struct Slot<S, A> {
@@ -332,6 +555,35 @@ struct Slot<S, A> {
     artifact: Option<A>,
     started: Option<Instant>,
     finished: Option<Instant>,
+    /// Retries consumed.
+    attempts: u32,
+    /// Backoff deadline while `Retrying`; a worker skips the job until due.
+    not_before: Option<Instant>,
+    /// The running attempt's cancel token (None while not running).
+    cancel: Option<CancelToken>,
+    cancel_requested: bool,
+}
+
+impl<S, A> Slot<S, A> {
+    fn new(spec: S, coalesce_key: String) -> Slot<S, A> {
+        Slot {
+            spec,
+            coalesce_key,
+            state: JobState::Queued,
+            iters_done: 0,
+            iters_total: 0,
+            loss: f32::NAN,
+            val_rmse: f32::NAN,
+            error: None,
+            artifact: None,
+            started: None,
+            finished: None,
+            attempts: 0,
+            not_before: None,
+            cancel: None,
+            cancel_requested: false,
+        }
+    }
 }
 
 impl<S: Clone, A: Clone> Slot<S, A> {
@@ -352,6 +604,8 @@ impl<S: Clone, A: Clone> Slot<S, A> {
             error: self.error.clone(),
             artifact: self.artifact.clone(),
             wall_secs,
+            attempts: self.attempts,
+            cancel_requested: self.cancel_requested,
         }
     }
 }
@@ -361,11 +615,24 @@ struct JobsState<S, A> {
     pending: VecDeque<JobId>,
     next_id: JobId,
     shutdown: bool,
+    /// Once set, no new work is accepted or started (drain in progress).
+    draining: bool,
 }
 
 struct Inner<S, A> {
     state: Mutex<JobsState<S, A>>,
     ready: Condvar,
+}
+
+/// Lifecycle knobs for a [`JobManager`]. `Default` reproduces the
+/// pre-lifecycle behavior: unbounded queue, no retries.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobOptions {
+    /// Max queued (not yet running) jobs; 0 = unbounded. Over-limit
+    /// submissions fail with [`Overloaded`].
+    pub max_pending: usize,
+    /// Backoff policy for failed (non-cancelled, non-panicked) runs.
+    pub retry: RetryPolicy,
 }
 
 /// Background job manager: `max_jobs` worker threads drain a FIFO of
@@ -376,16 +643,29 @@ pub struct JobManager<R: JobRunner + ?Sized> {
     registry: Arc<Registry>,
     runner: Arc<R>,
     metrics: Option<Arc<Metrics>>,
+    options: JobOptions,
 }
 
 impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
-    /// Errors if a worker thread cannot be spawned (resource exhaustion) —
-    /// a manager with zero workers would queue jobs forever.
+    /// [`JobManager::with_options`] with default lifecycle knobs
+    /// (unbounded queue, no retries) — the pre-lifecycle constructor.
     pub fn new(
         registry: Arc<Registry>,
         runner: Arc<R>,
         max_jobs: usize,
         metrics: Option<Arc<Metrics>>,
+    ) -> Result<JobManager<R>> {
+        JobManager::with_options(registry, runner, max_jobs, metrics, JobOptions::default())
+    }
+
+    /// Errors if a worker thread cannot be spawned (resource exhaustion) —
+    /// a manager with zero workers would queue jobs forever.
+    pub fn with_options(
+        registry: Arc<Registry>,
+        runner: Arc<R>,
+        max_jobs: usize,
+        metrics: Option<Arc<Metrics>>,
+        options: JobOptions,
     ) -> Result<JobManager<R>> {
         let inner = Arc::new(Inner {
             state: Mutex::new(JobsState {
@@ -393,6 +673,7 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
                 pending: VecDeque::new(),
                 next_id: 1,
                 shutdown: false,
+                draining: false,
             }),
             ready: Condvar::new(),
         });
@@ -406,7 +687,7 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
             // store alive).
             let spawned = std::thread::Builder::new()
                 .name(format!("{}-job-{wi}", runner.kind()))
-                .spawn(move || worker_loop(worker_inner, registry, runner, metrics));
+                .spawn(move || worker_loop(worker_inner, registry, runner, metrics, options.retry));
             if let Err(e) = spawned {
                 // Tell already-spawned workers to exit before bailing.
                 inner.state.lock().unwrap().shutdown = true;
@@ -414,7 +695,7 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
                 return Err(anyhow::Error::from(e).context("spawning job worker"));
             }
         }
-        Ok(JobManager { inner, registry, runner, metrics })
+        Ok(JobManager { inner, registry, runner, metrics, options })
     }
 
     pub fn registry(&self) -> &Arc<Registry> {
@@ -422,37 +703,35 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
     }
 
     /// Submit a job. Returns `(job_id, coalesced)`: when a job for the same
-    /// coalescing key is already queued or running, the existing job id is
-    /// returned with `coalesced = true` and nothing new is enqueued.
+    /// coalescing key is already queued, retrying or running, the existing
+    /// job id is returned with `coalesced = true` and nothing new is
+    /// enqueued. Fails with [`Overloaded`] when the pending backlog is at
+    /// `max_pending`, and with a plain error while draining.
     pub fn submit(&self, spec: R::Spec) -> Result<(JobId, bool)> {
         self.runner.validate(&spec)?;
         let key = self.runner.coalesce_key(&spec);
         let mut st = self.inner.state.lock().unwrap();
+        if st.draining {
+            bail!("server is draining; {} job not accepted", self.runner.kind());
+        }
         let in_flight = st.jobs.iter().find(|(_, s)| {
-            s.coalesce_key == key && matches!(s.state, JobState::Queued | JobState::Running)
+            s.coalesce_key == key && !s.state.is_finished()
         });
         if let Some((&id, _)) = in_flight {
             self.record("coalesced");
             return Ok((id, true));
         }
+        if self.options.max_pending > 0 && st.pending.len() >= self.options.max_pending {
+            drop(st);
+            self.record("rejected");
+            return Err(anyhow::Error::new(Overloaded {
+                kind: self.runner.kind(),
+                max_pending: self.options.max_pending,
+            }));
+        }
         let id = st.next_id;
         st.next_id += 1;
-        st.jobs.insert(
-            id,
-            Slot {
-                spec,
-                coalesce_key: key,
-                state: JobState::Queued,
-                iters_done: 0,
-                iters_total: 0,
-                loss: f32::NAN,
-                val_rmse: f32::NAN,
-                error: None,
-                artifact: None,
-                started: None,
-                finished: None,
-            },
-        );
+        st.jobs.insert(id, Slot::new(spec, key));
         st.pending.push_back(id);
         drop(st);
         self.inner.ready.notify_one();
@@ -469,6 +748,186 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
     pub fn jobs(&self) -> Vec<JobSnapshot<R::Spec, R::Artifact>> {
         let st = self.inner.state.lock().unwrap();
         st.jobs.iter().map(|(&id, s)| s.snapshot(id)).collect()
+    }
+
+    /// Cancel a job. A queued/retrying job is dequeued and finalized as
+    /// `cancelled` immediately; a running job has its cancel token
+    /// flipped and finalizes at the runner's next checkpoint (train jobs
+    /// persist a resume checkpoint first). Errors for unknown ids and
+    /// already-finished jobs.
+    pub fn cancel(&self, id: JobId) -> Result<JobState> {
+        let mut st = self.inner.state.lock().unwrap();
+        let state = match st.jobs.get(&id) {
+            Some(s) => s.state,
+            None => bail!("no such {} job: {id}", self.runner.kind()),
+        };
+        match state {
+            JobState::Queued | JobState::Retrying => {
+                st.pending.retain(|&p| p != id);
+                let slot = st.jobs.get_mut(&id).expect("slot just read");
+                slot.state = JobState::Cancelled;
+                slot.error = Some("cancelled".to_string());
+                slot.finished = Some(Instant::now());
+                slot.cancel_requested = true;
+                drop(st);
+                self.inner.ready.notify_all();
+                self.record("cancelled");
+                Ok(JobState::Cancelled)
+            }
+            JobState::Running => {
+                let slot = st.jobs.get_mut(&id).expect("slot just read");
+                slot.cancel_requested = true;
+                if let Some(tok) = &slot.cancel {
+                    tok.cancel();
+                }
+                // finalization (and the _cancelled metric) happen when the
+                // runner observes the token at its next checkpoint
+                Ok(JobState::Running)
+            }
+            state => bail!("{} job {id} already {}", self.runner.kind(), state.name()),
+        }
+    }
+
+    /// Drain for shutdown: stop accepting and starting work, give running
+    /// jobs a bounded `grace` to finish, then cancel the stragglers (their
+    /// runners checkpoint at the next iteration boundary) and wait up to
+    /// `grace` again for them to observe. Returns the specs of every job
+    /// that was interrupted — queued, retrying, or cancelled-while-running
+    /// — for [`JobManager::persist_interrupted`].
+    pub fn drain(&self, grace: Duration) -> Vec<R::Spec> {
+        let mut interrupted = Vec::new();
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.draining = true;
+            // Queued/retrying jobs will never get to run: finalize them as
+            // cancelled now and persist their specs for restart pickup.
+            let waiting: Vec<JobId> = st.pending.drain(..).collect();
+            for id in waiting {
+                if let Some(s) = st.jobs.get_mut(&id) {
+                    s.state = JobState::Cancelled;
+                    s.error = Some("server draining".to_string());
+                    s.finished = Some(Instant::now());
+                    interrupted.push(s.spec.clone());
+                    self.record("cancelled");
+                }
+            }
+        }
+        self.inner.ready.notify_all();
+
+        // Bounded grace window for running jobs to finish on their own.
+        let deadline = Instant::now() + grace;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            let running =
+                st.jobs.values().filter(|s| s.state == JobState::Running).count();
+            if running == 0 {
+                return interrupted;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            st = self.inner.ready.wait_timeout(st, deadline - now).unwrap().0;
+        }
+
+        // Cancel the stragglers; their runners persist resumable state at
+        // the next checkpoint. Persist their specs so a restarted server
+        // resubmits (and resumes) them.
+        for s in st.jobs.values_mut() {
+            if s.state == JobState::Running {
+                s.cancel_requested = true;
+                if let Some(tok) = &s.cancel {
+                    tok.cancel();
+                }
+                interrupted.push(s.spec.clone());
+            }
+        }
+        // Second bounded wait: give the cancelled runners time to observe
+        // the token and write their checkpoints before the process exits.
+        let deadline = Instant::now() + grace;
+        loop {
+            let running =
+                st.jobs.values().filter(|s| s.state == JobState::Running).count();
+            if running == 0 {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                log_info!(
+                    "[{} drain] {running} job(s) did not reach a cancel checkpoint in time",
+                    self.runner.kind()
+                );
+                break;
+            }
+            st = self.inner.ready.wait_timeout(st, deadline - now).unwrap().0;
+        }
+        interrupted
+    }
+
+    /// Path of the interrupted-jobs file for this manager's kind.
+    pub fn pending_file(&self) -> PathBuf {
+        self.registry
+            .root()
+            .join(format!("pending_{}.json", self.runner.kind()))
+    }
+
+    /// Persist interrupted specs (from [`JobManager::drain`]) for restart
+    /// pickup. No file is written when `specs` is empty (and any stale
+    /// one is removed).
+    pub fn persist_interrupted(&self, specs: &[R::Spec]) -> Result<()> {
+        let path = self.pending_file();
+        if specs.is_empty() {
+            let _ = std::fs::remove_file(&path);
+            return Ok(());
+        }
+        let arr: Vec<Value> =
+            specs.iter().map(|s| self.runner.spec_to_json(s)).collect();
+        let v = Value::obj(vec![
+            ("kind", Value::Str(self.runner.kind().to_string())),
+            ("specs", Value::Arr(arr)),
+        ]);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, v.to_string_pretty())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename into {}", path.display()))?;
+        log_info!(
+            "[{} drain] persisted {} interrupted job(s) to {}",
+            self.runner.kind(),
+            specs.len(),
+            path.display()
+        );
+        Ok(())
+    }
+
+    /// Resubmit jobs persisted by a previous drain, then delete the file.
+    /// Returns how many were resubmitted. Unparseable specs are skipped
+    /// with a log line, never fatal — a corrupt pending file must not
+    /// prevent startup.
+    pub fn resubmit_persisted(&self) -> Result<usize> {
+        let path = self.pending_file();
+        if !path.exists() {
+            return Ok(0);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Value::parse(&text)?;
+        let mut n = 0usize;
+        for sv in v.get("specs")?.as_arr()? {
+            match self.runner.spec_from_json(sv).and_then(|spec| self.submit(spec)) {
+                Ok(_) => n += 1,
+                Err(e) => log_info!(
+                    "[{}] skipping persisted job: {e:#}",
+                    self.runner.kind()
+                ),
+            }
+        }
+        std::fs::remove_file(&path)
+            .with_context(|| format!("remove {}", path.display()))?;
+        if n > 0 {
+            log_info!("[{}] resubmitted {n} interrupted job(s)", self.runner.kind());
+        }
+        Ok(n)
     }
 
     fn record(&self, suffix: &str) {
@@ -490,21 +949,59 @@ fn worker_loop<R: JobRunner + ?Sized>(
     registry: Arc<Registry>,
     runner: Arc<R>,
     metrics: Option<Arc<Metrics>>,
+    retry: RetryPolicy,
 ) {
     let kind = runner.kind();
     loop {
-        // Block until a job is pending (or shutdown).
-        let (id, spec) = {
+        // Block until a *due* job is pending (or shutdown). Retrying jobs
+        // sit in the pending queue with a `not_before` backoff deadline;
+        // workers skip them until due and sleep until the earliest one.
+        let (id, spec, ctx) = {
             let mut st = inner.state.lock().unwrap();
             loop {
                 if st.shutdown {
                     return;
                 }
-                if let Some(id) = st.pending.pop_front() {
-                    let slot = st.jobs.get_mut(&id).expect("pending id has a slot");
-                    slot.state = JobState::Running;
-                    slot.started = Some(Instant::now());
-                    break (id, slot.spec.clone());
+                if !st.draining {
+                    let now = Instant::now();
+                    let due = st.pending.iter().position(|pid| {
+                        st.jobs
+                            .get(pid)
+                            .is_none_or(|s| s.not_before.is_none_or(|t| t <= now))
+                    });
+                    if let Some(pos) = due {
+                        let id = st.pending.remove(pos).expect("position just found");
+                        let slot = st.jobs.get_mut(&id).expect("pending id has a slot");
+                        slot.state = JobState::Running;
+                        slot.started = Some(Instant::now());
+                        slot.not_before = None;
+                        let token = CancelToken::new();
+                        if slot.cancel_requested {
+                            // cancelled while waiting out a backoff: let the
+                            // runner observe immediately
+                            token.cancel();
+                        }
+                        slot.cancel = Some(token.clone());
+                        let ctx = JobCtx {
+                            cancel: token,
+                            attempt: slot.attempts,
+                            checkpoint_path: runner.checkpoint_file(&slot.spec).map(|f| {
+                                registry.root().join("checkpoints").join(kind).join(f)
+                            }),
+                        };
+                        break (id, slot.spec.clone(), ctx);
+                    }
+                    // nothing due: sleep until the earliest backoff deadline
+                    let earliest = st
+                        .pending
+                        .iter()
+                        .filter_map(|pid| st.jobs.get(pid).and_then(|s| s.not_before))
+                        .min();
+                    if let Some(t) = earliest {
+                        let wait = t.saturating_duration_since(now);
+                        st = inner.ready.wait_timeout(st, wait).unwrap().0;
+                        continue;
+                    }
                 }
                 st = inner.ready.wait(st).unwrap();
             }
@@ -515,7 +1012,7 @@ fn worker_loop<R: JobRunner + ?Sized>(
         // instead of wedging it in `running` forever.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             runner
-                .run(&spec, &mut |p: &JobProgress| {
+                .run(&spec, &ctx, &mut |p: &JobProgress| {
                     let mut st = inner.state.lock().unwrap();
                     if let Some(s) = st.jobs.get_mut(&id) {
                         s.iters_done = p.iter;
@@ -528,37 +1025,82 @@ fn worker_loop<R: JobRunner + ?Sized>(
                 })
                 .and_then(|out| runner.publish(&registry, out))
         }));
-        let published = match run {
-            Ok(result) => result,
-            Err(panic) => Err(anyhow::anyhow!(
-                "{kind} job panicked: {}",
-                panic_message(&panic)
-            )),
+        let (published, panicked) = match run {
+            Ok(result) => (result, false),
+            Err(panic) => (
+                Err(anyhow::anyhow!("{kind} job panicked: {}", panic_message(&panic))),
+                true,
+            ),
         };
 
         let mut st = inner.state.lock().unwrap();
         prune_finished(&mut st);
+        let draining = st.draining;
+        let mut retry_enqueued = false;
         if let Some(slot) = st.jobs.get_mut(&id) {
-            slot.finished = Some(Instant::now());
+            slot.cancel = None;
             match published {
                 Ok(rec) => {
                     log_info!("[{kind} job {id}] done");
                     slot.state = JobState::Done;
+                    slot.finished = Some(Instant::now());
                     slot.artifact = Some(rec);
                     if let Some(m) = &metrics {
                         m.record_event(&format!("{kind}_jobs_done"));
                     }
                 }
-                Err(e) => {
-                    log_info!("[{kind} job {id}] failed: {e:#}");
-                    slot.state = JobState::Failed;
-                    slot.error = Some(format!("{e:#}"));
+                Err(e) if is_cancelled_err(&e) => {
+                    log_info!("[{kind} job {id}] cancelled at iter {}", slot.iters_done);
+                    slot.state = JobState::Cancelled;
+                    slot.finished = Some(Instant::now());
+                    slot.error = Some("cancelled".to_string());
                     if let Some(m) = &metrics {
-                        m.record_event(&format!("{kind}_jobs_failed"));
+                        m.record_event(&format!("{kind}_jobs_cancelled"));
+                    }
+                }
+                Err(e) => {
+                    // Retry transient failures with backoff — but never
+                    // panics (likely deterministic bugs), never while
+                    // draining, never past the attempt budget, and never
+                    // jobs whose cancellation raced their failure.
+                    let may_retry = !panicked
+                        && !draining
+                        && !slot.cancel_requested
+                        && retry.allows(slot.attempts);
+                    if may_retry {
+                        slot.attempts += 1;
+                        let delay = retry.delay(slot.attempts);
+                        log_info!(
+                            "[{kind} job {id}] failed (attempt {}): {e:#}; retrying in {:?}",
+                            slot.attempts,
+                            delay
+                        );
+                        slot.state = JobState::Retrying;
+                        slot.error = Some(format!("{e:#}"));
+                        slot.not_before = Some(Instant::now() + delay);
+                        retry_enqueued = true;
+                        if let Some(m) = &metrics {
+                            m.record_event(&format!("{kind}_jobs_retried"));
+                        }
+                    } else {
+                        log_info!("[{kind} job {id}] failed: {e:#}");
+                        slot.state = JobState::Failed;
+                        slot.finished = Some(Instant::now());
+                        slot.error = Some(format!("{e:#}"));
+                        if let Some(m) = &metrics {
+                            m.record_event(&format!("{kind}_jobs_failed"));
+                        }
                     }
                 }
             }
         }
+        if retry_enqueued {
+            st.pending.push_back(id);
+        }
+        drop(st);
+        // Wake peers: drain() waits for running-job counts, and a retry's
+        // backoff deadline needs a worker's wait_timeout recomputed.
+        inner.ready.notify_all();
     }
 }
 
@@ -567,12 +1109,8 @@ fn worker_loop<R: JobRunner + ?Sized>(
 /// In-flight jobs are never pruned; the job about to be finalized by the
 /// caller still counts as in-flight here and survives.
 fn prune_finished<S, A>(st: &mut JobsState<S, A>) {
-    let finished: Vec<JobId> = st
-        .jobs
-        .iter()
-        .filter(|(_, s)| matches!(s.state, JobState::Done | JobState::Failed))
-        .map(|(&id, _)| id)
-        .collect();
+    let finished: Vec<JobId> =
+        st.jobs.iter().filter(|(_, s)| s.state.is_finished()).map(|(&id, _)| id).collect();
     if finished.len() >= KEEP_FINISHED_JOBS {
         for id in &finished[..=finished.len() - KEEP_FINISHED_JOBS] {
             st.jobs.remove(id);

@@ -33,8 +33,9 @@ pub mod store;
 
 pub use hash::{content_hash, fnv1a64};
 pub use jobs::{
-    JobId, JobManager, JobProgress, JobRunner, JobSnapshot, JobState, TrainedArtifact,
-    TrainJobManager, TrainJobSnapshot, TrainJobSpec, TrainRunner, ZooRunner,
+    is_overloaded_err, JobCtx, JobId, JobManager, JobOptions, JobProgress, JobRunner, JobSnapshot,
+    JobState, Overloaded, TrainedArtifact, TrainJobManager, TrainJobSnapshot, TrainJobSpec,
+    TrainRunner, ZooRunner,
 };
 pub use meta::{sidecar_path, ArtifactMeta, META_SCHEMA_VERSION};
 pub use store::{ArtifactKey, ArtifactRecord, EvalRecord, ManifestStamp, Registry};

@@ -224,11 +224,20 @@ pub fn run(coord: &Arc<Coordinator>, spec: &LoadSpec) -> Result<LoadRun> {
 /// the caller's thread, so every request solves without concurrent
 /// batch-mates. Fused runs must match its digests bit-for-bit.
 pub fn run_sequential(coord: &Arc<Coordinator>, spec: &LoadSpec) -> Result<LoadRun> {
+    run_plan_sequential(coord, &schedule(spec))
+}
+
+/// [`run_sequential`] over an explicit plan — the golden-digest source for
+/// chaos runs, which must share the caller's (possibly seed-masked) plan.
+pub fn run_plan_sequential(
+    coord: &Arc<Coordinator>,
+    plan: &[Vec<PlannedRequest>],
+) -> Result<LoadRun> {
     let started = Instant::now();
     let mut outcomes = Vec::new();
-    for client_plan in schedule(spec) {
+    for client_plan in plan {
         for p in client_plan {
-            outcomes.push(run_one(coord, p)?);
+            outcomes.push(run_one(coord, p.clone())?);
         }
     }
     Ok(aggregate(outcomes, started.elapsed().as_secs_f64()))
@@ -249,6 +258,263 @@ fn run_one(coord: &Arc<Coordinator>, p: PlannedRequest) -> Result<RequestOutcome
         latency_ms: resp.latency_ms,
         digest: sample_digest(samples),
     })
+}
+
+// ---------------------------------------------------------------------------
+// Chaos mode (DESIGN.md §12): the same deterministic schedules, fired over
+// TCP at a live server while lifecycle events (drain, reload) land
+// mid-storm. Every request must end in a byte-correct response
+// (digest-checked against a golden in-process run) or a structured coded
+// rejection — silent drops and garbled rows are counted so callers can
+// assert they are zero.
+
+/// Masked-seed variant of [`schedule`]: seeds are clamped to 32 bits so
+/// they survive the wire protocol's JSON number (f64) round-trip
+/// bit-exactly. Golden digests must come from the *same* plan
+/// (via [`run_plan_sequential`]), never from the unmasked schedule.
+pub fn tcp_schedule(spec: &LoadSpec) -> Vec<Vec<PlannedRequest>> {
+    let mut plan = schedule(spec);
+    for client_plan in &mut plan {
+        for p in client_plan {
+            p.req.seed &= 0xFFFF_FFFF;
+        }
+    }
+    plan
+}
+
+/// Tally of one chaos storm. `no_response` (connection died without an
+/// answer) and `digest_mismatches` (answer had wrong bytes) are the two
+/// failure classes a graceful drain must keep at zero; coded rejections
+/// are the *expected* back-pressure outcome.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    pub sent: usize,
+    pub ok: usize,
+    pub rejected_draining: usize,
+    pub rejected_other: usize,
+    pub digest_mismatches: usize,
+    pub no_response: usize,
+    pub latency_p50_ms: f64,
+    pub latency_p90_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+impl ChaosReport {
+    /// True iff every request was accounted for: a byte-correct response
+    /// or a structured rejection, nothing silently dropped or corrupted.
+    pub fn lossless(&self) -> bool {
+        self.no_response == 0
+            && self.digest_mismatches == 0
+            && self.ok + self.rejected_draining + self.rejected_other == self.sent
+    }
+
+    pub fn to_json(&self, name: &str) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(name.to_string())),
+            ("sent", Value::Num(self.sent as f64)),
+            ("ok", Value::Num(self.ok as f64)),
+            ("rejected_draining", Value::Num(self.rejected_draining as f64)),
+            ("rejected_other", Value::Num(self.rejected_other as f64)),
+            ("digest_mismatches", Value::Num(self.digest_mismatches as f64)),
+            ("no_response", Value::Num(self.no_response as f64)),
+            ("lossless", Value::Bool(self.lossless())),
+            ("latency_p50_ms", Value::Num(self.latency_p50_ms)),
+            ("latency_p90_ms", Value::Num(self.latency_p90_ms)),
+            ("latency_p99_ms", Value::Num(self.latency_p99_ms)),
+        ])
+    }
+}
+
+fn sample_req_json(req: &SampleRequest) -> Value {
+    Value::obj(vec![
+        ("cmd", Value::Str("sample".into())),
+        ("model", Value::Str(req.model.clone())),
+        ("solver", Value::Str(req.solver.clone())),
+        ("n_samples", Value::Num(req.n_samples as f64)),
+        ("seed", Value::Num(req.seed as f64)),
+        ("return_samples", Value::Bool(true)),
+    ])
+}
+
+#[derive(Default)]
+struct ClientTally {
+    sent: usize,
+    ok: usize,
+    rejected_draining: usize,
+    rejected_other: usize,
+    digest_mismatches: usize,
+    no_response: usize,
+    ok_latencies_ms: Vec<f64>,
+}
+
+/// Connect with retries — the server thread may still be binding.
+fn connect_retrying(addr: &str) -> Result<std::net::TcpStream> {
+    let deadline = Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
+                return Ok(s);
+            }
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn run_tcp_client(
+    addr: &str,
+    client_plan: &[PlannedRequest],
+    golden: &std::collections::BTreeMap<(usize, usize), u64>,
+) -> ClientTally {
+    use std::io::{BufRead, BufReader, Write};
+    let mut tally = ClientTally { sent: client_plan.len(), ..ClientTally::default() };
+    let stream = match connect_retrying(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            tally.no_response = client_plan.len();
+            return tally;
+        }
+    };
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => {
+            tally.no_response = client_plan.len();
+            return tally;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+    for (done, p) in client_plan.iter().enumerate() {
+        let line = sample_req_json(&p.req).to_string_compact();
+        let started = Instant::now();
+        let mut resp = String::new();
+        let io_ok = writer
+            .write_all(line.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush())
+            .and_then(|_| reader.read_line(&mut resp))
+            .map(|n| n > 0)
+            .unwrap_or(false);
+        if !io_ok {
+            // Connection died mid-request: this and every remaining
+            // request got no answer — the silent-drop failure class.
+            tally.no_response = client_plan.len() - done;
+            break;
+        }
+        let latency_ms = started.elapsed().as_secs_f64() * 1e3;
+        let v = match Value::parse(&resp) {
+            Ok(v) => v,
+            Err(_) => {
+                tally.no_response += 1;
+                continue;
+            }
+        };
+        let ok = v.get("ok").and_then(|b| b.as_bool()).unwrap_or(false);
+        if !ok {
+            let code = v
+                .get_opt("code")
+                .and_then(|c| c.as_str().ok())
+                .unwrap_or("");
+            if code == "draining" {
+                tally.rejected_draining += 1;
+            } else {
+                tally.rejected_other += 1;
+            }
+            continue;
+        }
+        let digest = v
+            .get("samples")
+            .and_then(|s| s.as_arr())
+            .and_then(|rows| {
+                rows.iter()
+                    .map(|r| r.as_f32_vec())
+                    .collect::<Result<Vec<Vec<f32>>>>()
+            })
+            .map(|rows| sample_digest(&rows));
+        match digest {
+            Ok(d) if golden.get(&(p.client, p.index)) == Some(&d) => {
+                tally.ok += 1;
+                tally.ok_latencies_ms.push(latency_ms);
+            }
+            _ => tally.digest_mismatches += 1,
+        }
+    }
+    tally
+}
+
+/// Fire a plan at a live JSONL server over TCP, one connection per client,
+/// verifying each successful response byte-for-byte against `golden`
+/// (produced by [`run_plan_sequential`] from the same plan). Lifecycle
+/// events mid-storm (drain, reload) are the caller's business — spawn a
+/// trigger thread alongside this call.
+pub fn run_tcp(addr: &str, plan: &[Vec<PlannedRequest>], golden: &LoadRun) -> Result<ChaosReport> {
+    let expected: std::collections::BTreeMap<(usize, usize), u64> = golden
+        .outcomes
+        .iter()
+        .map(|o| ((o.client, o.index), o.digest))
+        .collect();
+    let tallies: Vec<ClientTally> = std::thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .iter()
+            .map(|client_plan| {
+                let expected = &expected;
+                s.spawn(move || run_tcp_client(addr, client_plan, expected))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_default())
+            .collect()
+    });
+    let mut report = ChaosReport::default();
+    let mut lat = Percentiles::default();
+    for t in tallies {
+        report.sent += t.sent;
+        report.ok += t.ok;
+        report.rejected_draining += t.rejected_draining;
+        report.rejected_other += t.rejected_other;
+        report.digest_mismatches += t.digest_mismatches;
+        report.no_response += t.no_response;
+        for l in t.ok_latencies_ms {
+            lat.record(l);
+        }
+    }
+    report.latency_p50_ms = lat.quantile(0.5);
+    report.latency_p90_ms = lat.quantile(0.9);
+    report.latency_p99_ms = lat.quantile(0.99);
+    Ok(report)
+}
+
+/// Run the concurrent schedule while `reloads` hot config re-installs
+/// fire in the background (full route retirement mid-storm). The result
+/// must stay byte-identical to a quiet run — callers assert via
+/// [`LoadRun::bitwise_matches`].
+pub fn run_with_reloads(
+    coord: &Arc<Coordinator>,
+    spec: &LoadSpec,
+    reloads: usize,
+) -> Result<LoadRun> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let stop = Arc::new(AtomicBool::new(false));
+    let reloader = {
+        let coord = coord.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            for _ in 0..reloads {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                coord.reload_serve(coord.serve_cfg());
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            }
+        })
+    };
+    let result = run(coord, spec);
+    stop.store(true, Ordering::SeqCst);
+    let _ = reloader.join();
+    result
 }
 
 #[cfg(test)]

@@ -1,0 +1,273 @@
+//! Lifecycle primitives for daemon-grade serving (DESIGN.md §12):
+//! cooperative cancellation tokens, deterministic retry backoff, and the
+//! process signal flags that drive graceful drain and config hot-reload.
+//!
+//! These are deliberately tiny and dependency-free:
+//!
+//! * [`CancelToken`] — a cloneable atomic flag checked at loop
+//!   *checkpoints* (trainer iterations, eval grid cells). Cancellation is
+//!   cooperative: the holder observes the flag at the next checkpoint and
+//!   returns the [`CANCELLED`] marker error; nothing is ever killed
+//!   mid-step.
+//! * [`RetryPolicy`] — a *pure function* from attempt number to backoff
+//!   delay (capped exponential). Keeping it side-effect-free is what makes
+//!   the backoff sequence testable under a fake clock: tests call
+//!   [`RetryPolicy::delay`] directly, the job queue applies the same
+//!   function to real deadlines.
+//! * [`signals`] — `#[cfg(unix)]` SIGTERM/SIGINT → drain flag,
+//!   SIGHUP → reload flag. Handlers only flip static atomics
+//!   (async-signal-safe); a watcher thread polls and acts.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Marker string carried by cancellation errors; [`is_cancelled_err`]
+/// matches on it so the job layer can tell "cancelled" from "failed"
+/// through an `anyhow::Error` chain.
+pub const CANCELLED: &str = "cancelled";
+
+/// A cloneable cooperative-cancellation flag. All clones share one atomic;
+/// once cancelled it stays cancelled.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; observers see it at their next
+    /// checkpoint.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    /// Checkpoint helper: error out with the [`CANCELLED`] marker if
+    /// cancellation was requested.
+    pub fn bail_if_cancelled(&self) -> anyhow::Result<()> {
+        if self.is_cancelled() {
+            Err(anyhow::anyhow!(CANCELLED))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("cancelled", &self.is_cancelled())
+            .finish()
+    }
+}
+
+/// True iff `err` is (or wraps) a cooperative-cancellation bail-out.
+pub fn is_cancelled_err(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.to_string() == CANCELLED)
+}
+
+/// Capped exponential backoff for re-enqueued failed jobs. The delay for
+/// attempt `k` (1-based: the first *retry* is attempt 1) is
+/// `min(base_ms << (k - 1), cap_ms)`; `max_attempts` bounds the total
+/// number of retries per job key.
+///
+/// `delay` is a pure function of the policy and the attempt number — the
+/// deterministic sequence the lifecycle tests pin without sleeping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries per job after the initial run (0 disables retry).
+    pub max_attempts: u32,
+    /// First-retry delay in milliseconds.
+    pub base_ms: u64,
+    /// Upper bound on any single delay in milliseconds.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    /// Retry is opt-in: the default policy performs no retries, so
+    /// existing job behavior is unchanged unless configured.
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 0, base_ms: 250, cap_ms: 30_000 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (1-based). Attempt 0 (the
+    /// initial run) has no delay.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        if attempt == 0 {
+            return Duration::ZERO;
+        }
+        let shift = (attempt - 1).min(20);
+        let ms = self.base_ms.saturating_mul(1u64 << shift).min(self.cap_ms);
+        Duration::from_millis(ms)
+    }
+
+    /// True iff a job that has already consumed `attempts` retries may be
+    /// re-enqueued once more.
+    pub fn allows(&self, attempts: u32) -> bool {
+        attempts < self.max_attempts
+    }
+}
+
+/// Process-level signal flags (Unix). SIGTERM/SIGINT request a graceful
+/// drain; SIGHUP requests a config reload. Handlers only set atomics —
+/// the serve loop's watcher thread polls [`drain_requested`] /
+/// [`take_reload_request`] and runs the actual (non-signal-safe) work.
+#[cfg(unix)]
+pub mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static DRAIN: AtomicBool = AtomicBool::new(false);
+    static RELOAD: AtomicBool = AtomicBool::new(false);
+
+    const SIGHUP: i32 = 1;
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        /// libc `signal(2)`. A typed handler pointer keeps the
+        /// declaration cast-free; glibc semantics are SA_RESTART, so a
+        /// blocked `accept` resumes — drains must wake it explicitly
+        /// (the server self-connects to its own listener).
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_drain_signal(_signum: i32) {
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" fn on_reload_signal(_signum: i32) {
+        RELOAD.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handlers. Call once from `repro serve` before
+    /// accepting connections.
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_drain_signal);
+            signal(SIGINT, on_drain_signal);
+            signal(SIGHUP, on_reload_signal);
+        }
+    }
+
+    /// True once SIGTERM or SIGINT has been received (level-triggered:
+    /// drain is terminal, so this never resets).
+    pub fn drain_requested() -> bool {
+        DRAIN.load(Ordering::SeqCst)
+    }
+
+    /// Test/CLI hook: behave as if SIGTERM arrived.
+    pub fn request_drain() {
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+
+    /// Consume a pending SIGHUP (edge-triggered: each reload request is
+    /// handled once).
+    pub fn take_reload_request() -> bool {
+        RELOAD.swap(false, Ordering::SeqCst)
+    }
+
+    /// Test/CLI hook: behave as if SIGHUP arrived.
+    pub fn request_reload() {
+        RELOAD.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Non-Unix stub: no signals, flags never fire. The in-band protocol
+/// cmds (`drain` / `reload`) still work everywhere.
+#[cfg(not(unix))]
+pub mod signals {
+    pub fn install() {}
+    pub fn drain_requested() -> bool {
+        false
+    }
+    pub fn request_drain() {}
+    pub fn take_reload_request() -> bool {
+        false
+    }
+    pub fn request_reload() {}
+}
+
+/// A draining latch shared between the accept loop, connection handlers
+/// and the job planes: once flipped, new work is rejected with structured
+/// `draining` errors while in-flight work finishes.
+#[derive(Clone, Default)]
+pub struct DrainGate {
+    draining: Arc<AtomicBool>,
+}
+
+impl DrainGate {
+    pub fn new() -> DrainGate {
+        DrainGate::default()
+    }
+
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_is_shared_and_sticky() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!t.is_cancelled());
+        assert!(clone.bail_if_cancelled().is_ok());
+        clone.cancel();
+        assert!(t.is_cancelled());
+        let err = t.bail_if_cancelled().unwrap_err();
+        assert!(is_cancelled_err(&err));
+        t.cancel(); // idempotent
+        assert!(clone.is_cancelled());
+    }
+
+    #[test]
+    fn cancelled_err_detection_survives_context() {
+        use anyhow::Context;
+        let err: anyhow::Error = anyhow::anyhow!(CANCELLED);
+        let wrapped = Err::<(), _>(err).context("train job 3").unwrap_err();
+        assert!(is_cancelled_err(&wrapped));
+        assert!(!is_cancelled_err(&anyhow::anyhow!("solver diverged")));
+    }
+
+    #[test]
+    fn retry_backoff_is_deterministic_and_capped() {
+        let p = RetryPolicy { max_attempts: 5, base_ms: 100, cap_ms: 1_000 };
+        let delays: Vec<u64> =
+            (0..7).map(|k| p.delay(k).as_millis() as u64).collect();
+        // 0 (initial run), then 100, 200, 400, 800, capped at 1000.
+        assert_eq!(delays, vec![0, 100, 200, 400, 800, 1_000, 1_000]);
+        assert!(p.allows(0));
+        assert!(p.allows(4));
+        assert!(!p.allows(5));
+        // huge attempt numbers neither overflow nor exceed the cap
+        assert_eq!(p.delay(64), Duration::from_millis(1_000));
+        // retry off by default
+        assert!(!RetryPolicy::default().allows(0));
+    }
+
+    #[test]
+    fn drain_gate_latches() {
+        let g = DrainGate::new();
+        let peer = g.clone();
+        assert!(!g.is_draining());
+        peer.begin_drain();
+        assert!(g.is_draining());
+    }
+}

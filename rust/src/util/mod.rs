@@ -1,9 +1,13 @@
-//! Small shared utilities: deterministic RNG, wall-clock timers, logging.
+//! Small shared utilities: deterministic RNG, wall-clock timers, logging,
+//! and the daemon lifecycle primitives (cancel tokens, retry backoff,
+//! signal flags).
 
+pub mod lifecycle;
 pub mod rng;
 pub mod threads;
 pub mod timer;
 
+pub use lifecycle::{CancelToken, DrainGate, RetryPolicy};
 pub use rng::Rng;
 pub use timer::Timer;
 

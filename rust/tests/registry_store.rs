@@ -8,13 +8,39 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use bespoke_flow::json::Value;
 use bespoke_flow::registry::{
-    ArtifactMeta, JobRunner, JobState, META_SCHEMA_VERSION, Registry, TrainedArtifact,
+    ArtifactMeta, JobCtx, JobRunner, JobState, META_SCHEMA_VERSION, Registry, TrainedArtifact,
     TrainJobManager, TrainJobSpec,
 };
 use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
 use bespoke_flow::solvers::SolverSpec;
 use bespoke_flow::Result;
+
+/// Minimal spec codec for the fake runners (the real one lives on
+/// `ZooRunner`; tests only need round-trip fidelity for drain persistence).
+fn fake_spec_to_json(spec: &TrainJobSpec) -> Value {
+    Value::obj(vec![
+        ("model", Value::Str(spec.model.clone())),
+        ("base", Value::Str(spec.base.name().to_string())),
+        ("n", Value::Num(spec.n as f64)),
+        ("ablation", Value::Str(spec.ablation.clone())),
+        ("family", Value::Str(spec.family.name().to_string())),
+    ])
+}
+
+fn fake_spec_from_json(v: &Value) -> Result<TrainJobSpec> {
+    Ok(TrainJobSpec {
+        model: v.get("model")?.as_str()?.to_string(),
+        base: Base::parse(v.get("base")?.as_str()?)?,
+        n: v.get("n")?.as_usize()?,
+        ablation: v.get("ablation")?.as_str()?.to_string(),
+        family: Family::parse(v.get("family")?.as_str()?)?,
+        window: None,
+        iters: None,
+        seed: None,
+    })
+}
 
 /// Fresh temp dir per test (process id + test-local name keeps parallel
 /// test binaries and tests apart).
@@ -411,9 +437,18 @@ impl JobRunner for SlowRunner {
         registry.register(&out.theta, &out.meta)
     }
 
+    fn spec_to_json(&self, spec: &TrainJobSpec) -> Value {
+        fake_spec_to_json(spec)
+    }
+
+    fn spec_from_json(&self, v: &Value) -> Result<TrainJobSpec> {
+        fake_spec_from_json(v)
+    }
+
     fn run(
         &self,
         spec: &TrainJobSpec,
+        _ctx: &JobCtx,
         progress: &mut dyn FnMut(&bespoke_flow::bespoke::TrainProgress),
     ) -> Result<TrainedArtifact> {
         self.runs.fetch_add(1, Ordering::SeqCst);
@@ -557,9 +592,18 @@ impl JobRunner for FailingRunner {
         registry.register(&out.theta, &out.meta)
     }
 
+    fn spec_to_json(&self, spec: &TrainJobSpec) -> Value {
+        fake_spec_to_json(spec)
+    }
+
+    fn spec_from_json(&self, v: &Value) -> Result<TrainJobSpec> {
+        fake_spec_from_json(v)
+    }
+
     fn run(
         &self,
         _spec: &TrainJobSpec,
+        _ctx: &JobCtx,
         _progress: &mut dyn FnMut(&bespoke_flow::bespoke::TrainProgress),
     ) -> Result<TrainedArtifact> {
         anyhow::bail!("no loss-grad artifact for this model")
