@@ -202,6 +202,37 @@ impl Default for ScheduleConfig {
     }
 }
 
+/// Observability knobs (DESIGN.md §13): request tracing and the JSONL
+/// lifecycle event sink. Tracing is on by default — recording is O(1) into
+/// a preallocated ring and never touches sample bytes.
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Request tracing on/off. Off assigns no request ids and records no
+    /// spans; sample bytes are identical either way.
+    pub trace: bool,
+    /// Span ring capacity (spans, not requests). Overflow overwrites the
+    /// oldest span and bumps the `trace_dropped` counter.
+    pub trace_ring: usize,
+    /// Trace every Nth request (1 = all).
+    pub trace_sample_n: u64,
+    /// JSONL lifecycle event log path ("" = disabled).
+    pub event_log: String,
+    /// Rotate the event log (to `<name>.1`) past this size.
+    pub event_log_max_bytes: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace: true,
+            trace_ring: 4096,
+            trace_sample_n: 1,
+            event_log: String::new(),
+            event_log_max_bytes: 1 << 20,
+        }
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     pub serve: ServeConfig,
@@ -210,6 +241,7 @@ pub struct Config {
     pub registry: RegistryConfig,
     pub quality: QualityConfig,
     pub schedule: ScheduleConfig,
+    pub obs: ObsConfig,
     /// Directory for trained thetas and experiment reports.
     pub out_dir: String,
 }
@@ -342,6 +374,32 @@ impl Config {
                         }
                     }
                 }
+                "obs" => {
+                    for (k, val) in sv.as_obj()? {
+                        match k.as_str() {
+                            "trace" => self.obs.trace = val.as_bool()?,
+                            "trace_ring" => {
+                                let n = val.as_usize()?;
+                                if n == 0 {
+                                    anyhow::bail!("obs trace_ring must be >= 1");
+                                }
+                                self.obs.trace_ring = n;
+                            }
+                            "trace_sample_n" => {
+                                let n = val.as_usize()? as u64;
+                                if n == 0 {
+                                    anyhow::bail!("obs trace_sample_n must be >= 1");
+                                }
+                                self.obs.trace_sample_n = n;
+                            }
+                            "event_log" => self.obs.event_log = val.as_str()?.to_string(),
+                            "event_log_max_bytes" => {
+                                self.obs.event_log_max_bytes = val.as_usize()? as u64
+                            }
+                            _ => anyhow::bail!("unknown obs key {k:?}"),
+                        }
+                    }
+                }
                 "out_dir" => self.out_dir = sv.as_str()?.to_string(),
                 _ => anyhow::bail!("unknown config section {section:?}"),
             }
@@ -421,6 +479,36 @@ mod tests {
         assert!(cfg.apply(&v4).is_err());
         let v5 = Value::parse(r#"{"schedule": {"cron": "* * * * *"}}"#).unwrap();
         assert!(cfg.apply(&v5).is_err());
+        let v6 = Value::parse(r#"{"obs": {"ring": 8}}"#).unwrap();
+        assert!(cfg.apply(&v6).is_err());
+    }
+
+    #[test]
+    fn obs_section() {
+        let mut cfg = Config::default();
+        assert!(cfg.obs.trace);
+        assert_eq!(cfg.obs.trace_ring, 4096);
+        assert_eq!(cfg.obs.trace_sample_n, 1);
+        assert!(cfg.obs.event_log.is_empty());
+        let v = Value::parse(
+            r#"{"obs": {"trace": false, "trace_ring": 128, "trace_sample_n": 10,
+                        "event_log": "/tmp/ev.jsonl", "event_log_max_bytes": 65536}}"#,
+        )
+        .unwrap();
+        cfg.apply(&v).unwrap();
+        assert!(!cfg.obs.trace);
+        assert_eq!(cfg.obs.trace_ring, 128);
+        assert_eq!(cfg.obs.trace_sample_n, 10);
+        assert_eq!(cfg.obs.event_log, "/tmp/ev.jsonl");
+        assert_eq!(cfg.obs.event_log_max_bytes, 65_536);
+        // Zero ring / sample_n are config errors, not silent clamps.
+        for bad in [
+            r#"{"obs": {"trace_ring": 0}}"#,
+            r#"{"obs": {"trace_sample_n": 0}}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(cfg.apply(&v).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

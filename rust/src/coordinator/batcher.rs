@@ -44,6 +44,7 @@ use crate::quality::{Budget, Frontier, FrontierCache};
 use crate::registry::Registry;
 use crate::solvers::{Sampler, SolveSession, SolverSpec};
 use crate::tensor::Tensor;
+use crate::util::obs::Stage;
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -112,6 +113,10 @@ struct Job {
     rng: Rng,
     want_samples: bool,
     enqueued: Instant,
+    /// Request trace id when this chunk's request is sampled for tracing
+    /// (DESIGN.md §13). Observation only: carries no influence on RNG
+    /// streams, chunking, or fusion grouping.
+    trace_id: Option<u64>,
     reply: SyncSender<Result<ChunkDone>>,
 }
 
@@ -441,10 +446,21 @@ impl Coordinator {
     /// against a freshly resolved route instead of surfacing the internal
     /// "workers are gone" state to the client.
     pub fn submit(&self, req: &SampleRequest) -> Result<SampleResponse> {
+        self.submit_traced(req, None)
+    }
+
+    /// [`Coordinator::submit`] with a request trace id (assigned by the
+    /// server at accept); the id rides each chunk so the fusion plane can
+    /// record enqueue → fused-launch → solve → scatter spans for it.
+    pub fn submit_traced(
+        &self,
+        req: &SampleRequest,
+        trace_id: Option<u64>,
+    ) -> Result<SampleResponse> {
         const MAX_ROUTE_RETRIES: usize = 3;
         let mut attempt = 0;
         loop {
-            match self.submit_attempt(req) {
+            match self.submit_attempt(req, trace_id) {
                 Err(e)
                     if e.downcast_ref::<RouteRetired>().is_some()
                         && attempt < MAX_ROUTE_RETRIES =>
@@ -457,7 +473,11 @@ impl Coordinator {
         }
     }
 
-    fn submit_attempt(&self, req: &SampleRequest) -> Result<SampleResponse> {
+    fn submit_attempt(
+        &self,
+        req: &SampleRequest,
+        trace_id: Option<u64>,
+    ) -> Result<SampleResponse> {
         let started = Instant::now();
         let (solver, spec) = match &req.budget {
             Some(budget) => {
@@ -487,11 +507,15 @@ impl Coordinator {
                 rng: root_rng.fork(chunk_idx),
                 want_samples: req.return_samples,
                 enqueued: Instant::now(),
+                trace_id,
                 reply: tx,
             };
             if queue.workers_alive.load(Ordering::SeqCst) == 0 {
                 self.retire_route_if(&key, &queue);
                 return Err(anyhow::Error::new(RouteRetired(key.clone())));
+            }
+            if let Some(id) = trace_id {
+                self.metrics.tracer().record(id, Stage::Enqueue, chunk_idx, rows as u64);
             }
             queue.push(job);
             // Close the check-then-push race: if the last worker died after
@@ -813,6 +837,22 @@ fn execute_fused<'s>(
 ) {
     let used: usize = jobs.iter().map(|j| j.rows).sum();
 
+    // Fused-launch spans: every traced member records the launch under one
+    // shared group id — the shared id is how a trace query reconstructs
+    // which peer requests rode the same launch (DESIGN.md §13).
+    let tracer = metrics.tracer();
+    let launch_group = jobs
+        .iter()
+        .any(|j| j.trace_id.is_some())
+        .then(|| tracer.next_group_id());
+    if let Some(group) = launch_group {
+        for j in jobs.iter() {
+            if let Some(id) = j.trace_id {
+                tracer.record(id, Stage::FuseLaunch, group, used as u64);
+            }
+        }
+    }
+
     let counting = CountingModel::new(model);
     let solve_started = Instant::now();
     let result = stack_noise(&mut jobs, b, d)
@@ -820,6 +860,14 @@ fn execute_fused<'s>(
     let solve_ms = solve_started.elapsed().as_secs_f64() * 1e3;
     let nfe = counting.nfe();
     metrics.record_batch(key, used.min(b), b, nfe);
+
+    if let Some(group) = launch_group {
+        for j in jobs.iter() {
+            if let Some(id) = j.trace_id {
+                tracer.record(id, Stage::Solve, group, (solve_ms * 1e3) as u64);
+            }
+        }
+    }
 
     match result {
         Ok(out) => {
@@ -832,6 +880,8 @@ fn execute_fused<'s>(
                         .collect::<Vec<_>>()
                 });
                 offset += j.rows;
+                let trace = j.trace_id;
+                let rows = j.rows;
                 let _ = j.reply.send(Ok(ChunkDone {
                     samples,
                     nfe,
@@ -839,6 +889,9 @@ fn execute_fused<'s>(
                     solve_ms,
                     fused_rows: used as u64,
                 }));
+                if let (Some(id), Some(group)) = (trace, launch_group) {
+                    tracer.record(id, Stage::Scatter, group, rows as u64);
+                }
             }
         }
         Err(e) => {

@@ -1,11 +1,20 @@
-//! Serving metrics: per-(model, solver) counters and latency distributions.
+//! Serving metrics: per-(model, solver) counters, bounded latency
+//! histograms, windowed throughput, the request tracer, and exposition
+//! (JSON + Prometheus text + optional JSONL lifecycle event sink).
+//!
+//! Memory is bounded by construction: each route holds three fixed-size
+//! [`Histogram`]s and one [`WindowCounter`] — no per-request growth
+//! (DESIGN.md §13).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use anyhow::Result;
+
+use crate::config::ObsConfig;
 use crate::json::Value;
-use crate::util::timer::Percentiles;
+use crate::util::obs::{EventLog, Histogram, Tracer, WindowCounter};
 
 #[derive(Default)]
 struct Entry {
@@ -16,11 +25,24 @@ struct Entry {
     rows_used: u64,
     rows_capacity: u64,
     nfe: u64,
-    latency: Percentiles,
-    queue: Percentiles,
+    latency: Histogram,
+    queue: Histogram,
     /// Per-request solver wall time (the compute share of latency; the
     /// fused-launch time the request's slowest chunk rode in).
-    solve: Percentiles,
+    solve: Histogram,
+    /// Samples completed per one-second slot, for windowed rates.
+    sample_rate: WindowCounter,
+}
+
+/// Route totals used by loadgen's post-run reconciliation (client-side
+/// accounting must match these deltas exactly — zero silent drops).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Totals {
+    pub requests: u64,
+    pub samples: u64,
+    /// Rows actually solved across all batch launches (pad rows excluded);
+    /// every requested row is solved exactly once, so this tracks samples.
+    pub rows_used: u64,
 }
 
 pub struct Metrics {
@@ -29,6 +51,19 @@ pub struct Metrics {
     /// Named lifecycle counters (train_jobs_submitted/coalesced/done/failed,
     /// hot_swap, ...), surfaced under `"events"` in the snapshot.
     events: Mutex<BTreeMap<String, u64>>,
+    /// Request tracer (span ring). Lives here because `Metrics` is the one
+    /// handle shared by the server, the coordinator and the job planes.
+    tracer: Tracer,
+    /// Optional JSONL sink for lifecycle events (drain / reload / retry /
+    /// cancel / hot-swap), attached via the `[obs]` config table.
+    event_log: Mutex<Option<Arc<EventLog>>>,
+}
+
+/// Lifecycle events mirrored to the JSONL sink when one is attached.
+fn is_lifecycle_event(name: &str) -> bool {
+    matches!(name, "server_drains" | "serve_reloads" | "hot_swap")
+        || name.ends_with("_jobs_retried")
+        || name.ends_with("_jobs_cancelled")
 }
 
 impl Default for Metrics {
@@ -37,20 +72,55 @@ impl Default for Metrics {
             started: Instant::now(),
             inner: Mutex::new(BTreeMap::new()),
             events: Mutex::new(BTreeMap::new()),
+            tracer: Tracer::default(),
+            event_log: Mutex::new(None),
         }
     }
 }
 
 impl Metrics {
+    /// The request tracer (span ring) shared by server, coordinator and
+    /// job planes.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Apply the `[obs]` config table: tracer on/off, ring size, sampling,
+    /// and the optional JSONL event sink. Safe to call again on reload.
+    pub fn apply_obs(&self, cfg: &ObsConfig) -> Result<()> {
+        self.tracer.configure(cfg.trace, cfg.trace_ring, cfg.trace_sample_n);
+        let sink = if cfg.event_log.is_empty() {
+            None
+        } else {
+            Some(Arc::new(EventLog::open(
+                std::path::Path::new(&cfg.event_log),
+                cfg.event_log_max_bytes,
+            )?))
+        };
+        *self.event_log.lock().unwrap() = sink;
+        Ok(())
+    }
+
+    fn now_sec(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
     /// Bump a named lifecycle counter.
     pub fn record_event(&self, name: &str) {
         self.record_event_add(name, 1);
     }
 
     /// Add `n` to a named counter (e.g. `fused_rows` grows by the fused
-    /// batch's row count per flush, not by 1).
+    /// batch's row count per flush, not by 1). Lifecycle events are
+    /// mirrored to the JSONL sink when one is attached.
     pub fn record_event_add(&self, name: &str, n: u64) {
         *self.events.lock().unwrap().entry(name.to_string()).or_default() += n;
+        if is_lifecycle_event(name) {
+            let sink = self.event_log.lock().unwrap().clone();
+            if let Some(log) = sink {
+                log.log(name, &[("n", Value::Num(n as f64))]);
+            }
+        }
     }
 
     /// Current value of a named counter (0 if never recorded).
@@ -75,53 +145,180 @@ impl Metrics {
         queue_ms: f64,
         solve_ms: f64,
     ) {
+        let now = self.now_sec();
         let mut g = self.inner.lock().unwrap();
         let e = g.entry(key.to_string()).or_default();
         e.requests += 1;
         e.samples += n_samples as u64;
-        e.latency.record(latency_ms);
-        e.queue.record(queue_ms);
-        e.solve.record(solve_ms);
+        e.latency.record_ms(latency_ms);
+        e.queue.record_ms(queue_ms);
+        e.solve.record_ms(solve_ms);
+        e.sample_rate.record_at(now, n_samples as u64);
     }
 
-    pub fn snapshot(&self) -> Value {
+    /// Request/sample/row totals summed across routes (reconciliation).
+    pub fn totals(&self) -> Totals {
         let g = self.inner.lock().unwrap();
+        let mut t = Totals::default();
+        for e in g.values() {
+            t.requests += e.requests;
+            t.samples += e.samples;
+            t.rows_used += e.rows_used;
+        }
+        t
+    }
+
+    /// JSON snapshot. The pre-§13 keys keep their exact names and meaning,
+    /// except `samples_per_sec`, which now reports the trailing-60 s
+    /// windowed rate (the lifetime average was meaningless after any idle
+    /// stretch). Additions: `samples_per_sec_5m`, `latency_mean_ms`,
+    /// `latency_max_ms`, `latency_buckets` (`[le_ms, count]` pairs), and a
+    /// top-level `obs` section with tracer state.
+    pub fn snapshot(&self) -> Value {
+        let now = self.now_sec();
+        let mut g = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64();
         let mut per_key = Vec::new();
-        for (k, e) in g.iter() {
+        for (k, e) in g.iter_mut() {
             let fill = if e.rows_capacity > 0 {
                 e.rows_used as f64 / e.rows_capacity as f64
             } else {
                 0.0
             };
             per_key.push((
-                k.as_str(),
+                k.clone(),
                 Value::obj(vec![
                     ("requests", Value::Num(e.requests as f64)),
                     ("samples", Value::Num(e.samples as f64)),
                     ("batches", Value::Num(e.batches as f64)),
                     ("batch_fill", Value::Num(fill)),
                     ("nfe", Value::Num(e.nfe as f64)),
-                    ("samples_per_sec", Value::Num(e.samples as f64 / uptime.max(1e-9))),
-                    ("latency_p50_ms", Value::Num(e.latency.quantile(0.5))),
-                    ("latency_p99_ms", Value::Num(e.latency.quantile(0.99))),
-                    ("queue_p50_ms", Value::Num(e.queue.quantile(0.5))),
-                    ("solve_p50_ms", Value::Num(e.solve.quantile(0.5))),
-                    ("solve_p99_ms", Value::Num(e.solve.quantile(0.99))),
+                    ("samples_per_sec", Value::Num(e.sample_rate.rate_at(now, 60))),
+                    ("samples_per_sec_5m", Value::Num(e.sample_rate.rate_at(now, 300))),
+                    ("latency_p50_ms", Value::Num(e.latency.quantile_ms(0.5))),
+                    ("latency_p99_ms", Value::Num(e.latency.quantile_ms(0.99))),
+                    ("latency_mean_ms", Value::Num(e.latency.mean_ms())),
+                    ("latency_max_ms", Value::Num(e.latency.max_ms())),
+                    ("latency_buckets", e.latency.buckets_json()),
+                    ("queue_p50_ms", Value::Num(e.queue.quantile_ms(0.5))),
+                    ("solve_p50_ms", Value::Num(e.solve.quantile_ms(0.5))),
+                    ("solve_p99_ms", Value::Num(e.solve.quantile_ms(0.99))),
                 ]),
             ));
         }
+        let per_key_refs: Vec<(&str, Value)> =
+            per_key.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
         let events = self.events.lock().unwrap();
         let events_json: Vec<(&str, Value)> = events
             .iter()
             .map(|(k, &v)| (k.as_str(), Value::Num(v as f64)))
             .collect();
+        let obs = Value::obj(vec![
+            ("trace_enabled", Value::Bool(self.tracer.enabled())),
+            ("trace_ring", Value::Num(self.tracer.ring_cap() as f64)),
+            ("trace_sample_n", Value::Num(self.tracer.sample_n() as f64)),
+            ("trace_spans", Value::Num(self.tracer.span_count() as f64)),
+            ("trace_dropped", Value::Num(self.tracer.dropped() as f64)),
+        ]);
         Value::obj(vec![
             ("ok", Value::Bool(true)),
             ("uptime_secs", Value::Num(uptime)),
-            ("per_route", Value::obj(per_key)),
+            ("per_route", Value::obj(per_key_refs)),
             ("events", Value::obj(events_json)),
+            ("obs", obs),
         ])
+    }
+
+    /// Prometheus text exposition (served by `metrics_prom` /
+    /// `repro server metrics --format prom`). Histogram buckets are
+    /// cumulative with a trailing `+Inf`, per the exposition format.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        fn esc(label: &str) -> String {
+            label.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+        }
+        fn hist(out: &mut String, name: &str, route: &str, h: &Histogram) {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let mut cum = 0u64;
+            for (le, c) in h.nonzero_buckets() {
+                cum += c;
+                let _ = writeln!(out, "{name}_bucket{{route=\"{route}\",le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{route=\"{route}\",le=\"+Inf\"}} {}",
+                h.count()
+            );
+            let _ = writeln!(out, "{name}_sum{{route=\"{route}\"}} {}", h.sum_ms());
+            let _ = writeln!(out, "{name}_count{{route=\"{route}\"}} {}", h.count());
+        }
+        let now = self.now_sec();
+        let mut out = String::new();
+        let _ = writeln!(out, "# TYPE bespoke_uptime_seconds gauge");
+        let _ = writeln!(
+            out,
+            "bespoke_uptime_seconds {}",
+            self.started.elapsed().as_secs_f64()
+        );
+        {
+            let mut g = self.inner.lock().unwrap();
+            for (counter, get) in [
+                ("bespoke_requests_total", 0usize),
+                ("bespoke_samples_total", 1),
+                ("bespoke_batches_total", 2),
+                ("bespoke_nfe_total", 3),
+            ] {
+                let _ = writeln!(out, "# TYPE {counter} counter");
+                for (k, e) in g.iter() {
+                    let v = match get {
+                        0 => e.requests,
+                        1 => e.samples,
+                        2 => e.batches,
+                        _ => e.nfe,
+                    };
+                    let _ = writeln!(out, "{counter}{{route=\"{}\"}} {v}", esc(k));
+                }
+            }
+            let _ = writeln!(out, "# TYPE bespoke_batch_fill_ratio gauge");
+            for (k, e) in g.iter() {
+                let fill = if e.rows_capacity > 0 {
+                    e.rows_used as f64 / e.rows_capacity as f64
+                } else {
+                    0.0
+                };
+                let _ = writeln!(out, "bespoke_batch_fill_ratio{{route=\"{}\"}} {fill}", esc(k));
+            }
+            let _ = writeln!(out, "# TYPE bespoke_samples_per_sec gauge");
+            for (k, e) in g.iter_mut() {
+                let _ = writeln!(
+                    out,
+                    "bespoke_samples_per_sec{{route=\"{}\"}} {}",
+                    esc(k),
+                    e.sample_rate.rate_at(now, 60)
+                );
+            }
+            for (name, pick) in [
+                ("bespoke_request_latency_ms", 0usize),
+                ("bespoke_queue_ms", 1),
+                ("bespoke_solve_ms", 2),
+            ] {
+                for (k, e) in g.iter() {
+                    let h = match pick {
+                        0 => &e.latency,
+                        1 => &e.queue,
+                        _ => &e.solve,
+                    };
+                    hist(&mut out, name, &esc(k), h);
+                }
+            }
+        }
+        let _ = writeln!(out, "# TYPE bespoke_events_total counter");
+        for (k, v) in self.events.lock().unwrap().iter() {
+            let _ = writeln!(out, "bespoke_events_total{{event=\"{}\"}} {v}", esc(k));
+        }
+        let _ = writeln!(out, "# TYPE bespoke_trace_dropped_total counter");
+        let _ = writeln!(out, "bespoke_trace_dropped_total {}", self.tracer.dropped());
+        out
     }
 }
 
@@ -144,6 +341,22 @@ mod tests {
         assert!((fill - 112.0 / 128.0).abs() < 1e-9);
         assert!(route.get("latency_p50_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(route.get("solve_p50_ms").unwrap().as_f64().unwrap() >= 6.0);
+        // §13 additions ride alongside the backward-compatible keys.
+        assert!(!route.get("latency_buckets").unwrap().as_arr().unwrap().is_empty());
+        assert!(snap.get("obs").unwrap().get("trace_enabled").is_ok());
+    }
+
+    #[test]
+    fn samples_per_sec_is_windowed_not_lifetime() {
+        let m = Metrics::default();
+        m.record_request("m/rk2", 120, 1.0, 0.1, 0.5);
+        let snap = m.snapshot();
+        let route = snap.get("per_route").unwrap().get("m/rk2").unwrap();
+        // 120 samples in the first (partial) second of a fresh counter:
+        // the windowed rate reports ~120/s, not 120/uptime→∞ or a
+        // lifetime-diluted figure.
+        let rate = route.get("samples_per_sec").unwrap().as_f64().unwrap();
+        assert!((rate - 120.0).abs() < 1e-9, "rate {rate}");
     }
 
     #[test]
@@ -161,5 +374,44 @@ mod tests {
         let ev = snap.get("events").unwrap();
         assert_eq!(ev.get("hot_swap").unwrap().as_usize().unwrap(), 2);
         assert_eq!(ev.get("train_jobs_done").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn totals_sum_routes() {
+        let m = Metrics::default();
+        m.record_request("a", 4, 1.0, 0.1, 0.5);
+        m.record_request("b", 6, 1.0, 0.1, 0.5);
+        m.record_batch("a", 4, 8, 10);
+        m.record_batch("b", 6, 8, 10);
+        let t = m.totals();
+        assert_eq!((t.requests, t.samples, t.rows_used), (2, 10, 10));
+    }
+
+    #[test]
+    fn prometheus_text_parses() {
+        let m = Metrics::default();
+        m.record_request("m/rk2:n=4", 8, 3.5, 0.2, 2.0);
+        m.record_batch("m/rk2:n=4", 8, 8, 32);
+        m.record_event("hot_swap");
+        let text = m.prometheus_text();
+        // Minimal format check: every non-comment line is `name{...} value`
+        // or `name value`, values parse as f64, histograms end with +Inf.
+        let mut saw_inf = false;
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# TYPE "), "bad comment: {line}");
+                continue;
+            }
+            let (name_part, value) = line.rsplit_once(' ').expect("name value");
+            assert!(value.parse::<f64>().is_ok(), "bad value in: {line}");
+            if name_part.contains('{') {
+                assert!(name_part.ends_with('}'), "bad labels in: {line}");
+            }
+            if name_part.contains("le=\"+Inf\"") {
+                saw_inf = true;
+            }
+        }
+        assert!(saw_inf, "histogram without +Inf bucket");
+        assert!(text.contains("bespoke_requests_total{route=\"m/rk2:n=4\"} 1"));
     }
 }

@@ -23,6 +23,9 @@
 //! {"cmd": "cancel_job", "job_id": 1, "kind": "train"}
 //! {"cmd": "reload"}
 //! {"cmd": "drain"}
+//! {"cmd": "trace"}
+//! {"cmd": "trace", "id": 42, "limit": 64}
+//! {"cmd": "metrics_prom"}
 //! ```
 //!
 //! Response: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
@@ -47,6 +50,12 @@
 //! `{"ok": true, "event": "step", ...}` line per solver step (subsampled by
 //! `every`) with the intermediate states, then a final
 //! `{"ok": true, "event": "done", ...}` summary line.
+//!
+//! `trace` returns recent request spans from the tracer ring (DESIGN.md
+//! §13): with `"id"` it filters to one request (and reports the peer
+//! request ids that shared its fused launches); `"limit"` caps the span
+//! count (default 256). `metrics_prom` returns the Prometheus text
+//! exposition as a single JSON line (`{"ok": true, "body": "..."}`).
 //!
 //! `train` enqueues an asynchronous training job (`base`, `ablation`,
 //! `family`, `window`, `iters`, `seed` optional; defaults rk2 / full /
@@ -87,6 +96,10 @@ pub enum Command {
     CancelJob { id: JobId, kind: JobKind },
     Reload,
     Drain,
+    /// Recent request spans, optionally filtered to one request id.
+    Trace { id: Option<u64>, limit: usize },
+    /// Prometheus text exposition of the metrics snapshot.
+    MetricsProm,
 }
 
 pub fn parse_command(line: &str) -> Result<Command> {
@@ -207,6 +220,18 @@ pub fn parse_command(line: &str) -> Result<Command> {
         }
         "reload" => Ok(Command::Reload),
         "drain" => Ok(Command::Drain),
+        "trace" => {
+            let limit =
+                v.get_opt("limit").map(|s| s.as_usize()).transpose()?.unwrap_or(256);
+            if limit == 0 {
+                bail!("limit must be >= 1");
+            }
+            Ok(Command::Trace {
+                id: v.get_opt("id").map(|s| s.as_usize()).transpose()?.map(|s| s as u64),
+                limit,
+            })
+        }
+        "metrics_prom" => Ok(Command::MetricsProm),
         other => bail!("unknown cmd {other:?}"),
     }
 }
@@ -233,6 +258,27 @@ pub fn artifact_json(rec: &ArtifactRecord) -> Value {
     ])
 }
 
+/// Per-attempt timeline of a job's lifecycle (queued → running → retrying
+/// → done, with backoff waits), for `job_status` / `eval_status`.
+fn timeline_json(events: &[crate::registry::AttemptEvent]) -> Value {
+    Value::Arr(
+        events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("event", Value::Str(e.event.into())),
+                    ("attempt", Value::Num(e.attempt as f64)),
+                    ("at_secs", Value::Num(e.at_secs)),
+                ];
+                if e.backoff_ms > 0.0 {
+                    fields.push(("backoff_ms", Value::Num(e.backoff_ms)));
+                }
+                Value::obj(fields)
+            })
+            .collect(),
+    )
+}
+
 /// One training job's status for `job_status` / `jobs` responses.
 pub fn job_json(s: &TrainJobSnapshot) -> Value {
     let mut fields = vec![
@@ -251,6 +297,8 @@ pub fn job_json(s: &TrainJobSnapshot) -> Value {
         ("wall_secs", Value::Num(s.wall_secs)),
         ("attempts", Value::Num(s.attempts as f64)),
         ("cancel_requested", Value::Bool(s.cancel_requested)),
+        ("timeline", timeline_json(&s.timeline)),
+        ("loss_tail", Value::from_f32s(&s.tail)),
     ];
     if let Some(e) = &s.error {
         fields.push(("error", Value::Str(e.clone())));
@@ -287,6 +335,8 @@ pub fn eval_job_json(s: &EvalJobSnapshot) -> Value {
         ("wall_secs", Value::Num(s.wall_secs)),
         ("attempts", Value::Num(s.attempts as f64)),
         ("cancel_requested", Value::Bool(s.cancel_requested)),
+        ("timeline", timeline_json(&s.timeline)),
+        ("rmse_tail", Value::from_f32s(&s.tail)),
     ];
     if let Some(e) = &s.error {
         fields.push(("error", Value::Str(e.clone())));
@@ -544,6 +594,29 @@ mod tests {
     }
 
     #[test]
+    fn parses_trace_and_metrics_prom_commands() {
+        match parse_command(r#"{"cmd":"trace"}"#).unwrap() {
+            Command::Trace { id, limit } => {
+                assert_eq!(id, None);
+                assert_eq!(limit, 256);
+            }
+            _ => panic!("wrong command"),
+        }
+        match parse_command(r#"{"cmd":"trace","id":42,"limit":8}"#).unwrap() {
+            Command::Trace { id, limit } => {
+                assert_eq!(id, Some(42));
+                assert_eq!(limit, 8);
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse_command(r#"{"cmd":"trace","limit":0}"#).is_err());
+        assert!(matches!(
+            parse_command(r#"{"cmd":"metrics_prom"}"#).unwrap(),
+            Command::MetricsProm
+        ));
+    }
+
+    #[test]
     fn coded_errors_carry_the_code() {
         let v = error_json_coded("draining", "server is draining");
         assert!(!v.get("ok").unwrap().as_bool().unwrap());
@@ -659,6 +732,8 @@ mod tests {
             wall_secs: 0.5,
             attempts: 0,
             cancel_requested: false,
+            timeline: vec![],
+            tail: vec![],
         };
         let v = eval_job_json(&snap);
         assert_eq!(v.get("state").unwrap().as_str().unwrap(), "running");
@@ -696,10 +771,20 @@ mod tests {
             wall_secs: 0.0,
             attempts: 0,
             cancel_requested: false,
+            timeline: vec![crate::registry::AttemptEvent {
+                event: "queued",
+                attempt: 0,
+                at_secs: 0.0,
+                backoff_ms: 0.0,
+            }],
+            tail: vec![0.5, 0.25],
         };
         let v = job_json(&snap);
         assert_eq!(v.get("state").unwrap().as_str().unwrap(), "queued");
         assert!(matches!(v.get("loss").unwrap(), Value::Null));
+        let tl = v.get("timeline").unwrap().as_arr().unwrap();
+        assert_eq!(tl[0].get("event").unwrap().as_str().unwrap(), "queued");
+        assert_eq!(v.get("loss_tail").unwrap().as_f32_vec().unwrap(), vec![0.5, 0.25]);
         // round-trips through the writer/parser
         let back = Value::parse(&v.to_string_compact()).unwrap();
         assert_eq!(back.get("job_id").unwrap().as_usize().unwrap(), 3);

@@ -45,6 +45,7 @@ use crate::quality::{frontier_pins, EvalJobManager, EvalJobSpec, EvalRunner};
 use crate::registry::meta::unix_now;
 use crate::registry::{is_overloaded_err, TrainJobManager};
 use crate::util::lifecycle::{signals, DrainGate};
+use crate::util::obs::{span_json, Stage};
 
 /// Shared daemon-lifecycle state: the draining latch, the in-flight
 /// request counter the drain waits on, the wake address used to unstick a
@@ -247,6 +248,9 @@ pub fn perform_reload(state: &ServerState) -> Result<String> {
         runner.set_quality(cfg.quality.clone());
     }
     state.lifecycle.set_registry_cfg(cfg.registry.clone());
+    // `[obs]` hot-reload: tracer knobs + event-log sink. Resets the span
+    // ring (a reconfigured ring cannot keep old spans coherently).
+    state.coord.metrics.apply_obs(&cfg.obs)?;
     Ok(path.display().to_string())
 }
 
@@ -305,7 +309,14 @@ pub fn spawn_scheduler(
         if state.lifecycle.is_draining() {
             return;
         }
+        let tick_start = Instant::now();
         scheduler_tick(&state, &schedule);
+        // Tick stats: how often maintenance runs and its cumulative cost.
+        state.coord.metrics.record_event("schedule_ticks");
+        state
+            .coord
+            .metrics
+            .record_event_add("schedule_tick_us", tick_start.elapsed().as_micros() as u64);
     }))
 }
 
@@ -457,6 +468,7 @@ pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
             Ok(Command::SampleTraj(req)) => {
                 let _inflight = state.lifecycle.enter();
                 if state.lifecycle.is_draining() {
+                    state.coord.metrics.record_event("rejected_draining");
                     write_event(
                         &mut writer,
                         &error_json_coded("draining", "server is draining; new work not accepted"),
@@ -494,6 +506,7 @@ fn rejected_while_draining(cmd: &Command) -> bool {
 /// Execute a single-response command.
 fn dispatch(state: &ServerState, cmd: Command) -> Value {
     if state.lifecycle.is_draining() && rejected_while_draining(&cmd) {
+        state.coord.metrics.record_event("rejected_draining");
         return error_json_coded("draining", "server is draining; new work not accepted");
     }
     let coord = &state.coord;
@@ -519,10 +532,54 @@ fn dispatch(state: &ServerState, cmd: Command) -> Value {
             ])
         }
         Command::Metrics => coord.metrics.snapshot(),
-        Command::Sample(req) => match coord.submit(&req) {
-            Ok(resp) => response_to_json(&resp),
-            Err(e) => error_json(&format!("{e:#}")),
-        },
+        Command::MetricsProm => Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("format", Value::Str("prometheus".into())),
+            ("body", Value::Str(coord.metrics.prometheus_text())),
+        ]),
+        Command::Trace { id, limit } => {
+            let tracer = coord.metrics.tracer();
+            let spans = tracer.snapshot(id, limit);
+            let mut pairs = vec![
+                ("ok", Value::Bool(true)),
+                ("enabled", Value::Bool(tracer.enabled())),
+                ("dropped", Value::Num(tracer.dropped() as f64)),
+                ("spans", Value::Arr(spans.iter().map(span_json).collect())),
+            ];
+            if let Some(id) = id {
+                let peers = tracer
+                    .fuse_peers(id)
+                    .into_iter()
+                    .map(|p| Value::Num(p as f64))
+                    .collect();
+                pairs.push(("peers", Value::Arr(peers)));
+            }
+            Value::obj(pairs)
+        }
+        Command::Sample(req) => {
+            // Tracing is observation only: the id rides alongside the
+            // request and never reaches RNG or batching decisions, so
+            // sample bytes are identical with tracing on or off.
+            let tracer = coord.metrics.tracer();
+            let tid = tracer.begin_request();
+            if let Some(id) = tid {
+                tracer.record(id, Stage::Accept, 0, req.n_samples as u64);
+            }
+            let accepted = Instant::now();
+            match coord.submit_traced(&req, tid) {
+                Ok(resp) => {
+                    let mut v = response_to_json(&resp);
+                    if let Some(id) = tid {
+                        tracer.record(id, Stage::Respond, 0, accepted.elapsed().as_micros() as u64);
+                        if let Value::Obj(map) = &mut v {
+                            map.insert("request_id".to_string(), Value::Num(id as f64));
+                        }
+                    }
+                    v
+                }
+                Err(e) => error_json(&format!("{e:#}")),
+            }
+        }
         Command::SampleTraj(_) => {
             error_json("sample_traj is a streaming command; it is handled per-connection")
         }

@@ -423,6 +423,8 @@ fn run() -> Result<()> {
                 cfg.serve.clone(),
                 registry.clone(),
             ));
+            // `[obs]` knobs: tracer on/off, span ring, sampling, event log.
+            coord.metrics.apply_obs(&cfg.obs)?;
             let retry = RetryPolicy {
                 max_attempts: cfg.registry.retry_max_attempts as u32,
                 base_ms: cfg.registry.retry_base_ms,
@@ -508,7 +510,42 @@ fn run() -> Result<()> {
             Some("reload") => send_server_cmd(&load_config(&args)?, r#"{"cmd":"reload"}"#),
             Some("drain") => send_server_cmd(&load_config(&args)?, r#"{"cmd":"drain"}"#),
             Some("ping") | None => send_server_cmd(&load_config(&args)?, r#"{"cmd":"ping"}"#),
-            Some(other) => bail!("unknown server subcommand {other:?} (reload|drain|ping)"),
+            // Request tracing: dump the span ring, optionally filtered to
+            // one request id (then fused-peer ids come back too).
+            Some("trace") => {
+                let cfg = load_config(&args)?;
+                let mut parts = vec![r#""cmd":"trace""#.to_string()];
+                if let Some(id) = args.flags.get("id") {
+                    let id: u64 = id.parse().context("bad --id")?;
+                    parts.push(format!(r#""id":{id}"#));
+                }
+                if let Some(limit) = args.flags.get("limit") {
+                    let limit: usize = limit.parse().context("bad --limit")?;
+                    parts.push(format!(r#""limit":{limit}"#));
+                }
+                send_server_cmd(&cfg, &format!("{{{}}}", parts.join(",")))
+            }
+            // Metrics exposition: JSON (default) or Prometheus text.
+            Some("metrics") => {
+                let cfg = load_config(&args)?;
+                match args.flags.get("format").map(String::as_str) {
+                    None | Some("json") => send_server_cmd(&cfg, r#"{"cmd":"metrics"}"#),
+                    Some("prom") | Some("prometheus") => {
+                        let v = query_server(&cfg, r#"{"cmd":"metrics_prom"}"#)?;
+                        if !v.get("ok")?.as_bool()? {
+                            bail!("server reported failure");
+                        }
+                        // The exposition text rides JSON-encoded in "body";
+                        // print it raw so scrapers can consume stdout.
+                        print!("{}", v.get("body")?.as_str()?);
+                        Ok(())
+                    }
+                    Some(other) => bail!("unknown --format {other:?} (json|prom)"),
+                }
+            }
+            Some(other) => {
+                bail!("unknown server subcommand {other:?} (reload|drain|ping|trace|metrics)")
+            }
         },
         "registry" => {
             let cfg = load_config(&args)?;
@@ -597,11 +634,38 @@ fn run() -> Result<()> {
                 solo_coord.submit(&warm)?;
             }
 
+            // Server-side accounting captured post-warm-up, so the deltas
+            // cover exactly the timed runs.
+            let solo_before = loadgen::ServerAccounting::capture(&solo_coord.metrics);
+            let fused_before = loadgen::ServerAccounting::capture(&fused_coord.metrics);
             let solo_run = loadgen::run(&solo_coord, &spec)?;
             let fused_run = loadgen::run(&fused_coord, &spec)?;
             let speedup =
                 fused_run.report.rows_per_sec / solo_run.report.rows_per_sec.max(1e-9);
             let bitwise = fused_run.bitwise_matches(&solo_run);
+
+            // Post-run reconciliation: the server's own counters must
+            // exactly match what the clients accounted for.
+            let mut reconcile_errors = Vec::new();
+            for (name, coord, before, run) in [
+                ("solo", &solo_coord, &solo_before, &solo_run),
+                ("fused", &fused_coord, &fused_before, &fused_run),
+            ] {
+                let delta =
+                    loadgen::ServerAccounting::capture(&coord.metrics).delta(before);
+                match loadgen::reconcile(
+                    &delta,
+                    run.report.requests as u64,
+                    run.report.rows as u64,
+                    0,
+                ) {
+                    None => println!(
+                        "{name:<6} reconciliation ok: {} requests, {} rows, all solved once",
+                        delta.requests, delta.samples
+                    ),
+                    Some(msg) => reconcile_errors.push(format!("{name}: {msg}")),
+                }
+            }
 
             for (name, r) in [("fused", &fused_run.report), ("solo", &solo_run.report)] {
                 println!(
@@ -672,6 +736,10 @@ fn run() -> Result<()> {
                 ),
                 ("speedup_rows_per_sec", bespoke_flow::json::Value::Num(speedup)),
                 ("bitwise_match", bespoke_flow::json::Value::Bool(bitwise)),
+                (
+                    "reconciled",
+                    bespoke_flow::json::Value::Bool(reconcile_errors.is_empty()),
+                ),
             ]);
             std::fs::write(&out_path, doc.to_string_pretty())
                 .with_context(|| format!("writing {out_path}"))?;
@@ -680,6 +748,167 @@ fn run() -> Result<()> {
                 bail!(
                     "fused and solo runs disagree byte-for-byte — the fusion \
                      row-equivalence invariant is broken"
+                );
+            }
+            if !reconcile_errors.is_empty() {
+                bail!(
+                    "server-side metrics do not reconcile with client accounting: {}",
+                    reconcile_errors.join("; ")
+                );
+            }
+            Ok(())
+        }
+        "bench-obs" => {
+            // Tracing-overhead A/B: identical loadgen storms through one
+            // fused coordinator with the span tracer enabled vs disabled,
+            // alternating per repeat so drift hits both modes equally.
+            // Gates: tracing-on wall time within 3% of tracing-off
+            // (best-of-repeats), and sample bytes bitwise identical across
+            // the two modes. Writes BENCH_8.json.
+            let cfg = load_config(&args)?;
+            let zoo = open_zoo(&args)?;
+            let model = args.flags.get("model").context("--model required")?.clone();
+            let solvers: Vec<String> = args
+                .flags
+                .get("solver")
+                .map(String::as_str)
+                .unwrap_or("rk2:n=8")
+                .split(',')
+                .map(|s| SolverSpec::parse(s.trim()).map(|sp| sp.to_string()))
+                .collect::<Result<_>>()?;
+            let n_choices: Vec<usize> = args
+                .flags
+                .get("n")
+                .map(String::as_str)
+                .unwrap_or("8")
+                .split(',')
+                .map(|s| s.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .context("bad --n (expected e.g. 8 or 1,8)")?;
+            if n_choices.iter().any(|&n| n == 0) {
+                bail!("--n entries must be >= 1");
+            }
+            let smoke = args.flags.contains_key("smoke");
+            let mut spec = loadgen::LoadSpec::new(&model, &solvers[0]);
+            spec.solvers = solvers;
+            spec.n_choices = n_choices;
+            spec.clients = args
+                .flags
+                .get("clients")
+                .map(|s| s.parse())
+                .transpose()
+                .context("bad --clients")?
+                .unwrap_or(8);
+            spec.requests_per_client = args
+                .flags
+                .get("requests")
+                .map(|s| s.parse())
+                .transpose()
+                .context("bad --requests")?
+                .unwrap_or(if smoke { 6 } else { 32 });
+            if let Some(s) = args.flags.get("seed") {
+                spec.seed = s.parse().context("bad --seed")?;
+            }
+            let repeats: usize = args
+                .flags
+                .get("repeats")
+                .map(|s| s.parse())
+                .transpose()
+                .context("bad --repeats")?
+                .unwrap_or(if smoke { 1 } else { 3 });
+            if repeats == 0 {
+                bail!("--repeats must be >= 1");
+            }
+
+            let coord = Arc::new(Coordinator::with_registry(
+                zoo,
+                cfg.serve.clone(),
+                open_registry(&cfg)?,
+            ));
+            for s in &spec.solvers {
+                let warm = SampleRequest {
+                    model: model.clone(),
+                    solver: s.clone(),
+                    n_samples: 1,
+                    seed: 0,
+                    return_samples: false,
+                    budget: None,
+                };
+                coord.submit(&warm)?;
+            }
+
+            let ring = cfg.obs.trace_ring;
+            let mut wall_on = f64::INFINITY;
+            let mut wall_off = f64::INFINITY;
+            let mut run_on = None;
+            let mut run_off = None;
+            for _ in 0..repeats {
+                coord.metrics.tracer().configure(true, ring, 1);
+                let r = loadgen::run_traced(&coord, &spec)?;
+                wall_on = wall_on.min(r.report.wall_secs);
+                run_on = Some(r);
+                coord.metrics.tracer().configure(false, ring, 1);
+                let r = loadgen::run_traced(&coord, &spec)?;
+                wall_off = wall_off.min(r.report.wall_secs);
+                run_off = Some(r);
+            }
+            let (run_on, run_off) = (run_on.unwrap(), run_off.unwrap());
+            let bitwise = run_on.bitwise_matches(&run_off);
+            let ratio = wall_on / wall_off.max(1e-9);
+            let pass = ratio <= 1.03;
+            println!(
+                "tracing on  best wall: {wall_on:.3}s\n\
+                 tracing off best wall: {wall_off:.3}s\n\
+                 overhead ratio: {ratio:.4} (gate <= 1.03)  pass: {pass}  \
+                 bitwise_match: {bitwise}"
+            );
+
+            let out_path = args.flags.get("out").cloned().unwrap_or_else(|| {
+                format!("{}/../BENCH_8.json", env!("CARGO_MANIFEST_DIR"))
+            });
+            let doc = bespoke_flow::json::Value::obj(vec![
+                ("bench", bespoke_flow::json::Value::Str("obs-overhead".into())),
+                (
+                    "threads",
+                    bespoke_flow::json::Value::Num(bespoke_flow::util::threads::get() as f64),
+                ),
+                ("model", bespoke_flow::json::Value::Str(model.clone())),
+                (
+                    "solvers",
+                    bespoke_flow::json::Value::Arr(
+                        spec.solvers
+                            .iter()
+                            .map(|s| bespoke_flow::json::Value::Str(s.clone()))
+                            .collect(),
+                    ),
+                ),
+                ("clients", bespoke_flow::json::Value::Num(spec.clients as f64)),
+                (
+                    "requests_per_client",
+                    bespoke_flow::json::Value::Num(spec.requests_per_client as f64),
+                ),
+                ("seed", bespoke_flow::json::Value::Num(spec.seed as f64)),
+                ("repeats", bespoke_flow::json::Value::Num(repeats as f64)),
+                ("trace_ring", bespoke_flow::json::Value::Num(ring as f64)),
+                ("wall_on_secs", bespoke_flow::json::Value::Num(wall_on)),
+                ("wall_off_secs", bespoke_flow::json::Value::Num(wall_off)),
+                ("overhead_ratio", bespoke_flow::json::Value::Num(ratio)),
+                ("bitwise_match", bespoke_flow::json::Value::Bool(bitwise)),
+                ("pass", bespoke_flow::json::Value::Bool(pass)),
+            ]);
+            std::fs::write(&out_path, doc.to_string_pretty())
+                .with_context(|| format!("writing {out_path}"))?;
+            println!("wrote {out_path}");
+            if !bitwise {
+                bail!(
+                    "sample bytes differ between tracing on and off — the \
+                     observability plane is perturbing results"
+                );
+            }
+            if !pass && !smoke {
+                bail!(
+                    "tracing overhead {ratio:.4} exceeds the 3% gate \
+                     ({wall_on:.3}s on vs {wall_off:.3}s off)"
                 );
             }
             Ok(())
@@ -835,9 +1064,9 @@ fn run() -> Result<()> {
     }
 }
 
-/// Send one JSONL command to the running server at `serve.addr`, print
-/// the reply line, and fail if the server reports an error.
-fn send_server_cmd(cfg: &Config, line: &str) -> Result<()> {
+/// Send one JSONL command to the running server at `serve.addr` and
+/// return the parsed reply (without printing it).
+fn query_server(cfg: &Config, line: &str) -> Result<bespoke_flow::json::Value> {
     use std::io::{BufRead, BufReader, Write};
     let mut stream = std::net::TcpStream::connect(&cfg.serve.addr)
         .with_context(|| format!("connecting to server at {}", cfg.serve.addr))?;
@@ -851,8 +1080,14 @@ fn send_server_cmd(cfg: &Config, line: &str) -> Result<()> {
     if resp.is_empty() {
         bail!("server closed the connection without a reply");
     }
-    println!("{resp}");
-    let v = bespoke_flow::json::Value::parse(resp)?;
+    bespoke_flow::json::Value::parse(resp)
+}
+
+/// [`query_server`], printing the reply line and failing if the server
+/// reports an error.
+fn send_server_cmd(cfg: &Config, line: &str) -> Result<()> {
+    let v = query_server(cfg, line)?;
+    println!("{}", v.to_string_compact());
     if !v.get("ok")?.as_bool()? {
         bail!("server reported failure");
     }
@@ -899,9 +1134,30 @@ fn loadgen_chaos(
         .transpose()
         .context("bad --reloads")?
         .unwrap_or(8);
+    let phase1_before = loadgen::ServerAccounting::capture(&coord.metrics);
     let quiet = loadgen::run_sequential(&coord, spec)?;
     let reload_run = loadgen::run_with_reloads(&coord, spec, reloads)?;
     let reload_bitwise = reload_run.bitwise_matches(&quiet);
+    // Reconcile phase 1 (quiet + reload storm share the coordinator).
+    // Route-retirement retries may legitimately re-solve a chunk whose
+    // batch-mates already landed, so `rows_used` is a lower-bounded check
+    // here rather than an exact one.
+    let mut reconcile_errors: Vec<String> = Vec::new();
+    let d1 = loadgen::ServerAccounting::capture(&coord.metrics).delta(&phase1_before);
+    let p1_requests = (quiet.report.requests + reload_run.report.requests) as u64;
+    let p1_rows = (quiet.report.rows + reload_run.report.rows) as u64;
+    if d1.requests != p1_requests || d1.samples != p1_rows || d1.rows_used < d1.samples {
+        reconcile_errors.push(format!(
+            "reload storm: server saw {}/{} requests/rows (solved {}), \
+             clients accounted {p1_requests}/{p1_rows}",
+            d1.requests, d1.samples, d1.rows_used
+        ));
+    } else {
+        println!(
+            "reload reconciliation ok: {} requests, {} rows (server books balance)",
+            d1.requests, d1.samples
+        );
+    }
     println!(
         "reload storm: {} requests, {} reloads, bitwise_match: {reload_bitwise}  \
          p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms",
@@ -915,6 +1171,7 @@ fn loadgen_chaos(
     // Phase 2 — drain storm over TCP: golden digests from the seed-masked
     // plan, then a live server that begins draining mid-storm.
     let plan = loadgen::tcp_schedule(spec);
+    let phase2_before = loadgen::ServerAccounting::capture(&coord.metrics);
     let golden = loadgen::run_plan_sequential(&coord, &plan)?;
     let addr = if args.flags.contains_key("addr") {
         cfg.serve.addr.clone()
@@ -958,6 +1215,38 @@ fn loadgen_chaos(
     match server.join() {
         Ok(r) => r?,
         Err(_) => bail!("server thread panicked during drain"),
+    }
+    // Reconcile phase 2 (golden pass + TCP drain storm share the
+    // coordinator). Exact checks only make sense when every non-ok outcome
+    // is an explained drain rejection: an `rejected_other` or digest
+    // mismatch means the client and server disagree about what happened,
+    // and the lossless gate below reports that instead.
+    let d2 = loadgen::ServerAccounting::capture(&coord.metrics).delta(&phase2_before);
+    if drain_report.rejected_other == 0 && drain_report.digest_mismatches == 0 {
+        let p2_requests = golden.report.requests as u64 + drain_report.ok as u64;
+        let p2_rows = golden.report.rows as u64 + drain_report.ok_rows as u64;
+        if d2.requests != p2_requests
+            || d2.samples != p2_rows
+            || d2.rows_used < d2.samples
+            || d2.rejected_draining != drain_report.rejected_draining as u64
+        {
+            reconcile_errors.push(format!(
+                "drain storm: server saw {}/{} requests/rows and {} drain \
+                 rejections, clients accounted {p2_requests}/{p2_rows} and {} \
+                 drain rejections",
+                d2.requests, d2.samples, d2.rejected_draining, drain_report.rejected_draining
+            ));
+        } else {
+            println!(
+                "drain reconciliation ok: {} requests, {} rows, {} drain rejections",
+                d2.requests, d2.samples, d2.rejected_draining
+            );
+        }
+    } else {
+        println!(
+            "drain reconciliation skipped: {} unexplained rejections / {} mismatches",
+            drain_report.rejected_other, drain_report.digest_mismatches
+        );
     }
     let lossless = drain_report.lossless();
     println!(
@@ -1003,6 +1292,10 @@ fn loadgen_chaos(
         ),
         ("reload_bitwise_match", bespoke_flow::json::Value::Bool(reload_bitwise)),
         ("drain_storm", drain_report.to_json("chaos/drain-storm")),
+        (
+            "reconciled",
+            bespoke_flow::json::Value::Bool(reconcile_errors.is_empty()),
+        ),
     ]);
     std::fs::write(&out_path, doc.to_string_pretty())
         .with_context(|| format!("writing {out_path}"))?;
@@ -1015,6 +1308,12 @@ fn loadgen_chaos(
             "drain storm was not lossless — {} silent drops, {} digest mismatches",
             drain_report.no_response,
             drain_report.digest_mismatches
+        );
+    }
+    if !reconcile_errors.is_empty() {
+        bail!(
+            "server-side metrics do not reconcile with client accounting: {}",
+            reconcile_errors.join("; ")
         );
     }
     Ok(())
@@ -1145,9 +1444,10 @@ COMMANDS:
                                   (artifact-free; reads the registry only)
     serve                         start the JSONL sampling + training server
         [--addr HOST:PORT]        (commands: sample, sample_traj, list,
-                                   metrics, ping, train, job_status, jobs,
-                                   evaluate, eval_status, frontier,
-                                   cancel_job, reload, drain —
+                                   metrics, metrics_prom, trace, ping,
+                                   train, job_status, jobs, evaluate,
+                                   eval_status, frontier, cancel_job,
+                                   reload, drain —
                                    one JSON object per line)
                                   daemon lifecycle (DESIGN.md §12):
                                   SIGTERM/SIGINT drain gracefully (in-flight
@@ -1163,6 +1463,14 @@ COMMANDS:
     server reload|drain|ping      operate a running server over TCP
                                   (reload re-reads --config atomically;
                                    drain begins a graceful shutdown)
+    server trace                  fetch request spans from a running server
+        [--id N]  [--limit 256]   (--id filters one request and lists its
+                                   fusion peers; spans cover accept →
+                                   enqueue → fuse_launch → solve → scatter
+                                   → respond plus job-plane stages)
+    server metrics                fetch live metrics over TCP
+        [--format json|prom]      (prom prints the Prometheus text
+                                   exposition body to stdout)
     loadgen                       deterministic multi-client load harness:
         --model M  [--solver S[,S2...]]  [--clients 8]  [--requests 32]
         [--n 8[,1,...]]  [--seed S]  [--smoke]  [--out BENCH_5.json]
@@ -1183,6 +1491,13 @@ COMMANDS:
         [--repeats 5]  [--iters I]  [--out BENCH_6.json]
                                   vs stationary base-RK and ab baselines
                                   (artifact-free on the fixture zoo)
+    bench-obs                     tracing-overhead A/B: identical loadgen
+        --model M  [--solver S]   storms with the span tracer on vs off,
+        [--clients 8]  [--requests 32]  [--repeats 3]  [--seed S]
+        [--smoke]  [--out BENCH_8.json]
+                                  gates overhead <= 3% (best-of-repeats)
+                                  and bitwise-identical sample bytes;
+                                  writes BENCH_8.json
     registry list                 show registered solver artifacts
     registry show                 inspect one key (integrity-checked)
         --model M  --n STEPS  [--base B]  [--ablation A]
@@ -1224,7 +1539,10 @@ GLOBAL FLAGS:
                          max_pending/retry_max_attempts/retry_base_ms/
                          retry_cap_ms, [quality] grid/eval_batches/
                          max_eval_jobs/max_pending, [serve] idle_timeout_ms/
-                         drain_grace_ms, [schedule] tick_ms/refresh_secs/gc)
+                         drain_grace_ms, [schedule] tick_ms/refresh_secs/gc,
+                         [obs] trace/trace_ring/trace_sample_n/event_log/
+                         event_log_max_bytes — span tracing + JSONL
+                         lifecycle event sink with size rotation)
     --threads N          compute threads for host kernels (0 = auto;
                          also: BESPOKE_THREADS env, serve.compute_threads)
     --workers N          worker threads per (model, solver) serving route

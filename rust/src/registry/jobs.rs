@@ -61,8 +61,33 @@ use crate::models::Zoo;
 use crate::runtime::Executable;
 use crate::solvers::theta::{Base, Family, RawTheta};
 use crate::util::lifecycle::{is_cancelled_err, CancelToken, RetryPolicy, CANCELLED};
+use crate::util::obs::Stage;
 
 pub type JobId = u64;
+
+/// One entry in a job's attempt timeline (DESIGN.md §13): which lifecycle
+/// transition happened, on which attempt, how long after submission, and —
+/// for `retrying` — how long the backoff wait is. Timelines are bounded
+/// ([`MAX_TIMELINE_EVENTS`]) so a pathologically flapping job cannot grow a
+/// snapshot without bound.
+#[derive(Clone, Debug)]
+pub struct AttemptEvent {
+    /// `queued` / `running` / `retrying` / `done` / `failed` / `cancelled`.
+    pub event: &'static str,
+    /// Retries consumed when the event fired (0 = initial attempt).
+    pub attempt: u32,
+    /// Seconds since the job was submitted.
+    pub at_secs: f64,
+    /// Backoff wait for `retrying` events; 0 otherwise.
+    pub backoff_ms: f64,
+}
+
+/// Cap on per-job timeline entries; later transitions stop appending.
+pub const MAX_TIMELINE_EVENTS: usize = 64;
+
+/// How many trailing progress values (loss for train, rmse for eval) each
+/// job keeps for `job_status` loss-curve tails.
+pub const TAIL_KEEP: usize = 32;
 
 /// The universal per-step progress report. Training reports optimizer
 /// iterations; eval jobs report scorecard cells (with `loss = NaN`). The
@@ -541,6 +566,11 @@ pub struct JobSnapshot<S: Clone, A: Clone> {
     /// True once `cancel_job` has been requested (even before a running
     /// job observes it at its next checkpoint).
     pub cancel_requested: bool,
+    /// Bounded attempt timeline: queued → running → retrying → … → done.
+    pub timeline: Vec<AttemptEvent>,
+    /// Trailing progress values (train loss, or val_rmse for eval jobs),
+    /// newest last; at most [`TAIL_KEEP`] entries.
+    pub tail: Vec<f32>,
 }
 
 struct Slot<S, A> {
@@ -562,11 +592,15 @@ struct Slot<S, A> {
     /// The running attempt's cancel token (None while not running).
     cancel: Option<CancelToken>,
     cancel_requested: bool,
+    /// Submission instant — the timeline's time origin.
+    created: Instant,
+    timeline: Vec<AttemptEvent>,
+    tail: Vec<f32>,
 }
 
 impl<S, A> Slot<S, A> {
     fn new(spec: S, coalesce_key: String) -> Slot<S, A> {
-        Slot {
+        let mut slot = Slot {
             spec,
             coalesce_key,
             state: JobState::Queued,
@@ -582,7 +616,37 @@ impl<S, A> Slot<S, A> {
             not_before: None,
             cancel: None,
             cancel_requested: false,
+            created: Instant::now(),
+            timeline: Vec::new(),
+            tail: Vec::new(),
+        };
+        slot.mark("queued", 0.0);
+        slot
+    }
+
+    /// Append a timeline event at the current attempt count; a no-op once
+    /// the bounded timeline is full.
+    fn mark(&mut self, event: &'static str, backoff_ms: f64) {
+        if self.timeline.len() >= MAX_TIMELINE_EVENTS {
+            return;
         }
+        self.timeline.push(AttemptEvent {
+            event,
+            attempt: self.attempts,
+            at_secs: self.created.elapsed().as_secs_f64(),
+            backoff_ms,
+        });
+    }
+
+    /// Keep the trailing [`TAIL_KEEP`] finite progress values.
+    fn push_tail(&mut self, v: f32) {
+        if !v.is_finite() {
+            return;
+        }
+        if self.tail.len() >= TAIL_KEEP {
+            self.tail.remove(0);
+        }
+        self.tail.push(v);
     }
 }
 
@@ -606,6 +670,8 @@ impl<S: Clone, A: Clone> Slot<S, A> {
             wall_secs,
             attempts: self.attempts,
             cancel_requested: self.cancel_requested,
+            timeline: self.timeline.clone(),
+            tail: self.tail.clone(),
         }
     }
 }
@@ -736,6 +802,9 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
         drop(st);
         self.inner.ready.notify_one();
         self.record("submitted");
+        if let Some(m) = &self.metrics {
+            m.tracer().record(id, Stage::JobQueued, 0, 0);
+        }
         Ok((id, false))
     }
 
@@ -769,9 +838,14 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
                 slot.error = Some("cancelled".to_string());
                 slot.finished = Some(Instant::now());
                 slot.cancel_requested = true;
+                slot.mark("cancelled", 0.0);
+                let attempt = slot.attempts as u64;
                 drop(st);
                 self.inner.ready.notify_all();
                 self.record("cancelled");
+                if let Some(m) = &self.metrics {
+                    m.tracer().record(id, Stage::JobEnd, attempt, 2);
+                }
                 Ok(JobState::Cancelled)
             }
             JobState::Running => {
@@ -807,8 +881,13 @@ impl<R: JobRunner + ?Sized + 'static> JobManager<R> {
                     s.state = JobState::Cancelled;
                     s.error = Some("server draining".to_string());
                     s.finished = Some(Instant::now());
+                    s.mark("cancelled", 0.0);
+                    let attempt = s.attempts as u64;
                     interrupted.push(s.spec.clone());
                     self.record("cancelled");
+                    if let Some(m) = &self.metrics {
+                        m.tracer().record(id, Stage::JobEnd, attempt, 2);
+                    }
                 }
             }
         }
@@ -975,6 +1054,7 @@ fn worker_loop<R: JobRunner + ?Sized>(
                         slot.state = JobState::Running;
                         slot.started = Some(Instant::now());
                         slot.not_before = None;
+                        slot.mark("running", 0.0);
                         let token = CancelToken::new();
                         if slot.cancel_requested {
                             // cancelled while waiting out a backoff: let the
@@ -1007,6 +1087,9 @@ fn worker_loop<R: JobRunner + ?Sized>(
             }
         };
         log_info!("[{kind} job {id}] {}", runner.label(&spec));
+        if let Some(m) = &metrics {
+            m.tracer().record(id, Stage::JobStart, ctx.attempt as u64, 0);
+        }
 
         // Run + publish outside the lock; a panicking runner fails the job
         // instead of wedging it in `running` forever.
@@ -1021,6 +1104,9 @@ fn worker_loop<R: JobRunner + ?Sized>(
                         if !p.val_rmse.is_nan() {
                             s.val_rmse = p.val_rmse;
                         }
+                        // Loss-curve tail: train jobs report loss, eval
+                        // jobs report loss=NaN and a per-cell rmse.
+                        s.push_tail(if p.loss.is_finite() { p.loss } else { p.val_rmse });
                     }
                 })
                 .and_then(|out| runner.publish(&registry, out))
@@ -1045,8 +1131,10 @@ fn worker_loop<R: JobRunner + ?Sized>(
                     slot.state = JobState::Done;
                     slot.finished = Some(Instant::now());
                     slot.artifact = Some(rec);
+                    slot.mark("done", 0.0);
                     if let Some(m) = &metrics {
                         m.record_event(&format!("{kind}_jobs_done"));
+                        m.tracer().record(id, Stage::JobEnd, slot.attempts as u64, 0);
                     }
                 }
                 Err(e) if is_cancelled_err(&e) => {
@@ -1054,8 +1142,10 @@ fn worker_loop<R: JobRunner + ?Sized>(
                     slot.state = JobState::Cancelled;
                     slot.finished = Some(Instant::now());
                     slot.error = Some("cancelled".to_string());
+                    slot.mark("cancelled", 0.0);
                     if let Some(m) = &metrics {
                         m.record_event(&format!("{kind}_jobs_cancelled"));
+                        m.tracer().record(id, Stage::JobEnd, slot.attempts as u64, 2);
                     }
                 }
                 Err(e) => {
@@ -1078,17 +1168,26 @@ fn worker_loop<R: JobRunner + ?Sized>(
                         slot.state = JobState::Retrying;
                         slot.error = Some(format!("{e:#}"));
                         slot.not_before = Some(Instant::now() + delay);
+                        slot.mark("retrying", delay.as_secs_f64() * 1e3);
                         retry_enqueued = true;
                         if let Some(m) = &metrics {
                             m.record_event(&format!("{kind}_jobs_retried"));
+                            m.tracer().record(
+                                id,
+                                Stage::JobRetry,
+                                slot.attempts as u64,
+                                delay.as_millis() as u64,
+                            );
                         }
                     } else {
                         log_info!("[{kind} job {id}] failed: {e:#}");
                         slot.state = JobState::Failed;
                         slot.finished = Some(Instant::now());
                         slot.error = Some(format!("{e:#}"));
+                        slot.mark("failed", 0.0);
                         if let Some(m) = &metrics {
                             m.record_event(&format!("{kind}_jobs_failed"));
+                            m.tracer().record(id, Stage::JobEnd, slot.attempts as u64, 1);
                         }
                     }
                 }

@@ -33,9 +33,9 @@ pub mod store;
 
 pub use hash::{content_hash, fnv1a64};
 pub use jobs::{
-    is_overloaded_err, JobCtx, JobId, JobManager, JobOptions, JobProgress, JobRunner, JobSnapshot,
-    JobState, Overloaded, TrainedArtifact, TrainJobManager, TrainJobSnapshot, TrainJobSpec,
-    TrainRunner, ZooRunner,
+    is_overloaded_err, AttemptEvent, JobCtx, JobId, JobManager, JobOptions, JobProgress,
+    JobRunner, JobSnapshot, JobState, Overloaded, TrainedArtifact, TrainJobManager,
+    TrainJobSnapshot, TrainJobSpec, TrainRunner, ZooRunner,
 };
 pub use meta::{sidecar_path, ArtifactMeta, META_SCHEMA_VERSION};
 pub use store::{ArtifactKey, ArtifactRecord, EvalRecord, ManifestStamp, Registry};

@@ -16,10 +16,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Coordinator, SampleRequest};
+use crate::coordinator::{Coordinator, Metrics, SampleRequest};
 use crate::json::Value;
 use crate::registry::fnv1a64;
-use crate::util::timer::Percentiles;
+use crate::util::obs::{Histogram, Stage};
 use crate::util::Rng;
 
 /// What workload to generate. Every field is part of the schedule seed:
@@ -165,10 +165,10 @@ impl LoadRun {
 fn aggregate(outcomes: Vec<RequestOutcome>, wall_secs: f64) -> LoadRun {
     let mut outcomes = outcomes;
     outcomes.sort_by_key(|o| (o.client, o.index));
-    let mut lat = Percentiles::default();
+    let mut lat = Histogram::new();
     let mut rows = 0usize;
     for o in &outcomes {
-        lat.record(o.latency_ms);
+        lat.record_ms(o.latency_ms);
         rows += o.rows;
     }
     let wall = wall_secs.max(1e-9);
@@ -178,9 +178,9 @@ fn aggregate(outcomes: Vec<RequestOutcome>, wall_secs: f64) -> LoadRun {
         wall_secs,
         throughput_rps: outcomes.len() as f64 / wall,
         rows_per_sec: rows as f64 / wall,
-        latency_p50_ms: lat.quantile(0.5),
-        latency_p90_ms: lat.quantile(0.9),
-        latency_p99_ms: lat.quantile(0.99),
+        latency_p50_ms: lat.quantile_ms(0.5),
+        latency_p90_ms: lat.quantile_ms(0.9),
+        latency_p99_ms: lat.quantile_ms(0.99),
     };
     LoadRun { report, outcomes }
 }
@@ -189,6 +189,18 @@ fn aggregate(outcomes: Vec<RequestOutcome>, wall_secs: f64) -> LoadRun {
 /// its requests back-to-back. Any request error fails the whole run (the
 /// harness drives known-good routes; an error is a bug, not load).
 pub fn run(coord: &Arc<Coordinator>, spec: &LoadSpec) -> Result<LoadRun> {
+    run_inner(coord, spec, false)
+}
+
+/// [`run`] but driving the same tracing work the server's dispatch does
+/// per request (id assignment, accept/respond spans, traced submission).
+/// With the coordinator's tracer disabled this collapses to exactly
+/// [`run`]'s code path, so on-vs-off pairs measure tracing overhead.
+pub fn run_traced(coord: &Arc<Coordinator>, spec: &LoadSpec) -> Result<LoadRun> {
+    run_inner(coord, spec, true)
+}
+
+fn run_inner(coord: &Arc<Coordinator>, spec: &LoadSpec, traced: bool) -> Result<LoadRun> {
     let plan = schedule(spec);
     let started = Instant::now();
     let results: Vec<Result<Vec<RequestOutcome>>> = std::thread::scope(|s| {
@@ -199,7 +211,7 @@ pub fn run(coord: &Arc<Coordinator>, spec: &LoadSpec) -> Result<LoadRun> {
                 s.spawn(move || {
                     client_plan
                         .into_iter()
-                        .map(|p| run_one(&coord, p))
+                        .map(|p| if traced { run_one_traced(&coord, p) } else { run_one(&coord, p) })
                         .collect::<Result<Vec<_>>>()
                 })
             })
@@ -260,6 +272,34 @@ fn run_one(coord: &Arc<Coordinator>, p: PlannedRequest) -> Result<RequestOutcome
     })
 }
 
+/// [`run_one`] through the traced dispatch path: same span sequence the
+/// TCP server records around each `sample` command.
+fn run_one_traced(coord: &Arc<Coordinator>, p: PlannedRequest) -> Result<RequestOutcome> {
+    let tracer = coord.metrics.tracer();
+    let tid = tracer.begin_request();
+    if let Some(id) = tid {
+        tracer.record(id, Stage::Accept, 0, p.req.n_samples as u64);
+    }
+    let started = Instant::now();
+    let resp = coord
+        .submit_traced(&p.req, tid)
+        .with_context(|| format!("loadgen client {} request {}", p.client, p.index))?;
+    if let Some(id) = tid {
+        tracer.record(id, Stage::Respond, 0, started.elapsed().as_micros() as u64);
+    }
+    let samples = resp
+        .samples
+        .as_ref()
+        .context("loadgen requests always ask for samples")?;
+    Ok(RequestOutcome {
+        client: p.client,
+        index: p.index,
+        rows: samples.len(),
+        latency_ms: resp.latency_ms,
+        digest: sample_digest(samples),
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Chaos mode (DESIGN.md §12): the same deterministic schedules, fired over
 // TCP at a live server while lifecycle events (drain, reload) land
@@ -290,6 +330,9 @@ pub fn tcp_schedule(spec: &LoadSpec) -> Vec<Vec<PlannedRequest>> {
 pub struct ChaosReport {
     pub sent: usize,
     pub ok: usize,
+    /// Total sample rows received across `ok` responses (for server-side
+    /// reconciliation).
+    pub ok_rows: usize,
     pub rejected_draining: usize,
     pub rejected_other: usize,
     pub digest_mismatches: usize,
@@ -313,6 +356,7 @@ impl ChaosReport {
             ("name", Value::Str(name.to_string())),
             ("sent", Value::Num(self.sent as f64)),
             ("ok", Value::Num(self.ok as f64)),
+            ("ok_rows", Value::Num(self.ok_rows as f64)),
             ("rejected_draining", Value::Num(self.rejected_draining as f64)),
             ("rejected_other", Value::Num(self.rejected_other as f64)),
             ("digest_mismatches", Value::Num(self.digest_mismatches as f64)),
@@ -340,6 +384,7 @@ fn sample_req_json(req: &SampleRequest) -> Value {
 struct ClientTally {
     sent: usize,
     ok: usize,
+    ok_rows: usize,
     rejected_draining: usize,
     rejected_other: usize,
     digest_mismatches: usize,
@@ -424,18 +469,18 @@ fn run_tcp_client(
             }
             continue;
         }
-        let digest = v
+        let rows = v
             .get("samples")
             .and_then(|s| s.as_arr())
             .and_then(|rows| {
                 rows.iter()
                     .map(|r| r.as_f32_vec())
                     .collect::<Result<Vec<Vec<f32>>>>()
-            })
-            .map(|rows| sample_digest(&rows));
-        match digest {
-            Ok(d) if golden.get(&(p.client, p.index)) == Some(&d) => {
+            });
+        match rows {
+            Ok(rows) if golden.get(&(p.client, p.index)) == Some(&sample_digest(&rows)) => {
                 tally.ok += 1;
+                tally.ok_rows += rows.len();
                 tally.ok_latencies_ms.push(latency_ms);
             }
             _ => tally.digest_mismatches += 1,
@@ -469,21 +514,22 @@ pub fn run_tcp(addr: &str, plan: &[Vec<PlannedRequest>], golden: &LoadRun) -> Re
             .collect()
     });
     let mut report = ChaosReport::default();
-    let mut lat = Percentiles::default();
+    let mut lat = Histogram::new();
     for t in tallies {
         report.sent += t.sent;
         report.ok += t.ok;
+        report.ok_rows += t.ok_rows;
         report.rejected_draining += t.rejected_draining;
         report.rejected_other += t.rejected_other;
         report.digest_mismatches += t.digest_mismatches;
         report.no_response += t.no_response;
         for l in t.ok_latencies_ms {
-            lat.record(l);
+            lat.record_ms(l);
         }
     }
-    report.latency_p50_ms = lat.quantile(0.5);
-    report.latency_p90_ms = lat.quantile(0.9);
-    report.latency_p99_ms = lat.quantile(0.99);
+    report.latency_p50_ms = lat.quantile_ms(0.5);
+    report.latency_p90_ms = lat.quantile_ms(0.9);
+    report.latency_p99_ms = lat.quantile_ms(0.99);
     Ok(report)
 }
 
@@ -517,6 +563,83 @@ pub fn run_with_reloads(
     result
 }
 
+// ---------------------------------------------------------------------------
+// Reconciliation (DESIGN.md §13): after a load run, the server's own
+// counters must *exactly* match the client-side tally — any gap means a
+// request was double-counted, silently dropped, or rows went missing in
+// the fusion plane.
+
+/// Point-in-time server-side accounting, captured before and after a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerAccounting {
+    pub requests: u64,
+    pub samples: u64,
+    /// Rows the fusion plane actually solved; every accepted row is solved
+    /// exactly once, so the delta must equal the samples delta.
+    pub rows_used: u64,
+    pub rejected_draining: u64,
+}
+
+impl ServerAccounting {
+    pub fn capture(metrics: &Metrics) -> ServerAccounting {
+        let t = metrics.totals();
+        ServerAccounting {
+            requests: t.requests,
+            samples: t.samples,
+            rows_used: t.rows_used,
+            rejected_draining: metrics.event_count("rejected_draining"),
+        }
+    }
+
+    /// Delta of two captures taken around a run.
+    pub fn delta(&self, before: &ServerAccounting) -> ServerAccounting {
+        ServerAccounting {
+            requests: self.requests - before.requests,
+            samples: self.samples - before.samples,
+            rows_used: self.rows_used - before.rows_used,
+            rejected_draining: self.rejected_draining - before.rejected_draining,
+        }
+    }
+}
+
+/// Exact reconciliation of a server-side delta against client accounting.
+/// `ok_requests`/`ok_rows` are the client's successful-request count and
+/// summed sample rows; `rejected_draining` is how many structured draining
+/// rejections the client saw (0 outside chaos runs). Returns a description
+/// of the first mismatch, or `None` when the books balance.
+pub fn reconcile(
+    delta: &ServerAccounting,
+    ok_requests: u64,
+    ok_rows: u64,
+    rejected_draining: u64,
+) -> Option<String> {
+    if delta.requests != ok_requests {
+        return Some(format!(
+            "server counted {} requests, clients completed {ok_requests}",
+            delta.requests
+        ));
+    }
+    if delta.samples != ok_rows {
+        return Some(format!(
+            "server counted {} sample rows, clients received {ok_rows}",
+            delta.samples
+        ));
+    }
+    if delta.rows_used != ok_rows {
+        return Some(format!(
+            "fusion plane solved {} rows, clients received {ok_rows}",
+            delta.rows_used
+        ));
+    }
+    if delta.rejected_draining != rejected_draining {
+        return Some(format!(
+            "server rejected {} requests while draining, clients saw {rejected_draining}",
+            delta.rejected_draining
+        ));
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -547,6 +670,18 @@ mod tests {
         // a different root seed reshuffles the schedule
         let other = schedule(&LoadSpec { seed: 99, ..spec });
         assert_ne!(a[0][0].req.seed, other[0][0].req.seed);
+    }
+
+    #[test]
+    fn reconciliation_balances_and_detects_gaps() {
+        let before = ServerAccounting::default();
+        let after =
+            ServerAccounting { requests: 4, samples: 32, rows_used: 32, rejected_draining: 1 };
+        let delta = after.delta(&before);
+        assert!(reconcile(&delta, 4, 32, 1).is_none());
+        assert!(reconcile(&delta, 3, 32, 1).unwrap().contains("requests"));
+        assert!(reconcile(&delta, 4, 31, 1).is_some());
+        assert!(reconcile(&delta, 4, 32, 0).unwrap().contains("draining"));
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! Small shared utilities: deterministic RNG, wall-clock timers, logging,
-//! and the daemon lifecycle primitives (cancel tokens, retry backoff,
-//! signal flags).
+//! observability primitives (histograms, trace ring, event sink), and the
+//! daemon lifecycle primitives (cancel tokens, retry backoff, signal flags).
 
 pub mod lifecycle;
+pub mod obs;
 pub mod rng;
 pub mod threads;
 pub mod timer;
 
 pub use lifecycle::{CancelToken, DrainGate, RetryPolicy};
+pub use obs::{EventLog, Histogram, Span, Stage, Tracer, WindowCounter};
 pub use rng::Rng;
 pub use timer::Timer;
 

@@ -1,0 +1,669 @@
+//! Observability primitives (DESIGN.md §13): bounded log-bucketed latency
+//! histograms, windowed rate counters, the request-trace span ring, and the
+//! JSONL lifecycle event sink.
+//!
+//! Everything here is built for the serving hot path:
+//!
+//! * [`Histogram`] — HDR-style fixed log-bucketed counts over a `u64`
+//!   microsecond domain. `record` is O(1), allocation-free after
+//!   construction, and the whole histogram is 1024 buckets (~8 KiB) no
+//!   matter how many samples land in it. Quantiles come back within a
+//!   documented ≤ 1/64 (~1.6 %) relative error of an exact sort.
+//! * [`WindowCounter`] — a ring of 300 one-second slots so throughput
+//!   numbers reflect the last 1 m / 5 m of load, not lifetime uptime.
+//! * [`Tracer`] / [`Span`] — per-request span records (accept → queue →
+//!   fused launch → solve → scatter → respond, plus job-plane lifecycle
+//!   events) in a preallocated ring with an explicit `dropped` counter:
+//!   overflow is visible, never silent. Recording never allocates.
+//! * [`EventLog`] — append-only JSONL sink with size-based rotation for
+//!   lifecycle events (drain / reload / retry / cancel / hot-swap).
+//!
+//! Tracing is observation only: it assigns ids and copies timestamps into
+//! the ring but never touches RNG streams, chunking, or solver state, so
+//! sample bytes are bitwise identical with tracing on or off (pinned by
+//! `tests/obs.rs`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// log2(sub-buckets per octave). 32 sub-buckets give ≤ 1/64 relative error.
+const LOG_SUBS: u32 = 5;
+const SUBS: u64 = 1 << LOG_SUBS;
+
+/// Total bucket count: 32 exact buckets for values < 32 µs, then 31 octave
+/// groups of 32 sub-buckets each, covering values up to 2^36 µs (~19 h).
+/// Larger values clamp into the last bucket.
+pub const N_BUCKETS: usize = 1024;
+
+/// Bucket index for a microsecond value. O(1), branch + leading_zeros.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUBS {
+        return v as usize;
+    }
+    let m = 63 - v.leading_zeros(); // highest set bit, >= LOG_SUBS
+    let g = (m - LOG_SUBS + 1) as u64; // octave group, >= 1
+    let idx = (g << LOG_SUBS) + ((v >> (m - LOG_SUBS)) & (SUBS - 1));
+    (idx as usize).min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower bound (µs) of bucket `idx`.
+fn bucket_lower(idx: usize) -> u64 {
+    let g = (idx as u64) >> LOG_SUBS;
+    let sub = (idx as u64) & (SUBS - 1);
+    if g == 0 {
+        sub
+    } else {
+        (SUBS + sub) << (g - 1)
+    }
+}
+
+/// Width (µs) of bucket `idx`; the bucket covers `[lower, lower + width)`.
+fn bucket_width(idx: usize) -> u64 {
+    let g = (idx as u64) >> LOG_SUBS;
+    if g == 0 {
+        1
+    } else {
+        1 << (g - 1)
+    }
+}
+
+/// Bounded log-bucketed latency histogram over microseconds.
+///
+/// Values below 32 µs are exact; above that each octave is split into 32
+/// sub-buckets, so the bucket-midpoint representative a quantile query
+/// returns is within `width/2 ≤ lower/64` of the true sample — a ≤ 1/64
+/// (~1.6 %) relative error, plus the ±0.5 µs from rounding `record_ms`
+/// input to integer microseconds. Memory is a fixed 1024 `u64` counts.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: vec![0; N_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one microsecond value. O(1), no allocation.
+    #[inline]
+    pub fn record_us(&mut self, us: u64) {
+        self.counts[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Record a millisecond value (rounded to integer µs; NaN/negative → 0).
+    #[inline]
+    pub fn record_ms(&mut self, ms: f64) {
+        // Float→int casts saturate, and NaN casts to 0.
+        self.record_us((ms * 1000.0).round().max(0.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64 / 1000.0
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us as f64 / 1000.0
+    }
+
+    /// Nearest-rank quantile (same rank rule as an exact sort:
+    /// `rank = round((n-1)·q)`), answered with the midpoint of the bucket
+    /// holding that rank. `q = 1` returns the exact maximum.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((self.count - 1) as f64 * q).round() as u64;
+        if rank >= self.count - 1 {
+            return self.max_ms();
+        }
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                let lower = bucket_lower(idx);
+                let width = bucket_width(idx);
+                return (lower as f64 + (width as f64 - 1.0) / 2.0) / 1000.0;
+            }
+        }
+        self.max_ms()
+    }
+
+    /// Add every count from `other` into `self`. Bucket layout is fixed, so
+    /// merge is exact and associative.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Non-empty buckets as `(le_ms, count)` pairs, where `le_ms` is the
+    /// inclusive upper bound of the bucket in milliseconds and `count` is
+    /// the per-bucket (non-cumulative) count.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                let le = (bucket_lower(idx) + bucket_width(idx) - 1) as f64 / 1000.0;
+                out.push((le, c));
+            }
+        }
+        out
+    }
+
+    /// JSON exposition: array of `[le_ms, count]` pairs (non-cumulative).
+    pub fn buckets_json(&self) -> Value {
+        Value::Arr(
+            self.nonzero_buckets()
+                .into_iter()
+                .map(|(le, c)| Value::Arr(vec![Value::Num(le), Value::Num(c as f64)]))
+                .collect(),
+        )
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us as f64 / 1000.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WindowCounter
+// ---------------------------------------------------------------------------
+
+/// Ring length in seconds: enough for a 5-minute window.
+pub const RATE_SLOTS: u64 = 300;
+
+/// Windowed event counter: a ring of 300 one-second slots. `rate_at(now, w)`
+/// averages the last `w` slots (clamped to elapsed lifetime, so a counter
+/// that is 3 s old reports a rate over 3 s, not `w`). The deterministic
+/// `_at(sec)` API takes seconds-since-start so tests need no clock.
+#[derive(Clone)]
+pub struct WindowCounter {
+    slots: Vec<u64>,
+    last_sec: u64,
+    lifetime: u64,
+}
+
+impl Default for WindowCounter {
+    fn default() -> Self {
+        WindowCounter { slots: vec![0; RATE_SLOTS as usize], last_sec: 0, lifetime: 0 }
+    }
+}
+
+impl WindowCounter {
+    pub fn new() -> WindowCounter {
+        WindowCounter::default()
+    }
+
+    /// Zero every slot between the last-seen second and `now_sec`.
+    fn advance(&mut self, now_sec: u64) {
+        if now_sec <= self.last_sec {
+            return;
+        }
+        if now_sec - self.last_sec >= RATE_SLOTS {
+            for s in self.slots.iter_mut() {
+                *s = 0;
+            }
+        } else {
+            for s in self.last_sec + 1..=now_sec {
+                self.slots[(s % RATE_SLOTS) as usize] = 0;
+            }
+        }
+        self.last_sec = now_sec;
+    }
+
+    pub fn record_at(&mut self, now_sec: u64, n: u64) {
+        self.advance(now_sec);
+        self.slots[(now_sec % RATE_SLOTS) as usize] += n;
+        self.lifetime += n;
+    }
+
+    /// Events per second over the trailing `window_secs` (≤ 300) seconds,
+    /// including the current partial second.
+    pub fn rate_at(&mut self, now_sec: u64, window_secs: u64) -> f64 {
+        self.advance(now_sec);
+        let w = window_secs.clamp(1, RATE_SLOTS);
+        let span = w.min(now_sec + 1);
+        let mut sum = 0u64;
+        for k in 0..span {
+            sum += self.slots[((now_sec - k) % RATE_SLOTS) as usize];
+        }
+        sum as f64 / span as f64
+    }
+
+    pub fn lifetime(&self) -> u64 {
+        self.lifetime
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracer
+// ---------------------------------------------------------------------------
+
+/// Span stages along a request's path (and job-plane lifecycle marks).
+///
+/// Payload conventions (`group` / `detail` per stage):
+///
+/// | stage         | group            | detail                      |
+/// |---------------|------------------|-----------------------------|
+/// | `accept`      | 0                | requested samples           |
+/// | `enqueue`     | chunk index      | chunk rows                  |
+/// | `fuse_launch` | fused launch id  | total rows in the launch    |
+/// | `solve`       | fused launch id  | solve wall µs               |
+/// | `scatter`     | fused launch id  | rows scattered back         |
+/// | `respond`     | 0                | request latency µs          |
+/// | `job_queued`  | 0                | 0                           |
+/// | `job_start`   | attempt          | 0                           |
+/// | `job_retry`   | attempt          | backoff wait ms             |
+/// | `job_end`     | attempt          | 0 done / 1 failed / 2 cancelled |
+///
+/// Fused peers share a `fuse_launch` group id — that is how a trace query
+/// reconstructs which member requests rode the same launch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Accept,
+    Enqueue,
+    FuseLaunch,
+    Solve,
+    Scatter,
+    Respond,
+    JobQueued,
+    JobStart,
+    JobRetry,
+    JobEnd,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Enqueue => "enqueue",
+            Stage::FuseLaunch => "fuse_launch",
+            Stage::Solve => "solve",
+            Stage::Scatter => "scatter",
+            Stage::Respond => "respond",
+            Stage::JobQueued => "job_queued",
+            Stage::JobStart => "job_start",
+            Stage::JobRetry => "job_retry",
+            Stage::JobEnd => "job_end",
+        }
+    }
+}
+
+/// One fixed-size span record. `t_us` is microseconds since the tracer's
+/// epoch (process start); `seq` is a global monotone sequence number so
+/// ordering survives the ring.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub id: u64,
+    pub seq: u64,
+    pub stage: Stage,
+    pub t_us: u64,
+    pub group: u64,
+    pub detail: u64,
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    cap: usize,
+    /// Index of the oldest span once the ring is full.
+    head: usize,
+    seq: u64,
+}
+
+/// Request-trace collector: assigns request ids, allocates fused-launch
+/// group ids, and records spans into a preallocated ring. Overflow
+/// overwrites the oldest span and bumps `dropped` — loss is counted, never
+/// silent. With tracing disabled every call is a cheap early-out and no
+/// ids are assigned.
+pub struct Tracer {
+    enabled: AtomicBool,
+    sample_n: AtomicU64,
+    next_id: AtomicU64,
+    next_group: AtomicU64,
+    dropped: AtomicU64,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+pub const DEFAULT_TRACE_RING: usize = 4096;
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(true, DEFAULT_TRACE_RING, 1)
+    }
+}
+
+impl Tracer {
+    pub fn new(enabled: bool, ring_cap: usize, sample_n: u64) -> Tracer {
+        let cap = ring_cap.max(1);
+        Tracer {
+            enabled: AtomicBool::new(enabled),
+            sample_n: AtomicU64::new(sample_n.max(1)),
+            next_id: AtomicU64::new(0),
+            next_group: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring { spans: Vec::with_capacity(cap), cap, head: 0, seq: 0 }),
+        }
+    }
+
+    /// Reconfigure in place (config reload): resets the ring and dropped
+    /// counter; request/group id counters keep running.
+    pub fn configure(&self, enabled: bool, ring_cap: usize, sample_n: u64) {
+        self.enabled.store(enabled, Ordering::Relaxed);
+        self.sample_n.store(sample_n.max(1), Ordering::Relaxed);
+        let cap = ring_cap.max(1);
+        let mut ring = self.ring.lock().unwrap();
+        *ring = Ring { spans: Vec::with_capacity(cap), cap, head: 0, seq: 0 };
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn sample_n(&self) -> u64 {
+        self.sample_n.load(Ordering::Relaxed)
+    }
+
+    pub fn ring_cap(&self) -> usize {
+        self.ring.lock().unwrap().cap
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.ring.lock().unwrap().spans.len()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Assign the next request id, honoring sampling: returns `Some(id)`
+    /// for requests that should be traced, `None` when tracing is off or
+    /// the id is not selected by `trace_sample_n`.
+    pub fn begin_request(&self) -> Option<u64> {
+        if !self.enabled() {
+            return None;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let n = self.sample_n();
+        if n <= 1 || id % n == 0 {
+            Some(id)
+        } else {
+            None
+        }
+    }
+
+    /// Allocate a fused-launch group id shared by the launch's members.
+    pub fn next_group_id(&self) -> u64 {
+        self.next_group.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record one span. O(1); never allocates (the ring vector keeps its
+    /// reserved capacity). A full ring overwrites the oldest span and
+    /// increments `dropped`.
+    pub fn record(&self, id: u64, stage: Stage, group: u64, detail: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let mut ring = self.ring.lock().unwrap();
+        ring.seq += 1;
+        let span = Span { id, seq: ring.seq, stage, t_us, group, detail };
+        if ring.spans.len() < ring.cap {
+            ring.spans.push(span);
+        } else {
+            let head = ring.head;
+            ring.spans[head] = span;
+            ring.head = (head + 1) % ring.cap;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spans in chronological order, optionally filtered by id, keeping at
+    /// most the `limit` most recent.
+    pub fn snapshot(&self, filter_id: Option<u64>, limit: usize) -> Vec<Span> {
+        let ring = self.ring.lock().unwrap();
+        let n = ring.spans.len();
+        let mut out: Vec<Span> = (0..n)
+            .map(|k| ring.spans[(ring.head + k) % n.max(1)])
+            .filter(|s| filter_id.map(|id| s.id == id).unwrap_or(true))
+            .collect();
+        if out.len() > limit {
+            out.drain(..out.len() - limit);
+        }
+        out
+    }
+
+    /// Other request ids that shared a fused launch with `id`: every id
+    /// holding a `fuse_launch` span whose group matches one of `id`'s.
+    pub fn fuse_peers(&self, id: u64) -> Vec<u64> {
+        let ring = self.ring.lock().unwrap();
+        let groups: Vec<u64> = ring
+            .spans
+            .iter()
+            .filter(|s| s.id == id && s.stage == Stage::FuseLaunch)
+            .map(|s| s.group)
+            .collect();
+        let mut peers: Vec<u64> = ring
+            .spans
+            .iter()
+            .filter(|s| s.stage == Stage::FuseLaunch && s.id != id && groups.contains(&s.group))
+            .map(|s| s.id)
+            .collect();
+        peers.sort_unstable();
+        peers.dedup();
+        peers
+    }
+}
+
+/// JSON shape of one span (used by the `trace` command).
+pub fn span_json(s: &Span) -> Value {
+    Value::obj(vec![
+        ("request_id", Value::Num(s.id as f64)),
+        ("seq", Value::Num(s.seq as f64)),
+        ("stage", Value::Str(s.stage.name().into())),
+        ("t_us", Value::Num(s.t_us as f64)),
+        ("group", Value::Num(s.group as f64)),
+        ("detail", Value::Num(s.detail as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// EventLog
+// ---------------------------------------------------------------------------
+
+/// Append-only JSONL sink for lifecycle events with size-based rotation:
+/// when the file exceeds `max_bytes` it is renamed to `<name>.1` (replacing
+/// any previous rotation) and a fresh file is started. Writes are
+/// best-effort — an I/O error drops the line rather than failing serving.
+pub struct EventLog {
+    path: PathBuf,
+    max_bytes: u64,
+    file: Mutex<Option<(std::fs::File, u64)>>,
+}
+
+impl EventLog {
+    pub fn open(path: &Path, max_bytes: u64) -> Result<EventLog> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create event log dir {}", dir.display()))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open event log {}", path.display()))?;
+        let len = file.metadata().map(|m| m.len()).unwrap_or(0);
+        Ok(EventLog {
+            path: path.to_path_buf(),
+            max_bytes: max_bytes.max(4096),
+            file: Mutex::new(Some((file, len))),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append `{"ts":…,"event":…,…}`. Rotates first if the file is over
+    /// the size limit.
+    pub fn log(&self, event: &str, fields: &[(&str, Value)]) {
+        use std::io::Write;
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let mut pairs = vec![("ts", Value::Num(ts)), ("event", Value::Str(event.into()))];
+        for (k, v) in fields {
+            pairs.push((k, v.clone()));
+        }
+        let line = Value::obj(pairs).to_string_compact();
+        let mut guard = self.file.lock().unwrap();
+        if let Some((_, len)) = guard.as_ref() {
+            if *len >= self.max_bytes {
+                *guard = None;
+                let name = self.path.file_name().map(|n| n.to_string_lossy().into_owned());
+                if let Some(name) = name {
+                    let rotated = self.path.with_file_name(format!("{name}.1"));
+                    let _ = std::fs::rename(&self.path, rotated);
+                }
+                if let Ok(f) =
+                    std::fs::OpenOptions::new().create(true).append(true).open(&self.path)
+                {
+                    *guard = Some((f, 0));
+                }
+            }
+        }
+        if let Some((f, len)) = guard.as_mut() {
+            if writeln!(f, "{line}").is_ok() {
+                *len += line.len() as u64 + 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_monotone() {
+        // Every value maps into a bucket whose [lower, lower+width) range
+        // contains it, and bucket lowers are strictly increasing.
+        let mut prev_lower = None;
+        for idx in 0..N_BUCKETS {
+            let lo = bucket_lower(idx);
+            let w = bucket_width(idx);
+            if let Some(p) = prev_lower {
+                assert!(lo > p, "bucket {idx} lower {lo} not > {p}");
+            }
+            prev_lower = Some(lo);
+            assert_eq!(bucket_index(lo), idx);
+            assert_eq!(bucket_index(lo + w - 1), idx);
+        }
+        // Adjacent buckets tile the line: upper(idx)+1 == lower(idx+1).
+        for idx in 0..N_BUCKETS - 1 {
+            assert_eq!(bucket_lower(idx) + bucket_width(idx), bucket_lower(idx + 1));
+        }
+    }
+
+    #[test]
+    fn histogram_exact_below_32us_and_max_exact() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 5, 31] {
+            h.record_us(v);
+        }
+        h.record_us(999_999);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.quantile_ms(0.0), 0.0);
+        assert!((h.quantile_ms(1.0) - 999.999).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_counter_rates() {
+        let mut w = WindowCounter::new();
+        w.record_at(0, 60);
+        assert!((w.rate_at(0, 60) - 60.0).abs() < 1e-9); // 1 elapsed second
+        w.record_at(1, 60);
+        assert!((w.rate_at(1, 60) - 60.0).abs() < 1e-9);
+        // 58 idle seconds: 120 events over a full 60 s window.
+        assert!((w.rate_at(59, 60) - 2.0).abs() < 1e-9);
+        // After the window has fully slid past, the rate is zero.
+        assert_eq!(w.rate_at(1000, 60), 0.0);
+        assert_eq!(w.lifetime(), 120);
+    }
+
+    #[test]
+    fn tracer_sampling_every_nth() {
+        let t = Tracer::new(true, 16, 3);
+        let picks: Vec<bool> = (0..9).map(|_| t.begin_request().is_some()).collect();
+        assert_eq!(picks.iter().filter(|&&b| b).count(), 3);
+        let t_off = Tracer::new(false, 16, 1);
+        assert!(t_off.begin_request().is_none());
+        t_off.record(1, Stage::Accept, 0, 0);
+        assert_eq!(t_off.span_count(), 0);
+    }
+
+    #[test]
+    fn event_log_rotates_by_size() {
+        let dir = std::env::temp_dir()
+            .join(format!("bespoke_obs_evlog_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("events.jsonl");
+        let log = EventLog::open(&path, 4096).unwrap();
+        for _ in 0..200 {
+            log.log("hot_swap", &[("n", Value::Num(1.0))]);
+        }
+        let rotated = dir.join("events.jsonl.1");
+        assert!(rotated.exists(), "rotation never happened");
+        // Every surviving line is valid JSON with ts + event.
+        let body = std::fs::read_to_string(&path).unwrap();
+        for line in body.lines() {
+            let v = Value::parse(line).unwrap();
+            assert!(v.get("ts").is_ok() && v.get("event").is_ok());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,371 @@
+//! Observability-plane integration tests (DESIGN.md §13).
+//!
+//! Pins the contracts that make the serving telemetry trustworthy:
+//!
+//! * histogram quantiles stay within the documented ≤ 1/64 relative error
+//!   of an exact sort, and merge is exact and associative;
+//! * the span ring drops loudly (`trace_dropped`), never silently;
+//! * tracing on vs off leaves sample bytes bitwise identical;
+//! * a `trace` query reconstructs the full request path
+//!   (accept → enqueue → fuse_launch → solve → scatter → respond);
+//! * server-side accounting reconciles exactly with client accounting;
+//! * both exposition formats (JSON shape, Prometheus text) are well formed;
+//! * the JSONL event sink receives lifecycle events and only those.
+//!
+//! Artifact-free: everything runs on the analytic fixture zoo.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bespoke_flow::config::{ObsConfig, ServeConfig};
+use bespoke_flow::coordinator::{handle_line, Coordinator, ServerState};
+use bespoke_flow::json::Value;
+use bespoke_flow::models::Zoo;
+use bespoke_flow::runtime::Manifest;
+use bespoke_flow::testing::loadgen::{self, LoadSpec, ServerAccounting};
+use bespoke_flow::util::obs::{Histogram, Stage, Tracer};
+use bespoke_flow::util::rng::Rng;
+
+fn fixture_zoo() -> Arc<Zoo> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/zoo");
+    Arc::new(Zoo::new(Arc::new(Manifest::load(&dir).unwrap())))
+}
+
+fn small_spec() -> LoadSpec {
+    let mut spec = LoadSpec::new("checker2-ot", "rk2:n=4");
+    spec.clients = 4;
+    spec.requests_per_client = 6;
+    spec.n_choices = vec![1, 2, 4];
+    spec.seed = 11;
+    spec
+}
+
+/// Nearest-rank quantile on a sorted µs slice — the exact-sort reference
+/// the histogram documents its error bound against (same rank rule).
+fn exact_quantile_ms(sorted_us: &[u64], q: f64) -> f64 {
+    let rank = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[rank.min(sorted_us.len() - 1)] as f64 / 1000.0
+}
+
+#[test]
+fn histogram_quantiles_match_exact_sort_within_error_bound() {
+    // Two seeded shapes: uniform µs, and a heavy tail spanning ~6 decades.
+    let distributions: Vec<(&str, Box<dyn Fn(&mut Rng) -> u64>)> = vec![
+        ("uniform", Box::new(|r: &mut Rng| (r.uniform() as f64 * 200_000.0) as u64)),
+        (
+            "heavy_tail",
+            Box::new(|r: &mut Rng| ((r.uniform() as f64).powi(6) * 5.0e7) as u64 + 1),
+        ),
+    ];
+    for (name, gen) in distributions {
+        let mut rng = Rng::new(42);
+        let mut h = Histogram::new();
+        let mut exact: Vec<u64> = Vec::new();
+        for _ in 0..20_000 {
+            let us = gen(&mut rng);
+            h.record_us(us);
+            exact.push(us);
+        }
+        exact.sort_unstable();
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let want = exact_quantile_ms(&exact, q);
+            let got = h.quantile_ms(q);
+            // Documented bound: bucket midpoint within 1/64 of the true
+            // sample (exact below 32 µs, exact at q = 1).
+            let tol = want * (1.0 / 64.0) + 1e-9;
+            assert!(
+                (got - want).abs() <= tol,
+                "{name} p{q}: histogram {got} vs exact {want} (tol {tol})"
+            );
+        }
+        assert_eq!(h.count(), 20_000);
+    }
+}
+
+#[test]
+fn histogram_merge_is_exact_and_associative() {
+    let build = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        let mut h = Histogram::new();
+        for _ in 0..5_000 {
+            h.record_us((rng.uniform() as f64 * 3.0e6) as u64);
+        }
+        h
+    };
+    let (a, b, c) = (build(1), build(2), build(3));
+
+    // (a + b) + c
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    // a + (b + c)
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a.clone();
+    right.merge(&bc);
+
+    assert_eq!(left.count(), right.count());
+    assert_eq!(left.count(), 15_000);
+    assert_eq!(left.nonzero_buckets(), right.nonzero_buckets());
+    assert_eq!(left.max_ms(), right.max_ms());
+    assert_eq!(left.sum_ms(), right.sum_ms());
+    for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+        assert_eq!(left.quantile_ms(q), right.quantile_ms(q));
+    }
+
+    // Merging equals recording everything into one histogram directly.
+    let mut direct = Histogram::new();
+    for seed in [1, 2, 3] {
+        let mut rng = Rng::new(seed);
+        for _ in 0..5_000 {
+            direct.record_us((rng.uniform() as f64 * 3.0e6) as u64);
+        }
+    }
+    assert_eq!(direct.nonzero_buckets(), left.nonzero_buckets());
+}
+
+#[test]
+fn histogram_memory_stays_bounded_under_bulk_load() {
+    // 200k records land in a fixed 1024-bucket table: the exposition can
+    // never exceed 1024 entries no matter the load (the §13 boundedness
+    // claim behind "Metrics stays bounded under a 100k-request loadgen").
+    let mut rng = Rng::new(7);
+    let mut h = Histogram::new();
+    for _ in 0..200_000 {
+        h.record_us(rng.next_u64() % 60_000_000);
+    }
+    assert_eq!(h.count(), 200_000);
+    assert!(h.nonzero_buckets().len() <= bespoke_flow::util::obs::N_BUCKETS);
+}
+
+#[test]
+fn trace_ring_overflow_counts_drops() {
+    let t = Tracer::new(true, 64, 1);
+    for i in 0..100u64 {
+        t.record(i, Stage::Accept, 0, i);
+    }
+    assert_eq!(t.span_count(), 64, "ring must stay at capacity");
+    assert_eq!(t.dropped(), 36, "overflow must be counted, not silent");
+    // The snapshot holds the most recent spans in chronological order.
+    let spans = t.snapshot(None, usize::MAX);
+    assert_eq!(spans.len(), 64);
+    assert!(spans.windows(2).all(|w| w[0].seq < w[1].seq));
+    assert_eq!(spans[0].id, 36);
+    assert_eq!(spans[63].id, 99);
+    // Reconfiguring resets both the ring and the dropped counter.
+    t.configure(true, 64, 1);
+    assert_eq!(t.span_count(), 0);
+    assert_eq!(t.dropped(), 0);
+}
+
+#[test]
+fn tracing_on_off_leaves_sample_bytes_bitwise_identical() {
+    let spec = small_spec();
+    let coord_on = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    let coord_off = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    // Tiny ring on the traced side: even overflow must not perturb bytes.
+    coord_on.metrics.tracer().configure(true, 32, 1);
+    coord_off.metrics.apply_obs(&ObsConfig { trace: false, ..ObsConfig::default() }).unwrap();
+
+    let on = loadgen::run_traced(&coord_on, &spec).unwrap();
+    let off = loadgen::run_traced(&coord_off, &spec).unwrap();
+
+    assert!(on.report.requests > 0);
+    assert!(
+        on.bitwise_matches(&off),
+        "sample bytes differ between tracing on and off"
+    );
+    assert!(coord_on.metrics.tracer().span_count() > 0, "traced run recorded no spans");
+    assert_eq!(coord_off.metrics.tracer().span_count(), 0, "disabled tracer recorded spans");
+}
+
+#[test]
+fn trace_query_reconstructs_the_full_span_path() {
+    let state = ServerState::sampling_only(Arc::new(Coordinator::new(
+        fixture_zoo(),
+        ServeConfig::default(),
+    )));
+    let v = handle_line(
+        &state,
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"rk2:n=4","n_samples":3,"seed":7,"return_samples":true}"#,
+    );
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{}", v.to_string_compact());
+    let id = v.get("request_id").unwrap().as_f64().unwrap() as u64;
+    assert!(id > 0);
+
+    let t = handle_line(&state, &format!(r#"{{"cmd":"trace","id":{id}}}"#));
+    assert!(t.get("ok").unwrap().as_bool().unwrap());
+    assert!(t.get("enabled").unwrap().as_bool().unwrap());
+    assert_eq!(t.get("dropped").unwrap().as_f64().unwrap(), 0.0);
+    // Filtering by id returns the fusion peer list (empty for a lone
+    // request, but always present).
+    assert!(t.get("peers").unwrap().as_arr().is_ok());
+
+    let spans = t.get("spans").unwrap().as_arr().unwrap();
+    let stages: Vec<&str> =
+        spans.iter().map(|s| s.get("stage").unwrap().as_str().unwrap()).collect();
+    for want in ["accept", "enqueue", "fuse_launch", "solve", "scatter", "respond"] {
+        assert!(stages.contains(&want), "stage {want} missing from {stages:?}");
+    }
+    // Every span belongs to the filtered request and timestamps are
+    // monotone in sequence order.
+    for s in spans {
+        assert_eq!(s.get("request_id").unwrap().as_f64().unwrap() as u64, id);
+    }
+    let seqs: Vec<f64> = spans.iter().map(|s| s.get("seq").unwrap().as_f64().unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "spans out of order: {seqs:?}");
+    // The accept span carries the requested row count; respond carries a
+    // latency in µs.
+    let accept = spans
+        .iter()
+        .find(|s| s.get("stage").unwrap().as_str().unwrap() == "accept")
+        .unwrap();
+    assert_eq!(accept.get("detail").unwrap().as_f64().unwrap(), 3.0);
+
+    // An unfiltered trace also includes the spans (no peers key).
+    let all = handle_line(&state, r#"{"cmd":"trace"}"#);
+    assert!(all.get("ok").unwrap().as_bool().unwrap());
+    assert!(all.get("peers").is_err());
+    assert!(!all.get("spans").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn loadgen_reconciles_with_server_accounting() {
+    let spec = small_spec();
+    let coord = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    let before = ServerAccounting::capture(&coord.metrics);
+    let run = loadgen::run(&coord, &spec).unwrap();
+    let delta = ServerAccounting::capture(&coord.metrics).delta(&before);
+
+    assert_eq!(
+        loadgen::reconcile(&delta, run.report.requests as u64, run.report.rows as u64, 0),
+        None,
+        "server books disagree with client accounting: {delta:?}"
+    );
+    // Every accepted row was solved exactly once in a quiet run.
+    assert_eq!(delta.rows_used, delta.samples);
+    // And a perturbed ledger is caught.
+    assert!(loadgen::reconcile(&delta, run.report.requests as u64 + 1, run.report.rows as u64, 0)
+        .is_some());
+}
+
+#[test]
+fn metrics_json_keeps_shape_and_gains_obs_sections() {
+    let spec = small_spec();
+    let coord = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    loadgen::run(&coord, &spec).unwrap();
+
+    let snap = coord.metrics.snapshot();
+    assert!(snap.get("ok").unwrap().as_bool().unwrap());
+    assert!(snap.get("uptime_secs").unwrap().as_f64().unwrap() >= 0.0);
+    let routes = snap.get("per_route").unwrap().as_obj().unwrap();
+    assert!(!routes.is_empty());
+    for (route, e) in routes {
+        // Pre-§13 keys keep their names...
+        for key in ["requests", "samples", "batches", "nfe", "samples_per_sec", "latency_p50_ms"] {
+            assert!(e.get(key).is_ok(), "route {route} lost key {key}");
+        }
+        // ...and the histogram/windowed additions are present.
+        for key in ["samples_per_sec_5m", "latency_mean_ms", "latency_max_ms", "latency_buckets"] {
+            assert!(e.get(key).is_ok(), "route {route} missing key {key}");
+        }
+        // A just-finished run must register as current load, not be
+        // diluted by lifetime uptime.
+        assert!(e.get("samples_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!e.get("latency_buckets").unwrap().as_arr().unwrap().is_empty());
+    }
+    let obs = snap.get("obs").unwrap();
+    for key in ["trace_enabled", "trace_ring", "trace_sample_n", "trace_spans", "trace_dropped"] {
+        assert!(obs.get(key).is_ok(), "obs section missing {key}");
+    }
+}
+
+#[test]
+fn prometheus_exposition_is_well_formed() {
+    let spec = small_spec();
+    let coord = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    loadgen::run(&coord, &spec).unwrap();
+
+    let body = coord.metrics.prometheus_text();
+    let mut bucket_cum: Vec<u64> = Vec::new();
+    let mut saw_inf = false;
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.starts_with('#') {
+            let mut parts = line.split_whitespace();
+            assert_eq!(parts.next(), Some("#"));
+            assert_eq!(parts.next(), Some("TYPE"));
+            assert!(parts.next().is_some(), "TYPE line without a metric name: {line}");
+            assert!(
+                matches!(parts.next(), Some("counter" | "gauge" | "histogram")),
+                "unknown metric type: {line}"
+            );
+            continue;
+        }
+        // Sample line: `name{labels} value` or `name value`, value numeric.
+        let (name_part, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("no value on line {line:?}"));
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "unparseable value {value:?} on line {line:?}"
+        );
+        if let Some(open) = name_part.find('{') {
+            assert!(name_part.ends_with('}'), "unclosed label set: {line}");
+            let labels = &name_part[open + 1..name_part.len() - 1];
+            for label in labels.split(',') {
+                let (k, v) = label.split_once('=').unwrap();
+                assert!(!k.is_empty() && v.starts_with('"') && v.ends_with('"'));
+            }
+        }
+        // Histogram buckets must be cumulative and end at +Inf == count.
+        if name_part.contains("_bucket{") {
+            let cum: u64 = value.parse::<f64>().unwrap() as u64;
+            if let Some(prev) = bucket_cum.last() {
+                if !name_part.contains("le=\"+Inf\"") {
+                    assert!(cum >= *prev, "non-cumulative bucket: {line}");
+                }
+            }
+            bucket_cum.push(cum);
+            if name_part.contains("le=\"+Inf\"") {
+                saw_inf = true;
+                bucket_cum.clear();
+            }
+        }
+        samples += 1;
+    }
+    assert!(samples > 0, "empty exposition");
+    assert!(saw_inf, "histogram without a +Inf bucket");
+    assert!(body.contains("bespoke_requests_total"));
+    assert!(body.contains("bespoke_request_latency_ms"));
+    assert!(body.contains("bespoke_trace_dropped_total"));
+}
+
+#[test]
+fn event_log_sink_receives_lifecycle_events_only() {
+    let dir = std::env::temp_dir().join(format!("bespoke_obs_sink_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("events.jsonl");
+
+    let coord = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    coord
+        .metrics
+        .apply_obs(&ObsConfig {
+            event_log: path.to_string_lossy().into_owned(),
+            ..ObsConfig::default()
+        })
+        .unwrap();
+
+    coord.metrics.record_event("serve_reloads");
+    coord.metrics.record_event("hot_swap");
+    coord.metrics.record_event("train_jobs_retried");
+    coord.metrics.record_event("connections"); // hot-path counter: not a lifecycle event
+
+    let body = std::fs::read_to_string(&path).unwrap();
+    let events: Vec<String> = body
+        .lines()
+        .map(|l| Value::parse(l).unwrap().get("event").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(events, vec!["serve_reloads", "hot_swap", "train_jobs_retried"]);
+    assert_eq!(coord.metrics.event_count("connections"), 1, "counter must still count");
+    let _ = std::fs::remove_dir_all(&dir);
+}
