@@ -19,7 +19,7 @@ use bespoke_flow::json::Value;
 use bespoke_flow::models::Zoo;
 use bespoke_flow::quality::{EvalRunner, EvalRunnerDyn};
 use bespoke_flow::registry::{JobManager, Registry, TrainJobManager, ZooRunner};
-use bespoke_flow::util::timer::Percentiles;
+use bespoke_flow::util::Histogram;
 use bespoke_flow::Result;
 
 fn main() -> Result<()> {
@@ -99,10 +99,10 @@ fn main() -> Result<()> {
         }));
     }
 
-    let mut all = Percentiles::default();
+    let mut all = Histogram::new();
     for h in handles {
         for l in h.join().unwrap()? {
-            all.record(l);
+            all.record_ms(l);
         }
     }
     let wall = started.elapsed().as_secs_f64();
@@ -115,10 +115,10 @@ fn main() -> Result<()> {
     );
     println!(
         "client latency: p50={:.1}ms p90={:.1}ms p99={:.1}ms mean={:.1}ms",
-        all.quantile(0.5),
-        all.quantile(0.9),
-        all.quantile(0.99),
-        all.mean()
+        all.quantile_ms(0.5),
+        all.quantile_ms(0.9),
+        all.quantile_ms(0.99),
+        all.mean_ms()
     );
     // --- streaming trajectory ---------------------------------------------
     // The sample_traj command emits one JSONL event per solver step with the

@@ -194,11 +194,32 @@ pub struct ScheduleConfig {
     pub refresh_secs: u64,
     /// Run `registry gc` (with frontier pins) on every tick.
     pub gc: bool,
+    /// Quality-drift sentinel (DESIGN.md §14): replay a tiny fixed-seed
+    /// probe batch per served route every this many seconds, comparing
+    /// sample digests against the pinned golden. 0 = sentinel off.
+    /// Requires `tick_ms > 0` (the sentinel rides the scheduler thread).
+    pub sentinel_secs: u64,
+    /// Probe batch rows per sentinel replay.
+    pub sentinel_rows: usize,
+    /// Fixed RNG seed of the sentinel probe batch.
+    pub sentinel_seed: u64,
+    /// Relative val-RMSE tolerance for the post-hot-swap frontier
+    /// regression check: alert when the freshly swapped artifact's
+    /// val RMSE exceeds the previous one's by more than this fraction.
+    pub sentinel_tol: f64,
 }
 
 impl Default for ScheduleConfig {
     fn default() -> Self {
-        ScheduleConfig { tick_ms: 0, refresh_secs: 0, gc: false }
+        ScheduleConfig {
+            tick_ms: 0,
+            refresh_secs: 0,
+            gc: false,
+            sentinel_secs: 0,
+            sentinel_rows: 4,
+            sentinel_seed: 0x5e17,
+            sentinel_tol: 0.1,
+        }
     }
 }
 
@@ -219,6 +240,19 @@ pub struct ObsConfig {
     pub event_log: String,
     /// Rotate the event log (to `<name>.1`) past this size.
     pub event_log_max_bytes: u64,
+    /// Solver flight recorder (DESIGN.md §14): per-step probe hook
+    /// recording state/velocity magnitudes (and dopri5 accept/reject +
+    /// error norms) per (route, step). Off by default — the probe reads
+    /// every step's state, which costs more than span tracing.
+    pub probe: bool,
+    /// NaN/Inf quarantine guard: scan solve state at step boundaries and
+    /// abort (+ quarantine the artifact) on non-finite rows. Scan-only —
+    /// healthy-sample bytes are identical with the guard on or off.
+    pub guard: bool,
+    /// Kernel-phase timers in the fused solve path (stack_rng /
+    /// model_eval / tensor_ops / scatter), for `server profile` and the
+    /// `bespoke_solve_phase_ms` Prometheus histograms.
+    pub phases: bool,
 }
 
 impl Default for ObsConfig {
@@ -229,6 +263,9 @@ impl Default for ObsConfig {
             trace_sample_n: 1,
             event_log: String::new(),
             event_log_max_bytes: 1 << 20,
+            probe: false,
+            guard: false,
+            phases: false,
         }
     }
 }
@@ -370,6 +407,26 @@ impl Config {
                             "tick_ms" => self.schedule.tick_ms = val.as_usize()? as u64,
                             "refresh_secs" => self.schedule.refresh_secs = val.as_usize()? as u64,
                             "gc" => self.schedule.gc = val.as_bool()?,
+                            "sentinel_secs" => {
+                                self.schedule.sentinel_secs = val.as_usize()? as u64
+                            }
+                            "sentinel_rows" => {
+                                let n = val.as_usize()?;
+                                if n == 0 {
+                                    anyhow::bail!("schedule sentinel_rows must be >= 1");
+                                }
+                                self.schedule.sentinel_rows = n;
+                            }
+                            "sentinel_seed" => {
+                                self.schedule.sentinel_seed = val.as_usize()? as u64
+                            }
+                            "sentinel_tol" => {
+                                let t = val.as_f64()?;
+                                if !t.is_finite() || t < 0.0 {
+                                    anyhow::bail!("schedule sentinel_tol must be finite and >= 0");
+                                }
+                                self.schedule.sentinel_tol = t;
+                            }
                             _ => anyhow::bail!("unknown schedule key {k:?}"),
                         }
                     }
@@ -396,6 +453,9 @@ impl Config {
                             "event_log_max_bytes" => {
                                 self.obs.event_log_max_bytes = val.as_usize()? as u64
                             }
+                            "probe" => self.obs.probe = val.as_bool()?,
+                            "guard" => self.obs.guard = val.as_bool()?,
+                            "phases" => self.obs.phases = val.as_bool()?,
                             _ => anyhow::bail!("unknown obs key {k:?}"),
                         }
                     }
@@ -490,9 +550,13 @@ mod tests {
         assert_eq!(cfg.obs.trace_ring, 4096);
         assert_eq!(cfg.obs.trace_sample_n, 1);
         assert!(cfg.obs.event_log.is_empty());
+        // The numerics hooks default off: they are the only obs features
+        // that touch the solve loop, so silence must be the default.
+        assert!(!cfg.obs.probe && !cfg.obs.guard && !cfg.obs.phases);
         let v = Value::parse(
             r#"{"obs": {"trace": false, "trace_ring": 128, "trace_sample_n": 10,
-                        "event_log": "/tmp/ev.jsonl", "event_log_max_bytes": 65536}}"#,
+                        "event_log": "/tmp/ev.jsonl", "event_log_max_bytes": 65536,
+                        "probe": true, "guard": true, "phases": true}}"#,
         )
         .unwrap();
         cfg.apply(&v).unwrap();
@@ -501,6 +565,7 @@ mod tests {
         assert_eq!(cfg.obs.trace_sample_n, 10);
         assert_eq!(cfg.obs.event_log, "/tmp/ev.jsonl");
         assert_eq!(cfg.obs.event_log_max_bytes, 65_536);
+        assert!(cfg.obs.probe && cfg.obs.guard && cfg.obs.phases);
         // Zero ring / sample_n are config errors, not silent clamps.
         for bad in [
             r#"{"obs": {"trace_ring": 0}}"#,
@@ -522,6 +587,31 @@ mod tests {
         assert_eq!(cfg.schedule.tick_ms, 0);
         assert_eq!(cfg.schedule.refresh_secs, 0);
         assert!(!cfg.schedule.gc);
+        assert_eq!(cfg.schedule.sentinel_secs, 0);
+    }
+
+    #[test]
+    fn sentinel_schedule_knobs() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.schedule.sentinel_rows, 4);
+        assert!((cfg.schedule.sentinel_tol - 0.1).abs() < 1e-12);
+        let v = Value::parse(
+            r#"{"schedule": {"sentinel_secs": 30, "sentinel_rows": 2,
+                             "sentinel_seed": 99, "sentinel_tol": 0.25}}"#,
+        )
+        .unwrap();
+        cfg.apply(&v).unwrap();
+        assert_eq!(cfg.schedule.sentinel_secs, 30);
+        assert_eq!(cfg.schedule.sentinel_rows, 2);
+        assert_eq!(cfg.schedule.sentinel_seed, 99);
+        assert!((cfg.schedule.sentinel_tol - 0.25).abs() < 1e-12);
+        for bad in [
+            r#"{"schedule": {"sentinel_rows": 0}}"#,
+            r#"{"schedule": {"sentinel_tol": -1.0}}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(cfg.apply(&v).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

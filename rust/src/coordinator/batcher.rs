@@ -29,7 +29,7 @@
 //! restart (DESIGN.md §8).
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -42,9 +42,10 @@ use crate::log_info;
 use crate::models::{CountingModel, VelocityModel, Zoo};
 use crate::quality::{Budget, Frontier, FrontierCache};
 use crate::registry::Registry;
-use crate::solvers::{Sampler, SolveSession, SolverSpec};
+use crate::solvers::{Sampler, SessionProbe, SolveSession, SolverSpec, StepInfo};
 use crate::tensor::Tensor;
-use crate::util::obs::Stage;
+use crate::util::numerics::{diff_rms, scan_non_finite, slice_rms, NumericError, Numerics};
+use crate::util::obs::{Stage, Tracer};
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -94,6 +95,14 @@ pub struct SampleResponse {
     /// Per-sample data rows (present when return_samples).
     pub samples: Option<Vec<Vec<f32>>>,
     pub nfe: u64,
+    /// Model evaluations actually performed for this request, *including*
+    /// attempts an adaptive error controller rejected. Equals the measured
+    /// `nfe` (the counting wrapper sees every evaluation); kept as an
+    /// explicit field so clients need no knowledge of which solvers reject.
+    pub nfe_actual: u64,
+    /// Solver step attempts rejected by the error controller (0 for
+    /// fixed-grid solvers).
+    pub steps_rejected: u64,
     /// Number of executable batches this request's rows were spread over.
     pub batches: u64,
     pub queue_ms: f64,
@@ -123,6 +132,11 @@ struct Job {
 struct ChunkDone {
     samples: Option<Vec<Vec<f32>>>,
     nfe: u64,
+    /// Evaluations including rejected adaptive attempts (== `nfe`; see
+    /// [`SampleResponse::nfe_actual`]).
+    nfe_actual: u64,
+    /// Rejected step attempts in this chunk's launch.
+    steps_rejected: u64,
     queue_ms: f64,
     /// Solver wall time of the launch this chunk rode in.
     solve_ms: f64,
@@ -533,6 +547,8 @@ impl Coordinator {
 
         let mut samples = req.return_samples.then(Vec::new);
         let mut nfe = 0u64;
+        let mut nfe_actual = 0u64;
+        let mut steps_rejected = 0u64;
         let mut queue_ms = 0.0f64;
         let mut solve_ms = 0.0f64;
         let mut fused_rows = 0u64;
@@ -543,8 +559,14 @@ impl Coordinator {
             let done = rx.recv().map_err(|_| {
                 self.retire_route_if(&key, &queue);
                 anyhow::Error::new(RouteRetired(key.clone()))
-            })??;
+            })?;
+            let done = match done {
+                Ok(d) => d,
+                Err(e) => return Err(self.on_chunk_error(e, &spec, &key)),
+            };
             nfe += done.nfe;
+            nfe_actual += done.nfe_actual;
+            steps_rejected += done.steps_rejected;
             queue_ms = queue_ms.max(done.queue_ms);
             solve_ms = solve_ms.max(done.solve_ms);
             fused_rows = fused_rows.max(done.fused_rows);
@@ -559,12 +581,63 @@ impl Coordinator {
             n_samples: req.n_samples,
             samples,
             nfe,
+            nfe_actual,
+            steps_rejected,
             batches,
             queue_ms,
             latency_ms,
             solve_ms,
             fused_rows,
         })
+    }
+
+    /// A chunk came back with an error. When it is the numeric guard
+    /// tripping ([`NumericError`]), this is the quarantine state machine
+    /// (DESIGN.md §14): bump the quarantine counters, quarantine the
+    /// registry artifact the route serves (path-form learned specs name a
+    /// checkpoint), raise a structured alert, retire the route so the next
+    /// request re-resolves against healthy artifacts, and re-raise the
+    /// typed error with artifact attribution so the protocol layer emits
+    /// the coded `numeric` rejection. Every other error passes through
+    /// untouched.
+    fn on_chunk_error(&self, e: anyhow::Error, spec: &SolverSpec, key: &str) -> anyhow::Error {
+        let Some(found) = e.downcast_ref::<NumericError>() else {
+            return e;
+        };
+        let mut ne = found.clone();
+        self.metrics.numerics().record_quarantine();
+        self.metrics.record_event("numeric_quarantine");
+        let path = match spec {
+            SolverSpec::Bespoke { path }
+            | SolverSpec::Bns { path }
+            | SolverSpec::Multistep { path } => Some(path.as_str()),
+            _ => None,
+        };
+        if let (Some(registry), Some(path)) = (self.registry.as_ref(), path) {
+            if let Some(rec) = registry.find_by_theta_path(path) {
+                match registry.quarantine(&rec.key, rec.version) {
+                    Ok(changed) => {
+                        if changed {
+                            log_info!(
+                                "quarantined artifact {} v{} after numeric guard trip",
+                                rec.key.label(),
+                                rec.version
+                            );
+                        }
+                        ne.artifact = Some((rec.key.label(), rec.version));
+                    }
+                    Err(err) => {
+                        log_info!("failed to quarantine {}: {err:#}", rec.key.label());
+                    }
+                }
+            }
+        }
+        self.metrics.numerics().push_alert("numeric_quarantine", key, &ne.to_string());
+        // Retire the poisoned route: quarantined versions are excluded from
+        // `best`, so the respawn resolves to a healthy artifact (or fails
+        // loudly when none exists) instead of re-serving this one.
+        self.retire_route(key);
+        anyhow::Error::new(ne).context("sampler failed")
     }
 
     /// Step-streamed trajectory sampling: drives a [`crate::solvers::SolveSession`]
@@ -613,12 +686,29 @@ impl Coordinator {
         }
         let x0 = Tensor::new(data, vec![b, d])?;
 
+        let key = format!("{}/{solver}", req.model);
+        let numerics = self.metrics.numerics();
+        // Trajectory solves run the same probe/guard hooks as the fused
+        // plane (the loop is its own launch, so no fused-launch spans).
+        let hooks = numerics.step_hooks_on().then(|| StepHooks {
+            numerics,
+            tracer: self.metrics.tracer(),
+            route: &key,
+            traced: Vec::new(),
+            dim: d,
+        });
         let counting = CountingModel::new(model.as_ref());
         let mut session = sampler.begin(&x0)?;
         let steps_total = session.steps_total();
         let mut samples = Vec::new();
+        let mut scratch = StepScratch::default();
+        let mut last: Option<StepInfo> = None;
         while !session.is_done() {
             let info = session.step(&counting)?;
+            if let Some(h) = &hooks {
+                h.observe(&*session, &info, &mut scratch)?;
+            }
+            last = Some(info);
             if info.done || info.step % every == 0 {
                 let rows: Vec<Vec<f32>> = (0..req.n_samples)
                     .map(|r| session.state().row(r).to_vec())
@@ -636,9 +726,12 @@ impl Coordinator {
                 })?;
             }
         }
+        let probe = match &last {
+            Some(info) => session.probe(info),
+            None => SessionProbe::default(),
+        };
         let nfe = counting.nfe();
         let latency_ms = started.elapsed().as_secs_f64() * 1e3;
-        let key = format!("{}/{solver}", req.model);
         self.metrics.record_batch(&key, req.n_samples, b, nfe);
         self.metrics
             .record_request(&key, req.n_samples, latency_ms, 0.0, latency_ms);
@@ -646,12 +739,20 @@ impl Coordinator {
             n_samples: req.n_samples,
             samples: Some(samples),
             nfe,
+            nfe_actual: nfe,
+            steps_rejected: probe.rejected,
             batches: 1,
             queue_ms: 0.0,
             latency_ms,
             solve_ms: latency_ms,
             fused_rows: req.n_samples as u64,
         })
+    }
+
+    /// Route keys with live worker pools — the quality-drift sentinel's
+    /// probe set.
+    pub fn served_routes(&self) -> Vec<String> {
+        self.routes.lock().unwrap().keys().cloned().collect()
     }
 
     /// Get (or lazily spawn) the worker pool for a (model, solver) route.
@@ -853,13 +954,42 @@ fn execute_fused<'s>(
         }
     }
 
-    let counting = CountingModel::new(model);
+    let numerics = metrics.numerics();
+    let phases_on = numerics.phases_on();
+    // Phase-timer shim: only interposed when `[obs] phases` is on, so the
+    // default path keeps the bare model (no per-stage clock reads).
+    let timed = TimedModel { inner: model, eval_ns: AtomicU64::new(0) };
+    let base: &dyn VelocityModel = if phases_on { &timed } else { model };
+    let counting = CountingModel::new(base);
+    let hooks = numerics.step_hooks_on().then(|| StepHooks {
+        numerics,
+        tracer,
+        route: key,
+        traced: match launch_group {
+            Some(group) => {
+                jobs.iter().filter_map(|j| j.trace_id.map(|id| (id, group))).collect()
+            }
+            None => Vec::new(),
+        },
+        dim: d,
+    });
+
     let solve_started = Instant::now();
-    let result = stack_noise(&mut jobs, b, d)
-        .and_then(|x0| drive_session(sampler, session, &counting, &x0));
+    let stacked = stack_noise(&mut jobs, b, d);
+    let stack_ms = solve_started.elapsed().as_secs_f64() * 1e3;
+    let drive_started = Instant::now();
+    let result =
+        stacked.and_then(|x0| drive_session(sampler, session, &counting, &x0, hooks.as_ref()));
+    let drive_ms = drive_started.elapsed().as_secs_f64() * 1e3;
     let solve_ms = solve_started.elapsed().as_secs_f64() * 1e3;
     let nfe = counting.nfe();
     metrics.record_batch(key, used.min(b), b, nfe);
+    if phases_on {
+        let eval_ms = timed.eval_ns.load(Ordering::Relaxed) as f64 / 1e6;
+        numerics.record_phase(key, "stack_rng", stack_ms);
+        numerics.record_phase(key, "model_eval", eval_ms);
+        numerics.record_phase(key, "tensor_ops", (drive_ms - eval_ms).max(0.0));
+    }
 
     if let Some(group) = launch_group {
         for j in jobs.iter() {
@@ -870,7 +1000,8 @@ fn execute_fused<'s>(
     }
 
     match result {
-        Ok(out) => {
+        Ok((out, probe)) => {
+            let scatter_started = Instant::now();
             let mut offset = 0usize;
             for j in jobs {
                 let queue_ms = j.enqueued.elapsed().as_secs_f64() * 1e3;
@@ -885,6 +1016,8 @@ fn execute_fused<'s>(
                 let _ = j.reply.send(Ok(ChunkDone {
                     samples,
                     nfe,
+                    nfe_actual: nfe,
+                    steps_rejected: probe.rejected,
                     queue_ms,
                     solve_ms,
                     fused_rows: used as u64,
@@ -893,18 +1026,136 @@ fn execute_fused<'s>(
                     tracer.record(id, Stage::Scatter, group, rows as u64);
                 }
             }
+            if phases_on {
+                numerics.record_phase(
+                    key,
+                    "scatter",
+                    scatter_started.elapsed().as_secs_f64() * 1e3,
+                );
+            }
         }
         Err(e) => {
             // A failed solve may leave the reused session mid-flight;
             // rebuild it on the next launch.
             *session = None;
+            // Guard trips travel typed so the submit layer can attribute +
+            // quarantine and the protocol layer can emit the coded
+            // rejection; everything else flattens to a message as before.
+            let numeric = e.downcast_ref::<NumericError>().cloned();
             let msg = format!("{e:#}");
             for j in jobs {
-                let _ = j
-                    .reply
-                    .send(Err(anyhow::anyhow!("sampler failed: {msg}")));
+                let err = match &numeric {
+                    Some(ne) => anyhow::Error::new(ne.clone()).context("sampler failed"),
+                    None => anyhow::anyhow!("sampler failed: {msg}"),
+                };
+                let _ = j.reply.send(Err(err));
             }
         }
+    }
+}
+
+/// Phase-profiling shim around the route's model: forwards `eval` /
+/// `eval_into` unchanged (bitwise-transparent), accumulating the wall time
+/// spent inside the model — the `model_eval` kernel phase (DESIGN.md §14).
+struct TimedModel<'a> {
+    inner: &'a dyn VelocityModel,
+    eval_ns: AtomicU64,
+}
+
+impl VelocityModel for TimedModel<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor> {
+        let started = Instant::now();
+        let out = self.inner.eval(x, t);
+        self.eval_ns.fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn eval_into(&self, x: &Tensor, t: f32, out: &mut Tensor) -> Result<()> {
+        let started = Instant::now();
+        let r = self.inner.eval_into(x, t, out);
+        self.eval_ns.fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        r
+    }
+}
+
+/// Per-step observation context for [`drive_session`]: present only when
+/// the flight-recorder probe or the NaN/Inf guard is on.
+struct StepHooks<'a> {
+    numerics: &'a Numerics,
+    tracer: &'a Tracer,
+    /// Route key `model/solver` — the flight-recorder bucket.
+    route: &'a str,
+    /// Traced `(request id, launch group)` pairs riding this launch, for
+    /// `solve_step` trace spans.
+    traced: Vec<(u64, u64)>,
+    dim: usize,
+}
+
+/// Mutable per-solve scratch for the hooks: cumulative session-probe
+/// counters (so per-step deltas can be derived) and the previous state
+/// copy the velocity-magnitude proxy diffs against.
+#[derive(Default)]
+struct StepScratch {
+    prev_probe: SessionProbe,
+    prev_state: Vec<f32>,
+}
+
+impl StepHooks<'_> {
+    /// Observe one completed step: guard scan first (a poisoned state must
+    /// abort before it is recorded as if healthy), then flight-recorder
+    /// stats and `solve_step` trace spans. Read-only with respect to the
+    /// session — hooks on or off cannot change sample bytes.
+    fn observe(
+        &self,
+        s: &dyn SolveSession,
+        info: &StepInfo,
+        scratch: &mut StepScratch,
+    ) -> Result<()> {
+        let state = s.state().data();
+        if self.numerics.guard_on() {
+            if let Some((row, _col)) = scan_non_finite(state, self.dim) {
+                let solver = self.route.split_once('/').map_or(self.route, |(_, sp)| sp);
+                return Err(anyhow::Error::new(NumericError {
+                    step: info.step,
+                    row,
+                    solver: solver.to_string(),
+                    artifact: None,
+                }));
+            }
+        }
+        if self.numerics.probe_on() {
+            let probe = s.probe(info);
+            let v_rms = (info.step > 0 && scratch.prev_state.len() == state.len())
+                .then(|| diff_rms(state, &scratch.prev_state));
+            self.numerics.record_step(
+                self.route,
+                info.step,
+                slice_rms(state),
+                v_rms,
+                probe.err_norm,
+                probe.accepted.saturating_sub(scratch.prev_probe.accepted),
+                probe.rejected.saturating_sub(scratch.prev_probe.rejected),
+            );
+            scratch.prev_probe = probe;
+            scratch.prev_state.clear();
+            scratch.prev_state.extend_from_slice(state);
+            for &(id, group) in &self.traced {
+                self.tracer.record(id, Stage::SolveStep, group, info.step as u64);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -929,19 +1180,41 @@ fn stack_noise(jobs: &mut VecDeque<Job>, b: usize, d: usize) -> Result<Tensor> {
 /// Drive the worker's persistent session over `x0`: the first launch opens
 /// it via [`Sampler::begin`], later launches rewind with
 /// [`SolveSession::init`] and reuse its pre-allocated stage buffers.
+/// Returns the final state plus the session's end-of-solve probe (for
+/// `steps_rejected`; reading it is a few loads, so it is unconditional).
 fn drive_session<'s>(
     sampler: &'s dyn Sampler,
     slot: &mut Option<Box<dyn SolveSession + 's>>,
     model: &dyn VelocityModel,
     x0: &Tensor,
-) -> Result<Tensor> {
+    hooks: Option<&StepHooks<'_>>,
+) -> Result<(Tensor, SessionProbe)> {
     match slot {
         Some(s) => s.init(x0)?,
         None => *slot = Some(sampler.begin(x0)?),
     }
     let s = slot.as_mut().expect("session just installed");
-    while !s.is_done() {
-        s.step(model)?;
+    let mut last: Option<StepInfo> = None;
+    match hooks {
+        // Passive fast path: with probe and guard off this is exactly the
+        // pre-observability loop (plus one Copy of the small StepInfo).
+        None => {
+            while !s.is_done() {
+                last = Some(s.step(model)?);
+            }
+        }
+        Some(h) => {
+            let mut scratch = StepScratch::default();
+            while !s.is_done() {
+                let info = s.step(model)?;
+                h.observe(&**s, &info, &mut scratch)?;
+                last = Some(info);
+            }
+        }
     }
-    Ok(s.state().clone())
+    let probe = match &last {
+        Some(info) => s.probe(info),
+        None => SessionProbe::default(),
+    };
+    Ok((s.state().clone(), probe))
 }

@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use crate::config::ObsConfig;
 use crate::json::Value;
+use crate::util::numerics::Numerics;
 use crate::util::obs::{EventLog, Histogram, Tracer, WindowCounter};
 
 #[derive(Default)]
@@ -57,12 +58,17 @@ pub struct Metrics {
     /// Optional JSONL sink for lifecycle events (drain / reload / retry /
     /// cancel / hot-swap), attached via the `[obs]` config table.
     event_log: Mutex<Option<Arc<EventLog>>>,
+    /// Numerical-plane observability: flight recorder, quarantine guard
+    /// toggles/counter, kernel-phase timers, alert ring (DESIGN.md §14).
+    numerics: Numerics,
 }
 
 /// Lifecycle events mirrored to the JSONL sink when one is attached.
 fn is_lifecycle_event(name: &str) -> bool {
-    matches!(name, "server_drains" | "serve_reloads" | "hot_swap")
-        || name.ends_with("_jobs_retried")
+    matches!(
+        name,
+        "server_drains" | "serve_reloads" | "hot_swap" | "numeric_quarantine" | "sentinel_alert"
+    ) || name.ends_with("_jobs_retried")
         || name.ends_with("_jobs_cancelled")
 }
 
@@ -74,6 +80,7 @@ impl Default for Metrics {
             events: Mutex::new(BTreeMap::new()),
             tracer: Tracer::default(),
             event_log: Mutex::new(None),
+            numerics: Numerics::default(),
         }
     }
 }
@@ -85,10 +92,19 @@ impl Metrics {
         &self.tracer
     }
 
+    /// The numerical-plane observability block (DESIGN.md §14) shared by
+    /// the workers (recording), the guard (quarantine counter), the
+    /// sentinel (alerts) and the `profile`/`alerts` commands (exposition).
+    pub fn numerics(&self) -> &Numerics {
+        &self.numerics
+    }
+
     /// Apply the `[obs]` config table: tracer on/off, ring size, sampling,
-    /// and the optional JSONL event sink. Safe to call again on reload.
+    /// numerics toggles, and the optional JSONL event sink. Safe to call
+    /// again on reload.
     pub fn apply_obs(&self, cfg: &ObsConfig) -> Result<()> {
         self.tracer.configure(cfg.trace, cfg.trace_ring, cfg.trace_sample_n);
+        self.numerics.configure(cfg.probe, cfg.guard, cfg.phases);
         let sink = if cfg.event_log.is_empty() {
             None
         } else {
@@ -219,6 +235,10 @@ impl Metrics {
             ("trace_sample_n", Value::Num(self.tracer.sample_n() as f64)),
             ("trace_spans", Value::Num(self.tracer.span_count() as f64)),
             ("trace_dropped", Value::Num(self.tracer.dropped() as f64)),
+            ("numerics", self.numerics.flags_json()),
+            ("numeric_quarantines", Value::Num(self.numerics.quarantines() as f64)),
+            ("alerts_active", Value::Num(self.numerics.alerts_active() as f64)),
+            ("alerts_total", Value::Num(self.numerics.alerts_total() as f64)),
         ]);
         Value::obj(vec![
             ("ok", Value::Bool(true)),
@@ -318,7 +338,51 @@ impl Metrics {
         }
         let _ = writeln!(out, "# TYPE bespoke_trace_dropped_total counter");
         let _ = writeln!(out, "bespoke_trace_dropped_total {}", self.tracer.dropped());
+        // Numerical-plane exposition (DESIGN.md §14): quarantine counter,
+        // alert gauge/counter, per-route rejected adaptive steps, and the
+        // kernel-phase wall-time histograms.
+        let _ = writeln!(out, "# TYPE bespoke_numeric_quarantine_total counter");
+        let _ = writeln!(out, "bespoke_numeric_quarantine_total {}", self.numerics.quarantines());
+        let _ = writeln!(out, "# TYPE bespoke_alerts_active gauge");
+        let _ = writeln!(out, "bespoke_alerts_active {}", self.numerics.alerts_active());
+        let _ = writeln!(out, "# TYPE bespoke_alerts_total counter");
+        let _ = writeln!(out, "bespoke_alerts_total {}", self.numerics.alerts_total());
+        let rejected = self.numerics.rejected_by_route();
+        if !rejected.is_empty() {
+            let _ = writeln!(out, "# TYPE bespoke_steps_rejected_total counter");
+            for (route, n) in rejected {
+                let _ =
+                    writeln!(out, "bespoke_steps_rejected_total{{route=\"{}\"}} {n}", esc(&route));
+            }
+        }
+        let phases = self.numerics.phase_hist_snapshot();
+        if !phases.is_empty() {
+            let name = "bespoke_solve_phase_ms";
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for (route, phase, h) in phases {
+                let labels = format!("route=\"{}\",phase=\"{phase}\"", esc(&route));
+                let mut cum = 0u64;
+                for (le, c) in h.nonzero_buckets() {
+                    cum += c;
+                    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le}\"}} {cum}");
+                }
+                let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {}", h.count());
+                let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum_ms());
+                let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count());
+            }
+        }
         out
+    }
+
+    /// The `{"cmd":"profile"}` payload: numerics toggle state, the kernel-
+    /// phase breakdown per route, and the flight-recorder per-step stats.
+    pub fn profile_json(&self) -> Value {
+        Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("numerics", self.numerics.flags_json()),
+            ("phases", self.numerics.phases_json()),
+            ("flight", self.numerics.flight_json()),
+        ])
     }
 }
 
@@ -413,5 +477,30 @@ mod tests {
         }
         assert!(saw_inf, "histogram without +Inf bucket");
         assert!(text.contains("bespoke_requests_total{route=\"m/rk2:n=4\"} 1"));
+    }
+
+    #[test]
+    fn numerics_exposition_rides_snapshot_and_prometheus() {
+        let m = Metrics::default();
+        m.numerics().record_quarantine();
+        m.numerics().push_alert("numeric_quarantine", "m/rk2:n=4", "nan at step 1");
+        m.numerics().record_phase("m/rk2:n=4", "model_eval", 2.0);
+        m.numerics().record_step("m/rk2:n=4", 0, 1.0, None, Some(0.4), 3, 2);
+        let snap = m.snapshot();
+        let obs = snap.get("obs").unwrap();
+        assert_eq!(obs.get("numeric_quarantines").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(obs.get("alerts_active").unwrap().as_usize().unwrap(), 1);
+        assert!(!obs.get("numerics").unwrap().get("guard").unwrap().as_bool().unwrap());
+        let text = m.prometheus_text();
+        assert!(text.contains("bespoke_numeric_quarantine_total 1"), "{text}");
+        assert!(text.contains("bespoke_alerts_active 1"), "{text}");
+        assert!(text.contains("bespoke_steps_rejected_total{route=\"m/rk2:n=4\"} 2"), "{text}");
+        assert!(
+            text.contains("bespoke_solve_phase_ms_count{route=\"m/rk2:n=4\",phase=\"model_eval\"} 1"),
+            "{text}"
+        );
+        let prof = m.profile_json();
+        assert!(prof.get("phases").unwrap().get("m/rk2:n=4").is_ok());
+        assert!(prof.get("flight").unwrap().get("m/rk2:n=4").is_ok());
     }
 }

@@ -40,5 +40,6 @@ pub mod server;
 pub use batcher::{Coordinator, SampleRequest, SampleResponse, TrajRequest, TrajStep};
 pub use metrics::Metrics;
 pub use server::{
-    handle_line, perform_reload, serve, serve_daemon, spawn_scheduler, Lifecycle, ServerState,
+    handle_line, perform_reload, sentinel_tick, serve, serve_daemon, spawn_scheduler, Lifecycle,
+    SentinelGolden, ServerState,
 };

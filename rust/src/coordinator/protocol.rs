@@ -26,12 +26,18 @@
 //! {"cmd": "trace"}
 //! {"cmd": "trace", "id": 42, "limit": 64}
 //! {"cmd": "metrics_prom"}
+//! {"cmd": "profile"}
+//! {"cmd": "alerts"}
+//! {"cmd": "alerts", "clear": true}
 //! ```
 //!
 //! Response: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
 //! Lifecycle rejections additionally carry a machine-readable `"code"`
 //! (`"overloaded"`, `"draining"`, `"timeout"`, `"cancelled"`) so clients
-//! can distinguish back-pressure from real failures (DESIGN.md §12).
+//! can distinguish back-pressure from real failures (DESIGN.md §12). A
+//! numeric-guard abort carries `"code": "numeric"` plus the trip site
+//! (`step`, `row`, `solver`, and — when the route served a registry
+//! checkpoint — `artifact` / `artifact_version`; DESIGN.md §14).
 //!
 //! `cancel_job` stops a queued/retrying job immediately or a running job at
 //! its next checkpoint (`kind` selects the train or eval plane; default
@@ -56,6 +62,12 @@
 //! request ids that shared its fused launches); `"limit"` caps the span
 //! count (default 256). `metrics_prom` returns the Prometheus text
 //! exposition as a single JSON line (`{"ok": true, "body": "..."}`).
+//!
+//! `profile` returns the numerical-plane observability state (DESIGN.md
+//! §14): toggle flags, per-route kernel-phase timings, and the solver
+//! flight recorder. `alerts` returns the structured alert ring the
+//! quarantine guard and quality-drift sentinel feed; `"clear": true`
+//! empties the ring after snapshotting. Both work while draining.
 //!
 //! `train` enqueues an asynchronous training job (`base`, `ablation`,
 //! `family`, `window`, `iters`, `seed` optional; defaults rk2 / full /
@@ -100,6 +112,12 @@ pub enum Command {
     Trace { id: Option<u64>, limit: usize },
     /// Prometheus text exposition of the metrics snapshot.
     MetricsProm,
+    /// Numerical-plane observability snapshot: toggles, kernel-phase
+    /// timings, flight recorder (DESIGN.md §14).
+    Profile,
+    /// Structured alert ring (quarantines, sentinel drift); `clear` empties
+    /// the ring after snapshotting.
+    Alerts { clear: bool },
 }
 
 pub fn parse_command(line: &str) -> Result<Command> {
@@ -232,6 +250,10 @@ pub fn parse_command(line: &str) -> Result<Command> {
             })
         }
         "metrics_prom" => Ok(Command::MetricsProm),
+        "profile" => Ok(Command::Profile),
+        "alerts" => Ok(Command::Alerts {
+            clear: v.get_opt("clear").map(|c| c.as_bool()).transpose()?.unwrap_or(false),
+        }),
         other => bail!("unknown cmd {other:?}"),
     }
 }
@@ -395,6 +417,8 @@ pub fn response_to_json(resp: &SampleResponse) -> Value {
         ("ok", Value::Bool(true)),
         ("n_samples", Value::Num(resp.n_samples as f64)),
         ("nfe", Value::Num(resp.nfe as f64)),
+        ("nfe_actual", Value::Num(resp.nfe_actual as f64)),
+        ("steps_rejected", Value::Num(resp.steps_rejected as f64)),
         ("batches", Value::Num(resp.batches as f64)),
         ("queue_ms", Value::Num(resp.queue_ms)),
         ("latency_ms", Value::Num(resp.latency_ms)),
@@ -423,6 +447,24 @@ pub fn error_json_coded(code: &str, msg: &str) -> Value {
         ("code", Value::Str(code.into())),
         ("error", Value::Str(msg.into())),
     ])
+}
+
+/// The coded `numeric` rejection a guard trip produces (DESIGN.md §14):
+/// the machine-readable trip site rides beside the human-readable message.
+pub fn numeric_error_json(e: &crate::util::NumericError) -> Value {
+    let mut fields = vec![
+        ("ok", Value::Bool(false)),
+        ("code", Value::Str("numeric".into())),
+        ("error", Value::Str(format!("sampler failed: {e}"))),
+        ("step", Value::Num(e.step as f64)),
+        ("row", Value::Num(e.row as f64)),
+        ("solver", Value::Str(e.solver.clone())),
+    ];
+    if let Some((key, ver)) = &e.artifact {
+        fields.push(("artifact", Value::Str(key.clone())));
+        fields.push(("artifact_version", Value::Num(*ver as f64)));
+    }
+    Value::obj(fields)
 }
 
 #[cfg(test)]
@@ -614,6 +656,46 @@ mod tests {
             parse_command(r#"{"cmd":"metrics_prom"}"#).unwrap(),
             Command::MetricsProm
         ));
+    }
+
+    #[test]
+    fn parses_profile_and_alerts_commands() {
+        assert!(matches!(parse_command(r#"{"cmd":"profile"}"#).unwrap(), Command::Profile));
+        match parse_command(r#"{"cmd":"alerts"}"#).unwrap() {
+            Command::Alerts { clear } => assert!(!clear),
+            _ => panic!("wrong command"),
+        }
+        match parse_command(r#"{"cmd":"alerts","clear":true}"#).unwrap() {
+            Command::Alerts { clear } => assert!(clear),
+            _ => panic!("wrong command"),
+        }
+        assert!(parse_command(r#"{"cmd":"alerts","clear":3}"#).is_err());
+    }
+
+    #[test]
+    fn numeric_errors_carry_the_trip_site() {
+        use crate::util::NumericError;
+        let e = NumericError {
+            step: 2,
+            row: 5,
+            solver: "bespoke:path=p".into(),
+            artifact: Some(("m/rk2/n4/full".into(), 3)),
+        };
+        let v = numeric_error_json(&e);
+        assert!(!v.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "numeric");
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("row").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(v.get("artifact").unwrap().as_str().unwrap(), "m/rk2/n4/full");
+        assert_eq!(v.get("artifact_version").unwrap().as_usize().unwrap(), 3);
+        // without attribution the artifact fields are absent
+        let bare = numeric_error_json(&NumericError {
+            step: 0,
+            row: 0,
+            solver: "rk2:n=4".into(),
+            artifact: None,
+        });
+        assert!(bare.get_opt("artifact").is_none());
     }
 
     #[test]

@@ -33,10 +33,11 @@ pub const MAX_LINE_BYTES: usize = 4 << 20;
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::Coordinator;
+use super::batcher::{Coordinator, SampleRequest};
 use super::protocol::{
     artifact_json, error_json, error_json_coded, eval_job_json, frontier_json, job_json,
-    parse_command, response_to_json, traj_done_json, traj_step_json, Command, JobKind,
+    numeric_error_json, parse_command, response_to_json, traj_done_json, traj_step_json, Command,
+    JobKind,
 };
 use crate::config::{Config, RegistryConfig, ScheduleConfig};
 use crate::json::Value;
@@ -45,7 +46,9 @@ use crate::quality::{frontier_pins, EvalJobManager, EvalJobSpec, EvalRunner};
 use crate::registry::meta::unix_now;
 use crate::registry::{is_overloaded_err, TrainJobManager};
 use crate::util::lifecycle::{signals, DrainGate};
+use crate::util::numerics::diff_rms;
 use crate::util::obs::{span_json, Stage};
+use crate::util::NumericError;
 
 /// Shared daemon-lifecycle state: the draining latch, the in-flight
 /// request counter the drain waits on, the wake address used to unstick a
@@ -284,9 +287,12 @@ fn finish_drain(state: &ServerState) -> Result<()> {
 
 /// Spawn the minimal cron-like maintenance thread (`[schedule]`): every
 /// `tick_ms` it re-evals scorecards staler than `refresh_secs` (job
-/// coalescing dedupes ones already in flight) and, when `gc` is set, runs
-/// registry GC pinned to the quality frontiers. Returns `None` when
-/// `tick_ms == 0` (scheduling off). The thread exits when drain begins.
+/// coalescing dedupes ones already in flight), when `gc` is set runs
+/// registry GC pinned to the quality frontiers, and when `sentinel_secs`
+/// is set runs the quality-drift sentinel ([`sentinel_tick`]) at that
+/// cadence (lower-bounded by the tick itself). Returns `None` when
+/// `tick_ms == 0` (scheduling off — the sentinel therefore requires a
+/// live tick). The thread exits when drain begins.
 pub fn spawn_scheduler(
     state: &ServerState,
     schedule: &ScheduleConfig,
@@ -296,28 +302,153 @@ pub fn spawn_scheduler(
     }
     let state = state.clone();
     let schedule = schedule.clone();
-    Some(std::thread::spawn(move || loop {
-        let mut slept = 0u64;
-        while slept < schedule.tick_ms {
+    Some(std::thread::spawn(move || {
+        // Sentinel goldens live for the scheduler thread's lifetime: pinned
+        // on first sight of a route, re-pinned across hot-swaps.
+        let mut goldens: BTreeMap<String, SentinelGolden> = BTreeMap::new();
+        let mut last_sentinel = Instant::now();
+        loop {
+            let mut slept = 0u64;
+            while slept < schedule.tick_ms {
+                if state.lifecycle.is_draining() {
+                    return;
+                }
+                let step = (schedule.tick_ms - slept).min(100);
+                std::thread::sleep(Duration::from_millis(step));
+                slept += step;
+            }
             if state.lifecycle.is_draining() {
                 return;
             }
-            let step = (schedule.tick_ms - slept).min(100);
-            std::thread::sleep(Duration::from_millis(step));
-            slept += step;
+            let tick_start = Instant::now();
+            scheduler_tick(&state, &schedule);
+            if schedule.sentinel_secs > 0
+                && last_sentinel.elapsed().as_secs() >= schedule.sentinel_secs
+            {
+                last_sentinel = Instant::now();
+                sentinel_tick(&state, &schedule, &mut goldens);
+            }
+            // Tick stats: how often maintenance runs and its cumulative cost.
+            state.coord.metrics.record_event("schedule_ticks");
+            state
+                .coord
+                .metrics
+                .record_event_add("schedule_tick_us", tick_start.elapsed().as_micros() as u64);
         }
-        if state.lifecycle.is_draining() {
-            return;
-        }
-        let tick_start = Instant::now();
-        scheduler_tick(&state, &schedule);
-        // Tick stats: how often maintenance runs and its cumulative cost.
-        state.coord.metrics.record_event("schedule_ticks");
-        state
-            .coord
-            .metrics
-            .record_event_add("schedule_tick_us", tick_start.elapsed().as_micros() as u64);
     }))
+}
+
+/// One pinned sentinel golden (DESIGN.md §14): the fixed-seed probe's
+/// flattened sample rows plus, for artifact-backed routes, the
+/// `(label, version, val_rmse)` binding the pin was taken under.
+pub struct SentinelGolden {
+    /// Flattened probe sample rows (public so tests can force a drift).
+    pub rows: Vec<f32>,
+    /// `(label, version, val_rmse)` for artifact-backed routes.
+    pub artifact: Option<(String, u64, f32)>,
+}
+
+/// Registry binding of a path-form learned solver spec: the artifact whose
+/// checkpoint the route serves, as `(label, version, val_rmse)`.
+fn artifact_binding(state: &ServerState, solver: &str) -> Option<(String, u64, f32)> {
+    let path = solver
+        .strip_prefix("bespoke:path=")
+        .or_else(|| solver.strip_prefix("bns:path="))
+        .or_else(|| solver.strip_prefix("multistep:path="))?;
+    let rec = state.coord.registry()?.find_by_theta_path(path)?;
+    Some((rec.key.label(), rec.version, rec.val_rmse))
+}
+
+/// One quality-drift sentinel pass (DESIGN.md §14): replay a tiny
+/// fixed-seed probe batch on every live route and compare against the
+/// pinned golden. First sight of a route (or artifact key) pins it. An
+/// artifact hot-swap re-pins under the new version after checking the
+/// registry's `val_rmse` did not regress past `sentinel_tol`
+/// (`frontier_regression`); a same-version mismatch means nondeterminism
+/// or a corrupted checkpoint (`digest_drift`). Alerts land in the
+/// structured ring (`{"cmd":"alerts"}`), the `sentinel_alert` event
+/// counter, and the JSONL event log. Public so tests can drive passes
+/// without waiting out the scheduler cadence.
+pub fn sentinel_tick(
+    state: &ServerState,
+    schedule: &ScheduleConfig,
+    goldens: &mut BTreeMap<String, SentinelGolden>,
+) {
+    for route in state.coord.served_routes() {
+        let Some((model, solver)) = route.split_once('/') else {
+            continue;
+        };
+        let alert = |kind: &str, msg: &str| {
+            state.coord.metrics.numerics().push_alert(kind, &route, msg);
+            state.coord.metrics.record_event("sentinel_alert");
+            log_info!("sentinel [{kind}] {route}: {msg}");
+        };
+        let req = SampleRequest {
+            model: model.to_string(),
+            solver: solver.to_string(),
+            n_samples: schedule.sentinel_rows.max(1),
+            seed: schedule.sentinel_seed,
+            return_samples: true,
+            budget: None,
+        };
+        let resp = match state.coord.submit(&req) {
+            Ok(r) => r,
+            Err(e) => {
+                alert("probe_failed", &format!("{e:#}"));
+                continue;
+            }
+        };
+        let flat: Vec<f32> =
+            resp.samples.unwrap_or_default().into_iter().flatten().collect();
+        // Artifact-backed routes pin per artifact *key* (stable across
+        // hot-swaps) so a version change is visible as such, not as a
+        // brand-new route.
+        let artifact = artifact_binding(state, solver);
+        let key = match &artifact {
+            Some((label, _, _)) => format!("{model}/{label}"),
+            None => route.clone(),
+        };
+        match goldens.get_mut(&key) {
+            None => {
+                goldens.insert(key, SentinelGolden { rows: flat, artifact });
+            }
+            Some(g) => {
+                let swapped = g.artifact.as_ref().map(|(_, v, _)| *v)
+                    != artifact.as_ref().map(|(_, v, _)| *v);
+                if swapped {
+                    if let (Some((label, old_v, old_rmse)), Some((_, new_v, new_rmse))) =
+                        (&g.artifact, &artifact)
+                    {
+                        if (*new_rmse as f64)
+                            > (*old_rmse as f64) * (1.0 + schedule.sentinel_tol)
+                        {
+                            alert(
+                                "frontier_regression",
+                                &format!(
+                                    "{label}: v{old_v} val_rmse {old_rmse} -> v{new_v} \
+                                     val_rmse {new_rmse} (tol {})",
+                                    schedule.sentinel_tol
+                                ),
+                            );
+                        }
+                    }
+                    *g = SentinelGolden { rows: flat, artifact };
+                } else if g.rows != flat {
+                    let drift = diff_rms(&flat, &g.rows);
+                    alert(
+                        "digest_drift",
+                        &format!(
+                            "fixed-seed probe drifted (rms {drift:.3e}) — \
+                             nondeterminism or a corrupted checkpoint"
+                        ),
+                    );
+                    // Re-pin to the drifted output: the alert is the
+                    // record, re-alerting every tick would be a storm.
+                    g.rows = flat;
+                }
+            }
+        }
+    }
 }
 
 fn scheduler_tick(state: &ServerState, schedule: &ScheduleConfig) {
@@ -480,7 +611,13 @@ pub fn handle_connection(state: ServerState, stream: TcpStream) -> Result<()> {
                 });
                 match result {
                     Ok(resp) => write_event(&mut writer, &traj_done_json(&resp))?,
-                    Err(e) => write_event(&mut writer, &error_json(&format!("{e:#}")))?,
+                    Err(e) => {
+                        let v = match e.downcast_ref::<NumericError>() {
+                            Some(ne) => numeric_error_json(ne),
+                            None => error_json(&format!("{e:#}")),
+                        };
+                        write_event(&mut writer, &v)?
+                    }
                 }
             }
             Ok(cmd) => {
@@ -577,7 +714,12 @@ fn dispatch(state: &ServerState, cmd: Command) -> Value {
                     }
                     v
                 }
-                Err(e) => error_json(&format!("{e:#}")),
+                // Guard trips surface as the coded `numeric` rejection with
+                // the machine-readable trip site (DESIGN.md §14).
+                Err(e) => match e.downcast_ref::<NumericError>() {
+                    Some(ne) => numeric_error_json(ne),
+                    None => error_json(&format!("{e:#}")),
+                },
             }
         }
         Command::SampleTraj(_) => {
@@ -687,6 +829,15 @@ fn dispatch(state: &ServerState, cmd: Command) -> Value {
                 ("draining", Value::Bool(true)),
             ])
         }
+        // Observability introspection — both stay available while draining.
+        Command::Profile => coord.metrics.profile_json(),
+        Command::Alerts { clear } => match coord.metrics.numerics().alerts_json(clear) {
+            Value::Obj(mut m) => {
+                m.insert("ok".to_string(), Value::Bool(true));
+                Value::Obj(m)
+            }
+            other => other,
+        },
     }
 }
 

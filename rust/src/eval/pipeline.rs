@@ -14,6 +14,12 @@ pub struct SamplerReport {
     pub sampler: String,
     /// Measured model evaluations per batch (not the nominal count).
     pub nfe: u64,
+    /// Model evaluations actually performed per batch, *including* rejected
+    /// adaptive attempts. `CountingModel` sits under the solver, so every
+    /// stage evaluation is counted whether or not the step was accepted;
+    /// for fixed-grid solvers this equals `nfe`, and for adaptive solvers
+    /// it is the true compute cost of the batch.
+    pub nfe_actual: u64,
     pub rmse: f32,
     pub psnr: f32,
     /// Fréchet distance of generated samples vs GT-solver samples.
@@ -36,6 +42,7 @@ impl SamplerReport {
         Value::obj(vec![
             ("sampler", Value::Str(self.sampler.clone())),
             ("nfe", Value::Num(self.nfe as f64)),
+            ("nfe_actual", Value::Num(self.nfe_actual as f64)),
             ("rmse", Value::num_or_null(self.rmse as f64)),
             ("psnr", Value::num_or_null(self.psnr as f64)),
             ("fd", Value::num_or_null(self.fd)),
@@ -53,9 +60,16 @@ impl SamplerReport {
                 x => x.as_f64(),
             }
         };
+        let nfe = v.get("nfe")?.as_usize()? as u64;
         Ok(SamplerReport {
             sampler: v.get("sampler")?.as_str()?.to_string(),
-            nfe: v.get("nfe")?.as_usize()? as u64,
+            nfe,
+            // Reports written before the field existed had no rejected-stage
+            // accounting; the measured nfe is the best available value.
+            nfe_actual: match v.get_opt("nfe_actual") {
+                Some(x) => x.as_usize()? as u64,
+                None => nfe,
+            },
             rmse: num("rmse")? as f32,
             psnr: num("psnr")? as f32,
             fd: num("fd")?,
@@ -104,6 +118,10 @@ pub fn evaluate_sampler(
     Ok(SamplerReport {
         sampler: sampler.name(),
         nfe,
+        // The counting shim sees every stage evaluation, rejected adaptive
+        // attempts included, so the measured per-batch count *is* the
+        // actual compute cost.
+        nfe_actual: nfe,
         rmse: (rmse_acc / nb) as f32,
         psnr: (psnr_acc / nb) as f32,
         fd,
@@ -165,6 +183,7 @@ mod tests {
         let rep = SamplerReport {
             sampler: "rk2:n=4".into(),
             nfe: 8,
+            nfe_actual: 10,
             rmse: 0.125,
             psnr: 30.5,
             fd: 0.01,
@@ -181,6 +200,13 @@ mod tests {
         let back = SamplerReport::from_json(&crate::json::Value::parse(&text).unwrap()).unwrap();
         assert_eq!(back.sampler, rep.sampler);
         assert_eq!(back.nfe, 8);
+        assert_eq!(back.nfe_actual, 10);
+        // Pre-nfe_actual reports decode with nfe as the fallback.
+        let mut old = rep.to_json();
+        if let crate::json::Value::Obj(m) = &mut old {
+            m.remove("nfe_actual");
+        }
+        assert_eq!(SamplerReport::from_json(&old).unwrap().nfe_actual, 8);
         assert_eq!(back.rmse, rep.rmse);
         assert_eq!(back.psnr, rep.psnr);
         assert_eq!(back.fd, rep.fd);

@@ -50,7 +50,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence == true).
-const BOOL_FLAGS: &[&str] = &["traj", "register", "smoke", "chaos"];
+const BOOL_FLAGS: &[&str] = &["traj", "register", "smoke", "chaos", "clear"];
 
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
@@ -543,8 +543,25 @@ fn run() -> Result<()> {
                     Some(other) => bail!("unknown --format {other:?} (json|prom)"),
                 }
             }
+            // Numerical-plane summary: guard/probe flags, quarantine count,
+            // per-phase timing shares, flight-recorder digest.
+            Some("profile") => send_server_cmd(&load_config(&args)?, r#"{"cmd":"profile"}"#),
+            // Structured alert ring (sentinel + quarantine); --clear drains
+            // the active list after printing (totals survive).
+            Some("alerts") => {
+                let cfg = load_config(&args)?;
+                let line = if args.flags.contains_key("clear") {
+                    r#"{"cmd":"alerts","clear":true}"#
+                } else {
+                    r#"{"cmd":"alerts"}"#
+                };
+                send_server_cmd(&cfg, line)
+            }
             Some(other) => {
-                bail!("unknown server subcommand {other:?} (reload|drain|ping|trace|metrics)")
+                bail!(
+                    "unknown server subcommand {other:?} \
+                     (reload|drain|ping|trace|metrics|profile|alerts)"
+                )
             }
         },
         "registry" => {
@@ -759,12 +776,16 @@ fn run() -> Result<()> {
             Ok(())
         }
         "bench-obs" => {
-            // Tracing-overhead A/B: identical loadgen storms through one
-            // fused coordinator with the span tracer enabled vs disabled,
-            // alternating per repeat so drift hits both modes equally.
-            // Gates: tracing-on wall time within 3% of tracing-off
+            // Observability-overhead A/B, two planes measured back to back
+            // with identical loadgen storms through one fused coordinator,
+            // alternating per repeat so drift hits both modes equally:
+            //   1. span tracer on vs off — writes BENCH_8.json;
+            //   2. numerical plane (per-step probe + non-finite guard +
+            //      phase timers) on vs off — writes BENCH_9.json.
+            // Gates per plane: enabled wall time within 3% of disabled
             // (best-of-repeats), and sample bytes bitwise identical across
-            // the two modes. Writes BENCH_8.json.
+            // modes (the numerics runs are also checked against the
+            // tracer-off baseline).
             let cfg = load_config(&args)?;
             let zoo = open_zoo(&args)?;
             let model = args.flags.get("model").context("--model required")?.clone();
@@ -909,6 +930,95 @@ fn run() -> Result<()> {
                 bail!(
                     "tracing overhead {ratio:.4} exceeds the 3% gate \
                      ({wall_on:.3}s on vs {wall_off:.3}s off)"
+                );
+            }
+
+            // Plane 2 — numerics A/B (tracer stays off from the last
+            // iteration above, so this isolates the numerical plane).
+            let mut nwall_on = f64::INFINITY;
+            let mut nwall_off = f64::INFINITY;
+            let mut nrun_on = None;
+            let mut nrun_off = None;
+            for _ in 0..repeats {
+                coord.metrics.numerics().configure(true, true, true);
+                let r = loadgen::run_traced(&coord, &spec)?;
+                nwall_on = nwall_on.min(r.report.wall_secs);
+                nrun_on = Some(r);
+                coord.metrics.numerics().configure(false, false, false);
+                let r = loadgen::run_traced(&coord, &spec)?;
+                nwall_off = nwall_off.min(r.report.wall_secs);
+                nrun_off = Some(r);
+            }
+            let (nrun_on, nrun_off) = (nrun_on.unwrap(), nrun_off.unwrap());
+            // Three-way byte identity: probe+guard on vs off, and both vs
+            // the tracer A/B's disabled baseline — the guard must be
+            // scan-only on healthy routes.
+            let nbitwise = nrun_on.bitwise_matches(&nrun_off)
+                && nrun_on.bitwise_matches(&run_off);
+            let quarantines = coord.metrics.numerics().quarantines();
+            let nratio = nwall_on / nwall_off.max(1e-9);
+            let npass = nratio <= 1.03;
+            println!(
+                "numerics on  best wall: {nwall_on:.3}s\n\
+                 numerics off best wall: {nwall_off:.3}s\n\
+                 overhead ratio: {nratio:.4} (gate <= 1.03)  pass: {npass}  \
+                 bitwise_match: {nbitwise}  quarantines: {quarantines}"
+            );
+
+            let out9 = args.flags.get("out9").cloned().unwrap_or_else(|| {
+                format!("{}/../BENCH_9.json", env!("CARGO_MANIFEST_DIR"))
+            });
+            let doc9 = bespoke_flow::json::Value::obj(vec![
+                (
+                    "bench",
+                    bespoke_flow::json::Value::Str("numerics-overhead".into()),
+                ),
+                (
+                    "threads",
+                    bespoke_flow::json::Value::Num(bespoke_flow::util::threads::get() as f64),
+                ),
+                ("model", bespoke_flow::json::Value::Str(model.clone())),
+                ("clients", bespoke_flow::json::Value::Num(spec.clients as f64)),
+                (
+                    "requests_per_client",
+                    bespoke_flow::json::Value::Num(spec.requests_per_client as f64),
+                ),
+                ("seed", bespoke_flow::json::Value::Num(spec.seed as f64)),
+                ("repeats", bespoke_flow::json::Value::Num(repeats as f64)),
+                ("wall_on_secs", bespoke_flow::json::Value::Num(nwall_on)),
+                ("wall_off_secs", bespoke_flow::json::Value::Num(nwall_off)),
+                (
+                    "latency_p50_ms_on",
+                    bespoke_flow::json::Value::Num(nrun_on.report.latency_p50_ms),
+                ),
+                (
+                    "latency_p50_ms_off",
+                    bespoke_flow::json::Value::Num(nrun_off.report.latency_p50_ms),
+                ),
+                ("overhead_ratio", bespoke_flow::json::Value::Num(nratio)),
+                ("bitwise_match", bespoke_flow::json::Value::Bool(nbitwise)),
+                (
+                    "quarantines",
+                    bespoke_flow::json::Value::Num(quarantines as f64),
+                ),
+                ("pass", bespoke_flow::json::Value::Bool(npass)),
+            ]);
+            std::fs::write(&out9, doc9.to_string_pretty())
+                .with_context(|| format!("writing {out9}"))?;
+            println!("wrote {out9}");
+            if !nbitwise {
+                bail!(
+                    "sample bytes differ with the numeric guard/probe on — \
+                     the numerical plane is perturbing healthy samples"
+                );
+            }
+            if quarantines != 0 {
+                bail!("guard quarantined {quarantines} healthy route(s) during the bench");
+            }
+            if !npass && !smoke {
+                bail!(
+                    "numerics overhead {nratio:.4} exceeds the 3% gate \
+                     ({nwall_on:.3}s on vs {nwall_off:.3}s off)"
                 );
             }
             Ok(())
@@ -1447,7 +1557,7 @@ COMMANDS:
                                    metrics, metrics_prom, trace, ping,
                                    train, job_status, jobs, evaluate,
                                    eval_status, frontier, cancel_job,
-                                   reload, drain —
+                                   profile, alerts, reload, drain —
                                    one JSON object per line)
                                   daemon lifecycle (DESIGN.md §12):
                                   SIGTERM/SIGINT drain gracefully (in-flight
@@ -1455,7 +1565,12 @@ COMMANDS:
                                   and resume on restart), SIGHUP hot-reloads
                                   --config ([serve]/[quality]/[registry]);
                                   [schedule] tick_ms/refresh_secs/gc enables
-                                  periodic scorecard refresh + registry GC
+                                  periodic scorecard refresh + registry GC;
+                                  [schedule] sentinel_secs/sentinel_rows/
+                                  sentinel_seed/sentinel_tol adds the
+                                  quality-drift sentinel (fixed-seed probe
+                                  per served route, alerts on digest drift
+                                  or post-hot-swap frontier regression)
     jobs cancel <id>              cancel a queued or running server job
         [--kind train|eval]       (running train jobs checkpoint and resume
                                    bitwise on resubmit; default kind train)
@@ -1471,6 +1586,15 @@ COMMANDS:
     server metrics                fetch live metrics over TCP
         [--format json|prom]      (prom prints the Prometheus text
                                    exposition body to stdout)
+    server profile                numerical-plane summary over TCP: probe/
+                                  guard flags, quarantine count, kernel
+                                  phase timing shares (stack_rng/model_eval/
+                                  tensor_ops/scatter), flight-recorder
+                                  per-step digest (DESIGN.md §14)
+    server alerts [--clear]       structured alert ring over TCP (sentinel
+                                  digest drift, frontier regressions,
+                                  numeric quarantines); --clear drains the
+                                  active list, totals survive
     loadgen                       deterministic multi-client load harness:
         --model M  [--solver S[,S2...]]  [--clients 8]  [--requests 32]
         [--n 8[,1,...]]  [--seed S]  [--smoke]  [--out BENCH_5.json]
@@ -1491,13 +1615,15 @@ COMMANDS:
         [--repeats 5]  [--iters I]  [--out BENCH_6.json]
                                   vs stationary base-RK and ab baselines
                                   (artifact-free on the fixture zoo)
-    bench-obs                     tracing-overhead A/B: identical loadgen
-        --model M  [--solver S]   storms with the span tracer on vs off,
+    bench-obs                     observability-overhead A/B: identical
+        --model M  [--solver S]   loadgen storms with the span tracer on vs
         [--clients 8]  [--requests 32]  [--repeats 3]  [--seed S]
-        [--smoke]  [--out BENCH_8.json]
-                                  gates overhead <= 3% (best-of-repeats)
-                                  and bitwise-identical sample bytes;
-                                  writes BENCH_8.json
+        [--smoke]  [--out BENCH_8.json]  [--out9 BENCH_9.json]
+                                  off (BENCH_8), then with the numerical
+                                  plane (step probe + NaN guard + phase
+                                  timers) on vs off (BENCH_9); gates each
+                                  plane's overhead <= 3% (best-of-repeats)
+                                  and bitwise-identical sample bytes
     registry list                 show registered solver artifacts
     registry show                 inspect one key (integrity-checked)
         --model M  --n STEPS  [--base B]  [--ablation A]
@@ -1539,10 +1665,14 @@ GLOBAL FLAGS:
                          max_pending/retry_max_attempts/retry_base_ms/
                          retry_cap_ms, [quality] grid/eval_batches/
                          max_eval_jobs/max_pending, [serve] idle_timeout_ms/
-                         drain_grace_ms, [schedule] tick_ms/refresh_secs/gc,
-                         [obs] trace/trace_ring/trace_sample_n/event_log/
-                         event_log_max_bytes — span tracing + JSONL
-                         lifecycle event sink with size rotation)
+                         drain_grace_ms, [schedule] tick_ms/refresh_secs/gc/
+                         sentinel_secs/sentinel_rows/sentinel_seed/
+                         sentinel_tol, [obs] trace/trace_ring/trace_sample_n/
+                         event_log/event_log_max_bytes/probe/guard/phases —
+                         span tracing + JSONL lifecycle event sink with size
+                         rotation; probe = solver flight recorder, guard =
+                         NaN/Inf quarantine, phases = kernel phase timers,
+                         all default off and bitwise-invisible when off)
     --threads N          compute threads for host kernels (0 = auto;
                          also: BESPOKE_THREADS env, serve.compute_threads)
     --workers N          worker threads per (model, solver) serving route

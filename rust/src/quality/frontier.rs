@@ -296,6 +296,16 @@ pub fn build_frontier(registry: &Registry, model: &str) -> Result<Frontier> {
         if rec.model != model {
             continue;
         }
+        // Numeric quarantine (DESIGN.md §14): scorecards bound to a
+        // quarantined artifact version drop out of the frontier, so budget
+        // routing cannot pick a checkpoint that produced non-finite state.
+        // (`frontier_pins` deliberately does NOT apply this filter: the
+        // quarantined theta must survive gc for the lifting re-eval.)
+        if let Some((key, ver)) = &rec.artifact {
+            if registry.find(key, *ver).is_some_and(|r| r.quarantined) {
+                continue;
+            }
+        }
         let bytes = registry.load_eval_bytes(&rec)?;
         cards.push(
             Scorecard::from_json(&Value::parse(&bytes).context("parsing scorecard")?)

@@ -24,6 +24,10 @@ pub struct ScoreRow {
     pub solver: String,
     /// Measured model evaluations per batch.
     pub nfe: u64,
+    /// Model evaluations actually performed per batch, including rejected
+    /// adaptive attempts (equals `nfe` for fixed-grid solvers; cards
+    /// written before the field existed decode it as `nfe`).
+    pub nfe_actual: u64,
     pub rmse: f32,
     pub psnr: f32,
     pub fd: f64,
@@ -38,6 +42,7 @@ impl ScoreRow {
         ScoreRow {
             solver: solver.to_string(),
             nfe: rep.nfe,
+            nfe_actual: rep.nfe_actual,
             rmse: rep.rmse,
             psnr: rep.psnr,
             fd: rep.fd,
@@ -51,6 +56,7 @@ impl ScoreRow {
         Value::obj(vec![
             ("solver", Value::Str(self.solver.clone())),
             ("nfe", Value::Num(self.nfe as f64)),
+            ("nfe_actual", Value::Num(self.nfe_actual as f64)),
             ("rmse", Value::num_or_null(self.rmse as f64)),
             ("psnr", Value::num_or_null(self.psnr as f64)),
             ("fd", Value::num_or_null(self.fd)),
@@ -67,9 +73,14 @@ impl ScoreRow {
                 x => x.as_f64(),
             }
         };
+        let nfe = v.get("nfe")?.as_usize()? as u64;
         Ok(ScoreRow {
             solver: v.get("solver")?.as_str()?.to_string(),
-            nfe: v.get("nfe")?.as_usize()? as u64,
+            nfe,
+            nfe_actual: match v.get_opt("nfe_actual") {
+                Some(x) => x.as_usize()? as u64,
+                None => nfe,
+            },
             rmse: num("rmse")? as f32,
             psnr: num("psnr")? as f32,
             fd: num("fd")?,
@@ -190,6 +201,7 @@ mod tests {
                 ScoreRow {
                     solver: "rk2:n=2".into(),
                     nfe: 4,
+                    nfe_actual: 4,
                     rmse: 0.5,
                     psnr: 12.0,
                     fd: 0.4,
@@ -200,6 +212,7 @@ mod tests {
                 ScoreRow {
                     solver: "rk2:n=4".into(),
                     nfe: 8,
+                    nfe_actual: 11,
                     rmse: 0.1,
                     psnr: 20.0,
                     fd: 0.1,
@@ -222,8 +235,22 @@ mod tests {
         assert!(back.rows[0].fd_data.is_nan());
         assert_eq!(back.rows[1].fd_data, 0.2);
         assert_eq!(back.rows[1].nfe, 8);
+        assert_eq!(back.rows[1].nfe_actual, 11);
         assert_eq!(back.rows[1].rmse, 0.1);
         assert!(back.artifact.is_none());
+        // Cards written before nfe_actual decode it as nfe.
+        let mut v = card.to_json();
+        if let Value::Obj(m) = &mut v {
+            if let Some(Value::Arr(rows)) = m.get_mut("rows") {
+                for r in rows {
+                    if let Value::Obj(rm) = r {
+                        rm.remove("nfe_actual");
+                    }
+                }
+            }
+        }
+        let legacy = Scorecard::from_json(&v).unwrap();
+        assert_eq!(legacy.rows[1].nfe_actual, 8);
     }
 
     #[test]

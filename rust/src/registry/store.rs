@@ -90,6 +90,13 @@ pub struct ArtifactRecord {
     pub wall_secs: f64,
     pub created_at: u64,
     pub schema_version: u64,
+    /// Numeric quarantine (DESIGN.md §14): set when serving this version
+    /// produced non-finite state. Quarantined versions are excluded from
+    /// [`Registry::best`] (and therefore from spec resolution and budget
+    /// routing) until a re-eval clears the flag. Serialized only when set,
+    /// so pre-quarantine manifests parse and healthy manifests keep their
+    /// exact bytes.
+    pub quarantined: bool,
 }
 
 impl ArtifactRecord {
@@ -112,6 +119,9 @@ impl ArtifactRecord {
         if self.family != Family::Stationary {
             fields.push(("family", Value::Str(self.family.name().into())));
         }
+        if self.quarantined {
+            fields.push(("quarantined", Value::Bool(true)));
+        }
         Value::obj(fields)
     }
 
@@ -131,6 +141,10 @@ impl ArtifactRecord {
             Some(f) => Family::parse(f.as_str()?)?,
             None => Family::Stationary,
         };
+        let quarantined = match v.get_opt("quarantined") {
+            Some(b) => b.as_bool()?,
+            None => false,
+        };
         Ok(ArtifactRecord {
             key: ArtifactKey {
                 model: v.get("model")?.as_str()?.to_string(),
@@ -148,6 +162,7 @@ impl ArtifactRecord {
             wall_secs: v.get("wall_secs")?.as_f64()?,
             created_at: v.get("created_at")?.as_usize()? as u64,
             schema_version,
+            quarantined,
         })
     }
 
@@ -437,6 +452,7 @@ impl Registry {
             wall_secs: meta.wall_secs,
             created_at: meta.created_at,
             schema_version: META_SCHEMA_VERSION,
+            quarantined: false,
         };
         st.records.push(rec.clone());
         self.save_manifest(&mut st)?;
@@ -471,6 +487,7 @@ impl Registry {
                     && r.key.ablation == ablation
                     && base_ok(r.key.base)
                     && family.is_none_or(|f| r.family == f)
+                    && !r.quarantined
             })
             .min_by(|a, b| {
                 a.rmse_rank()
@@ -489,6 +506,46 @@ impl Registry {
             .iter()
             .find(|r| r.key == *key && r.version == version)
             .cloned()
+    }
+
+    /// The record whose theta checkpoint lives at `path` (absolute, as
+    /// produced by [`Registry::theta_path`] / `resolve_spec`). Used by the
+    /// serving plane to attribute a resolved `bespoke:path=...` spec back
+    /// to its registry cell when quarantining (DESIGN.md §14).
+    pub fn find_by_theta_path(&self, path: &str) -> Option<ArtifactRecord> {
+        let want = PathBuf::from(path);
+        let mut st = self.state.lock().unwrap();
+        let _ = self.refresh(&mut st); // serve the previous view on error
+        st.records
+            .iter()
+            .find(|r| self.root.join(&r.file) == want)
+            .cloned()
+    }
+
+    /// Quarantine an artifact version: excluded from [`Registry::best`]
+    /// (so spec resolution, budget routing, and the frontier stop serving
+    /// it) until a re-eval via [`Registry::register_eval`] clears the flag.
+    /// Returns `true` if the flag changed, `false` if it was already set.
+    /// Errors when no such (key, version) is registered.
+    pub fn quarantine(&self, key: &ArtifactKey, version: u64) -> Result<bool> {
+        let mut st = self.state.lock().unwrap();
+        self.refresh(&mut st)?;
+        let rec = st
+            .records
+            .iter_mut()
+            .find(|r| r.key == *key && r.version == version)
+            .with_context(|| {
+                format!(
+                    "cannot quarantine {} v{version}: no such artifact in the registry",
+                    key.label()
+                )
+            })?;
+        if rec.quarantined {
+            return Ok(false);
+        }
+        rec.quarantined = true;
+        self.save_manifest(&mut st)?;
+        Ok(true)
     }
 
     /// Resolve a registry-form spec (`bespoke:model=M:n=8[:base=..][:ablation=..]`,
@@ -699,6 +756,14 @@ impl Registry {
                          artifact in the registry",
                         key.label()
                     );
+                }
+                // A fresh scorecard is the re-eval that lifts a numeric
+                // quarantine (DESIGN.md §14): the version is eligible for
+                // `best` again once someone has re-measured it.
+                for r in st.records.iter_mut() {
+                    if r.key == *key && r.version == ver {
+                        r.quarantined = false;
+                    }
                 }
                 let file = PathBuf::from("artifacts")
                     .join(key.dir_name())

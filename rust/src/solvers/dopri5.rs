@@ -9,7 +9,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{Sampler, SolveSession, StepInfo};
+use super::{Sampler, SessionProbe, SolveSession, StepInfo};
 use crate::models::VelocityModel;
 use crate::tensor::Tensor;
 
@@ -183,6 +183,9 @@ pub struct Dopri5Session {
     /// Attempted (accepted + rejected) steps, for the max_steps guard.
     attempts: usize,
     nfe: usize,
+    /// Scaled error norm of the most recent attempt — flight-recorder
+    /// probe data only, never read by the integrator itself.
+    last_enorm: Option<f64>,
 }
 
 impl Dopri5Session {
@@ -204,6 +207,7 @@ impl Dopri5Session {
             accepted: 0,
             attempts: 0,
             nfe: 0,
+            last_enorm: None,
         }
     }
 
@@ -317,6 +321,7 @@ impl Dopri5Session {
                     enorm = enorm.max((acc / dcols as f64).sqrt());
                 }
             }
+            self.last_enorm = Some(enorm);
 
             let accepted = enorm <= 1.0;
             if accepted {
@@ -372,6 +377,7 @@ impl SolveSession for Dopri5Session {
             self.accepted = 0;
             self.attempts = 0;
             self.nfe = 0;
+            self.last_enorm = None;
         } else {
             *self = Dopri5Session::new(self.cfg, x0, self.record_dense);
         }
@@ -389,6 +395,14 @@ impl SolveSession for Dopri5Session {
 
     fn state(&self) -> &Tensor {
         &self.x
+    }
+
+    fn probe(&self, _last: &StepInfo) -> SessionProbe {
+        SessionProbe {
+            accepted: self.accepted as u64,
+            rejected: (self.attempts - self.accepted) as u64,
+            err_norm: self.last_enorm,
+        }
     }
 }
 

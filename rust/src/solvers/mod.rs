@@ -59,6 +59,22 @@ use anyhow::Result;
 use crate::models::VelocityModel;
 use crate::tensor::Tensor;
 
+/// Numerics probe snapshot read at step boundaries by the solver flight
+/// recorder (DESIGN.md §14). Fixed-grid sessions use the default (every
+/// attempted step is accepted, no embedded error estimate); adaptive
+/// sessions (dopri5) report their accept/reject totals and the error norm
+/// of the most recent attempt.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionProbe {
+    /// Steps accepted since `begin`/`init`.
+    pub accepted: u64,
+    /// Attempts rejected by the error controller since `begin`/`init`.
+    pub rejected: u64,
+    /// Scaled embedded error norm of the most recent attempt (adaptive
+    /// solvers only; acceptance threshold is 1.0).
+    pub err_norm: Option<f64>,
+}
+
 /// Progress report for one completed [`SolveSession::step`].
 #[derive(Clone, Copy, Debug)]
 pub struct StepInfo {
@@ -106,6 +122,15 @@ pub trait SolveSession: Send {
     /// `None` for adaptive solvers.
     fn steps_total(&self) -> Option<usize> {
         None
+    }
+
+    /// Flight-recorder probe (DESIGN.md §14): read-only numerics snapshot
+    /// taken at step boundaries when the `[obs] probe` knob is on. The
+    /// default suits every fixed-grid solver: `step + 1` accepted steps,
+    /// zero rejections, no error estimate. Implementations must not mutate
+    /// solver state — the probe being on or off cannot change sample bytes.
+    fn probe(&self, last: &StepInfo) -> SessionProbe {
+        SessionProbe { accepted: last.step as u64 + 1, rejected: 0, err_norm: None }
     }
 }
 

@@ -1,14 +1,18 @@
 //! Small shared utilities: deterministic RNG, wall-clock timers, logging,
-//! observability primitives (histograms, trace ring, event sink), and the
-//! daemon lifecycle primitives (cancel tokens, retry backoff, signal flags).
+//! observability primitives (histograms, trace ring, event sink), the
+//! numerical-plane observability block (flight recorder, NaN quarantine
+//! guard, phase timers, alerts), and the daemon lifecycle primitives
+//! (cancel tokens, retry backoff, signal flags).
 
 pub mod lifecycle;
+pub mod numerics;
 pub mod obs;
 pub mod rng;
 pub mod threads;
 pub mod timer;
 
 pub use lifecycle::{CancelToken, DrainGate, RetryPolicy};
+pub use numerics::{Numerics, NumericError};
 pub use obs::{EventLog, Histogram, Span, Stage, Tracer, WindowCounter};
 pub use rng::Rng;
 pub use timer::Timer;

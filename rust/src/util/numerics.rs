@@ -1,0 +1,529 @@
+//! Numerical-plane observability (DESIGN.md §14): the solver flight
+//! recorder, the NaN/Inf quarantine guard, kernel-phase timers, and the
+//! structured alert ring the quality-drift sentinel feeds.
+//!
+//! Everything here observes the numerics of a solve without perturbing
+//! them:
+//!
+//! * [`Numerics`] — the shared state block (hung off the coordinator's
+//!   `Metrics`): per-(route, step-index) flight-recorder [`Histogram`]s,
+//!   per-(route, phase) kernel timers, the quarantine counter, and a
+//!   bounded alert ring. All toggles are atomic so a config reload flips
+//!   them without pausing workers.
+//! * [`scan_non_finite`] — the guard's scan: a single branch-free
+//!   exponent-mask pass over the state buffer (vectorization-friendly),
+//!   with an exact `(row, col)` locate only on a hit. Read-only: enabled
+//!   guards can never change sample bytes.
+//! * [`NumericError`] — the typed error a guard trip raises, carrying
+//!   (step, row, solver spec, artifact version) through the reply channel
+//!   so the protocol layer can emit a coded `numeric` rejection and the
+//!   coordinator can quarantine the offending registry artifact.
+//!
+//! The hard invariant mirrors the tracer's (DESIGN.md §13): with probe,
+//! guard and phase timers off, the solve hot path is untouched (one
+//! relaxed atomic load per launch); with them on, sample bytes are still
+//! bitwise identical because every hook is scan/record-only.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::Value;
+use crate::util::obs::Histogram;
+
+// ---------------------------------------------------------------------------
+// NaN/Inf scan
+// ---------------------------------------------------------------------------
+
+/// IEEE-754 single-precision exponent mask: a value is non-finite (NaN or
+/// ±Inf) iff every exponent bit is set.
+const EXP_MASK: u32 = 0x7f80_0000;
+
+/// Scan a `[rows, dim]` row-major buffer for non-finite values. Returns the
+/// first offending `(row, col)` or `None` when every value is finite.
+///
+/// The common (healthy) case is a single pass folding a branch-free
+/// predicate with `|=` — no early exit, no lane-dependent control flow, so
+/// the compiler can autovectorize it. Only when the fold reports a hit does
+/// a second, scalar pass locate the exact index.
+pub fn scan_non_finite(data: &[f32], dim: usize) -> Option<(usize, usize)> {
+    let mut acc = 0u32;
+    for &v in data {
+        acc |= u32::from(v.to_bits() & EXP_MASK == EXP_MASK);
+    }
+    if acc == 0 {
+        return None;
+    }
+    let i = data.iter().position(|v| !v.is_finite()).unwrap_or(0);
+    let d = dim.max(1);
+    Some((i / d, i % d))
+}
+
+/// Root-mean-square of a slice (0.0 when empty). Used by the flight
+/// recorder for state/velocity magnitude stats; never fed back into the
+/// solve.
+pub fn slice_rms(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let ss: f64 = xs.iter().map(|&v| v as f64 * v as f64).sum();
+    (ss / xs.len() as f64).sqrt()
+}
+
+/// RMS of the elementwise difference of two equal-length slices — the
+/// flight recorder's per-step velocity-magnitude proxy (state delta per
+/// step), and the sentinel's drift distance.
+pub fn diff_rms(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let ss: f64 = a[..n].iter().zip(&b[..n]).map(|(&x, &y)| (x as f64 - y as f64).powi(2)).sum();
+    (ss / n as f64).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// NumericError
+// ---------------------------------------------------------------------------
+
+/// Typed non-finite-state error raised by the quarantine guard.
+///
+/// Carried intact (via `anyhow` downcast) from the worker's solve loop
+/// through the fused-launch reply channel to the protocol layer, which
+/// renders it as a coded `numeric` rejection; the coordinator additionally
+/// uses the artifact attribution to quarantine the offending registry
+/// version.
+#[derive(Clone, Debug)]
+pub struct NumericError {
+    /// 0-based solver step at whose boundary the scan tripped.
+    pub step: usize,
+    /// Row (within the fused launch batch) holding the first non-finite
+    /// value.
+    pub row: usize,
+    /// Canonical solver spec string of the session that produced it.
+    pub solver: String,
+    /// Registry attribution `(artifact key label, version)` when the route
+    /// serves a registry artifact; `None` for path/builtin specs.
+    pub artifact: Option<(String, u64)>,
+}
+
+impl std::fmt::Display for NumericError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite state at step {} row {} (solver {})",
+            self.step, self.row, self.solver
+        )?;
+        if let Some((key, ver)) = &self.artifact {
+            write!(f, " [artifact {key} v{ver}]")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for NumericError {}
+
+// ---------------------------------------------------------------------------
+// Flight recorder + phase timers + alerts
+// ---------------------------------------------------------------------------
+
+/// Per-step flight-recorder slots per route. Steps beyond the cap fold
+/// into the last slot so adaptive solvers with long step counts stay
+/// bounded.
+pub const MAX_FLIGHT_STEPS: usize = 64;
+
+/// Alert ring capacity: old alerts are dropped (the lifetime total keeps
+/// counting) so a flapping route cannot grow memory.
+pub const MAX_ALERTS: usize = 256;
+
+/// Kernel phases timed inside the fused solve path (DESIGN.md §14 phase
+/// taxonomy). `stack_rng` covers noise generation + batch stacking,
+/// `model_eval` the velocity-model evaluations, `tensor_ops` the solver's
+/// own tensor arithmetic (solve wall minus model eval), `scatter` the
+/// per-job result copy-out.
+pub const PHASES: [&str; 4] = ["stack_rng", "model_eval", "tensor_ops", "scatter"];
+
+/// One step-index slot of the flight recorder. Magnitudes are recorded
+/// through the µs-domain [`Histogram`] at 1e-3 resolution (value `v` is
+/// stored as `round(v·1000)` µs), which is plenty for O(0.001..1e3)
+/// state/velocity RMS and error norms.
+#[derive(Default, Clone)]
+struct StepStats {
+    x_rms: Histogram,
+    v_rms: Histogram,
+    err_norm: Histogram,
+    accepted: u64,
+    rejected: u64,
+}
+
+/// One structured alert (sentinel drift, frontier regression, quarantine).
+#[derive(Clone, Debug)]
+pub struct Alert {
+    pub kind: String,
+    pub route: String,
+    pub message: String,
+    pub at: f64,
+}
+
+fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+fn hist_stats_json(h: &Histogram) -> Value {
+    Value::obj(vec![
+        ("count", Value::Num(h.count() as f64)),
+        ("mean", Value::Num(h.mean_ms())),
+        ("p50", Value::Num(h.quantile_ms(0.5))),
+        ("p95", Value::Num(h.quantile_ms(0.95))),
+        ("max", Value::Num(h.max_ms())),
+    ])
+}
+
+/// The numerical-plane observability state block. One instance lives on
+/// the coordinator's `Metrics` and is shared by every worker thread.
+///
+/// Toggle reads are relaxed atomics; recorded state sits behind coarse
+/// mutexes that are only taken when the corresponding toggle is on (plus
+/// one uncontended lock per exposition query).
+pub struct Numerics {
+    probe: AtomicBool,
+    guard: AtomicBool,
+    phases: AtomicBool,
+    quarantines: AtomicU64,
+    alerts_total: AtomicU64,
+    flight: Mutex<BTreeMap<String, Vec<StepStats>>>,
+    phase_hists: Mutex<BTreeMap<String, BTreeMap<&'static str, Histogram>>>,
+    alerts: Mutex<std::collections::VecDeque<Alert>>,
+}
+
+impl Default for Numerics {
+    fn default() -> Self {
+        Numerics {
+            probe: AtomicBool::new(false),
+            guard: AtomicBool::new(false),
+            phases: AtomicBool::new(false),
+            quarantines: AtomicU64::new(0),
+            alerts_total: AtomicU64::new(0),
+            flight: Mutex::new(BTreeMap::new()),
+            phase_hists: Mutex::new(BTreeMap::new()),
+            alerts: Mutex::new(std::collections::VecDeque::new()),
+        }
+    }
+}
+
+impl Numerics {
+    /// Reconfigure toggles in place (config reload). Like
+    /// `Tracer::configure`, this resets the recorded flight/phase state so
+    /// an A/B toggle starts from a clean slate; the quarantine counter and
+    /// alert ring persist (they record incidents, not samples).
+    pub fn configure(&self, probe: bool, guard: bool, phases: bool) {
+        self.probe.store(probe, Ordering::Relaxed);
+        self.guard.store(guard, Ordering::Relaxed);
+        self.phases.store(phases, Ordering::Relaxed);
+        self.flight.lock().unwrap().clear();
+        self.phase_hists.lock().unwrap().clear();
+    }
+
+    pub fn probe_on(&self) -> bool {
+        self.probe.load(Ordering::Relaxed)
+    }
+
+    pub fn guard_on(&self) -> bool {
+        self.guard.load(Ordering::Relaxed)
+    }
+
+    pub fn phases_on(&self) -> bool {
+        self.phases.load(Ordering::Relaxed)
+    }
+
+    /// True when any per-step hook is live — the solve loop's single
+    /// relaxed-load fast-path check.
+    pub fn step_hooks_on(&self) -> bool {
+        self.probe_on() || self.guard_on()
+    }
+
+    /// Record one flight-recorder sample for `(route, step)`. `v_rms` is
+    /// absent on the first step (no previous state); `err_norm` only for
+    /// adaptive solvers. `accepted`/`rejected` are per-call deltas.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_step(
+        &self,
+        route: &str,
+        step: usize,
+        x_rms: f64,
+        v_rms: Option<f64>,
+        err_norm: Option<f64>,
+        accepted: u64,
+        rejected: u64,
+    ) {
+        let mut flight = self.flight.lock().unwrap();
+        let steps = flight.entry(route.to_string()).or_default();
+        let idx = step.min(MAX_FLIGHT_STEPS - 1);
+        if steps.len() <= idx {
+            steps.resize_with(idx + 1, StepStats::default);
+        }
+        let s = &mut steps[idx];
+        s.x_rms.record_ms(x_rms);
+        if let Some(v) = v_rms {
+            s.v_rms.record_ms(v);
+        }
+        if let Some(e) = err_norm {
+            s.err_norm.record_ms(e);
+        }
+        s.accepted += accepted;
+        s.rejected += rejected;
+    }
+
+    /// Record one kernel-phase wall time (milliseconds) for `route`.
+    pub fn record_phase(&self, route: &str, phase: &'static str, ms: f64) {
+        let mut hists = self.phase_hists.lock().unwrap();
+        hists.entry(route.to_string()).or_default().entry(phase).or_default().record_ms(ms);
+    }
+
+    /// Bump the quarantine counter; returns the new lifetime total.
+    pub fn record_quarantine(&self) -> u64 {
+        self.quarantines.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Push a structured alert into the bounded ring.
+    pub fn push_alert(&self, kind: &str, route: &str, message: &str) {
+        self.alerts_total.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.alerts.lock().unwrap();
+        if ring.len() >= MAX_ALERTS {
+            ring.pop_front();
+        }
+        ring.push_back(Alert {
+            kind: kind.to_string(),
+            route: route.to_string(),
+            message: message.to_string(),
+            at: unix_now(),
+        });
+    }
+
+    /// Alerts currently retained in the ring.
+    pub fn alerts_active(&self) -> usize {
+        self.alerts.lock().unwrap().len()
+    }
+
+    /// Lifetime alert count (survives ring eviction and `clear`).
+    pub fn alerts_total(&self) -> u64 {
+        self.alerts_total.load(Ordering::Relaxed)
+    }
+
+    /// `{"active":…,"total":…,"alerts":[…]}`, oldest first. `clear` empties
+    /// the ring after snapshotting (the lifetime total is unaffected).
+    pub fn alerts_json(&self, clear: bool) -> Value {
+        let mut ring = self.alerts.lock().unwrap();
+        let alerts: Vec<Value> = ring
+            .iter()
+            .map(|a| {
+                Value::obj(vec![
+                    ("kind", Value::Str(a.kind.clone())),
+                    ("route", Value::Str(a.route.clone())),
+                    ("message", Value::Str(a.message.clone())),
+                    ("at", Value::Num(a.at)),
+                ])
+            })
+            .collect();
+        let active = ring.len();
+        if clear {
+            ring.clear();
+        }
+        Value::obj(vec![
+            ("active", Value::Num(active as f64)),
+            ("total", Value::Num(self.alerts_total() as f64)),
+            ("alerts", Value::Arr(alerts)),
+        ])
+    }
+
+    /// Flight-recorder exposition: per route, an array of per-step stat
+    /// rows (skipping untouched slots).
+    pub fn flight_json(&self) -> Value {
+        let flight = self.flight.lock().unwrap();
+        let mut routes = Vec::new();
+        for (route, steps) in flight.iter() {
+            let rows: Vec<Value> = steps
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.x_rms.count() > 0 || s.accepted > 0 || s.rejected > 0)
+                .map(|(i, s)| {
+                    let mut pairs = vec![
+                        ("step", Value::Num(i as f64)),
+                        ("x_rms", hist_stats_json(&s.x_rms)),
+                        ("accepted", Value::Num(s.accepted as f64)),
+                        ("rejected", Value::Num(s.rejected as f64)),
+                    ];
+                    if s.v_rms.count() > 0 {
+                        pairs.push(("v_rms", hist_stats_json(&s.v_rms)));
+                    }
+                    if s.err_norm.count() > 0 {
+                        pairs.push(("err_norm", hist_stats_json(&s.err_norm)));
+                    }
+                    Value::obj(pairs)
+                })
+                .collect();
+            routes.push((route.as_str(), Value::Arr(rows)));
+        }
+        Value::obj(routes)
+    }
+
+    /// Kernel-phase exposition: per route, per phase, count/mean/quantile
+    /// stats plus each phase's share of the route's total timed wall.
+    pub fn phases_json(&self) -> Value {
+        let hists = self.phase_hists.lock().unwrap();
+        let mut routes = Vec::new();
+        for (route, phases) in hists.iter() {
+            let total: f64 = phases.values().map(|h| h.sum_ms()).sum();
+            let mut cols = Vec::new();
+            for name in PHASES {
+                if let Some(h) = phases.get(name) {
+                    let mut stats = match hist_stats_json(h) {
+                        Value::Obj(m) => m,
+                        _ => unreachable!(),
+                    };
+                    stats.insert("sum_ms".into(), Value::Num(h.sum_ms()));
+                    let share = if total > 0.0 { h.sum_ms() / total } else { 0.0 };
+                    stats.insert("share".into(), Value::Num(share));
+                    cols.push((name, Value::Obj(stats)));
+                }
+            }
+            routes.push((route.as_str(), Value::obj(cols)));
+        }
+        Value::obj(routes)
+    }
+
+    /// Current toggle state, for the `profile` response and `metrics`
+    /// snapshot.
+    pub fn flags_json(&self) -> Value {
+        Value::obj(vec![
+            ("probe", Value::Bool(self.probe_on())),
+            ("guard", Value::Bool(self.guard_on())),
+            ("phases", Value::Bool(self.phases_on())),
+        ])
+    }
+
+    /// Clone of every per-(route, phase) histogram, for the Prometheus
+    /// exposition (which lives in the metrics layer).
+    pub fn phase_hist_snapshot(&self) -> Vec<(String, &'static str, Histogram)> {
+        let hists = self.phase_hists.lock().unwrap();
+        let mut out = Vec::new();
+        for (route, phases) in hists.iter() {
+            for name in PHASES {
+                if let Some(h) = phases.get(name) {
+                    out.push((route.clone(), name, h.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-route rejected-step totals (summed over step slots), for the
+    /// Prometheus exposition.
+    pub fn rejected_by_route(&self) -> Vec<(String, u64)> {
+        let flight = self.flight.lock().unwrap();
+        flight
+            .iter()
+            .map(|(route, steps)| (route.clone(), steps.iter().map(|s| s.rejected).sum()))
+            .filter(|(_, n)| *n > 0)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_finds_first_non_finite() {
+        let mut data = vec![0.5f32; 12]; // 3 rows x 4 cols
+        assert_eq!(scan_non_finite(&data, 4), None);
+        data[9] = f32::NAN;
+        assert_eq!(scan_non_finite(&data, 4), Some((2, 1)));
+        data[9] = f32::INFINITY;
+        assert_eq!(scan_non_finite(&data, 4), Some((2, 1)));
+        data[2] = f32::NEG_INFINITY;
+        assert_eq!(scan_non_finite(&data, 4), Some((0, 2)));
+        // Extreme-but-finite values do not trip the guard.
+        let ok = vec![f32::MAX, f32::MIN_POSITIVE, -0.0, 1e-38];
+        assert_eq!(scan_non_finite(&ok, 2), None);
+    }
+
+    #[test]
+    fn rms_helpers() {
+        assert_eq!(slice_rms(&[]), 0.0);
+        assert!((slice_rms(&[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert!((diff_rms(&[1.0, 2.0], &[1.0, 4.0]) - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn numeric_error_display_carries_attribution() {
+        let e = NumericError {
+            step: 3,
+            row: 7,
+            solver: "bespoke:path=x".into(),
+            artifact: Some(("m/rk2/n4/full".into(), 2)),
+        };
+        let s = e.to_string();
+        assert!(s.contains("step 3") && s.contains("row 7"), "{s}");
+        assert!(s.contains("m/rk2/n4/full") && s.contains("v2"), "{s}");
+    }
+
+    #[test]
+    fn flight_recorder_bounds_and_exposition() {
+        let n = Numerics::default();
+        n.configure(true, false, false);
+        n.record_step("m/rk2:n=4", 0, 1.0, None, None, 1, 0);
+        n.record_step("m/rk2:n=4", 1, 1.5, Some(0.5), Some(0.8), 1, 2);
+        // Step indices beyond the cap fold into the last slot.
+        n.record_step("m/rk2:n=4", MAX_FLIGHT_STEPS + 100, 2.0, None, None, 1, 0);
+        let v = n.flight_json();
+        let rows = v.get("m/rk2:n=4").unwrap();
+        match rows {
+            Value::Arr(rows) => {
+                assert_eq!(rows.len(), 3);
+                let last = rows.last().unwrap();
+                assert_eq!(last.get("step").unwrap().as_usize().unwrap(), MAX_FLIGHT_STEPS - 1);
+            }
+            _ => panic!("expected array"),
+        }
+        assert_eq!(n.rejected_by_route(), vec![("m/rk2:n=4".to_string(), 2)]);
+        // Reconfigure resets recorded state.
+        n.configure(true, true, true);
+        assert_eq!(n.rejected_by_route(), vec![]);
+    }
+
+    #[test]
+    fn phase_share_sums_to_one() {
+        let n = Numerics::default();
+        n.record_phase("r", "model_eval", 3.0);
+        n.record_phase("r", "tensor_ops", 1.0);
+        let v = n.phases_json();
+        let r = v.get("r").unwrap();
+        let me = r.get("model_eval").unwrap().get("share").unwrap().as_f64().unwrap();
+        let to = r.get("tensor_ops").unwrap().get("share").unwrap().as_f64().unwrap();
+        assert!((me + to - 1.0).abs() < 1e-9, "{me} + {to}");
+        assert!(me > to);
+        assert_eq!(n.phase_hist_snapshot().len(), 2);
+    }
+
+    #[test]
+    fn alert_ring_is_bounded_and_clearable() {
+        let n = Numerics::default();
+        for i in 0..MAX_ALERTS + 10 {
+            n.push_alert("digest_drift", "r", &format!("drift {i}"));
+        }
+        assert_eq!(n.alerts_active(), MAX_ALERTS);
+        assert_eq!(n.alerts_total(), (MAX_ALERTS + 10) as u64);
+        let v = n.alerts_json(true);
+        assert_eq!(v.get("active").unwrap().as_usize().unwrap(), MAX_ALERTS);
+        assert_eq!(n.alerts_active(), 0);
+        assert_eq!(n.alerts_total(), (MAX_ALERTS + 10) as u64);
+    }
+}

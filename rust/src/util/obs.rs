@@ -288,6 +288,7 @@ impl WindowCounter {
 /// | `enqueue`     | chunk index      | chunk rows                  |
 /// | `fuse_launch` | fused launch id  | total rows in the launch    |
 /// | `solve`       | fused launch id  | solve wall µs               |
+/// | `solve_step`  | fused launch id  | 0-based solver step index   |
 /// | `scatter`     | fused launch id  | rows scattered back         |
 /// | `respond`     | 0                | request latency µs          |
 /// | `job_queued`  | 0                | 0                           |
@@ -303,6 +304,7 @@ pub enum Stage {
     Enqueue,
     FuseLaunch,
     Solve,
+    SolveStep,
     Scatter,
     Respond,
     JobQueued,
@@ -318,6 +320,7 @@ impl Stage {
             Stage::Enqueue => "enqueue",
             Stage::FuseLaunch => "fuse_launch",
             Stage::Solve => "solve",
+            Stage::SolveStep => "solve_step",
             Stage::Scatter => "scatter",
             Stage::Respond => "respond",
             Stage::JobQueued => "job_queued",

@@ -25,92 +25,3 @@ impl Timer {
     }
 }
 
-/// Exact-percentile estimator backed by a sorted-on-demand buffer, for
-/// *bounded offline* uses (bench repeats, test fixtures). The buffer is
-/// hard-capped at [`Percentiles::CAP`] samples — later records still update
-/// the count/mean but are not retained, so this type can never grow without
-/// bound. Serving-path metrics use [`crate::util::obs::Histogram`], which
-/// is O(1) per record and fixed-size by construction.
-#[derive(Default, Clone)]
-pub struct Percentiles {
-    samples: Vec<f64>,
-    count: usize,
-    sum: f64,
-}
-
-impl Percentiles {
-    /// Retention cap: quantiles are exact up to this many samples.
-    pub const CAP: usize = 65_536;
-
-    pub fn record(&mut self, v: f64) {
-        if self.samples.len() < Self::CAP {
-            self.samples.push(v);
-        }
-        self.count += 1;
-        self.sum += v;
-    }
-
-    pub fn len(&self) -> usize {
-        self.count
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.count == 0
-    }
-
-    /// q in [0, 1]; returns 0.0 when empty. Exact over the retained
-    /// (first [`Percentiles::CAP`]) samples.
-    pub fn quantile(&self, q: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((s.len() - 1) as f64 * q).round() as usize;
-        s[idx]
-    }
-
-    pub fn mean(&self) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        self.sum / self.count as f64
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn percentiles_exact_on_small_sets() {
-        let mut p = Percentiles::default();
-        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
-            p.record(v);
-        }
-        assert_eq!(p.quantile(0.0), 1.0);
-        assert_eq!(p.quantile(0.5), 3.0);
-        assert_eq!(p.quantile(1.0), 5.0);
-        assert!((p.mean() - 3.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn empty_percentiles_are_zero() {
-        let p = Percentiles::default();
-        assert_eq!(p.quantile(0.5), 0.0);
-        assert!(p.is_empty());
-    }
-
-    #[test]
-    fn percentiles_retention_is_capped() {
-        let mut p = Percentiles::default();
-        for i in 0..Percentiles::CAP + 100 {
-            p.record(i as f64);
-        }
-        // Count and mean see every record; the quantile buffer stays capped.
-        assert_eq!(p.len(), Percentiles::CAP + 100);
-        assert_eq!(p.quantile(1.0), (Percentiles::CAP - 1) as f64);
-        let n = (Percentiles::CAP + 100) as f64;
-        assert!((p.mean() - (n - 1.0) / 2.0).abs() < 1e-6);
-    }
-}

@@ -1,0 +1,320 @@
+//! Numerical-plane integration tests (DESIGN.md §14).
+//!
+//! Pins the contracts that make the numerics observability trustworthy:
+//!
+//! * probe + guard + phase timers on vs off leaves sample bytes bitwise
+//!   identical on healthy routes, and the flight recorder / phase timers
+//!   actually populate when enabled;
+//! * a registered artifact whose theta sends the solve non-finite is
+//!   rejected with the coded `numeric` error carrying the trip site
+//!   (step, row, solver, artifact version), quarantined in the registry,
+//!   excluded from `best()` routing, surfaced through `{"cmd":"alerts"}`
+//!   and the Prometheus exposition — and a fresh scorecard lifts the
+//!   quarantine;
+//! * `sample` responses carry `nfe_actual` and `steps_rejected`;
+//! * the quality-drift sentinel pins a golden on first sight, stays quiet
+//!   on deterministic replays, and raises `digest_drift` when the pinned
+//!   golden no longer matches the fixed-seed probe.
+//!
+//! Artifact-free except where the poisoned artifact is the point; the
+//! models come from the analytic fixture zoo.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bespoke_flow::config::{ScheduleConfig, ServeConfig};
+use bespoke_flow::coordinator::{handle_line, sentinel_tick, Coordinator, ServerState};
+use bespoke_flow::models::Zoo;
+use bespoke_flow::quality::{register_scorecard, ScoreRow, Scorecard};
+use bespoke_flow::registry::{ArtifactMeta, Registry, META_SCHEMA_VERSION};
+use bespoke_flow::runtime::Manifest;
+use bespoke_flow::solvers::theta::{Base, Family, RawTheta};
+use bespoke_flow::testing::loadgen::{self, LoadSpec};
+
+fn fixture_zoo() -> Arc<Zoo> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/zoo");
+    Arc::new(Zoo::new(Arc::new(Manifest::load(&dir).unwrap())))
+}
+
+fn temp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bespoke_numerics_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn meta(model: &str, base: Base, n: usize, val_rmse: f32) -> ArtifactMeta {
+    ArtifactMeta {
+        schema_version: META_SCHEMA_VERSION,
+        model: model.into(),
+        base,
+        n,
+        family: Family::Stationary,
+        ablation: "full".into(),
+        best_val_rmse: val_rmse,
+        gt_nfe: 100,
+        wall_secs: 0.5,
+        iters: 2,
+        created_at: 1_753_000_000,
+        history: vec![],
+    }
+}
+
+fn small_spec() -> LoadSpec {
+    let mut spec = LoadSpec::new("checker2-ot", "rk2:n=4");
+    spec.clients = 4;
+    spec.requests_per_client = 6;
+    spec.n_choices = vec![1, 2, 4];
+    spec.seed = 23;
+    spec
+}
+
+/// An identity theta with one `log_s` coefficient pushed past the f32
+/// exponent range: `exp(200)` overflows to +Inf at decode, so the first
+/// scaled step turns the state non-finite — exactly what the guard exists
+/// to catch. The raw bytes themselves stay finite, so registration,
+/// hashing and the integrity-checked load all succeed.
+fn poisoned_theta() -> RawTheta {
+    let mut th = RawTheta::identity(Base::Rk2, 4);
+    let m = th.raw.len() / 4;
+    th.raw[2 * m] = 200.0;
+    th
+}
+
+#[test]
+fn numerics_plane_on_off_is_bitwise_invisible_and_populates_when_on() {
+    let spec = small_spec();
+    let coord_on = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    let coord_off = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    coord_on.metrics.numerics().configure(true, true, true);
+    coord_off.metrics.numerics().configure(false, false, false);
+
+    let on = loadgen::run_traced(&coord_on, &spec).unwrap();
+    let off = loadgen::run_traced(&coord_off, &spec).unwrap();
+
+    assert!(on.report.requests > 0);
+    assert!(
+        on.bitwise_matches(&off),
+        "sample bytes differ with the numeric probe/guard/phases on"
+    );
+    assert_eq!(coord_on.metrics.numerics().quarantines(), 0, "guard tripped on healthy routes");
+
+    // Enabled side: flight recorder and phase timers hold data; the
+    // profile command exposes all three sections.
+    let state = ServerState::sampling_only(coord_on.clone());
+    let p = handle_line(&state, r#"{"cmd":"profile"}"#);
+    assert!(p.get("ok").unwrap().as_bool().unwrap());
+    assert!(p.get("numerics").unwrap().get("probe").unwrap().as_bool().unwrap());
+    let flight = p.get("flight").unwrap().as_obj().unwrap();
+    assert!(!flight.is_empty(), "probe enabled but the flight recorder is empty");
+    for (route, steps) in flight {
+        let steps = steps.as_arr().unwrap();
+        assert!(!steps.is_empty(), "route {route} recorded no step rows");
+        for s in steps {
+            assert!(s.get("x_rms").unwrap().get("mean").is_ok());
+            assert!(s.get("accepted").unwrap().as_f64().unwrap() >= 1.0);
+        }
+    }
+    let phases = p.get("phases").unwrap().as_obj().unwrap();
+    assert!(!phases.is_empty(), "phase timers enabled but empty");
+    for (route, cols) in phases {
+        let cols = cols.as_obj().unwrap();
+        for want in ["stack_rng", "model_eval", "tensor_ops", "scatter"] {
+            assert!(cols.contains_key(want), "route {route} missing phase {want}");
+        }
+        // Shares sum to 1 whenever anything was timed at all (sub-µs
+        // phases can quantize a route's whole ledger to zero).
+        let share_sum: f64 =
+            cols.values().map(|c| c.get("share").unwrap().as_f64().unwrap()).sum();
+        assert!(
+            share_sum == 0.0 || (share_sum - 1.0).abs() < 1e-6,
+            "phase shares sum to {share_sum}"
+        );
+    }
+
+    // Disabled side: nothing recorded anywhere.
+    let off_num = coord_off.metrics.numerics();
+    assert_eq!(off_num.flight_json().as_obj().unwrap().len(), 0);
+    assert_eq!(off_num.phases_json().as_obj().unwrap().len(), 0);
+
+    // Prometheus exposition carries the phase histograms and counters.
+    let body = coord_on.metrics.prometheus_text();
+    assert!(body.contains("bespoke_solve_phase_ms"));
+    assert!(body.contains("bespoke_numeric_quarantine_total 0"));
+}
+
+#[test]
+fn poisoned_artifact_is_rejected_quarantined_and_release_requires_reeval() {
+    let root = temp_root("quarantine");
+    let reg = Arc::new(Registry::open(&root).unwrap());
+    let rec = reg.register(&poisoned_theta(), &meta("checker2-ot", Base::Rk2, 4, 0.5)).unwrap();
+    let key = rec.key.clone();
+
+    let coord = Arc::new(Coordinator::with_registry(
+        fixture_zoo(),
+        ServeConfig::default(),
+        reg.clone(),
+    ));
+    coord.metrics.numerics().configure(true, true, false);
+    let state = ServerState::sampling_only(coord.clone());
+
+    // The sample is rejected with the coded numeric error + trip site.
+    let v = handle_line(
+        &state,
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4","n_samples":2,"seed":3,"return_samples":true}"#,
+    );
+    assert!(!v.get("ok").unwrap().as_bool().unwrap(), "{}", v.to_string_compact());
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "numeric");
+    assert!(v.get("step").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(v.get("row").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(v.get("solver").unwrap().as_str().unwrap().starts_with("bespoke:path="));
+    assert_eq!(v.get("artifact").unwrap().as_str().unwrap(), key.label());
+    assert_eq!(v.get("artifact_version").unwrap().as_f64().unwrap(), 1.0);
+
+    // Quarantined: counted, excluded from best(), persisted in the
+    // manifest (a reopened registry sees it too).
+    assert_eq!(coord.metrics.numerics().quarantines(), 1);
+    assert!(reg.best("checker2-ot", 4, None, None, None).is_none());
+    let reopened = Registry::open(&root).unwrap();
+    assert!(reopened.best("checker2-ot", 4, None, None, None).is_none());
+    assert!(reopened.list()[0].quarantined);
+
+    // Routing exclusion end to end: re-resolving the registry spec now
+    // fails cleanly (no healthy artifact), not with another numeric trip.
+    let again = handle_line(
+        &state,
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"bespoke:model=checker2-ot:n=4","n_samples":2,"seed":3}"#,
+    );
+    assert!(!again.get("ok").unwrap().as_bool().unwrap());
+    assert!(again.get("code").map(|c| c.as_str().unwrap() != "numeric").unwrap_or(true));
+
+    // Visible through the alert ring...
+    let a = handle_line(&state, r#"{"cmd":"alerts"}"#);
+    assert!(a.get("ok").unwrap().as_bool().unwrap());
+    assert!(a.get("active").unwrap().as_f64().unwrap() >= 1.0);
+    let kinds: Vec<&str> = a
+        .get("alerts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.get("kind").unwrap().as_str().unwrap())
+        .collect();
+    assert!(kinds.contains(&"numeric_quarantine"), "alert kinds: {kinds:?}");
+    // ...and the Prometheus exposition.
+    let body = coord.metrics.prometheus_text();
+    assert!(body.contains("bespoke_numeric_quarantine_total 1"), "exposition lost the counter");
+
+    // --clear drains the active ring but keeps the lifetime total.
+    let cleared = handle_line(&state, r#"{"cmd":"alerts","clear":true}"#);
+    assert!(cleared.get("ok").unwrap().as_bool().unwrap());
+    let after = handle_line(&state, r#"{"cmd":"alerts"}"#);
+    assert_eq!(after.get("active").unwrap().as_f64().unwrap(), 0.0);
+    assert!(after.get("total").unwrap().as_f64().unwrap() >= 1.0);
+
+    // A fresh scorecard is the re-eval that lifts the quarantine.
+    let card = Scorecard {
+        schema_version: META_SCHEMA_VERSION,
+        model: "checker2-ot".into(),
+        solver: "bespoke:model=checker2-ot:n=4".into(),
+        artifact: Some((key.clone(), 1)),
+        gt_tol: 1e-5,
+        seed: 1,
+        batches: 1,
+        created_at: 1,
+        rows: vec![ScoreRow {
+            solver: format!("bespoke:path=artifacts/{}/v1.theta.json", key.dir_name()),
+            nfe: 8,
+            nfe_actual: 8,
+            rmse: 0.5,
+            psnr: 10.0,
+            fd: 0.1,
+            swd: 0.1,
+            fd_data: f64::NAN,
+            wall_ms: 1.0,
+        }],
+    };
+    register_scorecard(&reg, &card).unwrap();
+    let back = reg.best("checker2-ot", 4, None, None, None);
+    assert!(back.is_some_and(|r| !r.quarantined), "re-eval must lift the quarantine");
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn sample_responses_report_actual_nfe_and_rejected_steps() {
+    let coord = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    let state = ServerState::sampling_only(coord);
+
+    // Fixed-grid: actual == nominal, nothing rejected.
+    let v = handle_line(
+        &state,
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"rk2:n=4","n_samples":3,"seed":7}"#,
+    );
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{}", v.to_string_compact());
+    let nfe = v.get("nfe").unwrap().as_f64().unwrap();
+    assert_eq!(v.get("nfe_actual").unwrap().as_f64().unwrap(), nfe);
+    assert_eq!(v.get("steps_rejected").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(nfe, 8.0, "rk2:n=4 is two evals per step");
+
+    // Adaptive: the counting model sees every attempt, so nfe already is
+    // the actual cost and the response must agree with itself.
+    let d = handle_line(
+        &state,
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"dopri5:tol=1e-3","n_samples":2,"seed":7}"#,
+    );
+    assert!(d.get("ok").unwrap().as_bool().unwrap(), "{}", d.to_string_compact());
+    let dnfe = d.get("nfe").unwrap().as_f64().unwrap();
+    assert!(dnfe > 0.0);
+    assert_eq!(d.get("nfe_actual").unwrap().as_f64().unwrap(), dnfe);
+    assert!(d.get("steps_rejected").unwrap().as_f64().unwrap() >= 0.0);
+}
+
+#[test]
+fn sentinel_pins_goldens_and_alerts_on_digest_drift() {
+    let coord = Arc::new(Coordinator::new(fixture_zoo(), ServeConfig::default()));
+    let state = ServerState::sampling_only(coord.clone());
+    // Serve one route so the sentinel has something to probe.
+    let v = handle_line(
+        &state,
+        r#"{"cmd":"sample","model":"checker2-ot","solver":"rk2:n=4","n_samples":2,"seed":1}"#,
+    );
+    assert!(v.get("ok").unwrap().as_bool().unwrap());
+
+    let schedule = ScheduleConfig {
+        tick_ms: 50,
+        sentinel_secs: 1,
+        sentinel_rows: 2,
+        sentinel_seed: 99,
+        ..ScheduleConfig::default()
+    };
+    let mut goldens = BTreeMap::new();
+
+    // First pass pins, second pass replays deterministically: no alerts.
+    sentinel_tick(&state, &schedule, &mut goldens);
+    assert_eq!(goldens.len(), 1, "one served route must pin one golden");
+    sentinel_tick(&state, &schedule, &mut goldens);
+    assert_eq!(coord.metrics.numerics().alerts_active(), 0, "deterministic replay alerted");
+
+    // Drift the pinned golden: the next pass must raise digest_drift,
+    // re-pin, and go quiet again.
+    for g in goldens.values_mut() {
+        assert!(!g.rows.is_empty(), "golden pinned without sample rows");
+        g.rows[0] += 1.0;
+    }
+    sentinel_tick(&state, &schedule, &mut goldens);
+    let a = handle_line(&state, r#"{"cmd":"alerts"}"#);
+    let alerts = a.get("alerts").unwrap().as_arr().unwrap().clone();
+    assert_eq!(alerts.len(), 1, "{}", a.to_string_compact());
+    assert_eq!(alerts[0].get("kind").unwrap().as_str().unwrap(), "digest_drift");
+    assert_eq!(alerts[0].get("route").unwrap().as_str().unwrap(), "checker2-ot/rk2:n=4");
+    assert!(alerts[0].get("message").unwrap().as_str().unwrap().contains("rms"));
+    assert_eq!(coord.metrics.event_count("sentinel_alert"), 1);
+
+    sentinel_tick(&state, &schedule, &mut goldens);
+    assert_eq!(
+        coord.metrics.numerics().alerts_total(),
+        1,
+        "sentinel must re-pin after a drift alert, not alert every pass"
+    );
+}

@@ -46,6 +46,7 @@ fn row(solver: &str, nfe: u64, rmse: f32) -> ScoreRow {
     ScoreRow {
         solver: solver.into(),
         nfe,
+        nfe_actual: nfe,
         rmse,
         psnr: 15.0,
         fd: 0.2,

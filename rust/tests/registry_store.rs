@@ -201,6 +201,7 @@ fn gc_pins_frontier_referenced_versions() {
         rows: vec![ScoreRow {
             solver: format!("bespoke:path=artifacts/{}/v{ver}.theta.json", key.dir_name()),
             nfe,
+            nfe_actual: nfe,
             rmse,
             psnr: 10.0,
             fd: 0.1,
