@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use bespoke_flow::eval::evaluate_sampler;
 use bespoke_flow::json::Value;
-use bespoke_flow::models::{AnalyticModel, VelocityModel, Zoo};
+use bespoke_flow::models::{AnalyticModel, Backend, VelocityModel, Zoo};
 use bespoke_flow::quality::{Budget, Frontier, FrontierPoint};
 use bespoke_flow::runtime::Executable;
 use bespoke_flow::schedulers::Scheduler;
@@ -307,9 +307,43 @@ fn main() {
         std::hint::black_box(reference_solve(&Dopri5::default(), &mut f, &x0).unwrap());
     });
 
+    // ---- vectorized-kernel micros (DESIGN.md §15) --------------------------
+    // Each vectorized kernel is paired with its retained `_naive` reference;
+    // CI gates a >= 1.5x median speedup on the GEMM and posterior-mean pairs
+    // (BENCH_10.json).
+    {
+        let d = 128usize;
+        let mut rng = Rng::new(10);
+        let ma: Vec<f64> = (0..d * d).map(|_| rng.normal() as f64).collect();
+        let mb: Vec<f64> = (0..d * d).map(|_| rng.normal() as f64).collect();
+        h.bench("kernels/matmul_d128", || {
+            std::hint::black_box(bespoke_flow::eval::linalg::matmul(&ma, &mb, d));
+        });
+        h.bench("kernels/matmul_d128_naive", || {
+            std::hint::black_box(bespoke_flow::eval::linalg::matmul_naive(&ma, &mb, d));
+        });
+    }
+    {
+        // Posterior-mean kernel at a width where lane-parallel dots matter;
+        // threads pinned to 1 so the pair measures the kernel, not the pool.
+        let (k, d, b) = (256usize, 64usize, 64usize);
+        let pts = Tensor::new(Rng::new(11).normal_vec(k * d), vec![k, d]).unwrap();
+        let pm = AnalyticModel::new("bench-pm", pts, Scheduler::CondOt, 0.05, b).unwrap();
+        let x = Tensor::new(Rng::new(12).normal_vec(b * d), vec![b, d]).unwrap();
+        h.bench("kernels/posterior_mean_b64_k256_d64", || {
+            std::hint::black_box(pm.eval_with_threads(&x, 0.5, 1).unwrap());
+        });
+        h.bench("kernels/posterior_mean_b64_k256_d64_naive", || {
+            std::hint::black_box(pm.eval_reference(&x, 0.5).unwrap());
+        });
+    }
+
     // ---- HLO request-path benches (need `make artifacts`) ------------------
     match Zoo::open_default() {
-        Ok(zoo) => hlo_benches(&mut h, &zoo),
+        Ok(zoo) => {
+            hlo_benches(&mut h, &zoo);
+            backend_benches(&mut h, &zoo);
+        }
         Err(e) => println!("(skipping HLO benches: {e})"),
     }
 
@@ -318,6 +352,27 @@ fn main() {
         Err(e) => {
             eprintln!("error: writing bench JSON failed: {e}");
             std::process::exit(1);
+        }
+    }
+}
+
+/// End-to-end solve on each explicit serving backend (DESIGN.md §15) —
+/// the same route the coordinator drives, so BENCH JSONs carry a
+/// per-backend trajectory point. Each backend that fails to resolve
+/// (missing artifact, non-ideal model) is skipped, not failed.
+fn backend_benches(h: &mut Harness, zoo: &Zoo) {
+    for backend in [Backend::Hlo, Backend::Analytic] {
+        match zoo.serving_model_for("checker2-ot", backend) {
+            Ok(resolved) => {
+                let m = resolved.model;
+                let (b, d) = (m.batch(), m.dim());
+                let x = Tensor::new(Rng::new(13).normal_vec(b * d), vec![b, d]).unwrap();
+                h.bench(&format!("serve/rk2_n8_checker2-ot_{}", backend.name()), || {
+                    let s = FixedGridSolver::uniform(BaseRk::Rk2, 8);
+                    std::hint::black_box(s.sample(m.as_ref(), &x).unwrap());
+                });
+            }
+            Err(e) => println!("(skipping serve/{} bench: {e})", backend.name()),
         }
     }
 }

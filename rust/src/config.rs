@@ -9,6 +9,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::json::Value;
+use crate::models::Backend;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -43,6 +44,28 @@ pub struct ServeConfig {
     /// Graceful-drain grace window in ms: how long SIGTERM / `drain` waits
     /// for in-flight solves and running jobs before cancelling stragglers.
     pub drain_grace_ms: u64,
+    /// Default compute backend for served models (DESIGN.md §15):
+    /// `analytic` | `hlo` | `auto`. `auto` prefers the compiled HLO
+    /// artifact and falls back to the analytic oracle for `ideal` models
+    /// (recorded as a `backend_fallback` metrics event); `hlo` and
+    /// `analytic` are strict — a missing artifact/oracle is an error, not
+    /// a substitution.
+    pub backend: Backend,
+    /// Per-model backend overrides (`"backend_overrides": {"model": "hlo"}`
+    /// in `[serve]`); models not listed use `backend`.
+    pub backend_overrides: Vec<(String, Backend)>,
+}
+
+impl ServeConfig {
+    /// The backend choice serving `model`: its override when present, else
+    /// the global `backend` default.
+    pub fn backend_for(&self, model: &str) -> Backend {
+        self.backend_overrides
+            .iter()
+            .find(|(m, _)| m == model)
+            .map(|&(_, b)| b)
+            .unwrap_or(self.backend)
+    }
 }
 
 impl Default for ServeConfig {
@@ -56,6 +79,8 @@ impl Default for ServeConfig {
             compute_threads: 0,
             idle_timeout_ms: 0,
             drain_grace_ms: 5_000,
+            backend: Backend::Auto,
+            backend_overrides: Vec::new(),
         }
     }
 }
@@ -322,6 +347,14 @@ impl Config {
                             "drain_grace_ms" => {
                                 self.serve.drain_grace_ms = val.as_usize()? as u64
                             }
+                            "backend" => self.serve.backend = Backend::parse(val.as_str()?)?,
+                            "backend_overrides" => {
+                                let mut overrides = Vec::new();
+                                for (model, b) in val.as_obj()? {
+                                    overrides.push((model.clone(), Backend::parse(b.as_str()?)?));
+                                }
+                                self.serve.backend_overrides = overrides;
+                            }
                             _ => anyhow::bail!("unknown serve key {k:?}"),
                         }
                     }
@@ -570,6 +603,31 @@ mod tests {
         for bad in [
             r#"{"obs": {"trace_ring": 0}}"#,
             r#"{"obs": {"trace_sample_n": 0}}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(cfg.apply(&v).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn backend_selection_keys() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.serve.backend, Backend::Auto);
+        assert!(cfg.serve.backend_overrides.is_empty());
+        assert_eq!(cfg.serve.backend_for("anything"), Backend::Auto);
+        let v = Value::parse(
+            r#"{"serve": {"backend": "hlo",
+                          "backend_overrides": {"checker2-ot": "analytic"}}}"#,
+        )
+        .unwrap();
+        cfg.apply(&v).unwrap();
+        assert_eq!(cfg.serve.backend, Backend::Hlo);
+        assert_eq!(cfg.serve.backend_for("checker2-ot"), Backend::Analytic);
+        assert_eq!(cfg.serve.backend_for("other"), Backend::Hlo);
+        // invalid backend names are config errors, not clamps
+        for bad in [
+            r#"{"serve": {"backend": "gpu"}}"#,
+            r#"{"serve": {"backend_overrides": {"m": "fast"}}}"#,
         ] {
             let v = Value::parse(bad).unwrap();
             assert!(cfg.apply(&v).is_err(), "should reject {bad}");

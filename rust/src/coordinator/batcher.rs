@@ -656,7 +656,13 @@ impl Coordinator {
             bail!("n_samples must be positive");
         }
         let (solver, spec) = self.resolve_solver(&req.model, &req.solver)?;
-        let model = self.zoo.serving_model(&req.model)?;
+        let resolved = self
+            .zoo
+            .serving_model_for(&req.model, self.serve_cfg().backend_for(&req.model))?;
+        if resolved.fell_back {
+            self.metrics.record_event("backend_fallback");
+        }
+        let model = resolved.model;
         let sched = self.zoo.scheduler(&req.model)?;
         let sampler = spec.build(sched)?;
         let (b, d) = (model.batch(), model.dim());
@@ -687,6 +693,7 @@ impl Coordinator {
         let x0 = Tensor::new(data, vec![b, d])?;
 
         let key = format!("{}/{solver}", req.model);
+        self.metrics.record_backend(&key, resolved.backend.name());
         let numerics = self.metrics.numerics();
         // Trajectory solves run the same probe/guard hooks as the fused
         // plane (the loop is its own launch, so no fused-launch spans).
@@ -761,7 +768,16 @@ impl Coordinator {
             return Ok(q.clone());
         }
         // Validate + load outside the lock (compilation can take a moment).
-        let served = self.zoo.serving_model(model)?;
+        // The backend choice comes from `[serve] backend` (plus per-model
+        // overrides); an `auto` fallback to the analytic oracle is recorded
+        // as a `backend_fallback` event and the resolved backend lands in
+        // the route's `profile` output (DESIGN.md §15).
+        let resolved = self.zoo.serving_model_for(model, self.serve_cfg().backend_for(model))?;
+        if resolved.fell_back {
+            self.metrics.record_event("backend_fallback");
+        }
+        self.metrics.record_backend(key, resolved.backend.name());
+        let served = resolved.model;
         let sched = self.zoo.scheduler(model)?;
         let sampler: Arc<dyn Sampler> = Arc::from(spec.build(sched)?);
         if served.dim() == 0 {

@@ -61,6 +61,10 @@ pub struct Metrics {
     /// Numerical-plane observability: flight recorder, quarantine guard
     /// toggles/counter, kernel-phase timers, alert ring (DESIGN.md §14).
     numerics: Numerics,
+    /// Resolved compute backend per route (`"hlo"` / `"analytic"`),
+    /// recorded when a route spawns and surfaced by `profile` and the
+    /// snapshot (DESIGN.md §15).
+    backends: Mutex<BTreeMap<String, &'static str>>,
 }
 
 /// Lifecycle events mirrored to the JSONL sink when one is attached.
@@ -81,6 +85,7 @@ impl Default for Metrics {
             tracer: Tracer::default(),
             event_log: Mutex::new(None),
             numerics: Numerics::default(),
+            backends: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -142,6 +147,18 @@ impl Metrics {
     /// Current value of a named counter (0 if never recorded).
     pub fn event_count(&self, name: &str) -> u64 {
         self.events.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Record which compute backend serves a route (`"hlo"`/`"analytic"`,
+    /// DESIGN.md §15). Last write wins: a hot-swap or reload that changes
+    /// the resolution simply overwrites the entry.
+    pub fn record_backend(&self, key: &str, backend: &'static str) {
+        self.backends.lock().unwrap().insert(key.to_string(), backend);
+    }
+
+    /// The resolved backend for a route, if one was recorded.
+    pub fn backend_for(&self, key: &str) -> Option<&'static str> {
+        self.backends.lock().unwrap().get(key).copied()
     }
 
     pub fn record_batch(&self, key: &str, rows_used: usize, capacity: usize, nfe: u64) {
@@ -240,13 +257,23 @@ impl Metrics {
             ("alerts_active", Value::Num(self.numerics.alerts_active() as f64)),
             ("alerts_total", Value::Num(self.numerics.alerts_total() as f64)),
         ]);
+        let backends = self.backends_json();
         Value::obj(vec![
             ("ok", Value::Bool(true)),
             ("uptime_secs", Value::Num(uptime)),
             ("per_route", Value::obj(per_key_refs)),
+            ("backends", backends),
             ("events", Value::obj(events_json)),
             ("obs", obs),
         ])
+    }
+
+    /// Route → resolved backend name, as a JSON object (DESIGN.md §15).
+    fn backends_json(&self) -> Value {
+        let g = self.backends.lock().unwrap();
+        let pairs: Vec<(&str, Value)> =
+            g.iter().map(|(k, &b)| (k.as_str(), Value::Str(b.to_string()))).collect();
+        Value::obj(pairs)
     }
 
     /// Prometheus text exposition (served by `metrics_prom` /
@@ -375,13 +402,15 @@ impl Metrics {
     }
 
     /// The `{"cmd":"profile"}` payload: numerics toggle state, the kernel-
-    /// phase breakdown per route, and the flight-recorder per-step stats.
+    /// phase breakdown per route, the flight-recorder per-step stats, and
+    /// the resolved compute backend per route (DESIGN.md §15).
     pub fn profile_json(&self) -> Value {
         Value::obj(vec![
             ("ok", Value::Bool(true)),
             ("numerics", self.numerics.flags_json()),
             ("phases", self.numerics.phases_json()),
             ("flight", self.numerics.flight_json()),
+            ("backends", self.backends_json()),
         ])
     }
 }
@@ -477,6 +506,25 @@ mod tests {
         }
         assert!(saw_inf, "histogram without +Inf bucket");
         assert!(text.contains("bespoke_requests_total{route=\"m/rk2:n=4\"} 1"));
+    }
+
+    #[test]
+    fn backend_recording_rides_snapshot_and_profile() {
+        let m = Metrics::default();
+        assert_eq!(m.backend_for("m/rk2"), None);
+        m.record_backend("m/rk2", "analytic");
+        m.record_backend("m/rk2", "hlo"); // last write wins (hot-swap)
+        m.record_backend("n/midpoint", "analytic");
+        assert_eq!(m.backend_for("m/rk2"), Some("hlo"));
+        let snap = m.snapshot();
+        let b = snap.get("backends").unwrap();
+        assert_eq!(b.get("m/rk2").unwrap().as_str().unwrap(), "hlo");
+        assert_eq!(b.get("n/midpoint").unwrap().as_str().unwrap(), "analytic");
+        let prof = m.profile_json();
+        assert_eq!(
+            prof.get("backends").unwrap().get("m/rk2").unwrap().as_str().unwrap(),
+            "hlo"
+        );
     }
 
     #[test]

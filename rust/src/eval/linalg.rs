@@ -60,20 +60,64 @@ pub fn sym_eigen(a: &[f64], d: usize, sweeps: usize) -> (Vec<f64>, Vec<f64>) {
     (eig, v)
 }
 
-/// Matrix multiply (row-major, d x d).
+/// Column-tile width of the blocked [`matmul`]: a `MM_BK x MM_BJ` panel of
+/// `b` (32 KiB at f64) stays L1/L2-resident while every row of `a` sweeps
+/// it.
+const MM_BJ: usize = 64;
+/// Inner-dimension tile depth of the blocked [`matmul`].
+const MM_BK: usize = 64;
+
+/// Matrix multiply (row-major, d x d), cache-blocked.
+///
+/// Loop order is `j-tile, k-tile, i, k, j`: the inner j-loop is contiguous
+/// over both the output row and `b`'s row (autovectorizes), and for each
+/// (j-tile, k-tile) pair the touched panel of `b` stays cache-resident
+/// across all `i`. For every output element the k-terms still accumulate
+/// in ascending-k order, so the result is **bitwise identical** to the
+/// textbook [`matmul_naive`] loop (pinned in `perf_equivalence.rs`). Rows
+/// of `a` that are exactly zero are skipped — `sqrtm_psd` feeds
+/// identity-like intermediates through here.
 pub fn matmul(a: &[f64], b: &[f64], d: usize) -> Vec<f64> {
     let mut out = vec![0.0f64; d * d];
+    for j0 in (0..d).step_by(MM_BJ) {
+        let j1 = (j0 + MM_BJ).min(d);
+        for k0 in (0..d).step_by(MM_BK) {
+            let k1 = (k0 + MM_BK).min(d);
+            for i in 0..d {
+                let row_o = &mut out[i * d + j0..i * d + j1];
+                for k in k0..k1 {
+                    let aik = a[i * d + k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let row_b = &b[k * d + j0..k * d + j1];
+                    for (o, &bv) in row_o.iter_mut().zip(row_b) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Textbook i-j-k matrix multiply (dot-product form with strided column
+/// access into `b`): the retained naive reference the blocked [`matmul`]
+/// is pinned bitwise-identical against, and the `_naive` baseline of the
+/// `kernels/matmul_*` benches. Never on a serving path.
+pub fn matmul_naive(a: &[f64], b: &[f64], d: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; d * d];
     for i in 0..d {
-        for k in 0..d {
-            let aik = a[i * d + k];
-            if aik == 0.0 {
-                continue;
+        for j in 0..d {
+            let mut acc = 0.0f64;
+            for k in 0..d {
+                let aik = a[i * d + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                acc += aik * b[k * d + j];
             }
-            let row_b = &b[k * d..(k + 1) * d];
-            let row_o = &mut out[i * d..(i + 1) * d];
-            for j in 0..d {
-                row_o[j] += aik * row_b[j];
-            }
+            out[i * d + j] = acc;
         }
     }
     out
@@ -166,6 +210,19 @@ mod tests {
         assert_eq!(trace(&i2, 2), 2.0);
         let b = vec![1.0, 2.0, 3.0, 4.0];
         assert_eq!(matmul(&i2, &b, 2), b);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise() {
+        // d straddles several MM_BJ/MM_BK tiles with ragged edges; dense
+        // random matrices so any change in per-element k-order would move
+        // bits. Exact equality, not tolerance.
+        for d in [1usize, 7, 64, 65, 130] {
+            let mut rng = Rng::new(d as u64);
+            let a: Vec<f64> = (0..d * d).map(|_| rng.normal() as f64).collect();
+            let b: Vec<f64> = (0..d * d).map(|_| rng.normal() as f64).collect();
+            assert_eq!(matmul(&a, &b, d), matmul_naive(&a, &b, d), "d={d}");
+        }
     }
 
     #[test]

@@ -95,6 +95,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(t) = args.flags.get("threads") {
         cfg.serve.compute_threads = t.parse().context("bad --threads")?;
     }
+    if let Some(b) = args.flags.get("backend") {
+        cfg.serve.backend = bespoke_flow::models::Backend::parse(b).context("bad --backend")?;
+    }
     if let Some(w) = args.flags.get("fuse-window-us") {
         cfg.serve.fuse_window_us = w.parse().context("bad --fuse-window-us")?;
     }
@@ -1683,4 +1686,12 @@ GLOBAL FLAGS:
     --fuse-max-rows R    max rows fused into one lockstep solve (clamped to
                          max_batch and the model batch; 0 = auto, 1 = off —
                          serve.fuse_max_rows; dopri5 never fuses)
+    --backend B          compute backend serving models: auto | hlo |
+                         analytic (serve.backend, default auto = compiled
+                         HLO when the artifact exists, else the pure-Rust
+                         oracle for ideal models with a backend_fallback
+                         event; per-model overrides via config
+                         [serve] backend_overrides = {"model": "hlo"};
+                         resolved backend lands in scorecard rows, the
+                         metrics snapshot and `profile` output)
 "#;

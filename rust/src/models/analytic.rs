@@ -31,10 +31,38 @@ use crate::tensor::Tensor;
 const PAR_EVAL_MIN_WORK: usize = 4096;
 
 thread_local! {
-    /// Per-thread softmax-logits scratch, hoisted out of the per-row loop
-    /// so the serial eval path performs no steady-state heap allocation
-    /// (the solver sessions rely on this — see DESIGN.md §7).
-    static LOGITS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread eval scratch (softmax logits + f64 posterior-mean
+    /// accumulator), hoisted out of the per-row loop so the serial eval
+    /// path performs no steady-state heap allocation (the solver sessions
+    /// rely on this — see DESIGN.md §7).
+    static SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// f64 lanes of [`dot_f64`]; combined in a fixed order, so the dot is
+/// deterministic (and thread-count invariant) but not bit-equal to a strict
+/// left-to-right sum — part of the documented epsilon in DESIGN.md §15.
+const DOT_LANES: usize = 4;
+
+/// <x, mu> accumulated in `DOT_LANES` f64 lanes — the f64 analogue of the
+/// tensor kernels' f32x8 chunking, so the K inner products that dominate
+/// [`AnalyticModel::eval`] autovectorize instead of serializing on one
+/// f64 dependency chain.
+#[inline]
+fn dot_f64(x: &[f32], mu: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), mu.len());
+    let mut acc = [0.0f64; DOT_LANES];
+    let mut cx = x.chunks_exact(DOT_LANES);
+    let mut cm = mu.chunks_exact(DOT_LANES);
+    for (xs, ms) in cx.by_ref().zip(cm.by_ref()) {
+        for i in 0..DOT_LANES {
+            acc[i] += xs[i] as f64 * ms[i] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (&a, &b) in cx.remainder().iter().zip(cm.remainder()) {
+        tail += a as f64 * b as f64;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
 }
 
 pub struct AnalyticModel {
@@ -83,41 +111,96 @@ impl AnalyticModel {
         (a_t, b_t, v)
     }
 
-    /// Posterior mean m_t(x) for a single row. `logits` is caller-provided
-    /// scratch of length K (hoisted out of the row loop so neither the
-    /// serial nor the parallel eval path allocates per row).
+    /// Posterior mean m_t(x) for a single row. `scratch` is caller-provided
+    /// f64 scratch of length K + d — softmax logits in `[..K]`, the f64
+    /// mean accumulator in `[K..]` — hoisted out of the row loop so neither
+    /// the serial nor the parallel eval path allocates per row.
+    ///
+    /// Accumulation layout (DESIGN.md §15): the <x, mu_k> dots run in
+    /// [`DOT_LANES`] f64 lanes combined in a fixed order, and the weighted
+    /// mean accumulates in f64, rounding to f32 once per element at the
+    /// end (the old spelling rounded every term through f32). Both moves
+    /// shift bits vs. the retained scalar reference ([`Self::eval_reference`],
+    /// documented epsilon) but are deterministic and row-independent, so
+    /// thread-count invariance and the fused-vs-solo pins are unaffected.
     fn posterior_mean_row(
         &self,
         x: &[f32],
         alpha: f64,
         v: f64,
-        logits: &mut [f64],
+        scratch: &mut [f64],
         out: &mut [f32],
     ) {
         let k = self.points.rows();
         let d = self.points.cols();
-        debug_assert_eq!(logits.len(), k);
+        debug_assert_eq!(scratch.len(), k + d);
+        let (logits, mean) = scratch.split_at_mut(k);
         // logits_k = (alpha <x, mu_k> - alpha^2 ||mu_k||^2 / 2) / v
         let mut best = f64::NEG_INFINITY;
         for ki in 0..k {
             let mu = self.points.row(ki);
-            let dot: f64 = x.iter().zip(mu).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
-            let l = (alpha * dot - 0.5 * alpha * alpha * self.sqnorms[ki] as f64) / v;
+            let l = (alpha * dot_f64(x, mu) - 0.5 * alpha * alpha * self.sqnorms[ki] as f64) / v;
             logits[ki] = l;
             best = best.max(l);
         }
         let mut denom = 0.0f64;
-        out.iter_mut().for_each(|o| *o = 0.0);
+        mean.fill(0.0);
         for ki in 0..k {
             let w = (logits[ki] - best).exp();
             denom += w;
-            let mu = self.points.row(ki);
-            for j in 0..d {
-                out[j] += (w * mu[j] as f64) as f32;
+            // elementwise over j — no cross-lane reduction; autovectorizes.
+            for (m, &mu_j) in mean.iter_mut().zip(self.points.row(ki)) {
+                *m += w * mu_j as f64;
             }
         }
-        let inv = 1.0 / denom as f32;
-        out.iter_mut().for_each(|o| *o *= inv);
+        let inv = 1.0 / denom;
+        for (o, &m) in out.iter_mut().zip(mean.iter()) {
+            *o = (m * inv) as f32;
+        }
+    }
+
+    /// Retained scalar reference: the pre-vectorization serial eval
+    /// spelling — strict left-to-right f64 dots, posterior mean accumulated
+    /// in f32 with a per-term `(w * mu) as f32` round. Benches use it as
+    /// the `_naive` baseline and `perf_equivalence.rs` pins the documented
+    /// epsilon between this and the vectorized path. Never on a serving
+    /// path.
+    pub fn eval_reference(&self, x: &Tensor, t: f32) -> Result<Tensor> {
+        if x.shape().len() != 2 || x.cols() != self.dim() {
+            bail!("expected [B, {}] input, got {:?}", self.dim(), x.shape());
+        }
+        let (a_t, b_t, v) = self.coefs(t as f64);
+        let alpha = self.sched.alpha(t as f64);
+        let d = x.cols();
+        let k = self.points.rows();
+        let (af, bf) = (a_t as f32, b_t as f32);
+        let mut out = Tensor::zeros(x.shape());
+        let mut logits = vec![0.0f64; k];
+        for (xr, or) in x.data().chunks_exact(d).zip(out.data_mut().chunks_exact_mut(d)) {
+            let mut best = f64::NEG_INFINITY;
+            for ki in 0..k {
+                let mu = self.points.row(ki);
+                let dot: f64 = xr.iter().zip(mu).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+                let l = (alpha * dot - 0.5 * alpha * alpha * self.sqnorms[ki] as f64) / v;
+                logits[ki] = l;
+                best = best.max(l);
+            }
+            let mut denom = 0.0f64;
+            or.iter_mut().for_each(|o| *o = 0.0);
+            for ki in 0..k {
+                let w = (logits[ki] - best).exp();
+                denom += w;
+                let mu = self.points.row(ki);
+                for j in 0..d {
+                    or[j] += (w * mu[j] as f64) as f32;
+                }
+            }
+            let inv = 1.0 / denom as f32;
+            for j in 0..d {
+                or[j] = af * xr[j] + bf * (or[j] * inv);
+            }
+        }
+        Ok(out)
     }
 
     /// [`VelocityModel::eval`] with an explicit thread count. Rows are
@@ -152,21 +235,22 @@ impl AnalyticModel {
         let k = self.points.rows();
         let (af, bf) = (a_t as f32, b_t as f32);
         // m_t(x) is accumulated directly into the output row, then blended
-        // in place: o[j] = a_t x[j] + b_t m[j] — the same expression the
-        // allocating path computed, so results are bitwise unchanged.
-        let row_kernel = |xr: &[f32], or: &mut [f32], logits: &mut [f64]| {
-            self.posterior_mean_row(xr, alpha, v, logits, or);
-            for j in 0..d {
-                or[j] = af * xr[j] + bf * or[j];
+        // in place: o[j] = a_t x[j] + b_t m[j]. The blend is elementwise
+        // (autovectorizes); rows are independent, so the output is bitwise
+        // identical for every thread count.
+        let row_kernel = |xr: &[f32], or: &mut [f32], scratch: &mut [f64]| {
+            self.posterior_mean_row(xr, alpha, v, scratch, or);
+            for (o, &xv) in or.iter_mut().zip(xr) {
+                *o = af * xv + bf * *o;
             }
         };
         let nt = nt.max(1).min(b.max(1));
         if nt <= 1 {
-            LOGITS.with(|l| {
-                let mut logits = l.borrow_mut();
-                logits.resize(k, 0.0);
+            SCRATCH.with(|l| {
+                let mut scratch = l.borrow_mut();
+                scratch.resize(k + d, 0.0);
                 for (xr, or) in x.data().chunks_exact(d).zip(out.data_mut().chunks_exact_mut(d)) {
-                    row_kernel(xr, or, logits.as_mut_slice());
+                    row_kernel(xr, or, scratch.as_mut_slice());
                 }
             });
         } else {
@@ -177,9 +261,9 @@ impl AnalyticModel {
                 let rk = &row_kernel;
                 for (xc, oc) in xd.chunks(rows_per * d).zip(od.chunks_mut(rows_per * d)) {
                     s.spawn(move || {
-                        let mut logits = vec![0.0f64; k];
+                        let mut scratch = vec![0.0f64; k + d];
                         for (xr, or) in xc.chunks_exact(d).zip(oc.chunks_exact_mut(d)) {
-                            rk(xr, or, &mut logits);
+                            rk(xr, or, &mut scratch);
                         }
                     });
                 }
@@ -259,11 +343,31 @@ mod tests {
         let m = toy_model(Scheduler::CondOt);
         let (_, _, v) = m.coefs(0.5);
         let alpha = 0.5;
-        let mut logits = vec![0.0f64; 3];
+        let mut scratch = vec![0.0f64; 3 + 2];
         let mut out = vec![0.0; 2];
-        m.posterior_mean_row(&[0.2, 0.1], alpha, v, &mut logits, &mut out);
+        m.posterior_mean_row(&[0.2, 0.1], alpha, v, &mut scratch, &mut out);
         assert!(out[0] >= -1.0 && out[0] <= 1.0);
         assert!(out[1] >= 0.0 && out[1] <= 1.5);
+    }
+
+    #[test]
+    fn vectorized_eval_matches_scalar_reference_within_epsilon() {
+        // d = 7 exercises full DOT_LANES chunks plus a ragged tail; K = 9
+        // keeps the softmax non-trivial. The vectorized path reorders f64
+        // accumulation and defers the f32 round, so agreement is to the
+        // documented epsilon (DESIGN.md §15), not bitwise.
+        let mut rng = Rng::new(9);
+        let pts = Tensor::new(rng.normal_vec(9 * 7), vec![9, 7]).unwrap();
+        let m = AnalyticModel::new("eps", pts, Scheduler::Cosine, 0.05, 8).unwrap();
+        let x = Tensor::new(rng.normal_vec(8 * 7), vec![8, 7]).unwrap();
+        for t in [0.0f32, 0.37, 0.9] {
+            let fast = m.eval(&x, t).unwrap();
+            let reference = m.eval_reference(&x, t).unwrap();
+            for (i, (a, b)) in fast.data().iter().zip(reference.data()).enumerate() {
+                let tol = 1e-5f32 * b.abs().max(1.0);
+                assert!((a - b).abs() <= tol, "t={t} elem {i}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

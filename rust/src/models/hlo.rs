@@ -2,26 +2,57 @@
 //! compiled `u_<model>.hlo.txt` artifact; one evaluation == one executable
 //! launch with inputs (x[B,d], t[]).
 
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 use super::VelocityModel;
-use crate::runtime::{Executable, Manifest, ModelMeta};
+use crate::runtime::{Executable, LiteralBuf, Manifest, ModelMeta};
 use crate::tensor::Tensor;
+
+/// Per-model marshalling scratch reused across solver steps: the literal
+/// vector plus a staging tensor for the scalar `t` input. Guarded by a
+/// Mutex because `eval_into` takes `&self` (models are shared across
+/// worker threads); contention is nil in practice — the fusion plane runs
+/// one solve at a time per route, and concurrent routes each hold their
+/// own `HloModel`.
+struct HloScratch {
+    buf: LiteralBuf,
+    t_host: Tensor,
+}
 
 pub struct HloModel {
     meta: ModelMeta,
     exe: Executable,
+    scratch: Mutex<HloScratch>,
 }
 
 impl HloModel {
     pub fn load(man: &Manifest, name: &str) -> Result<HloModel> {
         let meta = man.model(name)?.clone();
         let exe = Executable::load(&man.path(&meta.u_hlo))?;
-        Ok(HloModel { meta, exe })
+        Ok(HloModel {
+            meta,
+            exe,
+            scratch: Mutex::new(HloScratch { buf: LiteralBuf::new(), t_host: Tensor::scalar(0.0) }),
+        })
     }
 
     pub fn meta(&self) -> &ModelMeta {
         &self.meta
+    }
+
+    fn check_shape(&self, x: &Tensor) -> Result<()> {
+        if x.shape() != [self.meta.batch, self.meta.d] {
+            bail!(
+                "model {} expects [{}, {}], got {:?} (HLO shapes are static)",
+                self.meta.name,
+                self.meta.batch,
+                self.meta.d,
+                x.shape()
+            );
+        }
+        Ok(())
     }
 }
 
@@ -39,19 +70,24 @@ impl VelocityModel for HloModel {
     }
 
     fn eval(&self, x: &Tensor, t: f32) -> Result<Tensor> {
-        if x.shape() != [self.meta.batch, self.meta.d] {
-            bail!(
-                "model {} expects [{}, {}], got {:?} (HLO shapes are static)",
-                self.meta.name,
-                self.meta.batch,
-                self.meta.d,
-                x.shape()
-            );
+        let mut out = Tensor::zeros(x.shape());
+        self.eval_into(x, t, &mut out)?;
+        Ok(out)
+    }
+
+    /// The hot-loop override: marshals `x` without cloning it, reuses the
+    /// model's literal buffer + `t` staging tensor, and decodes the output
+    /// straight into `out` — no per-step Rust-heap growth, matching the
+    /// analytic backend's zero-allocation solver-session invariant
+    /// (alloc_free.rs, DESIGN.md §15).
+    fn eval_into(&self, x: &Tensor, t: f32, out: &mut Tensor) -> Result<()> {
+        self.check_shape(x)?;
+        if out.shape() != x.shape() {
+            bail!("output shape {:?} does not match input {:?}", out.shape(), x.shape());
         }
-        let mut out = self.exe.run(&[x.clone(), Tensor::scalar(t)])?;
-        if out.len() != 1 {
-            bail!("u artifact returned {} outputs, expected 1", out.len());
-        }
-        Ok(out.pop().unwrap())
+        let mut s = self.scratch.lock().expect("HLO scratch poisoned");
+        let HloScratch { buf, t_host } = &mut *s;
+        t_host.data_mut()[0] = t;
+        self.exe.run_into(buf, &[x, t_host], out)
     }
 }

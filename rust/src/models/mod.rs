@@ -10,7 +10,7 @@ pub mod zoo;
 
 pub use analytic::AnalyticModel;
 pub use hlo::HloModel;
-pub use zoo::Zoo;
+pub use zoo::{Backend, ResolvedModel, Zoo};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

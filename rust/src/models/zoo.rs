@@ -11,11 +11,53 @@ use super::{AnalyticModel, HloModel, VelocityModel};
 use crate::runtime::Manifest;
 use crate::schedulers::Scheduler;
 
+/// Which compute backend serves a model (DESIGN.md §15): `hlo` requires
+/// the compiled artifact, `analytic` requires an `ideal`-kind model (the
+/// pure-Rust oracle), and `auto` prefers HLO with a recorded fallback to
+/// the analytic oracle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Auto,
+    Hlo,
+    Analytic,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "hlo" => Ok(Backend::Hlo),
+            "analytic" => Ok(Backend::Analytic),
+            _ => bail!("unknown backend {s:?} (expected analytic|hlo|auto)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Hlo => "hlo",
+            Backend::Analytic => "analytic",
+        }
+    }
+}
+
+/// A backend resolution from [`Zoo::serving_model_for`]: the model to
+/// drive, which backend actually serves it (`Hlo` or `Analytic`, never
+/// `Auto`), and whether `auto` had to fall back. The coordinator turns
+/// `fell_back` into a `backend_fallback` metrics event — the Zoo itself
+/// holds no metrics handle.
+pub struct ResolvedModel {
+    pub model: Arc<dyn VelocityModel>,
+    pub backend: Backend,
+    pub fell_back: bool,
+}
+
 pub struct Zoo {
     man: Arc<Manifest>,
     cache: Mutex<BTreeMap<String, Arc<HloModel>>>,
-    /// Analytic oracles standing in for missing HLO artifacts of `ideal`
-    /// models (see [`Zoo::serving_model`]).
+    /// Analytic oracles serving `ideal` models — either requested
+    /// explicitly (`backend = analytic`) or standing in for missing HLO
+    /// artifacts (see [`Zoo::serving_model_for`]).
     analytic_cache: Mutex<BTreeMap<String, Arc<AnalyticModel>>>,
 }
 
@@ -77,25 +119,66 @@ impl Zoo {
         Ok(self.hlo(name)? as Arc<dyn VelocityModel>)
     }
 
-    /// The model the *serving* plane should run: the compiled HLO when the
-    /// artifact exists, else — for `ideal` models only — the pure-Rust
-    /// analytic oracle (the same fallback the eval plane uses, DESIGN.md
-    /// §9), so the coordinator, the stress/fusion tests and `repro loadgen`
-    /// work against the fixture zoo with no `make artifacts`. `mlp` models
-    /// have no oracle and keep the original HLO error.
-    pub fn serving_model(&self, name: &str) -> Result<Arc<dyn VelocityModel>> {
-        let hlo_err = match self.hlo(name) {
-            Ok(m) => return Ok(m),
-            Err(e) => e,
-        };
-        if self.man.model(name)?.kind != "ideal" {
-            return Err(hlo_err);
-        }
+    /// The cached analytic oracle as a shared handle (`ideal` models only).
+    fn analytic_shared(&self, name: &str) -> Result<Arc<AnalyticModel>> {
         if let Some(m) = self.analytic_cache.lock().unwrap().get(name) {
             return Ok(m.clone());
         }
         let m = Arc::new(self.analytic(name)?);
         self.analytic_cache.lock().unwrap().insert(name.to_string(), m.clone());
         Ok(m)
+    }
+
+    /// Resolve the model the *serving* plane should run under an explicit
+    /// backend choice (DESIGN.md §15):
+    ///
+    /// * `hlo` — the compiled artifact or an error; no silent substitute.
+    /// * `analytic` — the pure-Rust oracle; errors for `mlp` models (their
+    ///   weights live only in the HLO).
+    /// * `auto` — the compiled HLO when the artifact exists, else — for
+    ///   `ideal` models only — the analytic oracle with `fell_back = true`
+    ///   (the same fallback the eval plane uses, DESIGN.md §9), so the
+    ///   coordinator, the stress/fusion tests and `repro loadgen` work
+    ///   against the fixture zoo with no `make artifacts`. `mlp` models
+    ///   have no oracle and keep the original HLO error.
+    pub fn serving_model_for(&self, name: &str, backend: Backend) -> Result<ResolvedModel> {
+        match backend {
+            Backend::Hlo => Ok(ResolvedModel {
+                model: self.hlo(name)?,
+                backend: Backend::Hlo,
+                fell_back: false,
+            }),
+            Backend::Analytic => Ok(ResolvedModel {
+                model: self.analytic_shared(name)?,
+                backend: Backend::Analytic,
+                fell_back: false,
+            }),
+            Backend::Auto => {
+                let hlo_err = match self.hlo(name) {
+                    Ok(m) => {
+                        return Ok(ResolvedModel {
+                            model: m,
+                            backend: Backend::Hlo,
+                            fell_back: false,
+                        })
+                    }
+                    Err(e) => e,
+                };
+                if self.man.model(name)?.kind != "ideal" {
+                    return Err(hlo_err);
+                }
+                Ok(ResolvedModel {
+                    model: self.analytic_shared(name)?,
+                    backend: Backend::Analytic,
+                    fell_back: true,
+                })
+            }
+        }
+    }
+
+    /// [`Zoo::serving_model_for`] under `auto`, model handle only — the
+    /// call sites that don't record backend telemetry.
+    pub fn serving_model(&self, name: &str) -> Result<Arc<dyn VelocityModel>> {
+        Ok(self.serving_model_for(name, Backend::Auto)?.model)
     }
 }

@@ -17,7 +17,7 @@ use super::scorecard::{Scorecard, ScoreRow};
 use crate::config::{EvalConfig, QualityConfig};
 use crate::eval::evaluate_sampler;
 use crate::json::Value;
-use crate::models::{VelocityModel, Zoo};
+use crate::models::{Backend, ResolvedModel, VelocityModel, Zoo};
 use crate::registry::meta::unix_now;
 use crate::registry::{
     ArtifactKey, EvalRecord, JobCtx, JobManager, JobProgress, JobRunner, JobSnapshot, Registry,
@@ -95,17 +95,13 @@ impl EvalRunner {
     }
 
     /// The model to evaluate: the compiled HLO executable when present,
-    /// else the analytic oracle (`ideal` models only). Sampling *serving*
-    /// always uses the HLO path; the fallback only widens where scorecards
-    /// can be measured.
-    fn model(&self, name: &str) -> Result<Arc<dyn VelocityModel>> {
-        match self.zoo.hlo(name) {
-            Ok(m) => Ok(m as Arc<dyn VelocityModel>),
-            Err(hlo_err) => match self.zoo.analytic(name) {
-                Ok(a) => Ok(Arc::new(a) as Arc<dyn VelocityModel>),
-                Err(_) => Err(hlo_err),
-            },
-        }
+    /// else the analytic oracle (`ideal` models only) — the same `auto`
+    /// resolution the serving plane uses (DESIGN.md §15). The resolved
+    /// backend name is stamped into every [`ScoreRow`] the job produces,
+    /// so cards measured on the oracle are distinguishable from cards
+    /// measured on the compiled artifact.
+    fn model(&self, name: &str) -> Result<ResolvedModel> {
+        self.zoo.serving_model_for(name, Backend::Auto)
     }
 
     /// Noise + GT batches for a model at a seed (cached; GT solves are the
@@ -288,7 +284,9 @@ impl JobRunner for EvalRunner {
         ctx: &JobCtx,
         progress: &mut dyn FnMut(&JobProgress),
     ) -> Result<Scorecard> {
-        let model = self.model(&spec.model)?;
+        let resolved = self.model(&spec.model)?;
+        let backend = resolved.backend.name();
+        let model = resolved.model;
         let sched = self.zoo.scheduler(&spec.model)?;
         let (cells, artifact) = self.cells(spec)?;
         let seed = spec.seed.unwrap_or(self.eval_cfg.seed);
@@ -313,7 +311,7 @@ impl JobRunner for EvalRunner {
                 loss: f32::NAN,
                 val_rmse: rep.rmse,
             });
-            rows.push(ScoreRow::from_report(&cell.to_string(), &rep));
+            rows.push(ScoreRow::from_report(&cell.to_string(), backend, &rep));
         }
         Ok(Scorecard {
             schema_version: META_SCHEMA_VERSION,

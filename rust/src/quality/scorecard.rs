@@ -35,10 +35,14 @@ pub struct ScoreRow {
     /// Fréchet distance vs the target dataset; NaN when no reference.
     pub fd_data: f64,
     pub wall_ms: f64,
+    /// The compute backend the row was measured on (`"hlo"`/`"analytic"`,
+    /// DESIGN.md §15). Cards written before the field existed decode it as
+    /// `""` (unrecorded).
+    pub backend: String,
 }
 
 impl ScoreRow {
-    pub fn from_report(solver: &str, rep: &SamplerReport) -> ScoreRow {
+    pub fn from_report(solver: &str, backend: &str, rep: &SamplerReport) -> ScoreRow {
         ScoreRow {
             solver: solver.to_string(),
             nfe: rep.nfe,
@@ -49,6 +53,7 @@ impl ScoreRow {
             swd: rep.swd,
             fd_data: rep.fd_data,
             wall_ms: rep.wall_ms_per_batch,
+            backend: backend.to_string(),
         }
     }
 
@@ -63,6 +68,7 @@ impl ScoreRow {
             ("swd", Value::num_or_null(self.swd as f64)),
             ("fd_data", Value::num_or_null(self.fd_data)),
             ("wall_ms", Value::num_or_null(self.wall_ms)),
+            ("backend", Value::Str(self.backend.clone())),
         ])
     }
 
@@ -87,6 +93,10 @@ impl ScoreRow {
             swd: num("swd")? as f32,
             fd_data: num("fd_data")?,
             wall_ms: num("wall_ms")?,
+            backend: match v.get_opt("backend") {
+                Some(x) => x.as_str()?.to_string(),
+                None => String::new(),
+            },
         })
     }
 }
@@ -208,6 +218,7 @@ mod tests {
                     swd: 0.3,
                     fd_data: f64::NAN,
                     wall_ms: 1.0,
+                    backend: "analytic".into(),
                 },
                 ScoreRow {
                     solver: "rk2:n=4".into(),
@@ -219,6 +230,7 @@ mod tests {
                     swd: 0.05,
                     fd_data: 0.2,
                     wall_ms: 2.0,
+                    backend: "hlo".into(),
                 },
             ],
         }
@@ -237,20 +249,25 @@ mod tests {
         assert_eq!(back.rows[1].nfe, 8);
         assert_eq!(back.rows[1].nfe_actual, 11);
         assert_eq!(back.rows[1].rmse, 0.1);
+        assert_eq!(back.rows[0].backend, "analytic");
+        assert_eq!(back.rows[1].backend, "hlo");
         assert!(back.artifact.is_none());
-        // Cards written before nfe_actual decode it as nfe.
+        // Cards written before nfe_actual / backend decode them as nfe /
+        // "" (unrecorded) respectively.
         let mut v = card.to_json();
         if let Value::Obj(m) = &mut v {
             if let Some(Value::Arr(rows)) = m.get_mut("rows") {
                 for r in rows {
                     if let Value::Obj(rm) = r {
                         rm.remove("nfe_actual");
+                        rm.remove("backend");
                     }
                 }
             }
         }
         let legacy = Scorecard::from_json(&v).unwrap();
         assert_eq!(legacy.rows[1].nfe_actual, 8);
+        assert_eq!(legacy.rows[1].backend, "");
     }
 
     #[test]

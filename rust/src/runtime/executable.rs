@@ -49,15 +49,69 @@ impl Executable {
 
     /// Execute with pre-marshalled literals (lets hot loops reuse buffers).
     pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self.execute_one(literals)?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+
+    /// Execute with host tensors, staging through a caller-owned
+    /// [`LiteralBuf`] and decoding the single expected output in place
+    /// (`out` must already have the output's shape). This is the hot-loop
+    /// entry: `HloModel::eval_into` calls it once per solver step with a
+    /// buffer that lives for the whole session, so the steady-state step
+    /// loop re-marshals no Rust-side vectors (the alloc_free.rs invariant,
+    /// extended to the HLO backend — DESIGN.md §15).
+    pub fn run_into(&self, buf: &mut LiteralBuf, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+        buf.lits.clear();
+        for t in inputs {
+            buf.lits.push(tensor_to_literal(t)?);
+        }
+        let result = self.execute_one(&buf.lits)?;
+        let parts = result.to_tuple().context("untupling result")?;
+        if parts.len() != 1 {
+            bail!("{}: expected 1 output, got {}", self.name, parts.len());
+        }
+        literal_into_tensor(&parts[0], out)
+    }
+
+    /// Launch + fetch the (single) result literal of one execution.
+    fn execute_one(&self, literals: &[xla::Literal]) -> Result<xla::Literal> {
         let out = self
             .exe
             .execute::<xla::Literal>(literals)
             .with_context(|| format!("executing {}", self.name))?;
-        let result = out[0][0]
+        // PJRT returns one buffer list per addressable device; a malformed
+        // or zero-output executable legitimately returns empty lists. That
+        // must surface as a structured error the coordinator can code and
+        // retry on — an unchecked out[0][0] here used to panic the worker.
+        let first = out.first().and_then(|device| device.first()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: execution returned no output buffers (devices={}, outputs_on_first={})",
+                self.name,
+                out.len(),
+                out.first().map_or(0, |d| d.len())
+            )
+        })?;
+        first
             .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.name))?;
-        let parts = result.to_tuple().context("untupling result")?;
-        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+            .with_context(|| format!("fetching result of {}", self.name))
+    }
+}
+
+/// Reusable marshalling buffers for hot solve loops: the literal vector is
+/// rebuilt in place each call, so a session's step loop reuses its Rust-side
+/// capacity instead of growing fresh vectors per NFE. (The literal payloads
+/// themselves live on the XLA side of the FFI boundary; what this plus
+/// [`Executable::run_into`]'s in-place decode eliminates is every per-call
+/// Rust-heap allocation.)
+#[derive(Default)]
+pub struct LiteralBuf {
+    lits: Vec<xla::Literal>,
+}
+
+impl LiteralBuf {
+    pub fn new() -> LiteralBuf {
+        LiteralBuf { lits: Vec::new() }
     }
 }
 
@@ -77,4 +131,21 @@ pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     let data = l.to_vec::<f32>().context("literal to_vec")?;
     Tensor::new(data, dims)
+}
+
+/// xla Literal -> existing host Tensor (f32; shapes must match): the
+/// allocation-free counterpart of [`literal_to_tensor`] — decodes the
+/// payload straight into a caller-owned buffer.
+pub fn literal_into_tensor(l: &xla::Literal, out: &mut Tensor) -> Result<()> {
+    let shape = l.array_shape().context("literal shape")?;
+    if shape.ty() != xla::ElementType::F32 {
+        bail!("expected f32 output, got {:?}", shape.ty());
+    }
+    let dims = shape.dims();
+    let matches = out.shape().len() == dims.len()
+        && out.shape().iter().zip(dims.iter()).all(|(&a, &b)| a as i64 == b);
+    if !matches {
+        bail!("output shape {:?} does not match literal shape {:?}", out.shape(), dims);
+    }
+    l.copy_raw_to(out.data_mut()).context("literal copy_raw_to")
 }

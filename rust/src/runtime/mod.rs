@@ -8,7 +8,7 @@
 pub mod executable;
 pub mod manifest;
 
-pub use executable::Executable;
+pub use executable::{Executable, LiteralBuf};
 pub use manifest::{LossGradMeta, Manifest, ModelMeta};
 
 use std::sync::OnceLock;

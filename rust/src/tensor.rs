@@ -13,6 +13,70 @@ use anyhow::{bail, Result};
 /// up to this many rows reduce in a single chunk, i.e. plain serial order.
 pub const PAR_CHUNK_ROWS: usize = 256;
 
+/// Lane width of the chunked elementwise kernels. Eight f32 lanes is one
+/// AVX2 register (f32x8) and two NEON registers; the fixed-trip inner loops
+/// below are written so LLVM proves them in-bounds and autovectorizes.
+pub const LANES: usize = 8;
+
+// ---- vectorized kernel helpers -----------------------------------------
+//
+// Every hot elementwise op runs through these chunked loops: the body walks
+// `LANES`-wide sub-slices with a fixed-trip, bounds-check-free inner loop
+// (the f32x8 shape the autovectorizer wants), and a scalar tail handles
+// `len % LANES`. Each output element computes exactly the same expression
+// as the scalar spelling, so the chunking is bitwise neutral — elementwise
+// kernels have no cross-lane reduction to reorder (DESIGN.md §15).
+
+/// In-place binary kernel: `f(&mut a[i], b[i])` for all i.
+#[inline]
+fn kernel2_mut(a: &mut [f32], b: &[f32], f: impl Fn(&mut f32, f32) + Copy) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact_mut(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xs, ys) in ca.by_ref().zip(cb.by_ref()) {
+        for i in 0..LANES {
+            f(&mut xs[i], ys[i]);
+        }
+    }
+    for (x, &y) in ca.into_remainder().iter_mut().zip(cb.remainder()) {
+        f(x, y);
+    }
+}
+
+/// Out-of-place unary kernel: `out[i] = f(a[i])` for all i.
+#[inline]
+fn kernel1_into(out: &mut [f32], a: &[f32], f: impl Fn(f32) -> f32 + Copy) {
+    debug_assert_eq!(out.len(), a.len());
+    let mut co = out.chunks_exact_mut(LANES);
+    let mut ca = a.chunks_exact(LANES);
+    for (os, xs) in co.by_ref().zip(ca.by_ref()) {
+        for i in 0..LANES {
+            os[i] = f(xs[i]);
+        }
+    }
+    for (o, &x) in co.into_remainder().iter_mut().zip(ca.remainder()) {
+        *o = f(x);
+    }
+}
+
+/// Out-of-place binary kernel: `out[i] = f(a[i], b[i])` for all i.
+#[inline]
+fn kernel2_into(out: &mut [f32], a: &[f32], b: &[f32], f: impl Fn(f32, f32) -> f32 + Copy) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let mut co = out.chunks_exact_mut(LANES);
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for ((os, xs), ys) in co.by_ref().zip(ca.by_ref()).zip(cb.by_ref()) {
+        for i in 0..LANES {
+            os[i] = f(xs[i], ys[i]);
+        }
+    }
+    for ((o, &x), &y) in co.into_remainder().iter_mut().zip(ca.remainder()).zip(cb.remainder()) {
+        *o = f(x, y);
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     data: Vec<f32>,
@@ -171,21 +235,18 @@ impl Tensor {
         Tensor { data: self.data.iter().map(|a| a * c).collect(), shape: self.shape.clone() }
     }
 
-    /// self += c * other  (the hot per-step update; in-place, no alloc).
+    /// self += c * other  (the hot per-step update; in-place, no alloc,
+    /// f32x8-chunked — see the kernel helpers above).
     pub fn axpy(&mut self, c: f32, other: &Tensor) -> Result<()> {
         self.check_same_shape(other)?;
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += c * b;
-        }
+        kernel2_mut(&mut self.data, &other.data, |a, b| *a += c * b);
         Ok(())
     }
 
-    /// self = a * self + c * other (in-place scaled blend).
+    /// self = a * self + c * other (in-place scaled blend, f32x8-chunked).
     pub fn scale_axpy(&mut self, a: f32, c: f32, other: &Tensor) -> Result<()> {
         self.check_same_shape(other)?;
-        for (x, b) in self.data.iter_mut().zip(&other.data) {
-            *x = a * *x + c * b;
-        }
+        kernel2_mut(&mut self.data, &other.data, |x, b| *x = a * *x + c * b);
         Ok(())
     }
 
@@ -198,32 +259,26 @@ impl Tensor {
     // `scale_into` forms; `add_into`/`sub_into` complete the in-place kit
     // for callers whose update is a plain sum/difference.)
 
-    /// out = self + other, without allocating.
+    /// out = self + other, without allocating (f32x8-chunked).
     pub fn add_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
         self.check_same_shape(other)?;
         self.check_same_shape(out)?;
-        for ((o, a), b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
-            *o = a + b;
-        }
+        kernel2_into(&mut out.data, &self.data, &other.data, |a, b| a + b);
         Ok(())
     }
 
-    /// out = self - other, without allocating.
+    /// out = self - other, without allocating (f32x8-chunked).
     pub fn sub_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
         self.check_same_shape(other)?;
         self.check_same_shape(out)?;
-        for ((o, a), b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
-            *o = a - b;
-        }
+        kernel2_into(&mut out.data, &self.data, &other.data, |a, b| a - b);
         Ok(())
     }
 
-    /// out = c * self, without allocating.
+    /// out = c * self, without allocating (f32x8-chunked).
     pub fn scale_into(&self, c: f32, out: &mut Tensor) -> Result<()> {
         self.check_same_shape(out)?;
-        for (o, a) in out.data.iter_mut().zip(&self.data) {
-            *o = a * c;
-        }
+        kernel1_into(&mut out.data, &self.data, |a| a * c);
         Ok(())
     }
 
@@ -234,11 +289,10 @@ impl Tensor {
         Ok(())
     }
 
-    /// Set every element to `v` (no allocation).
+    /// Set every element to `v` (no allocation; `slice::fill` lowers to a
+    /// vectorized splat/memset).
     pub fn fill(&mut self, v: f32) {
-        for x in self.data.iter_mut() {
-            *x = v;
-        }
+        self.data.fill(v);
     }
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
@@ -305,10 +359,14 @@ impl Tensor {
         let partials = run_chunked(nchunks, nt, |ci| {
             let lo = ci * PAR_CHUNK_ROWS;
             let hi = (lo + PAR_CHUNK_ROWS).min(b);
+            // Column sums are elementwise across j (no cross-column
+            // reduction), so the zip loop autovectorizes; the per-column
+            // f64 row order is unchanged, keeping the result bitwise
+            // stable against the scalar spelling.
             let mut acc = vec![0.0f64; d];
             for i in lo..hi {
-                for (j, v) in self.row(i).iter().enumerate() {
-                    acc[j] += *v as f64;
+                for (a, &v) in acc.iter_mut().zip(self.row(i)) {
+                    *a += v as f64;
                 }
             }
             acc
@@ -338,14 +396,23 @@ impl Tensor {
         let partials = run_chunked(nchunks, nt, |ci| {
             let lo = ci * PAR_CHUNK_ROWS;
             let hi = (lo + PAR_CHUNK_ROWS).min(b);
+            // Center each row into an f64 scratch once, then accumulate
+            // the upper triangle with contiguous inner loops: for fixed p
+            // the q-loop is elementwise over `acc[p*d+p..]`/`c[p..]`, so it
+            // autovectorizes. Every acc element still adds the same dp*dq
+            // terms in the same row order as the scalar spelling — bitwise
+            // identical for every thread count.
             let mut acc = vec![0.0f64; d * d];
+            let mut c = vec![0.0f64; d];
             for i in lo..hi {
-                let r = self.row(i);
+                for ((cj, &v), &m) in c.iter_mut().zip(self.row(i)).zip(mu_ref.iter()) {
+                    *cj = v as f64 - m;
+                }
                 for p in 0..d {
-                    let dp = r[p] as f64 - mu_ref[p];
-                    for q in p..d {
-                        let dq = r[q] as f64 - mu_ref[q];
-                        acc[p * d + q] += dp * dq;
+                    let cp = c[p];
+                    let arow = &mut acc[p * d + p..p * d + d];
+                    for (a, &cq) in arow.iter_mut().zip(&c[p..]) {
+                        *a += cp * cq;
                     }
                 }
             }
@@ -677,6 +744,41 @@ mod tests {
         assert_eq!(ws.pooled(), 5);
         assert_eq!(ws.acquire(&[2, 2]).shape(), &[2, 2]);
         assert_eq!(ws.acquire(&[4, 2]).shape(), &[4, 2]);
+    }
+
+    #[test]
+    fn chunked_kernels_match_scalar_reference_bitwise() {
+        // Length exercises full LANES chunks plus a ragged tail; irregular
+        // values would expose any per-element expression change. The scalar
+        // references here are the pre-vectorization spellings.
+        let n = 5 * LANES + 3;
+        let mut rng = crate::util::Rng::new(5);
+        let a0 = Tensor::new(rng.normal_vec(n), vec![n]).unwrap();
+        let b = Tensor::new(rng.normal_vec(n), vec![n]).unwrap();
+        let (c, s) = (0.37f32, -1.25f32);
+
+        let mut got = a0.clone();
+        got.axpy(c, &b).unwrap();
+        let want: Vec<f32> = a0.data().iter().zip(b.data()).map(|(x, y)| x + c * y).collect();
+        assert_eq!(got.data(), &want[..], "axpy");
+
+        let mut got = a0.clone();
+        got.scale_axpy(s, c, &b).unwrap();
+        let want: Vec<f32> = a0.data().iter().zip(b.data()).map(|(x, y)| s * x + c * y).collect();
+        assert_eq!(got.data(), &want[..], "scale_axpy");
+
+        let mut out = Tensor::zeros(&[n]);
+        a0.add_into(&b, &mut out).unwrap();
+        let want: Vec<f32> = a0.data().iter().zip(b.data()).map(|(x, y)| x + y).collect();
+        assert_eq!(out.data(), &want[..], "add_into");
+
+        a0.sub_into(&b, &mut out).unwrap();
+        let want: Vec<f32> = a0.data().iter().zip(b.data()).map(|(x, y)| x - y).collect();
+        assert_eq!(out.data(), &want[..], "sub_into");
+
+        a0.scale_into(c, &mut out).unwrap();
+        let want: Vec<f32> = a0.data().iter().map(|x| x * c).collect();
+        assert_eq!(out.data(), &want[..], "scale_into");
     }
 
     #[test]

@@ -232,6 +232,7 @@ fn poisoned_artifact_is_rejected_quarantined_and_release_requires_reeval() {
             swd: 0.1,
             fd_data: f64::NAN,
             wall_ms: 1.0,
+            backend: "analytic".into(),
         }],
     };
     register_scorecard(&reg, &card).unwrap();

@@ -6,6 +6,17 @@
 //!
 //! Runs against the pure-Rust `AnalyticModel` oracle, so it needs no
 //! compiled artifacts.
+//!
+//! This file also pins the bitwise-vs-epsilon boundary of the vectorized
+//! kernel pass (DESIGN.md §15):
+//!
+//! * **bitwise** — chunked elementwise Tensor kernels (`axpy`,
+//!   `scale_axpy`, `add_into`/`sub_into`/`scale_into`), the blocked GEMM,
+//!   solver sessions, and every parallel kernel vs its serial result;
+//! * **documented epsilon** — `AnalyticModel::eval` vs the retained
+//!   pre-vectorization `eval_reference` (lane-split f64 dots + f64-
+//!   accumulated posterior mean reorder float additions), and HLO vs
+//!   analytic (see `backend_equivalence.rs`).
 
 use bespoke_flow::eval::frechet_distance_with_threads;
 use bespoke_flow::models::{AnalyticModel, VelocityModel};
@@ -153,6 +164,75 @@ fn parallel_kernels_match_serial_exactly() {
         for nt in [2usize, 7] {
             let par = model.eval_with_threads(&x, t_eval, nt).unwrap();
             assert_eq!(par.data(), serial.data(), "eval t={t_eval} nt={nt}");
+        }
+    }
+}
+
+/// §15 boundary, bitwise side: the chunked (`LANES`-wide) elementwise
+/// Tensor kernels are pure refactors — same per-element expression, no
+/// cross-lane reduction — so they must equal the scalar loop exactly,
+/// including at sizes that leave a ragged scalar tail.
+#[test]
+fn vectorized_tensor_kernels_match_scalar_reference_bitwise() {
+    let n = 7 * bespoke_flow::tensor::LANES + 5;
+    let mut rng = Rng::new(20);
+    let a = Tensor::new(rng.normal_vec(n), vec![n]).unwrap();
+    let b = Tensor::new(rng.normal_vec(n), vec![n]).unwrap();
+    let (ca, cb) = (0.37f32, -1.25f32);
+
+    let mut axpy = a.clone();
+    axpy.axpy(ca, &b).unwrap();
+    let mut scale_axpy = a.clone();
+    scale_axpy.scale_axpy(cb, ca, &b).unwrap();
+    let mut add = Tensor::zeros(&[n]);
+    a.add_into(&b, &mut add).unwrap();
+    let mut sub = Tensor::zeros(&[n]);
+    a.sub_into(&b, &mut sub).unwrap();
+    let mut scale = Tensor::zeros(&[n]);
+    a.scale_into(ca, &mut scale).unwrap();
+
+    for i in 0..n {
+        let (av, bv) = (a.data()[i], b.data()[i]);
+        assert_eq!(axpy.data()[i], av + ca * bv, "axpy[{i}]");
+        assert_eq!(scale_axpy.data()[i], cb * av + ca * bv, "scale_axpy[{i}]");
+        assert_eq!(add.data()[i], av + bv, "add_into[{i}]");
+        assert_eq!(sub.data()[i], av - bv, "sub_into[{i}]");
+        assert_eq!(scale.data()[i], av * ca, "scale_into[{i}]");
+    }
+}
+
+/// §15 boundary, bitwise side: the cache-blocked GEMM accumulates every
+/// output element's k-terms in the same ascending order as the retained
+/// textbook loop, so blocking must not move a single bit — at tile-exact
+/// and ragged-edge sizes alike.
+#[test]
+fn blocked_matmul_matches_naive_reference_bitwise() {
+    use bespoke_flow::eval::linalg::{matmul, matmul_naive};
+    for d in [3usize, 64, 97, 130] {
+        let mut rng = Rng::new(d as u64 + 100);
+        let a: Vec<f64> = (0..d * d).map(|_| rng.normal() as f64).collect();
+        let b: Vec<f64> = (0..d * d).map(|_| rng.normal() as f64).collect();
+        assert_eq!(matmul(&a, &b, d), matmul_naive(&a, &b, d), "d={d}");
+    }
+}
+
+/// §15 boundary, epsilon side: the vectorized `AnalyticModel::eval`
+/// (lane-split f64 dots, f64-accumulated posterior mean rounded once per
+/// element) reorders float additions vs the retained pre-vectorization
+/// `eval_reference`, so exact equality is NOT promised — a small relative
+/// epsilon is. If this ever needs loosening past 1e-5, that is a kernel
+/// bug, not a tolerance problem.
+#[test]
+fn vectorized_analytic_eval_matches_reference_within_epsilon() {
+    let pts = Tensor::new(Rng::new(30).normal_vec(21 * 5), vec![21, 5]).unwrap();
+    let model = AnalyticModel::new("eps", pts, Scheduler::Cosine, 0.07, 8).unwrap();
+    let x = Tensor::new(Rng::new(31).normal_vec(16 * 5), vec![16, 5]).unwrap();
+    for t in [0.0f32, 0.42, 0.93] {
+        let fast = model.eval_with_threads(&x, t, 1).unwrap();
+        let slow = model.eval_reference(&x, t).unwrap();
+        for (i, (&f, &s)) in fast.data().iter().zip(slow.data()).enumerate() {
+            let tol = 1e-5f32 * s.abs().max(1.0);
+            assert!((f - s).abs() <= tol, "t={t} i={i}: {f} vs {s}");
         }
     }
 }

@@ -53,6 +53,7 @@ fn row(solver: &str, nfe: u64, rmse: f32) -> ScoreRow {
         swd: 0.1,
         fd_data: f64::NAN,
         wall_ms: nfe as f64 * 0.25,
+        backend: "analytic".into(),
     }
 }
 

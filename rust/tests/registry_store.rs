@@ -208,6 +208,7 @@ fn gc_pins_frontier_referenced_versions() {
             swd: 0.1,
             fd_data: f64::NAN,
             wall_ms: 1.0,
+            backend: "analytic".into(),
         }],
     };
     // v1 measures best-at-its-NFE -> on the frontier; v3's card is
